@@ -1,0 +1,84 @@
+//! **End-to-end driver**: the full three-layer stack on a real workload.
+//!
+//! Every per-machine numerical operation (covariance matvecs, local
+//! eigensolves, Gram builds, Oja passes) executes through the AOT
+//! pipeline: Pallas kernels -> JAX model -> HLO text -> PJRT CPU client
+//! inside each Rust worker thread. Python is not running.
+//!
+//! Prints, per algorithm: estimation error vs the population `v_1`,
+//! communication rounds, wallclock, and the per-round latency /
+//! throughput of the PJRT path vs the native Rust path.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pjrt
+//! ```
+
+use std::time::Instant;
+
+use dspca::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = dspca::runtime::default_artifact_dir();
+    if !artifacts.join("manifest.json").exists() {
+        anyhow::bail!("artifacts not found at {} — run `make artifacts` first", artifacts.display());
+    }
+    // shapes must match an AOT artifact (see python/compile/aot.py)
+    let (m, n, d) = (4, 400, 64);
+    let dist = CovModel::paper_fig1(d, 3).gaussian();
+    println!("e2e: m={m} n={n} d={d}, artifacts={}", artifacts.display());
+    println!("Lemma-1 eps_ERM bound (p=1/4): {:.3e}\n", dist.eps_erm(m, n, 0.25));
+
+    let algorithms: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(CentralizedErm),
+        Box::new(NaiveAverage),
+        Box::new(SignFixedAverage),
+        Box::new(ProjectionAverage),
+        Box::new(DistributedLanczos::default()),
+        Box::new(HotPotatoOja::default()),
+        Box::new(ShiftInvert::default()),
+    ];
+
+    for (tag, spec) in [
+        ("pjrt", OracleSpec::Pjrt { artifact_dir: artifacts.to_string_lossy().into_owned() }),
+        ("native", OracleSpec::Native),
+    ] {
+        println!("--- oracle: {tag} ---");
+        let cluster = Cluster::generate_with(&dist, m, n, 42, spec)?;
+        println!(
+            "{:<22} {:>11} {:>7} {:>9} {:>12} {:>14}",
+            "method", "error", "rounds", "matvecs", "wall", "per-round"
+        );
+        for alg in &algorithms {
+            let est = alg.run(&cluster)?;
+            let per_round = if est.comm.rounds > 0 {
+                est.wall / est.comm.rounds as u32
+            } else {
+                std::time::Duration::ZERO
+            };
+            println!(
+                "{:<22} {:>11.3e} {:>7} {:>9} {:>12?} {:>14?}",
+                alg.name(),
+                est.error(dist.v1()),
+                est.comm.rounds,
+                est.comm.matvec_products,
+                est.wall,
+                per_round
+            );
+        }
+        // raw matvec round latency / throughput
+        let v = vec![1.0 / (d as f64).sqrt(); d];
+        let _ = cluster.dist_matvec(&v)?; // warm (compilation, buffers)
+        let reps = 200;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            std::hint::black_box(cluster.dist_matvec(&v)?);
+        }
+        let per = t0.elapsed() / reps;
+        println!(
+            "matvec round latency: {per:?}  ({:.0} rounds/s, {m} workers x {n}x{d} shard)\n",
+            1.0 / per.as_secs_f64()
+        );
+    }
+    println!("both oracles agree numerically (f64 artifacts); see runtime tests for bit-level checks");
+    Ok(())
+}

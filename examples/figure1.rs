@@ -1,0 +1,26 @@
+//! Reproduce **Figure 1** (both panes): estimation error vs per-machine
+//! sample size for the five §5 estimators, gaussian and scaled-uniform
+//! data.
+//!
+//! Paper settings: d = 300, m = 25, 400 runs. Default here uses
+//! `DSPCA_RUNS` (default 40) to stay interactive; run
+//! `DSPCA_RUNS=400 cargo run --release --example figure1` for the full
+//! reproduction. CSVs land in `results/`.
+
+use dspca::cluster::OracleSpec;
+use dspca::experiments::figure1::{run, Fig1Config, Fig1Dist};
+
+fn main() -> anyhow::Result<()> {
+    for dist in [Fig1Dist::Gaussian, Fig1Dist::ScaledUniform] {
+        let cfg = Fig1Config { dist, oracle: OracleSpec::Native, ..Default::default() };
+        println!(
+            "=== Figure 1 ({dist:?}): d={} m={} runs={} ===",
+            cfg.d, cfg.m, cfg.runs
+        );
+        let table = run(&cfg)?;
+        let path = format!("results/figure1_{dist:?}.csv").to_lowercase();
+        table.write(&path)?;
+        println!("wrote {path}\n");
+    }
+    Ok(())
+}

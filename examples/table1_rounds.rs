@@ -1,0 +1,17 @@
+//! Reproduce **Table 1**: per-method estimation error and communication
+//! rounds on one fixed workload (empirical counterpart of the paper's
+//! analytic table).
+
+use dspca::data::Distribution;
+use dspca::experiments::table1::{render_rows, run, Table1Config};
+
+fn main() -> anyhow::Result<()> {
+    let cfg = Table1Config::default();
+    println!("=== Table 1: d={} m={} n={} runs={} ===", cfg.d, cfg.m, cfg.n, cfg.runs);
+    let (rows, table) = run(&cfg)?;
+    let dist = dspca::data::CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x7a).gaussian();
+    println!("{}", render_rows(&rows, dist.eps_erm(cfg.m, cfg.n, 0.25)));
+    table.write("results/table1.csv")?;
+    println!("wrote results/table1.csv");
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX model + L1 Pallas kernels + AOT.
+
+Never imported at runtime — the Rust coordinator only consumes the HLO
+artifacts emitted by ``python -m compile.aot``.
+"""

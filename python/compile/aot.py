@@ -1,0 +1,118 @@
+"""AOT pipeline: lower the L2 entry points to XLA HLO **text** and write
+``artifacts/<name>_<n>x<d>.hlo.txt`` plus ``artifacts/manifest.json``.
+
+HLO *text* (not a serialized ``HloModuleProto``) is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids that the
+``xla`` crate's xla_extension 0.5.1 rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage::
+
+    python -m compile.aot [--out-dir ../artifacts] [--shapes 400x64,200x32]
+
+Shapes can also be set via ``DSPCA_AOT_SHAPES``. Idempotent: `make
+artifacts` skips the build when inputs are unchanged.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+#: default (n, d) shard shapes — what examples/e2e_pjrt.rs and
+#: benches/bench_runtime.rs request.
+DEFAULT_SHAPES = [(400, 64), (200, 32)]
+
+F64 = jnp.float64
+
+
+def to_hlo_text(fn, example_args) -> str:
+    """jit -> lower -> StableHLO -> XlaComputation -> HLO text."""
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def entry_points(n: int, d: int):
+    """The lowering plan for one shard shape: (name, fn, arg specs)."""
+    a = jax.ShapeDtypeStruct((n, d), F64)
+    vec = jax.ShapeDtypeStruct((d,), F64)
+    scalar = jax.ShapeDtypeStruct((), F64)
+    return [
+        ("cov_matvec", model.cov_matvec, (a, vec), [[n, d], [d]], [[d]]),
+        ("gram", model.gram, (a,), [[n, d]], [[d, d]]),
+        ("local_top_eigvec", model.local_top_eigvec, (a, vec), [[n, d], [d]], [[d]]),
+        (
+            "oja_pass",
+            model.oja_pass,
+            (a, vec, scalar, scalar, scalar),
+            [[n, d], [d], [], [], []],
+            [[d]],
+        ),
+    ]
+
+
+def parse_shapes(text: str):
+    shapes = []
+    for part in text.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        n, d = part.lower().split("x")
+        shapes.append((int(n), int(d)))
+    return shapes
+
+
+def build(out_dir: str, shapes) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for n, d in shapes:
+        for name, fn, args, in_shapes, out_shapes in entry_points(n, d):
+            fname = f"{name}_{n}x{d}.hlo.txt"
+            text = to_hlo_text(fn, args)
+            with open(os.path.join(out_dir, fname), "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": name,
+                    "n": n,
+                    "d": d,
+                    "file": fname,
+                    "inputs": in_shapes,
+                    "outputs": out_shapes,
+                }
+            )
+            print(f"  wrote {fname} ({len(text)} chars)")
+    manifest = {"version": 1, "dtype": "f64", "entries": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"manifest: {len(entries)} entries -> {out_dir}/manifest.json")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument(
+        "--shapes",
+        default=os.environ.get("DSPCA_AOT_SHAPES", ""),
+        help="comma-separated NxD shard shapes (default: 400x64,200x32)",
+    )
+    args = ap.parse_args()
+    shapes = parse_shapes(args.shapes) if args.shapes else DEFAULT_SHAPES
+    build(args.out_dir, shapes)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Pallas kernels (L1) + pure-jnp oracles.
+
+All kernels are lowered with ``interpret=True`` (CPU PJRT cannot execute
+Mosaic custom calls); see DESIGN.md §Hardware-Adaptation for the TPU
+mapping they encode.
+"""
+
+from . import ref  # noqa: F401
+from .cov_matvec import cov_matvec  # noqa: F401
+from .gram import gram  # noqa: F401

@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: distributed-PCA covariance matvec ``A^T (A v) / n``.
+
+This is the per-machine hot spot of every iterative algorithm in the
+paper (power method, Lanczos, and each CG step of the Shift-and-Invert
+solver): the worker receives ``v`` from the leader and must return
+``Xhat_i v`` without materializing the d*d covariance.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the shard ``A`` is streamed
+through VMEM in ``(BLK_N, d)`` row panels (grid over row blocks), while
+``v`` and the ``d``-vector accumulator stay VMEM-resident. Both products
+per panel (``A_blk @ v`` and ``(A_blk v) @ A_blk``) are MXU-shaped
+matmuls; cross-panel accumulation uses the revisiting-output pattern
+(the output block index is constant along the grid).
+
+CPU note: lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom calls; correctness is validated against
+``ref.cov_matvec`` and the AOT artifact runs on the Rust PJRT client.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Row-panel height. 128 keeps the (BLK_N x d) f32 panel + v + accumulator
+# comfortably inside a 16 MB VMEM budget up to d ~ 8k; for the paper's
+# d = 300 the panel is ~150 KB.
+DEFAULT_BLOCK_N = 128
+
+
+def _kernel(a_ref, v_ref, o_ref):
+    """One grid step: accumulate ``A_blk^T (A_blk v)`` into ``o_ref``."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # (blk_n, d) panel, VMEM
+    v = v_ref[...]  # (d,) resident
+    av = a @ v  # (blk_n,)  — MXU matvec
+    o_ref[...] += av @ a  # (d,)     — MXU matvec (A^T partial)
+
+
+def cov_matvec(a, v, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """``A^T (A v) / n`` via the tiled Pallas kernel.
+
+    Rows are zero-padded up to a multiple of ``block_n``; zero rows
+    contribute nothing to ``A^T A v`` so the result is exact.
+    """
+    n, d = a.shape
+    blk = min(block_n, n)
+    pad = (-n) % blk
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad, d), a.dtype)], axis=0)
+    grid = (a.shape[0] // blk,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d,), a.dtype),
+        interpret=interpret,
+    )(a, v)
+    return out / n
+
+
+@functools.cache
+def vmem_estimate_bytes(n: int, d: int, itemsize: int = 4, block_n: int = DEFAULT_BLOCK_N) -> int:
+    """Static VMEM footprint estimate for DESIGN.md/EXPERIMENTS.md §Perf:
+    one ``(blk, d)`` panel + ``v`` + accumulator + the ``(blk,)`` temp."""
+    blk = min(block_n, n)
+    return itemsize * (blk * d + d + d + blk)

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: empirical covariance ``A^T A / n`` (tiled SYRK).
+
+Feeds the one-shot estimators (each machine's local eigensolve needs its
+Gram matrix) and the centralized baseline. Same streaming layout as
+``cov_matvec``: row panels through VMEM, ``(d, d)`` accumulator resident,
+one MXU ``A_blk^T @ A_blk`` per panel with revisiting-output
+accumulation.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 128
+
+
+def _kernel(a_ref, o_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a = a_ref[...]  # (blk_n, d)
+    o_ref[...] += a.T @ a  # (d, d) MXU panel update
+
+
+def gram(a, *, block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """``A^T A / n`` via the tiled Pallas kernel (zero-pad exactness as in
+    ``cov_matvec``)."""
+    n, d = a.shape
+    blk = min(block_n, n)
+    pad = (-n) % blk
+    if pad:
+        a = jnp.concatenate([a, jnp.zeros((pad, d), a.dtype)], axis=0)
+    grid = (a.shape[0] // blk,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((blk, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((d, d), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((d, d), a.dtype),
+        interpret=interpret,
+    )(a)
+    return out / n
+
+
+def vmem_estimate_bytes(n: int, d: int, itemsize: int = 4, block_n: int = DEFAULT_BLOCK_N) -> int:
+    """Panel + (d, d) accumulator footprint."""
+    blk = min(block_n, n)
+    return itemsize * (blk * d + d * d)

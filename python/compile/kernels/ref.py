@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; the
+pytest suite sweeps shapes and dtypes (hypothesis) asserting allclose
+between kernel and oracle. The oracles are also what the L2 model would
+be without Pallas — useful for HLO-level A/B comparisons.
+"""
+
+import jax.numpy as jnp
+
+
+def cov_matvec(a, v):
+    """``Xhat v = A^T (A v) / n`` for a shard ``A: (n, d)``."""
+    n = a.shape[0]
+    return (a.T @ (a @ v)) / n
+
+
+def gram(a):
+    """Empirical covariance ``Xhat = A^T A / n``."""
+    n = a.shape[0]
+    return (a.T @ a) / n
+
+
+def power_iterations(g, v0, iters):
+    """`iters` normalized power iterations with the matrix ``g``."""
+    w = v0 / jnp.linalg.norm(v0)
+    for _ in range(iters):
+        w = g @ w
+        w = w / jnp.maximum(jnp.linalg.norm(w), 1e-300)
+    return w
+
+
+def oja_pass(a, w, eta0, t0, t_start):
+    """Sequential Oja pass over the rows of ``a`` (python loop oracle)."""
+    w = w / jnp.linalg.norm(w)
+    for i in range(a.shape[0]):
+        eta = eta0 / (t0 + t_start + i)
+        x = a[i]
+        w = w + eta * x * (x @ w)
+        w = w / jnp.linalg.norm(w)
+    return w

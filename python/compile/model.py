@@ -1,0 +1,89 @@
+"""L2: the per-machine JAX compute graph, built on the L1 Pallas kernels.
+
+These are the functions AOT-lowered to HLO text (``python -m
+compile.aot``) and executed by the Rust workers through PJRT. Python is
+never on the request path: each function is jitted/lowered once per
+shard shape at build time.
+
+Entry points
+------------
+- ``cov_matvec(a, v)``           — one covariance matvec (Algorithm 2 inner op)
+- ``gram(a)``                    — local empirical covariance
+- ``local_top_eigvec(a, v0)``    — the machine's ERM solution by chained
+  power iterations on the (kernel-produced) Gram matrix; the
+  ``lax.fori_loop`` keeps all iterations inside ONE executable so a local
+  eigensolve costs a single PJRT dispatch.
+- ``oja_pass(a, w, sched)``      — one hot-potato SGD pass over the shard.
+
+Everything runs in f64 (``jax_enable_x64``) so the PJRT path is
+bit-comparable with the Rust-native oracle (DESIGN.md §Numerics).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import cov_matvec as _pallas_cov_matvec
+from .kernels import gram as _pallas_gram
+
+#: power-iteration count baked into the local eigensolve executable.
+#: Contraction per iteration is (lambda2/lambda1)^2; 300 iterations
+#: resolve gaps down to ~1% of lambda_1 at f64 accuracy.
+LOCAL_EIG_ITERS = 300
+
+
+def cov_matvec(a, v):
+    """``Xhat_i v`` for one shard (Pallas kernel, normalized)."""
+    return _pallas_cov_matvec(a, v)
+
+
+def gram(a):
+    """``Xhat_i`` for one shard (Pallas kernel)."""
+    return _pallas_gram(a)
+
+
+def _sign_canonical(w):
+    """Deterministic sign: component of largest magnitude made positive
+    (matches the Rust ``SymEigen::leading`` convention)."""
+    idx = jnp.argmax(jnp.abs(w))
+    return w * jnp.sign(w[idx])
+
+
+def local_top_eigvec(a, v0):
+    """Local ERM: leading eigenvector of ``A^T A / n``.
+
+    One Pallas Gram build + ``LOCAL_EIG_ITERS`` fused power iterations.
+    Returns the unit eigenvector with canonical sign.
+    """
+    g = _pallas_gram(a)
+
+    def body(_, w):
+        w = g @ w
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-300)
+
+    w0 = v0 / jnp.maximum(jnp.linalg.norm(v0), 1e-300)
+    w = lax.fori_loop(0, LOCAL_EIG_ITERS, body, w0)
+    return _sign_canonical(w)
+
+
+def oja_pass(a, w, eta0, t0, t_start):
+    """One sequential Oja pass over the shard rows:
+    ``w <- normalize(w + eta_t x_t (x_t^T w))``, ``eta_t = eta0/(t0+t)``.
+
+    Sequential by construction (each step depends on the last), so the
+    fori_loop lowers to a single HLO while-loop — one PJRT dispatch per
+    machine visit, matching the paper's m-round accounting.
+    """
+    n = a.shape[0]
+
+    def body(i, w):
+        eta = eta0 / (t0 + t_start + i)
+        x = lax.dynamic_slice_in_dim(a, i, 1, axis=0)[0]
+        w = w + eta * x * (x @ w)
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-300)
+
+    w = w / jnp.maximum(jnp.linalg.norm(w), 1e-300)
+    return lax.fori_loop(0, n, body, w)

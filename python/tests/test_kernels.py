@@ -1,0 +1,122 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shard shapes and dtypes (the system's core correctness
+signal); fixed-seed numpy cases pin the exact numerics.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cov_matvec, gram, ref
+
+DIMS = st.tuples(st.integers(1, 70), st.integers(1, 24))
+SEEDS = st.integers(0, 2**31 - 1)
+
+
+def _shard(n, d, seed, dtype):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d)), dtype=dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=DIMS, seed=SEEDS)
+def test_cov_matvec_matches_ref_f64(dims, seed):
+    n, d = dims
+    a = _shard(n, d, seed, jnp.float64)
+    v = _shard(d, 1, seed + 1, jnp.float64)[:, 0]
+    got = cov_matvec(a, v)
+    want = ref.cov_matvec(a, v)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims=DIMS, seed=SEEDS)
+def test_cov_matvec_matches_ref_f32(dims, seed):
+    n, d = dims
+    a = _shard(n, d, seed, jnp.float32)
+    v = _shard(d, 1, seed + 1, jnp.float32)[:, 0]
+    got = cov_matvec(a, v)
+    want = ref.cov_matvec(a, v)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(dims=DIMS, seed=SEEDS)
+def test_gram_matches_ref_f64(dims, seed):
+    n, d = dims
+    a = _shard(n, d, seed, jnp.float64)
+    got = gram(a)
+    want = ref.gram(a)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(dims=DIMS, seed=SEEDS, blk=st.sampled_from([1, 3, 16, 128, 1024]))
+def test_cov_matvec_block_size_invariance(dims, seed, blk):
+    """The padded/tiled grid must be exact for every block size."""
+    n, d = dims
+    a = _shard(n, d, seed, jnp.float64)
+    v = _shard(d, 1, seed + 2, jnp.float64)[:, 0]
+    got = cov_matvec(a, v, block_n=blk)
+    want = ref.cov_matvec(a, v)
+    np.testing.assert_allclose(got, want, rtol=1e-12, atol=1e-12)
+
+
+def test_gram_is_symmetric_psd():
+    a = _shard(50, 8, 0, jnp.float64)
+    g = np.asarray(gram(a))
+    np.testing.assert_allclose(g, g.T, atol=1e-14)
+    eigvals = np.linalg.eigvalsh(g)
+    assert eigvals.min() > -1e-12
+
+
+def test_cov_matvec_known_values():
+    # A = [[1,0],[0,2]], v = (1,1): A^T A /n = diag(1,4)/2; result (0.5, 2)
+    a = jnp.asarray([[1.0, 0.0], [0.0, 2.0]])
+    v = jnp.asarray([1.0, 1.0])
+    got = np.asarray(cov_matvec(a, v))
+    np.testing.assert_allclose(got, [0.5, 2.0], atol=1e-15)
+
+
+def test_single_row_shard():
+    a = _shard(1, 5, 3, jnp.float64)
+    v = _shard(5, 1, 4, jnp.float64)[:, 0]
+    np.testing.assert_allclose(cov_matvec(a, v), ref.cov_matvec(a, v), rtol=1e-13)
+    np.testing.assert_allclose(gram(a), ref.gram(a), rtol=1e-13)
+
+
+def test_linear_in_v():
+    a = _shard(30, 6, 5, jnp.float64)
+    v1 = _shard(6, 1, 6, jnp.float64)[:, 0]
+    v2 = _shard(6, 1, 7, jnp.float64)[:, 0]
+    lhs = cov_matvec(a, 2.0 * v1 - 3.0 * v2)
+    rhs = 2.0 * cov_matvec(a, v1) - 3.0 * cov_matvec(a, v2)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-11, atol=1e-12)
+
+
+def test_vmem_estimates_positive_and_monotonic():
+    from compile.kernels.cov_matvec import vmem_estimate_bytes as cm_vmem
+    from compile.kernels.gram import vmem_estimate_bytes as g_vmem
+
+    assert cm_vmem(400, 64) > 0
+    assert g_vmem(400, 64) > 0
+    assert cm_vmem(400, 128) > cm_vmem(400, 64)
+    # gram accumulator dominates at large d
+    assert g_vmem(400, 512) > cm_vmem(400, 512)
+
+
+@pytest.mark.parametrize("n,d", [(400, 64), (200, 32)])
+def test_default_artifact_shapes_fit_vmem_budget(n, d):
+    """The shapes we AOT must fit a 16 MB VMEM budget (f32 on real TPU)."""
+    from compile.kernels.cov_matvec import vmem_estimate_bytes as cm_vmem
+    from compile.kernels.gram import vmem_estimate_bytes as g_vmem
+
+    assert cm_vmem(n, d) < 16 * 2**20
+    assert g_vmem(n, d) < 16 * 2**20

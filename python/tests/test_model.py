@@ -1,0 +1,97 @@
+"""L2 correctness: model entry points vs numpy/oracle references."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _shard(n, d, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((n, d)))
+
+
+def _aniso_shard(n, d, seed, scale0=3.0):
+    """Shard with a dominant first coordinate (clear top eigenvector)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((n, d))
+    a[:, 0] *= scale0
+    return jnp.asarray(a)
+
+
+def test_cov_matvec_entry_matches_ref():
+    a = _shard(40, 7, 0)
+    v = jnp.asarray(np.random.default_rng(1).standard_normal(7))
+    np.testing.assert_allclose(model.cov_matvec(a, v), ref.cov_matvec(a, v), rtol=1e-12)
+
+
+def test_gram_entry_matches_ref():
+    a = _shard(25, 5, 2)
+    np.testing.assert_allclose(model.gram(a), ref.gram(a), rtol=1e-12)
+
+
+def test_local_top_eigvec_matches_numpy_eigh():
+    a = _aniso_shard(300, 6, 3)
+    v0 = jnp.ones(6)
+    w = np.asarray(model.local_top_eigvec(a, v0))
+    g = np.asarray(ref.gram(a))
+    evals, evecs = np.linalg.eigh(g)
+    v1 = evecs[:, -1]
+    align = abs(float(w @ v1))
+    assert align > 1.0 - 1e-10, f"alignment {align}"
+    # unit norm + canonical sign (largest-|component| positive)
+    np.testing.assert_allclose(np.linalg.norm(w), 1.0, rtol=1e-12)
+    assert w[np.argmax(np.abs(w))] > 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_local_top_eigvec_rayleigh_is_lambda1(seed):
+    a = _aniso_shard(120, 5, seed)
+    w = np.asarray(model.local_top_eigvec(a, jnp.ones(5)))
+    g = np.asarray(ref.gram(a))
+    rq = float(w @ g @ w)
+    lam1 = np.linalg.eigvalsh(g)[-1]
+    assert abs(rq - lam1) < 1e-8 * max(1.0, lam1)
+
+
+def test_oja_pass_matches_python_oracle():
+    a = _shard(30, 4, 7)
+    w0 = jnp.asarray([1.0, 0.0, 0.0, 0.0])
+    got = np.asarray(model.oja_pass(a, w0, 0.5, 10.0, 0.0))
+    want = np.asarray(ref.oja_pass(a, w0, 0.5, 10.0, 0))
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-12)
+
+
+def test_oja_pass_t_start_offset_matters():
+    a = _shard(20, 3, 8)
+    w0 = jnp.asarray([0.0, 1.0, 0.0])
+    w_early = np.asarray(model.oja_pass(a, w0, 1.0, 5.0, 0.0))
+    w_late = np.asarray(model.oja_pass(a, w0, 1.0, 5.0, 1000.0))
+    # late pass has tiny steps: stays closer to w0
+    assert abs(float(w_late @ np.asarray(w0))) > abs(float(w_early @ np.asarray(w0))) - 1e-9
+
+
+def test_oja_pass_improves_alignment():
+    a = _aniso_shard(400, 5, 9, scale0=4.0)
+    w0 = jnp.asarray(np.ones(5) / np.sqrt(5.0))
+    w = np.asarray(model.oja_pass(a, w0, 1.0, 20.0, 0.0))
+    g = np.asarray(ref.gram(a))
+    v1 = np.linalg.eigh(g)[1][:, -1]
+    assert abs(w @ v1) > abs(np.asarray(w0) @ v1)
+
+
+def test_entry_points_are_jittable():
+    """AOT lowering requires all entries to trace under jit."""
+    a = _shard(16, 3, 10)
+    v = jnp.ones(3)
+    jax.jit(model.cov_matvec)(a, v).block_until_ready()
+    jax.jit(model.gram)(a).block_until_ready()
+    jax.jit(model.local_top_eigvec)(a, v).block_until_ready()
+    jax.jit(model.oja_pass)(a, v, 0.1, 1.0, 0.0).block_until_ready()

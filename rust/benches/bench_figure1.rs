@@ -1,0 +1,28 @@
+//! E1/E2 bench: regenerate the Figure-1 series (reduced size by default;
+//! `DSPCA_RUNS` / `DSPCA_BENCH_FAST` scale it).
+
+use dspca::bench_harness::{fast_mode, scaled, Bencher};
+use dspca::cluster::OracleSpec;
+use dspca::experiments::figure1::{run, Fig1Config, Fig1Dist};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let (d, m) = if fast_mode() { (40, 8) } else { (120, 25) };
+    for dist in [Fig1Dist::Gaussian, Fig1Dist::ScaledUniform] {
+        let cfg = Fig1Config {
+            d,
+            m,
+            n_list: vec![50, 100, 200, 400],
+            runs: scaled(24),
+            seed: 0xf1,
+            dist,
+            oracle: OracleSpec::Native,
+        };
+        let t0 = std::time::Instant::now();
+        let table = run(&cfg)?;
+        b.record(&format!("figure1/{dist:?}/sweep"), vec![t0.elapsed().as_secs_f64()]);
+        table.write(format!("results/bench_figure1_{dist:?}.csv").to_lowercase())?;
+    }
+    println!("series CSVs in results/ — compare shape against the paper's Figure 1");
+    Ok(())
+}

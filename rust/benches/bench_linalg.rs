@@ -1,0 +1,58 @@
+//! L3 hot-path microbenchmarks: the dense kernels every communication
+//! round leans on (gemv/syrk/eigensolve/preconditioner application).
+//! This is the profile target for the §Perf optimization loop.
+
+use dspca::bench_harness::{scaled, Bencher};
+use dspca::coordinator::precond::Preconditioner;
+use dspca::data::Shard;
+use dspca::linalg::{Matrix, SymEigen};
+use dspca::rng::Pcg64;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut rng = Pcg64::new(1);
+
+    // the paper's shapes: d = 300, per-machine n = 400
+    let d = 300;
+    let n = scaled(400).max(64);
+    let shard = Shard::new(n, d, (0..n * d).map(|_| rng.next_gaussian()).collect());
+    let v: Vec<f64> = rng.gaussian_vec(d);
+
+    let mut scratch = Vec::new();
+    let mut out = vec![0.0; d];
+    b.bench(&format!("shard_cov_matvec_stream/{n}x{d}"), || {
+        shard.cov_matvec_into(&v, &mut scratch, &mut out);
+        out[0]
+    });
+
+    let gram = shard.empirical_covariance().clone();
+    b.bench(&format!("gram_matvec/{d}"), || gram.matvec(&v));
+
+    b.bench(&format!("syrk/{n}x{d}"), || shard.matrix().syrk_t());
+
+    b.bench(&format!("sym_eigen/{d}"), || SymEigen::new(&gram).lambda1());
+
+    let pc = Preconditioner::new(&gram, 0.05);
+    let lambda = pc.lambda1_local() + 0.1;
+    let mut pout = vec![0.0; d];
+    b.bench(&format!("precond_apply_inv/{d}"), || {
+        pc.apply_inv(lambda, &v, &mut pout);
+        pout[0]
+    });
+
+    // square GEMM reference point for the blocked kernel
+    let a = Matrix::from_vec(d, d, (0..d * d).map(|_| rng.next_f64()).collect());
+    b.bench(&format!("gemm/{d}x{d}"), || a.matmul(&gram));
+
+    let dot_a = rng.gaussian_vec(4096);
+    let dot_b = rng.gaussian_vec(4096);
+    b.bench("dot/4096", || dspca::linalg::vec_ops::dot(&dot_a, &dot_b));
+
+    b.bench("gaussian_vec/8192", || rng.gaussian_vec(8192));
+
+    let dist_fig1 = dspca::data::CovModel::paper_fig1(300, 3).gaussian();
+    b.bench("sample_shard_fig1/400x300", || {
+        use dspca::data::Distribution;
+        dist_fig1.sample_shard(&mut rng, 400).n()
+    });
+}

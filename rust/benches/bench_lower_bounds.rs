@@ -1,0 +1,27 @@
+//! E4/E5 bench: Thm-3 and Thm-5 lower-bound scaling plus fitted slopes.
+
+use dspca::bench_harness::{scaled, Bencher};
+use dspca::experiments::lower_bounds::{run_thm3, run_thm5, LowerBoundConfig};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let cfg = LowerBoundConfig {
+        n_list: vec![90, 270, 810, 2430],
+        m_list: vec![4, 32, 128],
+        runs: scaled(80),
+        seed: 0x1b,
+        delta: 0.4,
+    };
+    let t0 = std::time::Instant::now();
+    let (t3, slopes) = run_thm3(&cfg)?;
+    b.record("lower_bounds/thm3", vec![t0.elapsed().as_secs_f64()]);
+    println!("thm3 slopes per m (lower bound -1; measured flat, m-independent): {slopes:.2?}");
+    t3.write("results/bench_thm3.csv")?;
+
+    let t1 = std::time::Instant::now();
+    let (t5, slope) = run_thm5(&cfg)?;
+    b.record("lower_bounds/thm5", vec![t1.elapsed().as_secs_f64()]);
+    println!("thm5 slope (theory -> -2): {slope:.2}");
+    t5.write("results/bench_thm5.csv")?;
+    Ok(())
+}

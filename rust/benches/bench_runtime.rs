@@ -1,0 +1,58 @@
+//! E8 bench: PJRT artifact path vs native Rust path, per worker
+//! operation and per full communication round.
+//!
+//! Requires `make artifacts`. Skips gracefully when artifacts are absent
+//! (prints a notice) so `cargo bench` stays green in a fresh checkout.
+
+use dspca::bench_harness::Bencher;
+use dspca::cluster::{Cluster, ComputeOracle, NativeOracle, OracleSpec};
+use dspca::data::{CovModel, Shard};
+use dspca::rng::Pcg64;
+use dspca::runtime::{default_artifact_dir, PjrtOracle};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench_runtime: artifacts missing at {} — run `make artifacts` first", dir.display());
+        return Ok(());
+    }
+    let mut b = Bencher::new();
+    let (n, d) = (400usize, 64usize);
+    let mut rng = Pcg64::new(3);
+    let shard = Shard::new(n, d, (0..n * d).map(|_| rng.next_gaussian()).collect());
+    let v = rng.gaussian_vec(d);
+
+    let mut native = NativeOracle::default();
+    b.bench(&format!("native/cov_matvec/{n}x{d}"), || native.cov_matvec(&shard, &v).unwrap());
+
+    let mut pjrt = PjrtOracle::new(&dir)?;
+    let _ = pjrt.cov_matvec(&shard, &v)?; // compile + upload once
+    b.bench(&format!("pjrt/cov_matvec/{n}x{d}"), || pjrt.cov_matvec(&shard, &v).unwrap());
+
+    b.bench(&format!("native/gram/{n}x{d}"), || {
+        // fresh shard clone defeats the gram cache so the kernel runs
+        let s = shard.clone();
+        s.empirical_covariance().get(0, 0)
+    });
+    b.bench(&format!("pjrt/gram/{n}x{d}"), || pjrt.gram(&shard).unwrap().get(0, 0));
+
+    b.bench(&format!("native/local_eig/{n}x{d}"), || {
+        let s = shard.clone();
+        s.local_top_eigvec()
+    });
+    b.bench(&format!("pjrt/local_eig/{n}x{d}"), || pjrt.local_top_eigvec(&shard).unwrap());
+
+    // full distributed round: m workers behind channels
+    let dist = CovModel::paper_fig1(d, 5).gaussian();
+    for (tag, spec) in [
+        ("native", OracleSpec::Native),
+        ("pjrt", OracleSpec::Pjrt { artifact_dir: dir.to_string_lossy().into_owned() }),
+    ] {
+        let cluster = Cluster::generate_with(&dist, 4, n, 9, spec)?;
+        let _ = cluster.dist_matvec(&v)?; // warm
+        b.bench(&format!("{tag}/dist_matvec_round/m=4/{n}x{d}"), || {
+            cluster.dist_matvec(&v).unwrap()
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,47 @@
+//! E6 bench — Theorem 6 scaling: Shift-and-Invert distributed matvecs vs
+//! `n` (expected to *decrease*, `~n^{-1/4}` regime) and vs `m`, with
+//! distributed Lanczos as the n-independent baseline.
+
+use dspca::bench_harness::{fast_mode, scaled, Bencher};
+use dspca::experiments::scaling::{run_m_sweep, run_n_sweep, ScalingConfig};
+use dspca::util::stats::loglog_slope;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let cfg = ScalingConfig {
+        d: if fast_mode() { 40 } else { 120 },
+        m: 8,
+        n_list: if fast_mode() { vec![250, 1000, 4000] } else { vec![250, 500, 1000, 2000, 4000, 8000] },
+        m_list: vec![2, 4, 8, 16],
+        n_for_m_sweep: 1000,
+        runs: scaled(4).max(2),
+        ..Default::default()
+    };
+
+    let t0 = std::time::Instant::now();
+    let tn = run_n_sweep(&cfg)?;
+    b.record("scaling/n-sweep", vec![t0.elapsed().as_secs_f64()]);
+    tn.write("results/bench_scaling_n.csv")?;
+    // fitted slope of S&I matvecs in n
+    let rows: Vec<Vec<f64>> = tn
+        .render()
+        .lines()
+        .skip(1)
+        .map(|l| l.split(',').map(|c| c.parse().unwrap()).collect())
+        .collect();
+    let ns: Vec<f64> = rows.iter().map(|r| r[0]).collect();
+    let sni: Vec<f64> = rows.iter().map(|r| r[1]).collect();
+    let lan: Vec<f64> = rows.iter().map(|r| r[2]).collect();
+    println!(
+        "S&I matvecs slope in n: {:+.2} (theory trend negative, toward -1/4); Lanczos: {:+.2} (theory ~0)",
+        loglog_slope(&ns, &sni),
+        loglog_slope(&ns, &lan)
+    );
+
+    let t1 = std::time::Instant::now();
+    let tm = run_m_sweep(&cfg)?;
+    b.record("scaling/m-sweep", vec![t1.elapsed().as_secs_f64()]);
+    tm.write("results/bench_scaling_m.csv")?;
+    println!("wrote results/bench_scaling_{{n,m}}.csv");
+    Ok(())
+}

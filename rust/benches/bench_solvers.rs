@@ -1,0 +1,100 @@
+//! E7 bench — §4.2 ablation: CG vs preconditioned CG vs Nesterov AGD vs
+//! plain GD on the shifted system `(lambda I - Xhat) z = w`, sweeping the
+//! per-machine sample size `n` (which drives `mu ~ n^{-1/2}` and hence
+//! the Lemma-6 condition number).
+//!
+//! Reported: operator applications (== communication rounds) to reach a
+//! fixed residual, per solver, for (a) a spread spectrum where worst-case
+//! bounds bind and (b) the paper's clustered Figure-1 spectrum where CG
+//! converges superlinearly (see EXPERIMENTS.md E7 discussion).
+
+use dspca::bench_harness::{scaled, Bencher};
+use dspca::coordinator::precond::Preconditioner;
+use dspca::coordinator::solvers::{agd::agd, agd::gd, cg::pcg};
+use dspca::data::{CovModel, Distribution};
+use dspca::linalg::{Matrix, SymEigen};
+use dspca::rng::Pcg64;
+use dspca::util::csv::CsvTable;
+
+fn spectrum(d: usize, delta: f64, spread: bool) -> Vec<f64> {
+    let mut sigma = vec![1.0, 1.0 - delta];
+    for j in 2..d {
+        if spread {
+            sigma.push((1.0 - delta) * (1.0 - (j as f64 - 1.0) / d as f64));
+        } else {
+            let p = sigma[j - 1];
+            sigma.push(0.9 * p);
+        }
+    }
+    sigma
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut bench = Bencher::new();
+    let d = 100;
+    let m = 6;
+    let delta = 0.05;
+    let mut table =
+        CsvTable::new(&["spectrum", "n", "cg_iters", "pcg_iters", "agd_iters", "gd_iters", "mu", "kappa_bound"]);
+    for spread in [true, false] {
+        for n in [500usize, 2000, 8000] {
+            let n = scaled(n).max(200);
+            let dist = CovModel::with_spectrum(spectrum(d, delta, spread), seed_for(spread)).gaussian();
+            let mut rng = Pcg64::new(17);
+            let shards: Vec<_> = (0..m).map(|_| dist.sample_shard(&mut rng, n)).collect();
+            let mut pooled = Matrix::zeros(d, d);
+            for s in &shards {
+                pooled.axpy_mat(1.0 / m as f64, s.empirical_covariance());
+            }
+            let eig = SymEigen::new(&pooled);
+            let lambda = eig.lambda1() + 0.25 * eig.eigengap();
+            let local = shards[0].empirical_covariance().clone();
+            let mu = 2.0 * pooled.sub(&local).sym_spectral_norm();
+            let pc = Preconditioner::new(&local, mu);
+            let mut mmat = Matrix::identity(d).scale(lambda);
+            mmat.axpy_mat(-1.0, &pooled);
+            let mut rhs = rng.gaussian_vec(d);
+            dspca::linalg::vec_ops::normalize(&mut rhs);
+            let tol = 1e-9;
+            let max = 100_000;
+
+            let (_, cg_rep) =
+                pcg(|v| mmat.matvec(v), |r, out| out.copy_from_slice(r), &rhs, None, tol, max);
+            let (_, pcg_rep) =
+                pcg(|v| mmat.matvec(v), |r, out| pc.apply_inv(lambda, r, out), &rhs, None, tol, max);
+            let meig = SymEigen::new(&mmat);
+            let (beta, alpha) = (meig.lambda1(), *meig.values().last().unwrap());
+            let (_, agd_rep) = agd(|v| mmat.matvec(v), &rhs, None, alpha.max(1e-12), beta, tol, max);
+            let (_, gd_rep) = gd(|v| mmat.matvec(v), &rhs, None, beta, tol, max);
+            let kappa = pc.kappa_bound(lambda, eig.lambda1());
+            let name = if spread { "spread" } else { "fig1" };
+            println!(
+                "{name:>6} n={n:>5}: cg={:>5} pcg={:>5} agd={:>6} gd={:>6}  (mu={mu:.2e}, Lemma-6 kappa<={kappa:.1})",
+                cg_rep.iters, pcg_rep.iters, agd_rep.iters, gd_rep.iters
+            );
+            table.push_row(vec![
+                name.into(),
+                n.to_string(),
+                cg_rep.iters.to_string(),
+                pcg_rep.iters.to_string(),
+                agd_rep.iters.to_string(),
+                gd_rep.iters.to_string(),
+                format!("{mu:.4e}"),
+                format!("{kappa:.2}"),
+            ]);
+        }
+    }
+    table.write("results/bench_solvers.csv")?;
+    bench.record("solvers/ablation-total", vec![0.0]);
+    println!("wrote results/bench_solvers.csv");
+    Ok(())
+}
+
+/// tiny helper to vary seeds per branch without magic numbers scattered
+fn seed_for(spread: bool) -> u64 {
+    if spread {
+        0x51ab
+    } else {
+        0xf1b1
+    }
+}

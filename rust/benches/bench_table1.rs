@@ -1,0 +1,19 @@
+//! E3 bench: the Table-1 rows (error + rounds per method).
+
+use dspca::bench_harness::{fast_mode, scaled, Bencher};
+use dspca::cluster::OracleSpec;
+use dspca::data::Distribution;
+use dspca::experiments::table1::{render_rows, run, Table1Config};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let (d, m, n) = if fast_mode() { (30, 6, 150) } else { (120, 25, 400) };
+    let cfg = Table1Config { d, m, n, runs: scaled(8), seed: 0x7a, oracle: OracleSpec::Native };
+    let t0 = std::time::Instant::now();
+    let (rows, table) = run(&cfg)?;
+    b.record("table1/all-methods", vec![t0.elapsed().as_secs_f64()]);
+    let dist = dspca::data::CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x7a).gaussian();
+    println!("{}", render_rows(&rows, dist.eps_erm(cfg.m, cfg.n, 0.25)));
+    table.write("results/bench_table1.csv")?;
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Benchmark harness (criterion substitute for the offline image).
+//!
+//! Every `cargo bench` target in `rust/benches/` is a plain binary
+//! (`harness = false`) built on this module: warmup, timed iterations,
+//! median/p95 reporting, and environment-scaled iteration counts
+//! (`DSPCA_BENCH_FAST=1` shrinks everything for CI smoke runs).
+
+use std::time::{Duration, Instant};
+
+use crate::util::stats::Summary;
+
+/// One timed measurement series.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wallclock seconds.
+    pub samples: Vec<f64>,
+}
+
+impl BenchResult {
+    pub fn summary(&self) -> Summary {
+        Summary::of(&self.samples)
+    }
+
+    pub fn report_line(&self) -> String {
+        let s = self.summary();
+        format!(
+            "{:<44} {:>10} {:>10} {:>10}  (n={})",
+            self.name,
+            fmt_dur(s.median),
+            fmt_dur(s.mean),
+            fmt_dur(s.p95),
+            s.n
+        )
+    }
+}
+
+/// Human duration formatting.
+pub fn fmt_dur(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{:.2}s", secs)
+    }
+}
+
+/// True when `DSPCA_BENCH_FAST=1`: benches shrink workloads for smoke runs.
+pub fn fast_mode() -> bool {
+    std::env::var("DSPCA_BENCH_FAST").as_deref() == Ok("1")
+}
+
+/// Scale an iteration count down in fast mode.
+pub fn scaled(n: usize) -> usize {
+    if fast_mode() {
+        (n / 8).max(1)
+    } else {
+        n
+    }
+}
+
+/// Bench runner: prints a header then each result as it completes.
+pub struct Bencher {
+    header_printed: bool,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Bencher { header_printed: false, results: Vec::new() }
+    }
+
+    /// Time `f` with automatic calibration: warm up, pick an iteration
+    /// count targeting ~`budget` of wall time, then collect `samples`
+    /// batches. `f` should return something observable to block dead-code
+    /// elimination (use [`std::hint::black_box`] inside if needed).
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        let budget = if fast_mode() { Duration::from_millis(120) } else { Duration::from_millis(900) };
+        // warmup + calibration
+        let t0 = Instant::now();
+        let mut iters_done = 0u64;
+        while t0.elapsed() < budget / 6 || iters_done < 3 {
+            std::hint::black_box(f());
+            iters_done += 1;
+            if iters_done > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = t0.elapsed().as_secs_f64() / iters_done as f64;
+        let samples_target = 12usize;
+        let batch = ((budget.as_secs_f64() / samples_target as f64 / per_iter).ceil() as u64).max(1);
+        let mut samples = Vec::with_capacity(samples_target);
+        for _ in 0..samples_target {
+            let t = Instant::now();
+            for _ in 0..batch {
+                std::hint::black_box(f());
+            }
+            samples.push(t.elapsed().as_secs_f64() / batch as f64);
+        }
+        self.push(BenchResult { name: name.to_string(), samples })
+    }
+
+    /// Record externally-measured samples (seconds per op).
+    pub fn record(&mut self, name: &str, samples: Vec<f64>) -> &BenchResult {
+        self.push(BenchResult { name: name.to_string(), samples })
+    }
+
+    fn push(&mut self, r: BenchResult) -> &BenchResult {
+        if !self.header_printed {
+            println!(
+                "{:<44} {:>10} {:>10} {:>10}",
+                "benchmark", "median", "mean", "p95"
+            );
+            println!("{}", "-".repeat(80));
+            self.header_printed = true;
+        }
+        println!("{}", r.report_line());
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_dur_ranges() {
+        assert!(fmt_dur(5e-9).ends_with("ns"));
+        assert!(fmt_dur(5e-6).ends_with("µs"));
+        assert!(fmt_dur(5e-3).ends_with("ms"));
+        assert!(fmt_dur(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn bench_collects_samples() {
+        std::env::set_var("DSPCA_BENCH_FAST", "1");
+        let mut b = Bencher::new();
+        let r = b.bench("noop-ish", || std::hint::black_box(1 + 1));
+        assert!(!r.samples.is_empty());
+        assert!(r.summary().median >= 0.0);
+    }
+
+    #[test]
+    fn record_and_results() {
+        let mut b = Bencher::new();
+        b.record("ext", vec![0.5, 1.0, 1.5]);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].summary().median, 1.0);
+    }
+
+    #[test]
+    fn scaled_respects_fast_mode() {
+        std::env::set_var("DSPCA_BENCH_FAST", "1");
+        assert_eq!(scaled(80), 10);
+        assert_eq!(scaled(4), 1);
+    }
+}

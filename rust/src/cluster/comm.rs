@@ -1,0 +1,61 @@
+//! Communication accounting — the paper's cost model made measurable.
+
+/// Counters for all communication performed by a cluster since the last
+/// reset. A *round* follows §2.1: the leader broadcasts at most one
+/// `R^d` vector and every machine sends at most one vector back.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CommStats {
+    /// Synchronous communication rounds.
+    pub rounds: u64,
+    /// Distributed matrix-vector products with `Xhat` (the unit Thm 6
+    /// counts).
+    pub matvec_products: u64,
+    /// Vectors broadcast leader -> workers.
+    pub vectors_broadcast: u64,
+    /// Vectors gathered workers -> leader.
+    pub vectors_gathered: u64,
+    /// Total bytes moved (8 bytes per f64).
+    pub bytes: u64,
+}
+
+impl CommStats {
+    /// Merge another stats block into this one (used when an algorithm
+    /// combines phases measured separately).
+    pub fn merge(&mut self, other: &CommStats) {
+        self.rounds += other.rounds;
+        self.matvec_products += other.matvec_products;
+        self.vectors_broadcast += other.vectors_broadcast;
+        self.vectors_gathered += other.vectors_gathered;
+        self.bytes += other.bytes;
+    }
+}
+
+impl std::fmt::Display for CommStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rounds={} matvecs={} bcast={} gathered={} bytes={}",
+            self.rounds, self.matvec_products, self.vectors_broadcast, self.vectors_gathered, self.bytes
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_adds() {
+        let mut a = CommStats { rounds: 1, matvec_products: 2, vectors_broadcast: 3, vectors_gathered: 4, bytes: 5 };
+        let b = a.clone();
+        a.merge(&b);
+        assert_eq!(a.rounds, 2);
+        assert_eq!(a.bytes, 10);
+    }
+
+    #[test]
+    fn display_contains_fields() {
+        let s = CommStats::default().to_string();
+        assert!(s.contains("rounds=0"));
+    }
+}

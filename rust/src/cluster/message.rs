@@ -1,0 +1,32 @@
+//! Typed messages between the leader and workers. Everything that crosses
+//! this boundary is what the paper would put on the wire; the accounting
+//! in [`crate::cluster::Cluster`] is driven by these exchanges.
+
+/// Leader -> worker requests.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Compute `Xhat_i v` on the local shard.
+    CovMatVec(Vec<f64>),
+    /// Return the leading eigenvector of the local empirical covariance.
+    /// With `unbiased_signs` the worker randomizes the sign with a private
+    /// fair coin (Theorem 3's unbiased-ERM premise).
+    LocalTopEigvec { unbiased_signs: bool },
+    /// Return the local empirical covariance matrix (d x d).
+    Gram,
+    /// Return the top-`k` local eigenbasis (d x k, orthonormal columns).
+    LocalTopK { k: usize },
+    /// One full Oja/SGD pass over the local samples starting from `w`,
+    /// with step size `eta_t = eta0 / (t0 + t)` at global sample count
+    /// `t = t_start + local_index`.
+    OjaPass { w: Vec<f64>, eta0: f64, t0: f64, t_start: u64 },
+    /// Terminate the worker loop.
+    Shutdown,
+}
+
+/// Worker -> leader responses.
+#[derive(Clone, Debug)]
+pub enum Response {
+    Vector(Vec<f64>),
+    Mat { rows: usize, cols: usize, data: Vec<f64> },
+    Err(String),
+}

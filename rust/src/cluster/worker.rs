@@ -1,0 +1,239 @@
+//! Worker thread: owns one shard and a compute oracle, answers leader
+//! requests until shutdown.
+//!
+//! The compute oracle abstracts *how* the local numerical work is done:
+//! [`NativeOracle`] computes in pure Rust; the PJRT oracle in
+//! [`crate::runtime`] executes the AOT-compiled JAX/Pallas artifacts. The
+//! oracle is constructed *inside* the worker thread from an [`OracleSpec`]
+//! (PJRT clients are not `Send`).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::data::Shard;
+use crate::linalg::vec_ops;
+use crate::rng::Pcg64;
+
+use super::message::{Request, Response};
+
+/// Local compute engine interface. `&mut self` because engines may keep
+/// caches (compiled executables, scratch buffers).
+pub trait ComputeOracle {
+    /// `Xhat_i v` for the local shard.
+    fn cov_matvec(&mut self, shard: &Shard, v: &[f64]) -> anyhow::Result<Vec<f64>>;
+
+    /// Leading eigenvector of the local empirical covariance (unit norm,
+    /// deterministic sign).
+    fn local_top_eigvec(&mut self, shard: &Shard) -> anyhow::Result<Vec<f64>>;
+
+    /// Local empirical covariance matrix.
+    fn gram(&mut self, shard: &Shard) -> anyhow::Result<crate::linalg::Matrix>;
+
+    /// Top-`k` local eigenbasis (`d x k`). Default: eigendecompose the
+    /// oracle's Gram output — works for both the native and PJRT oracles
+    /// (the PJRT Gram comes from the AOT kernel; the small `d x d`
+    /// eigensolve stays on the worker CPU either way).
+    fn local_top_k(&mut self, shard: &Shard, k: usize) -> anyhow::Result<crate::linalg::Matrix> {
+        let g = self.gram(shard)?;
+        let d = g.rows();
+        anyhow::ensure!(k >= 1 && k <= d, "local_top_k: bad rank {k} for d={d}");
+        let eig = crate::linalg::eigen::SymEigen::new(&g);
+        let mut w = crate::linalg::Matrix::zeros(d, k);
+        for c in 0..k {
+            w.set_col(c, &eig.eigvec(c));
+        }
+        Ok(w)
+    }
+
+    /// One sequential Oja pass over the shard's rows:
+    /// `w <- normalize(w + eta_t * x_t (x_t^T w))`, `eta_t = eta0/(t0+t)`.
+    fn oja_pass(
+        &mut self,
+        shard: &Shard,
+        w: &[f64],
+        eta0: f64,
+        t0: f64,
+        t_start: u64,
+    ) -> anyhow::Result<Vec<f64>> {
+        // default implementation shared by both oracles: the per-sample
+        // update is O(d) and memory-bound; there is nothing for an
+        // accelerator kernel to win here unless batched (see
+        // python/compile/model.py:oja_pass for the batched variant).
+        let mut w = w.to_vec();
+        let d = shard.d();
+        assert_eq!(w.len(), d);
+        for i in 0..shard.n() {
+            let t = t_start + i as u64;
+            let eta = eta0 / (t0 + t as f64);
+            let x = shard.row(i);
+            let xw = vec_ops::dot(x, &w);
+            vec_ops::axpy(&mut w, eta * xw, x);
+            vec_ops::normalize(&mut w);
+        }
+        Ok(w)
+    }
+}
+
+/// Pure-Rust compute oracle.
+#[derive(Default)]
+pub struct NativeOracle {
+    scratch: Vec<f64>,
+}
+
+impl ComputeOracle for NativeOracle {
+    fn cov_matvec(&mut self, shard: &Shard, v: &[f64]) -> anyhow::Result<Vec<f64>> {
+        let mut out = vec![0.0; shard.d()];
+        shard.cov_matvec_into(v, &mut self.scratch, &mut out);
+        Ok(out)
+    }
+
+    fn local_top_eigvec(&mut self, shard: &Shard) -> anyhow::Result<Vec<f64>> {
+        Ok(shard.local_top_eigvec())
+    }
+
+    fn gram(&mut self, shard: &Shard) -> anyhow::Result<crate::linalg::Matrix> {
+        Ok(shard.empirical_covariance().clone())
+    }
+}
+
+/// How each worker should build its compute oracle.
+#[derive(Clone, Debug)]
+pub enum OracleSpec {
+    /// Pure Rust ([`NativeOracle`]).
+    Native,
+    /// PJRT-backed: load AOT HLO artifacts from this directory (see
+    /// `python/compile/aot.py` and [`crate::runtime`]).
+    Pjrt { artifact_dir: String },
+}
+
+impl OracleSpec {
+    fn build(&self) -> anyhow::Result<Box<dyn ComputeOracle>> {
+        match self {
+            OracleSpec::Native => Ok(Box::new(NativeOracle::default())),
+            OracleSpec::Pjrt { artifact_dir } => {
+                Ok(Box::new(crate::runtime::PjrtOracle::new(artifact_dir)?))
+            }
+        }
+    }
+}
+
+/// Worker event loop.
+pub(super) fn worker_main(
+    _id: usize,
+    shard: Arc<Shard>,
+    spec: OracleSpec,
+    seed: u64,
+    rx: mpsc::Receiver<Request>,
+    tx: mpsc::Sender<(usize, Response)>,
+) {
+    let mut rng = Pcg64::with_stream(seed, 0x11c2 + _id as u64);
+    let mut oracle: Box<dyn ComputeOracle> = match spec.build() {
+        Ok(o) => o,
+        Err(e) => {
+            // Surface construction failure on the first request instead of
+            // crashing the thread silently.
+            while let Ok(req) = rx.recv() {
+                if matches!(req, Request::Shutdown) {
+                    return;
+                }
+                let _ = tx.send((_id, Response::Err(format!("oracle init failed: {e}"))));
+            }
+            return;
+        }
+    };
+    while let Ok(req) = rx.recv() {
+        let resp = match req {
+            Request::Shutdown => break,
+            Request::CovMatVec(v) => match oracle.cov_matvec(&shard, &v) {
+                Ok(out) => Response::Vector(out),
+                Err(e) => Response::Err(e.to_string()),
+            },
+            Request::LocalTopEigvec { unbiased_signs } => {
+                match oracle.local_top_eigvec(&shard) {
+                    Ok(mut v) => {
+                        if unbiased_signs && rng.next_rademacher() < 0.0 {
+                            for x in &mut v {
+                                *x = -*x;
+                            }
+                        }
+                        Response::Vector(v)
+                    }
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+            Request::Gram => match oracle.gram(&shard) {
+                Ok(g) => Response::Mat { rows: g.rows(), cols: g.cols(), data: g.data().to_vec() },
+                Err(e) => Response::Err(e.to_string()),
+            },
+            Request::LocalTopK { k } => match oracle.local_top_k(&shard, k) {
+                Ok(w) => Response::Mat { rows: w.rows(), cols: w.cols(), data: w.data().to_vec() },
+                Err(e) => Response::Err(e.to_string()),
+            },
+            Request::OjaPass { w, eta0, t0, t_start } => {
+                match oracle.oja_pass(&shard, &w, eta0, t0, t_start) {
+                    Ok(out) => Response::Vector(out),
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+        };
+        if tx.send((_id, resp)).is_err() {
+            break; // leader gone
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn shard(n: usize, d: usize, seed: u64) -> Shard {
+        let mut rng = Pcg64::new(seed);
+        Shard::new(n, d, (0..n * d).map(|_| rng.next_gaussian()).collect())
+    }
+
+    #[test]
+    fn native_oracle_matvec_matches_shard() {
+        let s = shard(30, 5, 1);
+        let mut o = NativeOracle::default();
+        let v = vec![1.0, 0.5, -0.5, 2.0, 0.0];
+        let got = o.cov_matvec(&s, &v).unwrap();
+        let want = s.cov_matvec(&v);
+        for i in 0..5 {
+            assert!((got[i] - want[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn oja_pass_keeps_unit_norm_and_improves() {
+        // strongly anisotropic shard: rows mostly along e1
+        let n = 500;
+        let d = 4;
+        let mut rng = Pcg64::new(2);
+        let mut rows = Vec::with_capacity(n * d);
+        for _ in 0..n {
+            rows.push(2.0 * rng.next_gaussian());
+            for _ in 1..d {
+                rows.push(0.1 * rng.next_gaussian());
+            }
+        }
+        let s = Shard::new(n, d, rows);
+        let mut o = NativeOracle::default();
+        let w0 = vec_ops::normalized(&[0.5, 0.5, 0.5, 0.5]);
+        let w = o.oja_pass(&s, &w0, 1.0, 10.0, 0).unwrap();
+        assert!((vec_ops::norm(&w) - 1.0).abs() < 1e-9);
+        let e1 = [1.0, 0.0, 0.0, 0.0];
+        assert!(
+            vec_ops::alignment_error(&w, &e1) < vec_ops::alignment_error(&w0, &e1),
+            "Oja pass should improve alignment"
+        );
+    }
+
+    #[test]
+    fn gram_is_covariance() {
+        let s = shard(10, 3, 3);
+        let mut o = NativeOracle::default();
+        let g = o.gram(&s).unwrap();
+        assert!(g.sub(s.empirical_covariance()).max_abs() < 1e-15);
+    }
+}

@@ -1,0 +1,127 @@
+//! Launcher configuration: a small `--key value` argument parser (no
+//! `clap` in the offline image) shared by `main.rs` and the examples.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed command line: a subcommand plus `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut iter = args.into_iter().peekable();
+        if let Some(first) = iter.peek() {
+            if !first.starts_with("--") {
+                out.command = iter.next();
+            }
+        }
+        while let Some(arg) = iter.next() {
+            let Some(key) = arg.strip_prefix("--") else {
+                bail!("unexpected positional argument '{arg}'");
+            };
+            let value = match iter.peek() {
+                Some(v) if !v.starts_with("--") => iter.next().unwrap(),
+                _ => "true".to_string(), // bare flag
+            };
+            out.flags.insert(key.to_string(), value);
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => Ok(v.parse()?),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> bool {
+        matches!(self.flags.get(key).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Parse a comma-separated usize list flag.
+    pub fn get_usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|p| !p.trim().is_empty())
+                .map(|p| Ok(p.trim().parse()?))
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(tokens: &[&str]) -> Args {
+        Args::parse(tokens.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["figure1", "--m", "25", "--runs", "40", "--fast"]);
+        assert_eq!(a.command.as_deref(), Some("figure1"));
+        assert_eq!(a.get_usize("m", 0).unwrap(), 25);
+        assert_eq!(a.get_usize("runs", 0).unwrap(), 40);
+        assert!(a.get_bool("fast"));
+        assert!(!a.get_bool("absent"));
+    }
+
+    #[test]
+    fn defaults_used_when_missing() {
+        let a = parse(&[]);
+        assert_eq!(a.command, None);
+        assert_eq!(a.get_usize("m", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("eps", 0.5).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn usize_list_parsing() {
+        let a = parse(&["x", "--n-list", "10, 20,30"]);
+        assert_eq!(a.get_usize_list("n-list", &[1]).unwrap(), vec![10, 20, 30]);
+        assert_eq!(a.get_usize_list("other", &[5]).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn rejects_stray_positional() {
+        assert!(Args::parse(["x".to_string(), "y".to_string()]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--m", "abc"]);
+        assert!(a.get_usize("m", 0).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! ERM baselines: centralized (Lemma 1) and single-machine.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::cluster::Cluster;
+use crate::linalg::eigen::SymEigen;
+
+use super::{instrumented, Algorithm, Estimate};
+
+/// The centralized empirical risk minimizer: leading eigenvector of the
+/// pooled empirical covariance `Xhat = (1/m) sum_i Xhat_i`.
+///
+/// This is the paper's **gold baseline** (Lemma 1): a single round, but a
+/// heavy one — every machine ships its full `d x d` Gram matrix, i.e.
+/// `d` vectors of traffic instead of one. The round-efficient algorithms
+/// are judged by how closely they approach its error with `R^d`-sized
+/// messages only.
+#[derive(Clone, Debug, Default)]
+pub struct CentralizedErm;
+
+impl Algorithm for CentralizedErm {
+    fn name(&self) -> &'static str {
+        "centralized_erm"
+    }
+
+    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+        instrumented(cluster, || {
+            let xhat = cluster.gram_average()?;
+            let eig = SymEigen::new(&xhat);
+            let mut info = BTreeMap::new();
+            info.insert("lambda1_hat".into(), eig.lambda1());
+            info.insert("gap_hat".into(), eig.eigengap());
+            Ok((eig.leading(), info))
+        })
+    }
+}
+
+/// Machine 1's local ERM alone — the "what a single machine can do"
+/// reference curve plotted in Figure 1 ("average loss of the individual
+/// ERM solutions"). Zero communication.
+#[derive(Clone, Debug, Default)]
+pub struct SingleMachineErm;
+
+impl Algorithm for SingleMachineErm {
+    fn name(&self) -> &'static str {
+        "single_machine_erm"
+    }
+
+    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+        instrumented(cluster, || {
+            // leader *is* machine 1: no communication
+            let w = cluster.leader_shard().local_top_eigvec();
+            Ok((w, BTreeMap::new()))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::*;
+    use crate::data::Distribution;
+    use crate::linalg::vec_ops::alignment_error;
+
+    #[test]
+    fn centralized_erm_matches_pooled_eigvec() {
+        let (c, dist) = test_cluster(4, 60, 6, 11);
+        let est = CentralizedErm.run(&c).unwrap();
+        let pooled = pooled_cov(&dist, 4, 60, 11);
+        let want = crate::linalg::eigen::leading_eigvec(&pooled);
+        assert!(alignment_error(&est.w, &want) < 1e-18);
+        assert_eq!(est.comm.rounds, 1);
+        // heavy round: m * d vectors
+        assert_eq!(est.comm.vectors_gathered, 4 * 6);
+    }
+
+    #[test]
+    fn centralized_beats_single_machine_on_average() {
+        // average over several seeds: mn samples beat n samples
+        let mut cen = 0.0;
+        let mut single = 0.0;
+        let runs = 12;
+        for seed in 0..runs {
+            let (c, dist) = test_cluster(8, 40, 5, 100 + seed);
+            cen += CentralizedErm.run(&c).unwrap().error(dist.v1());
+            single += SingleMachineErm.run(&c).unwrap().error(dist.v1());
+        }
+        assert!(
+            cen < single,
+            "centralized {:.3e} should beat single-machine {:.3e}",
+            cen / runs as f64,
+            single / runs as f64
+        );
+    }
+
+    #[test]
+    fn single_machine_no_communication() {
+        let (c, _) = test_cluster(3, 30, 4, 13);
+        let est = SingleMachineErm.run(&c).unwrap();
+        assert_eq!(est.comm.rounds, 0);
+        assert_eq!(est.comm.bytes, 0);
+    }
+
+    #[test]
+    fn centralized_info_reports_spectrum() {
+        let (c, _) = test_cluster(3, 80, 4, 17);
+        let est = CentralizedErm.run(&c).unwrap();
+        assert!(est.info["lambda1_hat"] > 0.0);
+        assert!(est.info["gap_hat"] > 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! The paper's algorithms, written against the [`Cluster`] primitives.
+//!
+//! | type | paper reference | rounds |
+//! |---|---|---|
+//! | [`CentralizedErm`] | Lemma 1 baseline | 1 (heavy: ships d×d) |
+//! | [`NaiveAverage`] | Theorem 3 (negative result) | 1 |
+//! | [`SignFixedAverage`] | Theorem 4 | 1 |
+//! | [`ProjectionAverage`] | §5 heuristic | 1 |
+//! | [`DistributedPower`] | §2.2.2 | `O((λ1/δ) log(d/ε))` |
+//! | [`DistributedLanczos`] | §2.2.2 | `O(sqrt(λ1/δ) log(d/ε))` |
+//! | [`HotPotatoOja`] | §2.2.2 ("hot-potato" SGD) | `m` |
+//! | [`ShiftInvert`] | Algorithm 1 + 2, Theorem 6 | `~O(sqrt(1/(δ sqrt n)))` matvecs |
+
+mod erm;
+mod lanczos;
+mod oja;
+mod one_shot;
+mod power;
+pub mod precond;
+pub mod quantized;
+mod shift_invert;
+pub mod solvers;
+pub mod subspace;
+
+pub use erm::{CentralizedErm, SingleMachineErm};
+pub use lanczos::DistributedLanczos;
+pub use oja::HotPotatoOja;
+pub use one_shot::{NaiveAverage, ProjectionAverage, SignFixedAverage};
+pub use power::DistributedPower;
+pub use quantized::{QuantizedPower, WirePrecision};
+pub use shift_invert::{MuStrategy, ShiftInvert, SniConfig, SniSolver};
+pub use subspace::{
+    CentralizedSubspace, DeflatedShiftInvert, DistributedOrthoIteration, SubspaceEstimate,
+    SubspaceProjectionAverage,
+};
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, CommStats};
+use crate::linalg::vec_ops;
+
+/// Output of one algorithm run: the unit-norm estimate of `v_1` plus the
+/// communication bill and wallclock.
+#[derive(Clone, Debug)]
+pub struct Estimate {
+    /// Unit-norm estimate of the leading eigenvector.
+    pub w: Vec<f64>,
+    /// Communication performed during the run.
+    pub comm: CommStats,
+    /// Leader-side wallclock.
+    pub wall: Duration,
+    /// Algorithm-specific diagnostics (inner iteration counts, shifts, …).
+    pub info: BTreeMap<String, f64>,
+}
+
+impl Estimate {
+    /// The paper's risk: `1 - (w^T v1)^2`.
+    pub fn error(&self, v1: &[f64]) -> f64 {
+        vec_ops::alignment_error(&self.w, v1)
+    }
+}
+
+/// A distributed PCA algorithm. `run` resets the cluster's communication
+/// counters, executes, and returns the estimate with the bill attached.
+pub trait Algorithm {
+    /// Short identifier used in reports (`"sign_fixed_avg"`, …).
+    fn name(&self) -> &'static str;
+
+    /// Execute on a cluster.
+    fn run(&self, cluster: &Cluster) -> Result<Estimate>;
+}
+
+/// Helper for implementations: time `f`, snapshot comm stats around it.
+pub(crate) fn instrumented(
+    cluster: &Cluster,
+    f: impl FnOnce() -> Result<(Vec<f64>, BTreeMap<String, f64>)>,
+) -> Result<Estimate> {
+    cluster.reset_stats();
+    let t0 = Instant::now();
+    let (mut w, info) = f()?;
+    let wall = t0.elapsed();
+    vec_ops::normalize(&mut w);
+    Ok(Estimate { w, comm: cluster.stats(), wall, info })
+}
+
+/// Matrix-valued variant for the subspace estimators.
+pub(crate) fn instrumented_mat(
+    cluster: &Cluster,
+    k: usize,
+    f: impl FnOnce() -> Result<(crate::linalg::Matrix, BTreeMap<String, f64>)>,
+) -> Result<subspace::SubspaceEstimate> {
+    cluster.reset_stats();
+    let t0 = Instant::now();
+    let (w, info) = f()?;
+    let wall = t0.elapsed();
+    debug_assert_eq!(w.cols(), k);
+    Ok(subspace::SubspaceEstimate { w, comm: cluster.stats(), wall, info })
+}
+
+#[cfg(test)]
+pub(crate) mod test_support {
+    use crate::cluster::Cluster;
+    use crate::data::{CovModel, Distribution, GaussianCov};
+
+    /// Small axis-aligned gaussian cluster: `v1 = e_1`, gap 0.5.
+    pub fn test_cluster(m: usize, n: usize, d: usize, seed: u64) -> (Cluster, GaussianCov) {
+        let mut sigma = vec![0.0; d];
+        sigma[0] = 1.0;
+        for j in 1..d {
+            sigma[j] = 0.5 * (0.9f64).powi(j as i32 - 1);
+        }
+        let dist = CovModel::axis_aligned(sigma).gaussian();
+        let c = Cluster::generate(&dist, m, n, seed).unwrap();
+        (c, dist)
+    }
+
+    /// The paper's Figure-1 model at reduced dimension.
+    pub fn fig1_cluster(m: usize, n: usize, d: usize, seed: u64) -> (Cluster, GaussianCov) {
+        let dist = CovModel::paper_fig1(d, seed ^ 0xabc).gaussian();
+        let c = Cluster::generate(&dist, m, n, seed).unwrap();
+        (c, dist)
+    }
+
+    /// Exact pooled empirical covariance for cross-checks (regenerates the
+    /// same shards the cluster saw).
+    pub fn pooled_cov(dist: &dyn Distribution, m: usize, n: usize, seed: u64) -> crate::linalg::Matrix {
+        let mut root = crate::rng::Pcg64::with_stream(seed, 0xdeca_f);
+        let mut acc = crate::linalg::Matrix::zeros(dist.dim(), dist.dim());
+        for i in 0..m {
+            let mut rng = root.fork(i as u64);
+            let shard = dist.sample_shard(&mut rng, n);
+            acc.axpy_mat(1.0, shard.empirical_covariance());
+        }
+        acc.scale_mut(1.0 / m as f64);
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::test_support::*;
+    use super::*;
+
+    #[test]
+    fn estimate_error_uses_alignment() {
+        let e = Estimate {
+            w: vec![1.0, 0.0],
+            comm: CommStats::default(),
+            wall: Duration::ZERO,
+            info: BTreeMap::new(),
+        };
+        assert!(e.error(&[1.0, 0.0]) < 1e-15);
+        assert!((e.error(&[0.0, 1.0]) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn instrumented_resets_and_snapshots() {
+        let (c, _) = test_cluster(3, 20, 4, 1);
+        let v = vec![1.0, 0.0, 0.0, 0.0];
+        c.dist_matvec(&v).unwrap(); // pollute counters
+        let est = instrumented(&c, || {
+            c.dist_matvec(&v)?;
+            Ok((v.clone(), BTreeMap::new()))
+        })
+        .unwrap();
+        assert_eq!(est.comm.rounds, 1, "stats must be reset before the run");
+        assert!((vec_ops::norm(&est.w) - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,119 @@
+//! "Hot-potato" SGD (§2.2.2): Oja's rule passed machine to machine.
+//!
+//! The iterate makes a full pass over each machine's `n` samples before
+//! being handed to the next machine — `m` communication rounds total for
+//! one pass over all `mn` points. With the `eta_t ~ 1/(delta t)` schedule
+//! of [Jain et al. '16] the final error is `O(b^2 ln d / (delta^2 mn))`,
+//! i.e. centralized-ERM order (Eq. (6) in the paper).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::cluster::Cluster;
+use crate::linalg::vec_ops::normalize;
+use crate::rng::Pcg64;
+
+use super::{instrumented, Algorithm, Estimate};
+
+/// Hot-potato Oja SGD.
+#[derive(Clone, Debug)]
+pub struct HotPotatoOja {
+    /// Step size schedule `eta_t = eta0 / (t0 + t)`. When `None`, both
+    /// are chosen from machine 1's local spectrum (free): the classical
+    /// `eta0 = c / gap_hat` with a burn-in offset `t0` that keeps early
+    /// steps below 1.
+    pub eta0: Option<f64>,
+    pub t0: Option<f64>,
+    /// Step-size constant `c` in `eta0 = c / gap_hat` for the auto
+    /// schedule.
+    pub c: f64,
+    /// Seed for the random start vector.
+    pub seed: u64,
+}
+
+impl Default for HotPotatoOja {
+    fn default() -> Self {
+        HotPotatoOja { eta0: None, t0: None, c: 2.0, seed: 0x0ca }
+    }
+}
+
+impl Algorithm for HotPotatoOja {
+    fn name(&self) -> &'static str {
+        "hot_potato_oja"
+    }
+
+    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+        instrumented(cluster, || {
+            let d = cluster.d();
+            // free local estimates from the leader (machine 1)
+            let leader_eig = cluster.leader_shard().local_eigen();
+            let gap_hat = leader_eig.eigengap().max(1e-6);
+            let eta0 = self.eta0.unwrap_or(self.c / gap_hat);
+            // burn-in: keep eta_t <= 1/lambda1_hat at t = 0
+            let t0 = self
+                .t0
+                .unwrap_or_else(|| (eta0 * leader_eig.lambda1()).max(1.0));
+            let mut rng = Pcg64::new(self.seed);
+            let mut w0 = rng.gaussian_vec(d);
+            normalize(&mut w0);
+            let w = cluster.oja_chain(&w0, eta0, t0)?;
+            let mut info = BTreeMap::new();
+            info.insert("eta0".into(), eta0);
+            info.insert("t0".into(), t0);
+            Ok((w, info))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::*;
+    use crate::data::Distribution;
+
+    #[test]
+    fn exactly_m_rounds() {
+        let (c, _) = test_cluster(7, 40, 5, 71);
+        let est = HotPotatoOja::default().run(&c).unwrap();
+        assert_eq!(est.comm.rounds, 7);
+    }
+
+    #[test]
+    fn error_decreases_with_more_data() {
+        // mn doubling should shrink the average error
+        let runs = 10;
+        let mut small = 0.0;
+        let mut large = 0.0;
+        for seed in 0..runs {
+            let (c1, dist) = test_cluster(4, 100, 5, 500 + seed);
+            small += HotPotatoOja::default().run(&c1).unwrap().error(dist.v1());
+            let (c2, dist2) = test_cluster(4, 800, 5, 600 + seed);
+            large += HotPotatoOja::default().run(&c2).unwrap().error(dist2.v1());
+        }
+        assert!(
+            large < small,
+            "avg error with 8x data ({:.3e}) should beat ({:.3e})",
+            large / runs as f64,
+            small / runs as f64
+        );
+    }
+
+    #[test]
+    fn reaches_reasonable_accuracy() {
+        let (c, dist) = test_cluster(8, 500, 6, 73);
+        let est = HotPotatoOja::default().run(&c).unwrap();
+        let err = est.error(dist.v1());
+        assert!(err < 0.05, "oja error {err}");
+    }
+
+    #[test]
+    fn explicit_schedule_respected() {
+        let (c, _) = test_cluster(3, 30, 4, 79);
+        let est = HotPotatoOja { eta0: Some(0.25), t0: Some(5.0), ..Default::default() }
+            .run(&c)
+            .unwrap();
+        assert_eq!(est.info["eta0"], 0.25);
+        assert_eq!(est.info["t0"], 5.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Single-communication-round estimators (§3 + the §5 heuristic).
+//!
+//! All three gather the `m` local ERM eigenvectors in one round and differ
+//! only in how the leader combines them:
+//!
+//! - [`NaiveAverage`] — plain average + normalize. Theorem 3: with
+//!   unbiased (sign-randomized) local solutions this is stuck at
+//!   `Omega(1/n)` and does **not** improve with `m`.
+//! - [`SignFixedAverage`] — Theorem 4 / Eq. (7): flip each `w_i` to agree
+//!   in sign with machine 1's solution before averaging. Error
+//!   `O(eps_ERM) + O(b^4 log^2(dm)/delta^4 n^2)`.
+//! - [`ProjectionAverage`] — §5: average the rank-one projections
+//!   `w_i w_i^T` and take the leading eigenvector; sign-free by
+//!   construction and empirically the best one-round estimator in the
+//!   paper's Figure 1.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::cluster::Cluster;
+use crate::linalg::eigen::SymEigen;
+use crate::linalg::vec_ops::{axpy, dot};
+use crate::linalg::Matrix;
+
+use super::{instrumented, Algorithm, Estimate};
+
+/// Theorem 3's failing estimator: `normalize(mean_i w_i)` over unbiased
+/// local eigenvectors.
+#[derive(Clone, Debug, Default)]
+pub struct NaiveAverage;
+
+impl Algorithm for NaiveAverage {
+    fn name(&self) -> &'static str {
+        "naive_average"
+    }
+
+    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+        instrumented(cluster, || {
+            // unbiased_signs = true: each machine's ERM output sign is a
+            // private fair coin — exactly the premise of Theorem 3.
+            let vs = cluster.local_top_eigvecs(true)?;
+            let mut acc = vec![0.0; cluster.d()];
+            for v in &vs {
+                axpy(&mut acc, 1.0, v);
+            }
+            // normalization happens in `instrumented`
+            Ok((acc, BTreeMap::new()))
+        })
+    }
+}
+
+/// Theorem 4's estimator, Eq. (7):
+/// `w = normalize( sum_i sign(w_i^T w_1) w_i )`.
+#[derive(Clone, Debug, Default)]
+pub struct SignFixedAverage;
+
+impl Algorithm for SignFixedAverage {
+    fn name(&self) -> &'static str {
+        "sign_fixed_average"
+    }
+
+    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+        instrumented(cluster, || {
+            let vs = cluster.local_top_eigvecs(true)?;
+            let w1 = &vs[0];
+            let mut acc = vec![0.0; cluster.d()];
+            let mut flipped = 0u32;
+            for v in &vs {
+                let s = if dot(v, w1) >= 0.0 { 1.0 } else { -1.0 };
+                if s < 0.0 {
+                    flipped += 1;
+                }
+                axpy(&mut acc, s, v);
+            }
+            let mut info = BTreeMap::new();
+            info.insert("flipped".into(), flipped as f64);
+            Ok((acc, info))
+        })
+    }
+}
+
+/// The §5 heuristic: leading eigenvector of
+/// `Pbar = (1/m) sum_i w_i w_i^T`.
+#[derive(Clone, Debug, Default)]
+pub struct ProjectionAverage;
+
+impl Algorithm for ProjectionAverage {
+    fn name(&self) -> &'static str {
+        "projection_average"
+    }
+
+    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+        instrumented(cluster, || {
+            let vs = cluster.local_top_eigvecs(true)?;
+            let d = cluster.d();
+            let mut pbar = Matrix::zeros(d, d);
+            for v in &vs {
+                // rank-one accumulate: signs cancel in w w^T
+                for i in 0..d {
+                    let vi = v[i];
+                    if vi == 0.0 {
+                        continue;
+                    }
+                    let row = &mut pbar.data_mut()[i * d..(i + 1) * d];
+                    for (r, &vj) in row.iter_mut().zip(v.iter()) {
+                        *r += vi * vj;
+                    }
+                }
+            }
+            pbar.scale_mut(1.0 / vs.len() as f64);
+            let eig = SymEigen::new(&pbar);
+            let mut info = BTreeMap::new();
+            info.insert("pbar_lambda1".into(), eig.lambda1());
+            info.insert("pbar_gap".into(), eig.eigengap());
+            Ok((eig.leading(), info))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::super::CentralizedErm;
+    use super::*;
+    use crate::data::{Distribution, Thm3Dist};
+
+    #[test]
+    fn all_one_round() {
+        let (c, _) = test_cluster(6, 50, 5, 21);
+        for alg in [&NaiveAverage as &dyn Algorithm, &SignFixedAverage, &ProjectionAverage] {
+            let est = alg.run(&c).unwrap();
+            assert_eq!(est.comm.rounds, 1, "{} must be one-round", alg.name());
+            assert_eq!(est.comm.vectors_gathered, 6);
+        }
+    }
+
+    #[test]
+    fn sign_fixed_beats_naive_on_thm3_distribution() {
+        // Theorem 3 vs Theorem 4, averaged over independent clusters:
+        // naive averaging stays ~1/n, sign-fixing concentrates ~1/(mn).
+        let dist = Thm3Dist;
+        let (m, n) = (24, 60);
+        let runs = 24;
+        let mut naive = 0.0;
+        let mut fixed = 0.0;
+        for seed in 0..runs {
+            let c = crate::cluster::Cluster::generate(&dist, m, n, 1000 + seed).unwrap();
+            naive += NaiveAverage.run(&c).unwrap().error(dist.v1());
+            fixed += SignFixedAverage.run(&c).unwrap().error(dist.v1());
+        }
+        naive /= runs as f64;
+        fixed /= runs as f64;
+        assert!(
+            fixed < naive / 3.0,
+            "sign-fixing ({fixed:.3e}) should be far below naive ({naive:.3e})"
+        );
+    }
+
+    #[test]
+    fn projection_average_ignores_signs() {
+        let (c, dist) = fig1_cluster(10, 80, 6, 23);
+        // run twice: sign randomization differs between runs only through
+        // worker RNG; projection must stay consistent regardless
+        let e1 = ProjectionAverage.run(&c).unwrap();
+        let e2 = ProjectionAverage.run(&c).unwrap();
+        assert!(e1.error(dist.v1()) < 0.5);
+        assert!(
+            (e1.error(dist.v1()) - e2.error(dist.v1())).abs() < 1e-12,
+            "projection estimator must be sign-invariant"
+        );
+    }
+
+    #[test]
+    fn sign_fixed_tracks_centralized_for_large_n() {
+        // Thm 4: for n >> m the sign-fixed average is consistent with the
+        // centralized ERM (same order of error).
+        let mut ratio_sum = 0.0;
+        let runs = 8;
+        for seed in 0..runs {
+            let (c, dist) = fig1_cluster(4, 500, 6, 31 + seed);
+            let fixed = SignFixedAverage.run(&c).unwrap().error(dist.v1());
+            let cen = CentralizedErm.run(&c).unwrap().error(dist.v1());
+            ratio_sum += fixed / cen.max(1e-12);
+        }
+        let ratio = ratio_sum / runs as f64;
+        assert!(ratio < 30.0, "sign-fixed / centralized error ratio = {ratio:.1}");
+    }
+
+    #[test]
+    fn naive_average_fails_even_with_many_machines() {
+        // increasing m does NOT rescue the naive estimator (Thm 3)
+        let dist = Thm3Dist;
+        let n = 40;
+        let runs = 30;
+        let mut err_small_m = 0.0;
+        let mut err_big_m = 0.0;
+        for seed in 0..runs {
+            let c1 = crate::cluster::Cluster::generate(&dist, 4, n, 2000 + seed).unwrap();
+            err_small_m += NaiveAverage.run(&c1).unwrap().error(dist.v1());
+            let c2 = crate::cluster::Cluster::generate(&dist, 32, n, 3000 + seed).unwrap();
+            err_big_m += NaiveAverage.run(&c2).unwrap().error(dist.v1());
+        }
+        err_small_m /= runs as f64;
+        err_big_m /= runs as f64;
+        // both stuck at the same Omega(1/n) floor: within 4x of each other
+        let ratio = err_small_m / err_big_m;
+        assert!(
+            (0.25..4.0).contains(&ratio),
+            "naive error should not improve with m: m=4 -> {err_small_m:.3e}, m=32 -> {err_big_m:.3e}"
+        );
+    }
+
+    #[test]
+    fn info_fields_present() {
+        let (c, _) = test_cluster(5, 40, 4, 41);
+        let f = SignFixedAverage.run(&c).unwrap();
+        assert!(f.info.contains_key("flipped"));
+        let p = ProjectionAverage.run(&c).unwrap();
+        assert!(p.info.contains_key("pbar_lambda1"));
+    }
+}

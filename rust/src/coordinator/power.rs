@@ -1,0 +1,132 @@
+//! Distributed power method (§2.2.2).
+//!
+//! Each iteration multiplies the current iterate by the pooled empirical
+//! covariance via one [`Cluster::dist_matvec`] round and renormalizes.
+//! Round complexity `O((lambda_1/delta) ln(d / p eps))` to reach
+//! `1 - (w^T vhat_1)^2 <= eps`.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::cluster::Cluster;
+use crate::linalg::vec_ops::{alignment_error, normalize};
+use crate::rng::Pcg64;
+
+use super::{instrumented, Algorithm, Estimate};
+
+/// Distributed power iterations.
+#[derive(Clone, Debug)]
+pub struct DistributedPower {
+    /// Hard iteration cap (each iteration = 1 round).
+    pub max_iters: usize,
+    /// Stop when consecutive iterates satisfy
+    /// `1 - <w_k, w_{k+1}>^2 <= tol`.
+    pub tol: f64,
+    /// Seed for the random start vector.
+    pub seed: u64,
+    /// Start from machine 1's local eigenvector instead of random
+    /// (free, and already constant-correlated with `vhat_1` whp — same
+    /// warm start the S&I remark licenses).
+    pub warm_start: bool,
+}
+
+impl Default for DistributedPower {
+    fn default() -> Self {
+        DistributedPower { max_iters: 2_000, tol: 1e-18, seed: 0x9d, warm_start: false }
+    }
+}
+
+impl Algorithm for DistributedPower {
+    fn name(&self) -> &'static str {
+        "distributed_power"
+    }
+
+    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+        instrumented(cluster, || {
+            let d = cluster.d();
+            let mut w = if self.warm_start {
+                cluster.leader_shard().local_top_eigvec()
+            } else {
+                let mut rng = Pcg64::new(self.seed);
+                let mut v = rng.gaussian_vec(d);
+                normalize(&mut v);
+                v
+            };
+            let mut iters = 0usize;
+            for _ in 0..self.max_iters {
+                let mut next = cluster.dist_matvec(&w)?;
+                let nn = normalize(&mut next);
+                iters += 1;
+                if nn == 0.0 {
+                    // w orthogonal to range — reseed
+                    let mut rng = Pcg64::new(self.seed ^ iters as u64);
+                    next = rng.gaussian_vec(d);
+                    normalize(&mut next);
+                }
+                let drift = alignment_error(&next, &w);
+                w = next;
+                if drift <= self.tol {
+                    break;
+                }
+            }
+            let mut info = BTreeMap::new();
+            info.insert("iters".into(), iters as f64);
+            Ok((w, info))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::super::CentralizedErm;
+    use super::*;
+
+    #[test]
+    fn power_converges_to_centralized_erm() {
+        let (c, _) = test_cluster(4, 100, 6, 51);
+        let cen = CentralizedErm.run(&c).unwrap();
+        let pow = DistributedPower::default().run(&c).unwrap();
+        assert!(
+            alignment_error(&pow.w, &cen.w) < 1e-10,
+            "power should find the pooled leading eigenvector, err={}",
+            alignment_error(&pow.w, &cen.w)
+        );
+    }
+
+    #[test]
+    fn rounds_equal_iterations() {
+        let (c, _) = test_cluster(3, 50, 5, 53);
+        let est = DistributedPower { max_iters: 7, tol: 0.0, seed: 1, warm_start: false }
+            .run(&c)
+            .unwrap();
+        assert_eq!(est.comm.rounds, 7);
+        assert_eq!(est.comm.matvec_products, 7);
+        assert_eq!(est.info["iters"], 7.0);
+    }
+
+    #[test]
+    fn warm_start_converges_faster() {
+        let (c, _) = fig1_cluster(4, 300, 8, 57);
+        let cold = DistributedPower { tol: 1e-16, ..Default::default() }.run(&c).unwrap();
+        let warm = DistributedPower { tol: 1e-16, warm_start: true, ..Default::default() }
+            .run(&c)
+            .unwrap();
+        assert!(
+            warm.comm.rounds <= cold.comm.rounds,
+            "warm {} !<= cold {}",
+            warm.comm.rounds,
+            cold.comm.rounds
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (c, _) = test_cluster(3, 40, 4, 59);
+        let a = DistributedPower::default().run(&c).unwrap();
+        let b = DistributedPower::default().run(&c).unwrap();
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.comm.rounds, b.comm.rounds);
+    }
+}

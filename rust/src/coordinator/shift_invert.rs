@@ -1,0 +1,559 @@
+//! Shift-and-Invert power iterations with locally-preconditioned linear
+//! solves — Algorithm 1 + Algorithm 2, Theorem 6.
+//!
+//! Structure (faithful to Algorithm 1):
+//!
+//! 1. **Setup.** Rescale the problem to `b = 1` (paper's w.l.o.g.): all
+//!    distributed matvecs are multiplied by `s^2 = 1/b_hat` at the leader,
+//!    which rescales the spectrum without touching eigenvectors. The
+//!    leader eigendecomposes its *local* covariance once (free) to get the
+//!    gap estimate `delta_tilde`, the warm start `w_0` (licensed by the
+//!    paper's remark after Lemma 5), and the preconditioner eigenbasis.
+//! 2. **Shift search (repeat loop).** Starting from
+//!    `lambda_(0) = 1 + delta_tilde`, run inverse power iterations
+//!    (each inverse application = one preconditioned CG solve of
+//!    `(lambda I - Xhat) z = w`; every CG iteration = one communication
+//!    round), then estimate `Delta_s = 1/(2 (w_s^T v_s - eps_tilde))` and
+//!    shrink the shift `lambda_(s) = lambda_(s-1) - Delta_s / 2` until
+//!    `lambda - lambda_1(Xhat) = Theta(delta_hat)`.
+//! 3. **Final phase.** Inverse power iterations at the frozen shift
+//!    `lambda_(f)` drive `(w^T vhat_1)^2 >= 1 - eps`.
+//!
+//! ## Practical deviations from the paper's constants (see DESIGN.md)
+//!
+//! - The theoretical inner accuracy `eps_tilde ~ (delta/8)^{m_1+1}/16`
+//!   underflows f64; solves use per-phase *relative* residual tolerances
+//!   (coarse during the shift search, `~eps` in the final phase), the
+//!   standard practice for inexact inverse iteration.
+//! - `m_1`/`m_2` from Algorithm 1 line 2 are kept as **caps** with the
+//!   usual early exit when consecutive iterates stop moving.
+//! - `mu` defaults to a *data-driven* local estimate: the leader splits
+//!   its shard in half and uses `||Xhat_1^a - Xhat_1^b|| / 2` (an unbiased
+//!   proxy for the `n`-sample covariance deviation), times a safety
+//!   factor. This preserves Lemma 6's requirement `mu >= ||Xhat - Xhat_1||`
+//!   w.h.p. while being ~50x tighter than the worst-case
+//!   `4 sqrt(ln(3d/p)/n)` Hoeffding envelope (which is available as
+//!   [`MuStrategy::Theorem6`]).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::Cluster;
+use crate::data::Shard;
+use crate::linalg::vec_ops::{alignment_error, axpy, dot, normalize, scale};
+use crate::linalg::Matrix;
+
+use super::precond::Preconditioner;
+use super::solvers::{agd::agd, cg::pcg, SolveReport};
+use super::{instrumented, Algorithm, Estimate};
+
+/// Which inner solver drives the linear systems (Lemma 7 allows both).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SniSolver {
+    /// Preconditioned conjugate gradients (default).
+    Pcg,
+    /// Plain CG — no preconditioner (ablation).
+    PlainCg,
+    /// Nesterov AGD on the explicitly transformed Problem (13).
+    Agd,
+}
+
+/// How to pick the Lemma-6 regularizer `mu`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MuStrategy {
+    /// Split-sample local estimate (default; see module docs).
+    SplitEstimate,
+    /// Theorem 6's worst-case `4 sqrt(ln(3d/p)/n)`.
+    Theorem6,
+    /// Fixed value (ablation).
+    Fixed(f64),
+}
+
+/// Configuration for [`ShiftInvert`].
+#[derive(Clone, Debug)]
+pub struct SniConfig {
+    /// Target accuracy: `(w^T vhat_1)^2 >= 1 - eps`.
+    pub eps: f64,
+    /// Failure probability budget (drives `m_1`, `m_2`, Theorem-6 `mu`).
+    pub p: f64,
+    /// Inner solver.
+    pub solver: SniSolver,
+    /// Regularizer strategy.
+    pub mu: MuStrategy,
+    /// Override `m_1` / `m_2` caps (defaults: Algorithm 1 line 2).
+    pub m1_override: Option<usize>,
+    pub m2_override: Option<usize>,
+    /// Cap on shift-search outer rounds.
+    pub max_outer: usize,
+    /// Per-solve CG/AGD iteration cap.
+    pub max_inner: usize,
+    /// Start from a random vector instead of machine 1's eigenvector.
+    pub random_init: bool,
+    /// Seed (only used with `random_init`).
+    pub seed: u64,
+}
+
+impl Default for SniConfig {
+    fn default() -> Self {
+        SniConfig {
+            eps: 1e-8,
+            p: 0.1,
+            solver: SniSolver::Pcg,
+            mu: MuStrategy::SplitEstimate,
+            m1_override: None,
+            m2_override: None,
+            max_outer: 16,
+            max_inner: 2_000,
+            random_init: false,
+            seed: 0x51,
+        }
+    }
+}
+
+/// The Theorem-6 algorithm.
+#[derive(Clone, Debug, Default)]
+pub struct ShiftInvert {
+    pub config: SniConfig,
+}
+
+impl ShiftInvert {
+    pub fn new(config: SniConfig) -> Self {
+        ShiftInvert { config }
+    }
+
+    /// Ablation convenience: same algorithm, solver swapped.
+    pub fn with_solver(solver: SniSolver) -> Self {
+        ShiftInvert { config: SniConfig { solver, ..Default::default() } }
+    }
+}
+
+/// Split-sample deviation estimate: `||Xhat^a - Xhat^b|| / 2` over the two
+/// halves of the leader shard approximates the spectral deviation of the
+/// full-shard covariance from the population (both halves deviate by
+/// `~sqrt(2/n) sigma` independently, so their difference has norm
+/// `~2 sigma/sqrt(n)`). A 2x safety factor then dominates
+/// `||Xhat - Xhat_1||` w.h.p.
+fn split_mu_estimate(shard: &Shard, s2: f64) -> f64 {
+    let n = shard.n();
+    let d = shard.d();
+    if n < 4 {
+        return 1.0; // degenerate; forces conservative preconditioning
+    }
+    let half = n / 2;
+    let mut a = Matrix::zeros(d, d);
+    let mut b = Matrix::zeros(d, d);
+    for i in 0..n {
+        let row = shard.row(i);
+        let target = if i < half { &mut a } else { &mut b };
+        for r in 0..d {
+            let x = row[r];
+            if x == 0.0 {
+                continue;
+            }
+            let trow = &mut target.data_mut()[r * d..(r + 1) * d];
+            for (t, &y) in trow.iter_mut().zip(row.iter()) {
+                *t += x * y;
+            }
+        }
+    }
+    a.scale_mut(s2 / half as f64);
+    b.scale_mut(s2 / (n - half) as f64);
+    let dev = a.sub(&b).sym_spectral_norm() / 2.0;
+    2.0 * dev
+}
+
+impl Algorithm for ShiftInvert {
+    fn name(&self) -> &'static str {
+        match self.config.solver {
+            SniSolver::Pcg => "shift_invert_pcg",
+            SniSolver::PlainCg => "shift_invert_cg",
+            SniSolver::Agd => "shift_invert_agd",
+        }
+    }
+
+    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+        let cfg = &self.config;
+        instrumented(cluster, || {
+            let d = cluster.d();
+            let n = cluster.n();
+
+            // ---- setup: rescale to b = 1 --------------------------------
+            let b_hat = (cluster.leader_shard().max_row_norm_sq() * 1.2).max(1e-12);
+            let s2 = 1.0 / b_hat;
+            let matvec = |v: &[f64]| -> Result<Vec<f64>> {
+                let mut out = cluster.dist_matvec(v)?;
+                scale(&mut out, s2);
+                Ok(out)
+            };
+
+            // leader-local spectral estimates (free, no communication)
+            let local_cov = cluster.leader_shard().empirical_covariance().scale(s2);
+            let mu = match cfg.mu {
+                MuStrategy::Fixed(m) => m,
+                MuStrategy::Theorem6 => Preconditioner::theorem6_mu(d, n, cfg.p),
+                MuStrategy::SplitEstimate => split_mu_estimate(cluster.leader_shard(), s2),
+            };
+            let pc = Preconditioner::new(&local_cov, mu);
+            let lambda1_est = pc.lambda1_local();
+            let delta_tilde = (pc.gap_local() * 0.5).max(1e-12);
+
+            // Algorithm 1 line 2: iteration caps
+            let m1 = cfg
+                .m1_override
+                .unwrap_or_else(|| (8.0 * (144.0 * d as f64 / (cfg.p * cfg.p)).ln()).ceil() as usize);
+            let m2 = cfg.m2_override.unwrap_or_else(|| {
+                (1.5 * (18.0 * d as f64 / (cfg.p * cfg.p * cfg.eps)).ln()).ceil() as usize
+            });
+            let eps_tilde = (cfg.eps * delta_tilde / 64.0).clamp(1e-13, 1e-4);
+
+            // warm start (paper's remark) or random
+            let mut w = if cfg.random_init {
+                let mut rng = crate::rng::Pcg64::new(cfg.seed);
+                let mut v = rng.gaussian_vec(d);
+                normalize(&mut v);
+                v
+            } else {
+                pc.local_top_eigvec()
+            };
+
+            let mut solve_count = 0usize;
+            let mut inner_iters_total = 0usize;
+
+            // one approximate inverse application:
+            // solve (lambda I - X') z = rhs to relative residual `rel_tol`
+            let mut solve = |lambda: f64,
+                             rhs: &[f64],
+                             x0: Option<&[f64]>,
+                             rel_tol: f64|
+             -> Result<(Vec<f64>, SolveReport)> {
+                let tol = rel_tol * crate::linalg::vec_ops::norm(rhs).max(1e-300);
+                let apply = |v: &[f64]| -> Vec<f64> {
+                    let mv = matvec(v).expect("distributed matvec failed");
+                    let mut out = v.to_vec();
+                    scale(&mut out, lambda);
+                    axpy(&mut out, -1.0, &mv);
+                    out
+                };
+                let (z, rep) = match cfg.solver {
+                    SniSolver::Pcg => pcg(
+                        apply,
+                        |r, out| pc.apply_inv(lambda, r, out),
+                        rhs,
+                        x0,
+                        tol,
+                        cfg.max_inner,
+                    ),
+                    SniSolver::PlainCg => {
+                        pcg(apply, |r, out| out.copy_from_slice(r), rhs, x0, tol, cfg.max_inner)
+                    }
+                    SniSolver::Agd => {
+                        // explicit Eq.-(13) transform: H = C^{-1/2} M C^{-1/2}
+                        let mut c_rhs = vec![0.0; d];
+                        let mut h_apply = |y: &[f64]| -> Vec<f64> {
+                            let mut u = vec![0.0; d];
+                            pc.apply_inv_sqrt(lambda, y, &mut u);
+                            let mu_v = apply(&u);
+                            let mut out = vec![0.0; d];
+                            pc.apply_inv_sqrt(lambda, &mu_v, &mut out);
+                            out
+                        };
+                        pc.apply_inv_sqrt(lambda, rhs, &mut c_rhs);
+                        let kappa = pc.kappa_bound(lambda, lambda1_est);
+                        // Lemma 6: beta = 1, alpha = 1/kappa
+                        let (y, rep) =
+                            agd(&mut h_apply, &c_rhs, None, 1.0 / kappa, 1.0, tol, cfg.max_inner);
+                        let mut z = vec![0.0; d];
+                        pc.apply_inv_sqrt(lambda, &y, &mut z);
+                        (z, rep)
+                    }
+                };
+                solve_count += 1;
+                inner_iters_total += rep.iters;
+                Ok((z, rep))
+            };
+
+            // ---- phase 1: shift search (repeat loop) --------------------
+            // Coarse solves: the shift estimates only need ~1% accuracy.
+            //
+            // Initial shift: Algorithm 1 uses `lambda_(0) = 1 + delta_tilde`
+            // (valid since b = 1 implies lambda_1 <= 1). When
+            // `n = Omega(delta^-2 ln(d/p))` the paper's remark licenses
+            // estimating `lambda_1(Xhat)` from machine 1 alone, so we start
+            // just above the local estimate (with a `mu`-sized margin for
+            // the local/pooled deviation) instead of walking the shift all
+            // the way down from 1 — same guarantees, far fewer rounds.
+            let phase1_tol = 1e-2;
+            let mut lambda =
+                (lambda1_est + delta_tilde.max(2.0 * mu)).min(1.0 + delta_tilde);
+            if lambda <= lambda1_est {
+                lambda = lambda1_est + delta_tilde; // defensive
+            }
+            let mut outer = 0usize;
+            let mut warm: Option<Vec<f64>> = None;
+            loop {
+                outer += 1;
+                // inverse power iterations with early exit (cap m1)
+                for _t in 0..m1 {
+                    let (z, _rep) = solve(lambda, &w, warm.as_deref(), phase1_tol)?;
+                    let mut znorm = z.clone();
+                    let nz = normalize(&mut znorm);
+                    if nz == 0.0 {
+                        bail!("inverse power iterate vanished");
+                    }
+                    let drift = alignment_error(&znorm, &w);
+                    warm = Some(z);
+                    w = znorm;
+                    if drift < 1e-4 {
+                        break;
+                    }
+                }
+                // shift update: v_s ~= M^{-1} w_s, w^T v ~= 1/(lambda - lambda_1)
+                let (v_s, _rep) = solve(lambda, &w, warm.as_deref(), 1e-3)?;
+                let wv = dot(&w, &v_s) - eps_tilde;
+                let delta_s = if wv > 0.0 { 0.5 / wv } else { delta_tilde };
+                if delta_s <= delta_tilde || outer >= cfg.max_outer {
+                    break; // lambda - lambda_1(Xhat) = Theta(delta_hat)
+                }
+                lambda -= 0.5 * delta_s;
+                if lambda <= lambda1_est + 0.25 * delta_tilde {
+                    lambda = lambda1_est + 0.25 * delta_tilde;
+                    break;
+                }
+                // shift moved: previous solution no longer a valid warm start scale
+                warm = None;
+            }
+
+            // ---- phase 2: final inverse power iterations ----------------
+            let matvecs_phase1 = cluster.stats().matvec_products;
+            let lambda_f = lambda;
+            // Inexact inverse iteration: the per-solve *relative* accuracy
+            // only needs to track the iterate's own convergence — the
+            // attainable alignment error scales with the solve error, so a
+            // `sqrt(eps)`-floor suffices for a final error of `eps`.
+            // Anneal the tolerance with the measured drift instead of
+            // paying a machine-precision solve on every iteration.
+            let tol_floor = (cfg.eps.sqrt() * 0.03).clamp(1e-12, 1e-2);
+            let mut phase2_tol: f64 = 1e-2;
+            let mut final_iters = 0usize;
+            let mut warm: Option<Vec<f64>> = None;
+            for _t in 0..m2 {
+                let (z, _rep) = solve(lambda_f, &w, warm.as_deref(), phase2_tol)?;
+                let mut znorm = z.clone();
+                let nz = normalize(&mut znorm);
+                final_iters += 1;
+                if nz == 0.0 {
+                    bail!("inverse power iterate vanished in final phase");
+                }
+                let drift = alignment_error(&znorm, &w);
+                warm = Some(z);
+                w = znorm;
+                // exit only once the solves have annealed to full accuracy
+                // AND the iterate has stopped moving — a small drift under
+                // coarse solves is not yet evidence of convergence.
+                if drift < (cfg.eps * 1e-2).max(1e-16) && phase2_tol <= tol_floor * 1.01 {
+                    break;
+                }
+                phase2_tol = (0.1 * drift).clamp(tol_floor, 1e-2);
+            }
+
+            let mut info = BTreeMap::new();
+            info.insert("outer_rounds".into(), outer as f64);
+            info.insert("final_iters".into(), final_iters as f64);
+            info.insert("solves".into(), solve_count as f64);
+            info.insert("inner_iters_total".into(), inner_iters_total as f64);
+            info.insert("lambda_f".into(), lambda_f);
+            info.insert("mu".into(), mu);
+            info.insert("delta_tilde".into(), delta_tilde);
+            info.insert("m1".into(), m1 as f64);
+            info.insert("m2".into(), m2 as f64);
+            info.insert("b_hat".into(), b_hat);
+            info.insert("matvecs_phase1".into(), matvecs_phase1 as f64);
+            info.insert(
+                "matvecs_phase2".into(),
+                (cluster.stats().matvec_products - matvecs_phase1) as f64,
+            );
+            Ok((w, info))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::test_support::*;
+    use super::super::{CentralizedErm, DistributedLanczos};
+    use super::*;
+    use crate::coordinator::Algorithm;
+    use crate::linalg::vec_ops::alignment_error;
+
+    #[test]
+    fn sni_matches_centralized_erm() {
+        let (c, _) = test_cluster(4, 200, 6, 81);
+        let cen = CentralizedErm.run(&c).unwrap();
+        let sni = ShiftInvert::default().run(&c).unwrap();
+        let err = alignment_error(&sni.w, &cen.w);
+        assert!(err < 1e-6, "S&I should find the pooled eigenvector, err={err:.3e}");
+    }
+
+    #[test]
+    fn sni_all_solvers_agree() {
+        let (c, _) = test_cluster(4, 150, 5, 83);
+        let cen = CentralizedErm.run(&c).unwrap();
+        for solver in [SniSolver::Pcg, SniSolver::PlainCg, SniSolver::Agd] {
+            let est = ShiftInvert::with_solver(solver).run(&c).unwrap();
+            let err = alignment_error(&est.w, &cen.w);
+            assert!(err < 1e-4, "{solver:?} err={err:.3e}");
+        }
+    }
+
+    /// Spread (linear-decay) spectrum: eigenvalues do not cluster, so CG
+    /// cannot converge superlinearly and the Lemma-6 bound is the binding
+    /// constraint — the regime where preconditioning pays.
+    fn spread_cluster(
+        m: usize,
+        n: usize,
+        d: usize,
+        delta: f64,
+        seed: u64,
+    ) -> crate::cluster::Cluster {
+        let mut sigma = vec![1.0, 1.0 - delta];
+        for j in 2..d {
+            sigma.push((1.0 - delta) * (1.0 - (j as f64 - 1.0) / d as f64));
+        }
+        let dist = crate::data::CovModel::axis_aligned(sigma).gaussian();
+        crate::cluster::Cluster::generate(&dist, m, n, seed).unwrap()
+    }
+
+    #[test]
+    fn preconditioning_reduces_rounds() {
+        // spread spectrum + large n (small mu): preconditioned solves
+        // need fewer distributed matvecs (Lemma 6)
+        let c = spread_cluster(4, 6000, 48, 0.05, 87);
+        let mk = |solver| {
+            ShiftInvert::new(SniConfig { solver, random_init: true, ..Default::default() })
+                .run(&c)
+                .unwrap()
+        };
+        let pcg_est = mk(SniSolver::Pcg);
+        let cg_est = mk(SniSolver::PlainCg);
+        // End-to-end the effect is muted (late solves have near-eigenvector
+        // right-hand sides that plain CG resolves in O(1) iterations — see
+        // EXPERIMENTS.md E7); require PCG to be at worst marginally more
+        // expensive here and strictly better per worst-case solve below.
+        assert!(
+            pcg_est.comm.matvec_products <= cg_est.comm.matvec_products * 3 / 2,
+            "pcg {} !<= 1.5x cg {}",
+            pcg_est.comm.matvec_products,
+            cg_est.comm.matvec_products
+        );
+    }
+
+    #[test]
+    fn preconditioner_advantage_grows_with_n() {
+        // Lemma 6: kappa <= 1 + 2 mu / (lambda - lambda_1), mu ~ n^{-1/2}
+        // -> per-solve iteration count shrinks with n while plain CG's
+        // stays put. Checked at the solver level on one explicit system.
+        use crate::coordinator::precond::Preconditioner;
+        use crate::coordinator::solvers::cg::pcg as pcg_solve;
+        use crate::data::Distribution;
+        let d = 80;
+        let m = 5;
+        let mut iters_small = 0;
+        let mut iters_large = 0;
+        for (n, slot) in [(500usize, &mut iters_small), (8000, &mut iters_large)] {
+            let delta = 0.05;
+            let mut sigma = vec![1.0, 1.0 - delta];
+            for j in 2..d {
+                sigma.push((1.0 - delta) * (1.0 - (j as f64 - 1.0) / d as f64));
+            }
+            let dist = crate::data::CovModel::axis_aligned(sigma).gaussian();
+            let mut rng = crate::rng::Pcg64::new(11);
+            let shards: Vec<_> = (0..m).map(|_| dist.sample_shard(&mut rng, n)).collect();
+            let mut pooled = crate::linalg::Matrix::zeros(d, d);
+            for s in &shards {
+                pooled.axpy_mat(1.0 / m as f64, s.empirical_covariance());
+            }
+            let eig = crate::linalg::SymEigen::new(&pooled);
+            let lambda = eig.lambda1() + 0.25 * eig.eigengap();
+            let local = shards[0].empirical_covariance().clone();
+            let mu = 2.0 * pooled.sub(&local).sym_spectral_norm();
+            let pc = Preconditioner::new(&local, mu);
+            let mut mmat = crate::linalg::Matrix::identity(d).scale(lambda);
+            mmat.axpy_mat(-1.0, &pooled);
+            let mut rhs = rng.gaussian_vec(d);
+            crate::linalg::vec_ops::normalize(&mut rhs);
+            let (_, rep) = pcg_solve(
+                |v| mmat.matvec(v),
+                |r, out| pc.apply_inv(lambda, r, out),
+                &rhs,
+                None,
+                1e-9,
+                20_000,
+            );
+            *slot = rep.iters;
+        }
+        assert!(
+            iters_large < iters_small,
+            "PCG iters should shrink with n: n=500 -> {iters_small}, n=8000 -> {iters_large}"
+        );
+    }
+
+    #[test]
+    fn matvec_count_is_round_count() {
+        let (c, _) = test_cluster(3, 100, 5, 89);
+        let est = ShiftInvert::default().run(&c).unwrap();
+        assert_eq!(est.comm.rounds, est.comm.matvec_products);
+        assert!(est.comm.rounds > 0);
+    }
+
+    #[test]
+    fn info_diagnostics_complete() {
+        let (c, _) = test_cluster(3, 100, 4, 91);
+        let est = ShiftInvert::default().run(&c).unwrap();
+        for key in ["outer_rounds", "final_iters", "solves", "lambda_f", "mu", "delta_tilde"] {
+            assert!(est.info.contains_key(key), "missing info key {key}");
+        }
+        assert!(est.info["lambda_f"] > 0.0);
+    }
+
+    #[test]
+    fn random_init_also_converges() {
+        let (c, _) = test_cluster(4, 150, 5, 93);
+        let cen = CentralizedErm.run(&c).unwrap();
+        let cfg = SniConfig { random_init: true, ..Default::default() };
+        let est = ShiftInvert::new(cfg).run(&c).unwrap();
+        assert!(alignment_error(&est.w, &cen.w) < 1e-5);
+    }
+
+    #[test]
+    fn split_mu_tracks_sample_size() {
+        // mu estimate should shrink ~1/sqrt(n)
+        let dist = crate::data::CovModel::paper_fig1(8, 5).gaussian();
+        let mut rng = crate::rng::Pcg64::new(7);
+        let small = crate::data::Distribution::sample_shard(&dist, &mut rng, 200);
+        let large = crate::data::Distribution::sample_shard(&dist, &mut rng, 3200);
+        let mu_small = split_mu_estimate(&small, 1.0);
+        let mu_large = split_mu_estimate(&large, 1.0);
+        let ratio = mu_small / mu_large;
+        assert!(ratio > 2.0, "mu should shrink with n: {mu_small:.3e} vs {mu_large:.3e}");
+    }
+
+    #[test]
+    fn competitive_with_lanczos_at_large_n() {
+        // Theorem 6's regime: large n per machine -> S&I's matvec count is
+        // in the same ballpark as Lanczos (and scales *down* with n, which
+        // Lanczos's does not — see bench_scaling for the full sweep).
+        let (c, _) = fig1_cluster(4, 2000, 24, 95);
+        let cen = CentralizedErm.run(&c).unwrap();
+        let lan = DistributedLanczos { tol: 1e-10, ..Default::default() }.run(&c).unwrap();
+        let sni = ShiftInvert::new(SniConfig { eps: 1e-6, ..Default::default() }).run(&c).unwrap();
+        assert!(alignment_error(&lan.w, &cen.w) < 1e-5);
+        assert!(alignment_error(&sni.w, &cen.w) < 1e-5);
+        assert!(
+            sni.comm.matvec_products <= 8 * lan.comm.matvec_products,
+            "sni {} vs lanczos {}",
+            sni.comm.matvec_products,
+            lan.comm.matvec_products
+        );
+    }
+}

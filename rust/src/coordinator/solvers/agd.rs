@@ -1,0 +1,130 @@
+//! Nesterov's accelerated gradient method for strongly convex quadratics.
+//!
+//! Lemma 7 allows either CG or Nesterov's method; we carry both so the
+//! `bench_solvers` ablation can compare them (and plain GD) at equal
+//! communication cost per iteration. For the quadratic
+//! `F(x) = x^T A x / 2 - b^T x` the gradient is `A x - b`, so one
+//! iteration costs exactly one operator application = one round.
+
+use crate::linalg::vec_ops::{axpy, norm, sub};
+
+use super::SolveReport;
+
+/// Constant-momentum AGD for `A x = b` with `alpha I <= A <= beta I`.
+/// Momentum `(sqrt(kappa)-1)/(sqrt(kappa)+1)`, step `1/beta`.
+pub fn agd(
+    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    alpha: f64,
+    beta: f64,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, SolveReport) {
+    assert!(alpha > 0.0 && beta >= alpha, "need 0 < alpha <= beta");
+    let d = b.len();
+    let kappa = beta / alpha;
+    let momentum = (kappa.sqrt() - 1.0) / (kappa.sqrt() + 1.0);
+    let step = 1.0 / beta;
+
+    let mut x = x0.map(|x| x.to_vec()).unwrap_or_else(|| vec![0.0; d]);
+    let mut y = x.clone();
+    let mut x_prev = x.clone();
+    let mut iters = 0usize;
+    let mut residual = f64::INFINITY;
+
+    while iters < max_iters {
+        // gradient at y: A y - b  (one operator application)
+        let ay = apply(&y);
+        iters += 1;
+        let grad = sub(&ay, b);
+        residual = norm(&grad);
+        if residual <= tol {
+            x = y;
+            return (x, SolveReport { iters, residual, converged: true });
+        }
+        x_prev.copy_from_slice(&x);
+        x.copy_from_slice(&y);
+        axpy(&mut x, -step, &grad);
+        // y = x + momentum (x - x_prev)
+        y.copy_from_slice(&x);
+        for i in 0..d {
+            y[i] += momentum * (x[i] - x_prev[i]);
+        }
+    }
+    (x, SolveReport { iters, residual, converged: residual <= tol })
+}
+
+/// Plain gradient descent (ablation baseline): step `1/beta`.
+pub fn gd(
+    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    beta: f64,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, SolveReport) {
+    let d = b.len();
+    let step = 1.0 / beta;
+    let mut x = x0.map(|x| x.to_vec()).unwrap_or_else(|| vec![0.0; d]);
+    let mut iters = 0usize;
+    let mut residual = f64::INFINITY;
+    while iters < max_iters {
+        let ax = apply(&x);
+        iters += 1;
+        let grad = sub(&ax, b);
+        residual = norm(&grad);
+        if residual <= tol {
+            return (x, SolveReport { iters, residual, converged: true });
+        }
+        axpy(&mut x, -step, &grad);
+    }
+    (x, SolveReport { iters, residual, converged: residual <= tol })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn fixture() -> (Matrix, Vec<f64>, f64, f64) {
+        let diag: Vec<f64> = vec![1.0, 2.0, 5.0, 10.0];
+        let a = Matrix::diag(&diag);
+        let b = vec![1.0; 4];
+        (a, b, 1.0, 10.0)
+    }
+
+    #[test]
+    fn agd_converges() {
+        let (a, b, alpha, beta) = fixture();
+        let (x, rep) = agd(|v| a.matvec(v), &b, None, alpha, beta, 1e-10, 2000);
+        assert!(rep.converged);
+        for i in 0..4 {
+            assert!((x[i] - b[i] / a.get(i, i)).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn gd_converges_but_slower_than_agd() {
+        let n = 32;
+        let diag: Vec<f64> = (0..n).map(|i| 1.0 + 63.0 * i as f64 / (n - 1) as f64).collect();
+        let a = Matrix::diag(&diag);
+        let b = vec![1.0; n];
+        let (_, r_agd) = agd(|v| a.matvec(v), &b, None, 1.0, 64.0, 1e-8, 100_000);
+        let (_, r_gd) = gd(|v| a.matvec(v), &b, None, 64.0, 1e-8, 100_000);
+        assert!(r_agd.converged && r_gd.converged);
+        assert!(
+            r_agd.iters < r_gd.iters,
+            "agd {} !< gd {}",
+            r_agd.iters,
+            r_gd.iters
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn agd_rejects_bad_constants() {
+        let (a, b, _, _) = fixture();
+        let _ = agd(|v| a.matvec(v), &b, None, 0.0, 1.0, 1e-8, 10);
+    }
+}

@@ -1,0 +1,143 @@
+//! Conjugate gradients, plain and preconditioned.
+//!
+//! The preconditioned variant is Algorithm 2 + Lemma 7 in solver form:
+//! PCG with the SPD preconditioner `P ~= M^{-1}` generates the same
+//! iterates as plain CG on `C^{-1/2} M C^{-1/2}` (Problem (13)), so its
+//! iteration count obeys the `sqrt(kappa) = sqrt(1 + 2 mu / (lambda -
+//! lambda_1))` bound of Lemma 6 while each iteration still costs exactly
+//! one distributed matvec.
+
+use crate::linalg::vec_ops::{axpy, dot, norm, scale};
+
+use super::SolveReport;
+
+/// Plain CG for SPD `A x = b`. `apply` must be a symmetric
+/// positive-definite operator. Stops when `||b - A x|| <= tol`.
+pub fn cg(
+    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    x0: Option<&[f64]>,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, SolveReport) {
+    pcg(apply_adapter(&mut apply), |r, out| out.copy_from_slice(r), b, x0, tol, max_iters)
+}
+
+fn apply_adapter<'a>(
+    f: &'a mut impl FnMut(&[f64]) -> Vec<f64>,
+) -> impl FnMut(&[f64]) -> Vec<f64> + 'a {
+    move |v| f(v)
+}
+
+/// Preconditioned CG: `precond(r, out)` writes `P r` with `P` SPD
+/// (e.g. `C^{-1}` applied through the cached eigenbasis of machine 1's
+/// covariance, see [`crate::coordinator::precond`]).
+pub fn pcg(
+    mut apply: impl FnMut(&[f64]) -> Vec<f64>,
+    mut precond: impl FnMut(&[f64], &mut [f64]),
+    b: &[f64],
+    x0: Option<&[f64]>,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, SolveReport) {
+    let d = b.len();
+    let mut x = match x0 {
+        Some(x0) => x0.to_vec(),
+        None => vec![0.0; d],
+    };
+    let mut iters = 0usize;
+
+    // r = b - A x (skip the operator call when x0 = 0)
+    let mut r = if x.iter().all(|&v| v == 0.0) {
+        b.to_vec()
+    } else {
+        let ax = apply(&x);
+        iters += 1;
+        let mut r = b.to_vec();
+        axpy(&mut r, -1.0, &ax);
+        r
+    };
+
+    let mut rnorm = norm(&r);
+    if rnorm <= tol {
+        return (x, SolveReport { iters, residual: rnorm, converged: true });
+    }
+
+    let mut z = vec![0.0; d];
+    precond(&r, &mut z);
+    let mut p = z.clone();
+    let mut rz = dot(&r, &z);
+
+    while iters < max_iters {
+        let ap = apply(&p);
+        iters += 1;
+        let pap = dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            // operator not PD at working precision — bail with current x
+            break;
+        }
+        let alpha = rz / pap;
+        axpy(&mut x, alpha, &p);
+        axpy(&mut r, -alpha, &ap);
+        rnorm = norm(&r);
+        if rnorm <= tol {
+            return (x, SolveReport { iters, residual: rnorm, converged: true });
+        }
+        precond(&r, &mut z);
+        let rz_new = dot(&r, &z);
+        let beta = rz_new / rz;
+        rz = rz_new;
+        // p = z + beta p
+        scale(&mut p, beta);
+        axpy(&mut p, 1.0, &z);
+    }
+    (x, SolveReport { iters, residual: rnorm, converged: rnorm <= tol })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn cg_identity_converges_immediately() {
+        let b = vec![1.0, 2.0, 3.0];
+        let (x, rep) = cg(|v| v.to_vec(), &b, None, 1e-12, 10);
+        assert!(rep.converged);
+        assert!(rep.iters <= 2);
+        for i in 0..3 {
+            assert!((x[i] - b[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cg_exact_in_n_iterations() {
+        // CG terminates in at most n steps in exact arithmetic
+        let a = Matrix::from_vec(3, 3, vec![4., 1., 0., 1., 3., 1., 0., 1., 2.]);
+        let b = vec![1., 0., -1.];
+        let (x, rep) = cg(|v| a.matvec(v), &b, None, 1e-11, 10);
+        assert!(rep.converged);
+        assert!(rep.iters <= 4);
+        let res = crate::linalg::vec_ops::sub(&b, &a.matvec(&x));
+        assert!(norm(&res) < 1e-10);
+    }
+
+    #[test]
+    fn zero_rhs_returns_zero() {
+        let (x, rep) = cg(|v| v.to_vec(), &[0.0, 0.0], None, 1e-12, 10);
+        assert!(rep.converged);
+        assert_eq!(rep.iters, 0);
+        assert_eq!(x, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn respects_max_iters() {
+        let n = 50;
+        let diag: Vec<f64> = (1..=n).map(|i| i as f64).collect();
+        let a = Matrix::diag(&diag);
+        let b = vec![1.0; n];
+        let (_, rep) = cg(|v| a.matvec(v), &b, None, 1e-16, 3);
+        assert!(!rep.converged);
+        assert_eq!(rep.iters, 3);
+    }
+}

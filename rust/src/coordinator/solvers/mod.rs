@@ -1,0 +1,155 @@
+//! Convex quadratic solvers over abstract linear operators.
+//!
+//! Algorithm 1 reduces eigenvector computation to linear systems
+//! `(lambda I - Xhat) z = w` (Problem (12)); in the distributed setting
+//! each operator application costs **one communication round**
+//! (Algorithm 2). These solvers are therefore written against an
+//! `apply: &[f64] -> Vec<f64>` closure so the iteration count *is* the
+//! round count, and support the Lemma-6 preconditioner as an abstract
+//! `precond` closure.
+//!
+//! - [`cg()`] / [`pcg`] — conjugate gradients, plain and preconditioned.
+//!   PCG with SPD preconditioner `C^{-1}` is mathematically equivalent to
+//!   plain CG on the transformed problem
+//!   `C^{-1/2} M C^{-1/2} y = C^{-1/2} w` of Eq. (13).
+//! - [`agd()`] — Nesterov's accelerated gradient for strongly-convex
+//!   quadratics, the paper's alternative solver in Lemma 7 (used by the
+//!   `bench_solvers` ablation).
+
+pub mod agd;
+pub mod cg;
+
+pub use agd::agd;
+pub use cg::{cg, pcg};
+
+/// Result of an iterative solve.
+#[derive(Clone, Debug)]
+pub struct SolveReport {
+    /// Operator applications performed (== communication rounds when the
+    /// operator is the distributed covariance).
+    pub iters: usize,
+    /// Final residual norm `||b - A x||`.
+    pub residual: f64,
+    /// Whether the tolerance was met before `max_iters`.
+    pub converged: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use crate::propcheck::{run, Config};
+
+    /// Shared test fixture: SPD system with known solution.
+    fn spd_system(n: usize, seed: u64) -> (Matrix, Vec<f64>, Vec<f64>) {
+        let mut g = crate::propcheck::Config::default();
+        g.seed = seed;
+        let mut rng = crate::rng::Pcg64::new(seed);
+        let b = Matrix::from_vec(n, n, (0..n * n).map(|_| rng.next_gaussian()).collect());
+        let mut a = b.syrk_t().scale(1.0 / n as f64);
+        a.axpy_mat(1.0, &Matrix::identity(n));
+        let xstar: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let rhs = a.matvec(&xstar);
+        let _ = g;
+        (a, rhs, xstar)
+    }
+
+    #[test]
+    fn cg_solves_spd_system() {
+        let (a, rhs, xstar) = spd_system(12, 1);
+        let (x, rep) = cg(|v| a.matvec(v), &rhs, None, 1e-12, 200);
+        assert!(rep.converged);
+        for i in 0..12 {
+            assert!((x[i] - xstar[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn pcg_with_exact_preconditioner_converges_in_one_iter() {
+        let (a, rhs, _) = spd_system(10, 2);
+        let inv = crate::linalg::SymEigen::new(&a).apply_fn(|x| 1.0 / x);
+        let (x, rep) = pcg(
+            |v| a.matvec(v),
+            |r, out| out.copy_from_slice(&inv.matvec(r)),
+            &rhs,
+            None,
+            1e-10,
+            50,
+        );
+        assert!(rep.converged);
+        assert!(rep.iters <= 2, "exact preconditioner should converge immediately, took {}", rep.iters);
+        let res = crate::linalg::vec_ops::sub(&rhs, &a.matvec(&x));
+        assert!(crate::linalg::vec_ops::norm(&res) < 1e-9);
+    }
+
+    #[test]
+    fn pcg_beats_cg_on_ill_conditioned_system() {
+        // diag(1..1000) system; Jacobi preconditioner kills it instantly
+        let n = 64;
+        let diag: Vec<f64> = (0..n).map(|i| 1.0 + (i as f64 / (n - 1) as f64) * 999.0).collect();
+        let a = Matrix::diag(&diag);
+        let rhs = vec![1.0; n];
+        let (_, rep_plain) = cg(|v| a.matvec(v), &rhs, None, 1e-10, 500);
+        let (_, rep_pre) = pcg(
+            |v| a.matvec(v),
+            |r, out| {
+                for i in 0..n {
+                    out[i] = r[i] / diag[i];
+                }
+            },
+            &rhs,
+            None,
+            1e-10,
+            500,
+        );
+        assert!(rep_pre.iters < rep_plain.iters, "pcg {} !< cg {}", rep_pre.iters, rep_plain.iters);
+    }
+
+    #[test]
+    fn agd_solves_spd_system() {
+        let (a, rhs, xstar) = spd_system(8, 3);
+        let eig = crate::linalg::SymEigen::new(&a);
+        let beta = eig.lambda1();
+        let alpha = *eig.values().last().unwrap();
+        let (x, rep) = agd(|v| a.matvec(v), &rhs, None, alpha, beta, 1e-10, 5000);
+        assert!(rep.converged, "agd residual {}", rep.residual);
+        for i in 0..8 {
+            assert!((x[i] - xstar[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn cg_iteration_count_scales_with_sqrt_condition() {
+        // kappa = 100 -> ~ sqrt(100)*log(1/eps) iterations, much less than n
+        let n = 256;
+        let diag: Vec<f64> = (0..n).map(|i| 1.0 + 99.0 * (i as f64) / (n - 1) as f64).collect();
+        let a = Matrix::diag(&diag);
+        let rhs = vec![1.0; n];
+        let (_, rep) = cg(|v| a.matvec(v), &rhs, None, 1e-8, 1000);
+        assert!(rep.converged);
+        assert!(rep.iters < 120, "CG took {} iterations", rep.iters);
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let (a, rhs, xstar) = spd_system(16, 4);
+        let near: Vec<f64> = xstar.iter().map(|x| x + 1e-6).collect();
+        let (_, cold) = cg(|v| a.matvec(v), &rhs, None, 1e-10, 200);
+        let (_, warm) = cg(|v| a.matvec(v), &rhs, Some(&near), 1e-10, 200);
+        assert!(warm.iters <= cold.iters);
+    }
+
+    #[test]
+    fn prop_cg_residual_below_tolerance() {
+        run(Config::default().cases(24), "cg residual", |g| {
+            let n = g.usize_in(2, 20);
+            let mut a = g.psd_matrix(n, 1.0);
+            a.axpy_mat(0.5, &Matrix::identity(n));
+            let rhs = g.gaussian_vec(n);
+            let (x, rep) = cg(|v| a.matvec(v), &rhs, None, 1e-9, 10 * n + 50);
+            assert!(rep.converged, "n={n} residual={}", rep.residual);
+            let res = crate::linalg::vec_ops::sub(&rhs, &a.matvec(&x));
+            assert!(crate::linalg::vec_ops::norm(&res) <= 1e-8 * (1.0 + crate::linalg::vec_ops::norm(&rhs)));
+        });
+    }
+}

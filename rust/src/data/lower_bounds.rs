@@ -1,0 +1,209 @@
+//! The appendix's lower-bound constructions.
+//!
+//! - [`Thm3Dist`] (Appendix A.1): `x = e_1 + (eps_1, eps_2)`,
+//!   `eps_i ~ U{-1,+1}` over `R^2`. Population covariance `diag(2, 1)`,
+//!   gap `delta = 1`, `v_1 = e_1`. Naive averaging of *unbiased* local
+//!   eigenvectors stays at `Omega(1/n)` error for every `m`.
+//! - [`Lemma8Dist`]: `x = sqrt(1+delta) e_1 + sigma e_2`,
+//!   `sigma ~ U{-1,+1}` — the variance part `Omega(1/(delta^2 m n))` of
+//!   the Thm 5 lower bound.
+//! - [`Thm5Dist`] (Lemma 9): `x = sqrt(1+delta) e_1 + xi e_2` with the
+//!   *asymmetric* `xi` (`sqrt 2` w.p. 1/3, `-1/sqrt 2` w.p. 2/3,
+//!   `E[xi^3] = 1/sqrt 2 != 0`) — the bias part
+//!   `Omega(1/(delta^4 n^2))` that sign-fixed averaging cannot beat.
+
+use crate::rng::Pcg64;
+
+use super::Distribution;
+
+const E1: [f64; 2] = [1.0, 0.0];
+
+/// Theorem 3 construction (naive-averaging failure).
+#[derive(Clone, Debug, Default)]
+pub struct Thm3Dist;
+
+impl Distribution for Thm3Dist {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn sample_into(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        out[0] = 1.0 + rng.next_rademacher();
+        out[1] = rng.next_rademacher();
+    }
+
+    fn v1(&self) -> &[f64] {
+        &E1
+    }
+
+    fn eigengap(&self) -> f64 {
+        1.0
+    }
+
+    fn lambda1(&self) -> f64 {
+        2.0
+    }
+
+    fn norm_bound_sq(&self) -> f64 {
+        5.0
+    }
+}
+
+/// Lemma 8 construction: symmetric second coordinate, tunable gap.
+#[derive(Clone, Debug)]
+pub struct Lemma8Dist {
+    delta: f64,
+}
+
+impl Lemma8Dist {
+    pub fn new(delta: f64) -> Self {
+        assert!((0.0..=1.0).contains(&delta) && delta > 0.0);
+        Lemma8Dist { delta }
+    }
+}
+
+impl Distribution for Lemma8Dist {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn sample_into(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        out[0] = (1.0 + self.delta).sqrt();
+        out[1] = rng.next_rademacher();
+    }
+
+    fn v1(&self) -> &[f64] {
+        &E1
+    }
+
+    fn eigengap(&self) -> f64 {
+        self.delta
+    }
+
+    fn lambda1(&self) -> f64 {
+        1.0 + self.delta
+    }
+
+    fn norm_bound_sq(&self) -> f64 {
+        2.0 + self.delta
+    }
+}
+
+/// Lemma 9 construction (Theorem 5): asymmetric third moment.
+#[derive(Clone, Debug)]
+pub struct Thm5Dist {
+    delta: f64,
+}
+
+impl Thm5Dist {
+    pub fn new(delta: f64) -> Self {
+        assert!((0.0..=1.0).contains(&delta) && delta > 0.0);
+        Thm5Dist { delta }
+    }
+
+    pub fn delta(&self) -> f64 {
+        self.delta
+    }
+}
+
+impl Distribution for Thm5Dist {
+    fn dim(&self) -> usize {
+        2
+    }
+
+    fn sample_into(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        out[0] = (1.0 + self.delta).sqrt();
+        out[1] = rng.next_asymmetric_xi();
+    }
+
+    fn v1(&self) -> &[f64] {
+        &E1
+    }
+
+    fn eigengap(&self) -> f64 {
+        self.delta
+    }
+
+    fn lambda1(&self) -> f64 {
+        1.0 + self.delta
+    }
+
+    fn norm_bound_sq(&self) -> f64 {
+        // (1+delta) + xi^2 <= 1 + delta + 2
+        3.0 + self.delta
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+
+    fn empirical_cov(dist: &dyn Distribution, n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let shard = dist.sample_shard(&mut rng, n);
+        shard.empirical_covariance().clone()
+    }
+
+    #[test]
+    fn thm3_population_covariance() {
+        let c = empirical_cov(&Thm3Dist, 400_000, 1);
+        assert!((c.get(0, 0) - 2.0).abs() < 0.02);
+        assert!((c.get(1, 1) - 1.0).abs() < 0.02);
+        assert!(c.get(0, 1).abs() < 0.02);
+    }
+
+    #[test]
+    fn thm5_population_covariance() {
+        let d = Thm5Dist::new(0.3);
+        let c = empirical_cov(&d, 400_000, 2);
+        assert!((c.get(0, 0) - 1.3).abs() < 0.02);
+        assert!((c.get(1, 1) - 1.0).abs() < 0.02);
+        assert!(c.get(0, 1).abs() < 0.02);
+    }
+
+    #[test]
+    fn lemma8_covariance_structure() {
+        let d = Lemma8Dist::new(0.5);
+        let c = empirical_cov(&d, 200_000, 3);
+        assert!((c.get(0, 0) - 1.5).abs() < 0.02);
+        assert!((c.get(1, 1) - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn empirical_structure_matches_proof() {
+        // The Thm 3 proof: Xhat = [[2, y_n], [y_n, 1]] in expectation
+        // structure — diag entries are exactly 2 and 1 + o(1) since
+        // (1+eps)^2 averages to 2 and eps^2 = 1 deterministically.
+        let mut rng = Pcg64::new(4);
+        let shard = Thm3Dist.sample_shard(&mut rng, 1000);
+        let c = shard.empirical_covariance();
+        // (1,1) entry is exactly 1: eps_2^2 = 1 always
+        assert!((c.get(1, 1) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn norm_bounds_hold() {
+        let dists: Vec<Box<dyn Distribution>> = vec![
+            Box::new(Thm3Dist),
+            Box::new(Lemma8Dist::new(0.4)),
+            Box::new(Thm5Dist::new(0.4)),
+        ];
+        let mut rng = Pcg64::new(5);
+        let mut buf = [0.0; 2];
+        for d in &dists {
+            let b = d.norm_bound_sq();
+            for _ in 0..5000 {
+                d.sample_into(&mut rng, &mut buf);
+                let nsq = buf[0] * buf[0] + buf[1] * buf[1];
+                assert!(nsq <= b + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_delta_rejected() {
+        let _ = Thm5Dist::new(0.0);
+    }
+}

@@ -1,0 +1,92 @@
+//! Data layer: the paper's synthetic distributions and per-machine shards.
+//!
+//! - [`Distribution`] — trait for i.i.d. samplers with known population
+//!   covariance structure (`v1`, eigengap `delta`, norm bound `b`).
+//! - [`CovModel`] — the §5 experimental covariance model
+//!   `X = U Sigma U^T` with `Sigma = diag(1, 0.8, 0.8*0.9, ...)`, plus its
+//!   gaussian and scaled-uniform samplers (left/right panes of Figure 1).
+//! - [`Thm3Dist`] / [`Thm5Dist`] — the lower-bound constructions from the
+//!   appendix (naive-averaging failure; sign-fixing bias).
+//! - [`Shard`] — one machine's `n x d` sample with its empirical
+//!   covariance kernels (the objects the cluster workers own).
+
+mod cov_model;
+mod lower_bounds;
+mod shard;
+
+pub use cov_model::{CovModel, GaussianCov, ScaledUniformCov};
+pub use lower_bounds::{Lemma8Dist, Thm3Dist, Thm5Dist};
+pub use shard::Shard;
+
+use crate::rng::Pcg64;
+
+/// An i.i.d. data distribution with known population spectral facts.
+///
+/// Implementations must be `Send + Sync`: shard generation fans out across
+/// worker threads.
+pub trait Distribution: Send + Sync {
+    /// Ambient dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Draw one sample into `out` (`out.len() == dim()`).
+    fn sample_into(&self, rng: &mut Pcg64, out: &mut [f64]);
+
+    /// Leading population eigenvector `v_1` (unit norm).
+    fn v1(&self) -> &[f64];
+
+    /// Population eigengap `delta = lambda_1 - lambda_2 > 0`.
+    fn eigengap(&self) -> f64;
+
+    /// Leading population eigenvalue `lambda_1`.
+    fn lambda1(&self) -> f64;
+
+    /// Norm bound `b` with `||x||^2 <= b` (up to negligible tail for the
+    /// gaussian case, which the paper's experiments also use).
+    fn norm_bound_sq(&self) -> f64;
+
+    /// Draw a full `n x d` shard.
+    fn sample_shard(&self, rng: &mut Pcg64, n: usize) -> Shard {
+        let d = self.dim();
+        let mut rows = vec![0.0; n * d];
+        for i in 0..n {
+            self.sample_into(rng, &mut rows[i * d..(i + 1) * d]);
+        }
+        Shard::new(n, d, rows)
+    }
+
+    /// The centralized-ERM risk bound of Lemma 1:
+    /// `eps_ERM(p) = 32 b^2 ln(d/p) / (m n delta^2)`.
+    fn eps_erm(&self, m: usize, n: usize, p: f64) -> f64 {
+        let b = self.norm_bound_sq();
+        32.0 * b * b * (self.dim() as f64 / p).ln()
+            / (m as f64 * n as f64 * self.eigengap() * self.eigengap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_ops::norm;
+
+    #[test]
+    fn sample_shard_shapes() {
+        let dist = CovModel::paper_fig1(16, 3).gaussian();
+        let mut rng = Pcg64::new(1);
+        let shard = dist.sample_shard(&mut rng, 10);
+        assert_eq!(shard.n(), 10);
+        assert_eq!(shard.d(), 16);
+        for i in 0..10 {
+            assert!(norm(shard.row(i)) > 0.0);
+        }
+    }
+
+    #[test]
+    fn eps_erm_scales_inverse_mn() {
+        let dist = CovModel::paper_fig1(8, 3).gaussian();
+        let e1 = dist.eps_erm(5, 100, 0.25);
+        let e2 = dist.eps_erm(10, 100, 0.25);
+        let e3 = dist.eps_erm(5, 200, 0.25);
+        assert!((e1 / e2 - 2.0).abs() < 1e-12);
+        assert!((e1 / e3 - 2.0).abs() < 1e-12);
+    }
+}

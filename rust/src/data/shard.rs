@@ -1,0 +1,277 @@
+//! One machine's local sample and its empirical-covariance kernels.
+//!
+//! A shard is the `n x d` row-major sample matrix `A`. The empirical
+//! covariance is `Xhat = A^T A / n`; the two operations the paper's
+//! communication model exposes are
+//!
+//! - `cov_matvec(v) = Xhat v = A^T (A v) / n` — computed *without*
+//!   forming `Xhat` (O(nd) per product), and
+//! - the local leading eigenvector (the machine's ERM solution).
+//!
+//! The Gram matrix is cached after first use (the one-shot estimators and
+//! local eigensolves need it; the iterative algorithms never form it when
+//! `n` is small relative to `d` — see [`Shard::prefer_gram`]).
+
+use std::sync::OnceLock;
+
+use crate::linalg::eigen::SymEigen;
+use crate::linalg::Matrix;
+
+/// Sign convention shared with [`SymEigen::leading`]: entry of largest
+/// magnitude made positive.
+fn canonical_sign(mut v: Vec<f64>) -> Vec<f64> {
+    let mut imax = 0;
+    for (i, x) in v.iter().enumerate() {
+        if x.abs() > v[imax].abs() {
+            imax = i;
+        }
+    }
+    if v[imax] < 0.0 {
+        for x in &mut v {
+            *x = -*x;
+        }
+    }
+    v
+}
+
+/// An `n x d` local dataset (row-major).
+#[derive(Debug)]
+pub struct Shard {
+    rows: Matrix,
+    gram: OnceLock<Matrix>,
+}
+
+impl Clone for Shard {
+    fn clone(&self) -> Self {
+        Shard { rows: self.rows.clone(), gram: OnceLock::new() }
+    }
+}
+
+impl Shard {
+    pub fn new(n: usize, d: usize, data: Vec<f64>) -> Shard {
+        assert!(n > 0 && d > 0, "empty shard");
+        Shard { rows: Matrix::from_vec(n, d, data), gram: OnceLock::new() }
+    }
+
+    pub fn from_matrix(rows: Matrix) -> Shard {
+        Shard { rows, gram: OnceLock::new() }
+    }
+
+    /// Number of local samples `n`.
+    pub fn n(&self) -> usize {
+        self.rows.rows()
+    }
+
+    /// Dimension `d`.
+    pub fn d(&self) -> usize {
+        self.rows.cols()
+    }
+
+    /// Sample `i` as a slice.
+    pub fn row(&self, i: usize) -> &[f64] {
+        self.rows.row(i)
+    }
+
+    /// The raw sample matrix.
+    pub fn matrix(&self) -> &Matrix {
+        &self.rows
+    }
+
+    /// Empirical covariance `Xhat_i = A^T A / n` (cached).
+    pub fn empirical_covariance(&self) -> &Matrix {
+        self.gram.get_or_init(|| {
+            let mut g = self.rows.syrk_t();
+            g.scale_mut(1.0 / self.n() as f64);
+            g
+        })
+    }
+
+    /// Whether the cached-Gram path is cheaper for repeated matvecs:
+    /// forming `Xhat` costs `O(n d^2)` once and `O(d^2)` per product vs
+    /// `O(n d)` per product streaming.
+    pub fn prefer_gram(&self, expected_products: usize) -> bool {
+        let (n, d) = (self.n() as f64, self.d() as f64);
+        let stream = expected_products as f64 * 2.0 * n * d;
+        let gram = n * d * d / 2.0 + expected_products as f64 * d * d;
+        gram < stream
+    }
+
+    /// `Xhat v` streaming the rows: `A^T (A v) / n`, never forming `Xhat`.
+    /// Allocation-free given a caller scratch buffer of length `n`.
+    pub fn cov_matvec_into(&self, v: &[f64], scratch_n: &mut Vec<f64>, out: &mut [f64]) {
+        let n = self.n();
+        scratch_n.resize(n, 0.0);
+        if let Some(g) = self.gram.get() {
+            // Gram already materialized: O(d^2) product is cheaper.
+            g.matvec_into(v, out);
+            return;
+        }
+        self.rows.matvec_into(v, scratch_n);
+        self.rows.matvec_t_into(scratch_n, out);
+        let inv = 1.0 / n as f64;
+        for o in out.iter_mut() {
+            *o *= inv;
+        }
+    }
+
+    /// Convenience allocating form of [`Shard::cov_matvec_into`].
+    pub fn cov_matvec(&self, v: &[f64]) -> Vec<f64> {
+        let mut scratch = Vec::new();
+        let mut out = vec![0.0; self.d()];
+        self.cov_matvec_into(v, &mut scratch, &mut out);
+        out
+    }
+
+    /// Local ERM: eigendecomposition of the empirical covariance.
+    pub fn local_eigen(&self) -> SymEigen {
+        SymEigen::new(self.empirical_covariance())
+    }
+
+    /// Local leading eigenvector (deterministic sign; see
+    /// [`SymEigen::leading`]).
+    ///
+    /// Perf (EXPERIMENTS.md §Perf): the one-shot estimators only need the
+    /// *leading* pair, so this avoids the full `O(d^3)` eigensolve —
+    /// analytic for `d = 2` (the lower-bound constructions), power
+    /// iteration with a residual stop otherwise, falling back to the full
+    /// solver only when the local gap is too small for power iteration to
+    /// certify convergence.
+    pub fn local_top_eigvec(&self) -> Vec<f64> {
+        let g = self.empirical_covariance();
+        let d = self.d();
+        if d == 2 {
+            let v = crate::linalg::eigen2x2::leading_eigvec_2x2(g.get(0, 0), g.get(0, 1), g.get(1, 1));
+            return canonical_sign(vec![v[0], v[1]]);
+        }
+        // power iteration with Rayleigh-residual certification
+        let mut w: Vec<f64> = (0..d).map(|i| 1.0 + (i as f64 * 0.7).sin() * 0.1).collect();
+        crate::linalg::vec_ops::normalize(&mut w);
+        let mut gw = vec![0.0; d];
+        let max_iters = 40 * d.max(64);
+        for it in 0..max_iters {
+            g.matvec_into(&w, &mut gw);
+            let rho = crate::linalg::vec_ops::dot(&w, &gw);
+            // residual ||Gw - rho w||
+            let mut res_sq = 0.0;
+            for i in 0..d {
+                let r = gw[i] - rho * w[i];
+                res_sq += r * r;
+            }
+            let norm_gw = crate::linalg::vec_ops::normalize(&mut gw);
+            if norm_gw == 0.0 {
+                break; // zero matrix: any unit vector is fine
+            }
+            std::mem::swap(&mut w, &mut gw);
+            if res_sq.sqrt() <= 1e-13 * rho.abs().max(1e-300) {
+                return canonical_sign(w);
+            }
+            // plateau without certification (tiny gap): give up early and
+            // use the exact solver rather than burning iterations
+            if it == max_iters - 1 {
+                break;
+            }
+        }
+        self.local_eigen().leading()
+    }
+
+    /// Largest squared row norm — the empirical `b`.
+    pub fn max_row_norm_sq(&self) -> f64 {
+        (0..self.n())
+            .map(|i| crate::linalg::vec_ops::dot(self.row(i), self.row(i)))
+            .fold(0.0, f64::max)
+    }
+
+    /// Rescale all samples by `s` (used to normalize to `b = 1` for the
+    /// Shift-and-Invert algorithm, which the paper assumes w.l.o.g.).
+    pub fn rescaled(&self, s: f64) -> Shard {
+        Shard::from_matrix(self.rows.scale(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_ops::{alignment_error, dot};
+    use crate::rng::Pcg64;
+
+    fn random_shard(n: usize, d: usize, seed: u64) -> Shard {
+        let mut rng = Pcg64::new(seed);
+        Shard::new(n, d, (0..n * d).map(|_| rng.next_gaussian()).collect())
+    }
+
+    #[test]
+    fn empirical_covariance_is_gram_over_n() {
+        let s = random_shard(50, 7, 1);
+        let g = s.empirical_covariance();
+        // check one entry by hand
+        let mut acc = 0.0;
+        for i in 0..50 {
+            acc += s.row(i)[2] * s.row(i)[4];
+        }
+        assert!((g.get(2, 4) - acc / 50.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_matvec_matches_explicit_gram() {
+        let s = random_shard(40, 9, 2);
+        let mut rng = Pcg64::new(3);
+        let v = rng.gaussian_vec(9);
+        let got = s.cov_matvec(&v);
+        let want = s.empirical_covariance().matvec(&v);
+        for i in 0..9 {
+            assert!((got[i] - want[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn cov_matvec_uses_cached_gram_consistently() {
+        let s = random_shard(30, 5, 4);
+        let v = vec![1.0, -1.0, 0.5, 0.0, 2.0];
+        let before = s.cov_matvec(&v); // streaming path
+        let _ = s.empirical_covariance(); // materialize
+        let after = s.cov_matvec(&v); // gram path
+        for i in 0..5 {
+            assert!((before[i] - after[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn local_top_eigvec_solves_erm() {
+        let s = random_shard(200, 6, 5);
+        let v = s.local_top_eigvec();
+        let g = s.empirical_covariance();
+        // Rayleigh quotient of v equals lambda_1
+        let rq = dot(&v, &g.matvec(&v));
+        let eig = s.local_eigen();
+        assert!((rq - eig.lambda1()).abs() < 1e-9);
+        assert!(alignment_error(&v, &eig.eigvec(0)) < 1e-16);
+    }
+
+    #[test]
+    fn rescaled_scales_covariance_quadratically() {
+        let s = random_shard(20, 4, 6);
+        let s2 = s.rescaled(0.5);
+        let g1 = s.empirical_covariance();
+        let g2 = s2.empirical_covariance();
+        assert!(g2.sub(&g1.scale(0.25)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn prefer_gram_crossover() {
+        let s = random_shard(100, 10, 7);
+        assert!(!s.prefer_gram(1)); // one product: streaming wins
+        assert!(s.prefer_gram(1000)); // many products: gram wins
+    }
+
+    #[test]
+    fn max_row_norm_sq_is_max() {
+        let s = Shard::new(2, 2, vec![3.0, 4.0, 1.0, 0.0]);
+        assert!((s.max_row_norm_sq() - 25.0).abs() < 1e-15);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_shard_panics() {
+        let _ = Shard::new(0, 3, vec![]);
+    }
+}

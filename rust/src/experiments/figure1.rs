@@ -1,0 +1,171 @@
+//! E1/E2 — Figure 1: estimation error vs per-machine sample size `n`,
+//! for the five §5 estimators, under the gaussian (left pane) and
+//! scaled-uniform (right pane) distributions.
+//!
+//! Paper parameters: `d = 300`, `m = 25`, `delta = 0.2`, 400 runs,
+//! `n` sweep. All are configurable (`DSPCA_RUNS`, CLI flags) because the
+//! full-size figure takes a while on one box.
+
+use anyhow::Result;
+
+use crate::cluster::OracleSpec;
+use crate::coordinator::{
+    Algorithm, CentralizedErm, NaiveAverage, ProjectionAverage, SignFixedAverage, SingleMachineErm,
+};
+use crate::data::{CovModel, Distribution};
+use crate::util::csv::CsvTable;
+use crate::util::plot::{loglog, Series};
+
+
+
+/// Which §5 data distribution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fig1Dist {
+    Gaussian,
+    ScaledUniform,
+}
+
+#[derive(Clone, Debug)]
+pub struct Fig1Config {
+    pub d: usize,
+    pub m: usize,
+    pub n_list: Vec<usize>,
+    pub runs: usize,
+    pub seed: u64,
+    pub dist: Fig1Dist,
+    pub oracle: OracleSpec,
+}
+
+impl Default for Fig1Config {
+    fn default() -> Self {
+        Fig1Config {
+            d: 300,
+            m: 25,
+            n_list: vec![25, 50, 100, 200, 400, 800],
+            runs: super::runs_from_env(40),
+            seed: 0xf1f1,
+            dist: Fig1Dist::Gaussian,
+            oracle: OracleSpec::Native,
+        }
+    }
+}
+
+/// The five estimator columns of Figure 1, in plot order.
+pub const ESTIMATORS: [&str; 5] =
+    ["centralized", "single_machine", "naive_avg", "sign_fixed_avg", "projection_avg"];
+
+/// Run the sweep; returns a CSV with columns `n, <estimator means...>,
+/// <estimator sems...>`.
+pub fn run(cfg: &Fig1Config) -> Result<CsvTable> {
+    let model = CovModel::paper_fig1(cfg.d, cfg.seed ^ 0xbeef);
+    let dist: Box<dyn Distribution> = match cfg.dist {
+        Fig1Dist::Gaussian => Box::new(model.gaussian()),
+        Fig1Dist::ScaledUniform => Box::new(model.scaled_uniform()),
+    };
+    let algs: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(CentralizedErm),
+        Box::new(SingleMachineErm),
+        Box::new(NaiveAverage),
+        Box::new(SignFixedAverage),
+        Box::new(ProjectionAverage),
+    ];
+    let mut header = vec!["n".to_string()];
+    header.extend(ESTIMATORS.iter().map(|e| format!("{e}_mean")));
+    header.extend(ESTIMATORS.iter().map(|e| format!("{e}_sem")));
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = CsvTable::new(&header_refs);
+
+    let mut series: Vec<Series> = ESTIMATORS
+        .iter()
+        .zip(['C', '1', 'x', 's', 'p'])
+        .map(|(name, glyph)| Series::new(name, glyph))
+        .collect();
+
+    for &n in &cfg.n_list {
+        // one cluster per run, shared by all five estimators (paired
+        // comparisons, exactly like the paper's per-dataset plots, and 5x
+        // less data generation)
+        let mut errors: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.runs); algs.len()];
+        for r in 0..cfg.runs {
+            let cluster = crate::cluster::Cluster::generate_with(
+                dist.as_ref(),
+                cfg.m,
+                n,
+                cfg.seed ^ (r as u64) << 20,
+                cfg.oracle.clone(),
+            )?;
+            for (k, alg) in algs.iter().enumerate() {
+                errors[k].push(alg.run(&cluster)?.error(dist.v1()));
+            }
+        }
+        let mut row = vec![n as f64];
+        let mut sems = Vec::new();
+        for (k, errs) in errors.iter().enumerate() {
+            let summary = crate::util::stats::Summary::of(errs);
+            row.push(summary.mean);
+            sems.push(summary.sem);
+            series[k].push(n as f64, summary.mean);
+        }
+        row.extend(sems);
+        table.push_nums(&row);
+        crate::info!(
+            "figure1[{:?}] n={n}: cen={:.2e} single={:.2e} naive={:.2e} signfix={:.2e} proj={:.2e}",
+            cfg.dist,
+            row[1],
+            row[2],
+            row[3],
+            row[4],
+            row[5]
+        );
+    }
+    println!(
+        "{}",
+        loglog(&series, 72, 20, &format!("Figure 1 ({:?}): error vs n (m={}, d={})", cfg.dist, cfg.m, cfg.d))
+    );
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Small end-to-end Figure-1 run asserting the paper's qualitative
+    /// ordering: centralized < {sign-fixed, projection} < naive for the
+    /// larger n.
+    #[test]
+    fn figure1_ordering_holds_small() {
+        let cfg = Fig1Config {
+            d: 20,
+            m: 8,
+            n_list: vec![60, 240],
+            runs: 12,
+            seed: 7,
+            dist: Fig1Dist::Gaussian,
+            oracle: OracleSpec::Native,
+        };
+        let table = run(&cfg).unwrap();
+        assert_eq!(table.n_rows(), 2);
+        let rendered = table.render();
+        let last = rendered.lines().last().unwrap();
+        let cells: Vec<f64> = last.split(',').map(|c| c.parse().unwrap()).collect();
+        let (cen, _single, naive, signfix, proj) = (cells[1], cells[2], cells[3], cells[4], cells[5]);
+        assert!(cen < naive, "centralized {cen:.2e} < naive {naive:.2e}");
+        assert!(signfix < naive, "sign-fixed {signfix:.2e} < naive {naive:.2e}");
+        assert!(proj < naive, "projection {proj:.2e} < naive {naive:.2e}");
+    }
+
+    #[test]
+    fn scaled_uniform_variant_runs() {
+        let cfg = Fig1Config {
+            d: 10,
+            m: 4,
+            n_list: vec![50],
+            runs: 4,
+            seed: 9,
+            dist: Fig1Dist::ScaledUniform,
+            oracle: OracleSpec::Native,
+        };
+        let table = run(&cfg).unwrap();
+        assert_eq!(table.n_rows(), 1);
+    }
+}

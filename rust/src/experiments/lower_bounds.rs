@@ -1,0 +1,163 @@
+//! E4/E5 — empirical verification of the lower bounds.
+//!
+//! - Theorem 3: on the appendix-A.1 construction, naive averaging of
+//!   unbiased local eigenvectors does not improve with `m` (the paper's
+//!   Omega(1/n) lower bound; empirically the curve is even *flat* in `n`
+//!   because sign-cancellation events dominate).
+//! - Theorem 5 (Lemma 9): on the asymmetric-`xi` construction, even
+//!   sign-fixed averaging keeps a bias term `Theta(1/(delta^4 n^2))`;
+//!   the measured log-log slope in `n` should approach `-2` once the
+//!   bias dominates the `1/(delta^2 m n)` variance term (large `m`).
+
+use anyhow::Result;
+
+use crate::cluster::OracleSpec;
+use crate::coordinator::{NaiveAverage, SignFixedAverage};
+use crate::data::{Thm3Dist, Thm5Dist};
+use crate::util::csv::CsvTable;
+use crate::util::stats::loglog_slope;
+
+use super::mean_error;
+
+#[derive(Clone, Debug)]
+pub struct LowerBoundConfig {
+    pub n_list: Vec<usize>,
+    pub m_list: Vec<usize>,
+    pub runs: usize,
+    pub seed: u64,
+    /// Eigengap for the Thm-5 construction.
+    pub delta: f64,
+}
+
+impl Default for LowerBoundConfig {
+    fn default() -> Self {
+        LowerBoundConfig {
+            // n >> 1/delta^2 (Taylor regime of Lemma 9) and a large final
+            // m so the Thm-5 bias dominates the variance floor
+            n_list: vec![90, 270, 810],
+            m_list: vec![4, 32, 256],
+            runs: super::runs_from_env(60),
+            seed: 0x10b0,
+            delta: 0.4,
+        }
+    }
+}
+
+/// Theorem-3 sweep: rows `n, err(m) for each m`, plus fitted slopes.
+pub fn run_thm3(cfg: &LowerBoundConfig) -> Result<(CsvTable, Vec<f64>)> {
+    let dist = Thm3Dist;
+    let mut header = vec!["n".to_string()];
+    header.extend(cfg.m_list.iter().map(|m| format!("naive_err_m{m}")));
+    let refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = CsvTable::new(&refs);
+    let mut per_m_errors: Vec<Vec<f64>> = vec![Vec::new(); cfg.m_list.len()];
+    for &n in &cfg.n_list {
+        let mut row = vec![n as f64];
+        for (k, &m) in cfg.m_list.iter().enumerate() {
+            let (summary, _, _) =
+                mean_error(&dist, &NaiveAverage, m, n, cfg.runs, cfg.seed, &OracleSpec::Native)?;
+            row.push(summary.mean);
+            per_m_errors[k].push(summary.mean);
+        }
+        table.push_nums(&row);
+    }
+    let ns: Vec<f64> = cfg.n_list.iter().map(|&n| n as f64).collect();
+    let slopes: Vec<f64> = per_m_errors.iter().map(|errs| loglog_slope(&ns, errs)).collect();
+    Ok((table, slopes))
+}
+
+/// Theorem-5 sweep: sign-fixed averaging on the asymmetric construction.
+/// Returns the table and the fitted slope in `n` for the largest `m`.
+pub fn run_thm5(cfg: &LowerBoundConfig) -> Result<(CsvTable, f64)> {
+    let dist = Thm5Dist::new(cfg.delta);
+    let m = *cfg.m_list.last().expect("need at least one m");
+    let mut table = CsvTable::new(&["n", "sign_fixed_err"]);
+    let mut errs = Vec::new();
+    for &n in &cfg.n_list {
+        let (summary, _, _) =
+            mean_error(&dist, &SignFixedAverage, m, n, cfg.runs, cfg.seed ^ 0x5, &OracleSpec::Native)?;
+        table.push_nums(&[n as f64, summary.mean]);
+        errs.push(summary.mean);
+    }
+    let ns: Vec<f64> = cfg.n_list.iter().map(|&n| n as f64).collect();
+    Ok((table, loglog_slope(&ns, &errs)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thm3_naive_error_flat_in_n_and_m() {
+        // Theorem 3 is the *lower* bound Omega(1/n); empirically the
+        // failure is even starker: the error is dominated by
+        // sign-cancellation events (the m Rademacher signs nearly summing
+        // to zero), which are n-independent. So the measured curve is
+        // essentially FLAT in n — it certainly does not improve like the
+        // centralized 1/(mn).
+        let cfg = LowerBoundConfig {
+            n_list: vec![20, 80, 320],
+            m_list: vec![4, 32],
+            runs: 60,
+            seed: 5,
+            delta: 0.5,
+        };
+        let (table, slopes) = run_thm3(&cfg).unwrap();
+        assert_eq!(table.n_rows(), 3);
+        for (k, s) in slopes.iter().enumerate() {
+            assert!(
+                (-0.8..=0.3).contains(s),
+                "m index {k}: slope {s} — should be far from the centralized -1"
+            );
+        }
+        // error at fixed n should NOT drop ~8x when m grows 8x:
+        let rendered = table.render();
+        let mid: Vec<f64> = rendered
+            .lines()
+            .nth(2)
+            .unwrap()
+            .split(',')
+            .map(|c| c.parse().unwrap())
+            .collect();
+        let ratio = mid[1] / mid[2];
+        assert!(ratio < 4.0, "naive error improved {ratio}x with 8x machines");
+    }
+
+    #[test]
+    fn thm5_bias_slope_steeper_than_variance() {
+        // In the Taylor regime (n >> 1/delta^2) the 1/(delta^4 n^2) bias
+        // dominates at large m: slope well below the -1 variance-only law.
+        let cfg = LowerBoundConfig {
+            n_list: vec![270, 810],
+            m_list: vec![256],
+            runs: 80,
+            seed: 11,
+            delta: 0.4,
+        };
+        let (_, slope) = run_thm5(&cfg).unwrap();
+        assert!(slope < -1.25, "Thm5 slope {slope} should reflect the n^-2 bias term");
+    }
+
+    #[test]
+    fn thm5_asymmetry_is_what_creates_the_bias() {
+        // Same pipeline on the symmetric Lemma-8 construction
+        // (E[xi^3] = 0): no bias term, so at large m the error is far
+        // below the asymmetric construction's.
+        use crate::data::Lemma8Dist;
+        // large m shrinks the shared 1/(delta^2 mn) variance floor so the
+        // asymmetric bias stands out
+        let (m, n, runs, delta) = (512, 270, 60, 0.4);
+        let asym = Thm5Dist::new(delta);
+        let sym = Lemma8Dist::new(delta);
+        let (e_asym, _, _) =
+            mean_error(&asym, &SignFixedAverage, m, n, runs, 21, &OracleSpec::Native).unwrap();
+        let (e_sym, _, _) =
+            mean_error(&sym, &SignFixedAverage, m, n, runs, 22, &OracleSpec::Native).unwrap();
+        assert!(
+            e_asym.mean > 3.0 * e_sym.mean,
+            "asymmetric bias should dominate: asym {:.3e} vs sym {:.3e}",
+            e_asym.mean,
+            e_sym.mean
+        );
+    }
+}

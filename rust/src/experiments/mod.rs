@@ -1,0 +1,74 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (experiment index in DESIGN.md §4).
+//!
+//! Each driver is a plain function from a config struct to a
+//! [`crate::util::csv::CsvTable`] (plus stdout reporting), shared between
+//! the `examples/` binaries, the `cargo bench` targets and the `dspca`
+//! launcher.
+
+pub mod figure1;
+pub mod lower_bounds;
+pub mod scaling;
+pub mod table1;
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, OracleSpec};
+use crate::coordinator::Algorithm;
+use crate::data::Distribution;
+use crate::util::stats::Summary;
+
+/// Mean estimation error of `alg` over `runs` independent clusters.
+/// Returns (error summary, mean rounds, mean distributed matvecs).
+pub fn mean_error(
+    dist: &dyn Distribution,
+    alg: &dyn Algorithm,
+    m: usize,
+    n: usize,
+    runs: usize,
+    seed: u64,
+    oracle: &OracleSpec,
+) -> Result<(Summary, f64, f64)> {
+    let mut errors = Vec::with_capacity(runs);
+    let mut rounds = 0.0;
+    let mut matvecs = 0.0;
+    for r in 0..runs {
+        let cluster = Cluster::generate_with(dist, m, n, seed ^ (r as u64) << 20, oracle.clone())?;
+        let est = alg.run(&cluster)?;
+        errors.push(est.error(dist.v1()));
+        rounds += est.comm.rounds as f64;
+        matvecs += est.comm.matvec_products as f64;
+    }
+    Ok((Summary::of(&errors), rounds / runs as f64, matvecs / runs as f64))
+}
+
+/// Number of experiment repetitions: `DSPCA_RUNS` env override, else the
+/// given default (the paper uses 400; the default examples use fewer to
+/// stay interactive).
+pub fn runs_from_env(default: usize) -> usize {
+    std::env::var("DSPCA_RUNS").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::SignFixedAverage;
+    use crate::data::CovModel;
+
+    #[test]
+    fn mean_error_aggregates() {
+        let dist = CovModel::paper_fig1(6, 3).gaussian();
+        let (summary, rounds, matvecs) =
+            mean_error(&dist, &SignFixedAverage, 3, 50, 4, 1, &OracleSpec::Native).unwrap();
+        assert_eq!(summary.n, 4);
+        assert!(summary.mean > 0.0);
+        assert_eq!(rounds, 1.0);
+        assert_eq!(matvecs, 0.0);
+    }
+
+    #[test]
+    fn runs_from_env_default() {
+        std::env::remove_var("DSPCA_RUNS");
+        assert_eq!(runs_from_env(7), 7);
+    }
+}

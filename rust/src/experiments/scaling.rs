@@ -1,0 +1,147 @@
+//! E6 — Theorem 6 scaling: Shift-and-Invert distributed-matvec count vs
+//! per-machine sample size `n` (expected `~n^{-1/4}` once preconditioning
+//! binds) and vs `m`, compared against distributed Lanczos (whose count
+//! is `n`-independent).
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, OracleSpec};
+use crate::coordinator::{Algorithm, DistributedLanczos, ShiftInvert, SniConfig};
+use crate::data::{CovModel, Distribution};
+use crate::util::csv::CsvTable;
+
+#[derive(Clone, Debug)]
+pub struct ScalingConfig {
+    pub d: usize,
+    pub m: usize,
+    pub n_list: Vec<usize>,
+    pub m_list: Vec<usize>,
+    pub n_for_m_sweep: usize,
+    pub runs: usize,
+    pub seed: u64,
+    pub eps: f64,
+    /// Use the spread (linear-decay) spectrum where CG cannot cheat via
+    /// eigenvalue clustering (see EXPERIMENTS.md E7).
+    pub spread_spectrum: bool,
+    pub delta: f64,
+}
+
+impl Default for ScalingConfig {
+    fn default() -> Self {
+        ScalingConfig {
+            d: 120,
+            m: 8,
+            n_list: vec![250, 500, 1000, 2000, 4000],
+            m_list: vec![2, 4, 8, 16, 32],
+            n_for_m_sweep: 1000,
+            runs: super::runs_from_env(5),
+            seed: 0x5ca1e,
+            eps: 1e-6,
+            spread_spectrum: true,
+            delta: 0.1,
+        }
+    }
+}
+
+fn make_dist(cfg: &ScalingConfig) -> impl Distribution {
+    let mut sigma = vec![1.0, 1.0 - cfg.delta];
+    for j in 2..cfg.d {
+        if cfg.spread_spectrum {
+            sigma.push((1.0 - cfg.delta) * (1.0 - (j as f64 - 1.0) / cfg.d as f64));
+        } else {
+            let prev = sigma[j - 1];
+            sigma.push(0.9 * prev);
+        }
+    }
+    CovModel::with_spectrum(sigma, cfg.seed ^ 0xdd).gaussian()
+}
+
+fn avg_matvecs(
+    dist: &dyn Distribution,
+    alg: &dyn Algorithm,
+    m: usize,
+    n: usize,
+    runs: usize,
+    seed: u64,
+) -> Result<f64> {
+    let mut total = 0.0;
+    for r in 0..runs {
+        let c = Cluster::generate_with(dist, m, n, seed ^ (r as u64) << 18, OracleSpec::Native)?;
+        total += alg.run(&c)?.comm.matvec_products as f64;
+    }
+    Ok(total / runs as f64)
+}
+
+/// Sweep over `n` at fixed `m`: columns `n, sni_matvecs, lanczos_matvecs`.
+pub fn run_n_sweep(cfg: &ScalingConfig) -> Result<CsvTable> {
+    let dist = make_dist(cfg);
+    let sni = ShiftInvert::new(SniConfig { eps: cfg.eps, ..Default::default() });
+    let lan = DistributedLanczos { tol: cfg.eps * 1e-2, ..Default::default() };
+    let mut table = CsvTable::new(&["n", "sni_matvecs", "lanczos_matvecs"]);
+    for &n in &cfg.n_list {
+        let s = avg_matvecs(&dist, &sni, cfg.m, n, cfg.runs, cfg.seed)?;
+        let l = avg_matvecs(&dist, &lan, cfg.m, n, cfg.runs, cfg.seed)?;
+        table.push_nums(&[n as f64, s, l]);
+        crate::info!("scaling n={n}: sni={s:.1} lanczos={l:.1}");
+    }
+    Ok(table)
+}
+
+/// Sweep over `m` at fixed `n`: columns `m, sni_matvecs, lanczos_matvecs,
+/// oja_rounds(=m)`.
+pub fn run_m_sweep(cfg: &ScalingConfig) -> Result<CsvTable> {
+    let dist = make_dist(cfg);
+    let sni = ShiftInvert::new(SniConfig { eps: cfg.eps, ..Default::default() });
+    let lan = DistributedLanczos { tol: cfg.eps * 1e-2, ..Default::default() };
+    let mut table = CsvTable::new(&["m", "sni_matvecs", "lanczos_matvecs", "oja_rounds"]);
+    for &m in &cfg.m_list {
+        let s = avg_matvecs(&dist, &sni, m, cfg.n_for_m_sweep, cfg.runs, cfg.seed)?;
+        let l = avg_matvecs(&dist, &lan, m, cfg.n_for_m_sweep, cfg.runs, cfg.seed)?;
+        table.push_nums(&[m as f64, s, l, m as f64]);
+        crate::info!("scaling m={m}: sni={s:.1} lanczos={l:.1}");
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn n_sweep_shows_sni_decreasing() {
+        let cfg = ScalingConfig {
+            d: 40,
+            m: 4,
+            n_list: vec![250, 4000],
+            runs: 2,
+            ..Default::default()
+        };
+        let table = run_n_sweep(&cfg).unwrap();
+        let lines: Vec<Vec<f64>> = table
+            .render()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|c| c.parse().unwrap()).collect())
+            .collect();
+        // S&I matvecs should not increase with 16x more data per machine
+        assert!(
+            lines[1][1] <= lines[0][1] * 1.3,
+            "sni matvecs grew with n: {} -> {}",
+            lines[0][1],
+            lines[1][1]
+        );
+    }
+
+    #[test]
+    fn m_sweep_runs() {
+        let cfg = ScalingConfig {
+            d: 24,
+            m_list: vec![2, 8],
+            n_for_m_sweep: 400,
+            runs: 2,
+            ..Default::default()
+        };
+        let table = run_m_sweep(&cfg).unwrap();
+        assert_eq!(table.n_rows(), 2);
+    }
+}

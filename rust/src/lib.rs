@@ -1,0 +1,62 @@
+//! # dspca — Communication-efficient Distributed Stochastic PCA
+//!
+//! Reproduction of *"Communication-efficient Algorithms for Distributed
+//! Stochastic Principal Component Analysis"* (Garber, Shamir, Srebro;
+//! ICML 2017) as a three-layer Rust + JAX + Pallas system.
+//!
+//! The crate is organised bottom-up:
+//!
+//! - [`linalg`] — dense linear algebra substrate (gemm, QR, symmetric
+//!   eigensolvers, PSD matrix functions). No external BLAS/LAPACK.
+//! - [`rng`] — deterministic PCG64 RNG + gaussian sampling (no `rand`).
+//! - [`data`] — the paper's synthetic distributions (§5 covariance model,
+//!   Thm 3 / Thm 5 lower-bound constructions) and data shards.
+//! - [`cluster`] — simulated m-machine cluster: worker threads owning
+//!   shards, typed messages, and exact communication-round accounting.
+//! - [`coordinator`] — the paper's algorithms: one-shot averaging
+//!   estimators (Thm 3/4/5), distributed power method / Lanczos,
+//!   hot-potato Oja SGD, and Shift-and-Invert with locally-preconditioned
+//!   linear-system solvers (Alg 1 + Alg 2, Thm 6).
+//! - [`runtime`] — PJRT bridge: loads AOT-compiled HLO artifacts produced
+//!   by `python/compile/aot.py` and runs them from the worker hot path.
+//! - [`experiments`] — drivers regenerating every table and figure in the
+//!   paper's evaluation (see `DESIGN.md` §4 for the experiment index).
+//! - [`util`], [`propcheck`], [`bench_harness`] — JSON/CSV/stats,
+//!   property-testing and benchmarking substrates (offline image has no
+//!   serde/proptest/criterion).
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use dspca::prelude::*;
+//!
+//! let dist = CovModel::paper_fig1(300, 7).gaussian();
+//! let cluster = Cluster::generate(&dist, 25, 400, 42).unwrap();
+//! let est = SignFixedAverage.run(&cluster).unwrap();
+//! println!("error = {:.3e}, rounds = {}", est.error(dist.v1()), est.comm.rounds);
+//! ```
+
+pub mod bench_harness;
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod linalg;
+pub mod propcheck;
+pub mod rng;
+pub mod runtime;
+pub mod util;
+
+/// Convenience re-exports covering the public API surface used by the
+/// examples and benches.
+pub mod prelude {
+    pub use crate::cluster::{Cluster, CommStats, OracleSpec};
+    pub use crate::coordinator::{
+        Algorithm, CentralizedErm, DistributedLanczos, DistributedPower, Estimate, HotPotatoOja,
+        NaiveAverage, ProjectionAverage, ShiftInvert, SignFixedAverage, SniConfig,
+    };
+    pub use crate::data::{CovModel, Distribution, Thm3Dist, Thm5Dist};
+    pub use crate::linalg::Matrix;
+    pub use crate::rng::Pcg64;
+}

@@ -1,0 +1,526 @@
+//! Symmetric eigensolver: Householder tridiagonalization followed by the
+//! implicit-shift QL iteration, with eigenvector accumulation.
+//!
+//! This is the workhorse behind
+//! - every machine's local ERM solution (leading eigenvector of `Xhat_i`),
+//! - the centralized ERM baseline,
+//! - the `C^{-1/2}` / `C^{-1}` preconditioner of Lemma 6 (via [`SymEigen::apply_fn`]),
+//! - the projection-averaging estimator of §5.
+//!
+//! The implementation follows the classical `tred2` / `tqli` pair
+//! (Householder, then QL with Wilkinson shifts); cost is `O(d^3)` with a
+//! small constant, fine for the paper's `d = 300` regime. Correctness is
+//! cross-checked against the independent cyclic-Jacobi solver in
+//! [`crate::linalg::jacobi`].
+
+use super::matrix::Matrix;
+
+/// Eigendecomposition of a real symmetric matrix: `A = V diag(values) V^T`.
+///
+/// `values` are sorted **descending** (so `values[0] = lambda_1`, matching
+/// the paper's notation) and `vectors.col(k)` is the unit eigenvector for
+/// `values[k]`.
+#[derive(Clone, Debug)]
+pub struct SymEigen {
+    values: Vec<f64>,
+    vectors: Matrix,
+}
+
+/// `sqrt(a^2 + b^2)` without destructive overflow/underflow.
+#[inline]
+fn pythag(a: f64, b: f64) -> f64 {
+    let (absa, absb) = (a.abs(), b.abs());
+    if absa > absb {
+        let r = absb / absa;
+        absa * (1.0 + r * r).sqrt()
+    } else if absb == 0.0 {
+        0.0
+    } else {
+        let r = absa / absb;
+        absb * (1.0 + r * r).sqrt()
+    }
+}
+
+/// Householder reduction of a symmetric matrix to tridiagonal form.
+/// On exit `a` holds the accumulated orthogonal transform `Q`, `d` the
+/// diagonal and `e[1..]` the sub-diagonal.
+fn tred2(a: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = a.rows();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        if l > 0 {
+            let mut scale = 0.0;
+            for k in 0..=l {
+                scale += a.get(i, k).abs();
+            }
+            if scale == 0.0 {
+                e[i] = a.get(i, l);
+            } else {
+                for k in 0..=l {
+                    let v = a.get(i, k) / scale;
+                    a.set(i, k, v);
+                    h += v * v;
+                }
+                let mut f = a.get(i, l);
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a.set(i, l, f - g);
+                f = 0.0;
+                for j in 0..=l {
+                    a.set(j, i, a.get(i, j) / h);
+                    let mut g2 = 0.0;
+                    for k in 0..=j {
+                        g2 += a.get(j, k) * a.get(i, k);
+                    }
+                    for k in (j + 1)..=l {
+                        g2 += a.get(k, j) * a.get(i, k);
+                    }
+                    e[j] = g2 / h;
+                    f += e[j] * a.get(i, j);
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let fj = a.get(i, j);
+                    let gj = e[j] - hh * fj;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        let v = a.get(j, k) - (fj * e[k] + gj * a.get(i, k));
+                        a.set(j, k, v);
+                    }
+                }
+            }
+        } else {
+            e[i] = a.get(i, l);
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0;
+                for k in 0..i {
+                    g += a.get(i, k) * a.get(k, j);
+                }
+                for k in 0..i {
+                    let v = a.get(k, j) - g * a.get(k, i);
+                    a.set(k, j, v);
+                }
+            }
+        }
+        d[i] = a.get(i, i);
+        a.set(i, i, 1.0);
+        for j in 0..i {
+            a.set(j, i, 0.0);
+            a.set(i, j, 0.0);
+        }
+    }
+}
+
+/// QL iteration with implicit Wilkinson shifts on a symmetric tridiagonal
+/// matrix `(d, e)`, rotating the **rows** of `zt` along (`zt` is the
+/// transposed accumulator: row `i` holds what is mathematically column
+/// `i` of `Z`). Row-pair rotations touch contiguous memory, which makes
+/// the dominant O(n^3) rotation work vectorizable — see EXPERIMENTS.md
+/// §Perf (L3) for the measured ~2x eigensolver speedup.
+fn tqli(d: &mut [f64], e: &mut [f64], zt: &mut Matrix) -> Result<(), String> {
+    let n = d.len();
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    // absolute deflation floor: for spectra that decay below machine
+    // precision (e.g. the paper's 0.9^j model at d = 300) the classical
+    // relative test `|e[m]| <= eps * (|d[m]| + |d[m+1]|)` never fires on
+    // the near-zero tail; deflating at eps * ||T|| perturbs eigenvalues
+    // by at most O(eps * ||T||), which is the attainable accuracy anyway.
+    let anorm = (0..n).map(|i| d[i].abs() + e[i].abs()).fold(0.0f64, f64::max);
+    let floor = f64::EPSILON * anorm;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find the first decoupled block boundary
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd || e[m].abs() <= floor {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 64 {
+                return Err(format!("tqli: no convergence for eigenvalue {l} after 64 sweeps"));
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = pythag(g, 1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let f = s * e[i];
+                let b = c * e[i];
+                r = pythag(f, g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // accumulate the rotation into the (transposed)
+                // eigenvector matrix: rows i and i+1, contiguous
+                {
+                    let (lo, hi) = zt.data_mut().split_at_mut((i + 1) * n);
+                    let row_i = &mut lo[i * n..];
+                    let row_i1 = &mut hi[..n];
+                    for (a, b2) in row_i.iter_mut().zip(row_i1.iter_mut()) {
+                        let fa = *b2;
+                        *b2 = s * *a + c * fa;
+                        *a = c * *a - s * fa;
+                    }
+                }
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+impl SymEigen {
+    /// Full eigendecomposition of a symmetric matrix.
+    ///
+    /// The input is symmetrized defensively (`(A + A^T)/2`) to guard
+    /// against accumulated round-off from callers. Panics on non-square
+    /// input or (pathological) non-convergence.
+    pub fn new(a: &Matrix) -> SymEigen {
+        Self::try_new(a).expect("symmetric eigensolver failed to converge")
+    }
+
+    /// Non-panicking variant of [`SymEigen::new`].
+    pub fn try_new(a: &Matrix) -> Result<SymEigen, String> {
+        assert!(a.is_square(), "SymEigen: matrix must be square");
+        let n = a.rows();
+        if n == 0 {
+            return Err("SymEigen: empty matrix".into());
+        }
+        let mut work = a.clone();
+        work.symmetrize();
+        let mut d = vec![0.0; n];
+        let mut e = vec![0.0; n];
+        if n == 1 {
+            return Ok(SymEigen { values: vec![work.get(0, 0)], vectors: Matrix::identity(1) });
+        }
+        tred2(&mut work, &mut d, &mut e);
+        // transpose the accumulated Q so tqli's rotations act on rows
+        let mut zt = work.transpose();
+        tqli(&mut d, &mut e, &mut zt)?;
+        // sort descending; eigenvector i is row i of zt
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&i, &j| d[j].partial_cmp(&d[i]).unwrap());
+        let values: Vec<f64> = idx.iter().map(|&i| d[i]).collect();
+        let mut vectors = Matrix::zeros(n, n);
+        for (newc, &oldr) in idx.iter().enumerate() {
+            let row = zt.row(oldr).to_vec();
+            vectors.set_col(newc, &row);
+        }
+        Ok(SymEigen { values, vectors })
+    }
+
+    /// Eigenvalues, descending.
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// Orthonormal eigenvector matrix (columns match `values`).
+    pub fn vectors(&self) -> &Matrix {
+        &self.vectors
+    }
+
+    /// Leading eigenvalue `lambda_1`.
+    pub fn lambda1(&self) -> f64 {
+        self.values[0]
+    }
+
+    /// Eigengap `lambda_1 - lambda_2` (0 for 1x1 matrices).
+    pub fn eigengap(&self) -> f64 {
+        if self.values.len() < 2 {
+            0.0
+        } else {
+            self.values[0] - self.values[1]
+        }
+    }
+
+    /// Leading unit eigenvector. The sign is normalized so that the entry
+    /// of largest magnitude is positive (deterministic across runs); the
+    /// *statistical* sign randomization required by Thm 3 is applied by
+    /// the caller.
+    pub fn leading(&self) -> Vec<f64> {
+        let mut v = self.vectors.col(0);
+        let mut imax = 0;
+        for (i, x) in v.iter().enumerate() {
+            if x.abs() > v[imax].abs() {
+                imax = i;
+            }
+        }
+        if v[imax] < 0.0 {
+            for x in &mut v {
+                *x = -*x;
+            }
+        }
+        v
+    }
+
+    /// k-th unit eigenvector (0-based, descending order).
+    pub fn eigvec(&self, k: usize) -> Vec<f64> {
+        self.vectors.col(k)
+    }
+
+    /// Build `V f(lambda) V^T` — the spectral function calculus used for
+    /// `C^{-1}` and `C^{-1/2}` in the Lemma-6 preconditioner.
+    pub fn apply_fn(&self, f: impl Fn(f64) -> f64) -> Matrix {
+        let n = self.values.len();
+        // V * diag(f) -> scaled columns, then multiply by V^T
+        let mut scaled = self.vectors.clone();
+        for c in 0..n {
+            let fc = f(self.values[c]);
+            for r in 0..n {
+                scaled.set(r, c, scaled.get(r, c) * fc);
+            }
+        }
+        scaled.matmul(&self.vectors.transpose())
+    }
+
+    /// Apply `V f(lambda) V^T` to a single vector without forming the
+    /// matrix: `O(d^2)` instead of `O(d^3)`. This is the hot path of the
+    /// preconditioned solver (per-iteration `C^{-1} r`).
+    pub fn apply_fn_vec(&self, f: impl Fn(f64) -> f64, x: &[f64], out: &mut [f64]) {
+        let n = self.values.len();
+        assert_eq!(x.len(), n);
+        assert_eq!(out.len(), n);
+        // coeffs = V^T x
+        let mut coeffs = self.vectors.matvec_t(x);
+        for (c, lam) in coeffs.iter_mut().zip(self.values.iter()) {
+            *c *= f(*lam);
+        }
+        // out = V coeffs
+        self.vectors.matvec_into(&coeffs, out);
+    }
+
+    /// Reconstruction `V diag(values) V^T` (for tests).
+    pub fn reconstruct(&self) -> Matrix {
+        self.apply_fn(|x| x)
+    }
+}
+
+/// Leading eigenvector of a symmetric matrix — convenience wrapper used by
+/// the one-shot estimators.
+pub fn leading_eigvec(a: &Matrix) -> Vec<f64> {
+    SymEigen::new(a).leading()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_ops::{dot, norm};
+    use crate::rng::Pcg64;
+
+    fn random_sym(n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = rng.next_f64() * 2.0 - 1.0;
+                a.set(i, j, v);
+                a.set(j, i, v);
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diag_matrix_eigen() {
+        let a = Matrix::diag(&[3.0, -1.0, 2.0]);
+        let e = SymEigen::new(&a);
+        assert!((e.values()[0] - 3.0).abs() < 1e-12);
+        assert!((e.values()[1] - 2.0).abs() < 1e-12);
+        assert!((e.values()[2] + 1.0).abs() < 1e-12);
+        let v = e.leading();
+        assert!((v[0].abs() - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] has eigenvalues 3, 1 with v1 = (1,1)/sqrt2
+        let a = Matrix::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let e = SymEigen::new(&a);
+        assert!((e.lambda1() - 3.0).abs() < 1e-12);
+        assert!((e.eigengap() - 2.0).abs() < 1e-12);
+        let v = e.leading();
+        assert!((v[0] - v[1]).abs() < 1e-10);
+        assert!((norm(&v) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_matches_input() {
+        for n in [1usize, 2, 3, 5, 17, 40] {
+            let a = random_sym(n, 100 + n as u64);
+            let e = SymEigen::new(&a);
+            let r = e.reconstruct();
+            let mut sym = a.clone();
+            sym.symmetrize();
+            assert!(
+                r.sub(&sym).max_abs() < 1e-9 * (1.0 + sym.max_abs()),
+                "reconstruction failed for n={n}: err={}",
+                r.sub(&sym).max_abs()
+            );
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal() {
+        let a = random_sym(23, 7);
+        let e = SymEigen::new(&a);
+        let v = e.vectors();
+        let vtv = v.transpose().matmul(v);
+        assert!(vtv.sub(&Matrix::identity(23)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn eigen_equation_residuals() {
+        let a = random_sym(31, 9);
+        let mut sym = a.clone();
+        sym.symmetrize();
+        let e = SymEigen::new(&a);
+        for k in 0..31 {
+            let vk = e.eigvec(k);
+            let av = sym.matvec(&vk);
+            let lv: Vec<f64> = vk.iter().map(|x| x * e.values()[k]).collect();
+            let res: f64 = av.iter().zip(lv.iter()).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max);
+            assert!(res < 1e-9, "residual {res} for pair {k}");
+        }
+    }
+
+    #[test]
+    fn values_sorted_descending() {
+        let e = SymEigen::new(&random_sym(19, 11));
+        for w in e.values().windows(2) {
+            assert!(w[0] >= w[1] - 1e-14);
+        }
+    }
+
+    #[test]
+    fn apply_fn_inverse() {
+        // f = 1/x on a PD matrix gives the inverse
+        let mut a = random_sym(9, 13);
+        // make it PD: A <- A^T A + I
+        a = a.transpose().matmul(&a);
+        a.axpy_mat(1.0, &Matrix::identity(9));
+        let e = SymEigen::new(&a);
+        let inv = e.apply_fn(|x| 1.0 / x);
+        let prod = inv.matmul(&a);
+        assert!(prod.sub(&Matrix::identity(9)).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn apply_fn_sqrt_squares_back() {
+        let mut a = random_sym(8, 17);
+        a = a.transpose().matmul(&a); // PSD
+        let e = SymEigen::new(&a);
+        let half = e.apply_fn(|x| x.max(0.0).sqrt());
+        let sq = half.matmul(&half);
+        let mut sym = a.clone();
+        sym.symmetrize();
+        assert!(sq.sub(&sym).max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn apply_fn_vec_matches_matrix_apply() {
+        let mut a = random_sym(12, 19);
+        a = a.transpose().matmul(&a);
+        a.axpy_mat(2.0, &Matrix::identity(12));
+        let e = SymEigen::new(&a);
+        let mut rng = Pcg64::new(23);
+        let x: Vec<f64> = (0..12).map(|_| rng.next_f64() - 0.5).collect();
+        let m = e.apply_fn(|t| 1.0 / t.sqrt());
+        let want = m.matvec(&x);
+        let mut got = vec![0.0; 12];
+        e.apply_fn_vec(|t| 1.0 / t.sqrt(), &x, &mut got);
+        for i in 0..12 {
+            assert!((want[i] - got[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn leading_sign_deterministic() {
+        let a = random_sym(15, 29);
+        let v1 = SymEigen::new(&a).leading();
+        let v2 = SymEigen::new(&a.scale(1.0)).leading();
+        for i in 0..15 {
+            assert_eq!(v1[i], v2[i]);
+        }
+    }
+
+    #[test]
+    fn repeated_eigenvalues_ok() {
+        // identity: all eigenvalues 1, any orthonormal basis valid
+        let e = SymEigen::new(&Matrix::identity(6));
+        for v in e.values() {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+        let vtv = e.vectors().transpose().matmul(e.vectors());
+        assert!(vtv.sub(&Matrix::identity(6)).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn rank_one_plus_noise_leading_aligned() {
+        // A = 5 u u^T + small noise: leading eigvec ~ u
+        let n = 30;
+        let mut rng = Pcg64::new(31);
+        let mut u: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+        let nu = norm(&u);
+        u.iter_mut().for_each(|x| *x /= nu);
+        let mut a = Matrix::outer(&u, &u).scale(5.0);
+        let noise = random_sym(n, 37).scale(0.01);
+        a.axpy_mat(1.0, &noise);
+        let v = SymEigen::new(&a).leading();
+        assert!(dot(&v, &u).abs() > 0.999, "alignment {}", dot(&v, &u).abs());
+    }
+
+    #[test]
+    fn matches_jacobi_cross_check() {
+        for n in [3usize, 6, 12] {
+            let a = random_sym(n, 200 + n as u64);
+            let e1 = SymEigen::new(&a);
+            let e2 = crate::linalg::jacobi::jacobi_eigen(&a);
+            for k in 0..n {
+                assert!(
+                    (e1.values()[k] - e2.0[k]).abs() < 1e-9,
+                    "eigenvalue {k} mismatch: {} vs {}",
+                    e1.values()[k],
+                    e2.0[k]
+                );
+            }
+        }
+    }
+}

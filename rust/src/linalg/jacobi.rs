@@ -1,0 +1,131 @@
+//! Cyclic Jacobi eigensolver.
+//!
+//! Kept as an *independent* oracle to cross-check the tred2/tqli solver in
+//! [`crate::linalg::eigen`]: the two implementations share no code, so a
+//! bug in either shows up as a disagreement in the cross-check tests.
+//! Jacobi is also the more accurate choice for tiny matrices (it drives
+//! the 2x2 sanity tests of the lower-bound constructions).
+
+use super::matrix::Matrix;
+
+/// Full eigendecomposition of a symmetric matrix via cyclic Jacobi
+/// rotations. Returns `(values_desc, vectors)` where `vectors.col(k)` is
+/// the unit eigenvector for `values_desc[k]`.
+pub fn jacobi_eigen(a: &Matrix) -> (Vec<f64>, Matrix) {
+    assert!(a.is_square(), "jacobi_eigen: matrix must be square");
+    let n = a.rows();
+    let mut m = a.clone();
+    m.symmetrize();
+    let mut v = Matrix::identity(n);
+
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        // off-diagonal Frobenius mass
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m.get(i, j) * m.get(i, j);
+            }
+        }
+        if off.sqrt() < 1e-14 * (1.0 + m.max_abs()) {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m.get(p, q);
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m.get(p, p);
+                let aqq = m.get(q, q);
+                // rotation angle zeroing (p,q)
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    -1.0 / (-theta + (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+                // apply rotation: rows/cols p and q
+                for k in 0..n {
+                    let mkp = m.get(k, p);
+                    let mkq = m.get(k, q);
+                    m.set(k, p, c * mkp - s * mkq);
+                    m.set(k, q, s * mkp + c * mkq);
+                }
+                for k in 0..n {
+                    let mpk = m.get(p, k);
+                    let mqk = m.get(q, k);
+                    m.set(p, k, c * mpk - s * mqk);
+                    m.set(q, k, s * mpk + c * mqk);
+                }
+                for k in 0..n {
+                    let vkp = v.get(k, p);
+                    let vkq = v.get(k, q);
+                    v.set(k, p, c * vkp - s * vkq);
+                    v.set(k, q, s * vkp + c * vkq);
+                }
+            }
+        }
+    }
+
+    let mut idx: Vec<usize> = (0..n).collect();
+    let diag: Vec<f64> = (0..n).map(|i| m.get(i, i)).collect();
+    idx.sort_by(|&i, &j| diag[j].partial_cmp(&diag[i]).unwrap());
+    let values: Vec<f64> = idx.iter().map(|&i| diag[i]).collect();
+    let mut vectors = Matrix::zeros(n, n);
+    for (newc, &oldc) in idx.iter().enumerate() {
+        vectors.set_col(newc, &v.col(oldc));
+    }
+    (values, vectors)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn jacobi_diag() {
+        let a = Matrix::diag(&[5.0, 1.0, 3.0]);
+        let (vals, _) = jacobi_eigen(&a);
+        assert!((vals[0] - 5.0).abs() < 1e-12);
+        assert!((vals[1] - 3.0).abs() < 1e-12);
+        assert!((vals[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_reconstructs() {
+        let mut rng = Pcg64::new(55);
+        let n = 10;
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.next_f64() - 0.5;
+                a.set(i, j, x);
+                a.set(j, i, x);
+            }
+        }
+        let (vals, vecs) = jacobi_eigen(&a);
+        let rec = vecs.matmul(&Matrix::diag(&vals)).matmul(&vecs.transpose());
+        assert!(rec.sub(&a).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_orthonormal_vectors() {
+        let mut rng = Pcg64::new(56);
+        let n = 8;
+        let mut a = Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let x = rng.next_f64();
+                a.set(i, j, x);
+                a.set(j, i, x);
+            }
+        }
+        let (_, vecs) = jacobi_eigen(&a);
+        let vtv = vecs.transpose().matmul(&vecs);
+        assert!(vtv.sub(&Matrix::identity(n)).max_abs() < 1e-10);
+    }
+}

@@ -1,0 +1,508 @@
+//! Row-major dense `f64` matrix with the kernels the coordinator needs.
+//!
+//! Layout: `data[r * cols + c]`. The GEMM is a cache-blocked i-k-j loop —
+//! the j-inner ordering makes the innermost loop a contiguous
+//! multiply-accumulate over both `b` and `out`, which LLVM auto-vectorizes.
+
+use std::fmt;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+/// Cache block edge for the blocked GEMM (tuned in `bench_linalg`).
+const GEMM_BLOCK: usize = 64;
+
+impl Matrix {
+    /// Zero matrix of shape `rows x cols`.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of size `n`.
+    pub fn identity(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a row-major data vector. Panics if sizes disagree.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols, "matrix data length mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    /// Build from a slice of rows. Panics if the rows are ragged.
+    pub fn from_rows(rows: &[Vec<f64>]) -> Self {
+        assert!(!rows.is_empty(), "from_rows: empty");
+        let cols = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * cols);
+        for r in rows {
+            assert_eq!(r.len(), cols, "from_rows: ragged rows");
+            data.extend_from_slice(r);
+        }
+        Matrix { rows: rows.len(), cols, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = d[i];
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+
+    /// Raw row-major data.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    #[inline(always)]
+    pub fn get(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline(always)]
+    pub fn set(&mut self, r: usize, c: usize, v: f64) {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c] = v;
+    }
+
+    #[inline(always)]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline(always)]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Extract column `c` as a fresh vector.
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self.get(r, c)).collect()
+    }
+
+    pub fn set_col(&mut self, c: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for r in 0..self.rows {
+            self.set(r, c, v[r]);
+        }
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Matrix {
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    /// `self * other` with cache-blocked i-k-j GEMM.
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul: inner dims mismatch");
+        let (m, k, n) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(m, n);
+        for ib in (0..m).step_by(GEMM_BLOCK) {
+            let imax = (ib + GEMM_BLOCK).min(m);
+            for kb in (0..k).step_by(GEMM_BLOCK) {
+                let kmax = (kb + GEMM_BLOCK).min(k);
+                for i in ib..imax {
+                    let arow = &self.data[i * k..(i + 1) * k];
+                    let orow = &mut out.data[i * n..(i + 1) * n];
+                    for p in kb..kmax {
+                        let a = arow[p];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &other.data[p * n..(p + 1) * n];
+                        for j in 0..n {
+                            orow[j] += a * brow[j];
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self * v` (GEMV). Output has length `rows`.
+    pub fn matvec(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.cols, "matvec: dim mismatch");
+        let mut out = vec![0.0; self.rows];
+        self.matvec_into(v, &mut out);
+        out
+    }
+
+    /// Allocation-free GEMV into a caller-provided buffer.
+    pub fn matvec_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.cols);
+        assert_eq!(out.len(), self.rows);
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            let mut acc = 0.0;
+            for (a, b) in row.iter().zip(v.iter()) {
+                acc += a * b;
+            }
+            out[r] = acc;
+        }
+    }
+
+    /// `self^T * v`. Output has length `cols`. Row-major friendly: streams
+    /// rows and accumulates `v[r] * row` (axpy), contiguous in memory.
+    pub fn matvec_t(&self, v: &[f64]) -> Vec<f64> {
+        assert_eq!(v.len(), self.rows, "matvec_t: dim mismatch");
+        let mut out = vec![0.0; self.cols];
+        self.matvec_t_into(v, &mut out);
+        out
+    }
+
+    /// Allocation-free transposed GEMV into a caller-provided buffer.
+    pub fn matvec_t_into(&self, v: &[f64], out: &mut [f64]) {
+        assert_eq!(v.len(), self.rows);
+        assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for r in 0..self.rows {
+            let a = v[r];
+            if a == 0.0 {
+                continue;
+            }
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            for (o, b) in out.iter_mut().zip(row.iter()) {
+                *o += a * b;
+            }
+        }
+    }
+
+    /// Symmetric rank-k update `self^T * self` (SYRK): the empirical Gram /
+    /// covariance kernel. Only the upper triangle is computed, then
+    /// mirrored.
+    pub fn syrk_t(&self) -> Matrix {
+        let (n, d) = (self.rows, self.cols);
+        let mut g = Matrix::zeros(d, d);
+        for r in 0..n {
+            let row = &self.data[r * d..(r + 1) * d];
+            for i in 0..d {
+                let a = row[i];
+                if a == 0.0 {
+                    continue;
+                }
+                let grow = &mut g.data[i * d..(i + 1) * d];
+                for j in i..d {
+                    grow[j] += a * row[j];
+                }
+            }
+        }
+        // mirror upper -> lower
+        for i in 0..d {
+            for j in (i + 1)..d {
+                let v = g.data[i * d + j];
+                g.data[j * d + i] = v;
+            }
+        }
+        g
+    }
+
+    /// Element-wise `self + other`.
+    pub fn add(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// Element-wise `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Matrix {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place `self += s * other`.
+    pub fn axpy_mat(&mut self, s: f64, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += s * b;
+        }
+    }
+
+    /// Scaled copy `s * self`.
+    pub fn scale(&self, s: f64) -> Matrix {
+        let data = self.data.iter().map(|a| a * s).collect();
+        Matrix { rows: self.rows, cols: self.cols, data }
+    }
+
+    /// In-place scale.
+    pub fn scale_mut(&mut self, s: f64) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|a| a * a).sum::<f64>().sqrt()
+    }
+
+    /// Spectral norm of a **symmetric** matrix via its eigenvalues.
+    /// Panics if not square.
+    pub fn sym_spectral_norm(&self) -> f64 {
+        assert!(self.is_square());
+        let eig = crate::linalg::eigen::SymEigen::new(self);
+        eig.values().iter().fold(0.0f64, |acc, &v| acc.max(v.abs()))
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |acc, &v| acc.max(v.abs()))
+    }
+
+    /// Symmetrize in place: `(A + A^T)/2`. Cheap guard against numerical
+    /// asymmetry before eigensolves.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        let n = self.rows;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = 0.5 * (self.data[i * n + j] + self.data[j * n + i]);
+                self.data[i * n + j] = v;
+                self.data[j * n + i] = v;
+            }
+        }
+    }
+
+    /// Outer product `u v^T`.
+    pub fn outer(u: &[f64], v: &[f64]) -> Matrix {
+        let mut m = Matrix::zeros(u.len(), v.len());
+        for (i, &a) in u.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            let row = &mut m.data[i * v.len()..(i + 1) * v.len()];
+            for (o, &b) in row.iter_mut().zip(v.iter()) {
+                *o = a * b;
+            }
+        }
+        m
+    }
+
+    /// Trace. Panics if not square.
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square());
+        (0..self.rows).map(|i| self.data[i * self.cols + i]).sum()
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show = self.rows.min(8);
+        for r in 0..show {
+            write!(f, "  [")?;
+            for c in 0..self.cols.min(8) {
+                write!(f, "{:+.4e} ", self.get(r, c))?;
+            }
+            writeln!(f, "{}]", if self.cols > 8 { "…" } else { "" })?;
+        }
+        if self.rows > 8 {
+            writeln!(f, "  …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vec_ops;
+
+    #[test]
+    fn identity_matmul_is_noop() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let i2 = Matrix::identity(2);
+        let i3 = Matrix::identity(3);
+        assert_eq!(i2.matmul(&a).data(), a.data());
+        assert_eq!(a.matmul(&i3).data(), a.data());
+    }
+
+    #[test]
+    fn matmul_known_values() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![5., 6., 7., 8.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_blocked_matches_naive_rectangular() {
+        // exercise the blocking path with sizes > GEMM_BLOCK
+        let (m, k, n) = (70, 65, 80);
+        let mut rng = crate::rng::Pcg64::new(1);
+        let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.next_f64() - 0.5).collect());
+        let b = Matrix::from_vec(k, n, (0..k * n).map(|_| rng.next_f64() - 0.5).collect());
+        let c = a.matmul(&b);
+        // naive reference
+        for i in (0..m).step_by(17) {
+            for j in (0..n).step_by(13) {
+                let mut acc = 0.0;
+                for p in 0..k {
+                    acc += a.get(i, p) * b.get(p, j);
+                }
+                assert!((acc - c.get(i, j)).abs() < 1e-10, "mismatch at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_matmul() {
+        let mut rng = crate::rng::Pcg64::new(2);
+        let a = Matrix::from_vec(9, 7, (0..63).map(|_| rng.next_f64()).collect());
+        let v: Vec<f64> = (0..7).map(|_| rng.next_f64()).collect();
+        let got = a.matvec(&v);
+        let vm = Matrix::from_vec(7, 1, v.clone());
+        let want = a.matmul(&vm);
+        for i in 0..9 {
+            assert!((got[i] - want.get(i, 0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn matvec_t_matches_transpose_matvec() {
+        let mut rng = crate::rng::Pcg64::new(3);
+        let a = Matrix::from_vec(11, 5, (0..55).map(|_| rng.next_f64()).collect());
+        let v: Vec<f64> = (0..11).map(|_| rng.next_f64()).collect();
+        let got = a.matvec_t(&v);
+        let want = a.transpose().matvec(&v);
+        for i in 0..5 {
+            assert!((got[i] - want[i]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn syrk_matches_explicit_gram() {
+        let mut rng = crate::rng::Pcg64::new(4);
+        let a = Matrix::from_vec(20, 6, (0..120).map(|_| rng.next_f64() - 0.5).collect());
+        let g = a.syrk_t();
+        let want = a.transpose().matmul(&a);
+        assert!(g.sub(&want).max_abs() < 1e-12);
+        // symmetry
+        for i in 0..6 {
+            for j in 0..6 {
+                assert_eq!(g.get(i, j), g.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = crate::rng::Pcg64::new(5);
+        let a = Matrix::from_vec(4, 9, (0..36).map(|_| rng.next_f64()).collect());
+        assert_eq!(a.transpose().transpose().data(), a.data());
+    }
+
+    #[test]
+    fn outer_product_rank_one() {
+        let u = vec![1., 2., 3.];
+        let v = vec![4., 5.];
+        let m = Matrix::outer(&u, &v);
+        assert_eq!(m.rows(), 3);
+        assert_eq!(m.cols(), 2);
+        assert_eq!(m.get(2, 1), 15.0);
+        // every 2x2 minor is singular
+        let det = m.get(0, 0) * m.get(1, 1) - m.get(0, 1) * m.get(1, 0);
+        assert!(det.abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_sub_scale_roundtrip() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = a.scale(2.0);
+        let c = b.sub(&a);
+        assert_eq!(c.data(), a.data());
+        let d = a.add(&a);
+        assert_eq!(d.data(), b.data());
+    }
+
+    #[test]
+    fn trace_and_fro() {
+        let a = Matrix::from_vec(2, 2, vec![3., 0., 0., 4.]);
+        assert_eq!(a.trace(), 7.0);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn col_set_col_roundtrip() {
+        let mut a = Matrix::zeros(3, 2);
+        a.set_col(1, &[1., 2., 3.]);
+        assert_eq!(a.col(1), vec![1., 2., 3.]);
+        assert_eq!(a.col(0), vec![0., 0., 0.]);
+    }
+
+    #[test]
+    fn matvec_into_no_alloc_matches() {
+        let a = Matrix::from_vec(3, 3, vec![1., 0., 0., 0., 2., 0., 0., 0., 3.]);
+        let v = vec![1., 1., 1.];
+        let mut out = vec![0.0; 3];
+        a.matvec_into(&v, &mut out);
+        assert_eq!(out, vec![1., 2., 3.]);
+    }
+
+    #[test]
+    fn symmetrize_fixes_asymmetry() {
+        let mut a = Matrix::from_vec(2, 2, vec![1., 2., 4., 1.]);
+        a.symmetrize();
+        assert_eq!(a.get(0, 1), 3.0);
+        assert_eq!(a.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn sym_spectral_norm_diag() {
+        let a = Matrix::diag(&[1.0, -7.0, 3.0]);
+        assert!((a.sym_spectral_norm() - 7.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn axpy_mat_accumulates() {
+        let mut a = Matrix::identity(2);
+        let b = Matrix::identity(2);
+        a.axpy_mat(3.0, &b);
+        assert_eq!(a.get(0, 0), 4.0);
+        assert_eq!(a.get(0, 1), 0.0);
+    }
+
+    #[test]
+    fn normalized_col_unit_norm() {
+        let mut a = Matrix::zeros(3, 1);
+        a.set_col(0, &[3., 0., 4.]);
+        let mut c = a.col(0);
+        vec_ops::normalize(&mut c);
+        assert!((vec_ops::norm(&c) - 1.0).abs() < 1e-15);
+    }
+}

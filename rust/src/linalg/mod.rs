@@ -1,0 +1,34 @@
+//! Dense linear-algebra substrate.
+//!
+//! The execution image has no BLAS/LAPACK and no linear-algebra crates, so
+//! everything the paper's algorithms need is implemented here from scratch:
+//!
+//! - [`Matrix`] — row-major dense `f64` matrix with blocked GEMM / GEMV /
+//!   SYRK kernels ([`matrix`]).
+//! - [`vec_ops`] — the hot vector kernels (dot, axpy, normalize) used in
+//!   every communication round.
+//! - [`qr`] — Householder QR (thin), used for random orthonormal bases and
+//!   Lanczos re-orthogonalization checks.
+//! - [`eigen`] — symmetric eigensolver (Householder tridiagonalization +
+//!   implicit-shift QL), which backs the local ERM solutions, the
+//!   centralized baseline, the `C^{-1/2}` preconditioner of Lemma 6 and the
+//!   projection-averaging estimator.
+//! - [`jacobi`] — cyclic Jacobi eigensolver, kept as an independent
+//!   cross-check oracle for the QL implementation.
+//! - [`eigen2x2`] — analytic 2x2 eigenvectors (Thm 3 / Thm 5 constructions).
+
+pub mod eigen;
+pub mod eigen2x2;
+pub mod jacobi;
+pub mod matrix;
+pub mod qr;
+pub mod vec_ops;
+
+pub use eigen::SymEigen;
+pub use matrix::Matrix;
+
+/// Machine-epsilon-scale tolerance used by the iterative eigensolvers.
+pub const EIG_TOL: f64 = 1e-13;
+
+/// Relative tolerance for "is this basically equal" test assertions.
+pub const TEST_RTOL: f64 = 1e-9;

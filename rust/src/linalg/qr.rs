@@ -1,0 +1,118 @@
+//! Householder QR decomposition (thin form).
+//!
+//! Used for (a) generating random orthonormal matrices `U` for the paper's
+//! §5 covariance model (QR of a gaussian matrix gives a Haar-ish basis),
+//! and (b) re-orthogonalization checks of the distributed Lanczos basis.
+
+use super::matrix::Matrix;
+use super::vec_ops;
+
+/// Thin QR of an `m x n` matrix (`m >= n`): returns `(Q, R)` with
+/// `Q: m x n` having orthonormal columns and `R: n x n` upper triangular,
+/// such that `A = Q R`. The decomposition is sign-normalized so every
+/// diagonal entry of `R` is non-negative (this makes the `Q` of a gaussian
+/// matrix exactly Haar-distributed).
+pub fn qr_thin(a: &Matrix) -> (Matrix, Matrix) {
+    let (m, n) = (a.rows(), a.cols());
+    assert!(m >= n, "qr_thin requires rows >= cols");
+    // Modified Gram-Schmidt with one re-orthogonalization pass: simpler
+    // than Householder accumulation for the thin form and, with the second
+    // pass, equally stable for our sizes (d <= ~1000).
+    let mut q = Matrix::zeros(m, n);
+    let mut r = Matrix::zeros(n, n);
+    for j in 0..n {
+        let mut v = a.col(j);
+        // two MGS passes ("twice is enough" — Kahan)
+        for _pass in 0..2 {
+            for i in 0..j {
+                let qi = q.col(i);
+                let proj = vec_ops::dot(&qi, &v);
+                r.set(i, j, r.get(i, j) + proj);
+                vec_ops::axpy(&mut v, -proj, &qi);
+            }
+        }
+        let nv = vec_ops::norm(&v);
+        r.set(j, j, nv);
+        if nv > 0.0 {
+            vec_ops::scale(&mut v, 1.0 / nv);
+        }
+        q.set_col(j, &v);
+    }
+    // sign normalization: R diagonal >= 0
+    for j in 0..n {
+        if r.get(j, j) < 0.0 {
+            for i in 0..m {
+                q.set(i, j, -q.get(i, j));
+            }
+            for k in j..n {
+                r.set(j, k, -r.get(j, k));
+            }
+        }
+    }
+    (q, r)
+}
+
+/// Orthonormality defect `||Q^T Q - I||_max` — diagnostic used by tests
+/// and the Lanczos re-orthogonalization monitor.
+pub fn orthonormality_defect(q: &Matrix) -> f64 {
+    let qtq = q.transpose().matmul(q);
+    qtq.sub(&Matrix::identity(q.cols())).max_abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_mat(m: usize, n: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed);
+        Matrix::from_vec(m, n, (0..m * n).map(|_| rng.next_gaussian()).collect())
+    }
+
+    #[test]
+    fn qr_reconstructs() {
+        let a = random_mat(12, 7, 1);
+        let (q, r) = qr_thin(&a);
+        let rec = q.matmul(&r);
+        assert!(rec.sub(&a).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn q_orthonormal() {
+        let a = random_mat(30, 30, 2);
+        let (q, _) = qr_thin(&a);
+        assert!(orthonormality_defect(&q) < 1e-11);
+    }
+
+    #[test]
+    fn r_upper_triangular_nonneg_diag() {
+        let a = random_mat(9, 9, 3);
+        let (_, r) = qr_thin(&a);
+        for i in 0..9 {
+            assert!(r.get(i, i) >= 0.0);
+            for j in 0..i {
+                assert_eq!(r.get(i, j), 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn qr_of_orthonormal_is_identity_r() {
+        let a = random_mat(8, 8, 4);
+        let (q, _) = qr_thin(&a);
+        let (q2, r2) = qr_thin(&q);
+        assert!(r2.sub(&Matrix::identity(8)).max_abs() < 1e-10);
+        assert!(q2.sub(&q).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn thin_rectangular_shapes() {
+        let a = random_mat(20, 5, 5);
+        let (q, r) = qr_thin(&a);
+        assert_eq!(q.rows(), 20);
+        assert_eq!(q.cols(), 5);
+        assert_eq!(r.rows(), 5);
+        assert_eq!(r.cols(), 5);
+        assert!(orthonormality_defect(&q) < 1e-11);
+    }
+}

@@ -1,0 +1,182 @@
+//! Hot vector kernels.
+//!
+//! Every communication round of every algorithm in the paper moves and
+//! combines `R^d` vectors; these are the corresponding compute kernels.
+//! All of them are allocation-free where an output buffer can be reused.
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation: breaks the sequential FP dependency
+    // chain so the CPU can keep several FMAs in flight.
+    let chunks = a.len() / 4 * 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    let mut i = 0;
+    while i < chunks {
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+        i += 4;
+    }
+    let mut tail = 0.0;
+    while i < a.len() {
+        tail += a[i] * b[i];
+        i += 1;
+    }
+    (s0 + s1) + (s2 + s3) + tail
+}
+
+/// Euclidean norm.
+#[inline]
+pub fn norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y += s * x`.
+#[inline]
+pub fn axpy(y: &mut [f64], s: f64, x: &[f64]) {
+    debug_assert_eq!(y.len(), x.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += s * xi;
+    }
+}
+
+/// `y = s * y`.
+#[inline]
+pub fn scale(y: &mut [f64], s: f64) {
+    for yi in y.iter_mut() {
+        *yi *= s;
+    }
+}
+
+/// Normalize to unit norm in place; returns the original norm.
+/// A zero vector is left untouched (returns 0).
+#[inline]
+pub fn normalize(v: &mut [f64]) -> f64 {
+    let n = norm(v);
+    if n > 0.0 {
+        let inv = 1.0 / n;
+        scale(v, inv);
+    }
+    n
+}
+
+/// Normalized copy.
+pub fn normalized(v: &[f64]) -> Vec<f64> {
+    let mut out = v.to_vec();
+    normalize(&mut out);
+    out
+}
+
+/// `a - b` as a fresh vector.
+pub fn sub(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x - y).collect()
+}
+
+/// `a + b` as a fresh vector.
+pub fn add(a: &[f64], b: &[f64]) -> Vec<f64> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(x, y)| x + y).collect()
+}
+
+/// Element-wise mean of a non-empty set of equally-sized vectors.
+pub fn mean(vs: &[Vec<f64>]) -> Vec<f64> {
+    assert!(!vs.is_empty(), "mean of zero vectors");
+    let d = vs[0].len();
+    let mut out = vec![0.0; d];
+    for v in vs {
+        assert_eq!(v.len(), d);
+        axpy(&mut out, 1.0, v);
+    }
+    scale(&mut out, 1.0 / vs.len() as f64);
+    out
+}
+
+/// The paper's estimation-error metric: `1 - <w, v1>^2` for unit vectors.
+/// (Sign-invariant: both `w` and `-w` score the same.)
+#[inline]
+pub fn alignment_error(w: &[f64], v1: &[f64]) -> f64 {
+    let c = dot(w, v1);
+    (1.0 - c * c).max(0.0)
+}
+
+/// Copy `src` into `dst` (lengths must match).
+#[inline]
+pub fn copy(dst: &mut [f64], src: &[f64]) {
+    dst.copy_from_slice(src);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_known() {
+        assert_eq!(dot(&[1., 2., 3.], &[4., 5., 6.]), 32.0);
+    }
+
+    #[test]
+    fn dot_unroll_tail_cases() {
+        // lengths 0..9 cover every remainder class of the 4-way unroll
+        for len in 0..9usize {
+            let a: Vec<f64> = (0..len).map(|i| i as f64 + 1.0).collect();
+            let naive: f64 = a.iter().map(|x| x * x).sum();
+            assert_eq!(dot(&a, &a), naive, "len={len}");
+        }
+    }
+
+    #[test]
+    fn norm_345() {
+        assert!((norm(&[3., 4.]) - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn axpy_scale_roundtrip() {
+        let mut y = vec![1., 1.];
+        axpy(&mut y, 2.0, &[1., 2.]);
+        assert_eq!(y, vec![3., 5.]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, vec![1.5, 2.5]);
+    }
+
+    #[test]
+    fn normalize_unit_and_zero() {
+        let mut v = vec![0., 3., 4.];
+        let n = normalize(&mut v);
+        assert_eq!(n, 5.0);
+        assert!((norm(&v) - 1.0).abs() < 1e-15);
+        let mut z = vec![0., 0.];
+        assert_eq!(normalize(&mut z), 0.0);
+        assert_eq!(z, vec![0., 0.]);
+    }
+
+    #[test]
+    fn mean_of_vectors() {
+        let m = mean(&[vec![1., 2.], vec![3., 4.]]);
+        assert_eq!(m, vec![2., 3.]);
+    }
+
+    #[test]
+    fn alignment_error_basics() {
+        let e1 = vec![1., 0.];
+        let e2 = vec![0., 1.];
+        assert!(alignment_error(&e1, &e1) < 1e-15);
+        assert!((alignment_error(&e1, &e2) - 1.0).abs() < 1e-15);
+        // sign invariance
+        let me1 = vec![-1., 0.];
+        assert!(alignment_error(&me1, &e1) < 1e-15);
+        // 45 degrees -> error 1/2
+        let v = normalized(&[1., 1.]);
+        assert!((alignment_error(&v, &e1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_sub_inverse() {
+        let a = vec![1., 2., 3.];
+        let b = vec![0.5, 0.25, -1.0];
+        assert_eq!(sub(&add(&a, &b), &b), a);
+    }
+}

@@ -1,0 +1,186 @@
+//! `dspca` launcher: regenerate any of the paper's experiments from the
+//! command line.
+//!
+//! ```text
+//! dspca figure1   [--dist gaussian|uniform] [--d 300] [--m 25]
+//!                 [--n-list 25,50,...] [--runs 40] [--out results/]
+//! dspca table1    [--d 300] [--m 25] [--n 400] [--runs 12]
+//! dspca lower-bounds [--runs 60]
+//! dspca scaling   [--n-sweep | --m-sweep]
+//! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
+//! dspca selftest
+//! ```
+
+use anyhow::{bail, Result};
+
+use dspca::cluster::OracleSpec;
+use dspca::config::Args;
+use dspca::experiments::{figure1, lower_bounds, scaling, table1};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let out_dir = args.get("out").unwrap_or("results").to_string();
+    match args.command.as_deref() {
+        Some("figure1") => cmd_figure1(&args, &out_dir),
+        Some("table1") => cmd_table1(&args, &out_dir),
+        Some("lower-bounds") => cmd_lower_bounds(&args, &out_dir),
+        Some("scaling") => cmd_scaling(&args, &out_dir),
+        Some("e2e") => cmd_e2e(&args),
+        Some("selftest") => cmd_selftest(),
+        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, e2e, selftest)"),
+        None => {
+            println!(
+                "dspca — Communication-efficient Distributed Stochastic PCA\n\
+                 commands: figure1 | table1 | lower-bounds | scaling | e2e | selftest\n\
+                 see README.md for flags"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn oracle_from(args: &Args) -> OracleSpec {
+    match args.get("artifacts") {
+        Some(dir) => OracleSpec::Pjrt { artifact_dir: dir.to_string() },
+        None => OracleSpec::Native,
+    }
+}
+
+fn cmd_figure1(args: &Args, out_dir: &str) -> Result<()> {
+    let dist = match args.get("dist").unwrap_or("gaussian") {
+        "gaussian" => figure1::Fig1Dist::Gaussian,
+        "uniform" => figure1::Fig1Dist::ScaledUniform,
+        other => bail!("unknown dist '{other}'"),
+    };
+    let defaults = figure1::Fig1Config::default();
+    let cfg = figure1::Fig1Config {
+        d: args.get_usize("d", defaults.d)?,
+        m: args.get_usize("m", defaults.m)?,
+        n_list: args.get_usize_list("n-list", &defaults.n_list)?,
+        runs: args.get_usize("runs", defaults.runs)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        dist,
+        oracle: oracle_from(args),
+    };
+    let table = figure1::run(&cfg)?;
+    let path = format!("{out_dir}/figure1_{:?}.csv", cfg.dist).to_lowercase();
+    table.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_table1(args: &Args, out_dir: &str) -> Result<()> {
+    let defaults = table1::Table1Config::default();
+    let cfg = table1::Table1Config {
+        d: args.get_usize("d", defaults.d)?,
+        m: args.get_usize("m", defaults.m)?,
+        n: args.get_usize("n", defaults.n)?,
+        runs: args.get_usize("runs", defaults.runs)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        oracle: oracle_from(args),
+    };
+    let (rows, table) = table1::run(&cfg)?;
+    let dist = dspca::data::CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x7a).gaussian();
+    let eps = dspca::data::Distribution::eps_erm(&dist, cfg.m, cfg.n, 0.25);
+    println!("{}", table1::render_rows(&rows, eps));
+    let path = format!("{out_dir}/table1.csv");
+    table.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_lower_bounds(args: &Args, out_dir: &str) -> Result<()> {
+    let defaults = lower_bounds::LowerBoundConfig::default();
+    let cfg = lower_bounds::LowerBoundConfig {
+        n_list: args.get_usize_list("n-list", &defaults.n_list)?,
+        m_list: args.get_usize_list("m-list", &defaults.m_list)?,
+        runs: args.get_usize("runs", defaults.runs)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        delta: args.get_f64("delta", defaults.delta)?,
+    };
+    let (t3, slopes) = lower_bounds::run_thm3(&cfg)?;
+    println!("Thm3 naive-averaging slopes in n (expect ~ -1): {slopes:.2?}");
+    t3.write(format!("{out_dir}/thm3_naive.csv"))?;
+    let (t5, slope) = lower_bounds::run_thm5(&cfg)?;
+    println!("Thm5 sign-fixed slope in n (expect -> -2 as bias dominates): {slope:.2}");
+    t5.write(format!("{out_dir}/thm5_signfix.csv"))?;
+    println!("wrote {out_dir}/thm3_naive.csv, {out_dir}/thm5_signfix.csv");
+    Ok(())
+}
+
+fn cmd_scaling(args: &Args, out_dir: &str) -> Result<()> {
+    let defaults = scaling::ScalingConfig::default();
+    let cfg = scaling::ScalingConfig {
+        d: args.get_usize("d", defaults.d)?,
+        m: args.get_usize("m", defaults.m)?,
+        n_list: args.get_usize_list("n-list", &defaults.n_list)?,
+        m_list: args.get_usize_list("m-list", &defaults.m_list)?,
+        n_for_m_sweep: args.get_usize("n", defaults.n_for_m_sweep)?,
+        runs: args.get_usize("runs", defaults.runs)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        eps: args.get_f64("eps", defaults.eps)?,
+        spread_spectrum: !args.get_bool("clustered-spectrum"),
+        delta: args.get_f64("delta", defaults.delta)?,
+    };
+    if !args.get_bool("m-sweep") {
+        let t = scaling::run_n_sweep(&cfg)?;
+        t.write(format!("{out_dir}/scaling_n.csv"))?;
+        println!("wrote {out_dir}/scaling_n.csv");
+    }
+    if !args.get_bool("n-sweep") {
+        let t = scaling::run_m_sweep(&cfg)?;
+        t.write(format!("{out_dir}/scaling_m.csv"))?;
+        println!("wrote {out_dir}/scaling_m.csv");
+    }
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    use dspca::coordinator::{Algorithm, CentralizedErm, ShiftInvert, SignFixedAverage};
+    use dspca::data::{CovModel, Distribution};
+    let artifacts = args
+        .get("artifacts")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| dspca::runtime::default_artifact_dir().to_string_lossy().into_owned());
+    let m = args.get_usize("m", 4)?;
+    let n = args.get_usize("n", 400)?;
+    let d = args.get_usize("d", 64)?;
+    let seed = args.get_u64("seed", 0xe2e)?;
+    let dist = CovModel::paper_fig1(d, seed ^ 1).gaussian();
+    let spec = OracleSpec::Pjrt { artifact_dir: artifacts.clone() };
+    println!("e2e: m={m} n={n} d={d} artifacts={artifacts}");
+    let cluster = dspca::cluster::Cluster::generate_with(&dist, m, n, seed, spec)?;
+    for alg in [&SignFixedAverage as &dyn Algorithm, &CentralizedErm, &ShiftInvert::default()] {
+        let est = alg.run(&cluster)?;
+        println!(
+            "  {:<22} err={:.3e} rounds={} wall={:?}",
+            alg.name(),
+            est.error(dist.v1()),
+            est.comm.rounds,
+            est.wall
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest() -> Result<()> {
+    use dspca::coordinator::{Algorithm, CentralizedErm, SignFixedAverage};
+    use dspca::data::{CovModel, Distribution};
+    let dist = CovModel::paper_fig1(24, 1).gaussian();
+    let c = dspca::cluster::Cluster::generate(&dist, 4, 200, 2)?;
+    let cen = CentralizedErm.run(&c)?;
+    let fix = SignFixedAverage.run(&c)?;
+    println!("selftest: centralized err={:.3e}, sign-fixed err={:.3e}", cen.error(dist.v1()), fix.error(dist.v1()));
+    if cen.error(dist.v1()) > 0.5 {
+        bail!("selftest failed: centralized ERM far from v1");
+    }
+    println!("selftest OK");
+    Ok(())
+}

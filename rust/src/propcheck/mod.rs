@@ -1,0 +1,207 @@
+//! `propcheck` — a minimal property-based testing harness.
+//!
+//! The offline image has no `proptest`/`quickcheck`; this module supplies
+//! the same methodology: run a property over many pseudo-random inputs
+//! drawn from composable generators, with a deterministic per-case seed so
+//! any failure message pinpoints the reproducing seed.
+//!
+//! ```no_run
+//! use dspca::propcheck::{Config, Gen, run};
+//!
+//! run(Config::default().cases(64), "dot is symmetric", |g| {
+//!     let n = g.usize_in(1, 32);
+//!     let a = g.f64_vec(n, -10.0, 10.0);
+//!     let b = g.f64_vec(n, -10.0, 10.0);
+//!     let d1 = dspca::linalg::vec_ops::dot(&a, &b);
+//!     let d2 = dspca::linalg::vec_ops::dot(&b, &a);
+//!     assert!((d1 - d2).abs() <= 1e-12 * (1.0 + d1.abs()));
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        // DSPCA_PROP_CASES scales coverage up in long runs.
+        let cases = std::env::var("DSPCA_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(48);
+        Config { cases, seed: 0x5eed_cafe }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+}
+
+/// Random input source handed to the property closure.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        lo + self.rng.next_below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.next_f64()
+    }
+
+    pub fn f64_vec(&mut self, n: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..n).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn gaussian_vec(&mut self, n: usize) -> Vec<f64> {
+        self.rng.gaussian_vec(n)
+    }
+
+    pub fn unit_vec(&mut self, n: usize) -> Vec<f64> {
+        let mut v = self.rng.gaussian_vec(n);
+        let norm = crate::linalg::vec_ops::normalize(&mut v);
+        if norm == 0.0 {
+            v[0] = 1.0;
+        }
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Random symmetric matrix with entries in `[-scale, scale]`.
+    pub fn sym_matrix(&mut self, n: usize, scale: f64) -> crate::linalg::Matrix {
+        let mut m = crate::linalg::Matrix::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let v = self.f64_in(-scale, scale);
+                m.set(i, j, v);
+                m.set(j, i, v);
+            }
+        }
+        m
+    }
+
+    /// Random PSD matrix `B^T B / n` with controlled scale.
+    pub fn psd_matrix(&mut self, n: usize, scale: f64) -> crate::linalg::Matrix {
+        let b = crate::linalg::Matrix::from_vec(
+            n,
+            n,
+            (0..n * n).map(|_| self.f64_in(-scale, scale)).collect(),
+        );
+        b.syrk_t().scale(1.0 / n as f64)
+    }
+
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `config.cases` random inputs. Panics (failing the
+/// enclosing `#[test]`) with the case index + seed on the first failure.
+pub fn run<F: Fn(&mut Gen) + std::panic::RefUnwindSafe>(config: Config, name: &str, prop: F) {
+    for case in 0..config.cases {
+        let case_seed = config.seed ^ (case as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen { rng: Pcg64::new(case_seed) };
+            prop(&mut g);
+        });
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property '{name}' failed at case {case}/{} (seed {case_seed:#x}): {msg}",
+                config.cases
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run(Config::default().cases(16), "tautology", |g| {
+            let x = g.f64_in(0.0, 1.0);
+            assert!((0.0..=1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let res = std::panic::catch_unwind(|| {
+            run(Config::default().cases(16), "always false", |_g| {
+                panic!("boom");
+            });
+        });
+        let err = res.unwrap_err();
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("always false"));
+        assert!(msg.contains("seed"));
+        assert!(msg.contains("boom"));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first: Vec<f64> = Vec::new();
+        run(Config::default().cases(4).seed(42), "record", |g| {
+            // same seeds -> same draws; record then compare
+            let _ = g.f64_in(0.0, 1.0);
+        });
+        // direct check on Gen determinism
+        for case in 0..4u64 {
+            let seed = 42 ^ case.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let mut g = Gen { rng: Pcg64::new(seed) };
+            first.push(g.f64_in(0.0, 1.0));
+        }
+        for case in 0..4u64 {
+            let seed = 42 ^ case.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let mut g = Gen { rng: Pcg64::new(seed) };
+            assert_eq!(g.f64_in(0.0, 1.0), first[case as usize]);
+        }
+    }
+
+    #[test]
+    fn unit_vec_is_unit() {
+        run(Config::default().cases(32), "unit vec", |g| {
+            let n = g.usize_in(1, 64);
+            let v = g.unit_vec(n);
+            let norm = crate::linalg::vec_ops::norm(&v);
+            assert!((norm - 1.0).abs() < 1e-12);
+        });
+    }
+
+    #[test]
+    fn psd_matrix_is_psd() {
+        run(Config::default().cases(16), "psd", |g| {
+            let n = g.usize_in(1, 10);
+            let m = g.psd_matrix(n, 1.0);
+            let eig = crate::linalg::SymEigen::new(&m);
+            for &v in eig.values() {
+                assert!(v > -1e-10, "negative eigenvalue {v}");
+            }
+        });
+    }
+}

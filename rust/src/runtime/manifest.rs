@@ -1,0 +1,144 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime, parsed with the in-tree JSON parser.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled entry point at a fixed shard shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub n: usize,
+    pub d: usize,
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dtype: String,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Manifest> {
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let version = j.get("version").and_then(Json::as_usize).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let dtype = j
+            .get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("manifest missing dtype"))?
+            .to_string();
+        if dtype != "f64" {
+            bail!("runtime expects f64 artifacts, manifest says {dtype}");
+        }
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing entries"))?
+        {
+            let shape_list = |key: &str| -> Result<Vec<Vec<usize>>> {
+                Ok(e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry missing {key}"))?
+                    .iter()
+                    .map(|s| {
+                        s.as_arr()
+                            .map(|dims| dims.iter().filter_map(Json::as_usize).collect())
+                            .unwrap_or_default()
+                    })
+                    .collect())
+            };
+            entries.push(ManifestEntry {
+                name: e
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                n: e.get("n").and_then(Json::as_usize).ok_or_else(|| anyhow!("entry missing n"))?,
+                d: e.get("d").and_then(Json::as_usize).ok_or_else(|| anyhow!("entry missing d"))?,
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                inputs: shape_list("inputs")?,
+                outputs: shape_list("outputs")?,
+            });
+        }
+        Ok(Manifest { dtype, entries })
+    }
+
+    /// Look up the artifact for an entry point at a shard shape.
+    pub fn find(&self, name: &str, n: usize, d: usize) -> Option<&ManifestEntry> {
+        self.entries.iter().find(|e| e.name == name && e.n == n && e.d == d)
+    }
+
+    /// All distinct shard shapes in the manifest.
+    pub fn shapes(&self) -> Vec<(usize, usize)> {
+        let mut shapes: Vec<(usize, usize)> = self.entries.iter().map(|e| (e.n, e.d)).collect();
+        shapes.sort_unstable();
+        shapes.dedup();
+        shapes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1, "dtype": "f64",
+        "entries": [
+            {"name": "cov_matvec", "n": 400, "d": 64,
+             "file": "cov_matvec_400x64.hlo.txt",
+             "inputs": [[400, 64], [64]], "outputs": [[64]]},
+            {"name": "gram", "n": 200, "d": 32,
+             "file": "gram_200x32.hlo.txt",
+             "inputs": [[200, 32]], "outputs": [[32, 32]]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        let e = m.find("cov_matvec", 400, 64).unwrap();
+        assert_eq!(e.file, "cov_matvec_400x64.hlo.txt");
+        assert_eq!(e.inputs, vec![vec![400, 64], vec![64]]);
+        assert!(m.find("cov_matvec", 401, 64).is_none());
+    }
+
+    #[test]
+    fn shapes_deduped() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.shapes(), vec![(200, 32), (400, 64)]);
+    }
+
+    #[test]
+    fn rejects_wrong_version_or_dtype() {
+        assert!(Manifest::parse(r#"{"version": 2, "dtype": "f64", "entries": []}"#).is_err());
+        assert!(Manifest::parse(r#"{"version": 1, "dtype": "f32", "entries": []}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_entry() {
+        let bad = r#"{"version": 1, "dtype": "f64", "entries": [{"name": "x"}]}"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+}

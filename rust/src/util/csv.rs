@@ -1,0 +1,96 @@
+//! Tiny CSV writer for experiment outputs (`results/*.csv`). The figures
+//! in `EXPERIMENTS.md` are regenerated from these files.
+
+use std::fmt::Write as _;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Clone, Debug)]
+pub struct CsvTable {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl CsvTable {
+    pub fn new(header: &[&str]) -> Self {
+        CsvTable { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row of already-formatted cells. Panics on arity mismatch.
+    pub fn push_row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "csv row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Append a row of numbers (formatted with full precision).
+    pub fn push_nums(&mut self, cells: &[f64]) {
+        self.push_row(cells.iter().map(|v| format!("{v:.12e}")).collect());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render to a CSV string (quoting cells containing commas/quotes).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let esc = |cell: &str| -> String {
+            if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+                format!("\"{}\"", cell.replace('"', "\"\""))
+            } else {
+                cell.to_string()
+            }
+        };
+        let _ = writeln!(out, "{}", self.header.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        }
+        out
+    }
+
+    /// Write to disk, creating parent directories.
+    pub fn write(&self, path: impl AsRef<Path>) -> io::Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            fs::create_dir_all(parent)?;
+        }
+        fs::write(path, self.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut t = CsvTable::new(&["n", "err"]);
+        t.push_row(vec!["100".into(), "0.5".into()]);
+        let s = t.render();
+        assert_eq!(s, "n,err\n100,0.5\n");
+    }
+
+    #[test]
+    fn quoting() {
+        let mut t = CsvTable::new(&["a"]);
+        t.push_row(vec!["x,y\"z".into()]);
+        assert_eq!(t.render(), "a\n\"x,y\"\"z\"\n");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = CsvTable::new(&["a", "b"]);
+        t.push_row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn push_nums_formats() {
+        let mut t = CsvTable::new(&["x", "y"]);
+        t.push_nums(&[1.0, 0.25]);
+        let s = t.render();
+        assert!(s.contains("1.000000000000e0"));
+        assert!(s.contains("2.500000000000e-1"));
+    }
+}

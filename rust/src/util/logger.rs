@@ -1,0 +1,83 @@
+//! Env-driven logger: `DSPCA_LOG=debug|info|warn|off` (default `info`).
+//! The offline image has no `log`/`env_logger` facade wiring worth
+//! pulling in; this covers what the launcher and experiments need.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Off = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: OnceLock<Level> = OnceLock::new();
+static START: OnceLock<Instant> = OnceLock::new();
+
+pub fn level() -> Level {
+    *LEVEL.get_or_init(|| match std::env::var("DSPCA_LOG").as_deref() {
+        Ok("off") => Level::Off,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        _ => Level::Info,
+    })
+}
+
+pub fn log(lvl: Level, msg: std::fmt::Arguments<'_>) {
+    if lvl <= level() && level() != Level::Off {
+        let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+        eprintln!("[{t:9.3}s {}] {msg}", tag(lvl));
+    }
+}
+
+fn tag(lvl: Level) -> &'static str {
+    match lvl {
+        Level::Off => "off",
+        Level::Warn => "WARN",
+        Level::Info => "info",
+        Level::Debug => "dbg ",
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Info, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Debug, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log($crate::util::logger::Level::Warn, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Warn < Level::Info);
+        assert!(Level::Info < Level::Debug);
+        assert!(Level::Off < Level::Warn);
+    }
+
+    #[test]
+    fn log_does_not_panic() {
+        log(Level::Info, format_args!("hello {}", 42));
+        crate::info!("macro {}", 1);
+        crate::debug!("macro {}", 2);
+        crate::warn!("macro {}", 3);
+    }
+}

@@ -1,0 +1,9 @@
+//! Small infrastructure substrates: JSON (the offline image has no
+//! serde), CSV reports, summary statistics, ASCII plotting and a tiny
+//! env-driven logger.
+
+pub mod csv;
+pub mod json;
+pub mod logger;
+pub mod plot;
+pub mod stats;

@@ -1,0 +1,109 @@
+//! ASCII log-log plotter for terminal output of the figure experiments.
+//!
+//! `examples/figure1` prints its series with this (in addition to the CSV
+//! files), so the paper's Figure 1 shape is visible straight from the
+//! terminal.
+
+use std::fmt::Write as _;
+
+/// One named series of `(x, y)` points.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+    pub glyph: char,
+}
+
+impl Series {
+    pub fn new(name: &str, glyph: char) -> Self {
+        Series { name: name.to_string(), points: Vec::new(), glyph }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.points.push((x, y));
+    }
+}
+
+/// Render series on a log-log grid of `width x height` characters.
+/// Non-positive values are dropped (log scale).
+pub fn loglog(series: &[Series], width: usize, height: usize, title: &str) -> String {
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.points.iter())
+        .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+        .cloned()
+        .collect();
+    let mut out = String::new();
+    let _ = writeln!(out, "== {title} ==");
+    if pts.is_empty() {
+        let _ = writeln!(out, "(no positive data)");
+        return out;
+    }
+    let (mut xmin, mut xmax, mut ymin, mut ymax) =
+        (f64::INFINITY, f64::NEG_INFINITY, f64::INFINITY, f64::NEG_INFINITY);
+    for (x, y) in &pts {
+        xmin = xmin.min(x.ln());
+        xmax = xmax.max(x.ln());
+        ymin = ymin.min(y.ln());
+        ymax = ymax.max(y.ln());
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for s in series {
+        for (x, y) in &s.points {
+            if *x <= 0.0 || *y <= 0.0 {
+                continue;
+            }
+            let cx = ((x.ln() - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y.ln() - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let r = height - 1 - cy;
+            grid[r][cx] = s.glyph;
+        }
+    }
+    let _ = writeln!(out, "y: {:.2e} .. {:.2e} (log)", ymin.exp(), ymax.exp());
+    for row in grid {
+        let _ = writeln!(out, "|{}|", row.into_iter().collect::<String>());
+    }
+    let _ = writeln!(out, "x: {:.2e} .. {:.2e} (log)", xmin.exp(), xmax.exp());
+    for s in series {
+        let _ = writeln!(out, "  {} = {}", s.glyph, s.name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_without_panic() {
+        let mut s = Series::new("test", '*');
+        for i in 1..=5 {
+            s.push(i as f64 * 10.0, 1.0 / i as f64);
+        }
+        let text = loglog(&[s], 40, 10, "demo");
+        assert!(text.contains("demo"));
+        assert!(text.contains('*'));
+    }
+
+    #[test]
+    fn empty_series_handled() {
+        let text = loglog(&[Series::new("e", 'x')], 10, 4, "empty");
+        assert!(text.contains("no positive data"));
+    }
+
+    #[test]
+    fn drops_nonpositive_points() {
+        let mut s = Series::new("mixed", 'o');
+        s.push(-1.0, 2.0);
+        s.push(10.0, 1.0);
+        s.push(20.0, 0.0);
+        let text = loglog(&[s], 20, 5, "m");
+        assert!(text.contains('o'));
+    }
+}

@@ -1,0 +1,67 @@
+//! PJRT-path integration: whole algorithms over PJRT-backed workers and
+//! equality against the native path. Skips (with a notice) when
+//! `make artifacts` has not been run.
+
+use dspca::cluster::{Cluster, OracleSpec};
+use dspca::coordinator::{
+    Algorithm, CentralizedErm, DistributedLanczos, HotPotatoOja, ShiftInvert, SignFixedAverage,
+};
+use dspca::data::{CovModel, Distribution};
+use dspca::linalg::vec_ops::alignment_error;
+use dspca::runtime::default_artifact_dir;
+
+fn spec() -> Option<OracleSpec> {
+    let dir = default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(OracleSpec::Pjrt { artifact_dir: dir.to_string_lossy().into_owned() })
+    } else {
+        eprintln!("skipping PJRT integration: run `make artifacts` first");
+        None
+    }
+}
+
+/// Matches an AOT shape from python/compile/aot.py DEFAULT_SHAPES.
+const N: usize = 400;
+const D: usize = 64;
+
+#[test]
+fn pjrt_and_native_paths_agree_per_algorithm() {
+    let Some(pjrt) = spec() else { return };
+    let dist = CovModel::paper_fig1(D, 9).gaussian();
+    let c_pjrt = Cluster::generate_with(&dist, 3, N, 77, pjrt).unwrap();
+    let c_native = Cluster::generate_with(&dist, 3, N, 77, OracleSpec::Native).unwrap();
+    let algs: Vec<Box<dyn Algorithm>> = vec![
+        Box::new(CentralizedErm),
+        Box::new(SignFixedAverage),
+        Box::new(DistributedLanczos::default()),
+        Box::new(HotPotatoOja::default()),
+        Box::new(ShiftInvert::default()),
+    ];
+    for alg in &algs {
+        let a = alg.run(&c_pjrt).unwrap();
+        let b = alg.run(&c_native).unwrap();
+        let e = alignment_error(&a.w, &b.w);
+        assert!(e < 1e-6, "{}: pjrt vs native disagree by {e:.3e}", alg.name());
+        assert_eq!(a.comm.rounds, b.comm.rounds, "{}: round counts differ", alg.name());
+    }
+}
+
+#[test]
+fn pjrt_cluster_full_algorithm_accuracy() {
+    let Some(pjrt) = spec() else { return };
+    let dist = CovModel::paper_fig1(D, 11).gaussian();
+    let c = Cluster::generate_with(&dist, 4, N, 13, pjrt).unwrap();
+    let cen = CentralizedErm.run(&c).unwrap();
+    let sni = ShiftInvert::default().run(&c).unwrap();
+    assert!(alignment_error(&sni.w, &cen.w) < 1e-6);
+    assert!(cen.error(dist.v1()) < 0.05);
+}
+
+#[test]
+fn pjrt_smaller_artifact_shape_also_works() {
+    let Some(pjrt) = spec() else { return };
+    let dist = CovModel::paper_fig1(32, 21).gaussian();
+    let c = Cluster::generate_with(&dist, 3, 200, 23, pjrt).unwrap();
+    let est = SignFixedAverage.run(&c).unwrap();
+    assert!(est.error(dist.v1()) < 0.5);
+}
