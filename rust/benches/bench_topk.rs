@@ -1,0 +1,44 @@
+//! E9 bench — top-`k` block-protocol scaling: the full top-`k` family
+//! swept over `k` (error vs rounds vs k), plus a direct block-vs-column
+//! round-trip latency contrast at k = 8.
+
+use dspca::bench_harness::{fast_mode, scaled, Bencher};
+use dspca::cluster::{Cluster, OracleSpec};
+use dspca::data::CovModel;
+use dspca::experiments::topk::{run, TopkConfig};
+use dspca::linalg::Matrix;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let cfg = TopkConfig {
+        d: if fast_mode() { 24 } else { 60 },
+        m: 8,
+        n: if fast_mode() { 150 } else { 400 },
+        k_list: vec![1, 2, 4, 8],
+        runs: scaled(8).max(2),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let table = run(&cfg)?;
+    b.record("topk/sweep", vec![t0.elapsed().as_secs_f64()]);
+    table.write("results/bench_topk.csv")?;
+
+    // block protocol vs column-wise loop: same numerical product, one
+    // round vs k rounds — measured wall clock per full exchange
+    let (d, m, n, k) = (64usize, 8usize, 400usize, 8usize);
+    let dist = CovModel::paper_fig1(d, 7).gaussian();
+    let cluster = Cluster::generate_with(&dist, m, n, 11, OracleSpec::Native)?;
+    let mut rng = dspca::rng::Pcg64::new(13);
+    let v = Matrix::from_vec(d, k, (0..d * k).map(|_| rng.next_gaussian()).collect());
+    let _ = cluster.dist_matmat(&v)?; // warm
+    b.bench(&format!("dist_matmat/1-round/k={k}/m={m}/{n}x{d}"), || {
+        cluster.dist_matmat(&v).unwrap()
+    });
+    b.bench(&format!("dist_matvec-loop/{k}-rounds/m={m}/{n}x{d}"), || {
+        for c in 0..k {
+            cluster.dist_matvec(&v.col(c)).unwrap();
+        }
+    });
+    println!("wrote results/bench_topk.csv");
+    Ok(())
+}

@@ -8,12 +8,23 @@ pub struct CommStats {
     /// Synchronous communication rounds.
     pub rounds: u64,
     /// Distributed matrix-vector products with `Xhat` (the unit Thm 6
-    /// counts).
+    /// counts). A `d x k` block product ([`dist_matmat`]) bills `k` — it
+    /// is numerically `k` matvecs fused into one round.
+    ///
+    /// [`dist_matmat`]: crate::cluster::Cluster::dist_matmat
     pub matvec_products: u64,
     /// Vectors broadcast leader -> workers.
     pub vectors_broadcast: u64,
     /// Vectors gathered workers -> leader.
     pub vectors_gathered: u64,
+    /// Request **messages** sent leader -> workers. One collective op
+    /// costs exactly one request per live worker regardless of how many
+    /// vectors the message carries — this is what distinguishes the block
+    /// protocol (1 message of `k` vectors) from `k` column-wise calls
+    /// (`k` messages).
+    pub requests_sent: u64,
+    /// Response **messages** received workers -> leader.
+    pub responses_received: u64,
     /// Total bytes moved (8 bytes per f64).
     pub bytes: u64,
 }
@@ -26,6 +37,8 @@ impl CommStats {
         self.matvec_products += other.matvec_products;
         self.vectors_broadcast += other.vectors_broadcast;
         self.vectors_gathered += other.vectors_gathered;
+        self.requests_sent += other.requests_sent;
+        self.responses_received += other.responses_received;
         self.bytes += other.bytes;
     }
 }
@@ -34,8 +47,14 @@ impl std::fmt::Display for CommStats {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "rounds={} matvecs={} bcast={} gathered={} bytes={}",
-            self.rounds, self.matvec_products, self.vectors_broadcast, self.vectors_gathered, self.bytes
+            "rounds={} matvecs={} bcast={} gathered={} reqs={} resps={} bytes={}",
+            self.rounds,
+            self.matvec_products,
+            self.vectors_broadcast,
+            self.vectors_gathered,
+            self.requests_sent,
+            self.responses_received,
+            self.bytes
         )
     }
 }
@@ -46,16 +65,27 @@ mod tests {
 
     #[test]
     fn merge_adds() {
-        let mut a = CommStats { rounds: 1, matvec_products: 2, vectors_broadcast: 3, vectors_gathered: 4, bytes: 5 };
+        let mut a = CommStats {
+            rounds: 1,
+            matvec_products: 2,
+            vectors_broadcast: 3,
+            vectors_gathered: 4,
+            requests_sent: 5,
+            responses_received: 6,
+            bytes: 7,
+        };
         let b = a.clone();
         a.merge(&b);
         assert_eq!(a.rounds, 2);
-        assert_eq!(a.bytes, 10);
+        assert_eq!(a.requests_sent, 10);
+        assert_eq!(a.responses_received, 12);
+        assert_eq!(a.bytes, 14);
     }
 
     #[test]
     fn display_contains_fields() {
         let s = CommStats::default().to_string();
         assert!(s.contains("rounds=0"));
+        assert!(s.contains("reqs=0"));
     }
 }

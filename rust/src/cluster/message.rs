@@ -7,6 +7,11 @@
 pub enum Request {
     /// Compute `Xhat_i v` on the local shard.
     CovMatVec(Vec<f64>),
+    /// Compute the block product `Xhat_i V` for a `d x k` basis `V`
+    /// (row-major `rows x cols` payload). One message carrying `k`
+    /// vectors — the wire format of the block protocol, replacing `k`
+    /// [`Request::CovMatVec`] round-trips with a single exchange.
+    CovMatMat { rows: usize, cols: usize, data: Vec<f64> },
     /// Return the leading eigenvector of the local empirical covariance.
     /// With `unbiased_signs` the worker randomizes the sign with a private
     /// fair coin (Theorem 3's unbiased-ERM premise).

@@ -2,17 +2,30 @@
 //!
 //! The paper's model: `m` machines, machine 1 doubling as the leader.
 //! Per round, the leader may broadcast one vector in `R^d` and every
-//! machine may send one vector back. We reproduce this with one OS thread
-//! per machine, each owning its shard (data never crosses thread
-//! boundaries except through the typed message channel), and **exact
-//! communication accounting** on every primitive:
+//! machine may send one vector back. The **block protocol** generalizes
+//! this to multi-vector rounds for the top-`k` family: a block round
+//! broadcasts one message carrying `k` vectors and gathers one message of
+//! `k` vectors per live machine — still exactly one synchronous exchange,
+//! one request and one response per live worker, billed as `k` vectors of
+//! traffic each way. We reproduce the model with one OS thread per
+//! machine, each owning its shard (data never crosses thread boundaries
+//! except through the typed message channel), and **exact communication
+//! accounting** on every primitive (`live` = machines not killed):
 //!
-//! | primitive | rounds | leader→workers | workers→leader |
-//! |---|---|---|---|
-//! | [`Cluster::dist_matvec`] | 1 | 1 vector | m vectors |
-//! | [`Cluster::local_top_eigvecs`] | 1 | 0 | m vectors |
-//! | [`Cluster::oja_chain`] | m | m handoffs | 1 vector |
-//! | [`Cluster::gram_average`] | 1 | 0 | m × d vectors |
+//! | primitive | rounds | leader→workers | workers→leader | msgs (req / resp) | bytes |
+//! |---|---|---|---|---|---|
+//! | [`Cluster::dist_matvec`] | 1 | 1 vector | live vectors | live / live | 8·d·(live+1) |
+//! | [`Cluster::dist_matmat`] (`d×k`) | 1 | k vectors | live·k vectors | live / live | 8·d·k·(live+1) |
+//! | [`Cluster::local_top_eigvecs`] | 1 | 0 | live vectors | live / live | 8·d·live |
+//! | [`Cluster::local_top_k`] (`k`) | 1 | 0 | live·k vectors | live / live | 8·d·k·live |
+//! | [`Cluster::oja_chain`] | live | live handoffs | live vectors | live / live | 16·d·live |
+//! | [`Cluster::gram_average`] | 1 | 0 | live·d vectors | live / live | 8·d²·live |
+//!
+//! The block-protocol rows are the contract the propcheck properties in
+//! `tests/integration.rs` assert verbatim: one `dist_matmat` (and hence
+//! one block-power iteration at any `k`) costs **exactly one round and
+//! one request/response message per live worker**, where the column-wise
+//! loop it replaces paid `k` rounds and `k` messages per worker.
 //!
 //! The leader *is* machine 1, so reading shard 1 (`leader_shard`) is free —
 //! this matches the paper's preconditioner, built from machine 1's data
@@ -161,7 +174,15 @@ impl Cluster {
     }
 
     /// Send `req` to a set of workers and collect their responses in
-    /// worker order.
+    /// worker order. Bills exactly one request and one response message
+    /// per addressed worker (the message-count half of the accounting
+    /// table in the module docs).
+    ///
+    /// On worker failure, the **full** response set is still drained
+    /// before the error is reported: the response channel is shared by
+    /// every collective, so bailing early would leave the surviving
+    /// workers' replies queued and a later collective would misattribute
+    /// them to its own request.
     fn exchange(&self, workers: &[usize], req: &Request) -> Result<Vec<Response>> {
         for &w in workers {
             self.senders[w]
@@ -169,15 +190,27 @@ impl Cluster {
                 .map_err(|_| anyhow!("worker {w} channel closed"))?;
         }
         let mut responses: Vec<Option<Response>> = vec![None; self.m];
+        let mut first_err: Option<(usize, String)> = None;
         for _ in 0..workers.len() {
             let (id, resp) = self
                 .receiver
                 .recv_timeout(self.timeout)
                 .map_err(|_| anyhow!("timed out waiting for worker response"))?;
             if let Response::Err(e) = resp {
-                bail!("worker {id} failed: {e}");
+                if first_err.is_none() {
+                    first_err = Some((id, e));
+                }
+                continue;
             }
             responses[id] = Some(resp);
+        }
+        {
+            let mut st = self.stats.lock().unwrap();
+            st.requests_sent += workers.len() as u64;
+            st.responses_received += workers.len() as u64;
+        }
+        if let Some((id, e)) = first_err {
+            bail!("worker {id} failed: {e}");
         }
         Ok(workers.iter().map(|&w| responses[w].take().expect("missing response")).collect())
     }
@@ -204,6 +237,44 @@ impl Cluster {
         st.vectors_broadcast += 1;
         st.vectors_gathered += workers.len() as u64;
         st.bytes += (8 * self.d * (workers.len() + 1)) as u64;
+        Ok(acc)
+    }
+
+    /// Distributed covariance **block** product:
+    /// `Xhat V = (1/live) sum_i Xhat_i V` for a `d x k` block `V`.
+    ///
+    /// The core primitive of the top-`k` family (block power / orthogonal
+    /// iteration, block Lanczos, batched deflation): **one round, one
+    /// request/response message per live worker, `k` vectors of traffic
+    /// each way** — where the column-wise loop it replaces paid `k`
+    /// rounds and `k` message round-trips per worker. Numerically
+    /// identical (up to summation order) to `k` [`Cluster::dist_matvec`]
+    /// calls on the columns of `V`; billed as `k` matvec products.
+    pub fn dist_matmat(&self, v: &Matrix) -> Result<Matrix> {
+        assert_eq!(v.rows(), self.d, "dist_matmat: block must be d x k");
+        let k = v.cols();
+        assert!(k >= 1, "dist_matmat: empty block");
+        let workers = self.alive_workers();
+        if workers.is_empty() {
+            bail!("no live workers");
+        }
+        let req = Request::CovMatMat { rows: self.d, cols: k, data: v.data().to_vec() };
+        let resps = self.exchange(&workers, &req)?;
+        let mut acc = Matrix::zeros(self.d, k);
+        for r in resps {
+            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
+            if rows != self.d || cols != k {
+                bail!("dist_matmat: worker returned {rows}x{cols}, expected {}x{k}", self.d);
+            }
+            acc.axpy_mat(1.0, &Matrix::from_vec(rows, cols, data));
+        }
+        acc.scale_mut(1.0 / workers.len() as f64);
+        let mut st = self.stats.lock().unwrap();
+        st.rounds += 1;
+        st.matvec_products += k as u64;
+        st.vectors_broadcast += k as u64;
+        st.vectors_gathered += (workers.len() * k) as u64;
+        st.bytes += (8 * self.d * k * (workers.len() + 1)) as u64;
         Ok(acc)
     }
 
@@ -430,6 +501,150 @@ mod tests {
     fn cannot_kill_leader() {
         let (c, _) = small_cluster(2, 10);
         assert!(c.kill_worker(0).is_err());
+    }
+
+    #[test]
+    fn dist_matmat_matches_columnwise_matvec() {
+        let (c, _) = small_cluster(4, 60);
+        let k = 3;
+        let mut v = Matrix::zeros(8, k);
+        for col in 0..k {
+            let x: Vec<f64> = (0..8).map(|i| ((i + col) as f64 * 0.37).sin()).collect();
+            v.set_col(col, &x);
+        }
+        let blk = c.dist_matmat(&v).unwrap();
+        assert_eq!(blk.rows(), 8);
+        assert_eq!(blk.cols(), k);
+        for col in 0..k {
+            let want = c.dist_matvec(&v.col(col)).unwrap();
+            for i in 0..8 {
+                assert!((blk.get(i, col) - want[i]).abs() < 1e-12, "col {col} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dist_matmat_accounting_matches_table() {
+        let (c, _) = small_cluster(3, 20);
+        let k = 5;
+        let v = Matrix::from_vec(8, k, (0..8 * k).map(|i| i as f64 * 0.01).collect());
+        c.dist_matmat(&v).unwrap();
+        let st = c.stats();
+        assert_eq!(st.rounds, 1);
+        assert_eq!(st.matvec_products, k as u64);
+        assert_eq!(st.vectors_broadcast, k as u64);
+        assert_eq!(st.vectors_gathered, 3 * k as u64);
+        assert_eq!(st.requests_sent, 3);
+        assert_eq!(st.responses_received, 3);
+        assert_eq!(st.bytes, (8 * 8 * k * 4) as u64);
+    }
+
+    #[test]
+    fn columnwise_loop_costs_k_rounds_block_costs_one() {
+        // the protocol contrast the block rewrite exists for
+        let (c, _) = small_cluster(3, 20);
+        let k = 4;
+        let v = Matrix::from_vec(8, k, (0..8 * k).map(|i| (i as f64).cos()).collect());
+        for col in 0..k {
+            c.dist_matvec(&v.col(col)).unwrap();
+        }
+        let loop_stats = c.stats();
+        assert_eq!(loop_stats.rounds, k as u64);
+        assert_eq!(loop_stats.requests_sent, (3 * k) as u64);
+        c.reset_stats();
+        c.dist_matmat(&v).unwrap();
+        let blk_stats = c.stats();
+        assert_eq!(blk_stats.rounds, 1);
+        assert_eq!(blk_stats.requests_sent, 3);
+        // same vector traffic either way
+        assert_eq!(blk_stats.vectors_gathered, loop_stats.vectors_gathered);
+    }
+
+    #[test]
+    fn all_collectives_survive_one_dead_worker() {
+        let (c, _) = small_cluster(4, 30);
+        c.kill_worker(2).unwrap();
+        assert_eq!(c.live(), 3);
+        // gram_average
+        c.reset_stats();
+        let g = c.gram_average().unwrap();
+        assert_eq!(g.rows(), 8);
+        assert_eq!(c.stats().responses_received, 3);
+        // local_top_k
+        c.reset_stats();
+        let locals = c.local_top_k(2).unwrap();
+        assert_eq!(locals.len(), 3);
+        assert_eq!(c.stats().vectors_gathered, 6);
+        // oja_chain: live rounds, one handoff per live machine
+        c.reset_stats();
+        let mut w0 = vec![0.0; 8];
+        w0[0] = 1.0;
+        let w = c.oja_chain(&w0, 0.5, 10.0).unwrap();
+        assert!((crate::linalg::vec_ops::norm(&w) - 1.0).abs() < 1e-9);
+        assert_eq!(c.stats().rounds, 3);
+        assert_eq!(c.stats().requests_sent, 3);
+        // dist_matmat: averages over survivors only
+        c.reset_stats();
+        let v = Matrix::from_vec(8, 2, (0..16).map(|i| i as f64 * 0.1).collect());
+        let blk = c.dist_matmat(&v).unwrap();
+        assert_eq!(blk.cols(), 2);
+        assert_eq!(c.stats().vectors_gathered, 6);
+        assert_eq!(c.stats().requests_sent, 3);
+        // block average equals the survivors' gram average applied to v
+        let want = g.matmul(&v);
+        assert!(blk.sub(&want).max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn all_collectives_survive_two_dead_workers() {
+        let (c, _) = small_cluster(5, 25);
+        c.kill_worker(1).unwrap();
+        c.kill_worker(4).unwrap();
+        assert_eq!(c.live(), 3);
+        let g = c.gram_average().unwrap();
+        assert_eq!(g.cols(), 8);
+        let locals = c.local_top_k(3).unwrap();
+        assert_eq!(locals.len(), 3);
+        let vs = c.local_top_eigvecs(false).unwrap();
+        assert_eq!(vs.len(), 3);
+        let mut w0 = vec![0.0; 8];
+        w0[1] = 1.0;
+        assert!(c.oja_chain(&w0, 0.5, 10.0).is_ok());
+        let v = Matrix::from_vec(8, 2, vec![0.25; 16]);
+        assert!(c.dist_matmat(&v).is_ok());
+        // killing the same worker twice is a no-op, not an error
+        c.kill_worker(1).unwrap();
+        assert_eq!(c.live(), 3);
+    }
+
+    #[test]
+    fn failed_collective_does_not_poison_the_next_one() {
+        // every worker rejects local_top_k(k > d); the error must not
+        // leave stale responses in the shared channel for the next
+        // collective to misread
+        let (c, _) = small_cluster(3, 20);
+        assert!(c.local_top_k(99).is_err());
+        let v = vec![1.0; 8];
+        let a = c.dist_matvec(&v).unwrap();
+        // and the result is the real matvec, not a stale frame
+        let g = c.gram_average().unwrap();
+        let want = g.matvec(&v);
+        for i in 0..8 {
+            assert!((a[i] - want[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn dist_matmat_single_column_agrees_with_matvec() {
+        let (c, _) = small_cluster(2, 15);
+        let x: Vec<f64> = (0..8).map(|i| 1.0 / (i as f64 + 1.0)).collect();
+        let mut v = Matrix::zeros(8, 1);
+        v.set_col(0, &x);
+        let blk = c.dist_matmat(&v).unwrap();
+        let want = c.dist_matvec(&x).unwrap();
+        for i in 0..8 {
+            assert!((blk.get(i, 0) - want[i]).abs() < 1e-14);
+        }
     }
 
     #[test]

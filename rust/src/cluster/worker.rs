@@ -22,6 +22,30 @@ pub trait ComputeOracle {
     /// `Xhat_i v` for the local shard.
     fn cov_matvec(&mut self, shard: &Shard, v: &[f64]) -> anyhow::Result<Vec<f64>>;
 
+    /// Block product `Xhat_i V` for a `d x k` basis `V` — the local half
+    /// of the cluster's block protocol ([`crate::cluster::Cluster::dist_matmat`]).
+    ///
+    /// Default: loop [`ComputeOracle::cov_matvec`] column by column, so
+    /// every oracle is block-capable. Oracles with a batched kernel
+    /// (e.g. [`NativeOracle`]'s blocked shard-level `A^T (A V)`) override
+    /// this to amortize the pass over the shard across all `k` columns.
+    fn cov_matmat(
+        &mut self,
+        shard: &Shard,
+        v: &crate::linalg::Matrix,
+    ) -> anyhow::Result<crate::linalg::Matrix> {
+        let d = shard.d();
+        anyhow::ensure!(v.rows() == d, "cov_matmat: block must be {d} x k, got {} rows", v.rows());
+        let k = v.cols();
+        anyhow::ensure!(k >= 1, "cov_matmat: empty block");
+        let mut out = crate::linalg::Matrix::zeros(d, k);
+        for c in 0..k {
+            let col = self.cov_matvec(shard, &v.col(c))?;
+            out.set_col(c, &col);
+        }
+        Ok(out)
+    }
+
     /// Leading eigenvector of the local empirical covariance (unit norm,
     /// deterministic sign).
     fn local_top_eigvec(&mut self, shard: &Shard) -> anyhow::Result<Vec<f64>>;
@@ -87,6 +111,19 @@ impl ComputeOracle for NativeOracle {
         Ok(out)
     }
 
+    fn cov_matmat(
+        &mut self,
+        shard: &Shard,
+        v: &crate::linalg::Matrix,
+    ) -> anyhow::Result<crate::linalg::Matrix> {
+        let d = shard.d();
+        anyhow::ensure!(v.rows() == d, "cov_matmat: block must be {d} x k, got {} rows", v.rows());
+        anyhow::ensure!(v.cols() >= 1, "cov_matmat: empty block");
+        let mut out = crate::linalg::Matrix::zeros(d, v.cols());
+        shard.cov_matmat_into(v, &mut self.scratch, &mut out);
+        Ok(out)
+    }
+
     fn local_top_eigvec(&mut self, shard: &Shard) -> anyhow::Result<Vec<f64>> {
         Ok(shard.local_top_eigvec())
     }
@@ -148,6 +185,24 @@ pub(super) fn worker_main(
                 Ok(out) => Response::Vector(out),
                 Err(e) => Response::Err(e.to_string()),
             },
+            Request::CovMatMat { rows, cols, data } => {
+                if data.len() != rows * cols {
+                    Response::Err(format!(
+                        "cov_matmat: payload length {} != {rows}x{cols}",
+                        data.len()
+                    ))
+                } else {
+                    let v = crate::linalg::Matrix::from_vec(rows, cols, data);
+                    match oracle.cov_matmat(&shard, &v) {
+                        Ok(out) => Response::Mat {
+                            rows: out.rows(),
+                            cols: out.cols(),
+                            data: out.data().to_vec(),
+                        },
+                        Err(e) => Response::Err(e.to_string()),
+                    }
+                }
+            }
             Request::LocalTopEigvec { unbiased_signs } => {
                 match oracle.local_top_eigvec(&shard) {
                     Ok(mut v) => {
@@ -227,6 +282,52 @@ mod tests {
             vec_ops::alignment_error(&w, &e1) < vec_ops::alignment_error(&w0, &e1),
             "Oja pass should improve alignment"
         );
+    }
+
+    #[test]
+    fn native_oracle_matmat_matches_columnwise_matvec() {
+        let s = shard(40, 6, 11);
+        let mut o = NativeOracle::default();
+        let mut rng = Pcg64::new(12);
+        let k = 3;
+        let v = crate::linalg::Matrix::from_vec(
+            6,
+            k,
+            (0..6 * k).map(|_| rng.next_gaussian()).collect(),
+        );
+        let got = o.cov_matmat(&s, &v).unwrap();
+        assert_eq!(got.rows(), 6);
+        assert_eq!(got.cols(), k);
+        for c in 0..k {
+            let want = o.cov_matvec(&s, &v.col(c)).unwrap();
+            for i in 0..6 {
+                assert!((got.get(i, c) - want[i]).abs() < 1e-12, "col {c} row {i}");
+            }
+        }
+        // the default (loop) implementation must agree with the override
+        struct LoopOracle(NativeOracle);
+        impl ComputeOracle for LoopOracle {
+            fn cov_matvec(&mut self, shard: &Shard, v: &[f64]) -> anyhow::Result<Vec<f64>> {
+                self.0.cov_matvec(shard, v)
+            }
+            fn local_top_eigvec(&mut self, shard: &Shard) -> anyhow::Result<Vec<f64>> {
+                self.0.local_top_eigvec(shard)
+            }
+            fn gram(&mut self, shard: &Shard) -> anyhow::Result<crate::linalg::Matrix> {
+                self.0.gram(shard)
+            }
+        }
+        let mut fallback = LoopOracle(NativeOracle::default());
+        let via_loop = fallback.cov_matmat(&s, &v).unwrap();
+        assert!(got.sub(&via_loop).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_matmat_rejects_bad_shapes() {
+        let s = shard(10, 4, 13);
+        let mut o = NativeOracle::default();
+        let wrong = crate::linalg::Matrix::zeros(3, 2);
+        assert!(o.cov_matmat(&s, &wrong).is_err());
     }
 
     #[test]

@@ -10,6 +10,18 @@
 //! | [`DistributedLanczos`] | §2.2.2 | `O(sqrt(λ1/δ) log(d/ε))` |
 //! | [`HotPotatoOja`] | §2.2.2 ("hot-potato" SGD) | `m` |
 //! | [`ShiftInvert`] | Algorithm 1 + 2, Theorem 6 | `~O(sqrt(1/(δ sqrt n)))` matvecs |
+//!
+//! The top-`k` family (Theorem 7's metric) rides the cluster's **block
+//! protocol** — every iterative step below is one multi-vector round
+//! ([`crate::cluster::Cluster::dist_matmat`]), not `k` scalar rounds:
+//!
+//! | type | analog of | block rounds |
+//! |---|---|---|
+//! | [`CentralizedSubspace`] | [`CentralizedErm`] | 1 (heavy: ships d×d) |
+//! | [`DistributedOrthoIteration`] | [`DistributedPower`] | `O((λk/δk) log(d/ε))`, 1 round/iter |
+//! | [`BlockLanczos`] | [`DistributedLanczos`] | `O(sqrt(λk/δk) log(d/ε))`, 1 round/block |
+//! | [`SubspaceProjectionAverage`] | [`ProjectionAverage`] | 1 |
+//! | [`DeflatedShiftInvert`] | [`ShiftInvert`] | component-0 solve + 1 round/block iter |
 
 mod erm;
 mod lanczos;
@@ -23,7 +35,7 @@ pub mod solvers;
 pub mod subspace;
 
 pub use erm::{CentralizedErm, SingleMachineErm};
-pub use lanczos::DistributedLanczos;
+pub use lanczos::{BlockLanczos, DistributedLanczos};
 pub use oja::HotPotatoOja;
 pub use one_shot::{NaiveAverage, ProjectionAverage, SignFixedAverage};
 pub use power::DistributedPower;

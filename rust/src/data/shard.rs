@@ -122,6 +122,80 @@ impl Shard {
         out
     }
 
+    /// Blocked shard-level block product `Xhat V = A^T (A V) / n` for a
+    /// `d x k` basis `V`, never forming `Xhat`. Both stages stream the
+    /// rows of `A` once with a contiguous `k`-wide multiply-accumulate
+    /// inner loop, so the whole block costs one pass over the shard per
+    /// stage instead of `k` separate streaming matvecs — this is the
+    /// worker-side kernel behind the cluster's one-round block protocol.
+    /// Allocation-free given a caller scratch buffer (`n * k` doubles).
+    pub fn cov_matmat_into(&self, v: &Matrix, scratch_nk: &mut Vec<f64>, out: &mut Matrix) {
+        let (n, d) = (self.n(), self.d());
+        assert_eq!(v.rows(), d, "cov_matmat: block must be d x k");
+        let k = v.cols();
+        assert_eq!(out.rows(), d, "cov_matmat: output must be d x k");
+        assert_eq!(out.cols(), k, "cov_matmat: output must be d x k");
+        if let Some(g) = self.gram.get() {
+            // Gram already materialized: O(d^2 k) product is cheaper —
+            // written straight into `out`, keeping the call allocation-free.
+            out.data_mut().iter_mut().for_each(|x| *x = 0.0);
+            for i in 0..d {
+                let grow = g.row(i);
+                let orow = &mut out.data_mut()[i * k..(i + 1) * k];
+                for (c, &gv) in grow.iter().enumerate() {
+                    if gv == 0.0 {
+                        continue;
+                    }
+                    let vrow = v.row(c);
+                    for (o, &vv) in orow.iter_mut().zip(vrow.iter()) {
+                        *o += gv * vv;
+                    }
+                }
+            }
+            return;
+        }
+        // stage 1: Y = A V (n x k), streaming A row by row
+        scratch_nk.clear();
+        scratch_nk.resize(n * k, 0.0);
+        for r in 0..n {
+            let arow = self.rows.row(r);
+            let yrow = &mut scratch_nk[r * k..(r + 1) * k];
+            for (c, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let vrow = v.row(c);
+                for (y, &vv) in yrow.iter_mut().zip(vrow.iter()) {
+                    *y += a * vv;
+                }
+            }
+        }
+        // stage 2: out = A^T Y / n, streaming A again (axpy per row)
+        out.data_mut().iter_mut().for_each(|x| *x = 0.0);
+        for r in 0..n {
+            let arow = self.rows.row(r);
+            let yrow = &scratch_nk[r * k..(r + 1) * k];
+            for (c, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data_mut()[c * k..(c + 1) * k];
+                for (o, &y) in orow.iter_mut().zip(yrow.iter()) {
+                    *o += a * y;
+                }
+            }
+        }
+        out.scale_mut(1.0 / n as f64);
+    }
+
+    /// Convenience allocating form of [`Shard::cov_matmat_into`].
+    pub fn cov_matmat(&self, v: &Matrix) -> Matrix {
+        let mut scratch = Vec::new();
+        let mut out = Matrix::zeros(self.d(), v.cols());
+        self.cov_matmat_into(v, &mut scratch, &mut out);
+        out
+    }
+
     /// Local ERM: eigendecomposition of the empirical covariance.
     pub fn local_eigen(&self) -> SymEigen {
         SymEigen::new(self.empirical_covariance())
@@ -221,6 +295,51 @@ mod tests {
         for i in 0..9 {
             assert!((got[i] - want[i]).abs() < 1e-10);
         }
+    }
+
+    #[test]
+    fn cov_matmat_matches_columnwise_matvec() {
+        let s = random_shard(35, 7, 21);
+        let mut rng = Pcg64::new(22);
+        let k = 4;
+        let v = crate::linalg::Matrix::from_vec(
+            7,
+            k,
+            (0..7 * k).map(|_| rng.next_gaussian()).collect(),
+        );
+        let got = s.cov_matmat(&v);
+        for c in 0..k {
+            let want = s.cov_matvec(&v.col(c));
+            for i in 0..7 {
+                assert!((got.get(i, c) - want[i]).abs() < 1e-12, "col {c} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn cov_matmat_uses_cached_gram_consistently() {
+        let s = random_shard(25, 5, 23);
+        let cells: Vec<f64> = (0..10).map(|i| i as f64 * 0.3 - 1.0).collect();
+        let v = crate::linalg::Matrix::from_vec(5, 2, cells);
+        let before = s.cov_matmat(&v); // streaming path
+        let _ = s.empirical_covariance(); // materialize the Gram
+        let after = s.cov_matmat(&v); // gram path
+        assert!(before.sub(&after).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn cov_matmat_scratch_reuse_is_clean() {
+        // reusing a dirty scratch buffer must not contaminate results
+        let s = random_shard(20, 4, 24);
+        let v = crate::linalg::Matrix::identity(4);
+        let mut scratch = vec![999.0; 7]; // wrong size AND dirty
+        let mut out = crate::linalg::Matrix::zeros(4, 4);
+        s.cov_matmat_into(&v, &mut scratch, &mut out);
+        assert!(out.sub(s.empirical_covariance()).max_abs() < 1e-12);
+        // second call with the now-larger scratch
+        let mut out2 = crate::linalg::Matrix::zeros(4, 4);
+        s.cov_matmat_into(&v, &mut scratch, &mut out2);
+        assert!(out2.sub(&out).max_abs() < 1e-15);
     }
 
     #[test]

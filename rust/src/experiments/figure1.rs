@@ -154,6 +154,41 @@ mod tests {
         assert!(proj < naive, "projection {proj:.2e} < naive {naive:.2e}");
     }
 
+    /// Tiny-size smoke: every row is schema-complete (1 + 5 means + 5
+    /// sems columns) and every cell parses to a finite number.
+    #[test]
+    fn figure1_smoke_rows_finite_and_schema_complete() {
+        let cfg = Fig1Config {
+            d: 8,
+            m: 3,
+            n_list: vec![30, 60],
+            runs: 2,
+            seed: 11,
+            dist: Fig1Dist::Gaussian,
+            oracle: OracleSpec::Native,
+        };
+        let table = run(&cfg).unwrap();
+        assert_eq!(table.n_rows(), 2);
+        let rendered = table.render();
+        let mut lines = rendered.lines();
+        let header = lines.next().unwrap();
+        assert_eq!(header.split(',').count(), 1 + 2 * ESTIMATORS.len());
+        for line in lines {
+            let cells: Vec<f64> = line.split(',').map(|c| c.parse().unwrap()).collect();
+            assert_eq!(cells.len(), 1 + 2 * ESTIMATORS.len(), "schema-complete row");
+            for cell in &cells {
+                assert!(cell.is_finite(), "non-finite cell {cell} in {line}");
+            }
+            // errors live in [0, 1], sems are non-negative
+            for err in &cells[1..=ESTIMATORS.len()] {
+                assert!((0.0..=1.0).contains(err), "error {err} out of range");
+            }
+            for sem in &cells[ESTIMATORS.len() + 1..] {
+                assert!(*sem >= 0.0);
+            }
+        }
+    }
+
     #[test]
     fn scaled_uniform_variant_runs() {
         let cfg = Fig1Config {

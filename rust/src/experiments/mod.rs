@@ -10,6 +10,7 @@ pub mod figure1;
 pub mod lower_bounds;
 pub mod scaling;
 pub mod table1;
+pub mod topk;
 
 use anyhow::Result;
 

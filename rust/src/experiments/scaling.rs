@@ -144,4 +144,36 @@ mod tests {
         let table = run_m_sweep(&cfg).unwrap();
         assert_eq!(table.n_rows(), 2);
     }
+
+    /// Tiny-size smoke for both sweeps: schema-complete rows, every cell
+    /// finite and positive (matvec counts are at least 1).
+    #[test]
+    fn scaling_smoke_rows_finite_and_schema_complete() {
+        let cfg = ScalingConfig {
+            d: 16,
+            m: 3,
+            n_list: vec![200, 400],
+            m_list: vec![2, 4],
+            n_for_m_sweep: 200,
+            runs: 2,
+            ..Default::default()
+        };
+        let tn = run_n_sweep(&cfg).unwrap();
+        let tm = run_m_sweep(&cfg).unwrap();
+        for (table, cols) in [(&tn, 3usize), (&tm, 4usize)] {
+            let rendered = table.render();
+            let mut lines = rendered.lines();
+            assert_eq!(lines.next().unwrap().split(',').count(), cols);
+            let mut n_rows = 0;
+            for line in lines {
+                let cells: Vec<f64> = line.split(',').map(|c| c.parse().unwrap()).collect();
+                assert_eq!(cells.len(), cols, "schema-complete row: {line}");
+                for cell in &cells {
+                    assert!(cell.is_finite() && *cell > 0.0, "bad cell {cell} in {line}");
+                }
+                n_rows += 1;
+            }
+            assert_eq!(n_rows, 2);
+        }
+    }
 }

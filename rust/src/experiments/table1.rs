@@ -147,4 +147,26 @@ mod tests {
         let rendered = render_rows(&rows, 1e-3);
         assert!(rendered.contains("shift_invert_pcg"));
     }
+
+    /// Tiny-size smoke: all 8 method rows present, every field finite,
+    /// and the CSV is schema-complete (6 columns per row).
+    #[test]
+    fn table1_smoke_rows_finite_and_schema_complete() {
+        let cfg = Table1Config { d: 8, m: 3, n: 80, runs: 2, seed: 9, oracle: OracleSpec::Native };
+        let (rows, table) = run(&cfg).unwrap();
+        assert_eq!(rows.len(), 8);
+        assert_eq!(table.n_rows(), 8);
+        for r in &rows {
+            assert!(!r.method.is_empty());
+            assert!(r.mean_error.is_finite(), "{}", r.method);
+            assert!((0.0..=1.0).contains(&r.mean_error), "{}", r.method);
+            assert!(r.sem.is_finite() && r.sem >= 0.0, "{}", r.method);
+            assert!(r.ratio_vs_centralized.is_finite() && r.ratio_vs_centralized >= 0.0);
+            assert!(r.rounds.is_finite() && r.rounds >= 0.0);
+            assert!(r.matvecs.is_finite() && r.matvecs >= 0.0);
+        }
+        for line in table.render().lines().skip(1) {
+            assert_eq!(line.split(',').count(), 6, "schema-complete row: {line}");
+        }
+    }
 }

@@ -12,13 +12,19 @@
 //! - [`data`] — the paper's synthetic distributions (§5 covariance model,
 //!   Thm 3 / Thm 5 lower-bound constructions) and data shards.
 //! - [`cluster`] — simulated m-machine cluster: worker threads owning
-//!   shards, typed messages, and exact communication-round accounting.
+//!   shards, typed messages, and exact communication-round accounting —
+//!   including the multi-vector **block protocol**
+//!   ([`cluster::Cluster::dist_matmat`]: one round, one message per live
+//!   worker, `k` vectors of traffic) that the top-`k` family rides.
 //! - [`coordinator`] — the paper's algorithms: one-shot averaging
 //!   estimators (Thm 3/4/5), distributed power method / Lanczos,
-//!   hot-potato Oja SGD, and Shift-and-Invert with locally-preconditioned
-//!   linear-system solvers (Alg 1 + Alg 2, Thm 6).
+//!   hot-potato Oja SGD, Shift-and-Invert with locally-preconditioned
+//!   linear-system solvers (Alg 1 + Alg 2, Thm 6), and the Theorem-7
+//!   top-`k` subspace family (block power, block Lanczos, batched
+//!   deflated S&I) on the block protocol.
 //! - [`runtime`] — PJRT bridge: loads AOT-compiled HLO artifacts produced
-//!   by `python/compile/aot.py` and runs them from the worker hot path.
+//!   by `python/compile/aot.py` and runs them from the worker hot path
+//!   (behind the `pjrt` cargo feature; the default build uses a stub).
 //! - [`experiments`] — drivers regenerating every table and figure in the
 //!   paper's evaluation (see `DESIGN.md` §4 for the experiment index).
 //! - [`util`], [`propcheck`], [`bench_harness`] — JSON/CSV/stats,
@@ -53,8 +59,10 @@ pub mod util;
 pub mod prelude {
     pub use crate::cluster::{Cluster, CommStats, OracleSpec};
     pub use crate::coordinator::{
-        Algorithm, CentralizedErm, DistributedLanczos, DistributedPower, Estimate, HotPotatoOja,
+        Algorithm, BlockLanczos, CentralizedErm, CentralizedSubspace, DeflatedShiftInvert,
+        DistributedLanczos, DistributedOrthoIteration, DistributedPower, Estimate, HotPotatoOja,
         NaiveAverage, ProjectionAverage, ShiftInvert, SignFixedAverage, SniConfig,
+        SubspaceEstimate, SubspaceProjectionAverage,
     };
     pub use crate::data::{CovModel, Distribution, Thm3Dist, Thm5Dist};
     pub use crate::linalg::Matrix;

@@ -7,6 +7,7 @@
 //! dspca table1    [--d 300] [--m 25] [--n 400] [--runs 12]
 //! dspca lower-bounds [--runs 60]
 //! dspca scaling   [--n-sweep | --m-sweep]
+//! dspca topk      [--d 60] [--m 8] [--n 400] [--k-list 1,2,4,8] [--runs 8]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
 //! ```
@@ -15,7 +16,7 @@ use anyhow::{bail, Result};
 
 use dspca::cluster::OracleSpec;
 use dspca::config::Args;
-use dspca::experiments::{figure1, lower_bounds, scaling, table1};
+use dspca::experiments::{figure1, lower_bounds, scaling, table1, topk};
 
 fn main() {
     if let Err(e) = run() {
@@ -32,13 +33,14 @@ fn run() -> Result<()> {
         Some("table1") => cmd_table1(&args, &out_dir),
         Some("lower-bounds") => cmd_lower_bounds(&args, &out_dir),
         Some("scaling") => cmd_scaling(&args, &out_dir),
+        Some("topk") => cmd_topk(&args, &out_dir),
         Some("e2e") => cmd_e2e(&args),
         Some("selftest") => cmd_selftest(),
-        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, e2e, selftest)"),
+        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, e2e, selftest)"),
         None => {
             println!(
                 "dspca — Communication-efficient Distributed Stochastic PCA\n\
-                 commands: figure1 | table1 | lower-bounds | scaling | e2e | selftest\n\
+                 commands: figure1 | table1 | lower-bounds | scaling | topk | e2e | selftest\n\
                  see README.md for flags"
             );
             Ok(())
@@ -139,6 +141,24 @@ fn cmd_scaling(args: &Args, out_dir: &str) -> Result<()> {
         t.write(format!("{out_dir}/scaling_m.csv"))?;
         println!("wrote {out_dir}/scaling_m.csv");
     }
+    Ok(())
+}
+
+fn cmd_topk(args: &Args, out_dir: &str) -> Result<()> {
+    let defaults = topk::TopkConfig::default();
+    let cfg = topk::TopkConfig {
+        d: args.get_usize("d", defaults.d)?,
+        m: args.get_usize("m", defaults.m)?,
+        n: args.get_usize("n", defaults.n)?,
+        k_list: args.get_usize_list("k-list", &defaults.k_list)?,
+        runs: args.get_usize("runs", defaults.runs)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        oracle: oracle_from(args),
+    };
+    let table = topk::run(&cfg)?;
+    let path = format!("{out_dir}/topk.csv");
+    table.write(&path)?;
+    println!("wrote {path}");
     Ok(())
 }
 

@@ -4,210 +4,54 @@
 //! Flow: `python/compile/aot.py` lowers the L2 entry points to HLO *text*
 //! (`artifacts/<entry>_<n>x<d>.hlo.txt` + `manifest.json`); this module
 //! parses the manifest ([`Manifest`]), compiles each needed executable
-//! once per (entry, shape) on a `PjRtClient` ([`Engine`]) and exposes the
+//! once per (entry, shape) on a `PjRtClient`, and exposes the
 //! worker-facing [`PjrtOracle`] implementing
 //! [`crate::cluster::ComputeOracle`].
 //!
-//! Design notes:
+//! ## Feature gate
+//!
+//! The PJRT client lives in the `xla` crate (xla_extension bindings),
+//! which the offline build image does not carry. The real engine
+//! therefore sits behind the **`pjrt` cargo feature** (`pjrt.rs`); the
+//! default build compiles a stub (`stub.rs`) whose `PjrtOracle::new`
+//! fails with an actionable error, while the manifest parser and
+//! [`default_artifact_dir`] remain available unconditionally so
+//! artifact-gated tests and benches skip gracefully. Enabling `pjrt`
+//! requires a vendored `xla` crate visible to Cargo.
+//!
+//! Design notes (real engine):
 //! - HLO **text** (not serialized protos) is the interchange format —
 //!   jax >= 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
 //!   rejects; the text parser reassigns ids.
 //! - The PJRT client is **not** `Send`, so each worker thread constructs
 //!   its own oracle from [`crate::cluster::OracleSpec::Pjrt`].
 //! - The shard is uploaded to the device **once** per oracle and reused
-//!   across every request (`execute_b` with device buffers); only the
-//!   `d`-vector argument moves per call. All artifacts are f64
-//!   (`jax_enable_x64`), bit-comparable with the native oracle.
+//!   across every request; only the `d`-vector argument moves per call.
+//!   All artifacts are f64 (`jax_enable_x64`), bit-comparable with the
+//!   native oracle.
+//! - Block requests ([`crate::cluster::Request::CovMatMat`]) are served
+//!   through the [`crate::cluster::ComputeOracle::cov_matmat`] default
+//!   (a worker-local loop over the `cov_matvec` artifact), so the block
+//!   protocol's one-message-per-worker round shape holds on the PJRT
+//!   path too; a fused matmat artifact is an open roadmap item.
 
 mod manifest;
 
 pub use manifest::{Manifest, ManifestEntry};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+#[cfg(feature = "pjrt")]
+mod pjrt;
+#[cfg(feature = "pjrt")]
+pub use pjrt::{Engine, PjrtOracle};
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(not(feature = "pjrt"))]
+mod stub;
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtOracle;
 
-use crate::cluster::ComputeOracle;
-use crate::data::Shard;
-use crate::linalg::Matrix;
+use std::path::PathBuf;
 
-/// Compiled-executable cache on one PJRT client.
-pub struct Engine {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    manifest: Manifest,
-    executables: HashMap<(String, usize, usize), xla::PjRtLoadedExecutable>,
-}
-
-impl Engine {
-    /// Create a CPU PJRT engine over an artifact directory produced by
-    /// `make artifacts`.
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
-        let dir = artifact_dir.as_ref().to_path_buf();
-        let manifest = Manifest::load(dir.join("manifest.json"))
-            .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e}"))?;
-        Ok(Engine { client, dir, manifest, executables: HashMap::new() })
-    }
-
-    pub fn manifest(&self) -> &Manifest {
-        &self.manifest
-    }
-
-    /// PJRT platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Compile (or fetch from cache) the executable for `(name, n, d)`.
-    pub fn executable(
-        &mut self,
-        name: &str,
-        n: usize,
-        d: usize,
-    ) -> Result<&xla::PjRtLoadedExecutable> {
-        let key = (name.to_string(), n, d);
-        if !self.executables.contains_key(&key) {
-            let entry = self.manifest.find(name, n, d).ok_or_else(|| {
-                anyhow!(
-                    "no artifact for {name} at shape {n}x{d} \
-                     (run `make artifacts` with DSPCA_AOT_SHAPES={n}x{d})"
-                )
-            })?;
-            let path = self.dir.join(&entry.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name} {n}x{d}: {e}"))?;
-            self.executables.insert(key.clone(), exe);
-        }
-        Ok(self.executables.get(&key).unwrap())
-    }
-
-    /// Upload a host array as a device buffer.
-    pub fn upload(&self, data: &[f64], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        self.client
-            .buffer_from_host_buffer::<f64>(data, dims, None)
-            .map_err(|e| anyhow!("uploading buffer: {e}"))
-    }
-
-    /// Execute an entry point on device buffers, returning the single
-    /// (tupled) output as a host f64 vector.
-    pub fn run(
-        &mut self,
-        name: &str,
-        n: usize,
-        d: usize,
-        args: &[&xla::PjRtBuffer],
-    ) -> Result<Vec<f64>> {
-        let exe = self.executable(name, n, d)?;
-        let outs = exe.execute_b(args).map_err(|e| anyhow!("executing {name}: {e}"))?;
-        let lit = outs
-            .first()
-            .and_then(|r| r.first())
-            .ok_or_else(|| anyhow!("no output from {name}"))?
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} output: {e}"))?;
-        // aot.py lowers with return_tuple=True -> 1-tuple
-        let out = lit.to_tuple1().map_err(|e| anyhow!("untupling {name} output: {e}"))?;
-        out.to_vec::<f64>().map_err(|e| anyhow!("reading {name} output: {e}"))
-    }
-}
-
-/// Worker compute oracle backed by the PJRT engine.
-///
-/// Holds the shard's device buffer after first use, so the steady-state
-/// request cost is: upload `v` (d doubles) + execute + download result.
-pub struct PjrtOracle {
-    engine: Engine,
-    shard_buf: Option<(usize, usize, xla::PjRtBuffer)>,
-}
-
-impl PjrtOracle {
-    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<PjrtOracle> {
-        Ok(PjrtOracle { engine: Engine::new(artifact_dir)?, shard_buf: None })
-    }
-
-    pub fn engine(&self) -> &Engine {
-        &self.engine
-    }
-
-    fn ensure_shard_buffer(&mut self, shard: &Shard) -> Result<()> {
-        let (n, d) = (shard.n(), shard.d());
-        let fresh = match &self.shard_buf {
-            Some((bn, bd, _)) => *bn != n || *bd != d,
-            None => true,
-        };
-        if fresh {
-            let buf = self.engine.upload(shard.matrix().data(), &[n, d])?;
-            self.shard_buf = Some((n, d, buf));
-        }
-        Ok(())
-    }
-
-    fn run_with_shard(
-        &mut self,
-        name: &str,
-        shard: &Shard,
-        extra: &[xla::PjRtBuffer],
-    ) -> Result<Vec<f64>> {
-        let (n, d) = (shard.n(), shard.d());
-        self.ensure_shard_buffer(shard)?;
-        let shard_buf = &self.shard_buf.as_ref().unwrap().2;
-        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(1 + extra.len());
-        args.push(shard_buf);
-        args.extend(extra.iter());
-        self.engine.run(name, n, d, &args)
-    }
-}
-
-impl ComputeOracle for PjrtOracle {
-    fn cov_matvec(&mut self, shard: &Shard, v: &[f64]) -> Result<Vec<f64>> {
-        if v.len() != shard.d() {
-            bail!("cov_matvec: dim mismatch");
-        }
-        let vbuf = self.engine.upload(v, &[v.len()])?;
-        self.run_with_shard("cov_matvec", shard, &[vbuf])
-    }
-
-    fn local_top_eigvec(&mut self, shard: &Shard) -> Result<Vec<f64>> {
-        // deterministic start vector (any non-orthogonal start converges)
-        let d = shard.d();
-        let v0 = vec![1.0 / (d as f64).sqrt(); d];
-        let vbuf = self.engine.upload(&v0, &[d])?;
-        self.run_with_shard("local_top_eigvec", shard, &[vbuf])
-    }
-
-    fn gram(&mut self, shard: &Shard) -> Result<Matrix> {
-        let d = shard.d();
-        let flat = self.run_with_shard("gram", shard, &[])?;
-        if flat.len() != d * d {
-            bail!("gram: expected {}x{} output, got {} elements", d, d, flat.len());
-        }
-        Ok(Matrix::from_vec(d, d, flat))
-    }
-
-    fn oja_pass(
-        &mut self,
-        shard: &Shard,
-        w: &[f64],
-        eta0: f64,
-        t0: f64,
-        t_start: u64,
-    ) -> Result<Vec<f64>> {
-        let wbuf = self.engine.upload(w, &[w.len()])?;
-        let e = self.engine.upload(&[eta0], &[])?;
-        let t = self.engine.upload(&[t0], &[])?;
-        let ts = self.engine.upload(&[t_start as f64], &[])?;
-        self.run_with_shard("oja_pass", shard, &[wbuf, e, t, ts])
-    }
-}
-
-/// Default artifact directory: `$DSPCA_ARTIFACTS` or `<repo>/artifacts`.
+/// Default artifact directory: `$DSPCA_ARTIFACTS` or `<crate>/artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
     std::env::var("DSPCA_ARTIFACTS")
         .map(PathBuf::from)
@@ -218,112 +62,9 @@ pub fn default_artifact_dir() -> PathBuf {
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> Option<PathBuf> {
+    #[test]
+    fn default_artifact_dir_is_absolute_or_env() {
         let dir = default_artifact_dir();
-        if dir.join("manifest.json").exists() {
-            Some(dir)
-        } else {
-            eprintln!("skipping PJRT test: run `make artifacts` first");
-            None
-        }
-    }
-
-    fn test_shard(n: usize, d: usize, seed: u64) -> Shard {
-        let mut rng = crate::rng::Pcg64::new(seed);
-        Shard::new(n, d, (0..n * d).map(|_| rng.next_gaussian()).collect())
-    }
-
-    #[test]
-    fn engine_loads_manifest() {
-        let Some(dir) = artifacts_dir() else { return };
-        let engine = Engine::new(&dir).unwrap();
-        assert!(!engine.manifest().entries.is_empty());
-        assert!(!engine.platform().is_empty());
-    }
-
-    #[test]
-    fn pjrt_cov_matvec_matches_native() {
-        let Some(dir) = artifacts_dir() else { return };
-        let shard = test_shard(400, 64, 1);
-        let mut oracle = PjrtOracle::new(&dir).unwrap();
-        let mut rng = crate::rng::Pcg64::new(2);
-        let v = rng.gaussian_vec(64);
-        let got = oracle.cov_matvec(&shard, &v).unwrap();
-        let want = shard.cov_matvec(&v);
-        for i in 0..64 {
-            assert!(
-                (got[i] - want[i]).abs() < 1e-10 * (1.0 + want[i].abs()),
-                "mismatch at {i}: {} vs {}",
-                got[i],
-                want[i]
-            );
-        }
-    }
-
-    #[test]
-    fn pjrt_gram_matches_native() {
-        let Some(dir) = artifacts_dir() else { return };
-        let shard = test_shard(200, 32, 3);
-        let mut oracle = PjrtOracle::new(&dir).unwrap();
-        let got = oracle.gram(&shard).unwrap();
-        let want = shard.empirical_covariance();
-        assert!(got.sub(want).max_abs() < 1e-10);
-    }
-
-    #[test]
-    fn pjrt_local_eigvec_matches_native() {
-        let Some(dir) = artifacts_dir() else { return };
-        // a shard with a real eigengap (paper model, delta = 0.2): the
-        // artifact's fixed power-iteration count needs gap^iters to
-        // underflow the tolerance, which a near-degenerate Wishart shard
-        // (iid gaussian) does not give at any reasonable iteration count.
-        let dist = crate::data::CovModel::paper_fig1(64, 5).gaussian();
-        let mut rng = crate::rng::Pcg64::new(55);
-        let shard = crate::data::Distribution::sample_shard(&dist, &mut rng, 400);
-        let mut oracle = PjrtOracle::new(&dir).unwrap();
-        let got = oracle.local_top_eigvec(&shard).unwrap();
-        let want = shard.local_top_eigvec();
-        let align = crate::linalg::vec_ops::alignment_error(&got, &want);
-        assert!(align < 1e-9, "alignment error {align}");
-    }
-
-    #[test]
-    fn pjrt_oja_pass_matches_native() {
-        let Some(dir) = artifacts_dir() else { return };
-        let shard = test_shard(200, 32, 7);
-        let mut oracle = PjrtOracle::new(&dir).unwrap();
-        let mut native = crate::cluster::NativeOracle::default();
-        let mut w0 = vec![0.0; 32];
-        w0[0] = 1.0;
-        let got = oracle.oja_pass(&shard, &w0, 0.5, 10.0, 100).unwrap();
-        let want = native.oja_pass(&shard, &w0, 0.5, 10.0, 100).unwrap();
-        for i in 0..32 {
-            assert!((got[i] - want[i]).abs() < 1e-9, "mismatch at {i}");
-        }
-    }
-
-    #[test]
-    fn missing_shape_reports_helpful_error() {
-        let Some(dir) = artifacts_dir() else { return };
-        let shard = test_shard(3, 3, 9);
-        let mut oracle = PjrtOracle::new(&dir).unwrap();
-        let err = oracle.cov_matvec(&shard, &[1.0, 0.0, 0.0]).unwrap_err();
-        assert!(err.to_string().contains("DSPCA_AOT_SHAPES"), "err: {err}");
-    }
-
-    #[test]
-    fn cluster_end_to_end_with_pjrt_oracle() {
-        let Some(dir) = artifacts_dir() else { return };
-        use crate::cluster::{Cluster, OracleSpec};
-        use crate::coordinator::{Algorithm, CentralizedErm, SignFixedAverage};
-        use crate::data::CovModel;
-        let dist = CovModel::paper_fig1(32, 3).gaussian();
-        let spec = OracleSpec::Pjrt { artifact_dir: dir.to_string_lossy().into_owned() };
-        let c = Cluster::generate_with(&dist, 3, 200, 42, spec).unwrap();
-        let est = SignFixedAverage.run(&c).unwrap();
-        let cen = CentralizedErm.run(&c).unwrap();
-        // both estimators run entirely through PJRT-backed workers
-        let e = crate::linalg::vec_ops::alignment_error(&est.w, &cen.w);
-        assert!(e < 0.2, "pjrt-backed estimators disagree wildly: {e}");
+        assert!(!dir.as_os_str().is_empty());
     }
 }

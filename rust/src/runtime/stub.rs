@@ -1,0 +1,73 @@
+//! Stub PJRT oracle for builds **without** the `pjrt` feature.
+//!
+//! The offline image has no `xla` crate (xla_extension bindings), so the
+//! default build compiles this stub instead of [`super::pjrt`]: the same
+//! public surface ([`PjrtOracle`]), but construction fails with an
+//! actionable error. Everything that only *inspects* artifacts — the
+//! [`super::Manifest`] parser, [`super::default_artifact_dir`] — stays
+//! available unconditionally, so artifact-gated tests and benches skip
+//! gracefully rather than failing to compile.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::ComputeOracle;
+use crate::data::Shard;
+use crate::linalg::Matrix;
+
+/// Placeholder for the PJRT-backed worker oracle. Construction always
+/// fails in this build; see the module docs.
+pub struct PjrtOracle {
+    _private: (),
+}
+
+impl PjrtOracle {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<PjrtOracle> {
+        bail!(
+            "PJRT runtime not compiled in (artifact dir {}): \
+             rebuild with `cargo build --features pjrt` and a vendored `xla` crate",
+            artifact_dir.as_ref().display()
+        )
+    }
+}
+
+impl ComputeOracle for PjrtOracle {
+    fn cov_matvec(&mut self, _shard: &Shard, _v: &[f64]) -> Result<Vec<f64>> {
+        bail!("PJRT runtime not compiled in (`pjrt` feature disabled)")
+    }
+
+    fn local_top_eigvec(&mut self, _shard: &Shard) -> Result<Vec<f64>> {
+        bail!("PJRT runtime not compiled in (`pjrt` feature disabled)")
+    }
+
+    fn gram(&mut self, _shard: &Shard) -> Result<Matrix> {
+        bail!("PJRT runtime not compiled in (`pjrt` feature disabled)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_construction_fails_with_actionable_error() {
+        let err = PjrtOracle::new("artifacts").unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "error should name the feature: {msg}");
+        assert!(msg.contains("artifacts"), "error should name the directory: {msg}");
+    }
+
+    #[test]
+    fn pjrt_oracle_spec_surfaces_stub_error_per_request() {
+        // a cluster built with a PJRT spec must not crash: the worker
+        // surfaces the construction failure on the first request
+        use crate::cluster::{Cluster, OracleSpec};
+        use crate::data::CovModel;
+        let dist = CovModel::paper_fig1(4, 1).gaussian();
+        let spec = OracleSpec::Pjrt { artifact_dir: "does-not-exist".into() };
+        let c = Cluster::generate_with(&dist, 2, 10, 3, spec).unwrap();
+        let err = c.dist_matvec(&[1.0, 0.0, 0.0, 0.0]).unwrap_err();
+        assert!(err.to_string().contains("failed"), "unexpected error: {err}");
+    }
+}

@@ -1,13 +1,18 @@
 //! Cross-module integration tests: full pipelines over the public API,
-//! plus property-based invariants on the coordinator (propcheck).
+//! plus property-based invariants on the coordinator and the cluster's
+//! block protocol (propcheck).
 
 use dspca::cluster::Cluster;
+use dspca::coordinator::subspace::subspace_error;
 use dspca::coordinator::{
-    Algorithm, CentralizedErm, DistributedLanczos, DistributedPower, HotPotatoOja, NaiveAverage,
-    ProjectionAverage, ShiftInvert, SignFixedAverage, SniConfig,
+    Algorithm, BlockLanczos, CentralizedErm, DistributedLanczos, DistributedOrthoIteration,
+    DistributedPower, HotPotatoOja, NaiveAverage, ProjectionAverage, ShiftInvert,
+    SignFixedAverage, SniConfig,
 };
 use dspca::data::{CovModel, Distribution, Thm3Dist};
+use dspca::linalg::qr::{orthonormality_defect, qr_thin};
 use dspca::linalg::vec_ops::{alignment_error, norm};
+use dspca::linalg::Matrix;
 use dspca::propcheck::{run as propcheck, Config};
 
 fn fig1(m: usize, n: usize, d: usize, seed: u64) -> (Cluster, impl Distribution) {
@@ -174,6 +179,198 @@ fn prop_oja_rounds_equal_live_machines() {
         let est = HotPotatoOja::default().run(&c).unwrap();
         assert_eq!(est.comm.rounds, m as u64);
     });
+}
+
+// ---------------------------------------------------------------------
+// Block protocol properties (the contract stated in the accounting table
+// of `cluster/mod.rs`'s module docs)
+// ---------------------------------------------------------------------
+
+fn random_block(g: &mut dspca::propcheck::Gen, d: usize, k: usize) -> Matrix {
+    let mut v = Matrix::zeros(d, k);
+    for c in 0..k {
+        v.set_col(c, &g.gaussian_vec(d));
+    }
+    v
+}
+
+#[test]
+fn prop_dist_matmat_column_agrees_with_dist_matvec() {
+    // dist_matmat(V) must agree column-for-column with k independent
+    // dist_matvec calls, to 1e-12 — including with dead workers
+    propcheck(Config::default().cases(10), "dist_matmat column agreement", |g| {
+        let m = g.usize_in(1, 5);
+        let n = g.usize_in(5, 40);
+        let d = g.usize_in(2, 10);
+        let k = g.usize_in(1, d);
+        let seed = g.rng().next_u64();
+        let dist = CovModel::paper_fig1(d, 1).gaussian();
+        let c = Cluster::generate(&dist, m, n, seed).unwrap();
+        if m > 1 && g.bool() {
+            c.kill_worker(g.usize_in(1, m - 1)).unwrap();
+        }
+        let v = random_block(g, d, k);
+        let blk = c.dist_matmat(&v).unwrap();
+        for col in 0..k {
+            let want = c.dist_matvec(&v.col(col)).unwrap();
+            for i in 0..d {
+                assert!(
+                    (blk.get(i, col) - want[i]).abs() <= 1e-12 * (1.0 + want[i].abs()),
+                    "col {col} row {i}: {} vs {}",
+                    blk.get(i, col),
+                    want[i]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_block_round_accounting_matches_module_table() {
+    // one dist_matmat: rounds = 1, broadcast = k vectors, gathered =
+    // live*k vectors, one request + one response message per live
+    // worker, bytes = 8*d*k*(live+1) — exactly the dist_matmat row of
+    // the table in cluster/mod.rs
+    propcheck(Config::default().cases(10), "block round accounting", |g| {
+        let m = g.usize_in(1, 6);
+        let d = g.usize_in(2, 12);
+        let k = g.usize_in(1, d);
+        let seed = g.rng().next_u64();
+        let dist = CovModel::paper_fig1(d, 2).gaussian();
+        let c = Cluster::generate(&dist, m, 15, seed).unwrap();
+        let mut live = m;
+        if m > 2 && g.bool() {
+            c.kill_worker(1).unwrap();
+            live -= 1;
+            if m > 3 && g.bool() {
+                c.kill_worker(2).unwrap();
+                live -= 1;
+            }
+        }
+        c.reset_stats();
+        let v = random_block(g, d, k);
+        c.dist_matmat(&v).unwrap();
+        let st = c.stats();
+        assert_eq!(st.rounds, 1);
+        assert_eq!(st.matvec_products, k as u64);
+        assert_eq!(st.vectors_broadcast, k as u64);
+        assert_eq!(st.vectors_gathered, (live * k) as u64);
+        assert_eq!(st.requests_sent, live as u64);
+        assert_eq!(st.responses_received, live as u64);
+        assert_eq!(st.bytes, (8 * d * k * (live + 1)) as u64);
+    });
+}
+
+#[test]
+fn prop_block_power_iteration_at_k8_costs_one_round_one_message_per_live_worker() {
+    // THE acceptance property: one block-power iteration at k = 8 costs
+    // exactly 1 round and 1 request/response per live worker — where the
+    // seed's column-wise loop cost k rounds and k round-trips
+    propcheck(Config::default().cases(8), "k=8 block-power iteration cost", |g| {
+        let k = 8;
+        let m = g.usize_in(2, 6);
+        let d = g.usize_in(k, 16);
+        let seed = g.rng().next_u64();
+        let dist = CovModel::paper_fig1(d, 3).gaussian();
+        let c = Cluster::generate(&dist, m, 20, seed).unwrap();
+        let mut live = m;
+        if m > 2 && g.bool() {
+            c.kill_worker(m - 1).unwrap();
+            live -= 1;
+        }
+        let est = DistributedOrthoIteration { k, max_iters: 1, tol: 0.0, seed: 0xb }
+            .run_mat(&c)
+            .unwrap();
+        assert_eq!(est.info["iters"], 1.0);
+        assert_eq!(est.comm.rounds, 1, "one block iteration must be exactly one round");
+        assert_eq!(est.comm.requests_sent, live as u64, "one request per live worker");
+        assert_eq!(est.comm.responses_received, live as u64, "one response per live worker");
+        assert_eq!(est.comm.vectors_broadcast, k as u64);
+        assert_eq!(est.comm.vectors_gathered, (live * k) as u64);
+    });
+}
+
+#[test]
+fn prop_basis_stays_orthonormal_through_block_power_iterations() {
+    // after every block-power iteration the leader-side basis satisfies
+    // ||W^T W - I||_max < 1e-10
+    propcheck(Config::default().cases(8), "block-power orthonormality", |g| {
+        let m = g.usize_in(1, 4);
+        let d = g.usize_in(3, 12);
+        let k = g.usize_in(1, d.min(6));
+        let seed = g.rng().next_u64();
+        let dist = CovModel::paper_fig1(d, 4).gaussian();
+        let c = Cluster::generate(&dist, m, 25, seed).unwrap();
+        let (mut w, _) = qr_thin(&random_block(g, d, k));
+        for iter in 0..5 {
+            let xw = c.dist_matmat(&w).unwrap();
+            let (q, _) = qr_thin(&xw);
+            let defect = orthonormality_defect(&q);
+            assert!(defect < 1e-10, "iteration {iter}: ||W^T W - I||_max = {defect:.3e}");
+            w = q;
+        }
+    });
+}
+
+#[test]
+fn block_estimators_agree_with_each_other_and_centralized() {
+    use dspca::coordinator::CentralizedSubspace;
+    let (c, _) = fig1(4, 300, 12, 19);
+    let k = 3;
+    let cen = CentralizedSubspace { k }.run_mat(&c).unwrap();
+    let pow = DistributedOrthoIteration::new(k).run_mat(&c).unwrap();
+    let lan = BlockLanczos::new(k).run_mat(&c).unwrap();
+    assert!(subspace_error(&pow.w, &cen.w) < 1e-8);
+    assert!(subspace_error(&lan.w, &cen.w) < 1e-8);
+    assert!(subspace_error(&lan.w, &pow.w) < 1e-8);
+}
+
+#[test]
+fn failure_injection_covers_every_collective() {
+    // after kill_worker, every collective — gram_average, local_top_k,
+    // oja_chain, dist_matmat (and the already-covered dist_matvec /
+    // local_top_eigvecs) — runs over the survivors with exact accounting
+    let (c, _) = fig1(6, 80, 8, 29);
+    c.kill_worker(2).unwrap();
+    c.kill_worker(4).unwrap();
+    assert_eq!(c.live(), 4);
+
+    c.reset_stats();
+    let g = c.gram_average().unwrap();
+    assert_eq!((g.rows(), g.cols()), (8, 8));
+    assert_eq!(c.stats().requests_sent, 4);
+    assert_eq!(c.stats().vectors_gathered, 4 * 8);
+
+    c.reset_stats();
+    let locals = c.local_top_k(3).unwrap();
+    assert_eq!(locals.len(), 4);
+    assert_eq!(c.stats().vectors_gathered, 4 * 3);
+
+    c.reset_stats();
+    let mut w0 = vec![0.0; 8];
+    w0[0] = 1.0;
+    let w = c.oja_chain(&w0, 0.5, 10.0).unwrap();
+    assert!((norm(&w) - 1.0).abs() < 1e-9);
+    assert_eq!(c.stats().rounds, 4, "oja chain visits only live machines");
+
+    c.reset_stats();
+    let v = Matrix::from_vec(8, 2, (0..16).map(|i| (i as f64 * 0.21).cos()).collect());
+    let blk = c.dist_matmat(&v).unwrap();
+    assert_eq!(blk.cols(), 2);
+    assert_eq!(c.stats().requests_sent, 4);
+    // block result equals the survivors' pooled covariance applied to V
+    let want = g.matmul(&v);
+    assert!(blk.sub(&want).max_abs() < 1e-10);
+
+    // the leader cannot die, ever — even after other failures
+    assert!(c.kill_worker(0).is_err());
+    assert_eq!(c.live(), 4);
+
+    // and the top-k estimators still run end-to-end over the survivors
+    let est = DistributedOrthoIteration::new(2).run_mat(&c).unwrap();
+    assert!(orthonormality_defect(&est.w) < 1e-10);
+    let lan = BlockLanczos::new(2).run_mat(&c).unwrap();
+    assert!(subspace_error(&lan.w, &est.w) < 1e-6);
 }
 
 #[test]
