@@ -1,0 +1,56 @@
+//! E10 bench — the wire layer: codec encode/decode throughput per
+//! precision, collective round-trip latency under each codec, plus the
+//! full error-vs-bytes sweep at reduced size.
+
+use dspca::bench_harness::{fast_mode, scaled, Bencher};
+use dspca::cluster::{Cluster, OracleSpec, WireCodec};
+use dspca::data::CovModel;
+use dspca::experiments::wire::{run, WireConfig, PRECISIONS};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+
+    // codec microbench: transcode (encode + decode + writeback) of a
+    // payload — the per-message overhead the wire layer adds
+    let len = if fast_mode() { 1024 } else { 8192 };
+    let mut rng = dspca::rng::Pcg64::new(3);
+    let payload = rng.gaussian_vec(len);
+    for prec in PRECISIONS {
+        let codec = WireCodec::new(prec);
+        let mut buf = payload.clone();
+        b.bench(&format!("codec/transcode/{}/{len}", prec.label()), || {
+            buf.copy_from_slice(&payload);
+            codec.transcode(&mut buf)
+        });
+    }
+
+    // collective latency under each codec: the quantization tax on a
+    // full leader->workers->leader round
+    let (d, m, n) = if fast_mode() { (32usize, 4usize, 100usize) } else { (64, 8, 400) };
+    let dist = CovModel::paper_fig1(d, 7).gaussian();
+    let cluster = Cluster::generate_with(&dist, m, n, 11, OracleSpec::Native)?;
+    let v = rng.gaussian_vec(d);
+    let _ = cluster.dist_matvec(&v)?; // warm
+    for prec in PRECISIONS {
+        cluster.set_codec(WireCodec::new(prec));
+        b.bench(&format!("dist_matvec/{}/m={m}/{n}x{d}", prec.label()), || {
+            cluster.dist_matvec(&v).unwrap()
+        });
+    }
+    cluster.set_codec(WireCodec::default());
+
+    // the E10 sweep itself, reduced
+    let cfg = WireConfig {
+        d: if fast_mode() { 16 } else { 40 },
+        m: 4,
+        n: if fast_mode() { 100 } else { 300 },
+        runs: scaled(4).max(2),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let table = run(&cfg)?;
+    b.record("wire/sweep", vec![t0.elapsed().as_secs_f64()]);
+    table.write("results/bench_wire.csv")?;
+    println!("wrote results/bench_wire.csv");
+    Ok(())
+}

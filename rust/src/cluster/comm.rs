@@ -23,9 +23,16 @@ pub struct CommStats {
     /// protocol (1 message of `k` vectors) from `k` column-wise calls
     /// (`k` messages).
     pub requests_sent: u64,
-    /// Response **messages** received workers -> leader.
+    /// Response **messages** received workers -> leader. Error replies
+    /// count too: they crossed the wire whether or not the collective
+    /// succeeded.
     pub responses_received: u64,
-    /// Total bytes moved (8 bytes per f64).
+    /// Total payload bytes moved, billed from the wire codec's encoded
+    /// frames ([`WireCodec`]): 8 bytes per f64 word under the default
+    /// lossless codec, 4 under F32, 2 under Bf16. Broadcast frames are
+    /// billed once regardless of fan-out.
+    ///
+    /// [`WireCodec`]: crate::cluster::WireCodec
     pub bytes: u64,
 }
 

@@ -1,6 +1,9 @@
 //! Typed messages between the leader and workers. Everything that crosses
 //! this boundary is what the paper would put on the wire; the accounting
-//! in [`crate::cluster::Cluster`] is driven by these exchanges.
+//! in [`crate::cluster::Cluster`] is driven by these exchanges, and each
+//! message's f64 payload ([`Request::payload_mut`],
+//! [`Response::payload_mut`]) is what the cluster's
+//! [`WireCodec`](crate::cluster::WireCodec) encodes and bills.
 
 /// Leader -> worker requests.
 #[derive(Clone, Debug)]
@@ -28,10 +31,99 @@ pub enum Request {
     Shutdown,
 }
 
+impl Request {
+    /// The f64 payload words this request puts on the wire, if any.
+    /// Scalar hyperparameters and shape headers ride the message envelope
+    /// and are not billed — consistent with the paper's cost model, which
+    /// counts `R^d` vector traffic.
+    pub fn payload(&self) -> Option<&[f64]> {
+        match self {
+            Request::CovMatVec(v) => Some(v),
+            Request::CovMatMat { data, .. } => Some(data),
+            Request::OjaPass { w, .. } => Some(w),
+            Request::LocalTopEigvec { .. }
+            | Request::Gram
+            | Request::LocalTopK { .. }
+            | Request::Shutdown => None,
+        }
+    }
+
+    /// Mutable payload view — the hook the cluster's wire codec passes
+    /// every outgoing request through (encode→decode + billing).
+    pub fn payload_mut(&mut self) -> Option<&mut [f64]> {
+        match self {
+            Request::CovMatVec(v) => Some(v),
+            Request::CovMatMat { data, .. } => Some(data),
+            Request::OjaPass { w, .. } => Some(w),
+            Request::LocalTopEigvec { .. }
+            | Request::Gram
+            | Request::LocalTopK { .. }
+            | Request::Shutdown => None,
+        }
+    }
+}
+
 /// Worker -> leader responses.
 #[derive(Clone, Debug)]
 pub enum Response {
     Vector(Vec<f64>),
     Mat { rows: usize, cols: usize, data: Vec<f64> },
     Err(String),
+}
+
+impl Response {
+    /// The f64 payload words this response puts on the wire, if any
+    /// (error replies carry only their message — no vector payload).
+    pub fn payload(&self) -> Option<&[f64]> {
+        match self {
+            Response::Vector(v) => Some(v),
+            Response::Mat { data, .. } => Some(data),
+            Response::Err(_) => None,
+        }
+    }
+
+    /// Mutable payload view — the hook the cluster's wire codec passes
+    /// every incoming response through (encode→decode + billing).
+    pub fn payload_mut(&mut self) -> Option<&mut [f64]> {
+        match self {
+            Response::Vector(v) => Some(v),
+            Response::Mat { data, .. } => Some(data),
+            Response::Err(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_payloads() {
+        assert_eq!(Request::CovMatVec(vec![1.0, 2.0]).payload().unwrap().len(), 2);
+        assert_eq!(
+            Request::CovMatMat { rows: 2, cols: 3, data: vec![0.0; 6] }.payload().unwrap().len(),
+            6
+        );
+        assert_eq!(
+            Request::OjaPass { w: vec![0.5; 4], eta0: 1.0, t0: 1.0, t_start: 0 }
+                .payload()
+                .unwrap()
+                .len(),
+            4
+        );
+        assert!(Request::Gram.payload().is_none());
+        assert!(Request::LocalTopK { k: 2 }.payload().is_none());
+        assert!(Request::LocalTopEigvec { unbiased_signs: true }.payload().is_none());
+        assert!(Request::Shutdown.payload().is_none());
+    }
+
+    #[test]
+    fn response_payloads() {
+        assert_eq!(Response::Vector(vec![1.0; 3]).payload().unwrap().len(), 3);
+        assert_eq!(Response::Mat { rows: 2, cols: 2, data: vec![0.0; 4] }.payload().unwrap().len(), 4);
+        assert!(Response::Err("boom".into()).payload().is_none());
+        let mut r = Response::Vector(vec![1.0; 3]);
+        r.payload_mut().unwrap()[0] = 7.0;
+        assert_eq!(r.payload().unwrap()[0], 7.0);
+    }
 }

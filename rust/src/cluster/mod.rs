@@ -10,22 +10,38 @@
 //! traffic each way. We reproduce the model with one OS thread per
 //! machine, each owning its shard (data never crosses thread boundaries
 //! except through the typed message channel), and **exact communication
-//! accounting** on every primitive (`live` = machines not killed):
+//! accounting** on every primitive (`live` = machines not killed).
 //!
-//! | primitive | rounds | leader→workers | workers→leader | msgs (req / resp) | bytes |
+//! Every request/response payload passes through the cluster's
+//! [`WireCodec`] (default: lossless f64), and `CommStats.bytes` is the
+//! sum of the **encoded frames' sizes** — billed inside the exchange as
+//! messages are actually sent and received (timeouts and error replies
+//! included), never per-collective `8·d` arithmetic. Writing `B(w)` for
+//! the codec's frame size on `w` payload words (`8w` under the default
+//! F64 codec, `4w` under F32, `2w` under Bf16):
+//!
+//! | primitive | rounds | words leader→workers | words workers→leader | msgs (req / resp) | bytes |
 //! |---|---|---|---|---|---|
-//! | [`Cluster::dist_matvec`] | 1 | 1 vector | live vectors | live / live | 8·d·(live+1) |
-//! | [`Cluster::dist_matmat`] (`d×k`) | 1 | k vectors | live·k vectors | live / live | 8·d·k·(live+1) |
-//! | [`Cluster::local_top_eigvecs`] | 1 | 0 | live vectors | live / live | 8·d·live |
-//! | [`Cluster::local_top_k`] (`k`) | 1 | 0 | live·k vectors | live / live | 8·d·k·live |
-//! | [`Cluster::oja_chain`] | live | live handoffs | live vectors | live / live | 16·d·live |
-//! | [`Cluster::gram_average`] | 1 | 0 | live·d vectors | live / live | 8·d²·live |
+//! | [`Cluster::dist_matvec`] | 1 | d | live·d | live / live | B(d)·(live+1) |
+//! | [`Cluster::dist_matmat`] (`d×k`) | 1 | d·k | live·d·k | live / live | B(d·k)·(live+1) |
+//! | [`Cluster::local_top_eigvecs`] | 1 | 0 | live·d | live / live | B(d)·live |
+//! | [`Cluster::local_top_k`] (`k`) | 1 | 0 | live·d·k | live / live | B(d·k)·live |
+//! | [`Cluster::oja_chain`] | live | live·d (handoffs) | live·d | live / live | 2·B(d)·live |
+//! | [`Cluster::gram_average`] | 1 | 0 | live·d² | live / live | B(d²)·live |
 //!
-//! The block-protocol rows are the contract the propcheck properties in
-//! `tests/integration.rs` assert verbatim: one `dist_matmat` (and hence
-//! one block-power iteration at any `k`) costs **exactly one round and
-//! one request/response message per live worker**, where the column-wise
-//! loop it replaces paid `k` rounds and `k` messages per worker.
+//! With the default lossless codec `B(w) = 8w` and the table reduces to
+//! the original `8·d·…` accounting verbatim. A broadcast frame is billed
+//! once regardless of fan-out (the §2.1 model charges the channel, not
+//! each recipient); per-worker request/response *messages* are billed per
+//! send/arrival. The codec-parameterized rows are the contract the
+//! propcheck properties in `tests/integration.rs` assert for every
+//! collective × every codec.
+//!
+//! The block-protocol rows remain the block contract: one `dist_matmat`
+//! (and hence one block-power iteration at any `k`) costs **exactly one
+//! round and one request/response message per live worker**, where the
+//! column-wise loop it replaces paid `k` rounds and `k` messages per
+//! worker.
 //!
 //! The leader *is* machine 1, so reading shard 1 (`leader_shard`) is free —
 //! this matches the paper's preconditioner, built from machine 1's data
@@ -33,35 +49,67 @@
 
 mod comm;
 mod message;
+mod wire;
 mod worker;
 
 pub use comm::CommStats;
 pub use message::{Request, Response};
+pub use wire::{Frame, WireCodec, WirePrecision};
 pub use worker::{ComputeOracle, NativeOracle, OracleSpec};
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::data::{Distribution, Shard};
 use crate::linalg::Matrix;
 use crate::rng::Pcg64;
+
+/// Sequence number used for control messages (`Shutdown`) that are not
+/// part of any exchange; real exchanges start at 1.
+const CONTROL_SEQ: u64 = 0;
+
+/// How many exchanges an in-flight straggler record survives. A reply
+/// from a timed-out round either shows up within the next few rounds or
+/// never will (its worker is wedged or dead); pruning at this horizon
+/// keeps the record map bounded across long failure-heavy runs. A
+/// straggler older than the horizon is still detected by its sequence
+/// number — it just bills at the currently-installed codec width as a
+/// best effort.
+const INFLIGHT_RETENTION: u64 = 1024;
 
 /// Handle to a running simulated cluster.
 pub struct Cluster {
     m: usize,
     n: usize,
     d: usize,
-    senders: Vec<mpsc::Sender<Request>>,
-    receiver: mpsc::Receiver<(usize, Response)>,
+    senders: Vec<mpsc::Sender<(u64, Request)>>,
+    receiver: mpsc::Receiver<(usize, u64, Response)>,
     handles: Vec<Option<JoinHandle<()>>>,
     leader_shard: Arc<Shard>,
     stats: Mutex<CommStats>,
     dead: Mutex<HashSet<usize>>,
+    /// Wire codec every request/response payload passes through; bytes
+    /// are billed from its encoded frames. Interior-mutable so a
+    /// coordinator can install a lossy codec for the duration of a run
+    /// (see `coordinator::QuantizedPower`).
+    codec: Mutex<WireCodec>,
+    /// Exchange sequence counter. Workers echo the request's sequence
+    /// number on their reply, so a straggler from a timed-out round is
+    /// recognizable (and droppable) instead of being misattributed to a
+    /// later collective on the shared response channel.
+    seq: AtomicU64,
+    /// Codec + outstanding-reply count for exchanges that failed before
+    /// draining (timeout / dead send): lets a straggler reply be billed
+    /// at the width its round actually shipped under — not whatever
+    /// codec happens to be installed when it finally arrives — and then
+    /// forgotten. Empty in every fully-drained (i.e. normal) history.
+    inflight: Mutex<HashMap<u64, (WireCodec, usize)>>,
     /// Max wall time to wait for any single worker response.
     timeout: Duration,
 }
@@ -108,12 +156,12 @@ impl Cluster {
         }
         let m = shards.len();
         let leader_shard = Arc::clone(&shards[0]);
-        let (resp_tx, resp_rx) = mpsc::channel::<(usize, Response)>();
+        let (resp_tx, resp_rx) = mpsc::channel::<(usize, u64, Response)>();
         let mut senders = Vec::with_capacity(m);
         let mut handles = Vec::with_capacity(m);
         let mut seeder = Pcg64::with_stream(seed, 0x3a1e);
         for (i, shard) in shards.into_iter().enumerate() {
-            let (req_tx, req_rx) = mpsc::channel::<Request>();
+            let (req_tx, req_rx) = mpsc::channel::<(u64, Request)>();
             let tx = resp_tx.clone();
             let spec = oracle.clone();
             let wseed = seeder.next_u64();
@@ -134,6 +182,9 @@ impl Cluster {
             leader_shard,
             stats: Mutex::new(CommStats::default()),
             dead: Mutex::new(HashSet::new()),
+            codec: Mutex::new(WireCodec::default()),
+            seq: AtomicU64::new(CONTROL_SEQ),
+            inflight: Mutex::new(HashMap::new()),
             timeout: Duration::from_secs(120),
         })
     }
@@ -168,34 +219,118 @@ impl Cluster {
         *self.stats.lock().unwrap() = CommStats::default();
     }
 
+    /// The wire codec currently installed (default: lossless f64).
+    pub fn codec(&self) -> WireCodec {
+        *self.codec.lock().unwrap()
+    }
+
+    /// Install a wire codec. Every subsequent payload is shipped through
+    /// it: lossy codecs both shrink the billed frames and degrade the
+    /// delivered vectors, exactly as a real quantized wire would.
+    pub fn set_codec(&self, codec: WireCodec) {
+        *self.codec.lock().unwrap() = codec;
+    }
+
     fn alive_workers(&self) -> Vec<usize> {
         let dead = self.dead.lock().unwrap();
         (0..self.m).filter(|i| !dead.contains(i)).collect()
     }
 
     /// Send `req` to a set of workers and collect their responses in
-    /// worker order. Bills exactly one request and one response message
-    /// per addressed worker (the message-count half of the accounting
-    /// table in the module docs).
+    /// worker order. One call is one synchronous round; the round, every
+    /// request message, and every response message are billed **as they
+    /// happen**, so a timed-out or partially-failed collective still
+    /// pays for the traffic it actually generated (the seed billed
+    /// messages only after the drain loop — nothing at all on the
+    /// timeout/send-failure paths — and rounds/bytes only in the
+    /// collectives' success paths, after any worker-error bail).
+    ///
+    /// Payloads pass through the installed [`WireCodec`] in both
+    /// directions: the request payload is encoded once — the §2.1 model
+    /// bills a broadcast against the channel, not per recipient — and
+    /// each response payload on arrival, with `CommStats.bytes` advanced
+    /// by the encoded frames' sizes and the decoded (possibly lossy)
+    /// values delivered onward.
     ///
     /// On worker failure, the **full** response set is still drained
     /// before the error is reported: the response channel is shared by
     /// every collective, so bailing early would leave the surviving
-    /// workers' replies queued and a later collective would misattribute
-    /// them to its own request.
+    /// workers' replies queued. Replies that *do* outlive their exchange
+    /// (a worker stalls past the timeout and answers later) are caught by
+    /// the sequence number every worker echoes: a stale reply is billed
+    /// on arrival — it really crossed the wire, at the codec width its
+    /// own round shipped under (tracked per failed exchange in
+    /// `inflight`) — and then dropped instead of being misattributed to
+    /// the current collective.
     fn exchange(&self, workers: &[usize], req: &Request) -> Result<Vec<Response>> {
+        let codec = self.codec();
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut req = req.clone();
+        let req_bytes = req.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
+        let mut sent = 0usize;
         for &w in workers {
-            self.senders[w]
-                .send(req.clone())
-                .map_err(|_| anyhow!("worker {w} channel closed"))?;
+            if self.senders[w].send((seq, req.clone())).is_err() {
+                if sent > 0 {
+                    // the workers already reached may still reply; leave
+                    // a record so their stragglers bill at this width
+                    let mut infl = self.inflight.lock().unwrap();
+                    infl.retain(|&s, _| s + INFLIGHT_RETENTION > seq);
+                    infl.insert(seq, (codec, sent));
+                }
+                bail!("worker {w} channel closed");
+            }
+            sent += 1;
+            let mut st = self.stats.lock().unwrap();
+            st.requests_sent += 1;
+            if sent == 1 {
+                // the round and its broadcast frame hit the wire with the
+                // first successful send, and are billed once regardless
+                // of fan-out; if no send succeeds, no traffic existed and
+                // nothing is billed
+                st.rounds += 1;
+                st.bytes += req_bytes;
+            }
         }
         let mut responses: Vec<Option<Response>> = vec![None; self.m];
         let mut first_err: Option<(usize, String)> = None;
-        for _ in 0..workers.len() {
-            let (id, resp) = self
-                .receiver
-                .recv_timeout(self.timeout)
-                .map_err(|_| anyhow!("timed out waiting for worker response"))?;
+        let mut got = 0usize;
+        while got < workers.len() {
+            let (id, rseq, mut resp) = match self.receiver.recv_timeout(self.timeout) {
+                Ok(msg) => msg,
+                Err(_) => {
+                    let mut infl = self.inflight.lock().unwrap();
+                    infl.retain(|&s, _| s + INFLIGHT_RETENTION > seq);
+                    infl.insert(seq, (codec, workers.len() - got));
+                    bail!("timed out waiting for worker response");
+                }
+            };
+            if rseq != seq {
+                // straggler from a round that already failed: bill it at
+                // the width its own round shipped under (it did cross
+                // the wire), then drop it
+                let stale_bytes = {
+                    let mut infl = self.inflight.lock().unwrap();
+                    let stale_codec = infl.get(&rseq).map_or(codec, |e| e.0);
+                    if let Some(e) = infl.get_mut(&rseq) {
+                        e.1 -= 1;
+                        if e.1 == 0 {
+                            infl.remove(&rseq);
+                        }
+                    }
+                    resp.payload().map_or(0, |p| stale_codec.frame_bytes(p.len())) as u64
+                };
+                let mut st = self.stats.lock().unwrap();
+                st.responses_received += 1;
+                st.bytes += stale_bytes;
+                continue;
+            }
+            let resp_bytes = resp.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
+            {
+                let mut st = self.stats.lock().unwrap();
+                st.responses_received += 1;
+                st.bytes += resp_bytes;
+            }
+            got += 1;
             if let Response::Err(e) = resp {
                 if first_err.is_none() {
                     first_err = Some((id, e));
@@ -203,11 +338,6 @@ impl Cluster {
                 continue;
             }
             responses[id] = Some(resp);
-        }
-        {
-            let mut st = self.stats.lock().unwrap();
-            st.requests_sent += workers.len() as u64;
-            st.responses_received += workers.len() as u64;
         }
         if let Some((id, e)) = first_err {
             bail!("worker {id} failed: {e}");
@@ -232,11 +362,9 @@ impl Cluster {
         }
         crate::linalg::vec_ops::scale(&mut acc, 1.0 / workers.len() as f64);
         let mut st = self.stats.lock().unwrap();
-        st.rounds += 1;
         st.matvec_products += 1;
         st.vectors_broadcast += 1;
         st.vectors_gathered += workers.len() as u64;
-        st.bytes += (8 * self.d * (workers.len() + 1)) as u64;
         Ok(acc)
     }
 
@@ -270,11 +398,9 @@ impl Cluster {
         }
         acc.scale_mut(1.0 / workers.len() as f64);
         let mut st = self.stats.lock().unwrap();
-        st.rounds += 1;
         st.matvec_products += k as u64;
         st.vectors_broadcast += k as u64;
         st.vectors_gathered += (workers.len() * k) as u64;
-        st.bytes += (8 * self.d * k * (workers.len() + 1)) as u64;
         Ok(acc)
     }
 
@@ -294,9 +420,7 @@ impl Cluster {
             out.push(x);
         }
         let mut st = self.stats.lock().unwrap();
-        st.rounds += 1;
         st.vectors_gathered += workers.len() as u64;
-        st.bytes += (8 * self.d * workers.len()) as u64;
         Ok(out)
     }
 
@@ -318,9 +442,7 @@ impl Cluster {
         }
         acc.scale_mut(1.0 / workers.len() as f64);
         let mut st = self.stats.lock().unwrap();
-        st.rounds += 1;
         st.vectors_gathered += (workers.len() * self.d) as u64;
-        st.bytes += (8 * self.d * self.d * workers.len()) as u64;
         Ok(acc)
     }
 
@@ -338,9 +460,7 @@ impl Cluster {
             out.push(Matrix::from_vec(rows, cols, data));
         }
         let mut st = self.stats.lock().unwrap();
-        st.rounds += 1;
         st.vectors_gathered += (workers.len() * k) as u64;
-        st.bytes += (8 * self.d * k * workers.len()) as u64;
         Ok(out)
     }
 
@@ -363,10 +483,8 @@ impl Cluster {
             w = x.clone();
             t_start += self.n as u64;
             let mut st = self.stats.lock().unwrap();
-            st.rounds += 1;
             st.vectors_broadcast += 1;
             st.vectors_gathered += 1;
-            st.bytes += (16 * self.d) as u64;
         }
         Ok(w)
     }
@@ -383,7 +501,7 @@ impl Cluster {
         let mut dead = self.dead.lock().unwrap();
         if dead.insert(i) {
             // best effort: tell the thread to exit
-            let _ = self.senders[i].send(Request::Shutdown);
+            let _ = self.senders[i].send((CONTROL_SEQ, Request::Shutdown));
         }
         Ok(())
     }
@@ -397,7 +515,7 @@ impl Cluster {
 impl Drop for Cluster {
     fn drop(&mut self) {
         for s in &self.senders {
-            let _ = s.send(Request::Shutdown);
+            let _ = s.send((CONTROL_SEQ, Request::Shutdown));
         }
         for h in &mut self.handles {
             if let Some(h) = h.take() {
@@ -631,6 +749,91 @@ mod tests {
         let want = g.matvec(&v);
         for i in 0..8 {
             assert!((a[i] - want[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn failed_collective_still_bills_its_traffic() {
+        // regression (ISSUE 2 satellite): the seed billed rounds and
+        // bytes only on the collectives' success paths — an exchange
+        // that drained worker errors billed its messages but never its
+        // round, and a timed-out exchange billed nothing at all. The
+        // load-bearing assertion here is rounds == 1; the message
+        // counts pin the billed-as-they-happen behavior alongside it.
+        let (c, _) = small_cluster(3, 20);
+        c.reset_stats();
+        assert!(c.local_top_k(99).is_err());
+        let st = c.stats();
+        assert_eq!(st.rounds, 1, "the round happened even though it failed");
+        assert_eq!(st.requests_sent, 3, "three requests crossed the wire");
+        assert_eq!(st.responses_received, 3, "three Err replies crossed the wire");
+        assert_eq!(st.bytes, 0, "Err replies carry no f64 payload");
+        assert_eq!(st.vectors_gathered, 0, "no vectors were delivered");
+    }
+
+    #[test]
+    fn bytes_are_billed_from_the_codec_encoded_frames() {
+        let (c, _) = small_cluster(3, 20);
+        let v = vec![1.0; 8];
+        for (prec, bpe) in
+            [(WirePrecision::F64, 8u64), (WirePrecision::F32, 4), (WirePrecision::Bf16, 2)]
+        {
+            c.set_codec(WireCodec::new(prec));
+            c.reset_stats();
+            c.dist_matvec(&v).unwrap();
+            // B(d)·(live+1) with d = 8, live = 3
+            assert_eq!(c.stats().bytes, bpe * 8 * 4, "{prec:?}");
+        }
+        c.set_codec(WireCodec::default());
+        assert_eq!(c.codec(), WireCodec::lossless());
+    }
+
+    #[test]
+    fn straggler_reply_bills_at_its_own_rounds_width_and_is_dropped() {
+        // drive the sequence-number path for real: pretend an exchange
+        // (seq 1000) timed out under a bf16 codec with one reply still
+        // in flight, then have worker 1 actually answer it — the way a
+        // stalled worker eventually would. The next collective must
+        // drain the straggler, bill it at *bf16* width (not the current
+        // lossless codec's), and deliver an unpoisoned result.
+        let (c, _) = small_cluster(2, 20);
+        let v = vec![0.3; 8];
+        let g = c.gram_average().unwrap();
+        let want = g.matvec(&v);
+        c.inflight
+            .lock()
+            .unwrap()
+            .insert(1000, (WireCodec::new(WirePrecision::Bf16), 1));
+        c.senders[1].send((1000, Request::CovMatVec(v.clone()))).unwrap();
+        c.reset_stats();
+        let got = c.dist_matvec(&v).unwrap();
+        for i in 0..8 {
+            assert!((got[i] - want[i]).abs() < 1e-10, "straggler poisoned the result");
+        }
+        let st = c.stats();
+        assert_eq!(st.requests_sent, 2);
+        assert_eq!(st.responses_received, 3, "the straggler is billed on arrival");
+        // 8·d·(live+1) for the real round + 2·d for the bf16 straggler
+        assert_eq!(st.bytes, (8 * 8 * 3 + 2 * 8) as u64);
+        assert_eq!(st.vectors_gathered, 2, "only genuine replies are delivered");
+        assert!(c.inflight.lock().unwrap().is_empty(), "straggler record is forgotten");
+    }
+
+    #[test]
+    fn lossy_codec_actually_quantizes_the_wire() {
+        let (c, _) = small_cluster(2, 30);
+        let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.731).sin() * 1.0001 + 0.1).collect();
+        let exact = c.dist_matvec(&x).unwrap();
+        c.set_codec(WireCodec::new(WirePrecision::Bf16));
+        let coarse = c.dist_matvec(&x).unwrap();
+        c.set_codec(WireCodec::default());
+        let again = c.dist_matvec(&x).unwrap();
+        assert_eq!(exact, again, "default codec must be bit-exact");
+        let total: f64 = exact.iter().zip(&coarse).map(|(a, b)| (a - b).abs()).sum();
+        assert!(total > 0.0, "bf16 codec must actually perturb the wire");
+        for (a, b) in exact.iter().zip(&coarse) {
+            // perturbation stays at the 2^-8 relative scale of the codec
+            assert!((a - b).abs() <= 0.1 * (1.0 + a.abs()), "{a} vs {b}");
         }
     }
 

@@ -6,6 +6,12 @@
 //! [`crate::runtime`] executes the AOT-compiled JAX/Pallas artifacts. The
 //! oracle is constructed *inside* the worker thread from an [`OracleSpec`]
 //! (PJRT clients are not `Send`).
+//!
+//! Workers see payloads exactly as the wire delivers them: the leader
+//! passes every request through the cluster's
+//! [`WireCodec`](super::WireCodec) (encode→decode) before it reaches this
+//! loop, so under a lossy codec the shard math runs on the degraded
+//! vectors — no quantization logic lives here.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -154,14 +160,16 @@ impl OracleSpec {
     }
 }
 
-/// Worker event loop.
+/// Worker event loop. The `u64` riding alongside each request is the
+/// leader's exchange sequence number; it is echoed verbatim on the reply
+/// so the leader can drop stragglers from timed-out rounds.
 pub(super) fn worker_main(
     _id: usize,
     shard: Arc<Shard>,
     spec: OracleSpec,
     seed: u64,
-    rx: mpsc::Receiver<Request>,
-    tx: mpsc::Sender<(usize, Response)>,
+    rx: mpsc::Receiver<(u64, Request)>,
+    tx: mpsc::Sender<(usize, u64, Response)>,
 ) {
     let mut rng = Pcg64::with_stream(seed, 0x11c2 + _id as u64);
     let mut oracle: Box<dyn ComputeOracle> = match spec.build() {
@@ -169,16 +177,16 @@ pub(super) fn worker_main(
         Err(e) => {
             // Surface construction failure on the first request instead of
             // crashing the thread silently.
-            while let Ok(req) = rx.recv() {
+            while let Ok((seq, req)) = rx.recv() {
                 if matches!(req, Request::Shutdown) {
                     return;
                 }
-                let _ = tx.send((_id, Response::Err(format!("oracle init failed: {e}"))));
+                let _ = tx.send((_id, seq, Response::Err(format!("oracle init failed: {e}"))));
             }
             return;
         }
     };
-    while let Ok(req) = rx.recv() {
+    while let Ok((seq, req)) = rx.recv() {
         let resp = match req {
             Request::Shutdown => break,
             Request::CovMatVec(v) => match oracle.cov_matvec(&shard, &v) {
@@ -231,7 +239,7 @@ pub(super) fn worker_main(
                 }
             }
         };
-        if tx.send((_id, resp)).is_err() {
+        if tx.send((_id, seq, resp)).is_err() {
             break; // leader gone
         }
     }

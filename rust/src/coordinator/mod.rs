@@ -10,6 +10,7 @@
 //! | [`DistributedLanczos`] | §2.2.2 | `O(sqrt(λ1/δ) log(d/ε))` |
 //! | [`HotPotatoOja`] | §2.2.2 ("hot-potato" SGD) | `m` |
 //! | [`ShiftInvert`] | Algorithm 1 + 2, Theorem 6 | `~O(sqrt(1/(δ sqrt n)))` matvecs |
+//! | [`QuantizedPower`] | §1 bit-complexity contrast (wire-codec ablation) | as power, lossy [`WireCodec`](crate::cluster::WireCodec) |
 //!
 //! The top-`k` family (Theorem 7's metric) rides the cluster's **block
 //! protocol** — every iterative step below is one multi-vector round

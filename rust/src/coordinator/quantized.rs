@@ -3,74 +3,43 @@
 //! The paper's §1 contrasts its round-based cost model with the
 //! bit-complexity line of work ([15, 5]) and argues vector-valued rounds
 //! sidestep bit accounting. This module quantifies the other direction:
-//! if each broadcast/gathered vector is rounded to fewer bits per entry,
-//! how much estimation error does that inject into the distributed power
-//! method, and how many bytes does a round actually need?
+//! if every vector that crosses the network is shipped through a lossy
+//! wire codec, how much estimation error does that inject into the
+//! distributed power method, and how many bytes does a round actually
+//! need?
 //!
-//! Findings (test-asserted): f32 mantissas (24 bits) leave the Figure-1
-//! workload's error indistinguishable from f64 down to `~1e-14` iterate
-//! drift, i.e. the paper's rounds could ship half the bytes for free;
-//! bf16-style 8-bit mantissas put a `~1e-4`-scale floor on the iterate,
-//! visible once the statistical error drops below it. (8 mantissa bits keep relative error under 2^-8.)
+//! Since the wire layer landed, quantization lives in the **cluster**
+//! ([`WireCodec`]): [`QuantizedPower`] is a thin coordinator that
+//! installs the requested codec for the duration of the run and drives
+//! the plain distributed power method. Both directions pass through the
+//! codec (the pre-wire-layer version hand-quantized only the broadcast
+//! while the cluster billed full f64 — its `wire_bytes_per_round` could
+//! never agree with `CommStats.bytes`; now the info value is read back
+//! from the bill itself).
+//!
+//! Findings (test-asserted): f32 frames (24-bit mantissa) leave the
+//! Figure-1 workload's error indistinguishable from f64 at statistical
+//! scale, i.e. the paper's rounds could ship half the bytes for free;
+//! bf16 frames (8-bit exponent, 7 explicit mantissa bits,
+//! round-to-nearest-even via f32 — relative error <= 2^-8 + 2^-24) put
+//! a small floor on the iterate, visible once the statistical error
+//! drops below it.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::cluster::Cluster;
+use crate::cluster::{Cluster, WireCodec};
 use crate::linalg::vec_ops::{alignment_error, normalize};
 use crate::rng::Pcg64;
 
 use super::{instrumented, Algorithm, Estimate};
 
-/// Per-entry precision of every vector that crosses the network.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum WirePrecision {
-    /// Full f64 (the baseline model of the paper).
-    F64,
-    /// Round-trip every entry through f32.
-    F32,
-    /// Keep 8 mantissa bits (bfloat16-style dynamic range).
-    Bf16,
-}
+pub use crate::cluster::WirePrecision;
 
-impl WirePrecision {
-    /// Apply the precision loss to a vector (in place).
-    pub fn quantize(&self, v: &mut [f64]) {
-        match self {
-            WirePrecision::F64 => {}
-            WirePrecision::F32 => {
-                for x in v.iter_mut() {
-                    *x = *x as f32 as f64;
-                }
-            }
-            WirePrecision::Bf16 => {
-                for x in v.iter_mut() {
-                    // zero the low 48 bits of the mantissa: 1 sign + 11
-                    // exponent + ~4 explicit mantissa bits survive beyond
-                    // the implicit one — a deliberately crude 8-bit-class
-                    // wire format
-                    let bits = x.to_bits() & 0xFFFF_F000_0000_0000;
-                    *x = f64::from_bits(bits);
-                }
-            }
-        }
-    }
-
-    /// Bytes per entry on the wire.
-    pub fn bytes_per_entry(&self) -> usize {
-        match self {
-            WirePrecision::F64 => 8,
-            WirePrecision::F32 => 4,
-            WirePrecision::Bf16 => 2,
-        }
-    }
-}
-
-/// Distributed power method with wire quantization of the broadcast
-/// iterate (models compressing the leader->workers direction; the
-/// workers' replies are averaged at the leader in full precision, as a
-/// real allreduce would accumulate in f32/f64 regardless).
+/// Distributed power method run entirely through a lossy wire codec:
+/// broadcasts *and* gathered replies are shipped as encoded frames, and
+/// the byte bill is whatever the codec actually put on the wire.
 #[derive(Clone, Debug)]
 pub struct QuantizedPower {
     pub precision: WirePrecision,
@@ -82,6 +51,41 @@ pub struct QuantizedPower {
 impl QuantizedPower {
     pub fn new(precision: WirePrecision) -> Self {
         QuantizedPower { precision, max_iters: 2_000, tol: 1e-18, seed: 0x9d }
+    }
+
+    fn power_loop(&self, cluster: &Cluster) -> Result<(Vec<f64>, BTreeMap<String, f64>)> {
+        let d = cluster.d();
+        let mut rng = Pcg64::new(self.seed);
+        let mut w = rng.gaussian_vec(d);
+        normalize(&mut w);
+        let mut iters = 0usize;
+        // the last measured iterate drift, reported unconditionally —
+        // including when the very first iteration already meets `tol`
+        // (the pre-fix code skipped the update on the break path and
+        // reported final_drift = 0.0 for a first-iteration break)
+        let mut last_drift = 0.0f64;
+        for _ in 0..self.max_iters {
+            let mut next = cluster.dist_matvec(&w)?;
+            normalize(&mut next);
+            iters += 1;
+            last_drift = alignment_error(&next, &w);
+            w = next;
+            if last_drift <= self.tol {
+                break;
+            }
+        }
+        let st = cluster.stats();
+        let mut info = BTreeMap::new();
+        info.insert("iters".into(), iters as f64);
+        info.insert("final_drift".into(), last_drift);
+        // read back from the bill, not re-derived: every round of this
+        // loop is one dist_matvec, so the per-round cost is uniform and
+        // this value cannot contradict `CommStats`
+        info.insert(
+            "wire_bytes_per_round".into(),
+            if st.rounds > 0 { st.bytes as f64 / st.rounds as f64 } else { 0.0 },
+        );
+        Ok((w, info))
     }
 }
 
@@ -96,33 +100,13 @@ impl Algorithm for QuantizedPower {
 
     fn run(&self, cluster: &Cluster) -> Result<Estimate> {
         instrumented(cluster, || {
-            let d = cluster.d();
-            let mut rng = Pcg64::new(self.seed);
-            let mut w = rng.gaussian_vec(d);
-            normalize(&mut w);
-            let mut iters = 0usize;
-            let mut floor_hit = 0.0f64;
-            for _ in 0..self.max_iters {
-                let mut wire = w.clone();
-                self.precision.quantize(&mut wire);
-                let mut next = cluster.dist_matvec(&wire)?;
-                normalize(&mut next);
-                iters += 1;
-                let drift = alignment_error(&next, &w);
-                w = next;
-                if drift <= self.tol {
-                    break;
-                }
-                floor_hit = drift;
-            }
-            let mut info = BTreeMap::new();
-            info.insert("iters".into(), iters as f64);
-            info.insert("final_drift".into(), floor_hit);
-            info.insert(
-                "wire_bytes_per_round".into(),
-                (self.precision.bytes_per_entry() * d) as f64,
-            );
-            Ok((w, info))
+            // install the lossy codec for the duration of the run, and
+            // restore whatever was there before — even on error
+            let prev = cluster.codec();
+            cluster.set_codec(WireCodec::new(self.precision));
+            let out = self.power_loop(cluster);
+            cluster.set_codec(prev);
+            out
         })
     }
 }
@@ -135,23 +119,6 @@ mod tests {
     use crate::coordinator::Algorithm;
 
     #[test]
-    fn quantize_roundtrips() {
-        let mut v = vec![1.0, -0.3333333333333333, 1e-8, 12345.6789];
-        let orig = v.clone();
-        WirePrecision::F64.quantize(&mut v);
-        assert_eq!(v, orig);
-        WirePrecision::F32.quantize(&mut v);
-        for (a, b) in v.iter().zip(&orig) {
-            assert!((a - b).abs() <= 1e-7 * b.abs().max(1e-30));
-        }
-        WirePrecision::Bf16.quantize(&mut v);
-        for (a, b) in v.iter().zip(&orig) {
-            // 8 explicit mantissa bits -> relative error <= 2^-8
-            assert!((a - b).abs() <= 4e-3 * b.abs().max(1e-30), "{a} vs {b}");
-        }
-    }
-
-    #[test]
     fn f32_wire_is_free_at_statistical_scale() {
         let (c, dist) = fig1_cluster(4, 200, 12, 101);
         use crate::data::Distribution;
@@ -160,11 +127,19 @@ mod tests {
         let e_full = full.error(dist.v1());
         let e_half = half.error(dist.v1());
         // statistical error dominates quantization by orders of magnitude
+        // (both directions now ship f32, hence the 1e-4 rather than the
+        // broadcast-only version's 1e-6)
         assert!(
-            (e_full - e_half).abs() <= 1e-6 * e_full.max(1e-12),
+            (e_full - e_half).abs() <= 1e-4 * e_full.max(1e-12),
             "f32 wire changed the answer: {e_full:.6e} vs {e_half:.6e}"
         );
-        assert_eq!(half.info["wire_bytes_per_round"], 4.0 * 12.0);
+        // the info value is the bill itself: B(d)·(live+1) per round
+        assert_eq!(half.info["wire_bytes_per_round"], (4 * 12 * 5) as f64);
+        assert_eq!(
+            half.info["wire_bytes_per_round"] * half.comm.rounds as f64,
+            half.comm.bytes as f64,
+            "info must agree with CommStats"
+        );
     }
 
     #[test]
@@ -186,10 +161,38 @@ mod tests {
     fn quantized_name_and_accounting() {
         let (c, _) = fig1_cluster(3, 60, 6, 105);
         let est = QuantizedPower::new(WirePrecision::Bf16).run(&c).unwrap();
-        assert_eq!(
-            QuantizedPower::new(WirePrecision::Bf16).name(),
-            "power_wire_bf16"
-        );
+        assert_eq!(QuantizedPower::new(WirePrecision::Bf16).name(), "power_wire_bf16");
         assert_eq!(est.comm.rounds, est.comm.matvec_products);
+        // bf16 frames: B(d)·(live+1) = 2·6·4 bytes per round, exactly
+        assert_eq!(est.comm.bytes, est.comm.rounds * (2 * 6 * 4) as u64);
+    }
+
+    #[test]
+    fn final_drift_reported_on_first_iteration_break() {
+        // regression (ISSUE 2 satellite): with tol = 1.0 every run breaks
+        // on its first iteration; the seed reported final_drift = 0.0 on
+        // that path because the update was skipped before `break`
+        let (c, _) = fig1_cluster(3, 50, 8, 107);
+        let alg = QuantizedPower { precision: WirePrecision::F64, max_iters: 500, tol: 1.0, seed: 0x9d };
+        let est = alg.run(&c).unwrap();
+        assert_eq!(est.info["iters"], 1.0);
+        let drift = est.info["final_drift"];
+        assert!(
+            drift > 0.0 && drift <= 1.0,
+            "first-iteration break must report the measured drift, got {drift}"
+        );
+    }
+
+    #[test]
+    fn codec_is_restored_after_the_run() {
+        let (c, dist) = fig1_cluster(3, 150, 8, 109);
+        use crate::data::Distribution;
+        assert_eq!(c.codec(), WireCodec::lossless());
+        let _ = QuantizedPower::new(WirePrecision::Bf16).run(&c).unwrap();
+        assert_eq!(c.codec(), WireCodec::lossless(), "lossy codec must not leak");
+        // and a subsequent full-precision algorithm is unaffected
+        let cen = CentralizedErm.run(&c).unwrap();
+        assert!(cen.error(dist.v1()) < 0.5);
+        assert_eq!(cen.comm.bytes, (8 * 8 * 8 * 3) as u64, "gram ships full f64 again");
     }
 }

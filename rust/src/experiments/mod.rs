@@ -11,6 +11,7 @@ pub mod lower_bounds;
 pub mod scaling;
 pub mod table1;
 pub mod topk;
+pub mod wire;
 
 use anyhow::Result;
 

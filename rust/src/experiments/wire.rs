@@ -1,0 +1,171 @@
+//! E10 — wire-codec ablation: estimation error vs **actual** bytes per
+//! round for the distributed power method under the F64/F32/Bf16 wire
+//! codecs, on the Figure-1 workload (experiment index in DESIGN.md §4).
+//!
+//! This is the bytes-vs-error axis the wire layer opens: every number in
+//! the `bytes_per_round` column is read back from `CommStats` — which
+//! bills the codec's encoded frames — not estimated from `8·d`
+//! arithmetic, so the CSV is an end-to-end check that the bill and the
+//! wire agree. One row per codec, sweeping the frame width down from
+//! 8 bytes/entry to 2.
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, OracleSpec, WirePrecision};
+use crate::coordinator::{Algorithm, QuantizedPower};
+use crate::data::{CovModel, Distribution};
+use crate::util::csv::CsvTable;
+use crate::util::plot::{loglog, Series};
+use crate::util::stats::Summary;
+
+/// The codecs of the sweep, in decreasing wire width.
+pub const PRECISIONS: [WirePrecision; 3] =
+    [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16];
+
+#[derive(Clone, Debug)]
+pub struct WireConfig {
+    pub d: usize,
+    pub m: usize,
+    pub n: usize,
+    pub runs: usize,
+    pub seed: u64,
+    pub oracle: OracleSpec,
+}
+
+impl Default for WireConfig {
+    fn default() -> Self {
+        WireConfig {
+            d: 60,
+            m: 8,
+            n: 400,
+            runs: super::runs_from_env(8),
+            seed: 0x317e,
+            oracle: OracleSpec::Native,
+        }
+    }
+}
+
+/// Run the sweep; returns a CSV with one row per codec:
+/// `bytes_per_entry, bytes_per_round, err_mean, err_sem, drift_mean,
+/// rounds_mean, total_bytes_mean`.
+pub fn run(cfg: &WireConfig) -> Result<CsvTable> {
+    let dist = CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x3f).gaussian();
+    let mut table = CsvTable::new(&[
+        "bytes_per_entry",
+        "bytes_per_round",
+        "err_mean",
+        "err_sem",
+        "drift_mean",
+        "rounds_mean",
+        "total_bytes_mean",
+    ]);
+    let mut series = Series::new("power", 'q');
+    let n_prec = PRECISIONS.len();
+    let mut errors: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.runs); n_prec];
+    let mut drift = vec![0.0f64; n_prec];
+    let mut rounds = vec![0.0f64; n_prec];
+    let mut bytes = vec![0.0f64; n_prec];
+    let mut bpr = vec![0.0f64; n_prec];
+    for r in 0..cfg.runs {
+        // one cluster per run, shared by all codecs (paired comparison,
+        // same as the Figure-1 and top-k drivers — QuantizedPower
+        // installs and restores the codec around each run)
+        let cluster = Cluster::generate_with(
+            &dist,
+            cfg.m,
+            cfg.n,
+            cfg.seed ^ ((r as u64) << 20),
+            cfg.oracle.clone(),
+        )?;
+        for (i, &prec) in PRECISIONS.iter().enumerate() {
+            let est = QuantizedPower::new(prec).run(&cluster)?;
+            errors[i].push(est.error(dist.v1()));
+            drift[i] += est.info["final_drift"];
+            rounds[i] += est.comm.rounds as f64;
+            bytes[i] += est.comm.bytes as f64;
+            bpr[i] += est.info["wire_bytes_per_round"];
+        }
+    }
+    let k = cfg.runs as f64;
+    for (i, &prec) in PRECISIONS.iter().enumerate() {
+        let summary = Summary::of(&errors[i]);
+        let per_round = bpr[i] / k;
+        series.push(per_round, summary.mean);
+        table.push_nums(&[
+            prec.bytes_per_entry() as f64,
+            per_round,
+            summary.mean,
+            summary.sem,
+            drift[i] / k,
+            rounds[i] / k,
+            bytes[i] / k,
+        ]);
+        crate::info!(
+            "wire {}: bytes/round={per_round:.0} err={:.2e} drift_floor={:.2e}",
+            prec.label(),
+            summary.mean,
+            drift[i] / k
+        );
+    }
+    println!(
+        "{}",
+        loglog(
+            &[series],
+            72,
+            18,
+            &format!("Wire codecs: error vs bytes/round (m={}, n={}, d={})", cfg.m, cfg.n, cfg.d)
+        )
+    );
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_rows(table: &CsvTable) -> Vec<Vec<f64>> {
+        table
+            .render()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|c| c.parse().unwrap()).collect())
+            .collect()
+    }
+
+    fn tiny_cfg() -> WireConfig {
+        WireConfig { d: 8, m: 3, n: 60, runs: 2, seed: 5, oracle: OracleSpec::Native }
+    }
+
+    /// Tiny-size smoke: one schema-complete, finite row per codec.
+    #[test]
+    fn wire_smoke_rows_finite_and_schema_complete() {
+        let table = run(&tiny_cfg()).unwrap();
+        let rows = parse_rows(&table);
+        assert_eq!(rows.len(), PRECISIONS.len());
+        for row in &rows {
+            assert_eq!(row.len(), 7, "schema-complete row");
+            for cell in row {
+                assert!(cell.is_finite(), "non-finite cell {cell}");
+            }
+        }
+        let widths: Vec<f64> = rows.iter().map(|r| r[0]).collect();
+        assert_eq!(widths, vec![8.0, 4.0, 2.0]);
+    }
+
+    /// The honest-bytes signature: bytes per round scale exactly with
+    /// the codec's frame width — B(d)·(live+1) read back from the bill.
+    #[test]
+    fn wire_bytes_per_round_scale_exactly_with_codec_width() {
+        let cfg = tiny_cfg();
+        let table = run(&cfg).unwrap();
+        let rows = parse_rows(&table);
+        let per_round_f64 = (8 * cfg.d * (cfg.m + 1)) as f64;
+        assert_eq!(rows[0][1], per_round_f64);
+        assert_eq!(rows[1][1] * 2.0, per_round_f64, "f32 ships exactly half the bytes");
+        assert_eq!(rows[2][1] * 4.0, per_round_f64, "bf16 ships exactly a quarter");
+        // and total bytes are per-round bytes times rounds, exactly
+        for row in &rows {
+            assert_eq!(row[6], row[1] * row[5], "total = per-round × rounds");
+        }
+    }
+}

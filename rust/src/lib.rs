@@ -15,7 +15,10 @@
 //!   shards, typed messages, and exact communication-round accounting —
 //!   including the multi-vector **block protocol**
 //!   ([`cluster::Cluster::dist_matmat`]: one round, one message per live
-//!   worker, `k` vectors of traffic) that the top-`k` family rides.
+//!   worker, `k` vectors of traffic) that the top-`k` family rides, and
+//!   the **wire layer** ([`cluster::WireCodec`]): every payload is
+//!   shipped through a configurable codec (lossless f64 / f32 / bf16)
+//!   and `CommStats.bytes` is billed from the encoded frames themselves.
 //! - [`coordinator`] — the paper's algorithms: one-shot averaging
 //!   estimators (Thm 3/4/5), distributed power method / Lanczos,
 //!   hot-potato Oja SGD, Shift-and-Invert with locally-preconditioned
@@ -57,7 +60,7 @@ pub mod util;
 /// Convenience re-exports covering the public API surface used by the
 /// examples and benches.
 pub mod prelude {
-    pub use crate::cluster::{Cluster, CommStats, OracleSpec};
+    pub use crate::cluster::{Cluster, CommStats, OracleSpec, WireCodec, WirePrecision};
     pub use crate::coordinator::{
         Algorithm, BlockLanczos, CentralizedErm, CentralizedSubspace, DeflatedShiftInvert,
         DistributedLanczos, DistributedOrthoIteration, DistributedPower, Estimate, HotPotatoOja,

@@ -8,6 +8,7 @@
 //! dspca lower-bounds [--runs 60]
 //! dspca scaling   [--n-sweep | --m-sweep]
 //! dspca topk      [--d 60] [--m 8] [--n 400] [--k-list 1,2,4,8] [--runs 8]
+//! dspca wire      [--d 60] [--m 8] [--n 400] [--runs 8]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
 //! ```
@@ -16,7 +17,7 @@ use anyhow::{bail, Result};
 
 use dspca::cluster::OracleSpec;
 use dspca::config::Args;
-use dspca::experiments::{figure1, lower_bounds, scaling, table1, topk};
+use dspca::experiments::{figure1, lower_bounds, scaling, table1, topk, wire};
 
 fn main() {
     if let Err(e) = run() {
@@ -34,13 +35,14 @@ fn run() -> Result<()> {
         Some("lower-bounds") => cmd_lower_bounds(&args, &out_dir),
         Some("scaling") => cmd_scaling(&args, &out_dir),
         Some("topk") => cmd_topk(&args, &out_dir),
+        Some("wire") => cmd_wire(&args, &out_dir),
         Some("e2e") => cmd_e2e(&args),
         Some("selftest") => cmd_selftest(),
-        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, e2e, selftest)"),
+        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, e2e, selftest)"),
         None => {
             println!(
                 "dspca — Communication-efficient Distributed Stochastic PCA\n\
-                 commands: figure1 | table1 | lower-bounds | scaling | topk | e2e | selftest\n\
+                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | e2e | selftest\n\
                  see README.md for flags"
             );
             Ok(())
@@ -157,6 +159,23 @@ fn cmd_topk(args: &Args, out_dir: &str) -> Result<()> {
     };
     let table = topk::run(&cfg)?;
     let path = format!("{out_dir}/topk.csv");
+    table.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
+    let defaults = wire::WireConfig::default();
+    let cfg = wire::WireConfig {
+        d: args.get_usize("d", defaults.d)?,
+        m: args.get_usize("m", defaults.m)?,
+        n: args.get_usize("n", defaults.n)?,
+        runs: args.get_usize("runs", defaults.runs)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        oracle: oracle_from(args),
+    };
+    let table = wire::run(&cfg)?;
+    let path = format!("{out_dir}/wire.csv");
     table.write(&path)?;
     println!("wrote {path}");
     Ok(())

@@ -2,7 +2,7 @@
 //! plus property-based invariants on the coordinator and the cluster's
 //! block protocol (propcheck).
 
-use dspca::cluster::Cluster;
+use dspca::cluster::{Cluster, WireCodec, WirePrecision};
 use dspca::coordinator::subspace::subspace_error;
 use dspca::coordinator::{
     Algorithm, BlockLanczos, CentralizedErm, DistributedLanczos, DistributedOrthoIteration,
@@ -309,6 +309,79 @@ fn prop_basis_stays_orthonormal_through_block_power_iterations() {
             assert!(defect < 1e-10, "iteration {iter}: ||W^T W - I||_max = {defect:.3e}");
             w = q;
         }
+    });
+}
+
+#[test]
+fn prop_bytes_equal_encoded_frame_sizes_for_every_collective_and_codec() {
+    // THE wire-layer invariant (ISSUE 2 acceptance): for every collective
+    // × every codec, `CommStats.bytes` equals the sum of the encoded
+    // frames' sizes — a broadcast frame billed once, one response frame
+    // per live worker — and the default F64 codec reproduces the seed's
+    // `8·d·…` accounting table verbatim.
+    propcheck(Config::default().cases(6), "codec-exact byte accounting", |g| {
+        let m = g.usize_in(1, 5);
+        let n = g.usize_in(5, 25);
+        let d = g.usize_in(2, 10);
+        let k = g.usize_in(1, d);
+        let seed = g.rng().next_u64();
+        let dist = CovModel::paper_fig1(d, 5).gaussian();
+        let c = Cluster::generate(&dist, m, n, seed).unwrap();
+        if m > 1 && g.bool() {
+            c.kill_worker(g.usize_in(1, m - 1)).unwrap();
+        }
+        let live = c.live() as u64;
+        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
+            let codec = WireCodec::new(prec);
+            c.set_codec(codec);
+            // the size of one encoded frame carrying `words` f64 words —
+            // measured on a materialized frame, not assumed
+            let frame = |words: usize| {
+                let payload = vec![0.5; words];
+                codec.encode(&payload).wire_bytes() as u64
+            };
+
+            c.reset_stats();
+            c.dist_matvec(&g.gaussian_vec(d)).unwrap();
+            assert_eq!(c.stats().bytes, (live + 1) * frame(d), "{prec:?} dist_matvec");
+
+            c.reset_stats();
+            c.dist_matmat(&random_block(g, d, k)).unwrap();
+            assert_eq!(c.stats().bytes, (live + 1) * frame(d * k), "{prec:?} dist_matmat");
+
+            c.reset_stats();
+            c.local_top_eigvecs(false).unwrap();
+            assert_eq!(c.stats().bytes, live * frame(d), "{prec:?} local_top_eigvecs");
+
+            c.reset_stats();
+            c.local_top_k(k).unwrap();
+            assert_eq!(c.stats().bytes, live * frame(d * k), "{prec:?} local_top_k");
+
+            c.reset_stats();
+            c.gram_average().unwrap();
+            assert_eq!(c.stats().bytes, live * frame(d * d), "{prec:?} gram_average");
+
+            c.reset_stats();
+            let mut w0 = vec![0.0; d];
+            w0[0] = 1.0;
+            c.oja_chain(&w0, 0.5, 10.0).unwrap();
+            assert_eq!(c.stats().bytes, live * 2 * frame(d), "{prec:?} oja_chain");
+
+            if prec == WirePrecision::F64 {
+                // the legacy table, verbatim: B(w) = 8w under the
+                // default lossless codec
+                c.reset_stats();
+                c.dist_matvec(&g.gaussian_vec(d)).unwrap();
+                assert_eq!(c.stats().bytes, (8 * d) as u64 * (live + 1));
+                c.reset_stats();
+                c.dist_matmat(&random_block(g, d, k)).unwrap();
+                assert_eq!(c.stats().bytes, (8 * d * k) as u64 * (live + 1));
+                c.reset_stats();
+                c.gram_average().unwrap();
+                assert_eq!(c.stats().bytes, (8 * d * d) as u64 * live);
+            }
+        }
+        c.set_codec(WireCodec::default());
     });
 }
 
