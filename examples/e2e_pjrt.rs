@@ -49,7 +49,7 @@ fn main() -> anyhow::Result<()> {
             "method", "error", "rounds", "matvecs", "wall", "per-round"
         );
         for alg in &algorithms {
-            let est = alg.run(&cluster)?;
+            let est = alg.run(&cluster.session())?;
             let per_round = if est.comm.rounds > 0 {
                 est.wall / est.comm.rounds as u32
             } else {
@@ -67,11 +67,12 @@ fn main() -> anyhow::Result<()> {
         }
         // raw matvec round latency / throughput
         let v = vec![1.0 / (d as f64).sqrt(); d];
-        let _ = cluster.dist_matvec(&v)?; // warm (compilation, buffers)
+        let session = cluster.session();
+        let _ = session.dist_matvec(&v)?; // warm (compilation, buffers)
         let reps = 200;
         let t0 = Instant::now();
         for _ in 0..reps {
-            std::hint::black_box(cluster.dist_matvec(&v)?);
+            std::hint::black_box(session.dist_matvec(&v)?);
         }
         let per = t0.elapsed() / reps;
         println!(

@@ -34,7 +34,10 @@ fn main() -> anyhow::Result<()> {
     );
     println!("{}", "-".repeat(70));
     for alg in &algorithms {
-        let est = alg.run(&cluster)?;
+        // one tenant session per query: each run carries its own bill,
+        // and any number of sessions may run concurrently on the shared
+        // cluster (see examples/serve.rs)
+        let est = alg.run(&cluster.session())?;
         println!(
             "{:<22} {:>12.3e} {:>8} {:>10} {:>12?}",
             alg.name(),

@@ -1,0 +1,71 @@
+//! Multi-tenant serving: two concurrent tenants — one lossless power
+//! method, one bf16-quantized power method — answering queries against
+//! **one** shared cluster, with fully independent communication bills,
+//! followed by a batch through the `serve` scheduler.
+//!
+//! ```sh
+//! cargo run --release --example serve
+//! ```
+
+use dspca::prelude::*;
+use dspca::serve::{serve, Job};
+
+fn main() -> anyhow::Result<()> {
+    let (d, m, n) = (60, 8, 400);
+    let dist = CovModel::paper_fig1(d, 7).gaussian();
+    println!("multi-tenant cluster: m={m} machines x n={n} samples, d={d}\n");
+    let cluster = Cluster::generate(&dist, m, n, 42)?;
+
+    // --- two tenants, by hand: one thread each, one session each -----
+    let power = DistributedPower::default();
+    let quant = QuantizedPower::new(WirePrecision::Bf16);
+    let agg0 = cluster.aggregate_stats();
+    let (lossless, lossy) = std::thread::scope(|s| {
+        let h1 = s.spawn(|| power.run(&cluster.session()).unwrap());
+        let h2 = s.spawn(|| quant.run(&cluster.session()).unwrap());
+        (h1.join().unwrap(), h2.join().unwrap())
+    });
+    println!("{:<18} {:>10} {:>8} {:>12} {:>12}", "tenant", "error", "rounds", "bytes", "B/round");
+    println!("{}", "-".repeat(64));
+    for (name, est) in [("lossless f64", &lossless), ("quantized bf16", &lossy)] {
+        println!(
+            "{:<18} {:>10.3e} {:>8} {:>12} {:>12.0}",
+            name,
+            est.error(dist.v1()),
+            est.comm.rounds,
+            est.comm.bytes,
+            est.comm.bytes as f64 / est.comm.rounds.max(1) as f64
+        );
+    }
+    let mut sum = lossless.comm.clone();
+    sum.merge(&lossy.comm);
+    let window = cluster.aggregate_stats().delta_since(&agg0);
+    assert_eq!(sum, window, "per-tenant bills must sum to the cluster aggregate");
+    println!(
+        "\nbills are independent (bf16 tenant ships 2-byte frames, f64 tenant 8-byte)\n\
+         and sum exactly to the cluster aggregate: {window}\n"
+    );
+
+    // --- the same thing at batch scale, through the scheduler --------
+    let jobs = vec![
+        Job::new("power", Box::new(DistributedPower::default())),
+        Job::new("bf16-power", Box::new(QuantizedPower::new(WirePrecision::Bf16))),
+        Job::new("sign-fixed", Box::new(SignFixedAverage)),
+        Job::new("lanczos", Box::new(DistributedLanczos::default())),
+        Job::new("projection", Box::new(ProjectionAverage)),
+        Job::new("shift-invert", Box::new(ShiftInvert::default())),
+    ];
+    let report = serve(&cluster, jobs, 3)?;
+    assert!(report.accounting_exact, "exclusive batch: per-job bills sum to the aggregate");
+    println!("serve: {} jobs over 3 tenants in {:?} ({:.1} jobs/s)", report.jobs.len(), report.wall, report.throughput);
+    println!("{:<16} {:>22} {:>8} {:>12} {:>12}", "job", "algorithm", "rounds", "bytes", "latency");
+    println!("{}", "-".repeat(74));
+    for j in &report.jobs {
+        println!(
+            "{:<16} {:>22} {:>8} {:>12} {:>12?}",
+            j.name, j.alg, j.comm.rounds, j.comm.bytes, j.latency
+        );
+    }
+    println!("\naggregate over the batch: {}", report.aggregate);
+    Ok(())
+}

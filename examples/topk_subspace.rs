@@ -45,15 +45,15 @@ fn main() -> anyhow::Result<()> {
         "method", "subspace err", "rounds", "matvecs", "messages"
     );
     println!("{}", "-".repeat(74));
-    let cen = CentralizedSubspace { k }.run_mat(&cluster)?;
+    let cen = CentralizedSubspace { k }.run_mat(&cluster.session())?;
     report("centralized top-k", &v, &cen);
-    let blk = DistributedOrthoIteration::new(k).run_mat(&cluster)?;
+    let blk = DistributedOrthoIteration::new(k).run_mat(&cluster.session())?;
     report("block power (1 rd/iter)", &v, &blk);
-    let lan = BlockLanczos::new(k).run_mat(&cluster)?;
+    let lan = BlockLanczos::new(k).run_mat(&cluster.session())?;
     report("block Lanczos (1 rd/block)", &v, &lan);
-    let proj = SubspaceProjectionAverage { k }.run_mat(&cluster)?;
+    let proj = SubspaceProjectionAverage { k }.run_mat(&cluster.session())?;
     report("projector averaging (1 rd)", &v, &proj);
-    let defl = DeflatedShiftInvert::new(k).run_mat(&cluster)?;
+    let defl = DeflatedShiftInvert::new(k).run_mat(&cluster.session())?;
     report("deflated S&I (batched)", &v, &defl);
     println!(
         "\n(block power, block Lanczos and deflated S&I match the centralized\n\

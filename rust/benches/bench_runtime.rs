@@ -49,9 +49,10 @@ fn main() -> anyhow::Result<()> {
         ("pjrt", OracleSpec::Pjrt { artifact_dir: dir.to_string_lossy().into_owned() }),
     ] {
         let cluster = Cluster::generate_with(&dist, 4, n, 9, spec)?;
-        let _ = cluster.dist_matvec(&v)?; // warm
+        let session = cluster.session();
+        let _ = session.dist_matvec(&v)?; // warm
         b.bench(&format!("{tag}/dist_matvec_round/m=4/{n}x{d}"), || {
-            cluster.dist_matvec(&v).unwrap()
+            session.dist_matvec(&v).unwrap()
         });
     }
     Ok(())

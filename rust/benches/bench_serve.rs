@@ -1,0 +1,58 @@
+//! E11 bench — the multi-tenant session layer: session-creation
+//! overhead, collective latency through the session view, serve-batch
+//! throughput at 1 vs N tenants, and the E11 sweep at reduced size.
+
+use dspca::bench_harness::{fast_mode, scaled, Bencher};
+use dspca::cluster::{Cluster, OracleSpec};
+use dspca::data::CovModel;
+use dspca::experiments::serve::{job_mix, run, ServeConfig};
+use dspca::serve::serve;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+
+    let (d, m, n) = if fast_mode() { (16usize, 3usize, 60usize) } else { (60, 8, 400) };
+    let dist = CovModel::paper_fig1(d, 7).gaussian();
+    let cluster = Cluster::generate_with(&dist, m, n, 11, OracleSpec::Native)?;
+
+    // the per-query fixed cost the session layer adds: two mutexes
+    // behind an Arc
+    b.bench("session/create", || cluster.session());
+
+    // one collective through the session view (includes the wire-lock
+    // critical section)
+    let session = cluster.session();
+    let v = dspca::rng::Pcg64::new(3).gaussian_vec(d);
+    let _ = session.dist_matvec(&v)?; // warm
+    b.bench(&format!("session/dist_matvec/m={m}/{n}x{d}"), || {
+        session.dist_matvec(&v).unwrap()
+    });
+
+    // batch throughput: the same heterogeneous job mix at 1 tenant
+    // (sequential) and at N tenants (concurrent leaders, one shared
+    // cluster) — seconds per job
+    let jobs_n = scaled(8).max(4);
+    for tenants in [1usize, 4] {
+        let report = serve(&cluster, job_mix(jobs_n), tenants)?;
+        b.record(
+            &format!("serve/jobs={jobs_n}/tenants={tenants}"),
+            vec![report.wall.as_secs_f64() / jobs_n as f64],
+        );
+    }
+
+    // the E11 sweep itself, reduced
+    let cfg = ServeConfig {
+        d: if fast_mode() { 12 } else { 40 },
+        m: 4,
+        n: if fast_mode() { 80 } else { 300 },
+        jobs: scaled(8).max(4),
+        tenants_list: vec![1, 2, 4],
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let table = run(&cfg)?;
+    b.record("serve/sweep", vec![t0.elapsed().as_secs_f64()]);
+    table.write("results/bench_serve.csv")?;
+    println!("wrote results/bench_serve.csv");
+    Ok(())
+}

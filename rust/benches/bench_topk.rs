@@ -28,15 +28,16 @@ fn main() -> anyhow::Result<()> {
     let (d, m, n, k) = (64usize, 8usize, 400usize, 8usize);
     let dist = CovModel::paper_fig1(d, 7).gaussian();
     let cluster = Cluster::generate_with(&dist, m, n, 11, OracleSpec::Native)?;
+    let session = cluster.session();
     let mut rng = dspca::rng::Pcg64::new(13);
     let v = Matrix::from_vec(d, k, (0..d * k).map(|_| rng.next_gaussian()).collect());
-    let _ = cluster.dist_matmat(&v)?; // warm
+    let _ = session.dist_matmat(&v)?; // warm
     b.bench(&format!("dist_matmat/1-round/k={k}/m={m}/{n}x{d}"), || {
-        cluster.dist_matmat(&v).unwrap()
+        session.dist_matmat(&v).unwrap()
     });
     b.bench(&format!("dist_matvec-loop/{k}-rounds/m={m}/{n}x{d}"), || {
         for c in 0..k {
-            cluster.dist_matvec(&v.col(c)).unwrap();
+            session.dist_matvec(&v.col(c)).unwrap();
         }
     });
     println!("wrote results/bench_topk.csv");

@@ -29,15 +29,17 @@ fn main() -> anyhow::Result<()> {
     let (d, m, n) = if fast_mode() { (32usize, 4usize, 100usize) } else { (64, 8, 400) };
     let dist = CovModel::paper_fig1(d, 7).gaussian();
     let cluster = Cluster::generate_with(&dist, m, n, 11, OracleSpec::Native)?;
+    let session = cluster.session();
     let v = rng.gaussian_vec(d);
-    let _ = cluster.dist_matvec(&v)?; // warm
+    let _ = session.dist_matvec(&v)?; // warm
     for prec in PRECISIONS {
-        cluster.set_codec(WireCodec::new(prec));
+        session.set_codec(WireCodec::new(prec));
         b.bench(&format!("dist_matvec/{}/m={m}/{n}x{d}", prec.label()), || {
-            cluster.dist_matvec(&v).unwrap()
+            session.dist_matvec(&v).unwrap()
         });
     }
-    cluster.set_codec(WireCodec::default());
+    // no codec restore needed: the codec is session-local state now,
+    // and this session is done
 
     // the E10 sweep itself, reduced
     let cfg = WireConfig {

@@ -1,7 +1,10 @@
 //! Communication accounting — the paper's cost model made measurable.
 
-/// Counters for all communication performed by a cluster since the last
-/// reset. A *round* follows §2.1: the leader broadcasts at most one
+/// Counters for the communication performed by one tenant
+/// ([`Session`](crate::cluster::Session)) since the last reset, or by the
+/// whole cluster since construction
+/// ([`Cluster::aggregate_stats`](crate::cluster::Cluster::aggregate_stats),
+/// monotonic). A *round* follows §2.1: the leader broadcasts at most one
 /// `R^d` vector and every machine sends at most one vector back.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct CommStats {
@@ -11,7 +14,7 @@ pub struct CommStats {
     /// counts). A `d x k` block product ([`dist_matmat`]) bills `k` — it
     /// is numerically `k` matvecs fused into one round.
     ///
-    /// [`dist_matmat`]: crate::cluster::Cluster::dist_matmat
+    /// [`dist_matmat`]: crate::cluster::Session::dist_matmat
     pub matvec_products: u64,
     /// Vectors broadcast leader -> workers.
     pub vectors_broadcast: u64,
@@ -38,7 +41,8 @@ pub struct CommStats {
 
 impl CommStats {
     /// Merge another stats block into this one (used when an algorithm
-    /// combines phases measured separately).
+    /// combines phases measured separately, and to sum concurrent
+    /// tenants' bills against the cluster aggregate).
     pub fn merge(&mut self, other: &CommStats) {
         self.rounds += other.rounds;
         self.matvec_products += other.matvec_products;
@@ -47,6 +51,22 @@ impl CommStats {
         self.requests_sent += other.requests_sent;
         self.responses_received += other.responses_received;
         self.bytes += other.bytes;
+    }
+
+    /// Field-wise difference against an earlier snapshot of the same
+    /// monotonic counter set. This is how callers meter a window of the
+    /// cluster's aggregate bill (snapshot before, subtract after) without
+    /// a reset that would stomp concurrent tenants.
+    pub fn delta_since(&self, earlier: &CommStats) -> CommStats {
+        CommStats {
+            rounds: self.rounds.saturating_sub(earlier.rounds),
+            matvec_products: self.matvec_products.saturating_sub(earlier.matvec_products),
+            vectors_broadcast: self.vectors_broadcast.saturating_sub(earlier.vectors_broadcast),
+            vectors_gathered: self.vectors_gathered.saturating_sub(earlier.vectors_gathered),
+            requests_sent: self.requests_sent.saturating_sub(earlier.requests_sent),
+            responses_received: self.responses_received.saturating_sub(earlier.responses_received),
+            bytes: self.bytes.saturating_sub(earlier.bytes),
+        }
     }
 }
 
@@ -87,6 +107,25 @@ mod tests {
         assert_eq!(a.requests_sent, 10);
         assert_eq!(a.responses_received, 12);
         assert_eq!(a.bytes, 14);
+    }
+
+    #[test]
+    fn delta_since_inverts_merge() {
+        let earlier = CommStats {
+            rounds: 1,
+            matvec_products: 2,
+            vectors_broadcast: 3,
+            vectors_gathered: 4,
+            requests_sent: 5,
+            responses_received: 6,
+            bytes: 7,
+        };
+        let mut later = earlier.clone();
+        let window = CommStats { rounds: 10, bytes: 100, ..Default::default() };
+        later.merge(&window);
+        assert_eq!(later.delta_since(&earlier), window);
+        // saturates rather than underflowing on a mismatched snapshot
+        assert_eq!(earlier.delta_since(&later).rounds, 0);
     }
 
     #[test]

@@ -1,8 +1,8 @@
 //! Typed messages between the leader and workers. Everything that crosses
 //! this boundary is what the paper would put on the wire; the accounting
-//! in [`crate::cluster::Cluster`] is driven by these exchanges, and each
+//! in [`crate::cluster::Session`] is driven by these exchanges, and each
 //! message's f64 payload ([`Request::payload_mut`],
-//! [`Response::payload_mut`]) is what the cluster's
+//! [`Response::payload_mut`]) is what the issuing session's
 //! [`WireCodec`](crate::cluster::WireCodec) encodes and bills.
 
 /// Leader -> worker requests.
@@ -48,7 +48,7 @@ impl Request {
         }
     }
 
-    /// Mutable payload view — the hook the cluster's wire codec passes
+    /// Mutable payload view — the hook the session's wire codec passes
     /// every outgoing request through (encode→decode + billing).
     pub fn payload_mut(&mut self) -> Option<&mut [f64]> {
         match self {
@@ -82,7 +82,7 @@ impl Response {
         }
     }
 
-    /// Mutable payload view — the hook the cluster's wire codec passes
+    /// Mutable payload view — the hook the session's wire codec passes
     /// every incoming response through (encode→decode + billing).
     pub fn payload_mut(&mut self) -> Option<&mut [f64]> {
         match self {

@@ -1,4 +1,4 @@
-//! Simulated distributed cluster.
+//! Simulated distributed cluster — now a **multi-tenant service**.
 //!
 //! The paper's model: `m` machines, machine 1 doubling as the leader.
 //! Per round, the leader may broadcast one vector in `R^d` and every
@@ -12,7 +12,19 @@
 //! except through the typed message channel), and **exact communication
 //! accounting** on every primitive (`live` = machines not killed).
 //!
-//! Every request/response payload passes through the cluster's
+//! **Tenancy.** [`Cluster`] is `Sync` and holds no per-query state: the
+//! billing counters, the wire codec, and the collective API all live on
+//! the per-tenant [`Session`] ([`Cluster::session`]). Any number of
+//! leader threads can run queries concurrently against one shared
+//! cluster; wire access serializes at exchange (round) granularity, the
+//! cluster routes late replies back to the issuing session by the
+//! sequence number every worker echoes, and each session's bill is
+//! exactly what the same query would pay running alone. The cluster
+//! keeps one monotonic [`Cluster::aggregate_stats`] ledger equal to the
+//! sum of all traffic its sessions ever billed. The `serve` module
+//! schedules whole job queues over this substrate.
+//!
+//! Every request/response payload passes through the owning session's
 //! [`WireCodec`] (default: lossless f64), and `CommStats.bytes` is the
 //! sum of the **encoded frames' sizes** — billed inside the exchange as
 //! messages are actually sent and received (timeouts and error replies
@@ -22,12 +34,12 @@
 //!
 //! | primitive | rounds | words leader→workers | words workers→leader | msgs (req / resp) | bytes |
 //! |---|---|---|---|---|---|
-//! | [`Cluster::dist_matvec`] | 1 | d | live·d | live / live | B(d)·(live+1) |
-//! | [`Cluster::dist_matmat`] (`d×k`) | 1 | d·k | live·d·k | live / live | B(d·k)·(live+1) |
-//! | [`Cluster::local_top_eigvecs`] | 1 | 0 | live·d | live / live | B(d)·live |
-//! | [`Cluster::local_top_k`] (`k`) | 1 | 0 | live·d·k | live / live | B(d·k)·live |
-//! | [`Cluster::oja_chain`] | live | live·d (handoffs) | live·d | live / live | 2·B(d)·live |
-//! | [`Cluster::gram_average`] | 1 | 0 | live·d² | live / live | B(d²)·live |
+//! | [`Session::dist_matvec`] | 1 | d | live·d | live / live | B(d)·(live+1) |
+//! | [`Session::dist_matmat`] (`d×k`) | 1 | d·k | live·d·k | live / live | B(d·k)·(live+1) |
+//! | [`Session::local_top_eigvecs`] | 1 | 0 | live·d | live / live | B(d)·live |
+//! | [`Session::local_top_k`] (`k`) | 1 | 0 | live·d·k | live / live | B(d·k)·live |
+//! | [`Session::oja_chain`] | live | live·d (handoffs) | live·d | live / live | 2·B(d)·live |
+//! | [`Session::gram_average`] | 1 | 0 | live·d² | live / live | B(d²)·live |
 //!
 //! With the default lossless codec `B(w) = 8w` and the table reduces to
 //! the original `8·d·…` accounting verbatim. A broadcast frame is billed
@@ -35,7 +47,8 @@
 //! each recipient); per-worker request/response *messages* are billed per
 //! send/arrival. The codec-parameterized rows are the contract the
 //! propcheck properties in `tests/integration.rs` assert for every
-//! collective × every codec.
+//! collective × every codec — per session, and summed across concurrent
+//! sessions against the aggregate.
 //!
 //! The block-protocol rows remain the block contract: one `dist_matmat`
 //! (and hence one block-power iteration at any `k`) costs **exactly one
@@ -49,26 +62,29 @@
 
 mod comm;
 mod message;
+mod session;
 mod wire;
 mod worker;
 
 pub use comm::CommStats;
 pub use message::{Request, Response};
+pub use session::Session;
 pub use wire::{Frame, WireCodec, WirePrecision};
 pub use worker::{ComputeOracle, NativeOracle, OracleSpec};
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::AtomicU64;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::data::{Distribution, Shard};
-use crate::linalg::Matrix;
 use crate::rng::Pcg64;
+
+use session::SessionCore;
 
 /// Sequence number used for control messages (`Shutdown`) that are not
 /// part of any exchange; real exchanges start at 1.
@@ -79,37 +95,64 @@ const CONTROL_SEQ: u64 = 0;
 /// never will (its worker is wedged or dead); pruning at this horizon
 /// keeps the record map bounded across long failure-heavy runs. A
 /// straggler older than the horizon is still detected by its sequence
-/// number — it just bills at the currently-installed codec width as a
-/// best effort.
+/// number — but with its provenance gone it can no longer be attributed
+/// to a tenant, so it is dropped unbilled (billing it to whichever
+/// session happens to drain it would corrupt that tenant's bill).
 const INFLIGHT_RETENTION: u64 = 1024;
 
-/// Handle to a running simulated cluster.
+/// Everything that touches the shared wire, behind one lock so an
+/// exchange (send-all + drain-all) is a single critical section and
+/// `Cluster` is `Sync`. Concurrent sessions serialize here at round
+/// granularity.
+struct WireState {
+    senders: Vec<mpsc::Sender<(u64, Request)>>,
+    receiver: mpsc::Receiver<(usize, u64, Response)>,
+    /// Provenance for exchanges that failed before draining (timeout /
+    /// dead send): codec width the round shipped under, outstanding
+    /// reply count, and a weak handle to the issuing session — so a
+    /// straggler reply is billed to the tenant whose round it belongs
+    /// to (not whichever tenant drains next), or dropped cleanly if
+    /// that session has been closed. Empty in every fully-drained
+    /// (i.e. normal) history.
+    inflight: HashMap<u64, Inflight>,
+}
+
+/// One failed exchange's straggler-routing record.
+struct Inflight {
+    codec: WireCodec,
+    outstanding: usize,
+    owner: Weak<SessionCore>,
+}
+
+/// Drop inflight records too old to attribute (see
+/// [`INFLIGHT_RETENTION`]).
+fn prune_inflight(inflight: &mut HashMap<u64, Inflight>, seq: u64) {
+    inflight.retain(|&s, _| s + INFLIGHT_RETENTION > seq);
+}
+
+/// Handle to a running simulated cluster. `Sync`: share it across leader
+/// threads and open one [`Session`] per tenant ([`Cluster::session`]) —
+/// all billing, codec state and collectives live on the session.
 pub struct Cluster {
     m: usize,
     n: usize,
     d: usize,
-    senders: Vec<mpsc::Sender<(u64, Request)>>,
-    receiver: mpsc::Receiver<(usize, u64, Response)>,
     handles: Vec<Option<JoinHandle<()>>>,
     leader_shard: Arc<Shard>,
-    stats: Mutex<CommStats>,
     dead: Mutex<HashSet<usize>>,
-    /// Wire codec every request/response payload passes through; bytes
-    /// are billed from its encoded frames. Interior-mutable so a
-    /// coordinator can install a lossy codec for the duration of a run
-    /// (see `coordinator::QuantizedPower`).
-    codec: Mutex<WireCodec>,
-    /// Exchange sequence counter. Workers echo the request's sequence
-    /// number on their reply, so a straggler from a timed-out round is
-    /// recognizable (and droppable) instead of being misattributed to a
-    /// later collective on the shared response channel.
+    /// Monotonic cluster-wide bill: every session increment is applied
+    /// here too, so this is the sum of all traffic ever billed to any
+    /// session — equal to Σ current session bills as long as none has
+    /// been reset ([`Session::reset_stats`] zeroes only the session's
+    /// ledger). Meter a window with [`CommStats::delta_since`].
+    aggregate: Mutex<CommStats>,
+    /// Cluster-wide exchange sequence namespace. Workers echo the
+    /// request's sequence number on their reply, so a straggler from a
+    /// timed-out round is recognizable — and routable to the session
+    /// that issued it — instead of being misattributed to a later
+    /// collective on the shared response channel.
     seq: AtomicU64,
-    /// Codec + outstanding-reply count for exchanges that failed before
-    /// draining (timeout / dead send): lets a straggler reply be billed
-    /// at the width its round actually shipped under — not whatever
-    /// codec happens to be installed when it finally arrives — and then
-    /// forgotten. Empty in every fully-drained (i.e. normal) history.
-    inflight: Mutex<HashMap<u64, (WireCodec, usize)>>,
+    wire: Mutex<WireState>,
     /// Max wall time to wait for any single worker response.
     timeout: Duration,
 }
@@ -176,17 +219,21 @@ impl Cluster {
             m,
             n,
             d,
-            senders,
-            receiver: resp_rx,
             handles,
             leader_shard,
-            stats: Mutex::new(CommStats::default()),
             dead: Mutex::new(HashSet::new()),
-            codec: Mutex::new(WireCodec::default()),
+            aggregate: Mutex::new(CommStats::default()),
             seq: AtomicU64::new(CONTROL_SEQ),
-            inflight: Mutex::new(HashMap::new()),
+            wire: Mutex::new(WireState { senders, receiver: resp_rx, inflight: HashMap::new() }),
             timeout: Duration::from_secs(120),
         })
+    }
+
+    /// Open a new tenant session: its own bill, its own codec, the full
+    /// collective API. Cheap — single-query callers make one per run
+    /// (`alg.run(&cluster.session())`), services one per tenant.
+    pub fn session(&self) -> Session<'_> {
+        Session::new(self)
     }
 
     /// Number of machines `m`.
@@ -210,25 +257,12 @@ impl Cluster {
         &self.leader_shard
     }
 
-    /// Communication statistics accumulated since the last reset.
-    pub fn stats(&self) -> CommStats {
-        self.stats.lock().unwrap().clone()
-    }
-
-    pub fn reset_stats(&self) {
-        *self.stats.lock().unwrap() = CommStats::default();
-    }
-
-    /// The wire codec currently installed (default: lossless f64).
-    pub fn codec(&self) -> WireCodec {
-        *self.codec.lock().unwrap()
-    }
-
-    /// Install a wire codec. Every subsequent payload is shipped through
-    /// it: lossy codecs both shrink the billed frames and degrade the
-    /// delivered vectors, exactly as a real quantized wire would.
-    pub fn set_codec(&self, codec: WireCodec) {
-        *self.codec.lock().unwrap() = codec;
+    /// The monotonic cluster-wide bill: the sum of every session's
+    /// traffic since the cluster was built. Never reset (a reset would
+    /// stomp concurrent tenants) — meter a window by snapshotting before
+    /// and using [`CommStats::delta_since`] after.
+    pub fn aggregate_stats(&self) -> CommStats {
+        self.aggregate.lock().unwrap().clone()
     }
 
     fn alive_workers(&self) -> Vec<usize> {
@@ -236,261 +270,9 @@ impl Cluster {
         (0..self.m).filter(|i| !dead.contains(i)).collect()
     }
 
-    /// Send `req` to a set of workers and collect their responses in
-    /// worker order. One call is one synchronous round; the round, every
-    /// request message, and every response message are billed **as they
-    /// happen**, so a timed-out or partially-failed collective still
-    /// pays for the traffic it actually generated (the seed billed
-    /// messages only after the drain loop — nothing at all on the
-    /// timeout/send-failure paths — and rounds/bytes only in the
-    /// collectives' success paths, after any worker-error bail).
-    ///
-    /// Payloads pass through the installed [`WireCodec`] in both
-    /// directions: the request payload is encoded once — the §2.1 model
-    /// bills a broadcast against the channel, not per recipient — and
-    /// each response payload on arrival, with `CommStats.bytes` advanced
-    /// by the encoded frames' sizes and the decoded (possibly lossy)
-    /// values delivered onward.
-    ///
-    /// On worker failure, the **full** response set is still drained
-    /// before the error is reported: the response channel is shared by
-    /// every collective, so bailing early would leave the surviving
-    /// workers' replies queued. Replies that *do* outlive their exchange
-    /// (a worker stalls past the timeout and answers later) are caught by
-    /// the sequence number every worker echoes: a stale reply is billed
-    /// on arrival — it really crossed the wire, at the codec width its
-    /// own round shipped under (tracked per failed exchange in
-    /// `inflight`) — and then dropped instead of being misattributed to
-    /// the current collective.
-    fn exchange(&self, workers: &[usize], req: &Request) -> Result<Vec<Response>> {
-        let codec = self.codec();
-        let seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
-        let mut req = req.clone();
-        let req_bytes = req.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
-        let mut sent = 0usize;
-        for &w in workers {
-            if self.senders[w].send((seq, req.clone())).is_err() {
-                if sent > 0 {
-                    // the workers already reached may still reply; leave
-                    // a record so their stragglers bill at this width
-                    let mut infl = self.inflight.lock().unwrap();
-                    infl.retain(|&s, _| s + INFLIGHT_RETENTION > seq);
-                    infl.insert(seq, (codec, sent));
-                }
-                bail!("worker {w} channel closed");
-            }
-            sent += 1;
-            let mut st = self.stats.lock().unwrap();
-            st.requests_sent += 1;
-            if sent == 1 {
-                // the round and its broadcast frame hit the wire with the
-                // first successful send, and are billed once regardless
-                // of fan-out; if no send succeeds, no traffic existed and
-                // nothing is billed
-                st.rounds += 1;
-                st.bytes += req_bytes;
-            }
-        }
-        let mut responses: Vec<Option<Response>> = vec![None; self.m];
-        let mut first_err: Option<(usize, String)> = None;
-        let mut got = 0usize;
-        while got < workers.len() {
-            let (id, rseq, mut resp) = match self.receiver.recv_timeout(self.timeout) {
-                Ok(msg) => msg,
-                Err(_) => {
-                    let mut infl = self.inflight.lock().unwrap();
-                    infl.retain(|&s, _| s + INFLIGHT_RETENTION > seq);
-                    infl.insert(seq, (codec, workers.len() - got));
-                    bail!("timed out waiting for worker response");
-                }
-            };
-            if rseq != seq {
-                // straggler from a round that already failed: bill it at
-                // the width its own round shipped under (it did cross
-                // the wire), then drop it
-                let stale_bytes = {
-                    let mut infl = self.inflight.lock().unwrap();
-                    let stale_codec = infl.get(&rseq).map_or(codec, |e| e.0);
-                    if let Some(e) = infl.get_mut(&rseq) {
-                        e.1 -= 1;
-                        if e.1 == 0 {
-                            infl.remove(&rseq);
-                        }
-                    }
-                    resp.payload().map_or(0, |p| stale_codec.frame_bytes(p.len())) as u64
-                };
-                let mut st = self.stats.lock().unwrap();
-                st.responses_received += 1;
-                st.bytes += stale_bytes;
-                continue;
-            }
-            let resp_bytes = resp.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
-            {
-                let mut st = self.stats.lock().unwrap();
-                st.responses_received += 1;
-                st.bytes += resp_bytes;
-            }
-            got += 1;
-            if let Response::Err(e) = resp {
-                if first_err.is_none() {
-                    first_err = Some((id, e));
-                }
-                continue;
-            }
-            responses[id] = Some(resp);
-        }
-        if let Some((id, e)) = first_err {
-            bail!("worker {id} failed: {e}");
-        }
-        Ok(workers.iter().map(|&w| responses[w].take().expect("missing response")).collect())
-    }
-
-    /// Distributed covariance matvec: `Xhat v = (1/m) sum_i Xhat_i v`.
-    /// One communication round; the core primitive of the power method,
-    /// Lanczos and the Shift-and-Invert solver (Algorithm 2, lines 2–6).
-    pub fn dist_matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
-        assert_eq!(v.len(), self.d);
-        let workers = self.alive_workers();
-        if workers.is_empty() {
-            bail!("no live workers");
-        }
-        let resps = self.exchange(&workers, &Request::CovMatVec(v.to_vec()))?;
-        let mut acc = vec![0.0; self.d];
-        for r in resps {
-            let Response::Vector(x) = r else { bail!("unexpected response type") };
-            crate::linalg::vec_ops::axpy(&mut acc, 1.0, &x);
-        }
-        crate::linalg::vec_ops::scale(&mut acc, 1.0 / workers.len() as f64);
-        let mut st = self.stats.lock().unwrap();
-        st.matvec_products += 1;
-        st.vectors_broadcast += 1;
-        st.vectors_gathered += workers.len() as u64;
-        Ok(acc)
-    }
-
-    /// Distributed covariance **block** product:
-    /// `Xhat V = (1/live) sum_i Xhat_i V` for a `d x k` block `V`.
-    ///
-    /// The core primitive of the top-`k` family (block power / orthogonal
-    /// iteration, block Lanczos, batched deflation): **one round, one
-    /// request/response message per live worker, `k` vectors of traffic
-    /// each way** — where the column-wise loop it replaces paid `k`
-    /// rounds and `k` message round-trips per worker. Numerically
-    /// identical (up to summation order) to `k` [`Cluster::dist_matvec`]
-    /// calls on the columns of `V`; billed as `k` matvec products.
-    pub fn dist_matmat(&self, v: &Matrix) -> Result<Matrix> {
-        assert_eq!(v.rows(), self.d, "dist_matmat: block must be d x k");
-        let k = v.cols();
-        assert!(k >= 1, "dist_matmat: empty block");
-        let workers = self.alive_workers();
-        if workers.is_empty() {
-            bail!("no live workers");
-        }
-        let req = Request::CovMatMat { rows: self.d, cols: k, data: v.data().to_vec() };
-        let resps = self.exchange(&workers, &req)?;
-        let mut acc = Matrix::zeros(self.d, k);
-        for r in resps {
-            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
-            if rows != self.d || cols != k {
-                bail!("dist_matmat: worker returned {rows}x{cols}, expected {}x{k}", self.d);
-            }
-            acc.axpy_mat(1.0, &Matrix::from_vec(rows, cols, data));
-        }
-        acc.scale_mut(1.0 / workers.len() as f64);
-        let mut st = self.stats.lock().unwrap();
-        st.matvec_products += k as u64;
-        st.vectors_broadcast += k as u64;
-        st.vectors_gathered += (workers.len() * k) as u64;
-        Ok(acc)
-    }
-
-    /// Gather every machine's local ERM solution (leading eigenvector of
-    /// its `Xhat_i`). One round, `m` vectors to the leader. With
-    /// `unbiased_signs`, each machine flips its eigenvector's sign by a
-    /// private fair coin — the "unbiased ERM" premise of Theorem 3.
-    pub fn local_top_eigvecs(&self, unbiased_signs: bool) -> Result<Vec<Vec<f64>>> {
-        let workers = self.alive_workers();
-        if workers.is_empty() {
-            bail!("no live workers");
-        }
-        let resps = self.exchange(&workers, &Request::LocalTopEigvec { unbiased_signs })?;
-        let mut out = Vec::with_capacity(workers.len());
-        for r in resps {
-            let Response::Vector(x) = r else { bail!("unexpected response type") };
-            out.push(x);
-        }
-        let mut st = self.stats.lock().unwrap();
-        st.vectors_gathered += workers.len() as u64;
-        Ok(out)
-    }
-
-    /// Average of the local empirical covariances — the **centralized**
-    /// baseline's input. One round but `m * d` vectors of traffic (the
-    /// paper's round model only ships `R^d` vectors; this is the
-    /// "ship-everything" reference point, not a round-efficient method).
-    pub fn gram_average(&self) -> Result<Matrix> {
-        let workers = self.alive_workers();
-        if workers.is_empty() {
-            bail!("no live workers");
-        }
-        let resps = self.exchange(&workers, &Request::Gram)?;
-        let mut acc = Matrix::zeros(self.d, self.d);
-        for r in resps {
-            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
-            let m = Matrix::from_vec(rows, cols, data);
-            acc.axpy_mat(1.0, &m);
-        }
-        acc.scale_mut(1.0 / workers.len() as f64);
-        let mut st = self.stats.lock().unwrap();
-        st.vectors_gathered += (workers.len() * self.d) as u64;
-        Ok(acc)
-    }
-
-    /// Gather every machine's local top-`k` eigenbasis (`d x k` each).
-    /// One round, `m * k` vectors of traffic.
-    pub fn local_top_k(&self, k: usize) -> Result<Vec<Matrix>> {
-        let workers = self.alive_workers();
-        if workers.is_empty() {
-            bail!("no live workers");
-        }
-        let resps = self.exchange(&workers, &Request::LocalTopK { k })?;
-        let mut out = Vec::with_capacity(workers.len());
-        for r in resps {
-            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
-            out.push(Matrix::from_vec(rows, cols, data));
-        }
-        let mut st = self.stats.lock().unwrap();
-        st.vectors_gathered += (workers.len() * k) as u64;
-        Ok(out)
-    }
-
-    /// "Hot-potato" chain: pass the iterate machine-to-machine, each
-    /// making a full Oja pass over its local samples. `m` rounds.
-    pub fn oja_chain(&self, w0: &[f64], eta0: f64, t0: f64) -> Result<Vec<f64>> {
-        assert_eq!(w0.len(), self.d);
-        let workers = self.alive_workers();
-        if workers.is_empty() {
-            bail!("no live workers");
-        }
-        let mut w = w0.to_vec();
-        let mut t_start = 0u64;
-        for &i in &workers {
-            let resps = self.exchange(
-                &[i],
-                &Request::OjaPass { w: w.clone(), eta0, t0, t_start },
-            )?;
-            let Response::Vector(x) = &resps[0] else { bail!("unexpected response type") };
-            w = x.clone();
-            t_start += self.n as u64;
-            let mut st = self.stats.lock().unwrap();
-            st.vectors_broadcast += 1;
-            st.vectors_gathered += 1;
-        }
-        Ok(w)
-    }
-
     /// Kill a worker (failure injection for tests). Subsequent collective
-    /// ops exclude it; killing the leader's machine is not allowed.
+    /// ops — from every session — exclude it; killing the leader's
+    /// machine is not allowed.
     pub fn kill_worker(&self, i: usize) -> Result<()> {
         if i == 0 {
             bail!("machine 1 is the leader; cannot kill it");
@@ -501,7 +283,7 @@ impl Cluster {
         let mut dead = self.dead.lock().unwrap();
         if dead.insert(i) {
             // best effort: tell the thread to exit
-            let _ = self.senders[i].send((CONTROL_SEQ, Request::Shutdown));
+            let _ = self.wire.lock().unwrap().senders[i].send((CONTROL_SEQ, Request::Shutdown));
         }
         Ok(())
     }
@@ -514,7 +296,11 @@ impl Cluster {
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        for s in &self.senders {
+        let wire = match self.wire.get_mut() {
+            Ok(w) => w,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        for s in &wire.senders {
             let _ = s.send((CONTROL_SEQ, Request::Shutdown));
         }
         for h in &mut self.handles {
@@ -530,6 +316,7 @@ mod tests {
     use super::*;
     use crate::data::CovModel;
     use crate::linalg::vec_ops::{alignment_error, norm};
+    use crate::linalg::Matrix;
 
     fn small_cluster(m: usize, n: usize) -> (Cluster, Vec<f64>) {
         let dist = CovModel::paper_fig1(8, 3).gaussian();
@@ -537,14 +324,32 @@ mod tests {
         (Cluster::generate(&dist, m, n, 42).unwrap(), v1)
     }
 
+    /// Assert the cluster is shareable across threads (the tentpole's
+    /// compile-time requirement): `&Cluster` must cross thread
+    /// boundaries, and sessions must be creatable per thread.
+    #[test]
+    fn cluster_is_sync_and_sessions_run_from_scoped_threads() {
+        fn assert_sync<T: Sync>() {}
+        assert_sync::<Cluster>();
+        let (c, _) = small_cluster(3, 20);
+        let v = vec![1.0; 8];
+        let outs = std::thread::scope(|s| {
+            let h1 = s.spawn(|| c.session().dist_matvec(&v).unwrap());
+            let h2 = s.spawn(|| c.session().dist_matvec(&v).unwrap());
+            (h1.join().unwrap(), h2.join().unwrap())
+        });
+        assert_eq!(outs.0, outs.1, "same query, same cluster, same answer");
+    }
+
     #[test]
     fn dist_matvec_matches_mean_of_local() {
         let (c, _) = small_cluster(4, 50);
+        let s = c.session();
         let v: Vec<f64> = (0..8).map(|i| (i as f64 + 1.0) / 8.0).collect();
-        let got = c.dist_matvec(&v).unwrap();
+        let got = s.dist_matvec(&v).unwrap();
         // reference: average the per-shard matvecs via a second cluster
         // primitive (gram_average)
-        let g = c.gram_average().unwrap();
+        let g = s.gram_average().unwrap();
         let want = g.matvec(&v);
         for i in 0..8 {
             assert!((got[i] - want[i]).abs() < 1e-10);
@@ -554,36 +359,78 @@ mod tests {
     #[test]
     fn stats_accounting() {
         let (c, _) = small_cluster(3, 20);
+        let s = c.session();
         let v = vec![1.0; 8];
-        c.dist_matvec(&v).unwrap();
-        c.dist_matvec(&v).unwrap();
-        let st = c.stats();
+        s.dist_matvec(&v).unwrap();
+        s.dist_matvec(&v).unwrap();
+        let st = s.stats();
         assert_eq!(st.rounds, 2);
         assert_eq!(st.matvec_products, 2);
         assert_eq!(st.vectors_broadcast, 2);
         assert_eq!(st.vectors_gathered, 6);
-        c.reset_stats();
-        assert_eq!(c.stats().rounds, 0);
+        s.reset_stats();
+        assert_eq!(s.stats().rounds, 0);
+        // the aggregate is monotonic: a session reset does not touch it
+        assert_eq!(c.aggregate_stats().rounds, 2);
+    }
+
+    #[test]
+    fn sessions_bill_independently_and_sum_to_aggregate() {
+        let (c, _) = small_cluster(3, 20);
+        let a = c.session();
+        let b = c.session();
+        let v = vec![1.0; 8];
+        a.dist_matvec(&v).unwrap();
+        a.dist_matvec(&v).unwrap();
+        b.gram_average().unwrap();
+        assert_eq!(a.stats().rounds, 2, "tenant A pays only its own rounds");
+        assert_eq!(b.stats().rounds, 1, "tenant B pays only its own round");
+        assert_eq!(a.stats().vectors_gathered, 6);
+        assert_eq!(b.stats().vectors_gathered, 3 * 8);
+        let mut sum = a.stats();
+        sum.merge(&b.stats());
+        assert_eq!(sum, c.aggregate_stats());
+    }
+
+    #[test]
+    fn per_session_codecs_do_not_interfere() {
+        // a lossy tenant must not degrade a concurrent lossless tenant's
+        // traffic — the codec is session state, not cluster state
+        let (c, _) = small_cluster(2, 30);
+        let lossless = c.session();
+        let lossy = c.session();
+        lossy.set_codec(WireCodec::new(WirePrecision::Bf16));
+        let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.731).sin() * 1.0001 + 0.1).collect();
+        let exact = lossless.dist_matvec(&x).unwrap();
+        let coarse = lossy.dist_matvec(&x).unwrap();
+        let again = lossless.dist_matvec(&x).unwrap();
+        assert_eq!(exact, again, "lossless tenant must stay bit-exact");
+        let total: f64 = exact.iter().zip(&coarse).map(|(a, b)| (a - b).abs()).sum();
+        assert!(total > 0.0, "bf16 tenant must actually ship quantized frames");
+        // and the bills reflect each tenant's own wire width
+        assert_eq!(lossless.stats().bytes, 2 * 8 * 8 * 3, "two lossless rounds at 8B/entry");
+        assert_eq!(lossy.stats().bytes, 2 * 8 * 3, "one bf16 round at 2B/entry");
     }
 
     #[test]
     fn local_eigvecs_count_and_norm() {
         let (c, v1) = small_cluster(5, 400);
-        let vs = c.local_top_eigvecs(false).unwrap();
+        let s = c.session();
+        let vs = s.local_top_eigvecs(false).unwrap();
         assert_eq!(vs.len(), 5);
         for v in &vs {
             assert!((norm(v) - 1.0).abs() < 1e-10);
             // with n=400 each local ERM is already well aligned
             assert!(alignment_error(v, &v1) < 0.2);
         }
-        assert_eq!(c.stats().rounds, 1);
+        assert_eq!(s.stats().rounds, 1);
     }
 
     #[test]
     fn unbiased_signs_flip_randomly() {
         let dist = CovModel::paper_fig1(4, 3).gaussian();
         let c = Cluster::generate(&dist, 16, 100, 7).unwrap();
-        let vs = c.local_top_eigvecs(true).unwrap();
+        let vs = c.session().local_top_eigvecs(true).unwrap();
         // sign wrt v1: with 16 unbiased machines, both signs should appear
         let signs: Vec<bool> = vs
             .iter()
@@ -596,11 +443,12 @@ mod tests {
     #[test]
     fn oja_chain_runs_m_rounds() {
         let (c, _) = small_cluster(4, 30);
+        let s = c.session();
         let mut w0 = vec![0.0; 8];
         w0[0] = 1.0;
-        let w = c.oja_chain(&w0, 0.5, 10.0).unwrap();
+        let w = s.oja_chain(&w0, 0.5, 10.0).unwrap();
         assert!((norm(&w) - 1.0).abs() < 1e-9);
-        assert_eq!(c.stats().rounds, 4);
+        assert_eq!(s.stats().rounds, 4);
     }
 
     #[test]
@@ -608,11 +456,11 @@ mod tests {
         let (c, _) = small_cluster(4, 20);
         c.kill_worker(2).unwrap();
         assert_eq!(c.live(), 3);
+        let s = c.session();
         let v = vec![1.0; 8];
-        let out = c.dist_matvec(&v).unwrap();
+        let out = s.dist_matvec(&v).unwrap();
         assert_eq!(out.len(), 8);
-        let st = c.stats();
-        assert_eq!(st.vectors_gathered, 3);
+        assert_eq!(s.stats().vectors_gathered, 3);
     }
 
     #[test]
@@ -624,17 +472,18 @@ mod tests {
     #[test]
     fn dist_matmat_matches_columnwise_matvec() {
         let (c, _) = small_cluster(4, 60);
+        let s = c.session();
         let k = 3;
         let mut v = Matrix::zeros(8, k);
         for col in 0..k {
             let x: Vec<f64> = (0..8).map(|i| ((i + col) as f64 * 0.37).sin()).collect();
             v.set_col(col, &x);
         }
-        let blk = c.dist_matmat(&v).unwrap();
+        let blk = s.dist_matmat(&v).unwrap();
         assert_eq!(blk.rows(), 8);
         assert_eq!(blk.cols(), k);
         for col in 0..k {
-            let want = c.dist_matvec(&v.col(col)).unwrap();
+            let want = s.dist_matvec(&v.col(col)).unwrap();
             for i in 0..8 {
                 assert!((blk.get(i, col) - want[i]).abs() < 1e-12, "col {col} row {i}");
             }
@@ -644,10 +493,11 @@ mod tests {
     #[test]
     fn dist_matmat_accounting_matches_table() {
         let (c, _) = small_cluster(3, 20);
+        let s = c.session();
         let k = 5;
         let v = Matrix::from_vec(8, k, (0..8 * k).map(|i| i as f64 * 0.01).collect());
-        c.dist_matmat(&v).unwrap();
-        let st = c.stats();
+        s.dist_matmat(&v).unwrap();
+        let st = s.stats();
         assert_eq!(st.rounds, 1);
         assert_eq!(st.matvec_products, k as u64);
         assert_eq!(st.vectors_broadcast, k as u64);
@@ -663,15 +513,16 @@ mod tests {
         let (c, _) = small_cluster(3, 20);
         let k = 4;
         let v = Matrix::from_vec(8, k, (0..8 * k).map(|i| (i as f64).cos()).collect());
+        let looped = c.session();
         for col in 0..k {
-            c.dist_matvec(&v.col(col)).unwrap();
+            looped.dist_matvec(&v.col(col)).unwrap();
         }
-        let loop_stats = c.stats();
+        let loop_stats = looped.stats();
         assert_eq!(loop_stats.rounds, k as u64);
         assert_eq!(loop_stats.requests_sent, (3 * k) as u64);
-        c.reset_stats();
-        c.dist_matmat(&v).unwrap();
-        let blk_stats = c.stats();
+        let blocked = c.session();
+        blocked.dist_matmat(&v).unwrap();
+        let blk_stats = blocked.stats();
         assert_eq!(blk_stats.rounds, 1);
         assert_eq!(blk_stats.requests_sent, 3);
         // same vector traffic either way
@@ -684,30 +535,30 @@ mod tests {
         c.kill_worker(2).unwrap();
         assert_eq!(c.live(), 3);
         // gram_average
-        c.reset_stats();
-        let g = c.gram_average().unwrap();
+        let s = c.session();
+        let g = s.gram_average().unwrap();
         assert_eq!(g.rows(), 8);
-        assert_eq!(c.stats().responses_received, 3);
+        assert_eq!(s.stats().responses_received, 3);
         // local_top_k
-        c.reset_stats();
-        let locals = c.local_top_k(2).unwrap();
+        let s = c.session();
+        let locals = s.local_top_k(2).unwrap();
         assert_eq!(locals.len(), 3);
-        assert_eq!(c.stats().vectors_gathered, 6);
+        assert_eq!(s.stats().vectors_gathered, 6);
         // oja_chain: live rounds, one handoff per live machine
-        c.reset_stats();
+        let s = c.session();
         let mut w0 = vec![0.0; 8];
         w0[0] = 1.0;
-        let w = c.oja_chain(&w0, 0.5, 10.0).unwrap();
+        let w = s.oja_chain(&w0, 0.5, 10.0).unwrap();
         assert!((crate::linalg::vec_ops::norm(&w) - 1.0).abs() < 1e-9);
-        assert_eq!(c.stats().rounds, 3);
-        assert_eq!(c.stats().requests_sent, 3);
+        assert_eq!(s.stats().rounds, 3);
+        assert_eq!(s.stats().requests_sent, 3);
         // dist_matmat: averages over survivors only
-        c.reset_stats();
+        let s = c.session();
         let v = Matrix::from_vec(8, 2, (0..16).map(|i| i as f64 * 0.1).collect());
-        let blk = c.dist_matmat(&v).unwrap();
+        let blk = s.dist_matmat(&v).unwrap();
         assert_eq!(blk.cols(), 2);
-        assert_eq!(c.stats().vectors_gathered, 6);
-        assert_eq!(c.stats().requests_sent, 3);
+        assert_eq!(s.stats().vectors_gathered, 6);
+        assert_eq!(s.stats().requests_sent, 3);
         // block average equals the survivors' gram average applied to v
         let want = g.matmul(&v);
         assert!(blk.sub(&want).max_abs() < 1e-10);
@@ -719,17 +570,18 @@ mod tests {
         c.kill_worker(1).unwrap();
         c.kill_worker(4).unwrap();
         assert_eq!(c.live(), 3);
-        let g = c.gram_average().unwrap();
+        let s = c.session();
+        let g = s.gram_average().unwrap();
         assert_eq!(g.cols(), 8);
-        let locals = c.local_top_k(3).unwrap();
+        let locals = s.local_top_k(3).unwrap();
         assert_eq!(locals.len(), 3);
-        let vs = c.local_top_eigvecs(false).unwrap();
+        let vs = s.local_top_eigvecs(false).unwrap();
         assert_eq!(vs.len(), 3);
         let mut w0 = vec![0.0; 8];
         w0[1] = 1.0;
-        assert!(c.oja_chain(&w0, 0.5, 10.0).is_ok());
+        assert!(s.oja_chain(&w0, 0.5, 10.0).is_ok());
         let v = Matrix::from_vec(8, 2, vec![0.25; 16]);
-        assert!(c.dist_matmat(&v).is_ok());
+        assert!(s.dist_matmat(&v).is_ok());
         // killing the same worker twice is a no-op, not an error
         c.kill_worker(1).unwrap();
         assert_eq!(c.live(), 3);
@@ -739,13 +591,14 @@ mod tests {
     fn failed_collective_does_not_poison_the_next_one() {
         // every worker rejects local_top_k(k > d); the error must not
         // leave stale responses in the shared channel for the next
-        // collective to misread
+        // collective — even one from a *different* session — to misread
         let (c, _) = small_cluster(3, 20);
-        assert!(c.local_top_k(99).is_err());
+        assert!(c.session().local_top_k(99).is_err());
+        let s = c.session();
         let v = vec![1.0; 8];
-        let a = c.dist_matvec(&v).unwrap();
+        let a = s.dist_matvec(&v).unwrap();
         // and the result is the real matvec, not a stale frame
-        let g = c.gram_average().unwrap();
+        let g = s.gram_average().unwrap();
         let want = g.matvec(&v);
         for i in 0..8 {
             assert!((a[i] - want[i]).abs() < 1e-10);
@@ -761,9 +614,9 @@ mod tests {
         // load-bearing assertion here is rounds == 1; the message
         // counts pin the billed-as-they-happen behavior alongside it.
         let (c, _) = small_cluster(3, 20);
-        c.reset_stats();
-        assert!(c.local_top_k(99).is_err());
-        let st = c.stats();
+        let s = c.session();
+        assert!(s.local_top_k(99).is_err());
+        let st = s.stats();
         assert_eq!(st.rounds, 1, "the round happened even though it failed");
         assert_eq!(st.requests_sent, 3, "three requests crossed the wire");
         assert_eq!(st.responses_received, 3, "three Err replies crossed the wire");
@@ -778,56 +631,118 @@ mod tests {
         for (prec, bpe) in
             [(WirePrecision::F64, 8u64), (WirePrecision::F32, 4), (WirePrecision::Bf16, 2)]
         {
-            c.set_codec(WireCodec::new(prec));
-            c.reset_stats();
-            c.dist_matvec(&v).unwrap();
+            let s = c.session();
+            s.set_codec(WireCodec::new(prec));
+            s.dist_matvec(&v).unwrap();
             // B(d)·(live+1) with d = 8, live = 3
-            assert_eq!(c.stats().bytes, bpe * 8 * 4, "{prec:?}");
+            assert_eq!(s.stats().bytes, bpe * 8 * 4, "{prec:?}");
         }
-        c.set_codec(WireCodec::default());
-        assert_eq!(c.codec(), WireCodec::lossless());
+        // a fresh session always starts lossless
+        assert_eq!(c.session().codec(), WireCodec::lossless());
     }
 
     #[test]
-    fn straggler_reply_bills_at_its_own_rounds_width_and_is_dropped() {
-        // drive the sequence-number path for real: pretend an exchange
-        // (seq 1000) timed out under a bf16 codec with one reply still
-        // in flight, then have worker 1 actually answer it — the way a
-        // stalled worker eventually would. The next collective must
-        // drain the straggler, bill it at *bf16* width (not the current
-        // lossless codec's), and deliver an unpoisoned result.
+    fn straggler_reply_bills_to_the_session_that_issued_it() {
+        // regression (ISSUE 3 satellite): drive the sequence-number
+        // path across tenants. Pretend tenant A's exchange (seq 1000)
+        // timed out under a bf16 codec with one reply still in flight,
+        // then have worker 1 actually answer it — the way a stalled
+        // worker eventually would. Tenant B's next collective drains
+        // the straggler; the bill must land on **A** (whose round it
+        // was, at A's bf16 width), not on B, and B's result must be
+        // unpoisoned.
         let (c, _) = small_cluster(2, 20);
+        let issuer = c.session();
+        let drainer = c.session();
         let v = vec![0.3; 8];
-        let g = c.gram_average().unwrap();
+        let g = drainer.gram_average().unwrap();
         let want = g.matvec(&v);
-        c.inflight
-            .lock()
-            .unwrap()
-            .insert(1000, (WireCodec::new(WirePrecision::Bf16), 1));
-        c.senders[1].send((1000, Request::CovMatVec(v.clone()))).unwrap();
-        c.reset_stats();
-        let got = c.dist_matvec(&v).unwrap();
+        {
+            let mut wire = c.wire.lock().unwrap();
+            wire.inflight.insert(
+                1000,
+                Inflight {
+                    codec: WireCodec::new(WirePrecision::Bf16),
+                    outstanding: 1,
+                    owner: Arc::downgrade(&issuer.core),
+                },
+            );
+            wire.senders[1].send((1000, Request::CovMatVec(v.clone()))).unwrap();
+        }
+        issuer.reset_stats();
+        drainer.reset_stats();
+        let got = drainer.dist_matvec(&v).unwrap();
         for i in 0..8 {
             assert!((got[i] - want[i]).abs() < 1e-10, "straggler poisoned the result");
         }
-        let st = c.stats();
-        assert_eq!(st.requests_sent, 2);
-        assert_eq!(st.responses_received, 3, "the straggler is billed on arrival");
-        // 8·d·(live+1) for the real round + 2·d for the bf16 straggler
-        assert_eq!(st.bytes, (8 * 8 * 3 + 2 * 8) as u64);
-        assert_eq!(st.vectors_gathered, 2, "only genuine replies are delivered");
-        assert!(c.inflight.lock().unwrap().is_empty(), "straggler record is forgotten");
+        let db = drainer.stats();
+        assert_eq!(db.requests_sent, 2);
+        assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
+        // 8·d·(live+1) for the drainer's real round, nothing else
+        assert_eq!(db.bytes, (8 * 8 * 3) as u64);
+        assert_eq!(db.vectors_gathered, 2, "only genuine replies are delivered");
+        let ib = issuer.stats();
+        assert_eq!(ib.responses_received, 1, "the straggler bills to its issuer on arrival");
+        assert_eq!(ib.bytes, (2 * 8) as u64, "at the bf16 width its round shipped under");
+        assert!(c.wire.lock().unwrap().inflight.is_empty(), "straggler record is forgotten");
+    }
+
+    #[test]
+    fn straggler_for_a_closed_session_is_dropped_unbilled() {
+        // the second regression path: the issuing session is closed
+        // before its straggler lands. The reply must be drained (so it
+        // cannot poison anyone) but billed nowhere — neither to the
+        // draining tenant nor to the aggregate, which stays equal to
+        // the sum of live sessions' bills.
+        let (c, _) = small_cluster(2, 20);
+        let v = vec![0.3; 8];
+        {
+            let issuer = c.session();
+            let mut wire = c.wire.lock().unwrap();
+            wire.inflight.insert(
+                2000,
+                Inflight {
+                    codec: WireCodec::new(WirePrecision::Bf16),
+                    outstanding: 1,
+                    owner: Arc::downgrade(&issuer.core),
+                },
+            );
+            wire.senders[1].send((2000, Request::CovMatVec(v.clone()))).unwrap();
+            // `issuer` drops here: the session is closed
+        }
+        let agg0 = c.aggregate_stats();
+        let drainer = c.session();
+        let got = drainer.dist_matvec(&v).unwrap();
+        assert_eq!(got.len(), 8);
+        let db = drainer.stats();
+        assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
+        assert_eq!(db.bytes, (8 * 8 * 3) as u64);
+        // aggregate window == drainer's bill: the orphan straggler was
+        // dropped without billing anyone
+        assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
+        assert!(c.wire.lock().unwrap().inflight.is_empty(), "orphan record is forgotten");
+    }
+
+    #[test]
+    fn session_close_returns_the_final_bill() {
+        let (c, _) = small_cluster(2, 15);
+        let s = c.session();
+        let v = vec![1.0; 8];
+        s.dist_matvec(&v).unwrap();
+        let snapshot = s.stats();
+        assert_eq!(s.close(), snapshot, "close() is the bill, race-free");
     }
 
     #[test]
     fn lossy_codec_actually_quantizes_the_wire() {
         let (c, _) = small_cluster(2, 30);
         let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.731).sin() * 1.0001 + 0.1).collect();
-        let exact = c.dist_matvec(&x).unwrap();
-        c.set_codec(WireCodec::new(WirePrecision::Bf16));
-        let coarse = c.dist_matvec(&x).unwrap();
-        c.set_codec(WireCodec::default());
-        let again = c.dist_matvec(&x).unwrap();
+        let s = c.session();
+        let exact = s.dist_matvec(&x).unwrap();
+        s.set_codec(WireCodec::new(WirePrecision::Bf16));
+        let coarse = s.dist_matvec(&x).unwrap();
+        s.set_codec(WireCodec::default());
+        let again = s.dist_matvec(&x).unwrap();
         assert_eq!(exact, again, "default codec must be bit-exact");
         let total: f64 = exact.iter().zip(&coarse).map(|(a, b)| (a - b).abs()).sum();
         assert!(total > 0.0, "bf16 codec must actually perturb the wire");
@@ -840,11 +755,12 @@ mod tests {
     #[test]
     fn dist_matmat_single_column_agrees_with_matvec() {
         let (c, _) = small_cluster(2, 15);
+        let s = c.session();
         let x: Vec<f64> = (0..8).map(|i| 1.0 / (i as f64 + 1.0)).collect();
         let mut v = Matrix::zeros(8, 1);
         v.set_col(0, &x);
-        let blk = c.dist_matmat(&v).unwrap();
-        let want = c.dist_matvec(&x).unwrap();
+        let blk = s.dist_matmat(&v).unwrap();
+        let want = s.dist_matvec(&x).unwrap();
         for i in 0..8 {
             assert!((blk.get(i, 0) - want[i]).abs() < 1e-14);
         }
@@ -856,6 +772,8 @@ mod tests {
         let c = Cluster::generate(&dist, 3, 25, 9).unwrap();
         assert_eq!(c.leader_shard().n(), 25);
         assert_eq!(c.leader_shard().d(), 4);
+        // visible through the session view too
+        assert_eq!(c.session().leader_shard().d(), 4);
     }
 
     #[test]

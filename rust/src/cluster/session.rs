@@ -1,0 +1,451 @@
+//! Per-tenant session: the billing and collective API of the cluster.
+//!
+//! A [`Session`] is one tenant's view of a shared [`Cluster`]: it owns
+//! its own [`CommStats`] bill, its own [`WireCodec`] (a lossy tenant
+//! cannot degrade a concurrent lossless tenant's traffic), and the
+//! sequence numbers it draws from the cluster-wide namespace. Every
+//! collective primitive lives here; the cluster itself only routes
+//! messages, tracks worker liveness, and keeps the monotonic aggregate
+//! bill ([`Cluster::aggregate_stats`]).
+//!
+//! **Concurrency model.** `Cluster` is `Sync`, so any number of leader
+//! threads may hold sessions on one cluster. Wire access is serialized
+//! at exchange granularity: one collective = one atomic
+//! send-all/drain-all critical section under the cluster's wire lock,
+//! so concurrent tenants interleave *between* rounds, never inside one.
+//! Consequently every session's bill is identical to the bill the same
+//! query would produce running alone — the multi-tenant accounting
+//! invariant the propcheck properties in `tests/integration.rs` assert.
+//!
+//! **Billing.** Each increment is applied twice: to the session's own
+//! stats and to the cluster aggregate, so the aggregate is always the
+//! sum of everything ever billed to any session — and equals the sum
+//! of the current session bills whenever none has been reset
+//! (stragglers from a closed session are dropped unbilled on both
+//! sides — see the exchange internals below).
+
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::data::Shard;
+use crate::linalg::Matrix;
+
+use super::comm::CommStats;
+use super::message::{Request, Response};
+use super::wire::WireCodec;
+use super::{prune_inflight, Cluster, Inflight};
+
+/// The session state shared with the cluster's straggler-routing table:
+/// inflight records hold a `Weak` to this, so a late reply can be billed
+/// to the tenant that issued its sequence number — or dropped cleanly if
+/// that tenant is gone.
+pub(super) struct SessionCore {
+    pub(super) stats: Mutex<CommStats>,
+    pub(super) codec: Mutex<WireCodec>,
+}
+
+/// One tenant's handle on a shared [`Cluster`]: per-session
+/// communication bill, per-session wire codec, and the full collective
+/// API ([`Session::dist_matvec`], [`Session::dist_matmat`],
+/// [`Session::local_top_eigvecs`], [`Session::local_top_k`],
+/// [`Session::gram_average`], [`Session::oja_chain`]).
+///
+/// Create one with [`Cluster::session`]. Sessions are cheap (two mutexes
+/// behind an `Arc`); single-query callers make one per run, services
+/// make one per tenant/query. Dropping the session closes it: any
+/// straggler reply still in flight for its sequence numbers is dropped
+/// instead of billed.
+pub struct Session<'c> {
+    pub(super) cluster: &'c Cluster,
+    pub(super) core: Arc<SessionCore>,
+}
+
+impl<'c> Session<'c> {
+    pub(super) fn new(cluster: &'c Cluster) -> Session<'c> {
+        Session {
+            cluster,
+            core: Arc::new(SessionCore {
+                stats: Mutex::new(CommStats::default()),
+                codec: Mutex::new(WireCodec::default()),
+            }),
+        }
+    }
+
+    /// The shared cluster this session runs on.
+    pub fn cluster(&self) -> &'c Cluster {
+        self.cluster
+    }
+
+    /// Number of machines `m`.
+    pub fn m(&self) -> usize {
+        self.cluster.m()
+    }
+
+    /// Per-machine sample size `n`.
+    pub fn n(&self) -> usize {
+        self.cluster.n()
+    }
+
+    /// Dimension `d`.
+    pub fn d(&self) -> usize {
+        self.cluster.d()
+    }
+
+    /// Number of live machines.
+    pub fn live(&self) -> usize {
+        self.cluster.live()
+    }
+
+    /// Machine 1's shard, visible to the leader for free (the leader *is*
+    /// machine 1 in the paper's model).
+    pub fn leader_shard(&self) -> &Shard {
+        self.cluster.leader_shard()
+    }
+
+    /// This session's communication bill since creation or the last
+    /// [`Session::reset_stats`]. Only traffic this session generated is
+    /// in here — concurrent tenants bill separately.
+    pub fn stats(&self) -> CommStats {
+        self.core.stats.lock().unwrap().clone()
+    }
+
+    /// Zero this session's bill. The cluster aggregate is monotonic and
+    /// unaffected.
+    pub fn reset_stats(&self) {
+        *self.core.stats.lock().unwrap() = CommStats::default();
+    }
+
+    /// The wire codec installed on this session (default: lossless f64).
+    pub fn codec(&self) -> WireCodec {
+        *self.core.codec.lock().unwrap()
+    }
+
+    /// Install a wire codec **for this session only**. Every subsequent
+    /// payload this session ships passes through it: lossy codecs both
+    /// shrink the billed frames and degrade the delivered vectors,
+    /// exactly as a real quantized wire would — without touching any
+    /// concurrent tenant's traffic.
+    pub fn set_codec(&self, codec: WireCodec) {
+        *self.core.codec.lock().unwrap() = codec;
+    }
+
+    /// Close the session and return its final bill, **race-free**: after
+    /// this returns, no straggler can be billed to this session anymore,
+    /// and every straggler that *was* billed to it (by a concurrent
+    /// tenant's drain, possibly after the algorithm's own stats
+    /// snapshot) is included. This is what makes "Σ closed-session bills
+    /// == aggregate window" exact for schedulers like `serve`: a plain
+    /// drop + earlier `stats()` snapshot leaves a window in which a late
+    /// reply lands on the aggregate but not on any report.
+    pub fn close(self) -> CommStats {
+        let Session { mut core, .. } = self;
+        loop {
+            // A straggler biller holds a transient strong ref (upgrade →
+            // bill both ledgers → drop) under the wire lock, so this
+            // loop is bounded by that critical section. Once `try_unwrap`
+            // succeeds the strong count is zero: upgrades fail, billing
+            // is impossible, and the stats we now own are final.
+            match Arc::try_unwrap(core) {
+                Ok(owned) => {
+                    return owned.stats.into_inner().unwrap_or_else(|p| p.into_inner());
+                }
+                Err(still_shared) => {
+                    core = still_shared;
+                    std::thread::yield_now();
+                }
+            }
+        }
+    }
+
+    /// Apply one billing increment to both ledgers: this session's stats
+    /// and the cluster aggregate. Keeping the two writes in one place is
+    /// what makes "sum of session bills == aggregate" hold by
+    /// construction.
+    fn bill(&self, f: impl Fn(&mut CommStats)) {
+        f(&mut self.core.stats.lock().unwrap());
+        f(&mut self.cluster.aggregate.lock().unwrap());
+    }
+
+    /// Send `req` to a set of workers and collect their responses in
+    /// worker order. One call is one synchronous round, executed as one
+    /// critical section under the cluster's wire lock (concurrent
+    /// sessions serialize at round granularity). The round, every
+    /// request message, and every response message are billed **as they
+    /// happen** — to this session and the cluster aggregate — so a
+    /// timed-out or partially-failed collective still pays for the
+    /// traffic it actually generated.
+    ///
+    /// Payloads pass through this session's [`WireCodec`] in both
+    /// directions: the request payload is encoded once — the §2.1 model
+    /// bills a broadcast against the channel, not per recipient — and
+    /// each response payload on arrival, with `CommStats.bytes` advanced
+    /// by the encoded frames' sizes and the decoded (possibly lossy)
+    /// values delivered onward.
+    ///
+    /// On worker failure, the **full** response set is still drained
+    /// before the error is reported: the response channel is shared by
+    /// every session, so bailing early would leave the surviving
+    /// workers' replies queued. Replies that *do* outlive their exchange
+    /// (a worker stalls past the timeout and answers later) are caught
+    /// by the sequence number every worker echoes: a stale reply is
+    /// billed on arrival **to the session that issued that sequence
+    /// number** — it really crossed the wire, at the codec width its own
+    /// round shipped under (tracked per failed exchange in the wire
+    /// state's inflight map) — whichever tenant happens to drain it. If
+    /// the issuing session has since been closed (or the record aged
+    /// out), the reply is dropped unbilled on both ledgers, keeping
+    /// "sum of session bills == aggregate" exact.
+    fn exchange(&self, workers: &[usize], req: &Request) -> Result<Vec<Response>> {
+        let codec = self.codec();
+        let seq = self.cluster.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        let mut guard = self.cluster.wire.lock().unwrap();
+        let wire = &mut *guard;
+        let mut req = req.clone();
+        let req_bytes = req.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
+        let mut sent = 0usize;
+        for &w in workers {
+            if wire.senders[w].send((seq, req.clone())).is_err() {
+                if sent > 0 {
+                    // the workers already reached may still reply; leave
+                    // a record so their stragglers bill to this session
+                    // at this width
+                    prune_inflight(&mut wire.inflight, seq);
+                    wire.inflight.insert(
+                        seq,
+                        Inflight { codec, outstanding: sent, owner: Arc::downgrade(&self.core) },
+                    );
+                }
+                bail!("worker {w} channel closed");
+            }
+            sent += 1;
+            let first = sent == 1;
+            self.bill(|st| {
+                st.requests_sent += 1;
+                if first {
+                    // the round and its broadcast frame hit the wire with
+                    // the first successful send, and are billed once
+                    // regardless of fan-out; if no send succeeds, no
+                    // traffic existed and nothing is billed
+                    st.rounds += 1;
+                    st.bytes += req_bytes;
+                }
+            });
+        }
+        let mut responses: Vec<Option<Response>> = vec![None; self.cluster.m()];
+        let mut first_err: Option<(usize, String)> = None;
+        let mut got = 0usize;
+        while got < workers.len() {
+            let (id, rseq, mut resp) = match wire.receiver.recv_timeout(self.cluster.timeout) {
+                Ok(msg) => msg,
+                Err(_) => {
+                    prune_inflight(&mut wire.inflight, seq);
+                    wire.inflight.insert(
+                        seq,
+                        Inflight {
+                            codec,
+                            outstanding: workers.len() - got,
+                            owner: Arc::downgrade(&self.core),
+                        },
+                    );
+                    bail!("timed out waiting for worker response");
+                }
+            };
+            if rseq != seq {
+                // straggler from an exchange that already failed —
+                // possibly another session's. Bill it to the session
+                // that issued `rseq`, at the width its own round shipped
+                // under; if that session is closed or the record was
+                // pruned, drop the reply unbilled.
+                let mut record = None;
+                if let Some(rec) = wire.inflight.get_mut(&rseq) {
+                    rec.outstanding -= 1;
+                    record = Some((rec.codec, rec.owner.clone(), rec.outstanding == 0));
+                }
+                if let Some((stale_codec, owner, emptied)) = record {
+                    if emptied {
+                        wire.inflight.remove(&rseq);
+                    }
+                    if let Some(owner) = owner.upgrade() {
+                        let stale_bytes =
+                            resp.payload().map_or(0, |p| stale_codec.frame_bytes(p.len())) as u64;
+                        {
+                            let mut st = owner.stats.lock().unwrap();
+                            st.responses_received += 1;
+                            st.bytes += stale_bytes;
+                        }
+                        let mut agg = self.cluster.aggregate.lock().unwrap();
+                        agg.responses_received += 1;
+                        agg.bytes += stale_bytes;
+                    }
+                }
+                continue;
+            }
+            let resp_bytes = resp.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
+            self.bill(|st| {
+                st.responses_received += 1;
+                st.bytes += resp_bytes;
+            });
+            got += 1;
+            if let Response::Err(e) = resp {
+                if first_err.is_none() {
+                    first_err = Some((id, e));
+                }
+                continue;
+            }
+            responses[id] = Some(resp);
+        }
+        if let Some((id, e)) = first_err {
+            bail!("worker {id} failed: {e}");
+        }
+        Ok(workers.iter().map(|&w| responses[w].take().expect("missing response")).collect())
+    }
+
+    /// Distributed covariance matvec: `Xhat v = (1/m) sum_i Xhat_i v`.
+    /// One communication round; the core primitive of the power method,
+    /// Lanczos and the Shift-and-Invert solver (Algorithm 2, lines 2–6).
+    pub fn dist_matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        let d = self.d();
+        assert_eq!(v.len(), d);
+        let workers = self.cluster.alive_workers();
+        if workers.is_empty() {
+            bail!("no live workers");
+        }
+        let resps = self.exchange(&workers, &Request::CovMatVec(v.to_vec()))?;
+        let mut acc = vec![0.0; d];
+        for r in resps {
+            let Response::Vector(x) = r else { bail!("unexpected response type") };
+            crate::linalg::vec_ops::axpy(&mut acc, 1.0, &x);
+        }
+        crate::linalg::vec_ops::scale(&mut acc, 1.0 / workers.len() as f64);
+        self.bill(|st| {
+            st.matvec_products += 1;
+            st.vectors_broadcast += 1;
+            st.vectors_gathered += workers.len() as u64;
+        });
+        Ok(acc)
+    }
+
+    /// Distributed covariance **block** product:
+    /// `Xhat V = (1/live) sum_i Xhat_i V` for a `d x k` block `V`.
+    ///
+    /// The core primitive of the top-`k` family (block power / orthogonal
+    /// iteration, block Lanczos, batched deflation): **one round, one
+    /// request/response message per live worker, `k` vectors of traffic
+    /// each way** — where the column-wise loop it replaces paid `k`
+    /// rounds and `k` message round-trips per worker. Numerically
+    /// identical (up to summation order) to `k` [`Session::dist_matvec`]
+    /// calls on the columns of `V`; billed as `k` matvec products.
+    pub fn dist_matmat(&self, v: &Matrix) -> Result<Matrix> {
+        let d = self.d();
+        assert_eq!(v.rows(), d, "dist_matmat: block must be d x k");
+        let k = v.cols();
+        assert!(k >= 1, "dist_matmat: empty block");
+        let workers = self.cluster.alive_workers();
+        if workers.is_empty() {
+            bail!("no live workers");
+        }
+        let req = Request::CovMatMat { rows: d, cols: k, data: v.data().to_vec() };
+        let resps = self.exchange(&workers, &req)?;
+        let mut acc = Matrix::zeros(d, k);
+        for r in resps {
+            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
+            if rows != d || cols != k {
+                bail!("dist_matmat: worker returned {rows}x{cols}, expected {d}x{k}");
+            }
+            acc.axpy_mat(1.0, &Matrix::from_vec(rows, cols, data));
+        }
+        acc.scale_mut(1.0 / workers.len() as f64);
+        self.bill(|st| {
+            st.matvec_products += k as u64;
+            st.vectors_broadcast += k as u64;
+            st.vectors_gathered += (workers.len() * k) as u64;
+        });
+        Ok(acc)
+    }
+
+    /// Gather every machine's local ERM solution (leading eigenvector of
+    /// its `Xhat_i`). One round, `m` vectors to the leader. With
+    /// `unbiased_signs`, each machine flips its eigenvector's sign by a
+    /// private fair coin — the "unbiased ERM" premise of Theorem 3.
+    pub fn local_top_eigvecs(&self, unbiased_signs: bool) -> Result<Vec<Vec<f64>>> {
+        let workers = self.cluster.alive_workers();
+        if workers.is_empty() {
+            bail!("no live workers");
+        }
+        let resps = self.exchange(&workers, &Request::LocalTopEigvec { unbiased_signs })?;
+        let mut out = Vec::with_capacity(workers.len());
+        for r in resps {
+            let Response::Vector(x) = r else { bail!("unexpected response type") };
+            out.push(x);
+        }
+        self.bill(|st| st.vectors_gathered += workers.len() as u64);
+        Ok(out)
+    }
+
+    /// Average of the local empirical covariances — the **centralized**
+    /// baseline's input. One round but `m * d` vectors of traffic (the
+    /// paper's round model only ships `R^d` vectors; this is the
+    /// "ship-everything" reference point, not a round-efficient method).
+    pub fn gram_average(&self) -> Result<Matrix> {
+        let d = self.d();
+        let workers = self.cluster.alive_workers();
+        if workers.is_empty() {
+            bail!("no live workers");
+        }
+        let resps = self.exchange(&workers, &Request::Gram)?;
+        let mut acc = Matrix::zeros(d, d);
+        for r in resps {
+            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
+            let m = Matrix::from_vec(rows, cols, data);
+            acc.axpy_mat(1.0, &m);
+        }
+        acc.scale_mut(1.0 / workers.len() as f64);
+        self.bill(|st| st.vectors_gathered += (workers.len() * d) as u64);
+        Ok(acc)
+    }
+
+    /// Gather every machine's local top-`k` eigenbasis (`d x k` each).
+    /// One round, `m * k` vectors of traffic.
+    pub fn local_top_k(&self, k: usize) -> Result<Vec<Matrix>> {
+        let workers = self.cluster.alive_workers();
+        if workers.is_empty() {
+            bail!("no live workers");
+        }
+        let resps = self.exchange(&workers, &Request::LocalTopK { k })?;
+        let mut out = Vec::with_capacity(workers.len());
+        for r in resps {
+            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
+            out.push(Matrix::from_vec(rows, cols, data));
+        }
+        self.bill(|st| st.vectors_gathered += (workers.len() * k) as u64);
+        Ok(out)
+    }
+
+    /// "Hot-potato" chain: pass the iterate machine-to-machine, each
+    /// making a full Oja pass over its local samples. `m` rounds (one
+    /// exchange per live machine — concurrent tenants may interleave
+    /// between the hops, never inside one).
+    pub fn oja_chain(&self, w0: &[f64], eta0: f64, t0: f64) -> Result<Vec<f64>> {
+        assert_eq!(w0.len(), self.d());
+        let workers = self.cluster.alive_workers();
+        if workers.is_empty() {
+            bail!("no live workers");
+        }
+        let mut w = w0.to_vec();
+        let mut t_start = 0u64;
+        for &i in &workers {
+            let resps =
+                self.exchange(&[i], &Request::OjaPass { w: w.clone(), eta0, t0, t_start })?;
+            let Response::Vector(x) = &resps[0] else { bail!("unexpected response type") };
+            w = x.clone();
+            t_start += self.n() as u64;
+            self.bill(|st| {
+                st.vectors_broadcast += 1;
+                st.vectors_gathered += 1;
+            });
+        }
+        Ok(w)
+    }
+}

@@ -2,7 +2,7 @@
 //!
 //! The paper's whole contribution is measured in communication cost, so
 //! the bytes column of [`CommStats`] must be *real*: instead of each
-//! collective hand-computing `8 * d * ...`, the cluster owns a
+//! collective hand-computing `8 * d * ...`, every tenant session owns a
 //! [`WireCodec`] and bills every message from the size of the frame the
 //! codec actually encodes ([`Frame::wire_bytes`]). The default codec is
 //! lossless f64 — encode/decode is a bit-exact roundtrip, so all
@@ -123,10 +123,12 @@ impl Frame {
     }
 }
 
-/// Encoder/decoder for wire payloads. [`Cluster`](super::Cluster) owns
-/// one (default: lossless) and passes every request/response payload
-/// through it; `CommStats.bytes` is the sum of the encoded frames'
-/// sizes, never per-collective `8 * d` arithmetic.
+/// Encoder/decoder for wire payloads. Each tenant
+/// [`Session`](super::Session) owns one (default: lossless) and passes
+/// every request/response payload it ships through it; `CommStats.bytes`
+/// is the sum of the encoded frames' sizes, never per-collective
+/// `8 * d` arithmetic. Per-session ownership means a lossy tenant
+/// cannot degrade a concurrent lossless tenant's traffic.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WireCodec {
     precision: WirePrecision,

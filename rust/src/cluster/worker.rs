@@ -8,7 +8,7 @@
 //! (PJRT clients are not `Send`).
 //!
 //! Workers see payloads exactly as the wire delivers them: the leader
-//! passes every request through the cluster's
+//! passes every request through the issuing session's
 //! [`WireCodec`](super::WireCodec) (encode→decode) before it reaches this
 //! loop, so under a lossy codec the shard math runs on the degraded
 //! vectors — no quantization logic lives here.
@@ -29,7 +29,7 @@ pub trait ComputeOracle {
     fn cov_matvec(&mut self, shard: &Shard, v: &[f64]) -> anyhow::Result<Vec<f64>>;
 
     /// Block product `Xhat_i V` for a `d x k` basis `V` — the local half
-    /// of the cluster's block protocol ([`crate::cluster::Cluster::dist_matmat`]).
+    /// of the cluster's block protocol ([`crate::cluster::Session::dist_matmat`]).
     ///
     /// Default: loop [`ComputeOracle::cov_matvec`] column by column, so
     /// every oracle is block-capable. Oracles with a batched kernel

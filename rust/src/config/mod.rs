@@ -39,6 +39,29 @@ impl Args {
         Self::parse(std::env::args().skip(1))
     }
 
+    /// Reject flags the subcommand does not accept. A typo'd flag
+    /// (`--n-lsit 25`) used to be silently ignored and the run proceeded
+    /// with defaults; now every `cmd_*` in `main.rs` declares its flag
+    /// set and unknown flags are a hard error listing the accepted ones.
+    pub fn ensure_known_flags(&self, subcommand: &str, accepted: &[&str]) -> Result<()> {
+        let unknown: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !accepted.contains(&k.as_str()))
+            .map(|k| format!("--{k}"))
+            .collect();
+        if unknown.is_empty() {
+            return Ok(());
+        }
+        let accepted_list: Vec<String> = accepted.iter().map(|k| format!("--{k}")).collect();
+        bail!(
+            "unknown flag{} for '{subcommand}': {} (accepted: {})",
+            if unknown.len() == 1 { "" } else { "s" },
+            unknown.join(", "),
+            accepted_list.join(", ")
+        );
+    }
+
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
@@ -123,5 +146,28 @@ mod tests {
     fn bad_number_is_error() {
         let a = parse(&["x", "--m", "abc"]);
         assert!(a.get_usize("m", 0).is_err());
+    }
+
+    #[test]
+    fn typod_flag_is_an_error_listing_accepted_flags() {
+        // regression (ISSUE 3 satellite): `--n-lsit 25` used to run with
+        // defaults; it must now fail, naming the typo and the real flags
+        let a = parse(&["figure1", "--n-lsit", "25", "--m", "4"]);
+        let err = a.ensure_known_flags("figure1", &["m", "n-list", "runs"]).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("--n-lsit"), "names the unknown flag: {msg}");
+        assert!(msg.contains("figure1"), "names the subcommand: {msg}");
+        assert!(msg.contains("--n-list"), "lists the accepted flags: {msg}");
+        assert!(msg.contains("--runs"), "lists the accepted flags: {msg}");
+    }
+
+    #[test]
+    fn known_flags_pass_and_plural_errors_name_every_unknown() {
+        let a = parse(&["topk", "--d", "8", "--k-list", "1,2"]);
+        assert!(a.ensure_known_flags("topk", &["d", "k-list"]).is_ok());
+        let b = parse(&["topk", "--dd", "8", "--klist", "1"]);
+        let msg = b.ensure_known_flags("topk", &["d", "k-list"]).unwrap_err().to_string();
+        assert!(msg.contains("--dd") && msg.contains("--klist"), "{msg}");
+        assert!(msg.contains("flags"), "pluralized: {msg}");
     }
 }

@@ -4,7 +4,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::cluster::Cluster;
+use crate::cluster::Session;
 use crate::linalg::eigen::SymEigen;
 
 use super::{instrumented, Algorithm, Estimate};
@@ -25,9 +25,9 @@ impl Algorithm for CentralizedErm {
         "centralized_erm"
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
-            let xhat = cluster.gram_average()?;
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
+            let xhat = session.gram_average()?;
             let eig = SymEigen::new(&xhat);
             let mut info = BTreeMap::new();
             info.insert("lambda1_hat".into(), eig.lambda1());
@@ -48,10 +48,10 @@ impl Algorithm for SingleMachineErm {
         "single_machine_erm"
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
             // leader *is* machine 1: no communication
-            let w = cluster.leader_shard().local_top_eigvec();
+            let w = session.leader_shard().local_top_eigvec();
             Ok((w, BTreeMap::new()))
         })
     }
@@ -67,7 +67,7 @@ mod tests {
     #[test]
     fn centralized_erm_matches_pooled_eigvec() {
         let (c, dist) = test_cluster(4, 60, 6, 11);
-        let est = CentralizedErm.run(&c).unwrap();
+        let est = CentralizedErm.run(&c.session()).unwrap();
         let pooled = pooled_cov(&dist, 4, 60, 11);
         let want = crate::linalg::eigen::leading_eigvec(&pooled);
         assert!(alignment_error(&est.w, &want) < 1e-18);
@@ -84,8 +84,8 @@ mod tests {
         let runs = 12;
         for seed in 0..runs {
             let (c, dist) = test_cluster(8, 40, 5, 100 + seed);
-            cen += CentralizedErm.run(&c).unwrap().error(dist.v1());
-            single += SingleMachineErm.run(&c).unwrap().error(dist.v1());
+            cen += CentralizedErm.run(&c.session()).unwrap().error(dist.v1());
+            single += SingleMachineErm.run(&c.session()).unwrap().error(dist.v1());
         }
         assert!(
             cen < single,
@@ -98,7 +98,7 @@ mod tests {
     #[test]
     fn single_machine_no_communication() {
         let (c, _) = test_cluster(3, 30, 4, 13);
-        let est = SingleMachineErm.run(&c).unwrap();
+        let est = SingleMachineErm.run(&c.session()).unwrap();
         assert_eq!(est.comm.rounds, 0);
         assert_eq!(est.comm.bytes, 0);
     }
@@ -106,7 +106,7 @@ mod tests {
     #[test]
     fn centralized_info_reports_spectrum() {
         let (c, _) = test_cluster(3, 80, 4, 17);
-        let est = CentralizedErm.run(&c).unwrap();
+        let est = CentralizedErm.run(&c.session()).unwrap();
         assert!(est.info["lambda1_hat"] > 0.0);
         assert!(est.info["gap_hat"] > 0.0);
     }

@@ -1,7 +1,7 @@
 //! Distributed Lanczos (§2.2.2) — scalar and block variants.
 //!
 //! [`DistributedLanczos`] builds a Krylov basis of the pooled covariance
-//! with one [`Cluster::dist_matvec`] round per basis vector, with full
+//! with one [`Session::dist_matvec`] round per basis vector, with full
 //! re-orthogonalization at the leader (local, free). The Ritz vector of
 //! the tridiagonal projection converges in
 //! `O(sqrt(lambda_1/delta) ln(d/p eps))` rounds — quadratically fewer
@@ -10,7 +10,7 @@
 //!
 //! [`BlockLanczos`] is the top-`k` member of the family, built on the
 //! cluster's block protocol: each block expansion is **one**
-//! [`Cluster::dist_matmat`] round moving a `d x k` block, producing the
+//! [`Session::dist_matmat`] round moving a `d x k` block, producing the
 //! block-tridiagonal projection whose top-`k` Ritz vectors estimate the
 //! pooled top-`k` subspace — the Krylov counterpart of
 //! [`crate::coordinator::DistributedOrthoIteration`], converging in
@@ -20,7 +20,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::Cluster;
+use crate::cluster::Session;
 use crate::linalg::eigen::SymEigen;
 use crate::linalg::qr::qr_thin;
 use crate::linalg::vec_ops::{axpy, dot, normalize};
@@ -53,9 +53,9 @@ impl Algorithm for DistributedLanczos {
         "distributed_lanczos"
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
-            let d = cluster.d();
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
+            let d = session.d();
             let kmax = self.max_iters.min(d);
             let mut rng = Pcg64::new(self.seed);
             let mut q = rng.gaussian_vec(d);
@@ -67,7 +67,7 @@ impl Algorithm for DistributedLanczos {
             let mut iters = 0usize;
 
             for k in 0..kmax {
-                let mut v = cluster.dist_matvec(&basis[k])?;
+                let mut v = session.dist_matvec(&basis[k])?;
                 iters += 1;
                 let alpha = dot(&basis[k], &v);
                 alphas.push(alpha);
@@ -107,7 +107,7 @@ impl Algorithm for DistributedLanczos {
 /// Block Lanczos for the pooled top-`k` subspace.
 ///
 /// Each block expansion costs exactly **one** block round
-/// ([`Cluster::dist_matmat`]): one request/response per live worker
+/// ([`Session::dist_matmat`]): one request/response per live worker
 /// carrying `k` vectors each way. The leader maintains the block
 /// Krylov basis `[Q_0 | Q_1 | ...]` with full re-orthogonalization
 /// (local, free), assembles the block-tridiagonal projection `T`
@@ -134,13 +134,13 @@ impl BlockLanczos {
 
     /// Run on a cluster; returns the subspace estimate with the
     /// communication bill attached.
-    pub fn run_mat(&self, cluster: &Cluster) -> Result<SubspaceEstimate> {
-        let d = cluster.d();
+    pub fn run_mat(&self, session: &Session<'_>) -> Result<SubspaceEstimate> {
+        let d = session.d();
         let k = self.k;
         if k == 0 || k > d {
             bail!("invalid subspace rank k={k} for d={d}");
         }
-        instrumented_mat(cluster, k, || {
+        instrumented_mat(session, k, || {
             let max_blocks = self.max_blocks.min(d / k).max(1);
             let mut rng = Pcg64::new(self.seed);
             let g = Matrix::from_vec(d, k, (0..d * k).map(|_| rng.next_gaussian()).collect());
@@ -151,7 +151,7 @@ impl BlockLanczos {
             loop {
                 let j = a_blocks.len();
                 // one block round: W = Xhat Q_j
-                let mut w = cluster.dist_matmat(&blocks[j])?;
+                let mut w = session.dist_matmat(&blocks[j])?;
                 let mut aj = blocks[j].transpose().matmul(&w);
                 aj.symmetrize();
                 w.axpy_mat(-1.0, &blocks[j].matmul(&aj));
@@ -276,8 +276,8 @@ mod tests {
     #[test]
     fn lanczos_converges_to_centralized_erm() {
         let (c, _) = test_cluster(4, 120, 8, 61);
-        let cen = CentralizedErm.run(&c).unwrap();
-        let lan = DistributedLanczos::default().run(&c).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
+        let lan = DistributedLanczos::default().run(&c.session()).unwrap();
         assert!(
             alignment_error(&lan.w, &cen.w) < 1e-9,
             "err={}",
@@ -295,10 +295,10 @@ mod tests {
         let dist = crate::data::CovModel::axis_aligned(sigma).gaussian();
         let c = crate::cluster::Cluster::generate(&dist, 4, 300, 63).unwrap();
         let pow = DistributedPower { tol: 1e-20, max_iters: 4000, ..Default::default() }
-            .run(&c)
+            .run(&c.session())
             .unwrap();
-        let lan = DistributedLanczos { tol: 1e-12, ..Default::default() }.run(&c).unwrap();
-        let cen = CentralizedErm.run(&c).unwrap();
+        let lan = DistributedLanczos { tol: 1e-12, ..Default::default() }.run(&c.session()).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
         // both must be accurate…
         assert!(alignment_error(&lan.w, &cen.w) < 1e-8);
         assert!(alignment_error(&pow.w, &cen.w) < 1e-8);
@@ -314,14 +314,14 @@ mod tests {
     #[test]
     fn terminates_at_dimension() {
         let (c, _) = test_cluster(3, 50, 4, 67);
-        let est = DistributedLanczos { max_iters: 100, tol: 0.0, seed: 3 }.run(&c).unwrap();
+        let est = DistributedLanczos { max_iters: 100, tol: 0.0, seed: 3 }.run(&c.session()).unwrap();
         assert!(est.comm.rounds <= 4, "Krylov dim cannot exceed d=4, rounds={}", est.comm.rounds);
     }
 
     #[test]
     fn ritz_info_reported() {
         let (c, _) = test_cluster(3, 60, 5, 69);
-        let est = DistributedLanczos::default().run(&c).unwrap();
+        let est = DistributedLanczos::default().run(&c.session()).unwrap();
         assert!(est.info["ritz_value"] > 0.0);
         assert!(est.info["iters"] >= 1.0);
     }
@@ -333,8 +333,8 @@ mod tests {
         // dimension (4 blocks), so the Ritz basis is exact up to rounding
         let (c, _) = test_cluster(4, 250, 12, 71);
         let k = 3;
-        let cen = CentralizedSubspace { k }.run_mat(&c).unwrap();
-        let blk = BlockLanczos::new(k).run_mat(&c).unwrap();
+        let cen = CentralizedSubspace { k }.run_mat(&c.session()).unwrap();
+        let blk = BlockLanczos::new(k).run_mat(&c.session()).unwrap();
         let e = subspace_error(&blk.w, &cen.w);
         assert!(e < 1e-8, "block Lanczos should find the pooled top-k: {e:.3e}");
         // basis orthonormal
@@ -358,9 +358,9 @@ mod tests {
         let c = crate::cluster::Cluster::generate(&dist, 4, 400, 73).unwrap();
         let k = 4;
         let pow = DistributedOrthoIteration { k, max_iters: 4000, tol: 1e-24, seed: 0x9 }
-            .run_mat(&c)
+            .run_mat(&c.session())
             .unwrap();
-        let lan = BlockLanczos { k, tol: 1e-12, ..BlockLanczos::new(k) }.run_mat(&c).unwrap();
+        let lan = BlockLanczos { k, tol: 1e-12, ..BlockLanczos::new(k) }.run_mat(&c.session()).unwrap();
         let e = subspace_error(&lan.w, &pow.w);
         assert!(e < 1e-6, "block Lanczos disagrees with converged block power: {e:.3e}");
         assert!(
@@ -374,8 +374,8 @@ mod tests {
     #[test]
     fn block_lanczos_rank_one_block_tracks_scalar_lanczos() {
         let (c, _) = test_cluster(3, 150, 8, 79);
-        let lan = DistributedLanczos::default().run(&c).unwrap();
-        let blk = BlockLanczos::new(1).run_mat(&c).unwrap();
+        let lan = DistributedLanczos::default().run(&c.session()).unwrap();
+        let blk = BlockLanczos::new(1).run_mat(&c.session()).unwrap();
         let align = crate::linalg::vec_ops::alignment_error(&blk.w.col(0), &lan.w);
         assert!(align < 1e-8, "k=1 block Lanczos should match scalar Lanczos: {align:.3e}");
     }
@@ -383,7 +383,7 @@ mod tests {
     #[test]
     fn block_lanczos_rejects_bad_rank() {
         let (c, _) = test_cluster(2, 30, 4, 83);
-        assert!(BlockLanczos::new(0).run_mat(&c).is_err());
-        assert!(BlockLanczos::new(5).run_mat(&c).is_err());
+        assert!(BlockLanczos::new(0).run_mat(&c.session()).is_err());
+        assert!(BlockLanczos::new(5).run_mat(&c.session()).is_err());
     }
 }

@@ -1,4 +1,8 @@
-//! The paper's algorithms, written against the [`Cluster`] primitives.
+//! The paper's algorithms, written against the per-tenant [`Session`]
+//! view of the cluster ([`crate::cluster::Cluster::session`]): every
+//! estimator runs on its own bill and its own wire codec, so any number
+//! of them can execute concurrently on one shared cluster (see the
+//! `serve` scheduler) without corrupting each other's accounting.
 //!
 //! | type | paper reference | rounds |
 //! |---|---|---|
@@ -14,7 +18,7 @@
 //!
 //! The top-`k` family (Theorem 7's metric) rides the cluster's **block
 //! protocol** — every iterative step below is one multi-vector round
-//! ([`crate::cluster::Cluster::dist_matmat`]), not `k` scalar rounds:
+//! ([`crate::cluster::Session::dist_matmat`]), not `k` scalar rounds:
 //!
 //! | type | analog of | block rounds |
 //! |---|---|---|
@@ -52,7 +56,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::cluster::{Cluster, CommStats};
+use crate::cluster::{CommStats, Session};
 use crate::linalg::vec_ops;
 
 /// Output of one algorithm run: the unit-norm estimate of `v_1` plus the
@@ -76,41 +80,45 @@ impl Estimate {
     }
 }
 
-/// A distributed PCA algorithm. `run` resets the cluster's communication
-/// counters, executes, and returns the estimate with the bill attached.
+/// A distributed PCA algorithm. `run` executes against one tenant
+/// session — resetting that session's communication counters first —
+/// and returns the estimate with the session's bill attached. Pass a
+/// fresh `cluster.session()` per query; concurrent runs on separate
+/// sessions of one cluster bill independently.
 pub trait Algorithm {
     /// Short identifier used in reports (`"sign_fixed_avg"`, …).
     fn name(&self) -> &'static str;
 
-    /// Execute on a cluster.
-    fn run(&self, cluster: &Cluster) -> Result<Estimate>;
+    /// Execute on a tenant session of a cluster.
+    fn run(&self, session: &Session<'_>) -> Result<Estimate>;
 }
 
-/// Helper for implementations: time `f`, snapshot comm stats around it.
+/// Helper for implementations: time `f`, snapshot the session's comm
+/// stats around it.
 pub(crate) fn instrumented(
-    cluster: &Cluster,
+    session: &Session<'_>,
     f: impl FnOnce() -> Result<(Vec<f64>, BTreeMap<String, f64>)>,
 ) -> Result<Estimate> {
-    cluster.reset_stats();
+    session.reset_stats();
     let t0 = Instant::now();
     let (mut w, info) = f()?;
     let wall = t0.elapsed();
     vec_ops::normalize(&mut w);
-    Ok(Estimate { w, comm: cluster.stats(), wall, info })
+    Ok(Estimate { w, comm: session.stats(), wall, info })
 }
 
 /// Matrix-valued variant for the subspace estimators.
 pub(crate) fn instrumented_mat(
-    cluster: &Cluster,
+    session: &Session<'_>,
     k: usize,
     f: impl FnOnce() -> Result<(crate::linalg::Matrix, BTreeMap<String, f64>)>,
 ) -> Result<subspace::SubspaceEstimate> {
-    cluster.reset_stats();
+    session.reset_stats();
     let t0 = Instant::now();
     let (w, info) = f()?;
     let wall = t0.elapsed();
     debug_assert_eq!(w.cols(), k);
-    Ok(subspace::SubspaceEstimate { w, comm: cluster.stats(), wall, info })
+    Ok(subspace::SubspaceEstimate { w, comm: session.stats(), wall, info })
 }
 
 #[cfg(test)]
@@ -172,10 +180,11 @@ mod tests {
     #[test]
     fn instrumented_resets_and_snapshots() {
         let (c, _) = test_cluster(3, 20, 4, 1);
+        let s = c.session();
         let v = vec![1.0, 0.0, 0.0, 0.0];
-        c.dist_matvec(&v).unwrap(); // pollute counters
-        let est = instrumented(&c, || {
-            c.dist_matvec(&v)?;
+        s.dist_matvec(&v).unwrap(); // pollute counters
+        let est = instrumented(&s, || {
+            s.dist_matvec(&v)?;
             Ok((v.clone(), BTreeMap::new()))
         })
         .unwrap();

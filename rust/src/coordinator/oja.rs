@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::cluster::Cluster;
+use crate::cluster::Session;
 use crate::linalg::vec_ops::normalize;
 use crate::rng::Pcg64;
 
@@ -43,11 +43,11 @@ impl Algorithm for HotPotatoOja {
         "hot_potato_oja"
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
-            let d = cluster.d();
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
+            let d = session.d();
             // free local estimates from the leader (machine 1)
-            let leader_eig = cluster.leader_shard().local_eigen();
+            let leader_eig = session.leader_shard().local_eigen();
             let gap_hat = leader_eig.eigengap().max(1e-6);
             let eta0 = self.eta0.unwrap_or(self.c / gap_hat);
             // burn-in: keep eta_t <= 1/lambda1_hat at t = 0
@@ -57,7 +57,7 @@ impl Algorithm for HotPotatoOja {
             let mut rng = Pcg64::new(self.seed);
             let mut w0 = rng.gaussian_vec(d);
             normalize(&mut w0);
-            let w = cluster.oja_chain(&w0, eta0, t0)?;
+            let w = session.oja_chain(&w0, eta0, t0)?;
             let mut info = BTreeMap::new();
             info.insert("eta0".into(), eta0);
             info.insert("t0".into(), t0);
@@ -75,7 +75,7 @@ mod tests {
     #[test]
     fn exactly_m_rounds() {
         let (c, _) = test_cluster(7, 40, 5, 71);
-        let est = HotPotatoOja::default().run(&c).unwrap();
+        let est = HotPotatoOja::default().run(&c.session()).unwrap();
         assert_eq!(est.comm.rounds, 7);
     }
 
@@ -87,9 +87,9 @@ mod tests {
         let mut large = 0.0;
         for seed in 0..runs {
             let (c1, dist) = test_cluster(4, 100, 5, 500 + seed);
-            small += HotPotatoOja::default().run(&c1).unwrap().error(dist.v1());
+            small += HotPotatoOja::default().run(&c1.session()).unwrap().error(dist.v1());
             let (c2, dist2) = test_cluster(4, 800, 5, 600 + seed);
-            large += HotPotatoOja::default().run(&c2).unwrap().error(dist2.v1());
+            large += HotPotatoOja::default().run(&c2.session()).unwrap().error(dist2.v1());
         }
         assert!(
             large < small,
@@ -102,7 +102,7 @@ mod tests {
     #[test]
     fn reaches_reasonable_accuracy() {
         let (c, dist) = test_cluster(8, 500, 6, 73);
-        let est = HotPotatoOja::default().run(&c).unwrap();
+        let est = HotPotatoOja::default().run(&c.session()).unwrap();
         let err = est.error(dist.v1());
         assert!(err < 0.05, "oja error {err}");
     }
@@ -111,7 +111,7 @@ mod tests {
     fn explicit_schedule_respected() {
         let (c, _) = test_cluster(3, 30, 4, 79);
         let est = HotPotatoOja { eta0: Some(0.25), t0: Some(5.0), ..Default::default() }
-            .run(&c)
+            .run(&c.session())
             .unwrap();
         assert_eq!(est.info["eta0"], 0.25);
         assert_eq!(est.info["t0"], 5.0);

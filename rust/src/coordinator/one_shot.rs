@@ -18,7 +18,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::cluster::Cluster;
+use crate::cluster::Session;
 use crate::linalg::eigen::SymEigen;
 use crate::linalg::vec_ops::{axpy, dot};
 use crate::linalg::Matrix;
@@ -35,12 +35,12 @@ impl Algorithm for NaiveAverage {
         "naive_average"
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
             // unbiased_signs = true: each machine's ERM output sign is a
             // private fair coin — exactly the premise of Theorem 3.
-            let vs = cluster.local_top_eigvecs(true)?;
-            let mut acc = vec![0.0; cluster.d()];
+            let vs = session.local_top_eigvecs(true)?;
+            let mut acc = vec![0.0; session.d()];
             for v in &vs {
                 axpy(&mut acc, 1.0, v);
             }
@@ -60,11 +60,11 @@ impl Algorithm for SignFixedAverage {
         "sign_fixed_average"
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
-            let vs = cluster.local_top_eigvecs(true)?;
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
+            let vs = session.local_top_eigvecs(true)?;
             let w1 = &vs[0];
-            let mut acc = vec![0.0; cluster.d()];
+            let mut acc = vec![0.0; session.d()];
             let mut flipped = 0u32;
             for v in &vs {
                 let s = if dot(v, w1) >= 0.0 { 1.0 } else { -1.0 };
@@ -90,10 +90,10 @@ impl Algorithm for ProjectionAverage {
         "projection_average"
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
-            let vs = cluster.local_top_eigvecs(true)?;
-            let d = cluster.d();
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
+            let vs = session.local_top_eigvecs(true)?;
+            let d = session.d();
             let mut pbar = Matrix::zeros(d, d);
             for v in &vs {
                 // rank-one accumulate: signs cancel in w w^T
@@ -129,7 +129,7 @@ mod tests {
     fn all_one_round() {
         let (c, _) = test_cluster(6, 50, 5, 21);
         for alg in [&NaiveAverage as &dyn Algorithm, &SignFixedAverage, &ProjectionAverage] {
-            let est = alg.run(&c).unwrap();
+            let est = alg.run(&c.session()).unwrap();
             assert_eq!(est.comm.rounds, 1, "{} must be one-round", alg.name());
             assert_eq!(est.comm.vectors_gathered, 6);
         }
@@ -146,8 +146,8 @@ mod tests {
         let mut fixed = 0.0;
         for seed in 0..runs {
             let c = crate::cluster::Cluster::generate(&dist, m, n, 1000 + seed).unwrap();
-            naive += NaiveAverage.run(&c).unwrap().error(dist.v1());
-            fixed += SignFixedAverage.run(&c).unwrap().error(dist.v1());
+            naive += NaiveAverage.run(&c.session()).unwrap().error(dist.v1());
+            fixed += SignFixedAverage.run(&c.session()).unwrap().error(dist.v1());
         }
         naive /= runs as f64;
         fixed /= runs as f64;
@@ -162,8 +162,8 @@ mod tests {
         let (c, dist) = fig1_cluster(10, 80, 6, 23);
         // run twice: sign randomization differs between runs only through
         // worker RNG; projection must stay consistent regardless
-        let e1 = ProjectionAverage.run(&c).unwrap();
-        let e2 = ProjectionAverage.run(&c).unwrap();
+        let e1 = ProjectionAverage.run(&c.session()).unwrap();
+        let e2 = ProjectionAverage.run(&c.session()).unwrap();
         assert!(e1.error(dist.v1()) < 0.5);
         assert!(
             (e1.error(dist.v1()) - e2.error(dist.v1())).abs() < 1e-12,
@@ -179,8 +179,8 @@ mod tests {
         let runs = 8;
         for seed in 0..runs {
             let (c, dist) = fig1_cluster(4, 500, 6, 31 + seed);
-            let fixed = SignFixedAverage.run(&c).unwrap().error(dist.v1());
-            let cen = CentralizedErm.run(&c).unwrap().error(dist.v1());
+            let fixed = SignFixedAverage.run(&c.session()).unwrap().error(dist.v1());
+            let cen = CentralizedErm.run(&c.session()).unwrap().error(dist.v1());
             ratio_sum += fixed / cen.max(1e-12);
         }
         let ratio = ratio_sum / runs as f64;
@@ -197,9 +197,9 @@ mod tests {
         let mut err_big_m = 0.0;
         for seed in 0..runs {
             let c1 = crate::cluster::Cluster::generate(&dist, 4, n, 2000 + seed).unwrap();
-            err_small_m += NaiveAverage.run(&c1).unwrap().error(dist.v1());
+            err_small_m += NaiveAverage.run(&c1.session()).unwrap().error(dist.v1());
             let c2 = crate::cluster::Cluster::generate(&dist, 32, n, 3000 + seed).unwrap();
-            err_big_m += NaiveAverage.run(&c2).unwrap().error(dist.v1());
+            err_big_m += NaiveAverage.run(&c2.session()).unwrap().error(dist.v1());
         }
         err_small_m /= runs as f64;
         err_big_m /= runs as f64;
@@ -214,9 +214,9 @@ mod tests {
     #[test]
     fn info_fields_present() {
         let (c, _) = test_cluster(5, 40, 4, 41);
-        let f = SignFixedAverage.run(&c).unwrap();
+        let f = SignFixedAverage.run(&c.session()).unwrap();
         assert!(f.info.contains_key("flipped"));
-        let p = ProjectionAverage.run(&c).unwrap();
+        let p = ProjectionAverage.run(&c.session()).unwrap();
         assert!(p.info.contains_key("pbar_lambda1"));
     }
 }

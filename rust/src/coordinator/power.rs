@@ -1,7 +1,7 @@
 //! Distributed power method (§2.2.2).
 //!
 //! Each iteration multiplies the current iterate by the pooled empirical
-//! covariance via one [`Cluster::dist_matvec`] round and renormalizes.
+//! covariance via one [`Session::dist_matvec`] round and renormalizes.
 //! Round complexity `O((lambda_1/delta) ln(d / p eps))` to reach
 //! `1 - (w^T vhat_1)^2 <= eps`.
 
@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::cluster::Cluster;
+use crate::cluster::Session;
 use crate::linalg::vec_ops::{alignment_error, normalize};
 use crate::rng::Pcg64;
 
@@ -42,11 +42,11 @@ impl Algorithm for DistributedPower {
         "distributed_power"
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
-            let d = cluster.d();
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
+            let d = session.d();
             let mut w = if self.warm_start {
-                cluster.leader_shard().local_top_eigvec()
+                session.leader_shard().local_top_eigvec()
             } else {
                 let mut rng = Pcg64::new(self.seed);
                 let mut v = rng.gaussian_vec(d);
@@ -55,7 +55,7 @@ impl Algorithm for DistributedPower {
             };
             let mut iters = 0usize;
             for _ in 0..self.max_iters {
-                let mut next = cluster.dist_matvec(&w)?;
+                let mut next = session.dist_matvec(&w)?;
                 let nn = normalize(&mut next);
                 iters += 1;
                 if nn == 0.0 {
@@ -86,8 +86,8 @@ mod tests {
     #[test]
     fn power_converges_to_centralized_erm() {
         let (c, _) = test_cluster(4, 100, 6, 51);
-        let cen = CentralizedErm.run(&c).unwrap();
-        let pow = DistributedPower::default().run(&c).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
+        let pow = DistributedPower::default().run(&c.session()).unwrap();
         assert!(
             alignment_error(&pow.w, &cen.w) < 1e-10,
             "power should find the pooled leading eigenvector, err={}",
@@ -99,7 +99,7 @@ mod tests {
     fn rounds_equal_iterations() {
         let (c, _) = test_cluster(3, 50, 5, 53);
         let est = DistributedPower { max_iters: 7, tol: 0.0, seed: 1, warm_start: false }
-            .run(&c)
+            .run(&c.session())
             .unwrap();
         assert_eq!(est.comm.rounds, 7);
         assert_eq!(est.comm.matvec_products, 7);
@@ -109,9 +109,9 @@ mod tests {
     #[test]
     fn warm_start_converges_faster() {
         let (c, _) = fig1_cluster(4, 300, 8, 57);
-        let cold = DistributedPower { tol: 1e-16, ..Default::default() }.run(&c).unwrap();
+        let cold = DistributedPower { tol: 1e-16, ..Default::default() }.run(&c.session()).unwrap();
         let warm = DistributedPower { tol: 1e-16, warm_start: true, ..Default::default() }
-            .run(&c)
+            .run(&c.session())
             .unwrap();
         assert!(
             warm.comm.rounds <= cold.comm.rounds,
@@ -124,8 +124,8 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let (c, _) = test_cluster(3, 40, 4, 59);
-        let a = DistributedPower::default().run(&c).unwrap();
-        let b = DistributedPower::default().run(&c).unwrap();
+        let a = DistributedPower::default().run(&c.session()).unwrap();
+        let b = DistributedPower::default().run(&c.session()).unwrap();
         assert_eq!(a.w, b.w);
         assert_eq!(a.comm.rounds, b.comm.rounds);
     }

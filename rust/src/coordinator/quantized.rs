@@ -8,10 +8,11 @@
 //! distributed power method, and how many bytes does a round actually
 //! need?
 //!
-//! Since the wire layer landed, quantization lives in the **cluster**
-//! ([`WireCodec`]): [`QuantizedPower`] is a thin coordinator that
-//! installs the requested codec for the duration of the run and drives
-//! the plain distributed power method. Both directions pass through the
+//! Since the wire layer landed, quantization lives in the **wire**
+//! ([`WireCodec`], owned per tenant by the [`Session`]): [`QuantizedPower`]
+//! is a thin coordinator that installs the requested codec on its own
+//! session for the duration of the run and drives the plain distributed
+//! power method — a concurrent lossless tenant's traffic is untouched. Both directions pass through the
 //! codec (the pre-wire-layer version hand-quantized only the broadcast
 //! while the cluster billed full f64 — its `wire_bytes_per_round` could
 //! never agree with `CommStats.bytes`; now the info value is read back
@@ -29,7 +30,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::cluster::{Cluster, WireCodec};
+use crate::cluster::{Session, WireCodec};
 use crate::linalg::vec_ops::{alignment_error, normalize};
 use crate::rng::Pcg64;
 
@@ -53,8 +54,8 @@ impl QuantizedPower {
         QuantizedPower { precision, max_iters: 2_000, tol: 1e-18, seed: 0x9d }
     }
 
-    fn power_loop(&self, cluster: &Cluster) -> Result<(Vec<f64>, BTreeMap<String, f64>)> {
-        let d = cluster.d();
+    fn power_loop(&self, session: &Session<'_>) -> Result<(Vec<f64>, BTreeMap<String, f64>)> {
+        let d = session.d();
         let mut rng = Pcg64::new(self.seed);
         let mut w = rng.gaussian_vec(d);
         normalize(&mut w);
@@ -65,7 +66,7 @@ impl QuantizedPower {
         // reported final_drift = 0.0 for a first-iteration break)
         let mut last_drift = 0.0f64;
         for _ in 0..self.max_iters {
-            let mut next = cluster.dist_matvec(&w)?;
+            let mut next = session.dist_matvec(&w)?;
             normalize(&mut next);
             iters += 1;
             last_drift = alignment_error(&next, &w);
@@ -74,7 +75,7 @@ impl QuantizedPower {
                 break;
             }
         }
-        let st = cluster.stats();
+        let st = session.stats();
         let mut info = BTreeMap::new();
         info.insert("iters".into(), iters as f64);
         info.insert("final_drift".into(), last_drift);
@@ -98,14 +99,15 @@ impl Algorithm for QuantizedPower {
         }
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
-        instrumented(cluster, || {
-            // install the lossy codec for the duration of the run, and
-            // restore whatever was there before — even on error
-            let prev = cluster.codec();
-            cluster.set_codec(WireCodec::new(self.precision));
-            let out = self.power_loop(cluster);
-            cluster.set_codec(prev);
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+        instrumented(session, || {
+            // install the lossy codec on THIS session for the duration
+            // of the run — concurrent tenants' wires are untouched —
+            // and restore whatever was there before, even on error
+            let prev = session.codec();
+            session.set_codec(WireCodec::new(self.precision));
+            let out = self.power_loop(session);
+            session.set_codec(prev);
             out
         })
     }
@@ -122,8 +124,8 @@ mod tests {
     fn f32_wire_is_free_at_statistical_scale() {
         let (c, dist) = fig1_cluster(4, 200, 12, 101);
         use crate::data::Distribution;
-        let full = QuantizedPower::new(WirePrecision::F64).run(&c).unwrap();
-        let half = QuantizedPower::new(WirePrecision::F32).run(&c).unwrap();
+        let full = QuantizedPower::new(WirePrecision::F64).run(&c.session()).unwrap();
+        let half = QuantizedPower::new(WirePrecision::F32).run(&c.session()).unwrap();
         let e_full = full.error(dist.v1());
         let e_half = half.error(dist.v1());
         // statistical error dominates quantization by orders of magnitude
@@ -145,9 +147,9 @@ mod tests {
     #[test]
     fn bf16_wire_puts_a_floor_on_the_iterate() {
         let (c, _) = fig1_cluster(4, 400, 12, 103);
-        let cen = CentralizedErm.run(&c).unwrap();
-        let full = QuantizedPower::new(WirePrecision::F64).run(&c).unwrap();
-        let crude = QuantizedPower::new(WirePrecision::Bf16).run(&c).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
+        let full = QuantizedPower::new(WirePrecision::F64).run(&c.session()).unwrap();
+        let crude = QuantizedPower::new(WirePrecision::Bf16).run(&c.session()).unwrap();
         let e_full = crate::linalg::vec_ops::alignment_error(&full.w, &cen.w);
         let e_crude = crate::linalg::vec_ops::alignment_error(&crude.w, &cen.w);
         // full precision nails vhat1; crude wire cannot get below its floor
@@ -160,7 +162,7 @@ mod tests {
     #[test]
     fn quantized_name_and_accounting() {
         let (c, _) = fig1_cluster(3, 60, 6, 105);
-        let est = QuantizedPower::new(WirePrecision::Bf16).run(&c).unwrap();
+        let est = QuantizedPower::new(WirePrecision::Bf16).run(&c.session()).unwrap();
         assert_eq!(QuantizedPower::new(WirePrecision::Bf16).name(), "power_wire_bf16");
         assert_eq!(est.comm.rounds, est.comm.matvec_products);
         // bf16 frames: B(d)·(live+1) = 2·6·4 bytes per round, exactly
@@ -174,7 +176,7 @@ mod tests {
         // that path because the update was skipped before `break`
         let (c, _) = fig1_cluster(3, 50, 8, 107);
         let alg = QuantizedPower { precision: WirePrecision::F64, max_iters: 500, tol: 1.0, seed: 0x9d };
-        let est = alg.run(&c).unwrap();
+        let est = alg.run(&c.session()).unwrap();
         assert_eq!(est.info["iters"], 1.0);
         let drift = est.info["final_drift"];
         assert!(
@@ -187,11 +189,13 @@ mod tests {
     fn codec_is_restored_after_the_run() {
         let (c, dist) = fig1_cluster(3, 150, 8, 109);
         use crate::data::Distribution;
-        assert_eq!(c.codec(), WireCodec::lossless());
-        let _ = QuantizedPower::new(WirePrecision::Bf16).run(&c).unwrap();
-        assert_eq!(c.codec(), WireCodec::lossless(), "lossy codec must not leak");
-        // and a subsequent full-precision algorithm is unaffected
-        let cen = CentralizedErm.run(&c).unwrap();
+        let s = c.session();
+        assert_eq!(s.codec(), WireCodec::lossless());
+        let _ = QuantizedPower::new(WirePrecision::Bf16).run(&s).unwrap();
+        assert_eq!(s.codec(), WireCodec::lossless(), "lossy codec must not leak");
+        // and a subsequent full-precision algorithm on the same session
+        // is unaffected
+        let cen = CentralizedErm.run(&s).unwrap();
         assert!(cen.error(dist.v1()) < 0.5);
         assert_eq!(cen.comm.bytes, (8 * 8 * 8 * 3) as u64, "gram ships full f64 again");
     }

@@ -39,7 +39,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::Cluster;
+use crate::cluster::Session;
 use crate::data::Shard;
 use crate::linalg::vec_ops::{alignment_error, axpy, dot, normalize, scale};
 use crate::linalg::Matrix;
@@ -172,27 +172,27 @@ impl Algorithm for ShiftInvert {
         }
     }
 
-    fn run(&self, cluster: &Cluster) -> Result<Estimate> {
+    fn run(&self, session: &Session<'_>) -> Result<Estimate> {
         let cfg = &self.config;
-        instrumented(cluster, || {
-            let d = cluster.d();
-            let n = cluster.n();
+        instrumented(session, || {
+            let d = session.d();
+            let n = session.n();
 
             // ---- setup: rescale to b = 1 --------------------------------
-            let b_hat = (cluster.leader_shard().max_row_norm_sq() * 1.2).max(1e-12);
+            let b_hat = (session.leader_shard().max_row_norm_sq() * 1.2).max(1e-12);
             let s2 = 1.0 / b_hat;
             let matvec = |v: &[f64]| -> Result<Vec<f64>> {
-                let mut out = cluster.dist_matvec(v)?;
+                let mut out = session.dist_matvec(v)?;
                 scale(&mut out, s2);
                 Ok(out)
             };
 
             // leader-local spectral estimates (free, no communication)
-            let local_cov = cluster.leader_shard().empirical_covariance().scale(s2);
+            let local_cov = session.leader_shard().empirical_covariance().scale(s2);
             let mu = match cfg.mu {
                 MuStrategy::Fixed(m) => m,
                 MuStrategy::Theorem6 => Preconditioner::theorem6_mu(d, n, cfg.p),
-                MuStrategy::SplitEstimate => split_mu_estimate(cluster.leader_shard(), s2),
+                MuStrategy::SplitEstimate => split_mu_estimate(session.leader_shard(), s2),
             };
             let pc = Preconditioner::new(&local_cov, mu);
             let lambda1_est = pc.lambda1_local();
@@ -325,7 +325,7 @@ impl Algorithm for ShiftInvert {
             }
 
             // ---- phase 2: final inverse power iterations ----------------
-            let matvecs_phase1 = cluster.stats().matvec_products;
+            let matvecs_phase1 = session.stats().matvec_products;
             let lambda_f = lambda;
             // Inexact inverse iteration: the per-solve *relative* accuracy
             // only needs to track the iterate's own convergence — the
@@ -371,7 +371,7 @@ impl Algorithm for ShiftInvert {
             info.insert("matvecs_phase1".into(), matvecs_phase1 as f64);
             info.insert(
                 "matvecs_phase2".into(),
-                (cluster.stats().matvec_products - matvecs_phase1) as f64,
+                (session.stats().matvec_products - matvecs_phase1) as f64,
             );
             Ok((w, info))
         })
@@ -389,8 +389,8 @@ mod tests {
     #[test]
     fn sni_matches_centralized_erm() {
         let (c, _) = test_cluster(4, 200, 6, 81);
-        let cen = CentralizedErm.run(&c).unwrap();
-        let sni = ShiftInvert::default().run(&c).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
+        let sni = ShiftInvert::default().run(&c.session()).unwrap();
         let err = alignment_error(&sni.w, &cen.w);
         assert!(err < 1e-6, "S&I should find the pooled eigenvector, err={err:.3e}");
     }
@@ -398,9 +398,9 @@ mod tests {
     #[test]
     fn sni_all_solvers_agree() {
         let (c, _) = test_cluster(4, 150, 5, 83);
-        let cen = CentralizedErm.run(&c).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
         for solver in [SniSolver::Pcg, SniSolver::PlainCg, SniSolver::Agd] {
-            let est = ShiftInvert::with_solver(solver).run(&c).unwrap();
+            let est = ShiftInvert::with_solver(solver).run(&c.session()).unwrap();
             let err = alignment_error(&est.w, &cen.w);
             assert!(err < 1e-4, "{solver:?} err={err:.3e}");
         }
@@ -431,7 +431,7 @@ mod tests {
         let c = spread_cluster(4, 6000, 48, 0.05, 87);
         let mk = |solver| {
             ShiftInvert::new(SniConfig { solver, random_init: true, ..Default::default() })
-                .run(&c)
+                .run(&c.session())
                 .unwrap()
         };
         let pcg_est = mk(SniSolver::Pcg);
@@ -501,7 +501,7 @@ mod tests {
     #[test]
     fn matvec_count_is_round_count() {
         let (c, _) = test_cluster(3, 100, 5, 89);
-        let est = ShiftInvert::default().run(&c).unwrap();
+        let est = ShiftInvert::default().run(&c.session()).unwrap();
         assert_eq!(est.comm.rounds, est.comm.matvec_products);
         assert!(est.comm.rounds > 0);
     }
@@ -509,7 +509,7 @@ mod tests {
     #[test]
     fn info_diagnostics_complete() {
         let (c, _) = test_cluster(3, 100, 4, 91);
-        let est = ShiftInvert::default().run(&c).unwrap();
+        let est = ShiftInvert::default().run(&c.session()).unwrap();
         for key in ["outer_rounds", "final_iters", "solves", "lambda_f", "mu", "delta_tilde"] {
             assert!(est.info.contains_key(key), "missing info key {key}");
         }
@@ -519,9 +519,9 @@ mod tests {
     #[test]
     fn random_init_also_converges() {
         let (c, _) = test_cluster(4, 150, 5, 93);
-        let cen = CentralizedErm.run(&c).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
         let cfg = SniConfig { random_init: true, ..Default::default() };
-        let est = ShiftInvert::new(cfg).run(&c).unwrap();
+        let est = ShiftInvert::new(cfg).run(&c.session()).unwrap();
         assert!(alignment_error(&est.w, &cen.w) < 1e-5);
     }
 
@@ -544,9 +544,9 @@ mod tests {
         // in the same ballpark as Lanczos (and scales *down* with n, which
         // Lanczos's does not — see bench_scaling for the full sweep).
         let (c, _) = fig1_cluster(4, 2000, 24, 95);
-        let cen = CentralizedErm.run(&c).unwrap();
-        let lan = DistributedLanczos { tol: 1e-10, ..Default::default() }.run(&c).unwrap();
-        let sni = ShiftInvert::new(SniConfig { eps: 1e-6, ..Default::default() }).run(&c).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
+        let lan = DistributedLanczos { tol: 1e-10, ..Default::default() }.run(&c.session()).unwrap();
+        let sni = ShiftInvert::new(SniConfig { eps: 1e-6, ..Default::default() }).run(&c.session()).unwrap();
         assert!(alignment_error(&lan.w, &cen.w) < 1e-5);
         assert!(alignment_error(&sni.w, &cen.w) < 1e-5);
         assert!(

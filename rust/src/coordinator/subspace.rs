@@ -5,7 +5,7 @@
 //!
 //! The estimator family, mirroring the `k = 1` family — all iterative
 //! members now run on the cluster's **block protocol**
-//! ([`crate::cluster::Cluster::dist_matmat`]): one round moves the whole
+//! ([`crate::cluster::Session::dist_matmat`]): one round moves the whole
 //! `d x k` basis, instead of the `k` rounds the old column-wise loop
 //! paid per iteration.
 //!
@@ -35,7 +35,7 @@ use std::collections::BTreeMap;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::Cluster;
+use crate::cluster::Session;
 use crate::linalg::eigen::SymEigen;
 use crate::linalg::qr::qr_thin;
 use crate::linalg::vec_ops;
@@ -82,9 +82,9 @@ pub struct CentralizedSubspace {
 }
 
 impl CentralizedSubspace {
-    pub fn run_mat(&self, cluster: &Cluster) -> Result<SubspaceEstimate> {
-        instrumented_mat(cluster, self.k, || {
-            let xhat = cluster.gram_average()?;
+    pub fn run_mat(&self, session: &Session<'_>) -> Result<SubspaceEstimate> {
+        instrumented_mat(session, self.k, || {
+            let xhat = session.gram_average()?;
             Ok((top_k_of(&xhat, self.k), BTreeMap::new()))
         })
     }
@@ -93,7 +93,7 @@ impl CentralizedSubspace {
 /// Distributed block power iteration with leader-side QR.
 ///
 /// Each iteration is **one block round**: a single
-/// [`Cluster::dist_matmat`] exchange moves the whole `d x k` basis (one
+/// [`Session::dist_matmat`] exchange moves the whole `d x k` basis (one
 /// request/response per live worker, `k` vectors of traffic each way),
 /// and the thin QR re-orthonormalization runs at the leader for free.
 /// The seed's column-wise loop paid `k` rounds and `k` message
@@ -113,19 +113,19 @@ impl DistributedOrthoIteration {
         DistributedOrthoIteration { k, max_iters: 500, tol: 1e-16, seed: 0x0b10c }
     }
 
-    pub fn run_mat(&self, cluster: &Cluster) -> Result<SubspaceEstimate> {
-        let d = cluster.d();
+    pub fn run_mat(&self, session: &Session<'_>) -> Result<SubspaceEstimate> {
+        let d = session.d();
         if self.k == 0 || self.k > d {
             bail!("invalid subspace rank k={} for d={d}", self.k);
         }
-        instrumented_mat(cluster, self.k, || {
+        instrumented_mat(session, self.k, || {
             let mut rng = Pcg64::new(self.seed);
             let g = Matrix::from_vec(d, self.k, (0..d * self.k).map(|_| rng.next_gaussian()).collect());
             let (mut w, _) = qr_thin(&g);
             let mut iters = 0usize;
             for _ in 0..self.max_iters {
                 // one block round for the whole basis + leader-side QR
-                let xw = cluster.dist_matmat(&w)?;
+                let xw = session.dist_matmat(&w)?;
                 let (q, _) = qr_thin(&xw);
                 iters += 1;
                 let drift = subspace_error(&q, &w);
@@ -150,15 +150,15 @@ pub struct SubspaceProjectionAverage {
 }
 
 impl SubspaceProjectionAverage {
-    pub fn run_mat(&self, cluster: &Cluster) -> Result<SubspaceEstimate> {
-        let d = cluster.d();
+    pub fn run_mat(&self, session: &Session<'_>) -> Result<SubspaceEstimate> {
+        let d = session.d();
         if self.k == 0 || self.k > d {
             bail!("invalid subspace rank k={} for d={d}", self.k);
         }
-        instrumented_mat(cluster, self.k, || {
+        instrumented_mat(session, self.k, || {
             // reuse the Gram exchange (one round; the shipped object is a
             // d x d projector-equivalent — see module docs for accounting)
-            let locals = cluster.local_top_k(self.k)?;
+            let locals = session.local_top_k(self.k)?;
             let mut pbar = Matrix::zeros(d, d);
             for w in &locals {
                 // pbar += W W^T
@@ -201,18 +201,18 @@ impl DeflatedShiftInvert {
         DeflatedShiftInvert { k, config: SniConfig::default() }
     }
 
-    pub fn run_mat(&self, cluster: &Cluster) -> Result<SubspaceEstimate> {
-        let d = cluster.d();
+    pub fn run_mat(&self, session: &Session<'_>) -> Result<SubspaceEstimate> {
+        let d = session.d();
         if self.k == 0 || self.k > d {
             bail!("invalid subspace rank k={} for d={d}", self.k);
         }
-        instrumented_mat(cluster, self.k, || {
+        instrumented_mat(session, self.k, || {
             let mut info = BTreeMap::new();
             // Component 0: the full Theorem-6 algorithm. The S&I shift
             // machinery needs fresh gap estimates per component, so the
             // trailing components use deflated block power instead.
             let est =
-                super::Algorithm::run(&super::ShiftInvert::new(self.config.clone()), cluster)?;
+                super::Algorithm::run(&super::ShiftInvert::new(self.config.clone()), session)?;
             info.insert("sni_matvecs_0".into(), est.comm.matvec_products as f64);
             let basis = vec![est.w];
             let mut w = Matrix::zeros(d, self.k);
@@ -236,7 +236,7 @@ impl DeflatedShiftInvert {
                 let (mut wb, _) = qr_thin(&g);
                 let mut iters = 0usize;
                 for _ in 0..2_000 {
-                    let mut next = cluster.dist_matmat(&wb)?;
+                    let mut next = session.dist_matmat(&wb)?;
                     for c in 0..kb {
                         let mut col = next.col(c);
                         deflate(&mut col, &basis);
@@ -329,8 +329,8 @@ mod tests {
     fn ortho_iteration_matches_centralized() {
         let (c, _) = cluster(4, 300, 10, 31);
         let k = 3;
-        let cen = CentralizedSubspace { k }.run_mat(&c).unwrap();
-        let blk = DistributedOrthoIteration::new(k).run_mat(&c).unwrap();
+        let cen = CentralizedSubspace { k }.run_mat(&c.session()).unwrap();
+        let blk = DistributedOrthoIteration::new(k).run_mat(&c.session()).unwrap();
         let e = subspace_error(&blk.w, &cen.w);
         assert!(e < 1e-8, "block power should find the pooled top-k: {e:.3e}");
         // block protocol: ONE round per iteration, k matvecs billed per round
@@ -344,7 +344,7 @@ mod tests {
         let k = 4;
         let iters = 3;
         let est = DistributedOrthoIteration { k, max_iters: iters, tol: 0.0, seed: 0x7 }
-            .run_mat(&c)
+            .run_mat(&c.session())
             .unwrap();
         assert_eq!(est.info["iters"], iters as f64);
         assert_eq!(est.comm.rounds, iters as u64);
@@ -358,7 +358,7 @@ mod tests {
     fn deflated_sni_batches_trailing_components_in_block_rounds() {
         let (c, _) = cluster(3, 200, 8, 43);
         let k = 3;
-        let est = DeflatedShiftInvert::new(k).run_mat(&c).unwrap();
+        let est = DeflatedShiftInvert::new(k).run_mat(&c.session()).unwrap();
         let sni_matvecs = est.info["sni_matvecs_0"];
         let block_iters = est.info["block_power_iters"];
         assert!(block_iters >= 1.0);
@@ -379,7 +379,7 @@ mod tests {
     fn projection_average_recovers_population_subspace() {
         let (c, model) = cluster(8, 400, 10, 33);
         let k = 2;
-        let est = SubspaceProjectionAverage { k }.run_mat(&c).unwrap();
+        let est = SubspaceProjectionAverage { k }.run_mat(&c.session()).unwrap();
         let v = top_k_basis(&model, k);
         let e = est.error(&v);
         assert!(e < 0.2, "projection-average subspace error {e:.3e}");
@@ -390,8 +390,8 @@ mod tests {
     fn deflated_sni_matches_centralized_topk() {
         let (c, _) = cluster(4, 300, 8, 35);
         let k = 3;
-        let cen = CentralizedSubspace { k }.run_mat(&c).unwrap();
-        let defl = DeflatedShiftInvert::new(k).run_mat(&c).unwrap();
+        let cen = CentralizedSubspace { k }.run_mat(&c.session()).unwrap();
+        let defl = DeflatedShiftInvert::new(k).run_mat(&c.session()).unwrap();
         let e = subspace_error(&defl.w, &cen.w);
         assert!(e < 1e-6, "deflated S&I subspace error {e:.3e}");
         // basis must be orthonormal
@@ -402,9 +402,9 @@ mod tests {
     #[test]
     fn estimators_reject_bad_rank() {
         let (c, _) = cluster(2, 40, 4, 37);
-        assert!(DistributedOrthoIteration::new(0).run_mat(&c).is_err());
-        assert!(DistributedOrthoIteration::new(5).run_mat(&c).is_err());
-        assert!(SubspaceProjectionAverage { k: 9 }.run_mat(&c).is_err());
+        assert!(DistributedOrthoIteration::new(0).run_mat(&c.session()).is_err());
+        assert!(DistributedOrthoIteration::new(5).run_mat(&c.session()).is_err());
+        assert!(SubspaceProjectionAverage { k: 9 }.run_mat(&c.session()).is_err());
     }
 
     #[test]
@@ -413,7 +413,7 @@ mod tests {
         let mut errs = Vec::new();
         for &n in &[50usize, 400] {
             let (c, model) = cluster(6, n, 8, 39);
-            let est = SubspaceProjectionAverage { k }.run_mat(&c).unwrap();
+            let est = SubspaceProjectionAverage { k }.run_mat(&c.session()).unwrap();
             errs.push(est.error(&top_k_basis(&model, k)));
         }
         assert!(errs[1] < errs[0], "more data should help: {errs:?}");

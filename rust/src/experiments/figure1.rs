@@ -95,7 +95,7 @@ pub fn run(cfg: &Fig1Config) -> Result<CsvTable> {
                 cfg.oracle.clone(),
             )?;
             for (k, alg) in algs.iter().enumerate() {
-                errors[k].push(alg.run(&cluster)?.error(dist.v1()));
+                errors[k].push(alg.run(&cluster.session())?.error(dist.v1()));
             }
         }
         let mut row = vec![n as f64];

@@ -9,6 +9,7 @@
 pub mod figure1;
 pub mod lower_bounds;
 pub mod scaling;
+pub mod serve;
 pub mod table1;
 pub mod topk;
 pub mod wire;
@@ -36,7 +37,7 @@ pub fn mean_error(
     let mut matvecs = 0.0;
     for r in 0..runs {
         let cluster = Cluster::generate_with(dist, m, n, seed ^ (r as u64) << 20, oracle.clone())?;
-        let est = alg.run(&cluster)?;
+        let est = alg.run(&cluster.session())?;
         errors.push(est.error(dist.v1()));
         rounds += est.comm.rounds as f64;
         matvecs += est.comm.matvec_products as f64;

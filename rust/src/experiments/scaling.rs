@@ -67,7 +67,7 @@ fn avg_matvecs(
     let mut total = 0.0;
     for r in 0..runs {
         let c = Cluster::generate_with(dist, m, n, seed ^ (r as u64) << 18, OracleSpec::Native)?;
-        total += alg.run(&c)?.comm.matvec_products as f64;
+        total += alg.run(&c.session())?.comm.matvec_products as f64;
     }
     Ok(total / runs as f64)
 }

@@ -1,0 +1,199 @@
+//! E11 — multi-tenant serving: throughput, latency and **per-query
+//! bill** vs the number of concurrent tenant threads, for a
+//! heterogeneous job mix on the Figure-1 workload (experiment index in
+//! DESIGN.md §4).
+//!
+//! This is the axis the session layer opens: one shared cluster
+//! answering many queries at once. The driver submits the same FIFO job
+//! mix at each tenant count and records batch wallclock, throughput,
+//! latency, and the mean per-query rounds/bytes — which must **not**
+//! move with concurrency (each session's bill is its solo bill; the
+//! scheduler verifies Σ job bills == cluster aggregate on every call).
+
+use anyhow::Result;
+
+use crate::cluster::{Cluster, OracleSpec, WirePrecision};
+use crate::coordinator::{
+    DistributedLanczos, DistributedPower, ProjectionAverage, QuantizedPower, SignFixedAverage,
+};
+use crate::data::{CovModel, Distribution};
+use crate::serve::{serve, Job};
+use crate::util::csv::CsvTable;
+use crate::util::stats::Summary;
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub d: usize,
+    pub m: usize,
+    pub n: usize,
+    /// Jobs per batch (the mix in [`job_mix`], cycled).
+    pub jobs: usize,
+    /// Tenant counts to sweep.
+    pub tenants_list: Vec<usize>,
+    pub seed: u64,
+    pub oracle: OracleSpec,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            d: 60,
+            m: 8,
+            n: 400,
+            jobs: 12,
+            tenants_list: vec![1, 2, 4, 8],
+            seed: 0x5e7e,
+            oracle: OracleSpec::Native,
+        }
+    }
+}
+
+/// The heterogeneous job mix: iterative lossless, iterative lossy
+/// (bf16 and f32 wire codecs — exercising per-session codecs under
+/// concurrency), and one-round estimators, cycled to `jobs` entries.
+pub fn job_mix(jobs: usize) -> Vec<Job> {
+    (0..jobs)
+        .map(|i| match i % 6 {
+            0 => Job::new(format!("power-{i}"), Box::new(DistributedPower::default())),
+            1 => Job::new(
+                format!("quantized-bf16-{i}"),
+                Box::new(QuantizedPower::new(WirePrecision::Bf16)),
+            ),
+            2 => Job::new(format!("sign-fixed-{i}"), Box::new(SignFixedAverage)),
+            3 => Job::new(
+                format!("quantized-f32-{i}"),
+                Box::new(QuantizedPower::new(WirePrecision::F32)),
+            ),
+            4 => Job::new(format!("projection-{i}"), Box::new(ProjectionAverage)),
+            _ => Job::new(format!("lanczos-{i}"), Box::new(DistributedLanczos::default())),
+        })
+        .collect()
+}
+
+/// Run the sweep; returns a CSV with one row per tenant count:
+/// `tenants, jobs, wall_s, throughput_jps, lat_mean_s, lat_p95_s,
+/// rounds_mean, bytes_mean, err_mean`.
+pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
+    anyhow::ensure!(cfg.jobs >= 1, "serve sweep needs at least one job per batch");
+    let dist = CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x5e).gaussian();
+    let mut table = CsvTable::new(&[
+        "tenants",
+        "jobs",
+        "wall_s",
+        "throughput_jps",
+        "lat_mean_s",
+        "lat_p95_s",
+        "rounds_mean",
+        "bytes_mean",
+        "err_mean",
+    ]);
+    for &tenants in &cfg.tenants_list {
+        anyhow::ensure!(tenants >= 1, "tenants must be >= 1");
+        // fresh cluster per point, same seed: identical data, so the
+        // per-query bills are comparable across tenant counts
+        let cluster =
+            Cluster::generate_with(&dist, cfg.m, cfg.n, cfg.seed, cfg.oracle.clone())?;
+        let report = serve(&cluster, job_mix(cfg.jobs), tenants)?;
+        anyhow::ensure!(
+            report.accounting_exact,
+            "serve accounting violated on an exclusive cluster: \
+             sum of job bills ({}) != aggregate ({})",
+            report.bills_sum,
+            report.aggregate
+        );
+        let k = report.jobs.len().max(1) as f64;
+        let latencies: Vec<f64> =
+            report.jobs.iter().map(|j| j.latency.as_secs_f64()).collect();
+        let lat = Summary::of(&latencies);
+        let rounds_mean =
+            report.jobs.iter().map(|j| j.comm.rounds as f64).sum::<f64>() / k;
+        let bytes_mean = report.jobs.iter().map(|j| j.comm.bytes as f64).sum::<f64>() / k;
+        let errs: Vec<f64> = report
+            .jobs
+            .iter()
+            .filter_map(|j| j.w.as_ref())
+            .map(|w| crate::linalg::vec_ops::alignment_error(w, dist.v1()))
+            .collect();
+        let err_mean = if errs.is_empty() {
+            f64::NAN
+        } else {
+            errs.iter().sum::<f64>() / errs.len() as f64
+        };
+        table.push_nums(&[
+            tenants as f64,
+            report.jobs.len() as f64,
+            report.wall.as_secs_f64(),
+            report.throughput,
+            lat.mean,
+            lat.p95,
+            rounds_mean,
+            bytes_mean,
+            err_mean,
+        ]);
+        crate::info!(
+            "serve tenants={tenants}: {:.1} jobs/s lat_mean={:.3}s rounds/query={rounds_mean:.1} bytes/query={bytes_mean:.0}",
+            report.throughput,
+            lat.mean
+        );
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse_rows(table: &CsvTable) -> Vec<Vec<f64>> {
+        table
+            .render()
+            .lines()
+            .skip(1)
+            .map(|l| l.split(',').map(|c| c.parse().unwrap()).collect())
+            .collect()
+    }
+
+    fn tiny_cfg() -> ServeConfig {
+        ServeConfig {
+            d: 8,
+            m: 3,
+            n: 60,
+            jobs: 5,
+            tenants_list: vec![1, 2],
+            seed: 5,
+            oracle: OracleSpec::Native,
+        }
+    }
+
+    /// Tiny-size smoke: one schema-complete, finite row per tenant count.
+    #[test]
+    fn serve_smoke_rows_finite_and_schema_complete() {
+        let table = run(&tiny_cfg()).unwrap();
+        let rows = parse_rows(&table);
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            assert_eq!(row.len(), 9, "schema-complete row");
+            for cell in row {
+                assert!(cell.is_finite(), "non-finite cell {cell}");
+            }
+            assert_eq!(row[1], 5.0, "all jobs completed");
+            assert!(row[3] > 0.0, "positive throughput");
+            assert!((0.0..=1.0).contains(&row[8]), "error in range");
+        }
+        assert_eq!(rows[0][0], 1.0);
+        assert_eq!(rows[1][0], 2.0);
+    }
+
+    /// The session-layer signature: the mean per-query bill must not
+    /// move with concurrency (identical cluster data at every tenant
+    /// count, bills independent of scheduling). The *error* column is
+    /// deliberately not compared: the sign-randomized estimators draw
+    /// worker coins in request-arrival order, which concurrency may
+    /// permute — the bills cannot change, the coin flips can.
+    #[test]
+    fn per_query_bill_is_invariant_in_tenant_count() {
+        let table = run(&tiny_cfg()).unwrap();
+        let rows = parse_rows(&table);
+        assert_eq!(rows[0][6], rows[1][6], "rounds/query moved with tenant count");
+        assert_eq!(rows[0][7], rows[1][7], "bytes/query moved with tenant count");
+    }
+}

@@ -11,7 +11,7 @@
 
 use anyhow::Result;
 
-use crate::cluster::{Cluster, OracleSpec};
+use crate::cluster::{Cluster, OracleSpec, Session};
 use crate::coordinator::subspace::{
     top_k_basis, CentralizedSubspace, DeflatedShiftInvert, DistributedOrthoIteration,
     SubspaceEstimate, SubspaceProjectionAverage,
@@ -51,13 +51,13 @@ impl Default for TopkConfig {
     }
 }
 
-fn run_estimator(idx: usize, k: usize, cluster: &Cluster) -> Result<SubspaceEstimate> {
+fn run_estimator(idx: usize, k: usize, session: &Session<'_>) -> Result<SubspaceEstimate> {
     match idx {
-        0 => CentralizedSubspace { k }.run_mat(cluster),
-        1 => DistributedOrthoIteration::new(k).run_mat(cluster),
-        2 => BlockLanczos::new(k).run_mat(cluster),
-        3 => SubspaceProjectionAverage { k }.run_mat(cluster),
-        4 => DeflatedShiftInvert::new(k).run_mat(cluster),
+        0 => CentralizedSubspace { k }.run_mat(session),
+        1 => DistributedOrthoIteration::new(k).run_mat(session),
+        2 => BlockLanczos::new(k).run_mat(session),
+        3 => SubspaceProjectionAverage { k }.run_mat(session),
+        4 => DeflatedShiftInvert::new(k).run_mat(session),
         _ => unreachable!("unknown estimator index {idx}"),
     }
 }
@@ -97,7 +97,7 @@ pub fn run(cfg: &TopkConfig) -> Result<CsvTable> {
                 cfg.oracle.clone(),
             )?;
             for (idx, errs) in errors.iter_mut().enumerate() {
-                let est = run_estimator(idx, k, &cluster)?;
+                let est = run_estimator(idx, k, &cluster.session())?;
                 errs.push(est.error(&v));
                 rounds[idx] += est.comm.rounds as f64;
             }

@@ -78,7 +78,7 @@ pub fn run(cfg: &WireConfig) -> Result<CsvTable> {
             cfg.oracle.clone(),
         )?;
         for (i, &prec) in PRECISIONS.iter().enumerate() {
-            let est = QuantizedPower::new(prec).run(&cluster)?;
+            let est = QuantizedPower::new(prec).run(&cluster.session())?;
             errors[i].push(est.error(dist.v1()));
             drift[i] += est.info["final_drift"];
             rounds[i] += est.comm.rounds as f64;

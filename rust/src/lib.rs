@@ -14,17 +14,26 @@
 //! - [`cluster`] — simulated m-machine cluster: worker threads owning
 //!   shards, typed messages, and exact communication-round accounting —
 //!   including the multi-vector **block protocol**
-//!   ([`cluster::Cluster::dist_matmat`]: one round, one message per live
+//!   ([`cluster::Session::dist_matmat`]: one round, one message per live
 //!   worker, `k` vectors of traffic) that the top-`k` family rides, and
 //!   the **wire layer** ([`cluster::WireCodec`]): every payload is
 //!   shipped through a configurable codec (lossless f64 / f32 / bf16)
 //!   and `CommStats.bytes` is billed from the encoded frames themselves.
+//!   The cluster is **multi-tenant**: it is `Sync`, and all billing,
+//!   codec state and collectives live on the per-tenant
+//!   [`cluster::Session`] ([`cluster::Cluster::session`]) — concurrent
+//!   queries bill independently and sum to the cluster's aggregate.
 //! - [`coordinator`] — the paper's algorithms: one-shot averaging
 //!   estimators (Thm 3/4/5), distributed power method / Lanczos,
 //!   hot-potato Oja SGD, Shift-and-Invert with locally-preconditioned
 //!   linear-system solvers (Alg 1 + Alg 2, Thm 6), and the Theorem-7
 //!   top-`k` subspace family (block power, block Lanczos, batched
-//!   deflated S&I) on the block protocol.
+//!   deflated S&I) on the block protocol. All written against the
+//!   session view, so any mix of them runs concurrently on one cluster.
+//! - [`serve`] — the multi-tenant scheduler: a FIFO job queue drained by
+//!   N concurrent leader threads over one shared cluster, with per-job
+//!   bills (identical to solo-run bills, verified) and batch
+//!   throughput/latency metrics. Surfaced as `dspca serve` (E11).
 //! - [`runtime`] — PJRT bridge: loads AOT-compiled HLO artifacts produced
 //!   by `python/compile/aot.py` and runs them from the worker hot path
 //!   (behind the `pjrt` cargo feature; the default build uses a stub).
@@ -41,8 +50,28 @@
 //!
 //! let dist = CovModel::paper_fig1(300, 7).gaussian();
 //! let cluster = Cluster::generate(&dist, 25, 400, 42).unwrap();
-//! let est = SignFixedAverage.run(&cluster).unwrap();
+//! // one tenant session per query; sessions bill independently
+//! let est = SignFixedAverage.run(&cluster.session()).unwrap();
 //! println!("error = {:.3e}, rounds = {}", est.error(dist.v1()), est.comm.rounds);
+//! ```
+//!
+//! Many queries, one cluster (see `examples/serve.rs` for the full
+//! two-tenant demo):
+//!
+//! ```no_run
+//! use dspca::prelude::*;
+//! use dspca::serve::{serve, Job};
+//!
+//! let dist = CovModel::paper_fig1(60, 7).gaussian();
+//! let cluster = Cluster::generate(&dist, 8, 400, 42).unwrap();
+//! let jobs = vec![
+//!     Job::new("lossless", Box::new(DistributedPower::default())),
+//!     Job::new("bf16", Box::new(QuantizedPower::new(WirePrecision::Bf16))),
+//! ];
+//! let report = serve(&cluster, jobs, 2).unwrap();
+//! for j in &report.jobs {
+//!     println!("{}: rounds={} bytes={}", j.name, j.comm.rounds, j.comm.bytes);
+//! }
 //! ```
 
 pub mod bench_harness;
@@ -55,16 +84,17 @@ pub mod linalg;
 pub mod propcheck;
 pub mod rng;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 /// Convenience re-exports covering the public API surface used by the
 /// examples and benches.
 pub mod prelude {
-    pub use crate::cluster::{Cluster, CommStats, OracleSpec, WireCodec, WirePrecision};
+    pub use crate::cluster::{Cluster, CommStats, OracleSpec, Session, WireCodec, WirePrecision};
     pub use crate::coordinator::{
         Algorithm, BlockLanczos, CentralizedErm, CentralizedSubspace, DeflatedShiftInvert,
         DistributedLanczos, DistributedOrthoIteration, DistributedPower, Estimate, HotPotatoOja,
-        NaiveAverage, ProjectionAverage, ShiftInvert, SignFixedAverage, SniConfig,
+        NaiveAverage, ProjectionAverage, QuantizedPower, ShiftInvert, SignFixedAverage, SniConfig,
         SubspaceEstimate, SubspaceProjectionAverage,
     };
     pub use crate::data::{CovModel, Distribution, Thm3Dist, Thm5Dist};

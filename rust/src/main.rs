@@ -1,5 +1,5 @@
 //! `dspca` launcher: regenerate any of the paper's experiments from the
-//! command line.
+//! command line, or serve a multi-tenant query batch.
 //!
 //! ```text
 //! dspca figure1   [--dist gaussian|uniform] [--d 300] [--m 25]
@@ -9,15 +9,19 @@
 //! dspca scaling   [--n-sweep | --m-sweep]
 //! dspca topk      [--d 60] [--m 8] [--n 400] [--k-list 1,2,4,8] [--runs 8]
 //! dspca wire      [--d 60] [--m 8] [--n 400] [--runs 8]
+//! dspca serve     [--d 60] [--m 8] [--n 400] [--jobs 12] [--tenants 1,2,4,8]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
 //! ```
+//!
+//! Unknown or typo'd flags are an error listing the subcommand's
+//! accepted flags (`--n-lsit 25` no longer runs silently with defaults).
 
 use anyhow::{bail, Result};
 
 use dspca::cluster::OracleSpec;
 use dspca::config::Args;
-use dspca::experiments::{figure1, lower_bounds, scaling, table1, topk, wire};
+use dspca::experiments::{figure1, lower_bounds, scaling, serve as serve_exp, table1, topk, wire};
 
 fn main() {
     if let Err(e) = run() {
@@ -36,13 +40,14 @@ fn run() -> Result<()> {
         Some("scaling") => cmd_scaling(&args, &out_dir),
         Some("topk") => cmd_topk(&args, &out_dir),
         Some("wire") => cmd_wire(&args, &out_dir),
+        Some("serve") => cmd_serve(&args, &out_dir),
         Some("e2e") => cmd_e2e(&args),
-        Some("selftest") => cmd_selftest(),
-        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, e2e, selftest)"),
+        Some("selftest") => cmd_selftest(&args),
+        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, e2e, selftest)"),
         None => {
             println!(
                 "dspca — Communication-efficient Distributed Stochastic PCA\n\
-                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | e2e | selftest\n\
+                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | e2e | selftest\n\
                  see README.md for flags"
             );
             Ok(())
@@ -58,6 +63,10 @@ fn oracle_from(args: &Args) -> OracleSpec {
 }
 
 fn cmd_figure1(args: &Args, out_dir: &str) -> Result<()> {
+    args.ensure_known_flags(
+        "figure1",
+        &["dist", "d", "m", "n-list", "runs", "seed", "artifacts", "out"],
+    )?;
     let dist = match args.get("dist").unwrap_or("gaussian") {
         "gaussian" => figure1::Fig1Dist::Gaussian,
         "uniform" => figure1::Fig1Dist::ScaledUniform,
@@ -81,6 +90,7 @@ fn cmd_figure1(args: &Args, out_dir: &str) -> Result<()> {
 }
 
 fn cmd_table1(args: &Args, out_dir: &str) -> Result<()> {
+    args.ensure_known_flags("table1", &["d", "m", "n", "runs", "seed", "artifacts", "out"])?;
     let defaults = table1::Table1Config::default();
     let cfg = table1::Table1Config {
         d: args.get_usize("d", defaults.d)?,
@@ -101,6 +111,10 @@ fn cmd_table1(args: &Args, out_dir: &str) -> Result<()> {
 }
 
 fn cmd_lower_bounds(args: &Args, out_dir: &str) -> Result<()> {
+    args.ensure_known_flags(
+        "lower-bounds",
+        &["n-list", "m-list", "runs", "seed", "delta", "out"],
+    )?;
     let defaults = lower_bounds::LowerBoundConfig::default();
     let cfg = lower_bounds::LowerBoundConfig {
         n_list: args.get_usize_list("n-list", &defaults.n_list)?,
@@ -120,6 +134,24 @@ fn cmd_lower_bounds(args: &Args, out_dir: &str) -> Result<()> {
 }
 
 fn cmd_scaling(args: &Args, out_dir: &str) -> Result<()> {
+    args.ensure_known_flags(
+        "scaling",
+        &[
+            "d",
+            "m",
+            "n-list",
+            "m-list",
+            "n",
+            "runs",
+            "seed",
+            "eps",
+            "clustered-spectrum",
+            "delta",
+            "m-sweep",
+            "n-sweep",
+            "out",
+        ],
+    )?;
     let defaults = scaling::ScalingConfig::default();
     let cfg = scaling::ScalingConfig {
         d: args.get_usize("d", defaults.d)?,
@@ -147,6 +179,10 @@ fn cmd_scaling(args: &Args, out_dir: &str) -> Result<()> {
 }
 
 fn cmd_topk(args: &Args, out_dir: &str) -> Result<()> {
+    args.ensure_known_flags(
+        "topk",
+        &["d", "m", "n", "k-list", "runs", "seed", "artifacts", "out"],
+    )?;
     let defaults = topk::TopkConfig::default();
     let cfg = topk::TopkConfig {
         d: args.get_usize("d", defaults.d)?,
@@ -165,6 +201,7 @@ fn cmd_topk(args: &Args, out_dir: &str) -> Result<()> {
 }
 
 fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
+    args.ensure_known_flags("wire", &["d", "m", "n", "runs", "seed", "artifacts", "out"])?;
     let defaults = wire::WireConfig::default();
     let cfg = wire::WireConfig {
         d: args.get_usize("d", defaults.d)?,
@@ -181,9 +218,32 @@ fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
+    args.ensure_known_flags(
+        "serve",
+        &["d", "m", "n", "jobs", "tenants", "seed", "artifacts", "out"],
+    )?;
+    let defaults = serve_exp::ServeConfig::default();
+    let cfg = serve_exp::ServeConfig {
+        d: args.get_usize("d", defaults.d)?,
+        m: args.get_usize("m", defaults.m)?,
+        n: args.get_usize("n", defaults.n)?,
+        jobs: args.get_usize("jobs", defaults.jobs)?,
+        tenants_list: args.get_usize_list("tenants", &defaults.tenants_list)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        oracle: oracle_from(args),
+    };
+    let table = serve_exp::run(&cfg)?;
+    let path = format!("{out_dir}/serve.csv");
+    table.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 fn cmd_e2e(args: &Args) -> Result<()> {
     use dspca::coordinator::{Algorithm, CentralizedErm, ShiftInvert, SignFixedAverage};
     use dspca::data::{CovModel, Distribution};
+    args.ensure_known_flags("e2e", &["artifacts", "m", "n", "d", "seed", "out"])?;
     let artifacts = args
         .get("artifacts")
         .map(|s| s.to_string())
@@ -197,7 +257,7 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     println!("e2e: m={m} n={n} d={d} artifacts={artifacts}");
     let cluster = dspca::cluster::Cluster::generate_with(&dist, m, n, seed, spec)?;
     for alg in [&SignFixedAverage as &dyn Algorithm, &CentralizedErm, &ShiftInvert::default()] {
-        let est = alg.run(&cluster)?;
+        let est = alg.run(&cluster.session())?;
         println!(
             "  {:<22} err={:.3e} rounds={} wall={:?}",
             alg.name(),
@@ -209,13 +269,14 @@ fn cmd_e2e(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_selftest() -> Result<()> {
+fn cmd_selftest(args: &Args) -> Result<()> {
     use dspca::coordinator::{Algorithm, CentralizedErm, SignFixedAverage};
     use dspca::data::{CovModel, Distribution};
+    args.ensure_known_flags("selftest", &["out"])?;
     let dist = CovModel::paper_fig1(24, 1).gaussian();
     let c = dspca::cluster::Cluster::generate(&dist, 4, 200, 2)?;
-    let cen = CentralizedErm.run(&c)?;
-    let fix = SignFixedAverage.run(&c)?;
+    let cen = CentralizedErm.run(&c.session())?;
+    let fix = SignFixedAverage.run(&c.session())?;
     println!("selftest: centralized err={:.3e}, sign-fixed err={:.3e}", cen.error(dist.v1()), fix.error(dist.v1()));
     if cen.error(dist.v1()) > 0.5 {
         bail!("selftest failed: centralized ERM far from v1");

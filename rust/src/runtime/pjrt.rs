@@ -299,8 +299,8 @@ mod tests {
         let dist = CovModel::paper_fig1(32, 3).gaussian();
         let spec = OracleSpec::Pjrt { artifact_dir: dir.to_string_lossy().into_owned() };
         let c = Cluster::generate_with(&dist, 3, 200, 42, spec).unwrap();
-        let est = SignFixedAverage.run(&c).unwrap();
-        let cen = CentralizedErm.run(&c).unwrap();
+        let est = SignFixedAverage.run(&c.session()).unwrap();
+        let cen = CentralizedErm.run(&c.session()).unwrap();
         // both estimators run entirely through PJRT-backed workers
         let e = crate::linalg::vec_ops::alignment_error(&est.w, &cen.w);
         assert!(e < 0.2, "pjrt-backed estimators disagree wildly: {e}");

@@ -67,7 +67,7 @@ mod tests {
         let dist = CovModel::paper_fig1(4, 1).gaussian();
         let spec = OracleSpec::Pjrt { artifact_dir: "does-not-exist".into() };
         let c = Cluster::generate_with(&dist, 2, 10, 3, spec).unwrap();
-        let err = c.dist_matvec(&[1.0, 0.0, 0.0, 0.0]).unwrap_err();
+        let err = c.session().dist_matvec(&[1.0, 0.0, 0.0, 0.0]).unwrap_err();
         assert!(err.to_string().contains("failed"), "unexpected error: {err}");
     }
 }

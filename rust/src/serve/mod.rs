@@ -1,0 +1,325 @@
+//! `serve` — a multi-tenant scheduler: run many heterogeneous PCA
+//! queries concurrently on **one** shared cluster, with exact per-job
+//! bills and aggregate throughput/latency metrics.
+//!
+//! This is the deployment shape of distributed PCA in practice (cf. Fan
+//! et al., *Distributed Estimation of Principal Eigenspaces*): the
+//! sharded dataset is resident on the machines, and many estimation
+//! queries — different algorithms, accuracies, even wire codecs — are
+//! answered against it. The session layer makes this safe: every job
+//! runs on its own [`Session`](crate::cluster::Session) (own
+//! [`CommStats`] bill, own codec, own sequence numbers), so concurrent
+//! jobs cannot corrupt each other's accounting or wire precision.
+//!
+//! ## Scheduling & fairness contract
+//!
+//! - Jobs are taken from a FIFO queue by `tenants` identical worker
+//!   ("leader") threads — work-conserving: a tenant thread never idles
+//!   while the queue is non-empty, and no job is skipped or reordered
+//!   at dequeue time (completion order may differ; [`ServeReport::jobs`]
+//!   is returned in submission order regardless).
+//! - Cluster wire access serializes at round granularity (see
+//!   [`crate::cluster`]): concurrency changes *when* a job's rounds
+//!   happen, never what they cost.
+//!
+//! ## Accounting contract
+//!
+//! - Each [`JobReport::comm`] is exactly the bill the same job would
+//!   pay running alone on an idle cluster (same rounds, messages,
+//!   bytes).
+//! - The sum of all job bills ([`ServeReport::bills_sum`]) equals
+//!   [`ServeReport::aggregate`], the delta of the cluster's monotonic
+//!   aggregate ledger over the serve window, whenever the batch has
+//!   the cluster to itself. [`serve`] records the identity's outcome
+//!   in [`ServeReport::accounting_exact`] on every call (traffic from
+//!   sessions outside the batch — e.g. a second concurrent `serve` —
+//!   lands in the aggregate but in no job's bill); exclusive-use
+//!   callers assert it.
+//! - A failed job still pays for the traffic it generated before
+//!   failing; its partial bill is included in the sum.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{Cluster, CommStats};
+use crate::coordinator::Algorithm;
+
+/// One queued query: a display name plus the algorithm to run. The
+/// algorithm chooses its own wire codec (e.g.
+/// [`QuantizedPower`](crate::coordinator::QuantizedPower) installs a
+/// lossy codec on its session); everything else runs lossless.
+pub struct Job {
+    /// Display name for reports (distinct from the algorithm's own
+    /// [`Algorithm::name`], so two jobs may run the same algorithm).
+    pub name: String,
+    /// The query itself.
+    pub alg: Box<dyn Algorithm + Send>,
+}
+
+impl Job {
+    pub fn new(name: impl Into<String>, alg: Box<dyn Algorithm + Send>) -> Job {
+        Job { name: name.into(), alg }
+    }
+}
+
+/// Outcome of one job.
+pub struct JobReport {
+    /// The job's display name.
+    pub name: String,
+    /// The algorithm's identifier ([`Algorithm::name`]).
+    pub alg: &'static str,
+    /// The job's own communication bill — identical to its solo-run
+    /// bill; a partial bill if the job failed (including any straggler
+    /// replies from its own failed rounds, billed to it on arrival).
+    pub comm: CommStats,
+    /// Leader-side wallclock of the run itself (excludes queue wait).
+    pub wall: Duration,
+    /// Submission-to-completion latency (includes queue wait — the
+    /// quantity that grows under load).
+    pub latency: Duration,
+    /// The estimate, if the job succeeded.
+    pub w: Option<Vec<f64>>,
+    /// The failure, if it did not.
+    pub error: Option<String>,
+}
+
+impl JobReport {
+    pub fn succeeded(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Outcome of one [`serve`] call.
+pub struct ServeReport {
+    /// Per-job reports in **submission order**.
+    pub jobs: Vec<JobReport>,
+    /// End-to-end wallclock of the whole batch.
+    pub wall: Duration,
+    /// The cluster's aggregate bill over the serve window. When the
+    /// batch had the cluster to itself this equals [`ServeReport::bills_sum`]
+    /// exactly ([`ServeReport::accounting_exact`]); traffic from
+    /// sessions outside the batch (e.g. a second concurrent `serve`
+    /// call) lands here but in no job's bill.
+    pub aggregate: CommStats,
+    /// The sum of the per-job bills.
+    pub bills_sum: CommStats,
+    /// Whether `bills_sum == aggregate` held for this window — the
+    /// accounting identity, exact whenever nothing outside the batch
+    /// touched the cluster. Completed work is returned either way.
+    pub accounting_exact: bool,
+    /// Completed jobs per second of wallclock.
+    pub throughput: f64,
+}
+
+impl ServeReport {
+    /// Mean submission-to-completion latency in seconds.
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.jobs.is_empty() {
+            return 0.0;
+        }
+        self.jobs.iter().map(|j| j.latency.as_secs_f64()).sum::<f64>() / self.jobs.len() as f64
+    }
+}
+
+/// Run `jobs` to completion over `tenants` concurrent leader threads on
+/// one shared cluster. Returns per-job bills (each identical to the
+/// job's solo-run bill) plus batch metrics; errors only on a bad
+/// `tenants` count — individual job failures are reported in their
+/// [`JobReport::error`], and completed work is never discarded.
+///
+/// The Σ-bills == aggregate identity is exact when the serve batch has
+/// the cluster to itself for the window; its outcome is recorded in
+/// [`ServeReport::accounting_exact`] (see the module docs).
+pub fn serve(cluster: &Cluster, jobs: Vec<Job>, tenants: usize) -> Result<ServeReport> {
+    ensure!(tenants >= 1, "serve requires at least one tenant thread");
+    let n_jobs = jobs.len();
+    let agg0 = cluster.aggregate_stats();
+    let t_start = Instant::now();
+    let queue: Mutex<VecDeque<(usize, Job)>> = Mutex::new(jobs.into_iter().enumerate().collect());
+    let done: Mutex<Vec<(usize, JobReport)>> = Mutex::new(Vec::with_capacity(n_jobs));
+    std::thread::scope(|s| {
+        for _ in 0..tenants.min(n_jobs.max(1)) {
+            s.spawn(|| loop {
+                let next = queue.lock().unwrap().pop_front();
+                let Some((idx, job)) = next else { break };
+                let alg_name = job.alg.name();
+                let session = cluster.session();
+                let t_run = Instant::now();
+                let outcome = job.alg.run(&session);
+                // close() rather than a stats() snapshot + drop: closing
+                // is race-free, so a straggler from this job's own failed
+                // round billed by a concurrent tenant is either in this
+                // bill or (once closed) in nobody's — the Σ bills ==
+                // aggregate identity below holds under all interleavings
+                let comm = session.close();
+                let latency = t_start.elapsed();
+                let report = match outcome {
+                    Ok(est) => JobReport {
+                        name: job.name,
+                        alg: alg_name,
+                        comm,
+                        wall: est.wall,
+                        latency,
+                        w: Some(est.w),
+                        error: None,
+                    },
+                    Err(e) => JobReport {
+                        name: job.name,
+                        alg: alg_name,
+                        // comm above: the traffic the job generated
+                        // before failing
+                        wall: t_run.elapsed(),
+                        latency,
+                        w: None,
+                        error: Some(format!("{e:#}")),
+                        comm,
+                    },
+                };
+                done.lock().unwrap().push((idx, report));
+            });
+        }
+    });
+    let wall = t_start.elapsed();
+    let mut reports = done.into_inner().unwrap();
+    reports.sort_by_key(|(idx, _)| *idx);
+    let jobs: Vec<JobReport> = reports.into_iter().map(|(_, r)| r).collect();
+    let aggregate = cluster.aggregate_stats().delta_since(&agg0);
+    // the accounting identity: sum of per-job bills == aggregate
+    // window. Recorded rather than enforced — aborting here would
+    // discard completed work whenever sessions outside the batch
+    // (another concurrent serve(), a hand-rolled tenant) also billed
+    // the aggregate during the window. Exclusive-use callers (the E11
+    // driver, the tests) assert `accounting_exact` themselves.
+    let mut bills_sum = CommStats::default();
+    for j in &jobs {
+        bills_sum.merge(&j.comm);
+    }
+    let accounting_exact = bills_sum == aggregate;
+    let completed = jobs.iter().filter(|j| j.succeeded()).count();
+    Ok(ServeReport {
+        jobs,
+        wall,
+        aggregate,
+        bills_sum,
+        accounting_exact,
+        throughput: completed as f64 / wall.as_secs_f64().max(1e-12),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Session, WirePrecision};
+    use crate::coordinator::{
+        DistributedLanczos, DistributedPower, Estimate, QuantizedPower, SignFixedAverage,
+    };
+    use crate::data::CovModel;
+
+    fn small_cluster(m: usize, n: usize, d: usize, seed: u64) -> Cluster {
+        let dist = CovModel::paper_fig1(d, seed ^ 0xab).gaussian();
+        Cluster::generate(&dist, m, n, seed).unwrap()
+    }
+
+    fn mixed_jobs() -> Vec<Job> {
+        vec![
+            Job::new("power", Box::new(DistributedPower::default())),
+            Job::new("quantized-bf16", Box::new(QuantizedPower::new(WirePrecision::Bf16))),
+            Job::new("sign-fixed", Box::new(SignFixedAverage)),
+            Job::new("lanczos", Box::new(DistributedLanczos::default())),
+        ]
+    }
+
+    #[test]
+    fn serve_runs_all_jobs_and_reports_in_submission_order() {
+        let c = small_cluster(3, 60, 8, 1);
+        let report = serve(&c, mixed_jobs(), 2).unwrap();
+        assert_eq!(report.jobs.len(), 4);
+        let names: Vec<&str> = report.jobs.iter().map(|j| j.name.as_str()).collect();
+        assert_eq!(names, ["power", "quantized-bf16", "sign-fixed", "lanczos"]);
+        for j in &report.jobs {
+            assert!(j.succeeded(), "{}: {:?}", j.name, j.error);
+            assert!(j.w.is_some());
+            assert!(j.comm.rounds >= 1, "{} billed no rounds", j.name);
+            assert!(j.latency >= j.wall, "latency includes queue wait");
+        }
+        assert!(report.accounting_exact, "exclusive batch: Σ bills must equal aggregate");
+        assert_eq!(report.bills_sum, report.aggregate);
+        assert!(report.throughput > 0.0);
+    }
+
+    #[test]
+    fn concurrent_bills_match_solo_bills_and_sum_to_aggregate() {
+        let c = small_cluster(3, 60, 8, 2);
+        // solo reference bills, one quiet session each
+        let solo: Vec<CommStats> = mixed_jobs()
+            .into_iter()
+            .map(|j| j.alg.run(&c.session()).unwrap().comm)
+            .collect();
+        let agg0 = c.aggregate_stats();
+        let report = serve(&c, mixed_jobs(), 4).unwrap();
+        for (j, solo_bill) in report.jobs.iter().zip(&solo) {
+            assert_eq!(&j.comm, solo_bill, "{}: concurrent bill != solo bill", j.name);
+        }
+        assert!(report.accounting_exact);
+        assert_eq!(c.aggregate_stats().delta_since(&agg0), report.aggregate);
+    }
+
+    #[test]
+    fn one_tenant_equals_sequential_execution() {
+        let c = small_cluster(2, 40, 6, 3);
+        let report = serve(&c, mixed_jobs(), 1).unwrap();
+        assert_eq!(report.jobs.len(), 4);
+        // with one tenant, completion order IS submission order, so each
+        // job's latency is at least the previous one's
+        for pair in report.jobs.windows(2) {
+            assert!(pair[1].latency >= pair[0].latency);
+        }
+    }
+
+    /// An algorithm that performs one round and then fails.
+    struct FailingAlg;
+    impl Algorithm for FailingAlg {
+        fn name(&self) -> &'static str {
+            "failing"
+        }
+        fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+            session.reset_stats();
+            let v = vec![1.0; session.d()];
+            session.dist_matvec(&v)?;
+            anyhow::bail!("synthetic failure after one round")
+        }
+    }
+
+    #[test]
+    fn failed_job_reports_error_and_partial_bill_without_aborting_batch() {
+        let c = small_cluster(2, 30, 6, 4);
+        let jobs = vec![
+            Job::new("ok", Box::new(SignFixedAverage)),
+            Job::new("boom", Box::new(FailingAlg)),
+            Job::new("ok-2", Box::new(SignFixedAverage)),
+        ];
+        let report = serve(&c, jobs, 2).unwrap();
+        assert_eq!(report.jobs.len(), 3);
+        assert!(report.jobs[0].succeeded());
+        assert!(!report.jobs[1].succeeded());
+        assert!(report.jobs[1].error.as_deref().unwrap().contains("synthetic failure"));
+        assert_eq!(report.jobs[1].comm.rounds, 1, "failed job still pays its round");
+        assert!(report.accounting_exact, "partial bills keep the identity exact");
+        assert!(report.jobs[2].succeeded());
+        // throughput counts completed jobs only
+        assert!((report.throughput * report.wall.as_secs_f64() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn more_tenants_than_jobs_is_fine() {
+        let c = small_cluster(2, 30, 6, 5);
+        let report = serve(&c, vec![Job::new("only", Box::new(SignFixedAverage))], 8).unwrap();
+        assert_eq!(report.jobs.len(), 1);
+        assert!(report.jobs[0].succeeded());
+        assert!(serve(&c, Vec::new(), 2).unwrap().jobs.is_empty());
+        assert!(serve(&c, Vec::new(), 0).is_err(), "zero tenants is a config error");
+    }
+}

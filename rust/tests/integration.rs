@@ -1,12 +1,12 @@
 //! Cross-module integration tests: full pipelines over the public API,
-//! plus property-based invariants on the coordinator and the cluster's
-//! block protocol (propcheck).
+//! plus property-based invariants on the coordinator, the cluster's
+//! block protocol, and the multi-tenant session layer (propcheck).
 
-use dspca::cluster::{Cluster, WireCodec, WirePrecision};
+use dspca::cluster::{Cluster, CommStats, Session, WireCodec, WirePrecision};
 use dspca::coordinator::subspace::subspace_error;
 use dspca::coordinator::{
     Algorithm, BlockLanczos, CentralizedErm, DistributedLanczos, DistributedOrthoIteration,
-    DistributedPower, HotPotatoOja, NaiveAverage, ProjectionAverage, ShiftInvert,
+    DistributedPower, HotPotatoOja, NaiveAverage, ProjectionAverage, QuantizedPower, ShiftInvert,
     SignFixedAverage, SniConfig,
 };
 use dspca::data::{CovModel, Distribution, Thm3Dist};
@@ -35,7 +35,7 @@ fn all_algorithms_produce_unit_estimates() {
         Box::new(ShiftInvert::default()),
     ];
     for alg in &algs {
-        let est = alg.run(&c).unwrap();
+        let est = alg.run(&c.session()).unwrap();
         assert!((norm(&est.w) - 1.0).abs() < 1e-9, "{} not unit norm", alg.name());
         let err = est.error(dist.v1());
         assert!((0.0..=1.0).contains(&err), "{} error {err} out of range", alg.name());
@@ -45,13 +45,13 @@ fn all_algorithms_produce_unit_estimates() {
 #[test]
 fn exact_methods_agree_on_the_pooled_eigenvector() {
     let (c, _) = fig1(5, 300, 24, 3);
-    let cen = CentralizedErm.run(&c).unwrap();
+    let cen = CentralizedErm.run(&c.session()).unwrap();
     for alg in [
         &DistributedPower::default() as &dyn Algorithm,
         &DistributedLanczos::default(),
         &ShiftInvert::default(),
     ] {
-        let est = alg.run(&c).unwrap();
+        let est = alg.run(&c.session()).unwrap();
         let e = alignment_error(&est.w, &cen.w);
         assert!(e < 1e-6, "{} disagrees with centralized ERM: {e:.3e}", alg.name());
     }
@@ -63,8 +63,8 @@ fn determinism_full_pipeline() {
     // coins, algorithms)
     let run_once = || {
         let (c, dist) = fig1(4, 80, 8, 99);
-        let a = SignFixedAverage.run(&c).unwrap();
-        let b = ShiftInvert::default().run(&c).unwrap();
+        let a = SignFixedAverage.run(&c.session()).unwrap();
+        let b = ShiftInvert::default().run(&c.session()).unwrap();
         let err = a.error(dist.v1());
         (a.w, b.w, err)
     };
@@ -82,26 +82,224 @@ fn failure_injection_degrades_gracefully() {
     c.kill_worker(5).unwrap();
     assert_eq!(c.live(), 4);
     // algorithms still run over the surviving machines
-    let est = SignFixedAverage.run(&c).unwrap();
+    let est = SignFixedAverage.run(&c.session()).unwrap();
     assert!(est.error(dist.v1()) < 0.8);
     assert_eq!(est.comm.vectors_gathered, 4);
-    let sni = ShiftInvert::default().run(&c).unwrap();
-    assert!(alignment_error(&sni.w, &CentralizedErm.run(&c).unwrap().w) < 1e-5);
+    let sni = ShiftInvert::default().run(&c.session()).unwrap();
+    assert!(alignment_error(&sni.w, &CentralizedErm.run(&c.session()).unwrap().w) < 1e-5);
 }
 
 #[test]
 fn comm_accounting_is_additive_across_runs() {
     let (c, _) = fig1(3, 60, 6, 11);
     let a = DistributedPower { max_iters: 5, tol: 0.0, seed: 1, warm_start: false }
-        .run(&c)
+        .run(&c.session())
         .unwrap();
     let b = DistributedPower { max_iters: 9, tol: 0.0, seed: 1, warm_start: false }
-        .run(&c)
+        .run(&c.session())
         .unwrap();
     assert_eq!(a.comm.rounds, 5);
     assert_eq!(b.comm.rounds, 9);
-    // each estimate carries only its own bill (instrumented reset)
+    // each estimate carries only its own session's bill
     assert_eq!(a.comm.matvec_products + b.comm.matvec_products, 14);
+}
+
+// ---------------------------------------------------------------------
+// Multi-tenant session layer (the ISSUE 3 tentpole): concurrent bills
+// are solo bills, and they sum to the cluster aggregate.
+// ---------------------------------------------------------------------
+
+/// THE acceptance test: two algorithm jobs — one lossless, one through a
+/// lossy bf16 wire codec — running **concurrently** on one shared
+/// cluster must produce per-session bills that are each identical to
+/// their solo-run bills (same rounds/messages/bytes) and that sum to
+/// the cluster's aggregate over the window.
+#[test]
+fn concurrent_lossless_and_lossy_tenants_bill_exactly_like_solo_runs() {
+    let (c, _) = fig1(4, 150, 12, 21);
+    let power = DistributedPower::default();
+    let quant = QuantizedPower::new(WirePrecision::Bf16);
+    // solo reference runs on an otherwise idle cluster
+    let solo_power = power.run(&c.session()).unwrap();
+    let solo_quant = quant.run(&c.session()).unwrap();
+    assert!(solo_power.comm.bytes > 0 && solo_quant.comm.bytes > 0);
+    // concurrent runs, one session per tenant thread
+    let agg0 = c.aggregate_stats();
+    let (conc_power, conc_quant) = std::thread::scope(|s| {
+        let h1 = s.spawn(|| power.run(&c.session()).unwrap());
+        let h2 = s.spawn(|| quant.run(&c.session()).unwrap());
+        (h1.join().unwrap(), h2.join().unwrap())
+    });
+    // same estimates (interleaving cannot change the numerics)…
+    assert_eq!(conc_power.w, solo_power.w);
+    assert_eq!(conc_quant.w, solo_quant.w);
+    // …and bill-for-bill identical accounting
+    assert_eq!(conc_power.comm, solo_power.comm, "lossless tenant's bill changed under load");
+    assert_eq!(conc_quant.comm, solo_quant.comm, "lossy tenant's bill changed under load");
+    // the lossy tenant did not degrade or inflate the lossless one:
+    // bf16 rounds cost 1/4 the bytes of f64 rounds of the same shape
+    assert_eq!(
+        solo_quant.comm.bytes * 4,
+        solo_quant.comm.rounds * (8 * 12 * 5),
+        "bf16 tenant ships 2-byte frames"
+    );
+    // sum of the two bills == the aggregate window
+    let mut sum = conc_power.comm.clone();
+    sum.merge(&conc_quant.comm);
+    assert_eq!(sum, c.aggregate_stats().delta_since(&agg0));
+}
+
+/// Same acceptance property through the `serve` scheduler path.
+#[test]
+fn serve_scheduler_preserves_solo_bills_for_mixed_codec_jobs() {
+    use dspca::serve::{serve, Job};
+    let (c, _) = fig1(3, 100, 10, 23);
+    let solo_power = DistributedPower::default().run(&c.session()).unwrap();
+    let solo_quant = QuantizedPower::new(WirePrecision::Bf16).run(&c.session()).unwrap();
+    let agg0 = c.aggregate_stats();
+    let report = serve(
+        &c,
+        vec![
+            Job::new("lossless-power", Box::new(DistributedPower::default())),
+            Job::new("bf16-power", Box::new(QuantizedPower::new(WirePrecision::Bf16))),
+        ],
+        2,
+    )
+    .unwrap();
+    assert_eq!(report.jobs[0].comm, solo_power.comm);
+    assert_eq!(report.jobs[1].comm, solo_quant.comm);
+    assert!(report.accounting_exact, "exclusive batch: Σ bills == aggregate");
+    assert_eq!(report.aggregate, c.aggregate_stats().delta_since(&agg0));
+}
+
+/// Propcheck (ISSUE 3 satellite, property a): for every collective ×
+/// every codec, the sum of per-session `CommStats` across concurrent
+/// tenants equals the cluster's aggregate bill over the window.
+#[test]
+fn prop_concurrent_session_bills_sum_to_cluster_aggregate() {
+    propcheck(Config::default().cases(6), "session bill additivity", |g| {
+        let m = g.usize_in(1, 4);
+        let n = g.usize_in(5, 25);
+        let d = g.usize_in(2, 8);
+        let k = g.usize_in(1, d);
+        let seed = g.rng().next_u64();
+        let dist = CovModel::paper_fig1(d, 6).gaussian();
+        let c = Cluster::generate(&dist, m, n, seed).unwrap();
+        if m > 1 && g.bool() {
+            c.kill_worker(g.usize_in(1, m - 1)).unwrap();
+        }
+        // pre-generate per-tenant payloads (Gen is not Sync)
+        let payloads: Vec<Vec<f64>> = (0..3).map(|_| g.gaussian_vec(d)).collect();
+        let agg0 = c.aggregate_stats();
+        let codecs = [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16];
+        // three tenants, one codec each, every collective — concurrently
+        let bills: Vec<CommStats> = std::thread::scope(|s| {
+            let handles: Vec<_> = codecs
+                .iter()
+                .zip(&payloads)
+                .map(|(&prec, payload)| {
+                    let c = &c;
+                    s.spawn(move || {
+                        let sess = c.session();
+                        sess.set_codec(WireCodec::new(prec));
+                        sess.dist_matvec(payload).unwrap();
+                        let mut v = Matrix::zeros(d, k);
+                        for col in 0..k {
+                            v.set_col(col, payload);
+                        }
+                        sess.dist_matmat(&v).unwrap();
+                        sess.local_top_eigvecs(false).unwrap();
+                        sess.local_top_k(k).unwrap();
+                        sess.gram_average().unwrap();
+                        sess.oja_chain(payload, 0.5, 10.0).unwrap();
+                        sess.stats()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut sum = CommStats::default();
+        for b in &bills {
+            sum.merge(b);
+        }
+        assert_eq!(sum, c.aggregate_stats().delta_since(&agg0));
+        // and each tenant's per-codec byte bill is its solo-table bill
+        let live = c.live() as u64;
+        for (prec, bill) in codecs.iter().zip(&bills) {
+            let b = |words: usize| (words * prec.bytes_per_entry()) as u64;
+            let want = b(d) * (live + 1)      // dist_matvec
+                + b(d * k) * (live + 1)       // dist_matmat
+                + b(d) * live                 // local_top_eigvecs
+                + b(d * k) * live             // local_top_k
+                + b(d * d) * live             // gram_average
+                + 2 * b(d) * live; // oja_chain
+            assert_eq!(bill.bytes, want, "{prec:?} tenant bytes");
+        }
+    });
+}
+
+/// Propcheck (ISSUE 3 satellite, property b): a single-session run
+/// under the default codec reproduces the pre-refactor accounting table
+/// verbatim — the `8·d·…` rows asserted field by field.
+#[test]
+fn prop_single_session_reproduces_legacy_accounting_verbatim() {
+    propcheck(Config::default().cases(8), "legacy accounting table", |g| {
+        let m = g.usize_in(1, 5);
+        let n = g.usize_in(5, 25);
+        let d = g.usize_in(2, 10);
+        let k = g.usize_in(1, d);
+        let seed = g.rng().next_u64();
+        let dist = CovModel::paper_fig1(d, 7).gaussian();
+        let c = Cluster::generate(&dist, m, n, seed).unwrap();
+        if m > 1 && g.bool() {
+            c.kill_worker(g.usize_in(1, m - 1)).unwrap();
+        }
+        let live = c.live() as u64;
+        let du = d as u64;
+        let ku = k as u64;
+
+        let s = c.session();
+        s.dist_matvec(&g.gaussian_vec(d)).unwrap();
+        let st = s.stats();
+        assert_eq!(
+            (st.rounds, st.matvec_products, st.vectors_broadcast, st.vectors_gathered),
+            (1, 1, 1, live)
+        );
+        assert_eq!((st.requests_sent, st.responses_received), (live, live));
+        assert_eq!(st.bytes, 8 * du * (live + 1));
+
+        let s = c.session();
+        s.dist_matmat(&random_block(g, d, k)).unwrap();
+        let st = s.stats();
+        assert_eq!(
+            (st.rounds, st.matvec_products, st.vectors_broadcast, st.vectors_gathered),
+            (1, ku, ku, live * ku)
+        );
+        assert_eq!(st.bytes, 8 * du * ku * (live + 1));
+
+        let s = c.session();
+        s.local_top_eigvecs(false).unwrap();
+        let st = s.stats();
+        assert_eq!((st.rounds, st.vectors_gathered, st.bytes), (1, live, 8 * du * live));
+
+        let s = c.session();
+        s.local_top_k(k).unwrap();
+        let st = s.stats();
+        assert_eq!((st.rounds, st.vectors_gathered, st.bytes), (1, live * ku, 8 * du * ku * live));
+
+        let s = c.session();
+        s.gram_average().unwrap();
+        let st = s.stats();
+        assert_eq!((st.rounds, st.vectors_gathered, st.bytes), (1, live * du, 8 * du * du * live));
+
+        let s = c.session();
+        let mut w0 = vec![0.0; d];
+        w0[0] = 1.0;
+        s.oja_chain(&w0, 0.5, 10.0).unwrap();
+        let st = s.stats();
+        assert_eq!((st.rounds, st.vectors_broadcast, st.vectors_gathered), (live, live, live));
+        assert_eq!(st.bytes, 2 * 8 * du * live);
+    });
 }
 
 #[test]
@@ -116,7 +314,7 @@ fn prop_sign_fixed_estimate_is_sign_invariant() {
         let seed = g.rng().next_u64();
         let dist = CovModel::paper_fig1(6, 1).gaussian();
         let c = Cluster::generate(&dist, m, n, seed).unwrap();
-        let est = SignFixedAverage.run(&c).unwrap();
+        let est = SignFixedAverage.run(&c.session()).unwrap();
         let flipped: Vec<f64> = est.w.iter().map(|x| -x).collect();
         let e1 = alignment_error(&est.w, dist.v1());
         let e2 = alignment_error(&flipped, dist.v1());
@@ -135,15 +333,16 @@ fn prop_dist_matvec_is_linear_and_symmetric() {
         let seed = g.rng().next_u64();
         let dist = CovModel::paper_fig1(d.max(2), 1).gaussian();
         let c = Cluster::generate(&dist, m, n, seed).unwrap();
+        let s = c.session();
         let x = g.gaussian_vec(d.max(2));
         let y = g.gaussian_vec(d.max(2));
         let a = g.f64_in(-2.0, 2.0);
         // linearity
-        let lhs = c
+        let lhs = s
             .dist_matvec(&x.iter().zip(&y).map(|(xi, yi)| a * xi + yi).collect::<Vec<_>>())
             .unwrap();
-        let mx = c.dist_matvec(&x).unwrap();
-        let my = c.dist_matvec(&y).unwrap();
+        let mx = s.dist_matvec(&x).unwrap();
+        let my = s.dist_matvec(&y).unwrap();
         for i in 0..lhs.len() {
             let want = a * mx[i] + my[i];
             assert!((lhs[i] - want).abs() < 1e-9 * (1.0 + want.abs()));
@@ -162,7 +361,7 @@ fn prop_one_round_estimators_never_exceed_one_round() {
         let seed = g.rng().next_u64();
         let c = Cluster::generate(&Thm3Dist, m, 30, seed).unwrap();
         for alg in [&NaiveAverage as &dyn Algorithm, &SignFixedAverage, &ProjectionAverage] {
-            let est = alg.run(&c).unwrap();
+            let est = alg.run(&c.session()).unwrap();
             assert_eq!(est.comm.rounds, 1, "{}", alg.name());
             assert_eq!(est.comm.vectors_gathered, m as u64);
         }
@@ -176,7 +375,7 @@ fn prop_oja_rounds_equal_live_machines() {
         let seed = g.rng().next_u64();
         let dist = CovModel::paper_fig1(5, 2).gaussian();
         let c = Cluster::generate(&dist, m, 25, seed).unwrap();
-        let est = HotPotatoOja::default().run(&c).unwrap();
+        let est = HotPotatoOja::default().run(&c.session()).unwrap();
         assert_eq!(est.comm.rounds, m as u64);
     });
 }
@@ -209,10 +408,11 @@ fn prop_dist_matmat_column_agrees_with_dist_matvec() {
         if m > 1 && g.bool() {
             c.kill_worker(g.usize_in(1, m - 1)).unwrap();
         }
+        let s = c.session();
         let v = random_block(g, d, k);
-        let blk = c.dist_matmat(&v).unwrap();
+        let blk = s.dist_matmat(&v).unwrap();
         for col in 0..k {
-            let want = c.dist_matvec(&v.col(col)).unwrap();
+            let want = s.dist_matvec(&v.col(col)).unwrap();
             for i in 0..d {
                 assert!(
                     (blk.get(i, col) - want[i]).abs() <= 1e-12 * (1.0 + want[i].abs()),
@@ -247,10 +447,10 @@ fn prop_block_round_accounting_matches_module_table() {
                 live -= 1;
             }
         }
-        c.reset_stats();
+        let s = c.session();
         let v = random_block(g, d, k);
-        c.dist_matmat(&v).unwrap();
-        let st = c.stats();
+        s.dist_matmat(&v).unwrap();
+        let st = s.stats();
         assert_eq!(st.rounds, 1);
         assert_eq!(st.matvec_products, k as u64);
         assert_eq!(st.vectors_broadcast, k as u64);
@@ -263,9 +463,9 @@ fn prop_block_round_accounting_matches_module_table() {
 
 #[test]
 fn prop_block_power_iteration_at_k8_costs_one_round_one_message_per_live_worker() {
-    // THE acceptance property: one block-power iteration at k = 8 costs
-    // exactly 1 round and 1 request/response per live worker — where the
-    // seed's column-wise loop cost k rounds and k round-trips
+    // THE ISSUE-1 acceptance property: one block-power iteration at k = 8
+    // costs exactly 1 round and 1 request/response per live worker —
+    // where the seed's column-wise loop cost k rounds and k round-trips
     propcheck(Config::default().cases(8), "k=8 block-power iteration cost", |g| {
         let k = 8;
         let m = g.usize_in(2, 6);
@@ -279,7 +479,7 @@ fn prop_block_power_iteration_at_k8_costs_one_round_one_message_per_live_worker(
             live -= 1;
         }
         let est = DistributedOrthoIteration { k, max_iters: 1, tol: 0.0, seed: 0xb }
-            .run_mat(&c)
+            .run_mat(&c.session())
             .unwrap();
         assert_eq!(est.info["iters"], 1.0);
         assert_eq!(est.comm.rounds, 1, "one block iteration must be exactly one round");
@@ -301,9 +501,10 @@ fn prop_basis_stays_orthonormal_through_block_power_iterations() {
         let seed = g.rng().next_u64();
         let dist = CovModel::paper_fig1(d, 4).gaussian();
         let c = Cluster::generate(&dist, m, 25, seed).unwrap();
+        let s = c.session();
         let (mut w, _) = qr_thin(&random_block(g, d, k));
         for iter in 0..5 {
-            let xw = c.dist_matmat(&w).unwrap();
+            let xw = s.dist_matmat(&w).unwrap();
             let (q, _) = qr_thin(&xw);
             let defect = orthonormality_defect(&q);
             assert!(defect < 1e-10, "iteration {iter}: ||W^T W - I||_max = {defect:.3e}");
@@ -315,10 +516,9 @@ fn prop_basis_stays_orthonormal_through_block_power_iterations() {
 #[test]
 fn prop_bytes_equal_encoded_frame_sizes_for_every_collective_and_codec() {
     // THE wire-layer invariant (ISSUE 2 acceptance): for every collective
-    // × every codec, `CommStats.bytes` equals the sum of the encoded
-    // frames' sizes — a broadcast frame billed once, one response frame
-    // per live worker — and the default F64 codec reproduces the seed's
-    // `8·d·…` accounting table verbatim.
+    // × every codec, a session's `CommStats.bytes` equals the sum of the
+    // encoded frames' sizes — a broadcast frame billed once, one response
+    // frame per live worker.
     propcheck(Config::default().cases(6), "codec-exact byte accounting", |g| {
         let m = g.usize_in(1, 5);
         let n = g.usize_in(5, 25);
@@ -333,7 +533,8 @@ fn prop_bytes_equal_encoded_frame_sizes_for_every_collective_and_codec() {
         let live = c.live() as u64;
         for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
             let codec = WireCodec::new(prec);
-            c.set_codec(codec);
+            let s = c.session();
+            s.set_codec(codec);
             // the size of one encoded frame carrying `words` f64 words —
             // measured on a materialized frame, not assumed
             let frame = |words: usize| {
@@ -341,47 +542,31 @@ fn prop_bytes_equal_encoded_frame_sizes_for_every_collective_and_codec() {
                 codec.encode(&payload).wire_bytes() as u64
             };
 
-            c.reset_stats();
-            c.dist_matvec(&g.gaussian_vec(d)).unwrap();
-            assert_eq!(c.stats().bytes, (live + 1) * frame(d), "{prec:?} dist_matvec");
+            s.dist_matvec(&g.gaussian_vec(d)).unwrap();
+            assert_eq!(s.stats().bytes, (live + 1) * frame(d), "{prec:?} dist_matvec");
 
-            c.reset_stats();
-            c.dist_matmat(&random_block(g, d, k)).unwrap();
-            assert_eq!(c.stats().bytes, (live + 1) * frame(d * k), "{prec:?} dist_matmat");
+            s.reset_stats();
+            s.dist_matmat(&random_block(g, d, k)).unwrap();
+            assert_eq!(s.stats().bytes, (live + 1) * frame(d * k), "{prec:?} dist_matmat");
 
-            c.reset_stats();
-            c.local_top_eigvecs(false).unwrap();
-            assert_eq!(c.stats().bytes, live * frame(d), "{prec:?} local_top_eigvecs");
+            s.reset_stats();
+            s.local_top_eigvecs(false).unwrap();
+            assert_eq!(s.stats().bytes, live * frame(d), "{prec:?} local_top_eigvecs");
 
-            c.reset_stats();
-            c.local_top_k(k).unwrap();
-            assert_eq!(c.stats().bytes, live * frame(d * k), "{prec:?} local_top_k");
+            s.reset_stats();
+            s.local_top_k(k).unwrap();
+            assert_eq!(s.stats().bytes, live * frame(d * k), "{prec:?} local_top_k");
 
-            c.reset_stats();
-            c.gram_average().unwrap();
-            assert_eq!(c.stats().bytes, live * frame(d * d), "{prec:?} gram_average");
+            s.reset_stats();
+            s.gram_average().unwrap();
+            assert_eq!(s.stats().bytes, live * frame(d * d), "{prec:?} gram_average");
 
-            c.reset_stats();
+            s.reset_stats();
             let mut w0 = vec![0.0; d];
             w0[0] = 1.0;
-            c.oja_chain(&w0, 0.5, 10.0).unwrap();
-            assert_eq!(c.stats().bytes, live * 2 * frame(d), "{prec:?} oja_chain");
-
-            if prec == WirePrecision::F64 {
-                // the legacy table, verbatim: B(w) = 8w under the
-                // default lossless codec
-                c.reset_stats();
-                c.dist_matvec(&g.gaussian_vec(d)).unwrap();
-                assert_eq!(c.stats().bytes, (8 * d) as u64 * (live + 1));
-                c.reset_stats();
-                c.dist_matmat(&random_block(g, d, k)).unwrap();
-                assert_eq!(c.stats().bytes, (8 * d * k) as u64 * (live + 1));
-                c.reset_stats();
-                c.gram_average().unwrap();
-                assert_eq!(c.stats().bytes, (8 * d * d) as u64 * live);
-            }
+            s.oja_chain(&w0, 0.5, 10.0).unwrap();
+            assert_eq!(s.stats().bytes, live * 2 * frame(d), "{prec:?} oja_chain");
         }
-        c.set_codec(WireCodec::default());
     });
 }
 
@@ -390,9 +575,9 @@ fn block_estimators_agree_with_each_other_and_centralized() {
     use dspca::coordinator::CentralizedSubspace;
     let (c, _) = fig1(4, 300, 12, 19);
     let k = 3;
-    let cen = CentralizedSubspace { k }.run_mat(&c).unwrap();
-    let pow = DistributedOrthoIteration::new(k).run_mat(&c).unwrap();
-    let lan = BlockLanczos::new(k).run_mat(&c).unwrap();
+    let cen = CentralizedSubspace { k }.run_mat(&c.session()).unwrap();
+    let pow = DistributedOrthoIteration::new(k).run_mat(&c.session()).unwrap();
+    let lan = BlockLanczos::new(k).run_mat(&c.session()).unwrap();
     assert!(subspace_error(&pow.w, &cen.w) < 1e-8);
     assert!(subspace_error(&lan.w, &cen.w) < 1e-8);
     assert!(subspace_error(&lan.w, &pow.w) < 1e-8);
@@ -408,29 +593,29 @@ fn failure_injection_covers_every_collective() {
     c.kill_worker(4).unwrap();
     assert_eq!(c.live(), 4);
 
-    c.reset_stats();
-    let g = c.gram_average().unwrap();
+    let s: Session<'_> = c.session();
+    let g = s.gram_average().unwrap();
     assert_eq!((g.rows(), g.cols()), (8, 8));
-    assert_eq!(c.stats().requests_sent, 4);
-    assert_eq!(c.stats().vectors_gathered, 4 * 8);
+    assert_eq!(s.stats().requests_sent, 4);
+    assert_eq!(s.stats().vectors_gathered, 4 * 8);
 
-    c.reset_stats();
-    let locals = c.local_top_k(3).unwrap();
+    let s = c.session();
+    let locals = s.local_top_k(3).unwrap();
     assert_eq!(locals.len(), 4);
-    assert_eq!(c.stats().vectors_gathered, 4 * 3);
+    assert_eq!(s.stats().vectors_gathered, 4 * 3);
 
-    c.reset_stats();
+    let s = c.session();
     let mut w0 = vec![0.0; 8];
     w0[0] = 1.0;
-    let w = c.oja_chain(&w0, 0.5, 10.0).unwrap();
+    let w = s.oja_chain(&w0, 0.5, 10.0).unwrap();
     assert!((norm(&w) - 1.0).abs() < 1e-9);
-    assert_eq!(c.stats().rounds, 4, "oja chain visits only live machines");
+    assert_eq!(s.stats().rounds, 4, "oja chain visits only live machines");
 
-    c.reset_stats();
+    let s = c.session();
     let v = Matrix::from_vec(8, 2, (0..16).map(|i| (i as f64 * 0.21).cos()).collect());
-    let blk = c.dist_matmat(&v).unwrap();
+    let blk = s.dist_matmat(&v).unwrap();
     assert_eq!(blk.cols(), 2);
-    assert_eq!(c.stats().requests_sent, 4);
+    assert_eq!(s.stats().requests_sent, 4);
     // block result equals the survivors' pooled covariance applied to V
     let want = g.matmul(&v);
     assert!(blk.sub(&want).max_abs() < 1e-10);
@@ -440,18 +625,22 @@ fn failure_injection_covers_every_collective() {
     assert_eq!(c.live(), 4);
 
     // and the top-k estimators still run end-to-end over the survivors
-    let est = DistributedOrthoIteration::new(2).run_mat(&c).unwrap();
+    let est = DistributedOrthoIteration::new(2).run_mat(&c.session()).unwrap();
     assert!(orthonormality_defect(&est.w) < 1e-10);
-    let lan = BlockLanczos::new(2).run_mat(&c).unwrap();
+    let lan = BlockLanczos::new(2).run_mat(&c.session()).unwrap();
     assert!(subspace_error(&lan.w, &est.w) < 1e-6);
 }
 
 #[test]
 fn sni_eps_controls_accuracy() {
     let (c, _) = fig1(4, 400, 16, 13);
-    let cen = CentralizedErm.run(&c).unwrap();
-    let loose = ShiftInvert::new(SniConfig { eps: 1e-3, ..Default::default() }).run(&c).unwrap();
-    let tight = ShiftInvert::new(SniConfig { eps: 1e-10, ..Default::default() }).run(&c).unwrap();
+    let cen = CentralizedErm.run(&c.session()).unwrap();
+    let loose = ShiftInvert::new(SniConfig { eps: 1e-3, ..Default::default() })
+        .run(&c.session())
+        .unwrap();
+    let tight = ShiftInvert::new(SniConfig { eps: 1e-10, ..Default::default() })
+        .run(&c.session())
+        .unwrap();
     let e_loose = alignment_error(&loose.w, &cen.w);
     let e_tight = alignment_error(&tight.w, &cen.w);
     assert!(e_tight <= 1e-8, "tight run should nail vhat1: {e_tight:.3e}");
@@ -467,7 +656,7 @@ fn eps_erm_bound_is_respected_in_practice() {
     // Lemma 1's bound is loose but must upper-bound the measured
     // centralized error (sanity of the formula wiring).
     let (c, dist) = fig1(6, 200, 12, 17);
-    let est = CentralizedErm.run(&c).unwrap();
+    let est = CentralizedErm.run(&c.session()).unwrap();
     let bound = dist.eps_erm(6, 200, 0.25);
     assert!(est.error(dist.v1()) < bound, "measured error should sit below the Lemma-1 envelope");
 }

@@ -38,8 +38,8 @@ fn pjrt_and_native_paths_agree_per_algorithm() {
         Box::new(ShiftInvert::default()),
     ];
     for alg in &algs {
-        let a = alg.run(&c_pjrt).unwrap();
-        let b = alg.run(&c_native).unwrap();
+        let a = alg.run(&c_pjrt.session()).unwrap();
+        let b = alg.run(&c_native.session()).unwrap();
         let e = alignment_error(&a.w, &b.w);
         assert!(e < 1e-6, "{}: pjrt vs native disagree by {e:.3e}", alg.name());
         assert_eq!(a.comm.rounds, b.comm.rounds, "{}: round counts differ", alg.name());
@@ -51,8 +51,8 @@ fn pjrt_cluster_full_algorithm_accuracy() {
     let Some(pjrt) = spec() else { return };
     let dist = CovModel::paper_fig1(D, 11).gaussian();
     let c = Cluster::generate_with(&dist, 4, N, 13, pjrt).unwrap();
-    let cen = CentralizedErm.run(&c).unwrap();
-    let sni = ShiftInvert::default().run(&c).unwrap();
+    let cen = CentralizedErm.run(&c.session()).unwrap();
+    let sni = ShiftInvert::default().run(&c.session()).unwrap();
     assert!(alignment_error(&sni.w, &cen.w) < 1e-6);
     assert!(cen.error(dist.v1()) < 0.05);
 }
@@ -62,6 +62,6 @@ fn pjrt_smaller_artifact_shape_also_works() {
     let Some(pjrt) = spec() else { return };
     let dist = CovModel::paper_fig1(32, 21).gaussian();
     let c = Cluster::generate_with(&dist, 3, 200, 23, pjrt).unwrap();
-    let est = SignFixedAverage.run(&c).unwrap();
+    let est = SignFixedAverage.run(&c.session()).unwrap();
     assert!(est.error(dist.v1()) < 0.5);
 }
