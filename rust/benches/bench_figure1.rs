@@ -17,6 +17,7 @@ fn main() -> anyhow::Result<()> {
             seed: 0xf1,
             dist,
             oracle: OracleSpec::Native,
+            transport: dspca::transport::TransportSpec::InProc,
         };
         let t0 = std::time::Instant::now();
         let table = run(&cfg)?;

@@ -1,0 +1,56 @@
+//! E12 bench — the transport layer: per-round collective latency on the
+//! in-proc backend vs real TCP loopback sockets, across dimension `d`
+//! and wire-codec width, plus the reduced E12 sweep (which itself
+//! asserts bills are backend-invariant).
+
+use dspca::bench_harness::{fast_mode, scaled, Bencher};
+use dspca::cluster::{Cluster, OracleSpec, WireCodec, WirePrecision};
+use dspca::data::CovModel;
+use dspca::experiments::transport::{run, TransportConfig};
+use dspca::transport::{LoopbackWorkers, TransportSpec};
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+    let (m, n) = if fast_mode() { (3usize, 60usize) } else { (8, 300) };
+    let d_list: Vec<usize> = if fast_mode() { vec![32] } else { vec![64, 256] };
+    let mut rng = dspca::rng::Pcg64::new(0x7c);
+
+    for &d in &d_list {
+        let dist = CovModel::paper_fig1(d, 5).gaussian();
+        let v = rng.gaussian_vec(d);
+        for backend in ["inproc", "tcp"] {
+            let loopback =
+                (backend == "tcp").then(|| LoopbackWorkers::spawn(m, 1)).transpose()?;
+            let spec = loopback.as_ref().map_or(TransportSpec::InProc, |w| w.spec());
+            let cluster = Cluster::generate_on(&dist, m, n, 11, OracleSpec::Native, &spec)?;
+            let session = cluster.session();
+            let _ = session.dist_matvec(&v)?; // warm (connections, caches)
+            for prec in [WirePrecision::F64, WirePrecision::Bf16] {
+                session.set_codec(WireCodec::new(prec));
+                b.bench(&format!("dist_matvec/{backend}/{}/m={m}/d={d}", prec.label()), || {
+                    session.dist_matvec(&v).unwrap()
+                });
+            }
+            drop(session);
+            drop(cluster);
+            if let Some(w) = loopback {
+                w.join()?;
+            }
+        }
+    }
+
+    // the E12 sweep itself, reduced — asserts bill invariance inside
+    let cfg = TransportConfig {
+        d_list: if fast_mode() { vec![12] } else { vec![24, 96] },
+        m: if fast_mode() { 2 } else { 4 },
+        n: if fast_mode() { 50 } else { 200 },
+        rounds: scaled(16).max(4),
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let table = run(&cfg)?;
+    b.record("transport/sweep", vec![t0.elapsed().as_secs_f64()]);
+    table.write("results/bench_transport.csv")?;
+    println!("wrote results/bench_transport.csv");
+    Ok(())
+}

@@ -6,7 +6,7 @@
 //! [`WireCodec`](crate::cluster::WireCodec) encodes and bills.
 
 /// Leader -> worker requests.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Compute `Xhat_i v` on the local shard.
     CovMatVec(Vec<f64>),
@@ -64,7 +64,7 @@ impl Request {
 }
 
 /// Worker -> leader responses.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     Vector(Vec<f64>),
     Mat { rows: usize, cols: usize, data: Vec<f64> },

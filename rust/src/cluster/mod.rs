@@ -7,10 +7,15 @@
 //! broadcasts one message carrying `k` vectors and gathers one message of
 //! `k` vectors per live machine — still exactly one synchronous exchange,
 //! one request and one response per live worker, billed as `k` vectors of
-//! traffic each way. We reproduce the model with one OS thread per
+//! traffic each way. We reproduce the model over a **pluggable
+//! transport** ([`crate::transport`]): by default one OS thread per
 //! machine, each owning its shard (data never crosses thread boundaries
-//! except through the typed message channel), and **exact communication
-//! accounting** on every primitive (`live` = machines not killed).
+//! except through the typed message channel); with
+//! [`TransportSpec::Tcp`](crate::transport::TransportSpec) the same
+//! cluster runs against `dspca worker --listen <addr>` processes over
+//! real sockets, with identical bills. Either way: **exact
+//! communication accounting** on every primitive (`live` = machines not
+//! killed).
 //!
 //! **Tenancy.** [`Cluster`] is `Sync` and holds no per-query state: the
 //! billing counters, the wire codec, and the collective API all live on
@@ -63,32 +68,34 @@
 mod comm;
 mod message;
 mod session;
-mod wire;
-mod worker;
+pub(crate) mod wire;
+pub(crate) mod worker;
 
 pub use comm::CommStats;
 pub use message::{Request, Response};
 pub use session::Session;
-pub use wire::{Frame, WireCodec, WirePrecision};
+pub use wire::{
+    decode_request, decode_response, encode_request, encode_response, Frame, WireCodec,
+    WirePrecision,
+};
 pub use worker::{ComputeOracle, NativeOracle, OracleSpec};
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::AtomicU64;
-use std::sync::mpsc;
 use std::sync::{Arc, Mutex, Weak};
-use std::thread::JoinHandle;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use crate::data::{Distribution, Shard};
 use crate::rng::Pcg64;
+use crate::transport::{InProcTransport, TcpTransport, Transport, TransportSpec, CONTROL_SEQ};
 
 use session::SessionCore;
 
-/// Sequence number used for control messages (`Shutdown`) that are not
-/// part of any exchange; real exchanges start at 1.
-const CONTROL_SEQ: u64 = 0;
+/// Max wall time to wait for any single worker response (also the TCP
+/// backend's write deadline).
+const EXCHANGE_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// How many exchanges an in-flight straggler record survives. A reply
 /// from a timed-out round either shows up within the next few rounds or
@@ -105,8 +112,12 @@ const INFLIGHT_RETENTION: u64 = 1024;
 /// `Cluster` is `Sync`. Concurrent sessions serialize here at round
 /// granularity.
 struct WireState {
-    senders: Vec<mpsc::Sender<(u64, Request)>>,
-    receiver: mpsc::Receiver<(usize, u64, Response)>,
+    /// The pluggable message substrate ([`crate::transport`]): in-proc
+    /// `mpsc` channels or real TCP sockets, chosen at construction via
+    /// [`TransportSpec`]. The cluster and session layers are
+    /// transport-generic; billing happens above this line, so bills are
+    /// backend-invariant.
+    transport: Box<dyn Transport>,
     /// Provenance for exchanges that failed before draining (timeout /
     /// dead send): codec width the round shipped under, outstanding
     /// reply count, and a weak handle to the issuing session — so a
@@ -137,7 +148,6 @@ pub struct Cluster {
     m: usize,
     n: usize,
     d: usize,
-    handles: Vec<Option<JoinHandle<()>>>,
     leader_shard: Arc<Shard>,
     dead: Mutex<HashSet<usize>>,
     /// Monotonic cluster-wide bill: every session increment is applied
@@ -159,18 +169,36 @@ pub struct Cluster {
 
 impl Cluster {
     /// Generate a cluster of `m` machines with `n` i.i.d. samples each,
-    /// using the pure-Rust compute oracle.
+    /// using the pure-Rust compute oracle (in-proc transport).
     pub fn generate(dist: &dyn Distribution, m: usize, n: usize, seed: u64) -> Result<Cluster> {
         Self::generate_with(dist, m, n, seed, OracleSpec::Native)
     }
 
-    /// Generate with an explicit compute-oracle spec (e.g. PJRT-backed).
+    /// Generate with an explicit compute-oracle spec (e.g. PJRT-backed),
+    /// on the in-proc transport.
     pub fn generate_with(
         dist: &dyn Distribution,
         m: usize,
         n: usize,
         seed: u64,
         oracle: OracleSpec,
+    ) -> Result<Cluster> {
+        Self::generate_on(dist, m, n, seed, oracle, &TransportSpec::InProc)
+    }
+
+    /// Generate with an explicit transport backend: [`TransportSpec::InProc`]
+    /// spawns one worker thread per machine; [`TransportSpec::Tcp`]
+    /// connects to one `dspca worker --listen <addr>` peer per machine
+    /// (`m` must equal the address count) and ships each its shard.
+    /// Bills are backend-invariant: the same seed produces the same
+    /// estimates and the same `CommStats` on every backend.
+    pub fn generate_on(
+        dist: &dyn Distribution,
+        m: usize,
+        n: usize,
+        seed: u64,
+        oracle: OracleSpec,
+        transport: &TransportSpec,
     ) -> Result<Cluster> {
         if m == 0 || n == 0 {
             bail!("cluster requires m >= 1, n >= 1");
@@ -182,12 +210,23 @@ impl Cluster {
                 Arc::new(dist.sample_shard(&mut rng, n))
             })
             .collect();
-        Self::from_shards(shards, seed, oracle)
+        Self::from_shards_on(shards, seed, oracle, transport)
     }
 
     /// Build a cluster around pre-generated shards (all `n x d` equal
-    /// shapes).
+    /// shapes) on the in-proc transport.
     pub fn from_shards(shards: Vec<Arc<Shard>>, seed: u64, oracle: OracleSpec) -> Result<Cluster> {
+        Self::from_shards_on(shards, seed, oracle, &TransportSpec::InProc)
+    }
+
+    /// Build a cluster around pre-generated shards on an explicit
+    /// transport backend (see [`Cluster::generate_on`]).
+    pub fn from_shards_on(
+        shards: Vec<Arc<Shard>>,
+        seed: u64,
+        oracle: OracleSpec,
+        transport: &TransportSpec,
+    ) -> Result<Cluster> {
         if shards.is_empty() {
             bail!("no shards");
         }
@@ -199,34 +238,32 @@ impl Cluster {
         }
         let m = shards.len();
         let leader_shard = Arc::clone(&shards[0]);
-        let (resp_tx, resp_rx) = mpsc::channel::<(usize, u64, Response)>();
-        let mut senders = Vec::with_capacity(m);
-        let mut handles = Vec::with_capacity(m);
-        let mut seeder = Pcg64::with_stream(seed, 0x3a1e);
-        for (i, shard) in shards.into_iter().enumerate() {
-            let (req_tx, req_rx) = mpsc::channel::<(u64, Request)>();
-            let tx = resp_tx.clone();
-            let spec = oracle.clone();
-            let wseed = seeder.next_u64();
-            let handle = std::thread::Builder::new()
-                .name(format!("dspca-worker-{i}"))
-                .spawn(move || worker::worker_main(i, shard, spec, wseed, req_rx, tx))
-                .context("spawning worker thread")?;
-            senders.push(req_tx);
-            handles.push(Some(handle));
-        }
+        let transport: Box<dyn Transport> = match transport {
+            TransportSpec::InProc => Box::new(InProcTransport::spawn(shards, &oracle, seed)?),
+            TransportSpec::Tcp { workers } => Box::new(TcpTransport::connect(
+                workers,
+                shards,
+                &oracle,
+                seed,
+                EXCHANGE_TIMEOUT,
+            )?),
+        };
         Ok(Cluster {
             m,
             n,
             d,
-            handles,
             leader_shard,
             dead: Mutex::new(HashSet::new()),
             aggregate: Mutex::new(CommStats::default()),
             seq: AtomicU64::new(CONTROL_SEQ),
-            wire: Mutex::new(WireState { senders, receiver: resp_rx, inflight: HashMap::new() }),
-            timeout: Duration::from_secs(120),
+            wire: Mutex::new(WireState { transport, inflight: HashMap::new() }),
+            timeout: EXCHANGE_TIMEOUT,
         })
+    }
+
+    /// Which transport backend this cluster runs on ("inproc" / "tcp").
+    pub fn transport_name(&self) -> &'static str {
+        self.wire.lock().unwrap().transport.name()
     }
 
     /// Open a new tenant session: its own bill, its own codec, the full
@@ -282,8 +319,14 @@ impl Cluster {
         }
         let mut dead = self.dead.lock().unwrap();
         if dead.insert(i) {
-            // best effort: tell the thread to exit
-            let _ = self.wire.lock().unwrap().senders[i].send((CONTROL_SEQ, Request::Shutdown));
+            // best effort: tell the worker (thread or remote process'
+            // connection handler) to exit
+            let _ = self.wire.lock().unwrap().transport.send(
+                i,
+                CONTROL_SEQ,
+                WirePrecision::F64,
+                &Request::Shutdown,
+            );
         }
         Ok(())
     }
@@ -300,14 +343,10 @@ impl Drop for Cluster {
             Ok(w) => w,
             Err(poisoned) => poisoned.into_inner(),
         };
-        for s in &wire.senders {
-            let _ = s.send((CONTROL_SEQ, Request::Shutdown));
-        }
-        for h in &mut self.handles {
-            if let Some(h) = h.take() {
-                let _ = h.join();
-            }
-        }
+        // idempotent on every backend: workers are told to stop, threads
+        // and sockets are released; a second shutdown (e.g. the
+        // transport's own Drop) is a no-op
+        wire.transport.shutdown();
     }
 }
 
@@ -667,7 +706,9 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            wire.senders[1].send((1000, Request::CovMatVec(v.clone()))).unwrap();
+            wire.transport
+                .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+                .unwrap();
         }
         issuer.reset_stats();
         drainer.reset_stats();
@@ -707,7 +748,9 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            wire.senders[1].send((2000, Request::CovMatVec(v.clone()))).unwrap();
+            wire.transport
+                .send(1, 2000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+                .unwrap();
             // `issuer` drops here: the session is closed
         }
         let agg0 = c.aggregate_stats();
@@ -789,5 +832,175 @@ mod tests {
         let dist = CovModel::paper_fig1(4, 3).gaussian();
         assert!(Cluster::generate(&dist, 0, 5, 1).is_err());
         assert!(Cluster::generate(&dist, 5, 0, 1).is_err());
+    }
+
+    // -----------------------------------------------------------------
+    // Transport-generic regressions (ISSUE 4 satellites): shutdown
+    // idempotence / drop-order safety and the straggler contract on the
+    // TCP backend, mirroring the in-proc tests above.
+    // -----------------------------------------------------------------
+
+    use crate::transport::LoopbackWorkers;
+
+    fn tcp_cluster(m: usize, n: usize) -> (Cluster, LoopbackWorkers) {
+        let dist = CovModel::paper_fig1(8, 3).gaussian();
+        let workers = LoopbackWorkers::spawn(m, 1).unwrap();
+        let c =
+            Cluster::generate_on(&dist, m, n, 42, OracleSpec::Native, &workers.spec()).unwrap();
+        (c, workers)
+    }
+
+    #[test]
+    fn tcp_cluster_reports_its_backend_and_runs_collectives() {
+        let (c, workers) = tcp_cluster(2, 20);
+        assert_eq!(c.transport_name(), "tcp");
+        let s = c.session();
+        let ones = vec![1.0; 8];
+        let got = s.dist_matvec(&ones).unwrap();
+        assert_eq!(got.len(), 8);
+        assert_eq!(s.stats().bytes, 8 * 8 * 3, "B(d)·(live+1) on TCP too");
+        drop(s);
+        drop(c);
+        workers.join().unwrap();
+    }
+
+    #[test]
+    fn inproc_shutdown_is_idempotent_and_later_traffic_fails_cleanly() {
+        let (c, _) = small_cluster(2, 10);
+        assert_eq!(c.transport_name(), "inproc");
+        {
+            let mut wire = c.wire.lock().unwrap();
+            wire.transport.shutdown();
+            wire.transport.shutdown(); // double shutdown is a no-op
+            let err = wire
+                .transport
+                .send(1, 1, WirePrecision::F64, &Request::CovMatVec(vec![1.0; 8]))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("worker 1"), "{err}");
+        }
+        // a collective after shutdown errors instead of hanging
+        let ones = vec![1.0; 8];
+        assert!(c.session().dist_matvec(&ones).is_err());
+        // and dropping the cluster performs a third (no-op) shutdown
+    }
+
+    #[test]
+    fn tcp_cluster_drop_mid_straggler_does_not_hang_or_double_close() {
+        // regression (ISSUE 4 satellite): a TCP worker still owes a
+        // reply when the cluster is dropped. Drop must complete —
+        // Shutdown frames written best-effort, sockets closed once,
+        // reader threads joined — and the worker side must come back to
+        // a clean exit, not a wedged accept loop.
+        let (c, workers) = tcp_cluster(2, 20);
+        {
+            let mut wire = c.wire.lock().unwrap();
+            // a request whose reply no exchange will ever drain
+            wire.transport
+                .send(1, 999, WirePrecision::F64, &Request::CovMatVec(vec![1.0; 8]))
+                .unwrap();
+        }
+        drop(c); // must not hang; second shutdown inside transport Drop is a no-op
+        workers.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_straggler_reply_bills_to_the_session_that_issued_it() {
+        // the cross-tenant straggler contract, over real sockets: same
+        // scenario as `straggler_reply_bills_to_the_session_that_issued_it`
+        let (c, workers) = tcp_cluster(2, 20);
+        let issuer = c.session();
+        let drainer = c.session();
+        let v = vec![0.3; 8];
+        let g = drainer.gram_average().unwrap();
+        let want = g.matvec(&v);
+        {
+            let mut wire = c.wire.lock().unwrap();
+            wire.inflight.insert(
+                1000,
+                Inflight {
+                    codec: WireCodec::new(WirePrecision::Bf16),
+                    outstanding: 1,
+                    owner: Arc::downgrade(&issuer.core),
+                },
+            );
+            wire.transport
+                .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+                .unwrap();
+        }
+        issuer.reset_stats();
+        drainer.reset_stats();
+        let got = drainer.dist_matvec(&v).unwrap();
+        for i in 0..8 {
+            assert!((got[i] - want[i]).abs() < 1e-10, "straggler poisoned the result");
+        }
+        let db = drainer.stats();
+        assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
+        assert_eq!(db.bytes, (8 * 8 * 3) as u64);
+        let ib = issuer.stats();
+        assert_eq!(ib.responses_received, 1, "the straggler bills to its issuer on arrival");
+        assert_eq!(ib.bytes, (2 * 8) as u64, "at the bf16 width its round shipped under");
+        assert!(c.wire.lock().unwrap().inflight.is_empty(), "straggler record is forgotten");
+        drop(issuer);
+        drop(drainer);
+        drop(c);
+        workers.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_straggler_for_a_closed_session_is_drained_and_billed_to_nobody() {
+        // regression (ISSUE 4 satellite): a straggler reply arriving
+        // over TCP after its issuing session closed is drained (cannot
+        // poison anyone) and billed to nobody — neither the draining
+        // tenant nor the aggregate — mirroring the in-proc test.
+        let (c, workers) = tcp_cluster(2, 20);
+        let v = vec![0.3; 8];
+        {
+            let issuer = c.session();
+            let mut wire = c.wire.lock().unwrap();
+            wire.inflight.insert(
+                2000,
+                Inflight {
+                    codec: WireCodec::new(WirePrecision::Bf16),
+                    outstanding: 1,
+                    owner: Arc::downgrade(&issuer.core),
+                },
+            );
+            wire.transport
+                .send(1, 2000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+                .unwrap();
+            // `issuer` drops here: the session is closed
+        }
+        let agg0 = c.aggregate_stats();
+        let drainer = c.session();
+        let got = drainer.dist_matvec(&v).unwrap();
+        assert_eq!(got.len(), 8);
+        let db = drainer.stats();
+        assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
+        assert_eq!(db.bytes, (8 * 8 * 3) as u64);
+        assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
+        assert!(c.wire.lock().unwrap().inflight.is_empty(), "orphan record is forgotten");
+        drop(drainer);
+        drop(c);
+        workers.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_kill_worker_excludes_the_peer_and_collectives_continue() {
+        let dist = CovModel::paper_fig1(8, 3).gaussian();
+        let workers = LoopbackWorkers::spawn(3, 1).unwrap();
+        let c =
+            Cluster::generate_on(&dist, 3, 20, 42, OracleSpec::Native, &workers.spec()).unwrap();
+        c.kill_worker(2).unwrap();
+        c.kill_worker(2).unwrap(); // idempotent on the TCP backend too
+        assert_eq!(c.live(), 2);
+        let s = c.session();
+        let ones = vec![1.0; 8];
+        let out = s.dist_matvec(&ones).unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(s.stats().vectors_gathered, 2);
+        drop(s);
+        drop(c);
+        workers.join().unwrap();
     }
 }

@@ -206,7 +206,11 @@ impl<'c> Session<'c> {
         let req_bytes = req.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
         let mut sent = 0usize;
         for &w in workers {
-            if wire.senders[w].send((seq, req.clone())).is_err() {
+            // the transport moves the message (typed enum in-proc,
+            // length-prefixed byte frame over TCP — encoded at this
+            // session's wire precision); billing stays up here, so the
+            // bill is backend-invariant
+            if let Err(e) = wire.transport.send(w, seq, codec.precision(), &req) {
                 if sent > 0 {
                     // the workers already reached may still reply; leave
                     // a record so their stragglers bill to this session
@@ -217,7 +221,7 @@ impl<'c> Session<'c> {
                         Inflight { codec, outstanding: sent, owner: Arc::downgrade(&self.core) },
                     );
                 }
-                bail!("worker {w} channel closed");
+                return Err(e);
             }
             sent += 1;
             let first = sent == 1;
@@ -237,9 +241,9 @@ impl<'c> Session<'c> {
         let mut first_err: Option<(usize, String)> = None;
         let mut got = 0usize;
         while got < workers.len() {
-            let (id, rseq, mut resp) = match wire.receiver.recv_timeout(self.cluster.timeout) {
+            let (id, rseq, mut resp) = match wire.transport.recv_timeout(self.cluster.timeout) {
                 Ok(msg) => msg,
-                Err(_) => {
+                Err(e) => {
                     prune_inflight(&mut wire.inflight, seq);
                     wire.inflight.insert(
                         seq,
@@ -249,7 +253,7 @@ impl<'c> Session<'c> {
                             owner: Arc::downgrade(&self.core),
                         },
                     );
-                    bail!("timed out waiting for worker response");
+                    bail!("waiting for worker responses: {e}");
                 }
             };
             if rseq != seq {

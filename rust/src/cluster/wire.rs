@@ -14,6 +14,18 @@
 //!
 //! [`CommStats`]: super::CommStats
 //!
+//! Since ISSUE 4 this module also defines the **whole-message frame
+//! format** the byte-shipping transports use ([`encode_request`] /
+//! [`decode_request`], [`encode_response`] / [`decode_response`]):
+//! envelope fields (kind, sequence number, precision, variant tag,
+//! shapes, hyperparameters) as little-endian integers, f64 payloads as
+//! the materialized codec output, the whole body length-prefixed on the
+//! wire by the transport. Only the codec-encoded *payload* section is
+//! billed (`B(w)` in the accounting table); the envelope rides free,
+//! consistent with the paper's cost model counting `R^d` vector
+//! traffic. Decoding is fully defensive: truncated, length-mismatched,
+//! or malformed frames return an error, never a panic.
+//!
 //! Format notes:
 //!
 //! - `F64`: 8 bytes/entry, little-endian IEEE-754 binary64. Bit-exact.
@@ -27,6 +39,10 @@
 //!   bound the tests assert. (The pre-wire-layer code masked the f64
 //!   mantissa to 8 explicit bits, a 20-bit format it billed at 2 bytes;
 //!   the codec makes the 2 bytes honest.)
+
+use anyhow::{bail, ensure, Context, Result};
+
+use super::message::{Request, Response};
 
 /// Per-entry precision of every f64 that crosses the network.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -194,23 +210,7 @@ impl WireCodec {
             "codec/frame precision mismatch: frame is {:?}, codec is {:?}",
             frame.precision, self.precision
         );
-        match self.precision {
-            WirePrecision::F64 => frame
-                .bytes
-                .chunks_exact(8)
-                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
-                .collect(),
-            WirePrecision::F32 => frame
-                .bytes
-                .chunks_exact(4)
-                .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
-                .collect(),
-            WirePrecision::Bf16 => frame
-                .bytes
-                .chunks_exact(2)
-                .map(|c| bf16_to_f64(u16::from_le_bytes(c.try_into().unwrap())))
-                .collect(),
-        }
+        decode_raw(self.precision, &frame.bytes)
     }
 
     /// Pass a payload through encode→decode in place — exactly what
@@ -232,6 +232,301 @@ impl WireCodec {
         payload.copy_from_slice(&decoded);
         frame.wire_bytes()
     }
+}
+
+/// Decode raw fixed-width payload bytes at the given precision. The
+/// slice length must be a multiple of the precision's entry width
+/// (callers validate it; a ragged tail would be silently dropped by
+/// `chunks_exact`, so every call site checks first).
+fn decode_raw(prec: WirePrecision, raw: &[u8]) -> Vec<f64> {
+    match prec {
+        WirePrecision::F64 => {
+            raw.chunks_exact(8).map(|c| f64::from_le_bytes(c.try_into().unwrap())).collect()
+        }
+        WirePrecision::F32 => raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()) as f64)
+            .collect(),
+        WirePrecision::Bf16 => raw
+            .chunks_exact(2)
+            .map(|c| bf16_to_f64(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect(),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Whole-message frames (ISSUE 4): the byte representation the TCP
+// transport ships. Body layout (the transport adds a u32 length
+// prefix):
+//
+//   u8 kind (request / response) | u64 seq | u8 precision | u8 tag |
+//   variant fields...
+//
+// Counts and shapes are u64 LE; hyperparameters are raw f64 bits
+// (lossless — they are envelope, not payload); strings are u32 length +
+// UTF-8; f64 payload sections are `u64 word count` + the codec-encoded
+// bytes (`words * bytes_per_entry` of them). The payload section is the
+// only billed part of the frame.
+// ---------------------------------------------------------------------
+
+const MSG_REQUEST: u8 = 0xA1;
+const MSG_RESPONSE: u8 = 0xA2;
+
+const REQ_COV_MATVEC: u8 = 1;
+const REQ_COV_MATMAT: u8 = 2;
+const REQ_LOCAL_TOP_EIGVEC: u8 = 3;
+const REQ_GRAM: u8 = 4;
+const REQ_LOCAL_TOP_K: u8 = 5;
+const REQ_OJA_PASS: u8 = 6;
+const REQ_SHUTDOWN: u8 = 7;
+
+const RESP_VECTOR: u8 = 1;
+const RESP_MAT: u8 = 2;
+const RESP_ERR: u8 = 3;
+
+fn prec_tag(p: WirePrecision) -> u8 {
+    match p {
+        WirePrecision::F64 => 0,
+        WirePrecision::F32 => 1,
+        WirePrecision::Bf16 => 2,
+    }
+}
+
+fn prec_from_tag(t: u8) -> Result<WirePrecision> {
+    match t {
+        0 => Ok(WirePrecision::F64),
+        1 => Ok(WirePrecision::F32),
+        2 => Ok(WirePrecision::Bf16),
+        other => bail!("unknown wire precision tag {other}"),
+    }
+}
+
+fn put_u64(out: &mut Vec<u8>, x: u64) {
+    out.extend_from_slice(&x.to_le_bytes());
+}
+
+fn put_payload(out: &mut Vec<u8>, codec: WireCodec, payload: &[f64]) {
+    put_u64(out, payload.len() as u64);
+    out.extend_from_slice(codec.encode(payload).bytes());
+}
+
+fn put_string(out: &mut Vec<u8>, s: &str) {
+    out.extend_from_slice(&(s.len() as u32).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// Bounds-checked reader over a frame body. Every accessor returns an
+/// error on underrun — a truncated or corrupt frame can never panic the
+/// decoder — and [`Cursor::finish`] rejects trailing bytes, so a frame
+/// whose length prefix disagrees with its content is an error too.
+pub(crate) struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
+    }
+
+    pub(crate) fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.buf.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "truncated frame: need {n} bytes at offset {}, only {} left",
+                    self.pos,
+                    self.buf.len().saturating_sub(self.pos)
+                )
+            })?;
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn usize(&mut self) -> Result<usize> {
+        usize::try_from(self.u64()?).context("count does not fit this platform's usize")
+    }
+
+    /// A payload section: `u64` word count + codec-encoded bytes at
+    /// `prec`. The byte count is validated *before* any allocation.
+    pub(crate) fn payload(&mut self, prec: WirePrecision) -> Result<Vec<f64>> {
+        let words = self.usize()?;
+        let nbytes = words
+            .checked_mul(prec.bytes_per_entry())
+            .ok_or_else(|| anyhow::anyhow!("payload word count {words} overflows"))?;
+        let raw = self.take(nbytes)?;
+        Ok(decode_raw(prec, raw))
+    }
+
+    pub(crate) fn string(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let raw = self.take(len)?;
+        String::from_utf8(raw.to_vec()).context("invalid UTF-8 in frame string")
+    }
+
+    pub(crate) fn finish(self) -> Result<()> {
+        ensure!(
+            self.pos == self.buf.len(),
+            "length mismatch: {} trailing bytes in frame",
+            self.buf.len() - self.pos
+        );
+        Ok(())
+    }
+}
+
+/// Encode a whole request as a frame body: the byte representation the
+/// TCP transport ships (payload section encoded through `codec`).
+pub fn encode_request(seq: u64, codec: WireCodec, req: &Request) -> Vec<u8> {
+    let mut out =
+        Vec::with_capacity(48 + req.payload().map_or(0, |p| codec.frame_bytes(p.len())));
+    out.push(MSG_REQUEST);
+    put_u64(&mut out, seq);
+    out.push(prec_tag(codec.precision()));
+    match req {
+        Request::CovMatVec(v) => {
+            out.push(REQ_COV_MATVEC);
+            put_payload(&mut out, codec, v);
+        }
+        Request::CovMatMat { rows, cols, data } => {
+            out.push(REQ_COV_MATMAT);
+            put_u64(&mut out, *rows as u64);
+            put_u64(&mut out, *cols as u64);
+            put_payload(&mut out, codec, data);
+        }
+        Request::LocalTopEigvec { unbiased_signs } => {
+            out.push(REQ_LOCAL_TOP_EIGVEC);
+            out.push(u8::from(*unbiased_signs));
+        }
+        Request::Gram => out.push(REQ_GRAM),
+        Request::LocalTopK { k } => {
+            out.push(REQ_LOCAL_TOP_K);
+            put_u64(&mut out, *k as u64);
+        }
+        Request::OjaPass { w, eta0, t0, t_start } => {
+            out.push(REQ_OJA_PASS);
+            put_u64(&mut out, eta0.to_bits());
+            put_u64(&mut out, t0.to_bits());
+            put_u64(&mut out, *t_start);
+            put_payload(&mut out, codec, w);
+        }
+        Request::Shutdown => out.push(REQ_SHUTDOWN),
+    }
+    out
+}
+
+/// Decode a request frame body. Returns the sequence number, the
+/// precision its payload shipped under (workers echo it on the reply),
+/// and the reconstructed request. Truncated, trailing-byte,
+/// shape-mismatched, or unknown-tag frames are errors — never panics.
+pub fn decode_request(body: &[u8]) -> Result<(u64, WirePrecision, Request)> {
+    let mut c = Cursor::new(body);
+    let kind = c.u8()?;
+    ensure!(kind == MSG_REQUEST, "not a request frame (kind 0x{kind:02x})");
+    let seq = c.u64()?;
+    let prec = prec_from_tag(c.u8()?)?;
+    let req = match c.u8()? {
+        REQ_COV_MATVEC => Request::CovMatVec(c.payload(prec)?),
+        REQ_COV_MATMAT => {
+            let rows = c.usize()?;
+            let cols = c.usize()?;
+            let data = c.payload(prec)?;
+            ensure!(
+                rows.checked_mul(cols) == Some(data.len()),
+                "cov_matmat frame: payload of {} words != {rows}x{cols}",
+                data.len()
+            );
+            Request::CovMatMat { rows, cols, data }
+        }
+        REQ_LOCAL_TOP_EIGVEC => {
+            let b = c.u8()?;
+            ensure!(b <= 1, "bad bool byte {b} in frame");
+            Request::LocalTopEigvec { unbiased_signs: b == 1 }
+        }
+        REQ_GRAM => Request::Gram,
+        REQ_LOCAL_TOP_K => Request::LocalTopK { k: c.usize()? },
+        REQ_OJA_PASS => {
+            let eta0 = f64::from_bits(c.u64()?);
+            let t0 = f64::from_bits(c.u64()?);
+            let t_start = c.u64()?;
+            let w = c.payload(prec)?;
+            Request::OjaPass { w, eta0, t0, t_start }
+        }
+        REQ_SHUTDOWN => Request::Shutdown,
+        other => bail!("unknown request tag {other}"),
+    };
+    c.finish()?;
+    Ok((seq, prec, req))
+}
+
+/// Encode a whole response as a frame body (payload section encoded
+/// through `codec` — workers reply at the precision the request frame
+/// carried, so the leader's decode/transcode is value-preserving).
+pub fn encode_response(seq: u64, codec: WireCodec, resp: &Response) -> Vec<u8> {
+    let mut out =
+        Vec::with_capacity(48 + resp.payload().map_or(0, |p| codec.frame_bytes(p.len())));
+    out.push(MSG_RESPONSE);
+    put_u64(&mut out, seq);
+    out.push(prec_tag(codec.precision()));
+    match resp {
+        Response::Vector(v) => {
+            out.push(RESP_VECTOR);
+            put_payload(&mut out, codec, v);
+        }
+        Response::Mat { rows, cols, data } => {
+            out.push(RESP_MAT);
+            put_u64(&mut out, *rows as u64);
+            put_u64(&mut out, *cols as u64);
+            put_payload(&mut out, codec, data);
+        }
+        Response::Err(msg) => {
+            out.push(RESP_ERR);
+            put_string(&mut out, msg);
+        }
+    }
+    out
+}
+
+/// Decode a response frame body (counterpart of [`encode_response`];
+/// same defensive guarantees as [`decode_request`]).
+pub fn decode_response(body: &[u8]) -> Result<(u64, WirePrecision, Response)> {
+    let mut c = Cursor::new(body);
+    let kind = c.u8()?;
+    ensure!(kind == MSG_RESPONSE, "not a response frame (kind 0x{kind:02x})");
+    let seq = c.u64()?;
+    let prec = prec_from_tag(c.u8()?)?;
+    let resp = match c.u8()? {
+        RESP_VECTOR => Response::Vector(c.payload(prec)?),
+        RESP_MAT => {
+            let rows = c.usize()?;
+            let cols = c.usize()?;
+            let data = c.payload(prec)?;
+            ensure!(
+                rows.checked_mul(cols) == Some(data.len()),
+                "mat frame: payload of {} words != {rows}x{cols}",
+                data.len()
+            );
+            Response::Mat { rows, cols, data }
+        }
+        RESP_ERR => Response::Err(c.string()?),
+        other => bail!("unknown response tag {other}"),
+    };
+    c.finish()?;
+    Ok((seq, prec, resp))
 }
 
 #[cfg(test)]
@@ -364,5 +659,130 @@ mod tests {
         assert_eq!(WireCodec::default().precision(), WirePrecision::F64);
         assert_eq!(WirePrecision::F64.bytes_per_entry(), 8);
         assert_eq!(WirePrecision::F32.label(), "f32");
+    }
+
+    // -- whole-message frames ------------------------------------------
+
+    fn all_requests(prec: WirePrecision) -> Vec<Request> {
+        // payloads pre-quantized to the codec grid so the roundtrip is
+        // bit-exact under every precision
+        let q = |mut v: Vec<f64>| {
+            prec.quantize(&mut v);
+            v
+        };
+        vec![
+            Request::CovMatVec(q(sample_payload())),
+            Request::CovMatMat { rows: 4, cols: 2, data: q(sample_payload()) },
+            Request::LocalTopEigvec { unbiased_signs: true },
+            Request::LocalTopEigvec { unbiased_signs: false },
+            Request::Gram,
+            Request::LocalTopK { k: 3 },
+            Request::OjaPass { w: q(sample_payload()), eta0: 0.37, t0: 10.0, t_start: 42 },
+            Request::Shutdown,
+        ]
+    }
+
+    fn all_responses(prec: WirePrecision) -> Vec<Response> {
+        let q = |mut v: Vec<f64>| {
+            prec.quantize(&mut v);
+            v
+        };
+        vec![
+            Response::Vector(q(sample_payload())),
+            Response::Mat { rows: 2, cols: 4, data: q(sample_payload()) },
+            Response::Err("worker 3 failed: bad rank 99 for d=8".to_string()),
+        ]
+    }
+
+    #[test]
+    fn every_request_variant_roundtrips_under_every_precision() {
+        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
+            let codec = WireCodec::new(prec);
+            for (i, req) in all_requests(prec).iter().enumerate() {
+                let body = encode_request(1000 + i as u64, codec, req);
+                let (seq, p, back) = decode_request(&body).unwrap();
+                assert_eq!(seq, 1000 + i as u64);
+                assert_eq!(p, prec);
+                assert_eq!(&back, req, "{prec:?} request {i} changed across the wire");
+            }
+        }
+    }
+
+    #[test]
+    fn every_response_variant_roundtrips_under_every_precision() {
+        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
+            let codec = WireCodec::new(prec);
+            for (i, resp) in all_responses(prec).iter().enumerate() {
+                let body = encode_response(7 + i as u64, codec, resp);
+                let (seq, p, back) = decode_response(&body).unwrap();
+                assert_eq!(seq, 7 + i as u64);
+                assert_eq!(p, prec);
+                assert_eq!(&back, resp, "{prec:?} response {i} changed across the wire");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_rejects_truncated_and_length_mismatched_frames() {
+        let codec = WireCodec::lossless();
+        let body = encode_request(9, codec, &Request::CovMatVec(sample_payload()));
+        // every strict prefix errors out instead of panicking
+        for cut in 0..body.len() {
+            assert!(decode_request(&body[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        // trailing garbage is a length mismatch, not a silent accept
+        let mut longer = body.clone();
+        longer.push(0);
+        let err = decode_request(&longer).unwrap_err().to_string();
+        assert!(err.contains("length mismatch"), "{err}");
+        // same on the response side
+        let rbody = encode_response(9, codec, &Response::Vector(sample_payload()));
+        for cut in 0..rbody.len() {
+            assert!(decode_response(&rbody[..cut]).is_err());
+        }
+    }
+
+    #[test]
+    fn decode_rejects_wrong_kind_bad_tags_and_shape_mismatches() {
+        let codec = WireCodec::lossless();
+        let req = encode_request(1, codec, &Request::Gram);
+        let resp = encode_response(1, codec, &Response::Err("x".into()));
+        assert!(decode_response(&req).is_err(), "request frame is not a response");
+        assert!(decode_request(&resp).is_err(), "response frame is not a request");
+        // unknown variant tag
+        let mut bad = req.clone();
+        let tag_at = bad.len() - 1; // Gram body: kind|seq|prec|tag
+        bad[tag_at] = 99;
+        assert!(decode_request(&bad).unwrap_err().to_string().contains("unknown request tag"));
+        // a CovMatMat whose declared shape disagrees with its payload
+        let mismatched = encode_request(
+            2,
+            codec,
+            &Request::CovMatMat { rows: 3, cols: 3, data: vec![0.5; 5] },
+        );
+        let err = decode_request(&mismatched).unwrap_err().to_string();
+        assert!(err.contains("!= 3x3"), "{err}");
+        // and a bad precision tag
+        let mut badprec = encode_request(3, codec, &Request::Gram);
+        badprec[9] = 7; // kind (1) + seq (8) -> precision byte
+        assert!(decode_request(&badprec)
+            .unwrap_err()
+            .to_string()
+            .contains("unknown wire precision"));
+    }
+
+    #[test]
+    fn frame_payload_section_is_exactly_the_codec_frame() {
+        // the billed bytes and the shipped bytes are the same bytes:
+        // the payload section of a message frame is the codec's encoded
+        // frame, verbatim
+        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
+            let codec = WireCodec::new(prec);
+            let payload = sample_payload();
+            let frame = codec.encode(&payload);
+            let body = encode_request(5, codec, &Request::CovMatVec(payload.clone()));
+            let tail = &body[body.len() - frame.wire_bytes()..];
+            assert_eq!(tail, frame.bytes(), "{prec:?}: payload section != codec frame");
+        }
     }
 }

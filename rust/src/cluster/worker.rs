@@ -150,7 +150,7 @@ pub enum OracleSpec {
 }
 
 impl OracleSpec {
-    fn build(&self) -> anyhow::Result<Box<dyn ComputeOracle>> {
+    pub(crate) fn build(&self) -> anyhow::Result<Box<dyn ComputeOracle>> {
         match self {
             OracleSpec::Native => Ok(Box::new(NativeOracle::default())),
             OracleSpec::Pjrt { artifact_dir } => {
@@ -160,18 +160,102 @@ impl OracleSpec {
     }
 }
 
-/// Worker event loop. The `u64` riding alongside each request is the
-/// leader's exchange sequence number; it is echoed verbatim on the reply
-/// so the leader can drop stragglers from timed-out rounds.
-pub(super) fn worker_main(
-    _id: usize,
+/// Per-worker seed stream: `next_u64()` once per worker, in worker
+/// order, yields each worker's RNG seed. One derivation shared by every
+/// transport backend — the in-proc spawner draws it locally, the TCP
+/// leader draws the same values and ships them in the handshake — so
+/// worker coin flips (and therefore estimates and bills) are
+/// backend-invariant at a fixed cluster seed. Must stay the single
+/// source of truth: a divergent copy would silently break the
+/// invariance contract.
+pub(crate) fn worker_seeder(seed: u64) -> Pcg64 {
+    Pcg64::with_stream(seed, 0x3a1e)
+}
+
+/// The worker-side RNG (sign coins for unbiased ERM), built from the
+/// seed [`worker_seeder`] dealt this worker.
+pub(crate) fn worker_rng(id: usize, seed: u64) -> Pcg64 {
+    Pcg64::with_stream(seed, 0x11c2 + id as u64)
+}
+
+/// Answer one leader request on the local shard: the worker-side
+/// dispatch shared by every transport backend (the in-proc thread loop
+/// below, and the TCP connection loop in `transport::tcp`). Returns
+/// `None` for [`Request::Shutdown`]; compute failures come back as
+/// [`Response::Err`] so they cross the wire instead of killing the
+/// worker.
+pub(crate) fn handle_request(
+    oracle: &mut dyn ComputeOracle,
+    shard: &Shard,
+    rng: &mut Pcg64,
+    req: Request,
+) -> Option<Response> {
+    let resp = match req {
+        Request::Shutdown => return None,
+        Request::CovMatVec(v) => match oracle.cov_matvec(shard, &v) {
+            Ok(out) => Response::Vector(out),
+            Err(e) => Response::Err(e.to_string()),
+        },
+        Request::CovMatMat { rows, cols, data } => {
+            if data.len() != rows * cols {
+                Response::Err(format!(
+                    "cov_matmat: payload length {} != {rows}x{cols}",
+                    data.len()
+                ))
+            } else {
+                let v = crate::linalg::Matrix::from_vec(rows, cols, data);
+                match oracle.cov_matmat(shard, &v) {
+                    Ok(out) => Response::Mat {
+                        rows: out.rows(),
+                        cols: out.cols(),
+                        data: out.data().to_vec(),
+                    },
+                    Err(e) => Response::Err(e.to_string()),
+                }
+            }
+        }
+        Request::LocalTopEigvec { unbiased_signs } => match oracle.local_top_eigvec(shard) {
+            Ok(mut v) => {
+                if unbiased_signs && rng.next_rademacher() < 0.0 {
+                    for x in &mut v {
+                        *x = -*x;
+                    }
+                }
+                Response::Vector(v)
+            }
+            Err(e) => Response::Err(e.to_string()),
+        },
+        Request::Gram => match oracle.gram(shard) {
+            Ok(g) => Response::Mat { rows: g.rows(), cols: g.cols(), data: g.data().to_vec() },
+            Err(e) => Response::Err(e.to_string()),
+        },
+        Request::LocalTopK { k } => match oracle.local_top_k(shard, k) {
+            Ok(w) => Response::Mat { rows: w.rows(), cols: w.cols(), data: w.data().to_vec() },
+            Err(e) => Response::Err(e.to_string()),
+        },
+        Request::OjaPass { w, eta0, t0, t_start } => {
+            match oracle.oja_pass(shard, &w, eta0, t0, t_start) {
+                Ok(out) => Response::Vector(out),
+                Err(e) => Response::Err(e.to_string()),
+            }
+        }
+    };
+    Some(resp)
+}
+
+/// Worker event loop (in-proc transport). The `u64` riding alongside
+/// each request is the leader's exchange sequence number; it is echoed
+/// verbatim on the reply so the leader can drop stragglers from
+/// timed-out rounds.
+pub(crate) fn worker_main(
+    id: usize,
     shard: Arc<Shard>,
     spec: OracleSpec,
     seed: u64,
     rx: mpsc::Receiver<(u64, Request)>,
     tx: mpsc::Sender<(usize, u64, Response)>,
 ) {
-    let mut rng = Pcg64::with_stream(seed, 0x11c2 + _id as u64);
+    let mut rng = worker_rng(id, seed);
     let mut oracle: Box<dyn ComputeOracle> = match spec.build() {
         Ok(o) => o,
         Err(e) => {
@@ -181,65 +265,16 @@ pub(super) fn worker_main(
                 if matches!(req, Request::Shutdown) {
                     return;
                 }
-                let _ = tx.send((_id, seq, Response::Err(format!("oracle init failed: {e}"))));
+                let _ = tx.send((id, seq, Response::Err(format!("oracle init failed: {e}"))));
             }
             return;
         }
     };
     while let Ok((seq, req)) = rx.recv() {
-        let resp = match req {
-            Request::Shutdown => break,
-            Request::CovMatVec(v) => match oracle.cov_matvec(&shard, &v) {
-                Ok(out) => Response::Vector(out),
-                Err(e) => Response::Err(e.to_string()),
-            },
-            Request::CovMatMat { rows, cols, data } => {
-                if data.len() != rows * cols {
-                    Response::Err(format!(
-                        "cov_matmat: payload length {} != {rows}x{cols}",
-                        data.len()
-                    ))
-                } else {
-                    let v = crate::linalg::Matrix::from_vec(rows, cols, data);
-                    match oracle.cov_matmat(&shard, &v) {
-                        Ok(out) => Response::Mat {
-                            rows: out.rows(),
-                            cols: out.cols(),
-                            data: out.data().to_vec(),
-                        },
-                        Err(e) => Response::Err(e.to_string()),
-                    }
-                }
-            }
-            Request::LocalTopEigvec { unbiased_signs } => {
-                match oracle.local_top_eigvec(&shard) {
-                    Ok(mut v) => {
-                        if unbiased_signs && rng.next_rademacher() < 0.0 {
-                            for x in &mut v {
-                                *x = -*x;
-                            }
-                        }
-                        Response::Vector(v)
-                    }
-                    Err(e) => Response::Err(e.to_string()),
-                }
-            }
-            Request::Gram => match oracle.gram(&shard) {
-                Ok(g) => Response::Mat { rows: g.rows(), cols: g.cols(), data: g.data().to_vec() },
-                Err(e) => Response::Err(e.to_string()),
-            },
-            Request::LocalTopK { k } => match oracle.local_top_k(&shard, k) {
-                Ok(w) => Response::Mat { rows: w.rows(), cols: w.cols(), data: w.data().to_vec() },
-                Err(e) => Response::Err(e.to_string()),
-            },
-            Request::OjaPass { w, eta0, t0, t_start } => {
-                match oracle.oja_pass(&shard, &w, eta0, t0, t_start) {
-                    Ok(out) => Response::Vector(out),
-                    Err(e) => Response::Err(e.to_string()),
-                }
-            }
+        let Some(resp) = handle_request(oracle.as_mut(), &shard, &mut rng, req) else {
+            break; // Shutdown
         };
-        if tx.send((_id, seq, resp)).is_err() {
+        if tx.send((id, seq, resp)).is_err() {
             break; // leader gone
         }
     }

@@ -13,6 +13,7 @@ use crate::coordinator::{
     Algorithm, CentralizedErm, NaiveAverage, ProjectionAverage, SignFixedAverage, SingleMachineErm,
 };
 use crate::data::{CovModel, Distribution};
+use crate::transport::TransportSpec;
 use crate::util::csv::CsvTable;
 use crate::util::plot::{loglog, Series};
 
@@ -34,6 +35,11 @@ pub struct Fig1Config {
     pub seed: u64,
     pub dist: Fig1Dist,
     pub oracle: OracleSpec,
+    /// Message substrate: in-proc threads (default) or TCP workers
+    /// (`--transport tcp --workers a:p,...`). The sweep's estimates and
+    /// bills are backend-invariant; with TCP, every run's cluster
+    /// reconnects to the same worker set.
+    pub transport: TransportSpec,
 }
 
 impl Default for Fig1Config {
@@ -46,6 +52,7 @@ impl Default for Fig1Config {
             seed: 0xf1f1,
             dist: Fig1Dist::Gaussian,
             oracle: OracleSpec::Native,
+            transport: TransportSpec::InProc,
         }
     }
 }
@@ -87,12 +94,13 @@ pub fn run(cfg: &Fig1Config) -> Result<CsvTable> {
         // less data generation)
         let mut errors: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.runs); algs.len()];
         for r in 0..cfg.runs {
-            let cluster = crate::cluster::Cluster::generate_with(
+            let cluster = crate::cluster::Cluster::generate_on(
                 dist.as_ref(),
                 cfg.m,
                 n,
                 cfg.seed ^ (r as u64) << 20,
                 cfg.oracle.clone(),
+                &cfg.transport,
             )?;
             for (k, alg) in algs.iter().enumerate() {
                 errors[k].push(alg.run(&cluster.session())?.error(dist.v1()));
@@ -142,6 +150,7 @@ mod tests {
             seed: 7,
             dist: Fig1Dist::Gaussian,
             oracle: OracleSpec::Native,
+            transport: TransportSpec::InProc,
         };
         let table = run(&cfg).unwrap();
         assert_eq!(table.n_rows(), 2);
@@ -166,6 +175,7 @@ mod tests {
             seed: 11,
             dist: Fig1Dist::Gaussian,
             oracle: OracleSpec::Native,
+            transport: TransportSpec::InProc,
         };
         let table = run(&cfg).unwrap();
         assert_eq!(table.n_rows(), 2);
@@ -199,6 +209,7 @@ mod tests {
             seed: 9,
             dist: Fig1Dist::ScaledUniform,
             oracle: OracleSpec::Native,
+            transport: TransportSpec::InProc,
         };
         let table = run(&cfg).unwrap();
         assert_eq!(table.n_rows(), 1);

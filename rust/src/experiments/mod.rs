@@ -12,6 +12,7 @@ pub mod scaling;
 pub mod serve;
 pub mod table1;
 pub mod topk;
+pub mod transport;
 pub mod wire;
 
 use anyhow::Result;

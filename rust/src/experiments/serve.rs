@@ -18,6 +18,7 @@ use crate::coordinator::{
 };
 use crate::data::{CovModel, Distribution};
 use crate::serve::{serve, Job};
+use crate::transport::TransportSpec;
 use crate::util::csv::CsvTable;
 use crate::util::stats::Summary;
 
@@ -32,6 +33,8 @@ pub struct ServeConfig {
     pub tenants_list: Vec<usize>,
     pub seed: u64,
     pub oracle: OracleSpec,
+    /// Message substrate (per-job bills are backend-invariant).
+    pub transport: TransportSpec,
 }
 
 impl Default for ServeConfig {
@@ -44,6 +47,7 @@ impl Default for ServeConfig {
             tenants_list: vec![1, 2, 4, 8],
             seed: 0x5e7e,
             oracle: OracleSpec::Native,
+            transport: TransportSpec::InProc,
         }
     }
 }
@@ -91,8 +95,14 @@ pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
         anyhow::ensure!(tenants >= 1, "tenants must be >= 1");
         // fresh cluster per point, same seed: identical data, so the
         // per-query bills are comparable across tenant counts
-        let cluster =
-            Cluster::generate_with(&dist, cfg.m, cfg.n, cfg.seed, cfg.oracle.clone())?;
+        let cluster = Cluster::generate_on(
+            &dist,
+            cfg.m,
+            cfg.n,
+            cfg.seed,
+            cfg.oracle.clone(),
+            &cfg.transport,
+        )?;
         let report = serve(&cluster, job_mix(cfg.jobs), tenants)?;
         anyhow::ensure!(
             report.accounting_exact,
@@ -161,6 +171,7 @@ mod tests {
             tenants_list: vec![1, 2],
             seed: 5,
             oracle: OracleSpec::Native,
+            transport: TransportSpec::InProc,
         }
     }
 

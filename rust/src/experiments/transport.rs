@@ -1,0 +1,181 @@
+//! E12 — transport ablation: per-round latency and bytes for the same
+//! collective workload on the in-proc backend vs real TCP loopback
+//! sockets, across dimension `d` and wire-codec width (experiment index
+//! in DESIGN.md §4).
+//!
+//! This is the axis the transport subsystem opens: the §2.1 round model
+//! executed over an actual network path. The driver times
+//! `dist_matvec` rounds on both backends at each `(d, codec)` point and
+//! **asserts the bills are backend-invariant** — identical rounds,
+//! messages, and bytes on in-proc and TCP, because billing happens in
+//! the session layer from the codec-encoded frames that are exactly the
+//! payload bytes the TCP backend ships. What *does* move is latency:
+//! the `round_us_mean` column is the price of frame
+//! encode/decode + syscalls + loopback delivery, the real-deployment
+//! overhead the in-proc simulation hides.
+
+use std::time::Instant;
+
+use anyhow::{ensure, Result};
+
+use crate::cluster::{Cluster, CommStats, OracleSpec, WireCodec, WirePrecision};
+use crate::data::CovModel;
+use crate::transport::{LoopbackWorkers, TransportSpec};
+use crate::util::csv::CsvTable;
+use crate::util::stats::Summary;
+
+/// The backends of the sweep, in column order.
+pub const BACKENDS: [&str; 2] = ["inproc", "tcp"];
+
+/// The codec widths of the sweep (full-width and the narrowest).
+pub const CODECS: [WirePrecision; 2] = [WirePrecision::F64, WirePrecision::Bf16];
+
+#[derive(Clone, Debug)]
+pub struct TransportConfig {
+    /// Dimensions to sweep (one frame width per `d`).
+    pub d_list: Vec<usize>,
+    pub m: usize,
+    pub n: usize,
+    /// Timed collective rounds per `(backend, d, codec)` cell.
+    pub rounds: usize,
+    pub seed: u64,
+    pub oracle: OracleSpec,
+}
+
+impl Default for TransportConfig {
+    fn default() -> Self {
+        TransportConfig {
+            d_list: vec![16, 64, 256],
+            m: 4,
+            n: 200,
+            rounds: super::runs_from_env(32),
+            seed: 0x7ca9,
+            oracle: OracleSpec::Native,
+        }
+    }
+}
+
+/// Run the sweep; returns a CSV with one row per
+/// `(backend, d, codec)`: `backend, d, bytes_per_entry, rounds,
+/// round_us_mean, round_us_p95, bytes_per_round, total_bytes`. Errors
+/// if any bill differs between backends.
+pub fn run(cfg: &TransportConfig) -> Result<CsvTable> {
+    ensure!(cfg.rounds >= 1, "transport sweep needs at least one timed round");
+    let mut table = CsvTable::new(&[
+        "backend",
+        "d",
+        "bytes_per_entry",
+        "rounds",
+        "round_us_mean",
+        "round_us_p95",
+        "bytes_per_round",
+        "total_bytes",
+    ]);
+    for &d in &cfg.d_list {
+        let dist = CovModel::paper_fig1(d, cfg.seed ^ 0x12).gaussian();
+        let mut rng = crate::rng::Pcg64::new(cfg.seed ^ d as u64);
+        let v = rng.gaussian_vec(d);
+        // per backend: one bill per codec, compared cell-by-cell below
+        let mut bills: Vec<Vec<CommStats>> = Vec::with_capacity(BACKENDS.len());
+        for backend in BACKENDS {
+            // fresh loopback workers per cluster: each serves exactly
+            // one leader connection, so their threads are joinable
+            let loopback =
+                if backend == "tcp" { Some(LoopbackWorkers::spawn(cfg.m, 1)?) } else { None };
+            let spec = loopback.as_ref().map_or(TransportSpec::InProc, |w| w.spec());
+            let cluster =
+                Cluster::generate_on(&dist, cfg.m, cfg.n, cfg.seed, cfg.oracle.clone(), &spec)?;
+            let mut backend_bills = Vec::with_capacity(CODECS.len());
+            for prec in CODECS {
+                let session = cluster.session();
+                session.set_codec(WireCodec::new(prec));
+                session.dist_matvec(&v)?; // warm (connection, caches)
+                session.reset_stats();
+                let mut lat_us = Vec::with_capacity(cfg.rounds);
+                for _ in 0..cfg.rounds {
+                    let t = Instant::now();
+                    session.dist_matvec(&v)?;
+                    lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                let bill = session.close();
+                let lat = Summary::of(&lat_us);
+                table.push_row(vec![
+                    backend.to_string(),
+                    d.to_string(),
+                    prec.bytes_per_entry().to_string(),
+                    bill.rounds.to_string(),
+                    format!("{:.3}", lat.mean),
+                    format!("{:.3}", lat.p95),
+                    (bill.bytes / bill.rounds.max(1)).to_string(),
+                    bill.bytes.to_string(),
+                ]);
+                crate::info!(
+                    "transport {backend} d={d} {}: {:.1}us/round, {} B/round",
+                    prec.label(),
+                    lat.mean,
+                    bill.bytes / bill.rounds.max(1)
+                );
+                backend_bills.push(bill);
+            }
+            bills.push(backend_bills);
+            drop(cluster);
+            if let Some(w) = loopback {
+                w.join()?;
+            }
+        }
+        // THE invariant this driver exists for: the bill is a property
+        // of the protocol, not the substrate
+        ensure!(
+            bills[0] == bills[1],
+            "transport backends disagree on the bill at d={d}: inproc={:?} tcp={:?}",
+            bills[0],
+            bills[1]
+        );
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> TransportConfig {
+        TransportConfig {
+            d_list: vec![6],
+            m: 2,
+            n: 30,
+            rounds: 4,
+            seed: 5,
+            oracle: OracleSpec::Native,
+        }
+    }
+
+    /// Tiny-size smoke: one schema-complete row per (backend, d, codec),
+    /// with the backend-invariance assertion inside `run` exercised.
+    #[test]
+    fn transport_smoke_rows_schema_complete_and_bills_invariant() {
+        let table = run(&tiny_cfg()).unwrap();
+        let rendered = table.render();
+        let rows: Vec<Vec<&str>> =
+            rendered.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        assert_eq!(rows.len(), BACKENDS.len() * CODECS.len());
+        for row in &rows {
+            assert_eq!(row.len(), 8, "schema-complete row");
+            assert!(row[0] == "inproc" || row[0] == "tcp");
+            for cell in &row[1..] {
+                let x: f64 = cell.parse().unwrap();
+                assert!(x.is_finite());
+            }
+        }
+        // per-round bytes follow the codec width on both backends:
+        // B(d)·(live+1) with live = m
+        let per_round = |r: &Vec<&str>| r[6].parse::<u64>().unwrap();
+        let f64_rows: Vec<&Vec<&str>> = rows.iter().filter(|r| r[2] == "8").collect();
+        let bf16_rows: Vec<&Vec<&str>> = rows.iter().filter(|r| r[2] == "2").collect();
+        for (a, b) in f64_rows.into_iter().zip(bf16_rows) {
+            assert_eq!(per_round(a), 8 * 6 * 3, "f64 row");
+            assert_eq!(per_round(b), 2 * 6 * 3, "bf16 row");
+            assert_eq!(per_round(a), 4 * per_round(b));
+        }
+    }
+}

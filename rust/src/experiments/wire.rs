@@ -14,6 +14,7 @@ use anyhow::Result;
 use crate::cluster::{Cluster, OracleSpec, WirePrecision};
 use crate::coordinator::{Algorithm, QuantizedPower};
 use crate::data::{CovModel, Distribution};
+use crate::transport::TransportSpec;
 use crate::util::csv::CsvTable;
 use crate::util::plot::{loglog, Series};
 use crate::util::stats::Summary;
@@ -30,6 +31,8 @@ pub struct WireConfig {
     pub runs: usize,
     pub seed: u64,
     pub oracle: OracleSpec,
+    /// Message substrate (bills and estimates are backend-invariant).
+    pub transport: TransportSpec,
 }
 
 impl Default for WireConfig {
@@ -41,6 +44,7 @@ impl Default for WireConfig {
             runs: super::runs_from_env(8),
             seed: 0x317e,
             oracle: OracleSpec::Native,
+            transport: TransportSpec::InProc,
         }
     }
 }
@@ -70,12 +74,13 @@ pub fn run(cfg: &WireConfig) -> Result<CsvTable> {
         // one cluster per run, shared by all codecs (paired comparison,
         // same as the Figure-1 and top-k drivers — QuantizedPower
         // installs and restores the codec around each run)
-        let cluster = Cluster::generate_with(
+        let cluster = Cluster::generate_on(
             &dist,
             cfg.m,
             cfg.n,
             cfg.seed ^ ((r as u64) << 20),
             cfg.oracle.clone(),
+            &cfg.transport,
         )?;
         for (i, &prec) in PRECISIONS.iter().enumerate() {
             let est = QuantizedPower::new(prec).run(&cluster.session())?;
@@ -133,7 +138,15 @@ mod tests {
     }
 
     fn tiny_cfg() -> WireConfig {
-        WireConfig { d: 8, m: 3, n: 60, runs: 2, seed: 5, oracle: OracleSpec::Native }
+        WireConfig {
+            d: 8,
+            m: 3,
+            n: 60,
+            runs: 2,
+            seed: 5,
+            oracle: OracleSpec::Native,
+            transport: TransportSpec::InProc,
+        }
     }
 
     /// Tiny-size smoke: one schema-complete, finite row per codec.

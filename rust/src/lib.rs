@@ -30,6 +30,12 @@
 //!   top-`k` subspace family (block power, block Lanczos, batched
 //!   deflated S&I) on the block protocol. All written against the
 //!   session view, so any mix of them runs concurrently on one cluster.
+//! - [`transport`] — the pluggable message substrate under the cluster:
+//!   a `Transport` trait with an in-proc (`mpsc`) backend and a real
+//!   TCP backend (`std::net`, length-prefixed whole-message frames
+//!   carrying the materialized wire-codec output). A leader process can
+//!   drive N `dspca worker --listen <addr>` processes; bills are
+//!   backend-invariant (E12, `dspca transport`).
 //! - [`serve`] — the multi-tenant scheduler: a FIFO job queue drained by
 //!   N concurrent leader threads over one shared cluster, with per-job
 //!   bills (identical to solo-run bills, verified) and batch
@@ -85,6 +91,7 @@ pub mod propcheck;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod transport;
 pub mod util;
 
 /// Convenience re-exports covering the public API surface used by the
@@ -100,4 +107,5 @@ pub mod prelude {
     pub use crate::data::{CovModel, Distribution, Thm3Dist, Thm5Dist};
     pub use crate::linalg::Matrix;
     pub use crate::rng::Pcg64;
+    pub use crate::transport::TransportSpec;
 }

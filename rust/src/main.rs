@@ -4,24 +4,39 @@
 //! ```text
 //! dspca figure1   [--dist gaussian|uniform] [--d 300] [--m 25]
 //!                 [--n-list 25,50,...] [--runs 40] [--out results/]
+//!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
 //! dspca table1    [--d 300] [--m 25] [--n 400] [--runs 12]
 //! dspca lower-bounds [--runs 60]
 //! dspca scaling   [--n-sweep | --m-sweep]
 //! dspca topk      [--d 60] [--m 8] [--n 400] [--k-list 1,2,4,8] [--runs 8]
 //! dspca wire      [--d 60] [--m 8] [--n 400] [--runs 8]
+//!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
 //! dspca serve     [--d 60] [--m 8] [--n 400] [--jobs 12] [--tenants 1,2,4,8]
+//!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
+//! dspca transport [--d-list 16,64,256] [--m 4] [--n 200] [--rounds 32]
+//! dspca worker    [--listen 127.0.0.1:7070] [--once]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
 //! ```
 //!
-//! Unknown or typo'd flags are an error listing the subcommand's
-//! accepted flags (`--n-lsit 25` no longer runs silently with defaults).
+//! `dspca worker --listen <addr>` turns this binary into one remote
+//! machine of the paper's cluster: it waits for a leader, receives its
+//! shard over the handshake, and answers collective requests over TCP.
+//! Any leader subcommand that accepts `--transport tcp --workers ...`
+//! then runs the cluster multi-process (see README for the two-terminal
+//! quickstart). Unknown or typo'd flags are an error listing the
+//! subcommand's accepted flags (`--n-lsit 25` no longer runs silently
+//! with defaults).
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
 use dspca::cluster::OracleSpec;
 use dspca::config::Args;
-use dspca::experiments::{figure1, lower_bounds, scaling, serve as serve_exp, table1, topk, wire};
+use dspca::experiments::{
+    figure1, lower_bounds, scaling, serve as serve_exp, table1, topk,
+    transport as transport_exp, wire,
+};
+use dspca::transport::TransportSpec;
 
 fn main() {
     if let Err(e) = run() {
@@ -41,13 +56,15 @@ fn run() -> Result<()> {
         Some("topk") => cmd_topk(&args, &out_dir),
         Some("wire") => cmd_wire(&args, &out_dir),
         Some("serve") => cmd_serve(&args, &out_dir),
+        Some("transport") => cmd_transport(&args, &out_dir),
+        Some("worker") => cmd_worker(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("selftest") => cmd_selftest(&args),
-        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, e2e, selftest)"),
+        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, transport, worker, e2e, selftest)"),
         None => {
             println!(
                 "dspca — Communication-efficient Distributed Stochastic PCA\n\
-                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | e2e | selftest\n\
+                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | transport | worker | e2e | selftest\n\
                  see README.md for flags"
             );
             Ok(())
@@ -62,10 +79,17 @@ fn oracle_from(args: &Args) -> OracleSpec {
     }
 }
 
+/// Parse `--transport {inproc,tcp}` / `--workers <addr,...>`. A bad
+/// combination (tcp without workers, workers under inproc, an unknown
+/// backend, an empty list) is a hard error, never a silent fallback.
+fn transport_from(args: &Args) -> Result<TransportSpec> {
+    TransportSpec::from_flags(args.get("transport"), args.get("workers"))
+}
+
 fn cmd_figure1(args: &Args, out_dir: &str) -> Result<()> {
     args.ensure_known_flags(
         "figure1",
-        &["dist", "d", "m", "n-list", "runs", "seed", "artifacts", "out"],
+        &["dist", "d", "m", "n-list", "runs", "seed", "artifacts", "out", "transport", "workers"],
     )?;
     let dist = match args.get("dist").unwrap_or("gaussian") {
         "gaussian" => figure1::Fig1Dist::Gaussian,
@@ -81,6 +105,7 @@ fn cmd_figure1(args: &Args, out_dir: &str) -> Result<()> {
         seed: args.get_u64("seed", defaults.seed)?,
         dist,
         oracle: oracle_from(args),
+        transport: transport_from(args)?,
     };
     let table = figure1::run(&cfg)?;
     let path = format!("{out_dir}/figure1_{:?}.csv", cfg.dist).to_lowercase();
@@ -201,7 +226,10 @@ fn cmd_topk(args: &Args, out_dir: &str) -> Result<()> {
 }
 
 fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
-    args.ensure_known_flags("wire", &["d", "m", "n", "runs", "seed", "artifacts", "out"])?;
+    args.ensure_known_flags(
+        "wire",
+        &["d", "m", "n", "runs", "seed", "artifacts", "out", "transport", "workers"],
+    )?;
     let defaults = wire::WireConfig::default();
     let cfg = wire::WireConfig {
         d: args.get_usize("d", defaults.d)?,
@@ -210,6 +238,7 @@ fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
         runs: args.get_usize("runs", defaults.runs)?,
         seed: args.get_u64("seed", defaults.seed)?,
         oracle: oracle_from(args),
+        transport: transport_from(args)?,
     };
     let table = wire::run(&cfg)?;
     let path = format!("{out_dir}/wire.csv");
@@ -221,7 +250,7 @@ fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
 fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
     args.ensure_known_flags(
         "serve",
-        &["d", "m", "n", "jobs", "tenants", "seed", "artifacts", "out"],
+        &["d", "m", "n", "jobs", "tenants", "seed", "artifacts", "out", "transport", "workers"],
     )?;
     let defaults = serve_exp::ServeConfig::default();
     let cfg = serve_exp::ServeConfig {
@@ -232,12 +261,47 @@ fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
         tenants_list: args.get_usize_list("tenants", &defaults.tenants_list)?,
         seed: args.get_u64("seed", defaults.seed)?,
         oracle: oracle_from(args),
+        transport: transport_from(args)?,
     };
     let table = serve_exp::run(&cfg)?;
     let path = format!("{out_dir}/serve.csv");
     table.write(&path)?;
     println!("wrote {path}");
     Ok(())
+}
+
+fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
+    args.ensure_known_flags(
+        "transport",
+        &["d-list", "m", "n", "rounds", "seed", "artifacts", "out"],
+    )?;
+    let defaults = transport_exp::TransportConfig::default();
+    let cfg = transport_exp::TransportConfig {
+        d_list: args.get_usize_list("d-list", &defaults.d_list)?,
+        m: args.get_usize("m", defaults.m)?,
+        n: args.get_usize("n", defaults.n)?,
+        rounds: args.get_usize("rounds", defaults.rounds)?,
+        seed: args.get_u64("seed", defaults.seed)?,
+        oracle: oracle_from(args),
+    };
+    let table = transport_exp::run(&cfg)?;
+    let path = format!("{out_dir}/transport.csv");
+    table.write(&path)?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    args.ensure_known_flags("worker", &["listen", "once"])?;
+    let addr = args.get("listen").unwrap_or("127.0.0.1:7070");
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("worker: cannot listen on {addr}"))?;
+    // the bound address is the first stdout line, so scripts (and the
+    // process-level integration test) can use `--listen 127.0.0.1:0`
+    // and read the ephemeral port back
+    println!("dspca worker listening on {}", listener.local_addr()?);
+    let max_conns = if args.get_bool("once") { Some(1) } else { None };
+    dspca::transport::serve_worker(listener, max_conns)
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {
@@ -277,10 +341,40 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     let c = dspca::cluster::Cluster::generate(&dist, 4, 200, 2)?;
     let cen = CentralizedErm.run(&c.session())?;
     let fix = SignFixedAverage.run(&c.session())?;
-    println!("selftest: centralized err={:.3e}, sign-fixed err={:.3e}", cen.error(dist.v1()), fix.error(dist.v1()));
+    println!(
+        "selftest[inproc]: centralized err={:.3e}, sign-fixed err={:.3e}",
+        cen.error(dist.v1()),
+        fix.error(dist.v1())
+    );
     if cen.error(dist.v1()) > 0.5 {
         bail!("selftest failed: centralized ERM far from v1");
     }
-    println!("selftest OK");
+    // the same queries over TCP loopback workers must produce the same
+    // estimates and the same bills (the transport invariance contract)
+    let workers = dspca::transport::LoopbackWorkers::spawn(4, 1)?;
+    let t = dspca::cluster::Cluster::generate_on(
+        &dist,
+        4,
+        200,
+        2,
+        OracleSpec::Native,
+        &workers.spec(),
+    )?;
+    let cen_t = CentralizedErm.run(&t.session())?;
+    let fix_t = SignFixedAverage.run(&t.session())?;
+    println!(
+        "selftest[tcp]:    centralized err={:.3e}, sign-fixed err={:.3e}",
+        cen_t.error(dist.v1()),
+        fix_t.error(dist.v1())
+    );
+    if cen_t.w != cen.w || fix_t.w != fix.w {
+        bail!("selftest failed: TCP backend estimates diverged from in-proc");
+    }
+    if cen_t.comm != cen.comm || fix_t.comm != fix.comm {
+        bail!("selftest failed: TCP bill differs from in-proc bill");
+    }
+    drop(t);
+    workers.join()?;
+    println!("selftest OK (inproc + tcp loopback, identical estimates and bills)");
     Ok(())
 }

@@ -1,0 +1,163 @@
+//! In-process transport: one OS thread per machine, `mpsc` channels.
+//!
+//! This is the original cluster substrate, refactored out of
+//! `cluster/mod.rs` behind the [`Transport`] trait: requests move as
+//! typed enums over a per-worker channel, replies funnel into one shared
+//! receiver, and the worker threads are owned (and joined) here. No
+//! bytes are materialized — the session layer still bills from the
+//! codec-encoded payload frames, so the bill is identical to the TCP
+//! backend's by construction.
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cluster::worker::worker_main;
+use crate::cluster::{OracleSpec, Request, Response, WirePrecision};
+use crate::data::Shard;
+
+use super::{RecvError, Transport, CONTROL_SEQ};
+
+/// The `mpsc` transport: worker threads owning their shards, typed
+/// messages, no serialization. Built by
+/// [`Cluster::from_shards_on`](crate::cluster::Cluster::from_shards_on)
+/// with [`TransportSpec::InProc`](super::TransportSpec::InProc).
+pub struct InProcTransport {
+    senders: Vec<mpsc::Sender<(u64, Request)>>,
+    receiver: mpsc::Receiver<(usize, u64, Response)>,
+    handles: Vec<Option<JoinHandle<()>>>,
+    down: bool,
+}
+
+impl InProcTransport {
+    /// Spawn one worker thread per shard. `seed` feeds the same
+    /// per-worker RNG seed derivation the TCP backend ships in its
+    /// handshake, so worker sign coins agree across backends.
+    pub fn spawn(
+        shards: Vec<Arc<Shard>>,
+        oracle: &OracleSpec,
+        seed: u64,
+    ) -> Result<InProcTransport> {
+        let (resp_tx, resp_rx) = mpsc::channel::<(usize, u64, Response)>();
+        let mut senders = Vec::with_capacity(shards.len());
+        let mut handles = Vec::with_capacity(shards.len());
+        let mut seeder = crate::cluster::worker::worker_seeder(seed);
+        for (i, shard) in shards.into_iter().enumerate() {
+            let (req_tx, req_rx) = mpsc::channel::<(u64, Request)>();
+            let tx = resp_tx.clone();
+            let spec = oracle.clone();
+            let wseed = seeder.next_u64();
+            let handle = std::thread::Builder::new()
+                .name(format!("dspca-worker-{i}"))
+                .spawn(move || worker_main(i, shard, spec, wseed, req_rx, tx))
+                .context("spawning worker thread")?;
+            senders.push(req_tx);
+            handles.push(Some(handle));
+        }
+        Ok(InProcTransport { senders, receiver: resp_rx, handles, down: false })
+    }
+}
+
+impl Transport for InProcTransport {
+    fn name(&self) -> &'static str {
+        "inproc"
+    }
+
+    fn send(&mut self, worker: usize, seq: u64, _prec: WirePrecision, req: &Request) -> Result<()> {
+        // typed enums cross the channel directly; the session has
+        // already transcoded the payload through its codec, so the
+        // precision needs no further handling here
+        self.senders
+            .get(worker)
+            .ok_or_else(|| anyhow!("no such worker {worker}"))?
+            .send((seq, req.clone()))
+            .map_err(|_| anyhow!("worker {worker} channel closed"))
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> std::result::Result<(usize, u64, Response), RecvError> {
+        self.receiver.recv_timeout(timeout).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => RecvError::TimedOut(timeout),
+            mpsc::RecvTimeoutError::Disconnected => {
+                RecvError::Disconnected("all worker threads exited".into())
+            }
+        })
+    }
+
+    fn shutdown(&mut self) {
+        if self.down {
+            return;
+        }
+        self.down = true;
+        for s in &self.senders {
+            // best effort: a worker killed earlier already dropped its
+            // receiver and the send just fails
+            let _ = s.send((CONTROL_SEQ, Request::Shutdown));
+        }
+        for h in &mut self.handles {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for InProcTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tiny_transport(m: usize) -> InProcTransport {
+        let mut rng = Pcg64::new(9);
+        let shards = (0..m)
+            .map(|_| {
+                Arc::new(Shard::new(4, 3, (0..12).map(|_| rng.next_gaussian()).collect()))
+            })
+            .collect();
+        InProcTransport::spawn(shards, &OracleSpec::Native, 7).unwrap()
+    }
+
+    #[test]
+    fn send_recv_roundtrip_echoes_sequence_numbers() {
+        let mut t = tiny_transport(2);
+        t.send(0, 5, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
+        let (id, seq, resp) = t.recv_timeout(Duration::from_secs(30)).unwrap();
+        assert_eq!((id, seq), (0, 5));
+        assert!(matches!(resp, Response::Vector(v) if v.len() == 3));
+        t.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_fails_later_sends_cleanly() {
+        let mut t = tiny_transport(2);
+        t.shutdown();
+        t.shutdown(); // second call is a no-op, not a double-join
+        let err =
+            t.send(1, 1, WirePrecision::F64, &Request::Gram).unwrap_err().to_string();
+        assert!(err.contains("worker 1"), "{err}");
+        // recv after shutdown reports disconnection, not a hang
+        assert!(matches!(
+            t.recv_timeout(Duration::from_millis(50)),
+            Err(RecvError::Disconnected(_) | RecvError::TimedOut(_))
+        ));
+    }
+
+    #[test]
+    fn send_to_unknown_worker_is_a_clean_error() {
+        let mut t = tiny_transport(1);
+        let err = t.send(3, 1, WirePrecision::F64, &Request::Gram).unwrap_err().to_string();
+        assert!(err.contains("worker 3"), "{err}");
+        t.shutdown();
+    }
+}

@@ -1,0 +1,277 @@
+//! Pluggable transport: how leader⇄worker messages physically move.
+//!
+//! The paper's round model (§2.1) counts rounds and bytes as if vectors
+//! crossed a network; until ISSUE 4 the cluster moved typed
+//! `Request`/`Response` enums over in-process `mpsc` channels, so the
+//! billed frame sizes never hit a wire. This module makes the substrate
+//! pluggable: [`Cluster`](crate::cluster::Cluster) talks to a
+//! [`Transport`] trait object, and two backends implement it —
+//!
+//! - [`InProcTransport`]: the original machinery, one OS thread per
+//!   machine and an `mpsc` channel pair per worker (refactored out of
+//!   `cluster/mod.rs` / `cluster/worker.rs`).
+//! - [`TcpTransport`]: real sockets (`std::net` only, no new deps).
+//!   Every message is a length-prefixed byte frame carrying the whole
+//!   `Request`/`Response` — envelope fields as little-endian integers,
+//!   f64 payloads as the issuing session's *materialized
+//!   [`WireCodec`](crate::cluster::WireCodec) output* (see
+//!   `cluster/wire.rs` for the frame format). The leader connects to
+//!   `dspca worker --listen <addr>` processes, ships each worker its
+//!   shard once at setup (setup traffic is not part of the §2.1 round
+//!   bill), and a reader thread per peer feeds replies into one queue
+//!   so per-exchange deadlines map onto the same timeout/straggler
+//!   paths the in-proc backend uses.
+//!
+//! **Billing contract.** The transport moves messages; it never bills.
+//! `CommStats` is advanced by the session layer from the codec-encoded
+//! payload frames — which are exactly the payload bytes the TCP backend
+//! puts on the wire — so a collective's bill (rounds, messages, bytes)
+//! is **backend-invariant**. The E12 driver
+//! (`experiments/transport.rs`), `dspca selftest`, and the loopback
+//! integration tests assert this bill-for-bill.
+//!
+//! **Failure surfacing.** A dead or unreachable peer fails the send
+//! with an error naming the worker and its address; a straggling peer
+//! trips the receive deadline and the session's straggler accounting
+//! takes over, exactly as in-proc. [`Transport::shutdown`] is
+//! idempotent and safe in any drop order.
+
+mod inproc;
+mod tcp;
+
+pub use inproc::InProcTransport;
+pub use tcp::{serve_worker, LoopbackWorkers, TcpTransport};
+
+use std::io::{self, Read, Write};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::{Request, Response, WirePrecision};
+
+/// Sequence number used for control messages (`Shutdown`) that are not
+/// part of any exchange; real exchanges start at 1.
+pub const CONTROL_SEQ: u64 = 0;
+
+/// Hard cap on one frame body — a corrupt length prefix must not turn
+/// into a multi-gigabyte allocation. Generous: the largest legitimate
+/// frame is a `Gram` reply, `8·d²` payload bytes plus a small envelope.
+pub(crate) const MAX_FRAME_BODY: usize = 1 << 30;
+
+/// How leader⇄worker messages physically move. One implementor per
+/// backend; the cluster holds a `Box<dyn Transport>` behind its wire
+/// lock, so methods take `&mut self` and implementors need only be
+/// [`Send`].
+pub trait Transport: Send {
+    /// Backend name for reports ("inproc" / "tcp").
+    fn name(&self) -> &'static str;
+
+    /// Deliver one sequenced request to peer `worker`. `prec` is the
+    /// issuing session's wire precision: byte-shipping backends encode
+    /// the payload at exactly that width (the payload has already been
+    /// transcoded through the session codec, so encoding is lossless on
+    /// these values), and workers echo it on the reply. Errors name the
+    /// peer (`worker 2 at 127.0.0.1:9001 unreachable: ...`).
+    ///
+    /// A sequence number identifies exactly one request — the invariant
+    /// the straggler protocol rests on — so callers must never send
+    /// different requests under one `(seq, prec)`; backends may cache
+    /// the encoded broadcast frame per `(seq, prec)` and reuse it for
+    /// every peer of the exchange.
+    fn send(&mut self, worker: usize, seq: u64, prec: WirePrecision, req: &Request) -> Result<()>;
+
+    /// Block for the next response from any peer, up to `timeout` — the
+    /// per-exchange deadline. A [`RecvError`] (deadline passed, or no
+    /// peer can ever reply) routes the caller onto the same
+    /// timeout/straggler path on every backend.
+    fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> std::result::Result<(usize, u64, Response), RecvError>;
+
+    /// Tell every peer to stop and release transport resources
+    /// (join worker/reader threads, close sockets). **Idempotent**:
+    /// calling it twice, or after a peer already died, is a no-op —
+    /// never a double-close or a hang.
+    fn shutdown(&mut self);
+}
+
+/// Why [`Transport::recv_timeout`] returned no message.
+#[derive(Debug)]
+pub enum RecvError {
+    /// The per-exchange deadline passed with no frame — the worker may
+    /// still answer later (straggler) or never.
+    TimedOut(Duration),
+    /// No peer can ever reply (all channels/sockets closed).
+    Disconnected(String),
+}
+
+impl std::fmt::Display for RecvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecvError::TimedOut(t) => {
+                write!(f, "timed out after {t:?} waiting for a worker response")
+            }
+            RecvError::Disconnected(why) => write!(f, "transport disconnected: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for RecvError {}
+
+/// Which backend a cluster should run on — the value behind the CLI's
+/// `--transport {inproc,tcp}` / `--workers <addr,...>` flags and the
+/// experiment configs' `transport` field.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub enum TransportSpec {
+    /// One OS thread per machine, `mpsc` channels (the default).
+    #[default]
+    InProc,
+    /// Real TCP sockets: one `dspca worker --listen <addr>` peer per
+    /// machine, in shard order. The cluster's `m` must equal the
+    /// address count.
+    Tcp {
+        /// Worker addresses (`host:port`), one per machine.
+        workers: Vec<String>,
+    },
+}
+
+impl TransportSpec {
+    /// Backend label for reports and CSV columns.
+    pub fn label(&self) -> &'static str {
+        match self {
+            TransportSpec::InProc => "inproc",
+            TransportSpec::Tcp { .. } => "tcp",
+        }
+    }
+
+    /// Parse the CLI surface: `--transport {inproc,tcp}` plus
+    /// `--workers a:p,b:p,...`. `--workers` alone implies `tcp`; `tcp`
+    /// without `--workers`, an empty worker list, or `--workers` under
+    /// `inproc` are hard errors (never a silent fallback).
+    pub fn from_flags(transport: Option<&str>, workers: Option<&str>) -> Result<TransportSpec> {
+        let workers: Option<Vec<String>> = workers.map(|w| {
+            w.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
+        });
+        match (transport, workers) {
+            (None, None) | (Some("inproc"), None) => Ok(TransportSpec::InProc),
+            (None | Some("tcp"), Some(w)) if !w.is_empty() => {
+                Ok(TransportSpec::Tcp { workers: w })
+            }
+            (None | Some("tcp"), Some(_)) => {
+                bail!("--workers list is empty; expected --workers <addr,addr,...>")
+            }
+            (Some("tcp"), None) => {
+                bail!(
+                    "--transport tcp requires --workers <addr,addr,...> \
+                     (one address per machine)"
+                )
+            }
+            (Some("inproc"), Some(_)) => bail!("--workers only applies to --transport tcp"),
+            (Some(other), _) => bail!("unknown transport '{other}' (expected 'inproc' or 'tcp')"),
+        }
+    }
+}
+
+/// Write one length-prefixed frame: `u32` little-endian body length,
+/// then the body. A body over the cap is a hard error — shipping it
+/// would either be rejected by the receiver's [`read_frame`] after the
+/// whole transfer or, past `u32::MAX`, silently truncate the length
+/// prefix and desync the protocol.
+pub(crate) fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
+    if body.len() > MAX_FRAME_BODY {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame body of {} bytes exceeds the {MAX_FRAME_BODY}-byte cap", body.len()),
+        ));
+    }
+    w.write_all(&(body.len() as u32).to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame body. A clean EOF before the length
+/// prefix surfaces as `ErrorKind::UnexpectedEof`; an absurd length
+/// prefix is `InvalidData` (never a huge allocation).
+pub(crate) fn read_frame(r: &mut impl Read) -> io::Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)?;
+    let len = u32::from_le_bytes(len) as usize;
+    if len > MAX_FRAME_BODY {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidData,
+            format!("frame body of {len} bytes exceeds the {MAX_FRAME_BODY}-byte cap"),
+        ));
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_io_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap(), b"");
+        // clean EOF at a frame boundary
+        let err = read_frame(&mut r).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn read_frame_rejects_absurd_lengths_and_truncation() {
+        // a corrupt length prefix must error out, not allocate wildly
+        let huge = (MAX_FRAME_BODY as u32 + 1).to_le_bytes();
+        let err = read_frame(&mut &huge[..]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // a truncated body is an UnexpectedEof
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"abcdef").unwrap();
+        let cut = &buf[..buf.len() - 2];
+        assert!(read_frame(&mut &cut[..]).is_err());
+    }
+
+    #[test]
+    fn spec_from_flags_parses_every_surface() {
+        assert_eq!(TransportSpec::from_flags(None, None).unwrap(), TransportSpec::InProc);
+        assert_eq!(
+            TransportSpec::from_flags(Some("inproc"), None).unwrap(),
+            TransportSpec::InProc
+        );
+        let tcp = TransportSpec::Tcp {
+            workers: vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()],
+        };
+        assert_eq!(
+            TransportSpec::from_flags(Some("tcp"), Some("127.0.0.1:9001, 127.0.0.1:9002"))
+                .unwrap(),
+            tcp
+        );
+        // --workers alone implies tcp
+        assert_eq!(
+            TransportSpec::from_flags(None, Some("127.0.0.1:9001,127.0.0.1:9002")).unwrap(),
+            tcp
+        );
+        assert_eq!(tcp.label(), "tcp");
+        assert_eq!(TransportSpec::InProc.label(), "inproc");
+        assert_eq!(TransportSpec::default(), TransportSpec::InProc);
+    }
+
+    #[test]
+    fn spec_from_flags_rejects_bad_combinations() {
+        let msg = |t: Option<&str>, w: Option<&str>| {
+            TransportSpec::from_flags(t, w).unwrap_err().to_string()
+        };
+        assert!(msg(Some("tcp"), None).contains("--workers"));
+        assert!(msg(Some("inproc"), Some("127.0.0.1:9001")).contains("inproc"));
+        assert!(msg(Some("udp"), None).contains("udp"));
+        assert!(msg(None, Some(" , ,")).contains("empty"));
+        assert!(msg(Some("tcp"), Some(",")).contains("empty"));
+    }
+}

@@ -1,0 +1,657 @@
+//! TCP transport: the cluster over real sockets (`std::net` only).
+//!
+//! **Leader side** ([`TcpTransport`]): connects to one
+//! `dspca worker --listen <addr>` peer per machine (in shard order),
+//! ships each worker its shard + per-worker RNG seed + oracle spec in a
+//! one-time `Init` handshake frame (setup traffic, outside the §2.1
+//! round bill), then spawns one reader thread per peer. Readers decode
+//! response frames and feed them into a single queue, so
+//! [`Transport::recv_timeout`] has the same per-exchange deadline
+//! semantics as the in-proc channel — a straggling or dead peer trips
+//! the deadline and the session's straggler accounting takes over
+//! unchanged.
+//!
+//! **Worker side** ([`serve_worker`]): accept a leader connection, read
+//! `Init`, ack, then answer request frames with response frames until
+//! `Shutdown` or EOF — the same
+//! [`handle_request`](crate::cluster::worker) dispatch the in-proc
+//! worker thread runs. Payloads are encoded at the precision the
+//! request frame carried, so the leader's decode + session transcode is
+//! value-preserving and bills are backend-invariant.
+//!
+//! **Framing**: length-prefixed whole-message frames (`cluster/wire.rs`
+//! format); payload sections are the materialized `WireCodec` output,
+//! i.e. the billed bytes are exactly the payload bytes on the socket.
+//!
+//! **Shutdown** is idempotent and drop-order-safe: a `Shutdown` frame
+//! is written best-effort to each peer, both socket halves are shut
+//! down (which unblocks the reader threads), and the readers are
+//! joined. A worker that is mid-compute when the leader vanishes
+//! finishes, fails its write, and returns to `accept` — nobody hangs
+//! and nothing is double-closed.
+
+use std::io;
+use std::net::{Shutdown as SockShutdown, TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, ensure, Context, Result};
+
+use crate::cluster::wire::Cursor;
+use crate::cluster::worker::{handle_request, worker_rng};
+use crate::cluster::{
+    decode_request, decode_response, encode_request, encode_response, ComputeOracle, OracleSpec,
+    Request, Response, WireCodec, WirePrecision,
+};
+use crate::data::Shard;
+
+use super::{read_frame, write_frame, RecvError, Transport, TransportSpec, CONTROL_SEQ};
+
+/// Handshake magic ("DSPC") so connecting to something that is not a
+/// `dspca worker` fails fast with a clear error instead of a timeout.
+const INIT_MAGIC: u32 = 0x4453_5043;
+const INIT_VERSION: u8 = 1;
+const ORACLE_NATIVE: u8 = 0;
+const ORACLE_PJRT: u8 = 1;
+
+/// Deadline for the connect-time handshake (shard shipping + ack). Kept
+/// separate from the per-exchange deadline: a peer that accepts but
+/// never acks is misconfigured, not straggling.
+const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
+
+/// Worker-side write deadline (mirrors the leader's 120 s socket write
+/// timeout): a leader that stops reading must not wedge the worker's
+/// serve loop forever in `write_frame`.
+const WORKER_WRITE_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// One worker's shard + identity, shipped once at connect time.
+struct Init {
+    worker_id: usize,
+    wseed: u64,
+    oracle: OracleSpec,
+    n: usize,
+    d: usize,
+    data: Vec<f64>,
+}
+
+fn encode_init(init: &Init) -> Vec<u8> {
+    let mut out = Vec::with_capacity(64 + 8 * init.data.len());
+    out.extend_from_slice(&INIT_MAGIC.to_le_bytes());
+    out.push(INIT_VERSION);
+    out.extend_from_slice(&(init.worker_id as u64).to_le_bytes());
+    out.extend_from_slice(&init.wseed.to_le_bytes());
+    match &init.oracle {
+        OracleSpec::Native => out.push(ORACLE_NATIVE),
+        OracleSpec::Pjrt { artifact_dir } => {
+            out.push(ORACLE_PJRT);
+            out.extend_from_slice(&(artifact_dir.len() as u32).to_le_bytes());
+            out.extend_from_slice(artifact_dir.as_bytes());
+        }
+    }
+    out.extend_from_slice(&(init.n as u64).to_le_bytes());
+    out.extend_from_slice(&(init.d as u64).to_le_bytes());
+    // shard rows always ship lossless — this is dataset setup, not a
+    // round payload, and never enters the communication bill
+    out.extend_from_slice(&(init.data.len() as u64).to_le_bytes());
+    for x in &init.data {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+fn decode_init(body: &[u8]) -> Result<Init> {
+    let mut c = Cursor::new(body);
+    let magic = c.u32()?;
+    ensure!(magic == INIT_MAGIC, "bad handshake magic 0x{magic:08x} (not a dspca leader?)");
+    let version = c.u8()?;
+    ensure!(version == INIT_VERSION, "handshake version {version} != {INIT_VERSION}");
+    let worker_id = c.usize()?;
+    let wseed = c.u64()?;
+    let oracle = match c.u8()? {
+        ORACLE_NATIVE => OracleSpec::Native,
+        ORACLE_PJRT => OracleSpec::Pjrt { artifact_dir: c.string()? },
+        other => bail!("unknown oracle tag {other} in handshake"),
+    };
+    let n = c.usize()?;
+    let d = c.usize()?;
+    let data = c.payload(WirePrecision::F64)?;
+    ensure!(
+        n.checked_mul(d) == Some(data.len()),
+        "init frame: shard of {} values != {n}x{d}",
+        data.len()
+    );
+    c.finish()?;
+    Ok(Init { worker_id, wseed, oracle, n, d, data })
+}
+
+fn encode_ack(worker_id: usize) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16);
+    out.extend_from_slice(&INIT_MAGIC.to_le_bytes());
+    out.push(INIT_VERSION);
+    out.extend_from_slice(&(worker_id as u64).to_le_bytes());
+    out
+}
+
+fn decode_ack(body: &[u8], expect_id: usize) -> Result<()> {
+    let mut c = Cursor::new(body);
+    let magic = c.u32()?;
+    ensure!(magic == INIT_MAGIC, "bad ack magic 0x{magic:08x} (not a dspca worker?)");
+    let version = c.u8()?;
+    ensure!(version == INIT_VERSION, "ack version {version} != {INIT_VERSION}");
+    let id = c.usize()?;
+    ensure!(id == expect_id, "ack from worker {id}, expected {expect_id}");
+    c.finish()
+}
+
+struct Peer {
+    addr: String,
+    stream: TcpStream,
+    reader: Option<JoinHandle<()>>,
+}
+
+/// Leader-side TCP transport: one socket per worker peer, one reader
+/// thread per socket feeding a shared response queue. Built by
+/// [`Cluster::from_shards_on`](crate::cluster::Cluster::from_shards_on)
+/// with [`TransportSpec::Tcp`].
+pub struct TcpTransport {
+    peers: Vec<Peer>,
+    rx: mpsc::Receiver<(usize, u64, Response)>,
+    /// One exchange broadcasts the same `(seq, prec, req)` to every
+    /// peer (a sequence number identifies exactly one request — the
+    /// invariant the whole straggler protocol rests on), so the encoded
+    /// body is cached per `(seq, prec)`: a round costs one encode, not
+    /// one per worker.
+    encoded: Option<(u64, WirePrecision, Vec<u8>)>,
+    down: bool,
+}
+
+impl TcpTransport {
+    /// Connect to every worker address (in shard order), ship each its
+    /// shard, and wait for the handshake ack. Errors name the peer:
+    /// "worker 2: cannot connect to 127.0.0.1:9003". On a partial
+    /// failure the peers already reached are torn down (sockets closed,
+    /// reader threads joined) before the error returns — no leaked
+    /// threads, no wedged remote workers.
+    pub(crate) fn connect(
+        addrs: &[String],
+        shards: Vec<Arc<Shard>>,
+        oracle: &OracleSpec,
+        seed: u64,
+        io_timeout: Duration,
+    ) -> Result<TcpTransport> {
+        let (tx, rx) = mpsc::channel::<(usize, u64, Response)>();
+        let mut peers = Vec::with_capacity(addrs.len());
+        match Self::connect_all(addrs, shards, oracle, seed, io_timeout, &tx, &mut peers) {
+            Ok(()) => Ok(TcpTransport { peers, rx, encoded: None, down: false }),
+            Err(e) => {
+                for peer in &mut peers {
+                    let _ = peer.stream.shutdown(SockShutdown::Both);
+                    if let Some(h) = peer.reader.take() {
+                        let _ = h.join();
+                    }
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn connect_all(
+        addrs: &[String],
+        shards: Vec<Arc<Shard>>,
+        oracle: &OracleSpec,
+        seed: u64,
+        io_timeout: Duration,
+        tx: &mpsc::Sender<(usize, u64, Response)>,
+        peers: &mut Vec<Peer>,
+    ) -> Result<()> {
+        ensure!(
+            addrs.len() == shards.len(),
+            "tcp transport: {} worker addresses for m = {} machines \
+             (the --workers list must name exactly one address per machine)",
+            addrs.len(),
+            shards.len()
+        );
+        // the shared per-worker seed derivation (worker_seeder), so
+        // worker sign coins agree across backends at a fixed seed
+        let mut seeder = crate::cluster::worker::worker_seeder(seed);
+        for (i, shard) in shards.into_iter().enumerate() {
+            let addr = &addrs[i];
+            let wseed = seeder.next_u64();
+            let mut stream = TcpStream::connect(addr)
+                .with_context(|| format!("worker {i}: cannot connect to {addr}"))?;
+            let _ = stream.set_nodelay(true);
+            let _ = stream.set_write_timeout(Some(io_timeout));
+            let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+            let init = Init {
+                worker_id: i,
+                wseed,
+                oracle: oracle.clone(),
+                n: shard.n(),
+                d: shard.d(),
+                data: shard.matrix().data().to_vec(),
+            };
+            write_frame(&mut stream, &encode_init(&init))
+                .with_context(|| format!("worker {i} at {addr}: shipping shard failed"))?;
+            let ack = read_frame(&mut stream).with_context(|| {
+                format!(
+                    "worker {i} at {addr}: no handshake ack \
+                     (is `dspca worker --listen {addr}` running?)"
+                )
+            })?;
+            decode_ack(&ack, i).with_context(|| format!("worker {i} at {addr}: bad handshake"))?;
+            let _ = stream.set_read_timeout(None);
+            let reader_stream = stream
+                .try_clone()
+                .with_context(|| format!("worker {i} at {addr}: cloning socket"))?;
+            let txc = tx.clone();
+            let reader = std::thread::Builder::new()
+                .name(format!("dspca-tcp-reader-{i}"))
+                .spawn(move || reader_loop(i, reader_stream, txc))
+                .context("spawning tcp reader thread")?;
+            peers.push(Peer { addr: addr.clone(), stream, reader: Some(reader) });
+        }
+        Ok(())
+    }
+}
+
+/// Per-peer reader: decode response frames and feed the shared queue.
+/// Exits on socket close/error or an undecodable frame — the leader
+/// then sees the peer as a straggler (deadline) rather than wedging. A
+/// clean EOF (normal shutdown) is silent; an undecodable frame is
+/// warned about so a version-mismatched peer is diagnosable instead of
+/// surfacing only as a later generic timeout.
+fn reader_loop(worker: usize, mut stream: TcpStream, tx: mpsc::Sender<(usize, u64, Response)>) {
+    loop {
+        let body = match read_frame(&mut stream) {
+            Ok(b) => b,
+            Err(e) => {
+                if e.kind() != io::ErrorKind::UnexpectedEof {
+                    crate::debug!("tcp reader for worker {worker}: socket closed: {e}");
+                }
+                return;
+            }
+        };
+        let (seq, _prec, resp) = match decode_response(&body) {
+            Ok(t) => t,
+            Err(e) => {
+                crate::warn!(
+                    "tcp reader for worker {worker}: undecodable response frame \
+                     (version-mismatched peer?), dropping the connection: {e:#}"
+                );
+                return;
+            }
+        };
+        if tx.send((worker, seq, resp)).is_err() {
+            return;
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn name(&self) -> &'static str {
+        "tcp"
+    }
+
+    fn send(&mut self, worker: usize, seq: u64, prec: WirePrecision, req: &Request) -> Result<()> {
+        let cached = matches!(&self.encoded, Some((s, p, _)) if *s == seq && *p == prec);
+        if !cached {
+            self.encoded = Some((seq, prec, encode_request(seq, WireCodec::new(prec), req)));
+        }
+        let peer = self
+            .peers
+            .get_mut(worker)
+            .ok_or_else(|| anyhow!("no such worker {worker}"))?;
+        let (_, _, body) = self.encoded.as_ref().expect("encoded body just ensured");
+        write_frame(&mut peer.stream, body)
+            .with_context(|| format!("worker {worker} at {} unreachable", peer.addr))
+    }
+
+    fn recv_timeout(
+        &mut self,
+        timeout: Duration,
+    ) -> std::result::Result<(usize, u64, Response), RecvError> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            mpsc::RecvTimeoutError::Timeout => RecvError::TimedOut(timeout),
+            mpsc::RecvTimeoutError::Disconnected => {
+                RecvError::Disconnected("every peer socket is closed".into())
+            }
+        })
+    }
+
+    fn shutdown(&mut self) {
+        if self.down {
+            return;
+        }
+        self.down = true;
+        let bye = encode_request(CONTROL_SEQ, WireCodec::lossless(), &Request::Shutdown);
+        for peer in &mut self.peers {
+            // best effort — a peer that already hung up just fails the
+            // write, which is fine
+            let _ = write_frame(&mut peer.stream, &bye);
+        }
+        for peer in &mut self.peers {
+            let _ = peer.stream.shutdown(SockShutdown::Both);
+            if let Some(h) = peer.reader.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// ---------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------
+
+/// Serve leader sessions on `listener`: the body of
+/// `dspca worker --listen <addr>`. Each accepted connection is one
+/// leader lifetime — `Init` handshake, then request⇄response frames
+/// until `Shutdown` or EOF. With `max_conns = Some(k)` the function
+/// returns after `k` leader sessions (the CLI's `--once` is `Some(1)`;
+/// tests and the loopback harness count connections so worker threads
+/// are joinable); `None` serves until the process is killed. Only
+/// connections that complete the `Init` handshake count as a leader
+/// session — a port scanner or crashed process probing the socket must
+/// not consume the `--once` budget.
+pub fn serve_worker(listener: TcpListener, max_conns: Option<usize>) -> Result<()> {
+    let mut served = 0usize;
+    loop {
+        if let Some(limit) = max_conns {
+            if served >= limit {
+                return Ok(());
+            }
+        }
+        let (stream, peer) = listener.accept().context("accepting leader connection")?;
+        crate::debug!("dspca worker: connection from {peer}");
+        match serve_leader(stream) {
+            Ok(true) => served += 1,
+            // never completed the handshake: not a leader session
+            Ok(false) => {}
+            Err(e) => {
+                crate::warn!("dspca worker: leader session ended with error: {e:#}");
+                served += 1;
+            }
+        }
+    }
+}
+
+/// One leader connection: handshake, then the request→response loop.
+/// Responses are encoded at the precision each request frame carried.
+/// Returns `Ok(false)` if the connection never completed the handshake
+/// (not a real leader), `Ok(true)` after a clean session; an `Err` is a
+/// session that failed *after* the handshake.
+fn serve_leader(mut stream: TcpStream) -> Result<bool> {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+    let _ = stream.set_write_timeout(Some(WORKER_WRITE_TIMEOUT));
+    let init = match read_frame(&mut stream) {
+        Ok(body) => match decode_init(&body) {
+            Ok(init) => init,
+            Err(e) => {
+                crate::warn!("dspca worker: rejected a non-leader connection: {e:#}");
+                return Ok(false);
+            }
+        },
+        Err(e) => {
+            crate::debug!("dspca worker: connection dropped before handshake: {e}");
+            return Ok(false);
+        }
+    };
+    let shard = Shard::new(init.n, init.d, init.data);
+    let mut rng = worker_rng(init.worker_id, init.wseed);
+    // oracle construction failure is surfaced per-request (mirroring the
+    // in-proc worker thread) instead of killing the session silently
+    let mut oracle: std::result::Result<Box<dyn ComputeOracle>, String> =
+        init.oracle.build().map_err(|e| format!("oracle init failed: {e}"));
+    write_frame(&mut stream, &encode_ack(init.worker_id)).context("sending handshake ack")?;
+    let _ = stream.set_read_timeout(None);
+    loop {
+        let body = match read_frame(&mut stream) {
+            Ok(b) => b,
+            // leader hung up (cluster dropped, process died): session over
+            Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(true),
+            Err(e) => return Err(e).context("reading request frame"),
+        };
+        let (seq, prec, req) = decode_request(&body)?;
+        let resp = match &mut oracle {
+            Ok(oracle) => match handle_request(oracle.as_mut(), &shard, &mut rng, req) {
+                Some(resp) => resp,
+                None => return Ok(true), // Shutdown
+            },
+            Err(msg) => {
+                if matches!(req, Request::Shutdown) {
+                    return Ok(true);
+                }
+                Response::Err(msg.clone())
+            }
+        };
+        write_frame(&mut stream, &encode_response(seq, WireCodec::new(prec), &resp))
+            .context("writing response frame")?;
+    }
+}
+
+/// A set of loopback TCP workers on ephemeral localhost ports — the
+/// in-one-process stand-in for N `dspca worker --listen <addr>`
+/// terminals, used by `dspca selftest`, the E12 driver, the
+/// `bench_transport` bench and the loopback integration tests. Each
+/// worker thread serves exactly `conns` leader connections and then
+/// exits, so [`LoopbackWorkers::join`] always returns.
+pub struct LoopbackWorkers {
+    addrs: Vec<String>,
+    handles: Vec<JoinHandle<Result<()>>>,
+}
+
+impl LoopbackWorkers {
+    /// Bind `m` ephemeral localhost listeners and serve `conns` leader
+    /// connections each on background threads.
+    pub fn spawn(m: usize, conns: usize) -> Result<LoopbackWorkers> {
+        let mut addrs = Vec::with_capacity(m);
+        let mut handles = Vec::with_capacity(m);
+        for i in 0..m {
+            let listener =
+                TcpListener::bind("127.0.0.1:0").context("binding loopback listener")?;
+            addrs.push(listener.local_addr().context("loopback local addr")?.to_string());
+            let handle = std::thread::Builder::new()
+                .name(format!("dspca-loopback-worker-{i}"))
+                .spawn(move || serve_worker(listener, Some(conns)))
+                .context("spawning loopback worker thread")?;
+            handles.push(handle);
+        }
+        Ok(LoopbackWorkers { addrs, handles })
+    }
+
+    /// The bound `host:port` addresses, in worker order.
+    pub fn addrs(&self) -> &[String] {
+        &self.addrs
+    }
+
+    /// A [`TransportSpec::Tcp`] pointing at these workers.
+    pub fn spec(&self) -> TransportSpec {
+        TransportSpec::Tcp { workers: self.addrs.clone() }
+    }
+
+    /// Join every worker thread, surfacing the first worker error. Call
+    /// after dropping the cluster(s) that connected to them.
+    pub fn join(self) -> Result<()> {
+        for h in self.handles {
+            match h.join() {
+                Ok(r) => r?,
+                Err(_) => bail!("loopback worker thread panicked"),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tiny_shards(m: usize) -> Vec<Arc<Shard>> {
+        let mut rng = Pcg64::new(17);
+        (0..m)
+            .map(|_| Arc::new(Shard::new(5, 3, (0..15).map(|_| rng.next_gaussian()).collect())))
+            .collect()
+    }
+
+    #[test]
+    fn init_frame_roundtrips_for_both_oracle_specs() {
+        for oracle in [
+            OracleSpec::Native,
+            OracleSpec::Pjrt { artifact_dir: "artifacts/aot".to_string() },
+        ] {
+            let init = Init {
+                worker_id: 3,
+                wseed: 0xfeed,
+                oracle: oracle.clone(),
+                n: 2,
+                d: 3,
+                data: vec![1.0, -2.5, 0.25, 3.0, -0.5, 9.0],
+            };
+            let body = encode_init(&init);
+            let back = decode_init(&body).unwrap();
+            assert_eq!(back.worker_id, 3);
+            assert_eq!(back.wseed, 0xfeed);
+            assert_eq!((back.n, back.d), (2, 3));
+            assert_eq!(back.data, init.data);
+            match (&back.oracle, &oracle) {
+                (OracleSpec::Native, OracleSpec::Native) => {}
+                (
+                    OracleSpec::Pjrt { artifact_dir: a },
+                    OracleSpec::Pjrt { artifact_dir: b },
+                ) => assert_eq!(a, b),
+                _ => panic!("oracle spec changed across the handshake"),
+            }
+            // truncation errors, never panics
+            for cut in 0..body.len() {
+                assert!(decode_init(&body[..cut]).is_err());
+            }
+        }
+        // ack roundtrip + identity check
+        let ack = encode_ack(2);
+        assert!(decode_ack(&ack, 2).is_ok());
+        assert!(decode_ack(&ack, 1).is_err(), "ack must carry the right worker id");
+    }
+
+    #[test]
+    fn leader_and_worker_speak_over_a_real_socket() {
+        let workers = LoopbackWorkers::spawn(2, 1).unwrap();
+        let mut t = TcpTransport::connect(
+            workers.addrs(),
+            tiny_shards(2),
+            &OracleSpec::Native,
+            42,
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        assert_eq!(t.name(), "tcp");
+        t.send(0, 7, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
+        t.send(1, 7, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
+        let mut got = [false, false];
+        for _ in 0..2 {
+            let (id, seq, resp) = t.recv_timeout(Duration::from_secs(30)).unwrap();
+            assert_eq!(seq, 7, "workers echo the sequence number");
+            assert!(matches!(resp, Response::Vector(ref v) if v.len() == 3));
+            got[id] = true;
+        }
+        assert!(got[0] && got[1]);
+        t.shutdown();
+        t.shutdown(); // idempotent
+        workers.join().unwrap();
+    }
+
+    #[test]
+    fn connecting_to_a_dead_port_names_the_peer() {
+        // bind-then-drop guarantees an unused port
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let err = TcpTransport::connect(
+            &[addr.clone()],
+            tiny_shards(1),
+            &OracleSpec::Native,
+            1,
+            Duration::from_secs(5),
+        )
+        .map(|_| ())
+        .unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker 0"), "{msg}");
+        assert!(msg.contains(&addr), "{msg}");
+    }
+
+    #[test]
+    fn partial_connect_failure_tears_down_reached_peers() {
+        // worker 0 is real, worker 1 is a dead port: connect must fail
+        // naming worker 1 AND release worker 0 (socket closed, reader
+        // joined) so its serve loop completes instead of wedging
+        let good = LoopbackWorkers::spawn(1, 1).unwrap();
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let addrs = vec![good.addrs()[0].clone(), dead];
+        let err = TcpTransport::connect(
+            &addrs,
+            tiny_shards(2),
+            &OracleSpec::Native,
+            1,
+            Duration::from_secs(5),
+        )
+        .map(|_| ())
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("worker 1"), "{err:#}");
+        good.join().unwrap();
+    }
+
+    #[test]
+    fn address_count_must_match_machine_count() {
+        let err = TcpTransport::connect(
+            &["127.0.0.1:1".to_string()],
+            tiny_shards(2),
+            &OracleSpec::Native,
+            1,
+            Duration::from_secs(5),
+        )
+        .map(|_| ())
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("one address per machine"), "{err}");
+    }
+
+    #[test]
+    fn worker_replies_at_the_request_frame_precision() {
+        let workers = LoopbackWorkers::spawn(1, 1).unwrap();
+        let mut t = TcpTransport::connect(
+            workers.addrs(),
+            tiny_shards(1),
+            &OracleSpec::Native,
+            3,
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        // a bf16 request comes back as a bf16-gridded response: every
+        // delivered value must be exactly representable in bf16
+        let mut v = vec![0.731, -0.25, 1.0001];
+        WirePrecision::Bf16.quantize(&mut v);
+        t.send(0, 1, WirePrecision::Bf16, &Request::CovMatVec(v)).unwrap();
+        let (_, _, resp) = t.recv_timeout(Duration::from_secs(30)).unwrap();
+        let Response::Vector(out) = resp else { panic!("expected a vector reply") };
+        for x in &out {
+            let mut q = [*x];
+            WirePrecision::Bf16.quantize(&mut q);
+            assert_eq!(q[0].to_bits(), x.to_bits(), "{x} is not on the bf16 grid");
+        }
+        t.shutdown();
+        workers.join().unwrap();
+    }
+}

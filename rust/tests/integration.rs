@@ -651,6 +651,88 @@ fn sni_eps_controls_accuracy() {
     );
 }
 
+// ---------------------------------------------------------------------
+// Transport frame properties (the ISSUE 4 satellite): every message
+// variant survives the wire bit-for-bit, and the decoder never panics.
+// ---------------------------------------------------------------------
+
+/// Propcheck: every `Request`/`Response` variant — error replies and
+/// the `CovMatMat` block shapes included — survives whole-message frame
+/// encode→decode bit-for-bit under each `WirePrecision` (payloads on
+/// the codec grid, as the session layer ships them), and decode rejects
+/// truncated or length-mismatched frames with an error, never a panic.
+#[test]
+fn prop_message_frames_roundtrip_bit_for_bit_under_every_codec() {
+    use dspca::cluster::{
+        decode_request, decode_response, encode_request, encode_response, Request, Response,
+    };
+    propcheck(Config::default().cases(12), "message frame roundtrip", |g| {
+        let prec = [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16]
+            [g.usize_in(0, 2)];
+        let codec = WireCodec::new(prec);
+        let d = g.usize_in(1, 12);
+        let k = g.usize_in(1, 4);
+        let seq = g.rng().next_u64();
+        // payloads pre-quantized to the codec grid — exactly what the
+        // session layer hands the transport after transcoding
+        let quant = |mut v: Vec<f64>| {
+            prec.quantize(&mut v);
+            v
+        };
+        let requests = vec![
+            Request::CovMatVec(quant(g.gaussian_vec(d))),
+            Request::CovMatMat { rows: d, cols: k, data: quant(g.gaussian_vec(d * k)) },
+            Request::LocalTopEigvec { unbiased_signs: g.bool() },
+            Request::Gram,
+            Request::LocalTopK { k },
+            Request::OjaPass {
+                w: quant(g.gaussian_vec(d)),
+                eta0: g.f64_in(0.01, 2.0),
+                t0: g.f64_in(1.0, 50.0),
+                t_start: g.rng().next_u64() % 100_000,
+            },
+            Request::Shutdown,
+        ];
+        for req in &requests {
+            let body = encode_request(seq, codec, req);
+            let (seq2, prec2, back) = decode_request(&body).unwrap();
+            assert_eq!(seq2, seq, "sequence number survives");
+            assert_eq!(prec2, prec, "precision tag survives");
+            assert_eq!(&back, req, "{prec:?} request changed across the wire");
+            // bit-for-bit on the payload words, not just PartialEq
+            if let (Some(a), Some(b)) = (req.payload(), back.payload()) {
+                for (x, y) in a.iter().zip(b) {
+                    assert_eq!(x.to_bits(), y.to_bits());
+                }
+            }
+            // truncation at every cut the generator picks: an error,
+            // never a panic
+            let cut = g.usize_in(0, body.len() - 1);
+            assert!(decode_request(&body[..cut]).is_err(), "prefix of {cut} bytes accepted");
+            // trailing garbage is a length mismatch
+            let mut longer = body.clone();
+            longer.push(0);
+            assert!(decode_request(&longer).is_err(), "trailing byte accepted");
+        }
+        let responses = vec![
+            Response::Vector(quant(g.gaussian_vec(d))),
+            Response::Mat { rows: d, cols: k, data: quant(g.gaussian_vec(d * k)) },
+            Response::Err(format!("worker {} failed: bad rank", g.usize_in(0, 9))),
+        ];
+        for resp in &responses {
+            let body = encode_response(seq, codec, resp);
+            let (seq2, prec2, back) = decode_response(&body).unwrap();
+            assert_eq!((seq2, prec2), (seq, prec));
+            assert_eq!(&back, resp, "{prec:?} response changed across the wire");
+            let cut = g.usize_in(0, body.len() - 1);
+            assert!(decode_response(&body[..cut]).is_err());
+            let mut longer = body.clone();
+            longer.push(0);
+            assert!(decode_response(&longer).is_err());
+        }
+    });
+}
+
 #[test]
 fn eps_erm_bound_is_respected_in_practice() {
     // Lemma 1's bound is loose but must upper-bound the measured

@@ -1,0 +1,225 @@
+//! ISSUE 4 acceptance: the cluster over real TCP loopback sockets.
+//!
+//! Boots TCP workers on ephemeral localhost ports (thread-hosted
+//! `serve_worker` loops — the same code `dspca worker --listen` runs —
+//! plus one test that spawns actual `dspca worker` **processes**) and
+//! asserts the transport contract: same seed ⇒ same estimates and a
+//! `CommStats` bill identical (rounds, messages, bytes) to the in-proc
+//! run, for the power method, the block collective, a figure1-style
+//! sweep, and the concurrent lossless+bf16 two-tenant serve invariant.
+
+use dspca::cluster::{Cluster, CommStats, OracleSpec, WireCodec, WirePrecision};
+use dspca::coordinator::{Algorithm, DistributedPower, QuantizedPower, SignFixedAverage};
+use dspca::data::{CovModel, Distribution};
+use dspca::linalg::Matrix;
+use dspca::propcheck::{run as propcheck, Config};
+use dspca::serve::{serve, Job};
+use dspca::transport::{LoopbackWorkers, TransportSpec};
+
+fn fig1_dist(d: usize, seed: u64) -> impl Distribution {
+    CovModel::paper_fig1(d, seed).gaussian()
+}
+
+/// THE acceptance test: 3 TCP workers on ephemeral localhost ports run
+/// `DistributedPower` and one block (`dist_matmat`) collective with a
+/// bill equal to the in-proc bill for the same seed — and bit-identical
+/// numerics.
+#[test]
+fn three_tcp_workers_match_inproc_bills_for_power_and_block_collective() {
+    let (d, m, n, seed) = (10usize, 3usize, 80usize, 0x7c1u64);
+    let dist = fig1_dist(d, 3);
+    let block = Matrix::from_vec(d, 2, (0..2 * d).map(|i| (i as f64 * 0.3).sin()).collect());
+
+    let inproc = Cluster::generate(&dist, m, n, seed).unwrap();
+    assert_eq!(inproc.transport_name(), "inproc");
+    let ref_power = DistributedPower::default().run(&inproc.session()).unwrap();
+    let s = inproc.session();
+    let ref_block = s.dist_matmat(&block).unwrap();
+    let ref_block_bill = s.close();
+    drop(inproc);
+
+    let workers = LoopbackWorkers::spawn(m, 1).unwrap();
+    let tcp =
+        Cluster::generate_on(&dist, m, n, seed, OracleSpec::Native, &workers.spec()).unwrap();
+    assert_eq!(tcp.transport_name(), "tcp");
+    let tcp_power = DistributedPower::default().run(&tcp.session()).unwrap();
+    assert_eq!(tcp_power.comm, ref_power.comm, "power bill must be backend-invariant");
+    assert_eq!(tcp_power.w, ref_power.w, "power estimate must be bit-identical over TCP");
+    let s = tcp.session();
+    let tcp_block = s.dist_matmat(&block).unwrap();
+    assert_eq!(tcp_block.data(), ref_block.data(), "block result bit-identical over TCP");
+    assert_eq!(s.close(), ref_block_bill, "block bill identical over TCP");
+    drop(tcp);
+    workers.join().unwrap();
+}
+
+/// A figure1-style sweep over TCP loopback produces the identical CSV:
+/// the leader reconnects to the same worker set for every run's
+/// cluster, and every estimator (including the sign-randomized ones —
+/// worker coins ship with the handshake seed) reproduces in-proc.
+#[test]
+fn figure1_style_sweep_over_tcp_matches_inproc_csv() {
+    use dspca::experiments::figure1::{run, Fig1Config, Fig1Dist};
+    let mut cfg = Fig1Config {
+        d: 8,
+        m: 3,
+        n_list: vec![30],
+        runs: 2,
+        seed: 11,
+        dist: Fig1Dist::Gaussian,
+        oracle: OracleSpec::Native,
+        transport: TransportSpec::InProc,
+    };
+    let reference = run(&cfg).unwrap().render();
+    // runs × |n_list| clusters connect in sequence: 2 leader
+    // connections per worker
+    let workers = LoopbackWorkers::spawn(3, 2).unwrap();
+    cfg.transport = workers.spec();
+    let over_tcp = run(&cfg).unwrap().render();
+    assert_eq!(over_tcp, reference, "figure1 CSV must be identical over TCP loopback");
+    workers.join().unwrap();
+}
+
+/// The two-tenant serve invariant on TCP: a lossless and a bf16 tenant
+/// running concurrently through the scheduler each bill exactly their
+/// solo in-proc bill, and Σ bills == the aggregate window.
+#[test]
+fn concurrent_lossless_and_bf16_tenants_bill_like_solo_on_tcp() {
+    let (d, m, n, seed) = (10usize, 3usize, 80usize, 0x5eu64);
+    let dist = fig1_dist(d, 7);
+    let inproc = Cluster::generate(&dist, m, n, seed).unwrap();
+    let solo_power = DistributedPower::default().run(&inproc.session()).unwrap();
+    let solo_quant = QuantizedPower::new(WirePrecision::Bf16).run(&inproc.session()).unwrap();
+    assert!(solo_power.comm.bytes > 0 && solo_quant.comm.bytes > 0);
+    drop(inproc);
+
+    let workers = LoopbackWorkers::spawn(m, 1).unwrap();
+    let tcp =
+        Cluster::generate_on(&dist, m, n, seed, OracleSpec::Native, &workers.spec()).unwrap();
+    let agg0 = tcp.aggregate_stats();
+    let report = serve(
+        &tcp,
+        vec![
+            Job::new("lossless-power", Box::new(DistributedPower::default())),
+            Job::new("bf16-power", Box::new(QuantizedPower::new(WirePrecision::Bf16))),
+        ],
+        2,
+    )
+    .unwrap();
+    for j in &report.jobs {
+        assert!(j.succeeded(), "{}: {:?}", j.name, j.error);
+    }
+    assert_eq!(report.jobs[0].comm, solo_power.comm, "lossless tenant bill on TCP");
+    assert_eq!(report.jobs[1].comm, solo_quant.comm, "bf16 tenant bill on TCP");
+    assert!(report.accounting_exact, "Σ job bills must equal the aggregate window");
+    assert_eq!(tcp.aggregate_stats().delta_since(&agg0), report.aggregate);
+    drop(report);
+    drop(tcp);
+    workers.join().unwrap();
+}
+
+/// Propcheck: every collective × a random codec bills identically —
+/// and returns identical numbers — on both backends.
+#[test]
+fn prop_every_collective_bills_identically_on_both_backends() {
+    propcheck(Config::default().cases(4), "transport bill invariance", |g| {
+        let m = g.usize_in(1, 3);
+        let n = g.usize_in(5, 20);
+        let d = g.usize_in(2, 8);
+        let k = g.usize_in(1, d);
+        let seed = g.rng().next_u64();
+        let prec = [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16]
+            [g.usize_in(0, 2)];
+        let dist = fig1_dist(d, 9);
+        let payload = g.gaussian_vec(d);
+        let mut block = Matrix::zeros(d, k);
+        for col in 0..k {
+            block.set_col(col, &payload);
+        }
+        let run_all = |spec: &TransportSpec| -> (CommStats, Vec<f64>) {
+            let c = Cluster::generate_on(&dist, m, n, seed, OracleSpec::Native, spec).unwrap();
+            let s = c.session();
+            s.set_codec(WireCodec::new(prec));
+            let x = s.dist_matvec(&payload).unwrap();
+            s.dist_matmat(&block).unwrap();
+            s.local_top_eigvecs(true).unwrap();
+            s.local_top_k(k).unwrap();
+            s.gram_average().unwrap();
+            s.oja_chain(&payload, 0.5, 10.0).unwrap();
+            (s.close(), x)
+        };
+        let (inproc_bill, inproc_x) = run_all(&TransportSpec::InProc);
+        let workers = LoopbackWorkers::spawn(m, 1).unwrap();
+        let (tcp_bill, tcp_x) = run_all(&workers.spec());
+        workers.join().unwrap();
+        assert_eq!(inproc_bill, tcp_bill, "bills must be backend-invariant ({prec:?})");
+        assert_eq!(inproc_x, tcp_x, "collective numerics must be backend-invariant");
+    });
+}
+
+/// The multi-process deployment itself: N real `dspca worker --listen`
+/// **processes** (`--once`), a leader in this process, identical bill
+/// and estimate to in-proc, clean worker exit after the leader drops.
+#[test]
+fn real_worker_processes_complete_a_run_with_the_inproc_bill() {
+    use std::io::{BufRead, BufReader};
+    use std::process::{Child, Command, Stdio};
+    let (d, m, n, seed) = (8usize, 2usize, 60usize, 0xabcu64);
+    let bin = env!("CARGO_BIN_EXE_dspca");
+    let mut children: Vec<Child> = Vec::new();
+    let mut pipes = Vec::new(); // keep stdout pipes open for the workers' lifetime
+    let mut addrs: Vec<String> = Vec::new();
+    for _ in 0..m {
+        let mut child = Command::new(bin)
+            .args(["worker", "--listen", "127.0.0.1:0", "--once"])
+            .stdout(Stdio::piped())
+            .stderr(Stdio::null())
+            .spawn()
+            .expect("spawning a dspca worker process");
+        // first stdout line: "dspca worker listening on 127.0.0.1:PORT"
+        let mut reader = BufReader::new(child.stdout.take().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let addr = line.trim().rsplit(' ').next().unwrap_or_default().to_string();
+        assert!(addr.contains(':'), "worker did not report its address: {line:?}");
+        addrs.push(addr);
+        children.push(child);
+        pipes.push(reader);
+    }
+
+    let dist = fig1_dist(d, 3);
+    let inproc = Cluster::generate(&dist, m, n, seed).unwrap();
+    let want = SignFixedAverage.run(&inproc.session()).unwrap();
+    drop(inproc);
+
+    let spec = TransportSpec::Tcp { workers: addrs };
+    let tcp = Cluster::generate_on(&dist, m, n, seed, OracleSpec::Native, &spec).unwrap();
+    let got = SignFixedAverage.run(&tcp.session()).unwrap();
+    assert_eq!(got.comm, want.comm, "process-level TCP bill == in-proc bill");
+    assert_eq!(got.w, want.w, "process-level TCP estimate == in-proc estimate");
+    drop(tcp); // sends Shutdown; each --once worker then exits
+
+    for mut child in children {
+        let status = child.wait().unwrap();
+        assert!(status.success(), "worker process exited with {status}");
+    }
+}
+
+/// An unreachable worker is a clean construction error naming the peer
+/// and its address — not a hang, not a panic.
+#[test]
+fn unreachable_worker_is_a_clean_error_naming_the_peer() {
+    let addr = {
+        // bind-then-drop to obtain a port with no listener behind it
+        let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        l.local_addr().unwrap().to_string()
+    };
+    let dist = fig1_dist(6, 1);
+    let spec = TransportSpec::Tcp { workers: vec![addr.clone()] };
+    let err = Cluster::generate_on(&dist, 1, 20, 5, OracleSpec::Native, &spec)
+        .map(|_| ())
+        .unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("worker 0"), "{msg}");
+    assert!(msg.contains(&addr), "{msg}");
+}
