@@ -25,5 +25,6 @@ fn main() -> anyhow::Result<()> {
         table.write(format!("results/bench_figure1_{dist:?}.csv").to_lowercase())?;
     }
     println!("series CSVs in results/ — compare shape against the paper's Figure 1");
+    b.write_json("figure1", &[("d", d as f64), ("m", m as f64)])?;
     Ok(())
 }

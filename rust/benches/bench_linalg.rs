@@ -55,4 +55,6 @@ fn main() {
         use dspca::data::Distribution;
         dist_fig1.sample_shard(&mut rng, 400).n()
     });
+
+    let _ = b.write_json("linalg", &[("d", d as f64), ("n", n as f64)]);
 }

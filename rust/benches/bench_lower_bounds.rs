@@ -23,5 +23,6 @@ fn main() -> anyhow::Result<()> {
     b.record("lower_bounds/thm5", vec![t1.elapsed().as_secs_f64()]);
     println!("thm5 slope (theory -> -2): {slope:.2}");
     t5.write("results/bench_thm5.csv")?;
+    b.write_json("lower_bounds", &[("runs", cfg.runs as f64), ("delta", cfg.delta)])?;
     Ok(())
 }

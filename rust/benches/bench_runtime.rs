@@ -55,5 +55,6 @@ fn main() -> anyhow::Result<()> {
             session.dist_matvec(&v).unwrap()
         });
     }
+    b.write_json("runtime", &[("d", d as f64), ("n", n as f64)])?;
     Ok(())
 }

@@ -43,5 +43,6 @@ fn main() -> anyhow::Result<()> {
     b.record("scaling/m-sweep", vec![t1.elapsed().as_secs_f64()]);
     tm.write("results/bench_scaling_m.csv")?;
     println!("wrote results/bench_scaling_{{n,m}}.csv");
+    b.write_json("scaling", &[("d", cfg.d as f64), ("runs", cfg.runs as f64)])?;
     Ok(())
 }

@@ -87,6 +87,7 @@ fn main() -> anyhow::Result<()> {
     table.write("results/bench_solvers.csv")?;
     bench.record("solvers/ablation-total", vec![0.0]);
     println!("wrote results/bench_solvers.csv");
+    bench.write_json("solvers", &[("d", d as f64), ("m", m as f64), ("delta", delta)])?;
     Ok(())
 }
 

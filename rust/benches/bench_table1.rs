@@ -15,5 +15,6 @@ fn main() -> anyhow::Result<()> {
     let dist = dspca::data::CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x7a).gaussian();
     println!("{}", render_rows(&rows, dist.eps_erm(cfg.m, cfg.n, 0.25)));
     table.write("results/bench_table1.csv")?;
+    b.write_json("table1", &[("d", d as f64), ("m", m as f64), ("n", n as f64)])?;
     Ok(())
 }

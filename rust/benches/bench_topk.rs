@@ -40,6 +40,16 @@ fn main() -> anyhow::Result<()> {
             session.dist_matvec(&v.col(c)).unwrap();
         }
     });
+    // attach the wire cost of one k-column loop (k rounds of B(d)·(m+1))
+    session.reset_stats();
+    for c in 0..k {
+        session.dist_matvec(&v.col(c)).unwrap();
+    }
+    b.set_last_bytes(session.stats().bytes);
     println!("wrote results/bench_topk.csv");
+    b.write_json(
+        "topk",
+        &[("d", cfg.d as f64), ("m", cfg.m as f64), ("n", cfg.n as f64), ("k", k as f64)],
+    )?;
     Ok(())
 }

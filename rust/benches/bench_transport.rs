@@ -27,10 +27,26 @@ fn main() -> anyhow::Result<()> {
             let _ = session.dist_matvec(&v)?; // warm (connections, caches)
             for prec in [WirePrecision::F64, WirePrecision::Bf16] {
                 session.set_codec(WireCodec::new(prec));
+                session.reset_stats();
                 b.bench(&format!("dist_matvec/{backend}/{}/m={m}/d={d}", prec.label()), || {
                     session.dist_matvec(&v).unwrap()
                 });
+                let st = session.stats();
+                b.set_last_bytes(st.bytes / st.rounds.max(1));
             }
+            // split-phase: the same round with 8 tickets in flight —
+            // the overlap win the E12 driver gates on, here as a
+            // trackable series
+            session.set_codec(WireCodec::new(WirePrecision::F64));
+            b.bench(&format!("dist_matvec_pipe8/{backend}/f64/m={m}/d={d}"), || {
+                let mut window = std::collections::VecDeque::with_capacity(8);
+                for _ in 0..8 {
+                    window.push_back(session.dist_matvec_submit(&v).unwrap());
+                }
+                while let Some(t) = window.pop_front() {
+                    t.complete().unwrap();
+                }
+            });
             drop(session);
             drop(cluster);
             if let Some(w) = loopback {
@@ -39,12 +55,15 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    // the E12 sweep itself, reduced — asserts bill invariance inside
+    // the E12 sweep itself, reduced — asserts bill invariance and the
+    // pipelined-bill identity inside; the TCP pipeline-win gate stays
+    // off at smoke sizes
     let cfg = TransportConfig {
         d_list: if fast_mode() { vec![12] } else { vec![24, 96] },
         m: if fast_mode() { 2 } else { 4 },
         n: if fast_mode() { 50 } else { 200 },
         rounds: scaled(16).max(4),
+        assert_pipeline_win: false,
         ..Default::default()
     };
     let t0 = std::time::Instant::now();
@@ -52,5 +71,6 @@ fn main() -> anyhow::Result<()> {
     b.record("transport/sweep", vec![t0.elapsed().as_secs_f64()]);
     table.write("results/bench_transport.csv")?;
     println!("wrote results/bench_transport.csv");
+    b.write_json("transport", &[("m", m as f64), ("n", n as f64)])?;
     Ok(())
 }

@@ -54,5 +54,6 @@ fn main() -> anyhow::Result<()> {
     b.record("wire/sweep", vec![t0.elapsed().as_secs_f64()]);
     table.write("results/bench_wire.csv")?;
     println!("wrote results/bench_wire.csv");
+    b.write_json("wire", &[("d", d as f64), ("m", m as f64), ("n", n as f64)])?;
     Ok(())
 }

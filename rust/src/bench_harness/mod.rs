@@ -4,9 +4,17 @@
 //! (`harness = false`) built on this module: warmup, timed iterations,
 //! median/p95 reporting, and environment-scaled iteration counts
 //! (`DSPCA_BENCH_FAST=1` shrinks everything for CI smoke runs).
+//!
+//! Besides the stdout table, every bench finishes with
+//! [`Bencher::write_json`]: a machine-readable
+//! `results/bench_<name>.json` (name, params, per-result median/p95
+//! nanoseconds, bytes where the workload has a wire cost) so the perf
+//! trajectory can be tracked across commits instead of scraped from
+//! logs.
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// One timed measurement series.
@@ -15,6 +23,9 @@ pub struct BenchResult {
     pub name: String,
     /// Per-iteration wallclock seconds.
     pub samples: Vec<f64>,
+    /// Wire bytes per iteration, where the workload has a wire cost
+    /// (collectives, serve batches); `None` for pure-compute benches.
+    pub bytes: Option<u64>,
 }
 
 impl BenchResult {
@@ -32,6 +43,25 @@ impl BenchResult {
             fmt_dur(s.p95),
             s.n
         )
+    }
+
+    /// This result as a JSON object (durations in integer nanoseconds).
+    fn to_json(&self) -> Json {
+        let s = self.summary();
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("name".to_string(), Json::Str(self.name.clone()));
+        obj.insert("median_ns".to_string(), Json::Num((s.median * 1e9).round()));
+        obj.insert("mean_ns".to_string(), Json::Num((s.mean * 1e9).round()));
+        obj.insert("p95_ns".to_string(), Json::Num((s.p95 * 1e9).round()));
+        obj.insert("samples".to_string(), Json::Num(s.n as f64));
+        obj.insert(
+            "bytes".to_string(),
+            match self.bytes {
+                Some(b) => Json::Num(b as f64),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(obj)
     }
 }
 
@@ -106,12 +136,28 @@ impl Bencher {
             }
             samples.push(t.elapsed().as_secs_f64() / batch as f64);
         }
-        self.push(BenchResult { name: name.to_string(), samples })
+        self.push(BenchResult { name: name.to_string(), samples, bytes: None })
     }
 
     /// Record externally-measured samples (seconds per op).
     pub fn record(&mut self, name: &str, samples: Vec<f64>) -> &BenchResult {
-        self.push(BenchResult { name: name.to_string(), samples })
+        self.push(BenchResult { name: name.to_string(), samples, bytes: None })
+    }
+
+    /// [`Bencher::record`] with the per-iteration wire-byte cost
+    /// attached (collectives and serve batches have one; pure-compute
+    /// benches do not).
+    pub fn record_with_bytes(&mut self, name: &str, samples: Vec<f64>, bytes: u64) -> &BenchResult {
+        self.push(BenchResult { name: name.to_string(), samples, bytes: Some(bytes) })
+    }
+
+    /// Attach the per-iteration wire-byte cost to the most recent
+    /// result (for `bench()` workloads whose bill is read off a session
+    /// afterwards).
+    pub fn set_last_bytes(&mut self, bytes: u64) {
+        if let Some(last) = self.results.last_mut() {
+            last.bytes = Some(bytes);
+        }
     }
 
     fn push(&mut self, r: BenchResult) -> &BenchResult {
@@ -130,6 +176,38 @@ impl Bencher {
 
     pub fn results(&self) -> &[BenchResult] {
         &self.results
+    }
+
+    /// Render everything recorded so far as the machine-readable bench
+    /// report: `{bench, fast_mode, params, results: [...]}` with
+    /// durations in nanoseconds. `params` carries the workload knobs
+    /// the bench ran with (free-form key → number).
+    pub fn to_json(&self, bench: &str, params: &[(&str, f64)]) -> Json {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert("bench".to_string(), Json::Str(bench.to_string()));
+        obj.insert("fast_mode".to_string(), Json::Bool(fast_mode()));
+        let mut p = std::collections::BTreeMap::new();
+        for (k, v) in params {
+            p.insert((*k).to_string(), Json::Num(*v));
+        }
+        obj.insert("params".to_string(), Json::Obj(p));
+        obj.insert(
+            "results".to_string(),
+            Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+        );
+        Json::Obj(obj)
+    }
+
+    /// Write `results/bench_<name>.json` (creating `results/`) and
+    /// return the path — called by every bench binary after its stdout
+    /// table, so `BENCH_*.json` trajectories are populated on each run,
+    /// fast mode included.
+    pub fn write_json(&self, bench: &str, params: &[(&str, f64)]) -> std::io::Result<String> {
+        let path = format!("results/bench_{bench}.json");
+        std::fs::create_dir_all("results")?;
+        std::fs::write(&path, format!("{}\n", self.to_json(bench, params)))?;
+        println!("wrote {path}");
+        Ok(path)
     }
 }
 
@@ -160,6 +238,36 @@ mod tests {
         b.record("ext", vec![0.5, 1.0, 1.5]);
         assert_eq!(b.results().len(), 1);
         assert_eq!(b.results()[0].summary().median, 1.0);
+    }
+
+    #[test]
+    fn json_report_is_parseable_and_carries_the_schema() {
+        let mut b = Bencher::new();
+        b.record("plain", vec![1e-3, 2e-3]);
+        b.record_with_bytes("wired", vec![5e-4], 4096);
+        let j = b.to_json("unit", &[("d", 8.0), ("m", 3.0)]);
+        // round-trips through the in-tree parser
+        let back = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(back.get("params").unwrap().get("d").unwrap().as_f64().unwrap(), 8.0);
+        let results = back.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").unwrap().as_str().unwrap(), "plain");
+        assert_eq!(results[0].get("bytes").unwrap(), &Json::Null);
+        // 1.5ms median -> nanoseconds
+        assert_eq!(results[0].get("median_ns").unwrap().as_f64().unwrap(), 1.5e6);
+        assert_eq!(results[1].get("bytes").unwrap().as_f64().unwrap(), 4096.0);
+        assert!(results[1].get("p95_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn set_last_bytes_attaches_to_most_recent() {
+        let mut b = Bencher::new();
+        b.record("a", vec![1.0]);
+        b.record("b", vec![1.0]);
+        b.set_last_bytes(77);
+        assert_eq!(b.results()[0].bytes, None);
+        assert_eq!(b.results()[1].bytes, Some(77));
     }
 
     #[test]

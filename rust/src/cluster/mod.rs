@@ -17,17 +17,22 @@
 //! communication accounting** on every primitive (`live` = machines not
 //! killed).
 //!
-//! **Tenancy.** [`Cluster`] is `Sync` and holds no per-query state: the
-//! billing counters, the wire codec, and the collective API all live on
-//! the per-tenant [`Session`] ([`Cluster::session`]). Any number of
-//! leader threads can run queries concurrently against one shared
-//! cluster; wire access serializes at exchange (round) granularity, the
-//! cluster routes late replies back to the issuing session by the
-//! sequence number every worker echoes, and each session's bill is
-//! exactly what the same query would pay running alone. The cluster
-//! keeps one monotonic [`Cluster::aggregate_stats`] ledger equal to the
-//! sum of all traffic its sessions ever billed. The `serve` module
-//! schedules whole job queues over this substrate.
+//! **Tenancy & split-phase collectives.** [`Cluster`] is `Sync` and
+//! holds no per-query state: the billing counters, the wire codec, and
+//! the collective API all live on the per-tenant [`Session`]
+//! ([`Cluster::session`]). A collective is **split-phase**: submit
+//! ([`Session::submit`] → [`Ticket`]) sends every request under a
+//! short-held send lock and bills the outbound traffic as it goes;
+//! complete ([`Ticket::complete`]) parks on the reply **router**, which
+//! drains the one shared reply stream and delivers every response by
+//! its echoed sequence number to the issuing ticket's slot — billing
+//! the issuing session on arrival. Nothing holds the wire across a
+//! reply wait, so concurrent tenants' rounds — and one algorithm's
+//! independent rounds — genuinely overlap on the wire, while each
+//! session's bill stays exactly what the same query would pay running
+//! alone. The cluster keeps one monotonic [`Cluster::aggregate_stats`]
+//! ledger equal to the sum of all traffic its sessions ever billed. The
+//! `serve` module schedules whole job queues over this substrate.
 //!
 //! Every request/response payload passes through the owning session's
 //! [`WireCodec`] (default: lossless f64), and `CommStats.bytes` is the
@@ -73,7 +78,7 @@ pub(crate) mod worker;
 
 pub use comm::CommStats;
 pub use message::{Request, Response};
-pub use session::Session;
+pub use session::{MatmatTicket, MatvecTicket, Session, Ticket};
 pub use wire::{
     decode_request, decode_response, encode_request, encode_response, Frame, WireCodec,
     WirePrecision,
@@ -82,19 +87,22 @@ pub use worker::{ComputeOracle, NativeOracle, OracleSpec};
 
 use std::collections::{HashMap, HashSet};
 use std::sync::atomic::AtomicU64;
-use std::sync::{Arc, Mutex, Weak};
-use std::time::Duration;
+use std::sync::{mpsc, Arc, Condvar, Mutex, TryLockError, Weak};
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::data::{Distribution, Shard};
 use crate::rng::Pcg64;
-use crate::transport::{InProcTransport, TcpTransport, Transport, TransportSpec, CONTROL_SEQ};
+use crate::transport::{
+    recv_reply, InProcTransport, RecvError, TcpTransport, Transport, TransportSpec, CONTROL_SEQ,
+};
 
 use session::SessionCore;
 
-/// Max wall time to wait for any single worker response (also the TCP
-/// backend's write deadline).
+/// Max wall time to wait for any single worker response (refreshed per
+/// arrival — the per-exchange *compute* deadline; socket I/O deadlines
+/// are the transport's `io_timeout`).
 const EXCHANGE_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// How many exchanges an in-flight straggler record survives. A reply
@@ -107,28 +115,60 @@ const EXCHANGE_TIMEOUT: Duration = Duration::from_secs(120);
 /// session happens to drain it would corrupt that tenant's bill).
 const INFLIGHT_RETENTION: u64 = 1024;
 
-/// Everything that touches the shared wire, behind one lock so an
-/// exchange (send-all + drain-all) is a single critical section and
-/// `Cluster` is `Sync`. Concurrent sessions serialize here at round
-/// granularity.
-struct WireState {
-    /// The pluggable message substrate ([`crate::transport`]): in-proc
-    /// `mpsc` channels or real TCP sockets, chosen at construction via
-    /// [`TransportSpec`]. The cluster and session layers are
-    /// transport-generic; billing happens above this line, so bills are
-    /// backend-invariant.
-    transport: Box<dyn Transport>,
-    /// Provenance for exchanges that failed before draining (timeout /
-    /// dead send): codec width the round shipped under, outstanding
-    /// reply count, and a weak handle to the issuing session — so a
-    /// straggler reply is billed to the tenant whose round it belongs
-    /// to (not whichever tenant drains next), or dropped cleanly if
-    /// that session has been closed. Empty in every fully-drained
-    /// (i.e. normal) history.
+/// The reply **router**: the single delivery path for every worker
+/// response, on every backend. Replies arrive on one shared transport
+/// stream; whichever completing thread currently holds [`Router::rx`]
+/// (the *driver*) drains it and routes each reply by its echoed
+/// sequence number — into the open ticket's parking slot (billing the
+/// issuing session as the bytes arrive), onto the straggler path for a
+/// retired ticket, or to the floor for an unattributable orphan. This
+/// generalizes the old straggler-drain special case into *the* way
+/// replies are delivered: tickets from any number of sessions can be in
+/// flight at once, and nobody holds a lock across a network wait except
+/// the driver, which works for everyone while it waits.
+struct Router {
+    state: Mutex<RouterState>,
+    /// Notified whenever a reply is routed or a driver retires, so
+    /// parked completers re-check their slots (and elect a new driver).
+    cv: Condvar,
+    /// The transport's shared reply stream. Held only by the current
+    /// driver; never held while the router's `state` lock is held.
+    rx: Mutex<mpsc::Receiver<(usize, u64, Response)>>,
+}
+
+/// Routing tables: open tickets' parking slots plus retired exchanges'
+/// straggler provenance.
+struct RouterState {
+    /// One slot per in-flight ticket, keyed by exchange sequence number.
+    open: HashMap<u64, Slot>,
+    /// Provenance for exchanges that retired before draining (timeout /
+    /// dead send / dropped ticket): codec width the round shipped
+    /// under, outstanding reply count, and a weak handle to the issuing
+    /// session — so a straggler reply is billed to the tenant whose
+    /// round it belongs to (not whichever tenant drains next), or
+    /// dropped cleanly if that session has been closed. Empty in every
+    /// fully-drained (i.e. normal) history.
     inflight: HashMap<u64, Inflight>,
 }
 
-/// One failed exchange's straggler-routing record.
+/// One in-flight ticket's parking slot: where the router delivers (and
+/// bills) this exchange's replies until the completer collects them.
+struct Slot {
+    /// Codec the round shipped under — response payloads are transcoded
+    /// (and billed) at this width on arrival.
+    codec: WireCodec,
+    /// The issuing session, for billing at routing time.
+    owner: Weak<SessionCore>,
+    /// Replies owed (sends that succeeded).
+    expected: usize,
+    /// Routed replies in arrival order, payloads already transcoded.
+    replies: Vec<(usize, Response)>,
+    /// Per-exchange compute deadline, refreshed on every arrival for
+    /// this slot (mirrors the old one-recv-at-a-time timeout).
+    deadline: Instant,
+}
+
+/// One retired exchange's straggler-routing record.
 struct Inflight {
     codec: WireCodec,
     outstanding: usize,
@@ -157,12 +197,19 @@ pub struct Cluster {
     /// ledger). Meter a window with [`CommStats::delta_since`].
     aggregate: Mutex<CommStats>,
     /// Cluster-wide exchange sequence namespace. Workers echo the
-    /// request's sequence number on their reply, so a straggler from a
-    /// timed-out round is recognizable — and routable to the session
-    /// that issued it — instead of being misattributed to a later
-    /// collective on the shared response channel.
+    /// request's sequence number on their reply, so every reply — on
+    /// time or straggling — is routable to the ticket (and session)
+    /// that issued it, never misattributed to a later collective on the
+    /// shared response stream.
     seq: AtomicU64,
-    wire: Mutex<WireState>,
+    /// The **send lock**: the transport's send side. Held only while a
+    /// submit's requests go out (microseconds), never across a reply
+    /// wait — which is what lets concurrent tenants' rounds, and one
+    /// algorithm's independent rounds, overlap on the wire.
+    sender: Mutex<Box<dyn Transport>>,
+    /// The reply router (see [`Router`]): owns the transport's reply
+    /// stream and delivers every response to its ticket's slot.
+    router: Router,
     /// Max wall time to wait for any single worker response.
     timeout: Duration,
 }
@@ -238,16 +285,19 @@ impl Cluster {
         }
         let m = shards.len();
         let leader_shard = Arc::clone(&shards[0]);
-        let transport: Box<dyn Transport> = match transport {
+        let mut transport: Box<dyn Transport> = match transport {
             TransportSpec::InProc => Box::new(InProcTransport::spawn(shards, &oracle, seed)?),
-            TransportSpec::Tcp { workers } => Box::new(TcpTransport::connect(
+            TransportSpec::Tcp { workers, io_timeout } => Box::new(TcpTransport::connect(
                 workers,
                 shards,
                 &oracle,
                 seed,
-                EXCHANGE_TIMEOUT,
+                *io_timeout,
             )?),
         };
+        // the router owns the reply stream from day one; the transport
+        // behind the send lock only ever sends
+        let reply_stream = transport.take_reply_stream();
         Ok(Cluster {
             m,
             n,
@@ -256,14 +306,22 @@ impl Cluster {
             dead: Mutex::new(HashSet::new()),
             aggregate: Mutex::new(CommStats::default()),
             seq: AtomicU64::new(CONTROL_SEQ),
-            wire: Mutex::new(WireState { transport, inflight: HashMap::new() }),
+            sender: Mutex::new(transport),
+            router: Router {
+                state: Mutex::new(RouterState {
+                    open: HashMap::new(),
+                    inflight: HashMap::new(),
+                }),
+                cv: Condvar::new(),
+                rx: Mutex::new(reply_stream),
+            },
             timeout: EXCHANGE_TIMEOUT,
         })
     }
 
     /// Which transport backend this cluster runs on ("inproc" / "tcp").
     pub fn transport_name(&self) -> &'static str {
-        self.wire.lock().unwrap().transport.name()
+        self.sender.lock().unwrap().name()
     }
 
     /// Open a new tenant session: its own bill, its own codec, the full
@@ -321,7 +379,7 @@ impl Cluster {
         if dead.insert(i) {
             // best effort: tell the worker (thread or remote process'
             // connection handler) to exit
-            let _ = self.wire.lock().unwrap().transport.send(
+            let _ = self.sender.lock().unwrap().send(
                 i,
                 CONTROL_SEQ,
                 WirePrecision::F64,
@@ -335,18 +393,203 @@ impl Cluster {
     pub fn live(&self) -> usize {
         self.alive_workers().len()
     }
+
+    // -----------------------------------------------------------------
+    // Reply-router engine (see [`Router`]). The session layer opens
+    // slots at submit time; these methods deliver and collect replies.
+    // -----------------------------------------------------------------
+
+    /// Deliver one reply to wherever its sequence number points: an open
+    /// ticket's slot (transcode through the round's codec, bill the
+    /// issuing session and the aggregate, park the reply, refresh the
+    /// slot deadline), a retired exchange's straggler record (bill the
+    /// issuer at the width its round shipped under, or drop unbilled if
+    /// that session closed), or — unknown seq, record aged out — the
+    /// floor. Always notifies parked completers.
+    fn route_reply(&self, id: usize, rseq: u64, mut resp: Response) {
+        let mut st = self.router.state.lock().unwrap();
+        if let Some(slot) = st.open.get_mut(&rseq) {
+            let resp_bytes = resp.payload_mut().map_or(0, |p| slot.codec.transcode(p)) as u64;
+            if let Some(owner) = slot.owner.upgrade() {
+                {
+                    let mut stats = owner.stats.lock().unwrap();
+                    stats.responses_received += 1;
+                    stats.bytes += resp_bytes;
+                }
+                let mut agg = self.aggregate.lock().unwrap();
+                agg.responses_received += 1;
+                agg.bytes += resp_bytes;
+            }
+            slot.replies.push((id, resp));
+            slot.deadline = Instant::now() + self.timeout;
+        } else {
+            // straggler from a retired exchange — possibly another
+            // session's. Bill it to the session that issued `rseq`; if
+            // that session is closed or the record was pruned, drop the
+            // reply unbilled.
+            let mut record = None;
+            if let Some(rec) = st.inflight.get_mut(&rseq) {
+                rec.outstanding -= 1;
+                record = Some((rec.codec, rec.owner.clone(), rec.outstanding == 0));
+            }
+            if let Some((stale_codec, owner, emptied)) = record {
+                if emptied {
+                    st.inflight.remove(&rseq);
+                }
+                if let Some(owner) = owner.upgrade() {
+                    let stale_bytes =
+                        resp.payload().map_or(0, |p| stale_codec.frame_bytes(p.len())) as u64;
+                    {
+                        let mut stats = owner.stats.lock().unwrap();
+                        stats.responses_received += 1;
+                        stats.bytes += stale_bytes;
+                    }
+                    let mut agg = self.aggregate.lock().unwrap();
+                    agg.responses_received += 1;
+                    agg.bytes += stale_bytes;
+                }
+            }
+        }
+        drop(st);
+        self.router.cv.notify_all();
+    }
+
+    /// Move an open slot to the straggler table (timeout, send failure,
+    /// dropped ticket): replies still owed become an [`Inflight`] record
+    /// so they are billed to this issuer — not misdelivered — when they
+    /// eventually arrive. Caller holds the router state lock.
+    fn retire_slot_locked(st: &mut RouterState, seq: u64) {
+        if let Some(slot) = st.open.remove(&seq) {
+            let outstanding = slot.expected - slot.replies.len();
+            if outstanding > 0 {
+                prune_inflight(&mut st.inflight, seq);
+                st.inflight
+                    .insert(seq, Inflight { codec: slot.codec, outstanding, owner: slot.owner });
+            }
+        }
+    }
+
+    /// Retire a ticket's slot (used by `Ticket::drop` and the failure
+    /// paths) and wake parked completers.
+    pub(crate) fn retire_ticket(&self, seq: u64) {
+        let mut st = self.router.state.lock().unwrap();
+        Self::retire_slot_locked(&mut st, seq);
+        drop(st);
+        self.router.cv.notify_all();
+    }
+
+    /// Block until ticket `seq`'s slot holds every owed reply, driving
+    /// the router while waiting. Cooperative delivery: whichever
+    /// completer acquires the reply stream becomes the *driver* and
+    /// routes **every** arriving reply (its own and other tenants'); the
+    /// rest park on the condvar until a route or a driver hand-off wakes
+    /// them. On timeout/disconnect the slot is retired to the straggler
+    /// table and the same error the old drain loop produced is returned.
+    fn await_ticket(&self, seq: u64) -> Result<Vec<(usize, Response)>> {
+        loop {
+            let mut st = self.router.state.lock().unwrap();
+            loop {
+                let slot = st.open.get(&seq).expect("await_ticket: no slot for ticket");
+                if slot.replies.len() == slot.expected {
+                    let slot = st.open.remove(&seq).expect("slot vanished");
+                    drop(st);
+                    // a parked completer may need to take over driving
+                    self.router.cv.notify_all();
+                    return Ok(slot.replies);
+                }
+                let now = Instant::now();
+                let deadline = slot.deadline;
+                // a panicked driver poisons the stream lock but not the
+                // stream; recover the guard and keep delivering
+                let rx_guard = match self.router.rx.try_lock() {
+                    Ok(guard) => Some(guard),
+                    Err(TryLockError::Poisoned(poisoned)) => Some(poisoned.into_inner()),
+                    Err(TryLockError::WouldBlock) => None,
+                };
+                match rx_guard {
+                    Some(rx) => {
+                        if now >= deadline {
+                            // deadline passed with the stream idle: one
+                            // non-blocking drain so replies that arrived
+                            // while nobody was driving still land before
+                            // we give up
+                            drop(st);
+                            let mut routed = false;
+                            while let Ok((id, rseq, resp)) = rx.try_recv() {
+                                routed = true;
+                                self.route_reply(id, rseq, resp);
+                            }
+                            drop(rx);
+                            if routed {
+                                break; // re-check the slot
+                            }
+                            self.retire_ticket(seq);
+                            bail!(
+                                "waiting for worker responses: {}",
+                                RecvError::TimedOut(self.timeout)
+                            );
+                        }
+                        // we are the driver: wait for traffic on behalf
+                        // of every open ticket, holding no state lock
+                        drop(st);
+                        match recv_reply(&rx, deadline - now) {
+                            Ok((id, rseq, resp)) => {
+                                // route while still holding the stream:
+                                // once rx is released, everything
+                                // received has been delivered, so a
+                                // newly elected driver can trust the
+                                // slot check it made before electing
+                                // itself — releasing first would open a
+                                // window where a completer blocks in
+                                // recv on a quiesced stream while its
+                                // own last reply is routed behind it
+                                // (no condvar reaches a recv sleeper)
+                                self.route_reply(id, rseq, resp);
+                                drop(rx);
+                            }
+                            Err(RecvError::TimedOut(_)) => drop(rx),
+                            Err(e @ RecvError::Disconnected(_)) => {
+                                drop(rx);
+                                self.retire_ticket(seq);
+                                bail!("waiting for worker responses: {e}");
+                            }
+                        }
+                        break; // re-enter with a fresh state lock
+                    }
+                    None => {
+                        if now >= deadline {
+                            // the active driver routed nothing for us in
+                            // time — same timeout as if we drove
+                            Self::retire_slot_locked(&mut st, seq);
+                            drop(st);
+                            self.router.cv.notify_all();
+                            bail!(
+                                "waiting for worker responses: {}",
+                                RecvError::TimedOut(self.timeout)
+                            );
+                        }
+                        // park until the driver routes something or
+                        // retires; re-check the slot on every wake
+                        let (guard, _) =
+                            self.router.cv.wait_timeout(st, deadline - now).unwrap();
+                        st = guard;
+                    }
+                }
+            }
+        }
+    }
 }
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        let wire = match self.wire.get_mut() {
-            Ok(w) => w,
+        let transport = match self.sender.get_mut() {
+            Ok(t) => t,
             Err(poisoned) => poisoned.into_inner(),
         };
         // idempotent on every backend: workers are told to stop, threads
         // and sockets are released; a second shutdown (e.g. the
         // transport's own Drop) is a no-op
-        wire.transport.shutdown();
+        transport.shutdown();
     }
 }
 
@@ -361,6 +604,23 @@ mod tests {
         let dist = CovModel::paper_fig1(8, 3).gaussian();
         let v1 = dist.v1().to_vec();
         (Cluster::generate(&dist, m, n, 42).unwrap(), v1)
+    }
+
+    /// Route anything still sitting in the reply stream (tests only):
+    /// per-worker reply order is FIFO on every backend, so after a
+    /// collective completes, any straggler sent *before* it is already
+    /// routed — this drain just makes that deterministic at the margin.
+    fn drain_router(c: &Cluster) {
+        loop {
+            let rx = c.router.rx.lock().unwrap();
+            match rx.try_recv() {
+                Ok((id, seq, resp)) => {
+                    drop(rx);
+                    c.route_reply(id, seq, resp);
+                }
+                Err(_) => break,
+            }
+        }
     }
 
     /// Assert the cluster is shareable across threads (the tentpole's
@@ -697,8 +957,8 @@ mod tests {
         let g = drainer.gram_average().unwrap();
         let want = g.matvec(&v);
         {
-            let mut wire = c.wire.lock().unwrap();
-            wire.inflight.insert(
+            let mut st = c.router.state.lock().unwrap();
+            st.inflight.insert(
                 1000,
                 Inflight {
                     codec: WireCodec::new(WirePrecision::Bf16),
@@ -706,7 +966,9 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            wire.transport
+            c.sender
+                .lock()
+                .unwrap()
                 .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
                 .unwrap();
         }
@@ -716,6 +978,10 @@ mod tests {
         for i in 0..8 {
             assert!((got[i] - want[i]).abs() < 1e-10, "straggler poisoned the result");
         }
+        // the drainer's complete() drives the router; the straggler may
+        // interleave before or after its own replies, but always routes
+        // to the issuer — drain any residue deterministically
+        drain_router(&c);
         let db = drainer.stats();
         assert_eq!(db.requests_sent, 2);
         assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
@@ -725,7 +991,10 @@ mod tests {
         let ib = issuer.stats();
         assert_eq!(ib.responses_received, 1, "the straggler bills to its issuer on arrival");
         assert_eq!(ib.bytes, (2 * 8) as u64, "at the bf16 width its round shipped under");
-        assert!(c.wire.lock().unwrap().inflight.is_empty(), "straggler record is forgotten");
+        assert!(
+            c.router.state.lock().unwrap().inflight.is_empty(),
+            "straggler record is forgotten"
+        );
     }
 
     #[test]
@@ -739,8 +1008,8 @@ mod tests {
         let v = vec![0.3; 8];
         {
             let issuer = c.session();
-            let mut wire = c.wire.lock().unwrap();
-            wire.inflight.insert(
+            let mut st = c.router.state.lock().unwrap();
+            st.inflight.insert(
                 2000,
                 Inflight {
                     codec: WireCodec::new(WirePrecision::Bf16),
@@ -748,7 +1017,9 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            wire.transport
+            c.sender
+                .lock()
+                .unwrap()
                 .send(1, 2000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
                 .unwrap();
             // `issuer` drops here: the session is closed
@@ -757,13 +1028,156 @@ mod tests {
         let drainer = c.session();
         let got = drainer.dist_matvec(&v).unwrap();
         assert_eq!(got.len(), 8);
+        drain_router(&c);
         let db = drainer.stats();
         assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
         assert_eq!(db.bytes, (8 * 8 * 3) as u64);
         // aggregate window == drainer's bill: the orphan straggler was
         // dropped without billing anyone
         assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
-        assert!(c.wire.lock().unwrap().inflight.is_empty(), "orphan record is forgotten");
+        assert!(
+            c.router.state.lock().unwrap().inflight.is_empty(),
+            "orphan record is forgotten"
+        );
+    }
+
+    // -----------------------------------------------------------------
+    // Split-phase (ISSUE 5 tentpole): tickets, overlap, routing.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn a_single_session_keeps_multiple_rounds_in_flight() {
+        let (c, _) = small_cluster(3, 20);
+        let s = c.session();
+        let v = vec![1.0; 8];
+        let t1 = s.dist_matvec_submit(&v).unwrap();
+        let t2 = s.dist_matvec_submit(&v).unwrap();
+        let t3 = s.dist_matvec_submit(&v).unwrap();
+        // complete out of submission order: delivery is by echoed seq,
+        // not by who drains first
+        let r3 = t3.complete().unwrap();
+        let r1 = t1.complete().unwrap();
+        let r2 = t2.complete().unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(r2, r3);
+        let st = s.stats();
+        // the tentpole contract: overlap changes wall clock, not one
+        // counter — three pipelined rounds bill like three serial ones
+        let serial = c.session();
+        for _ in 0..3 {
+            serial.dist_matvec(&v).unwrap();
+        }
+        assert_eq!(st, serial.stats(), "pipelined bill != serial bill");
+        assert_eq!(st.rounds, 3);
+        assert_eq!(st.requests_sent, 9);
+        assert_eq!(st.responses_received, 9);
+        assert_eq!(st.bytes, 3 * 8 * 8 * 4, "3 rounds of B(d)·(live+1)");
+    }
+
+    #[test]
+    fn interleaved_tenant_tickets_bill_like_solo_runs() {
+        // two tenants with different codecs, rounds genuinely in flight
+        // at once (submit/submit/complete/complete from one thread —
+        // deterministic overlap, no scheduler luck needed)
+        let (c, _) = small_cluster(2, 20);
+        let v = vec![0.5; 8];
+        let solo_lossless = {
+            let s = c.session();
+            s.dist_matvec(&v).unwrap();
+            s.close()
+        };
+        let solo_bf16 = {
+            let s = c.session();
+            s.set_codec(WireCodec::new(WirePrecision::Bf16));
+            s.dist_matvec(&v).unwrap();
+            s.close()
+        };
+        let agg0 = c.aggregate_stats();
+        let a = c.session();
+        let b = c.session();
+        b.set_codec(WireCodec::new(WirePrecision::Bf16));
+        let ta = a.dist_matvec_submit(&v).unwrap();
+        let tb = b.dist_matvec_submit(&v).unwrap();
+        // B completes first: its driver routes A's replies into A's
+        // slot along the way, billing A at A's codec width
+        let _ = tb.complete().unwrap();
+        let _ = ta.complete().unwrap();
+        let (ba, bb) = (a.close(), b.close());
+        assert_eq!(ba, solo_lossless, "tenant A's overlapped bill != its solo bill");
+        assert_eq!(bb, solo_bf16, "tenant B's overlapped bill != its solo bill");
+        let mut sum = ba;
+        sum.merge(&bb);
+        assert_eq!(c.aggregate_stats().delta_since(&agg0), sum);
+    }
+
+    #[test]
+    fn dropping_an_uncompleted_ticket_retires_to_the_straggler_path() {
+        let (c, _) = small_cluster(2, 20);
+        let s = c.session();
+        let v = vec![1.0; 8];
+        {
+            let _abandoned = s.dist_matvec_submit(&v).unwrap();
+            // dropped here without complete()
+        }
+        // the round was billed at submit; its replies are drained by
+        // whoever runs the router next and billed to the issuer
+        let s2 = c.session();
+        let out = s2.dist_matvec(&v).unwrap();
+        assert_eq!(out.len(), 8);
+        drain_router(&c);
+        assert_eq!(s2.stats().responses_received, 2, "drainer pays only its own replies");
+        let st = s.stats();
+        assert_eq!(st.rounds, 1, "the abandoned round was still billed at submit");
+        assert_eq!(st.requests_sent, 2);
+        assert_eq!(st.responses_received, 2, "its replies bill to the issuer on arrival");
+        assert!(c.router.state.lock().unwrap().inflight.is_empty());
+        assert!(c.router.state.lock().unwrap().open.is_empty());
+    }
+
+    #[test]
+    fn aged_out_inflight_record_drops_stragglers_unbilled_with_tickets_open() {
+        // ISSUE 5 satellite: a straggler whose inflight record aged past
+        // the retention horizon while *other tickets were open* is
+        // drained-unbilled, and the aggregate identity stays exact.
+        let (c, _) = small_cluster(2, 20);
+        let v = vec![0.3; 8];
+        let issuer = c.session();
+        {
+            let mut st = c.router.state.lock().unwrap();
+            st.inflight.insert(
+                1,
+                Inflight {
+                    codec: WireCodec::new(WirePrecision::Bf16),
+                    outstanding: 1,
+                    owner: Arc::downgrade(&issuer.core),
+                },
+            );
+            c.sender
+                .lock()
+                .unwrap()
+                .send(1, 1, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+                .unwrap();
+        }
+        // burn the sequence namespace past the retention horizon, so
+        // the next submit prunes the record before its reply lands
+        c.seq.fetch_add(INFLIGHT_RETENTION + 8, std::sync::atomic::Ordering::Relaxed);
+        let agg0 = c.aggregate_stats();
+        let drainer = c.session();
+        let ticket = drainer.dist_matvec_submit(&v).unwrap();
+        assert!(
+            !c.router.state.lock().unwrap().inflight.contains_key(&1),
+            "submit must prune records older than the horizon"
+        );
+        let got = ticket.complete().unwrap();
+        assert_eq!(got.len(), 8);
+        drain_router(&c);
+        let db = drainer.stats();
+        assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
+        assert_eq!(db.bytes, (8 * 8 * 3) as u64);
+        assert_eq!(issuer.stats(), CommStats::default(), "aged straggler bills nobody");
+        // aggregate window == the drainer's bill alone: exact identity
+        assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
+        assert!(c.router.state.lock().unwrap().inflight.is_empty());
     }
 
     #[test]
@@ -869,11 +1283,10 @@ mod tests {
         let (c, _) = small_cluster(2, 10);
         assert_eq!(c.transport_name(), "inproc");
         {
-            let mut wire = c.wire.lock().unwrap();
-            wire.transport.shutdown();
-            wire.transport.shutdown(); // double shutdown is a no-op
-            let err = wire
-                .transport
+            let mut sender = c.sender.lock().unwrap();
+            sender.shutdown();
+            sender.shutdown(); // double shutdown is a no-op
+            let err = sender
                 .send(1, 1, WirePrecision::F64, &Request::CovMatVec(vec![1.0; 8]))
                 .unwrap_err()
                 .to_string();
@@ -894,9 +1307,10 @@ mod tests {
         // a clean exit, not a wedged accept loop.
         let (c, workers) = tcp_cluster(2, 20);
         {
-            let mut wire = c.wire.lock().unwrap();
-            // a request whose reply no exchange will ever drain
-            wire.transport
+            // a request whose reply no ticket will ever collect
+            c.sender
+                .lock()
+                .unwrap()
                 .send(1, 999, WirePrecision::F64, &Request::CovMatVec(vec![1.0; 8]))
                 .unwrap();
         }
@@ -915,8 +1329,8 @@ mod tests {
         let g = drainer.gram_average().unwrap();
         let want = g.matvec(&v);
         {
-            let mut wire = c.wire.lock().unwrap();
-            wire.inflight.insert(
+            let mut st = c.router.state.lock().unwrap();
+            st.inflight.insert(
                 1000,
                 Inflight {
                     codec: WireCodec::new(WirePrecision::Bf16),
@@ -924,7 +1338,9 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            wire.transport
+            c.sender
+                .lock()
+                .unwrap()
                 .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
                 .unwrap();
         }
@@ -934,13 +1350,17 @@ mod tests {
         for i in 0..8 {
             assert!((got[i] - want[i]).abs() < 1e-10, "straggler poisoned the result");
         }
+        drain_router(&c);
         let db = drainer.stats();
         assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
         assert_eq!(db.bytes, (8 * 8 * 3) as u64);
         let ib = issuer.stats();
         assert_eq!(ib.responses_received, 1, "the straggler bills to its issuer on arrival");
         assert_eq!(ib.bytes, (2 * 8) as u64, "at the bf16 width its round shipped under");
-        assert!(c.wire.lock().unwrap().inflight.is_empty(), "straggler record is forgotten");
+        assert!(
+            c.router.state.lock().unwrap().inflight.is_empty(),
+            "straggler record is forgotten"
+        );
         drop(issuer);
         drop(drainer);
         drop(c);
@@ -957,8 +1377,8 @@ mod tests {
         let v = vec![0.3; 8];
         {
             let issuer = c.session();
-            let mut wire = c.wire.lock().unwrap();
-            wire.inflight.insert(
+            let mut st = c.router.state.lock().unwrap();
+            st.inflight.insert(
                 2000,
                 Inflight {
                     codec: WireCodec::new(WirePrecision::Bf16),
@@ -966,7 +1386,9 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            wire.transport
+            c.sender
+                .lock()
+                .unwrap()
                 .send(1, 2000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
                 .unwrap();
             // `issuer` drops here: the session is closed
@@ -975,11 +1397,58 @@ mod tests {
         let drainer = c.session();
         let got = drainer.dist_matvec(&v).unwrap();
         assert_eq!(got.len(), 8);
+        drain_router(&c);
         let db = drainer.stats();
         assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
         assert_eq!(db.bytes, (8 * 8 * 3) as u64);
         assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
-        assert!(c.wire.lock().unwrap().inflight.is_empty(), "orphan record is forgotten");
+        assert!(
+            c.router.state.lock().unwrap().inflight.is_empty(),
+            "orphan record is forgotten"
+        );
+        drop(drainer);
+        drop(c);
+        workers.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_aged_out_inflight_record_drops_stragglers_unbilled_with_tickets_open() {
+        // the retention-horizon aging contract over real sockets,
+        // mirroring the in-proc test above
+        let (c, workers) = tcp_cluster(2, 20);
+        let v = vec![0.3; 8];
+        let issuer = c.session();
+        {
+            let mut st = c.router.state.lock().unwrap();
+            st.inflight.insert(
+                1,
+                Inflight {
+                    codec: WireCodec::new(WirePrecision::Bf16),
+                    outstanding: 1,
+                    owner: Arc::downgrade(&issuer.core),
+                },
+            );
+            c.sender
+                .lock()
+                .unwrap()
+                .send(1, 1, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+                .unwrap();
+        }
+        c.seq.fetch_add(INFLIGHT_RETENTION + 8, std::sync::atomic::Ordering::Relaxed);
+        let agg0 = c.aggregate_stats();
+        let drainer = c.session();
+        let ticket = drainer.dist_matvec_submit(&v).unwrap();
+        assert!(!c.router.state.lock().unwrap().inflight.contains_key(&1));
+        let got = ticket.complete().unwrap();
+        assert_eq!(got.len(), 8);
+        drain_router(&c);
+        let db = drainer.stats();
+        assert_eq!(db.responses_received, 2, "drainer pays only its own replies");
+        assert_eq!(db.bytes, (8 * 8 * 3) as u64);
+        assert_eq!(issuer.stats(), CommStats::default(), "aged straggler bills nobody");
+        assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
+        assert!(c.router.state.lock().unwrap().inflight.is_empty());
+        drop(issuer);
         drop(drainer);
         drop(c);
         workers.join().unwrap();

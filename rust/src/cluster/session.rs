@@ -8,24 +8,40 @@
 //! messages, tracks worker liveness, and keeps the monotonic aggregate
 //! bill ([`Cluster::aggregate_stats`]).
 //!
-//! **Concurrency model.** `Cluster` is `Sync`, so any number of leader
-//! threads may hold sessions on one cluster. Wire access is serialized
-//! at exchange granularity: one collective = one atomic
-//! send-all/drain-all critical section under the cluster's wire lock,
-//! so concurrent tenants interleave *between* rounds, never inside one.
-//! Consequently every session's bill is identical to the bill the same
-//! query would produce running alone — the multi-tenant accounting
-//! invariant the propcheck properties in `tests/integration.rs` assert.
+//! **Concurrency model — split-phase collectives.** `Cluster` is
+//! `Sync`, so any number of leader threads may hold sessions on one
+//! cluster. A collective is two phases: [`Session::submit`] sends one
+//! request to each worker under the cluster's **send lock** — held only
+//! while the requests go out — and returns a [`Ticket`];
+//! [`Ticket::complete`] collects the replies from the cluster's reply
+//! **router**, which drains the shared reply stream on behalf of every
+//! open ticket and routes each response by its echoed sequence number.
+//! Nothing holds the wire across a reply wait, so concurrent tenants'
+//! rounds overlap on the wire, and a single algorithm can keep several
+//! independent rounds in flight at once (the split-phase collective
+//! wrappers [`Session::dist_matvec_submit`] /
+//! [`Session::dist_matmat_submit`] are the pipelining hooks the
+//! coordinator hot loops use). `exchange` — submit immediately followed
+//! by complete — is still what every one-round collective compiles to,
+//! so nothing changes for serial callers. Overlap changes *when* a
+//! round's messages move, never what they cost: every session's bill is
+//! identical to the bill the same query would produce running alone —
+//! the multi-tenant accounting invariant the propcheck properties in
+//! `tests/integration.rs` and `tests/concurrency_stress.rs` assert.
 //!
-//! **Billing.** Each increment is applied twice: to the session's own
-//! stats and to the cluster aggregate, so the aggregate is always the
-//! sum of everything ever billed to any session — and equals the sum
-//! of the current session bills whenever none has been reset
-//! (stragglers from a closed session are dropped unbilled on both
-//! sides — see the exchange internals below).
+//! **Billing.** Outbound traffic (round, request messages, broadcast
+//! frame) is billed at submit time; each response message is billed by
+//! the router as it arrives, to the session whose ticket it answers —
+//! both always applied twice, to the session's own stats and to the
+//! cluster aggregate, so the aggregate is always the sum of everything
+//! ever billed to any session — and equals the sum of the current
+//! session bills whenever none has been reset (stragglers from a closed
+//! session are dropped unbilled on both sides — see the router in
+//! `cluster/mod.rs`).
 
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
@@ -35,7 +51,7 @@ use crate::linalg::Matrix;
 use super::comm::CommStats;
 use super::message::{Request, Response};
 use super::wire::WireCodec;
-use super::{prune_inflight, Cluster, Inflight};
+use super::{prune_inflight, Cluster, Slot};
 
 /// The session state shared with the cluster's straggler-routing table:
 /// inflight records hold a `Weak` to this, so a late reply can be billed
@@ -168,167 +184,138 @@ impl<'c> Session<'c> {
         f(&mut self.cluster.aggregate.lock().unwrap());
     }
 
-    /// Send `req` to a set of workers and collect their responses in
-    /// worker order. One call is one synchronous round, executed as one
-    /// critical section under the cluster's wire lock (concurrent
-    /// sessions serialize at round granularity). The round, every
-    /// request message, and every response message are billed **as they
-    /// happen** — to this session and the cluster aggregate — so a
-    /// timed-out or partially-failed collective still pays for the
-    /// traffic it actually generated.
+    /// **Submit phase** of a collective round: send `req` to every
+    /// worker in `workers` under the cluster's send lock — held only
+    /// while the requests go out — and return a [`Ticket`] for the
+    /// replies. The round, its broadcast frame, and every request
+    /// message are billed here, **as they happen** — to this session
+    /// and the cluster aggregate — so a collective that later times out
+    /// or fails still pays for the traffic it actually generated. The
+    /// request payload passes through this session's [`WireCodec`] once
+    /// (the §2.1 model bills a broadcast against the channel, not each
+    /// recipient).
     ///
-    /// Payloads pass through this session's [`WireCodec`] in both
-    /// directions: the request payload is encoded once — the §2.1 model
-    /// bills a broadcast against the channel, not per recipient — and
-    /// each response payload on arrival, with `CommStats.bytes` advanced
-    /// by the encoded frames' sizes and the decoded (possibly lossy)
-    /// values delivered onward.
+    /// If a send fails partway, the workers already reached may still
+    /// reply; their provenance is recorded so those stragglers bill to
+    /// this session at this round's codec width (or are dropped
+    /// unbilled if the session closes first), and the error names the
+    /// unreachable peer.
     ///
-    /// On worker failure, the **full** response set is still drained
-    /// before the error is reported: the response channel is shared by
-    /// every session, so bailing early would leave the surviving
-    /// workers' replies queued. Replies that *do* outlive their exchange
-    /// (a worker stalls past the timeout and answers later) are caught
-    /// by the sequence number every worker echoes: a stale reply is
-    /// billed on arrival **to the session that issued that sequence
-    /// number** — it really crossed the wire, at the codec width its own
-    /// round shipped under (tracked per failed exchange in the wire
-    /// state's inflight map) — whichever tenant happens to drain it. If
-    /// the issuing session has since been closed (or the record aged
-    /// out), the reply is dropped unbilled on both ledgers, keeping
-    /// "sum of session bills == aggregate" exact.
-    fn exchange(&self, workers: &[usize], req: &Request) -> Result<Vec<Response>> {
+    /// Any number of tickets — from one session or many — may be in
+    /// flight at once; replies are routed to the issuing ticket by the
+    /// sequence number every worker echoes. Complete each ticket with
+    /// [`Ticket::complete`]; a ticket dropped uncompleted retires onto
+    /// the straggler path, never poisoning later collectives.
+    pub fn submit(&self, workers: &[usize], req: &Request) -> Result<Ticket<'_, 'c>> {
+        if workers.is_empty() {
+            bail!("submit requires at least one worker");
+        }
+        // one request per distinct worker: a repeated id would fold two
+        // replies into one reassembly slot, and an out-of-range id has
+        // no peer — both are caller bugs surfaced as clean errors
+        // before anything hits the wire
+        let mut seen = vec![false; self.m()];
+        for &w in workers {
+            if w >= self.m() {
+                bail!("submit: no such worker {w} (m = {})", self.m());
+            }
+            if std::mem::replace(&mut seen[w], true) {
+                bail!("submit: worker {w} listed twice");
+            }
+        }
         let codec = self.codec();
         let seq = self.cluster.seq.fetch_add(1, Ordering::Relaxed) + 1;
-        let mut guard = self.cluster.wire.lock().unwrap();
-        let wire = &mut *guard;
         let mut req = req.clone();
         let req_bytes = req.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
+        // open the routing slot before the first byte moves: a reply can
+        // be routed by a concurrent driver the instant the send lands
+        {
+            let mut st = self.cluster.router.state.lock().unwrap();
+            prune_inflight(&mut st.inflight, seq);
+            st.open.insert(
+                seq,
+                Slot {
+                    codec,
+                    owner: Arc::downgrade(&self.core),
+                    expected: workers.len(),
+                    replies: Vec::with_capacity(workers.len()),
+                    deadline: Instant::now() + self.cluster.timeout,
+                },
+            );
+        }
         let mut sent = 0usize;
-        for &w in workers {
-            // the transport moves the message (typed enum in-proc,
-            // length-prefixed byte frame over TCP — encoded at this
-            // session's wire precision); billing stays up here, so the
-            // bill is backend-invariant
-            if let Err(e) = wire.transport.send(w, seq, codec.precision(), &req) {
-                if sent > 0 {
-                    // the workers already reached may still reply; leave
-                    // a record so their stragglers bill to this session
-                    // at this width
-                    prune_inflight(&mut wire.inflight, seq);
-                    wire.inflight.insert(
-                        seq,
-                        Inflight { codec, outstanding: sent, owner: Arc::downgrade(&self.core) },
-                    );
+        let send_err = {
+            let mut sender = self.cluster.sender.lock().unwrap();
+            let mut err = None;
+            for &w in workers {
+                // the transport moves the message (typed enum in-proc,
+                // length-prefixed byte frame over TCP — encoded at this
+                // session's wire precision); billing stays up here, so
+                // the bill is backend-invariant
+                if let Err(e) = sender.send(w, seq, codec.precision(), &req) {
+                    err = Some(e);
+                    break;
                 }
-                return Err(e);
-            }
-            sent += 1;
-            let first = sent == 1;
-            self.bill(|st| {
-                st.requests_sent += 1;
-                if first {
-                    // the round and its broadcast frame hit the wire with
-                    // the first successful send, and are billed once
-                    // regardless of fan-out; if no send succeeds, no
-                    // traffic existed and nothing is billed
-                    st.rounds += 1;
-                    st.bytes += req_bytes;
-                }
-            });
-        }
-        let mut responses: Vec<Option<Response>> = vec![None; self.cluster.m()];
-        let mut first_err: Option<(usize, String)> = None;
-        let mut got = 0usize;
-        while got < workers.len() {
-            let (id, rseq, mut resp) = match wire.transport.recv_timeout(self.cluster.timeout) {
-                Ok(msg) => msg,
-                Err(e) => {
-                    prune_inflight(&mut wire.inflight, seq);
-                    wire.inflight.insert(
-                        seq,
-                        Inflight {
-                            codec,
-                            outstanding: workers.len() - got,
-                            owner: Arc::downgrade(&self.core),
-                        },
-                    );
-                    bail!("waiting for worker responses: {e}");
-                }
-            };
-            if rseq != seq {
-                // straggler from an exchange that already failed —
-                // possibly another session's. Bill it to the session
-                // that issued `rseq`, at the width its own round shipped
-                // under; if that session is closed or the record was
-                // pruned, drop the reply unbilled.
-                let mut record = None;
-                if let Some(rec) = wire.inflight.get_mut(&rseq) {
-                    rec.outstanding -= 1;
-                    record = Some((rec.codec, rec.owner.clone(), rec.outstanding == 0));
-                }
-                if let Some((stale_codec, owner, emptied)) = record {
-                    if emptied {
-                        wire.inflight.remove(&rseq);
+                sent += 1;
+                let first = sent == 1;
+                self.bill(|st| {
+                    st.requests_sent += 1;
+                    if first {
+                        // the round and its broadcast frame hit the wire
+                        // with the first successful send, and are billed
+                        // once regardless of fan-out; if no send
+                        // succeeds, no traffic existed and nothing is
+                        // billed
+                        st.rounds += 1;
+                        st.bytes += req_bytes;
                     }
-                    if let Some(owner) = owner.upgrade() {
-                        let stale_bytes =
-                            resp.payload().map_or(0, |p| stale_codec.frame_bytes(p.len())) as u64;
-                        {
-                            let mut st = owner.stats.lock().unwrap();
-                            st.responses_received += 1;
-                            st.bytes += stale_bytes;
-                        }
-                        let mut agg = self.cluster.aggregate.lock().unwrap();
-                        agg.responses_received += 1;
-                        agg.bytes += stale_bytes;
-                    }
-                }
-                continue;
+                });
             }
-            let resp_bytes = resp.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
-            self.bill(|st| {
-                st.responses_received += 1;
-                st.bytes += resp_bytes;
-            });
-            got += 1;
-            if let Response::Err(e) = resp {
-                if first_err.is_none() {
-                    first_err = Some((id, e));
-                }
-                continue;
+            err
+        };
+        if let Some(e) = send_err {
+            // only the workers actually reached owe replies; retire the
+            // slot so their stragglers bill here (or nowhere, if we
+            // reached nobody)
+            let mut st = self.cluster.router.state.lock().unwrap();
+            if let Some(slot) = st.open.get_mut(&seq) {
+                slot.expected = sent;
             }
-            responses[id] = Some(resp);
+            Cluster::retire_slot_locked(&mut st, seq);
+            drop(st);
+            self.cluster.router.cv.notify_all();
+            return Err(e);
         }
-        if let Some((id, e)) = first_err {
-            bail!("worker {id} failed: {e}");
-        }
-        Ok(workers.iter().map(|&w| responses[w].take().expect("missing response")).collect())
+        Ok(Ticket { session: self, seq, workers: workers.to_vec(), done: false })
+    }
+
+    /// Submit immediately followed by complete: the serial one-round
+    /// collective every non-pipelined call site compiles to.
+    fn exchange(&self, workers: &[usize], req: &Request) -> Result<Vec<Response>> {
+        self.submit(workers, req)?.complete()
     }
 
     /// Distributed covariance matvec: `Xhat v = (1/m) sum_i Xhat_i v`.
     /// One communication round; the core primitive of the power method,
     /// Lanczos and the Shift-and-Invert solver (Algorithm 2, lines 2–6).
     pub fn dist_matvec(&self, v: &[f64]) -> Result<Vec<f64>> {
+        self.dist_matvec_submit(v)?.complete()
+    }
+
+    /// Split-phase [`Session::dist_matvec`]: put the round on the wire
+    /// and return immediately. Complete the returned ticket for the
+    /// averaged result; until then the round is in flight and the
+    /// leader is free — to compute, or to submit further independent
+    /// rounds (pipelining). Billing is identical to the serial call.
+    pub fn dist_matvec_submit(&self, v: &[f64]) -> Result<MatvecTicket<'_, 'c>> {
         let d = self.d();
         assert_eq!(v.len(), d);
         let workers = self.cluster.alive_workers();
         if workers.is_empty() {
             bail!("no live workers");
         }
-        let resps = self.exchange(&workers, &Request::CovMatVec(v.to_vec()))?;
-        let mut acc = vec![0.0; d];
-        for r in resps {
-            let Response::Vector(x) = r else { bail!("unexpected response type") };
-            crate::linalg::vec_ops::axpy(&mut acc, 1.0, &x);
-        }
-        crate::linalg::vec_ops::scale(&mut acc, 1.0 / workers.len() as f64);
-        self.bill(|st| {
-            st.matvec_products += 1;
-            st.vectors_broadcast += 1;
-            st.vectors_gathered += workers.len() as u64;
-        });
-        Ok(acc)
+        let inner = self.submit(&workers, &Request::CovMatVec(v.to_vec()))?;
+        Ok(MatvecTicket { inner, d })
     }
 
     /// Distributed covariance **block** product:
@@ -342,6 +329,14 @@ impl<'c> Session<'c> {
     /// identical (up to summation order) to `k` [`Session::dist_matvec`]
     /// calls on the columns of `V`; billed as `k` matvec products.
     pub fn dist_matmat(&self, v: &Matrix) -> Result<Matrix> {
+        self.dist_matmat_submit(v)?.complete()
+    }
+
+    /// Split-phase [`Session::dist_matmat`]: put the block round on the
+    /// wire and return immediately — the pipelining hook the subspace
+    /// hot loops use to overlap the in-flight round with leader-side QR
+    /// of the previous block. Billing is identical to the serial call.
+    pub fn dist_matmat_submit(&self, v: &Matrix) -> Result<MatmatTicket<'_, 'c>> {
         let d = self.d();
         assert_eq!(v.rows(), d, "dist_matmat: block must be d x k");
         let k = v.cols();
@@ -351,22 +346,8 @@ impl<'c> Session<'c> {
             bail!("no live workers");
         }
         let req = Request::CovMatMat { rows: d, cols: k, data: v.data().to_vec() };
-        let resps = self.exchange(&workers, &req)?;
-        let mut acc = Matrix::zeros(d, k);
-        for r in resps {
-            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
-            if rows != d || cols != k {
-                bail!("dist_matmat: worker returned {rows}x{cols}, expected {d}x{k}");
-            }
-            acc.axpy_mat(1.0, &Matrix::from_vec(rows, cols, data));
-        }
-        acc.scale_mut(1.0 / workers.len() as f64);
-        self.bill(|st| {
-            st.matvec_products += k as u64;
-            st.vectors_broadcast += k as u64;
-            st.vectors_gathered += (workers.len() * k) as u64;
-        });
-        Ok(acc)
+        let inner = self.submit(&workers, &req)?;
+        Ok(MatmatTicket { inner, d, k })
     }
 
     /// Gather every machine's local ERM solution (leading eigenvector of
@@ -451,5 +432,149 @@ impl<'c> Session<'c> {
             });
         }
         Ok(w)
+    }
+}
+
+/// A submitted, in-flight collective round: the handle returned by
+/// [`Session::submit`]. The requests are on the wire (and billed); the
+/// replies accumulate in the reply router's slot for this ticket until
+/// [`Ticket::complete`] collects them. Multiple tickets — from one
+/// session or many — may be open at once; each is identified by the
+/// cluster-unique sequence number its workers echo.
+///
+/// Dropping a ticket without completing it retires the round onto the
+/// straggler path: replies still owed are drained by whoever runs the
+/// router next and billed to this session on arrival (or dropped
+/// unbilled once the session closes) — exactly like a timed-out round,
+/// and never able to poison a later collective.
+pub struct Ticket<'s, 'c> {
+    session: &'s Session<'c>,
+    seq: u64,
+    /// Request order — replies are reassembled into this order.
+    workers: Vec<usize>,
+    done: bool,
+}
+
+impl Ticket<'_, '_> {
+    /// The cluster-unique sequence number of this round.
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// The workers this round was sent to, in request order.
+    pub fn workers(&self) -> &[usize] {
+        &self.workers
+    }
+
+    /// **Complete phase**: park on the reply router until every owed
+    /// reply has been routed to this ticket (driving the router while
+    /// waiting — the completer that holds the reply stream delivers
+    /// *everyone's* traffic, not just its own), then return the
+    /// responses in request order. Each response was billed to the
+    /// issuing session as it arrived, at this round's codec width.
+    ///
+    /// The full reply set is collected even when a worker reports an
+    /// error — the round's traffic all really happened — and only then
+    /// is the first worker error (in arrival order) surfaced. On
+    /// timeout or a dead transport the ticket retires onto the
+    /// straggler path and the same error the old drain loop produced is
+    /// returned.
+    pub fn complete(mut self) -> Result<Vec<Response>> {
+        self.done = true;
+        let workers = std::mem::take(&mut self.workers);
+        let session = self.session;
+        let replies = session.cluster.await_ticket(self.seq)?;
+        let mut by_worker: Vec<Option<Response>> = (0..session.m()).map(|_| None).collect();
+        let mut first_err: Option<(usize, String)> = None;
+        for (id, resp) in replies {
+            if let Response::Err(e) = resp {
+                if first_err.is_none() {
+                    first_err = Some((id, e));
+                }
+                continue;
+            }
+            by_worker[id] = Some(resp);
+        }
+        if let Some((id, e)) = first_err {
+            bail!("worker {id} failed: {e}");
+        }
+        Ok(workers.iter().map(|&w| by_worker[w].take().expect("missing response")).collect())
+    }
+}
+
+impl Drop for Ticket<'_, '_> {
+    fn drop(&mut self) {
+        if !self.done {
+            self.session.cluster.retire_ticket(self.seq);
+        }
+    }
+}
+
+/// An in-flight [`Session::dist_matvec`] round
+/// ([`Session::dist_matvec_submit`]).
+pub struct MatvecTicket<'s, 'c> {
+    inner: Ticket<'s, 'c>,
+    d: usize,
+}
+
+impl MatvecTicket<'_, '_> {
+    /// Collect the replies and return the averaged matvec, billing the
+    /// same tail counters the serial collective bills.
+    pub fn complete(self) -> Result<Vec<f64>> {
+        let MatvecTicket { inner, d } = self;
+        let session = inner.session;
+        let live = inner.workers.len();
+        let resps = inner.complete()?;
+        let mut acc = vec![0.0; d];
+        for r in resps {
+            let Response::Vector(x) = r else { bail!("unexpected response type") };
+            crate::linalg::vec_ops::axpy(&mut acc, 1.0, &x);
+        }
+        crate::linalg::vec_ops::scale(&mut acc, 1.0 / live as f64);
+        session.bill(|st| {
+            st.matvec_products += 1;
+            st.vectors_broadcast += 1;
+            st.vectors_gathered += live as u64;
+        });
+        Ok(acc)
+    }
+}
+
+/// An in-flight [`Session::dist_matmat`] block round
+/// ([`Session::dist_matmat_submit`]).
+pub struct MatmatTicket<'s, 'c> {
+    inner: Ticket<'s, 'c>,
+    d: usize,
+    k: usize,
+}
+
+impl MatmatTicket<'_, '_> {
+    /// Width of the in-flight block (columns of the submitted basis).
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Collect the replies and return the averaged block product,
+    /// billing the same tail counters the serial collective bills.
+    pub fn complete(self) -> Result<Matrix> {
+        let MatmatTicket { inner, d, k } = self;
+        let session = inner.session;
+        let live = inner.workers.len();
+        let resps = inner.complete()?;
+        let mut acc = Matrix::zeros(d, k);
+        for r in resps {
+            let Response::Mat { rows, cols, data } = r else { bail!("unexpected response type") };
+            if rows != d || cols != k {
+                bail!("dist_matmat: worker returned {rows}x{cols}, expected {d}x{k}");
+            }
+            acc.axpy_mat(1.0, &Matrix::from_vec(rows, cols, data));
+        }
+        acc.scale_mut(1.0 / live as f64);
+        session.bill(|st| {
+            st.matvec_products += k as u64;
+            st.vectors_broadcast += k as u64;
+            st.vectors_gathered += (live * k) as u64;
+        });
+        Ok(acc)
     }
 }

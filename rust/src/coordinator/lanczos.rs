@@ -357,9 +357,10 @@ mod tests {
         let dist = crate::data::CovModel::axis_aligned(sigma).gaussian();
         let c = crate::cluster::Cluster::generate(&dist, 4, 400, 73).unwrap();
         let k = 4;
-        let pow = DistributedOrthoIteration { k, max_iters: 4000, tol: 1e-24, seed: 0x9 }
-            .run_mat(&c.session())
-            .unwrap();
+        let pow =
+            DistributedOrthoIteration { k, max_iters: 4000, tol: 1e-24, seed: 0x9, pipeline: true }
+                .run_mat(&c.session())
+                .unwrap();
         let lan = BlockLanczos { k, tol: 1e-12, ..BlockLanczos::new(k) }.run_mat(&c.session()).unwrap();
         let e = subspace_error(&lan.w, &pow.w);
         assert!(e < 1e-6, "block Lanczos disagrees with converged block power: {e:.3e}");

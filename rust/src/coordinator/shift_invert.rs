@@ -45,7 +45,7 @@ use crate::linalg::vec_ops::{alignment_error, axpy, dot, normalize, scale};
 use crate::linalg::Matrix;
 
 use super::precond::Preconditioner;
-use super::solvers::{agd::agd, cg::pcg, SolveReport};
+use super::solvers::{agd::agd, cg::pcg_with, SolveReport};
 use super::{instrumented, Algorithm, Estimate};
 
 /// Which inner solver drives the linear systems (Lemma 7 allows both).
@@ -220,12 +220,25 @@ impl Algorithm for ShiftInvert {
             let mut solve_count = 0usize;
             let mut inner_iters_total = 0usize;
 
+            // Split-phase pipelining: the CG solvers spend their first
+            // operator application on `A x0 = lambda x0 - X' x0` when
+            // warm-started — and `X' x0` is lambda-independent, so the
+            // outer loops below put that distributed matvec on the wire
+            // (`dist_matvec_submit`) the moment the warm start is known,
+            // overlap the leader-side bookkeeping (normalize, drift
+            // probe, tolerance annealing, shift update) with the
+            // in-flight round, and hand the completed product in here.
+            // Assembled identically to `apply(x0)`, so the iterate
+            // sequence — and the bill — is exactly the serial run's.
+            let probes = !matches!(cfg.solver, SniSolver::Agd);
+
             // one approximate inverse application:
             // solve (lambda I - X') z = rhs to relative residual `rel_tol`
             let mut solve = |lambda: f64,
                              rhs: &[f64],
                              x0: Option<&[f64]>,
-                             rel_tol: f64|
+                             rel_tol: f64,
+                             probe: Option<Vec<f64>>|
              -> Result<(Vec<f64>, SolveReport)> {
                 let tol = rel_tol * crate::linalg::vec_ops::norm(rhs).max(1e-300);
                 let apply = |v: &[f64]| -> Vec<f64> {
@@ -235,18 +248,38 @@ impl Algorithm for ShiftInvert {
                     axpy(&mut out, -1.0, &mv);
                     out
                 };
+                // a prefetched raw matvec of x0 becomes A x0 = lambda
+                // x0 - s^2 (X x0): the same arithmetic `apply` performs
+                let ax0 = match (x0, probe) {
+                    (Some(x0), Some(raw)) => {
+                        let mut mv = raw;
+                        scale(&mut mv, s2);
+                        let mut ax = x0.to_vec();
+                        scale(&mut ax, lambda);
+                        axpy(&mut ax, -1.0, &mv);
+                        Some(ax)
+                    }
+                    _ => None,
+                };
                 let (z, rep) = match cfg.solver {
-                    SniSolver::Pcg => pcg(
+                    SniSolver::Pcg => pcg_with(
                         apply,
                         |r, out| pc.apply_inv(lambda, r, out),
                         rhs,
                         x0,
+                        ax0,
                         tol,
                         cfg.max_inner,
                     ),
-                    SniSolver::PlainCg => {
-                        pcg(apply, |r, out| out.copy_from_slice(r), rhs, x0, tol, cfg.max_inner)
-                    }
+                    SniSolver::PlainCg => pcg_with(
+                        apply,
+                        |r, out| out.copy_from_slice(r),
+                        rhs,
+                        x0,
+                        ax0,
+                        tol,
+                        cfg.max_inner,
+                    ),
                     SniSolver::Agd => {
                         // explicit Eq.-(13) transform: H = C^{-1/2} M C^{-1/2}
                         let mut c_rhs = vec![0.0; d];
@@ -291,11 +324,21 @@ impl Algorithm for ShiftInvert {
             }
             let mut outer = 0usize;
             let mut warm: Option<Vec<f64>> = None;
+            // prefetched raw dist_matvec of `warm`, for the next solve's
+            // first CG application (see `probes` above)
+            let mut prefetched: Option<Vec<f64>> = None;
             loop {
                 outer += 1;
                 // inverse power iterations with early exit (cap m1)
                 for _t in 0..m1 {
-                    let (z, _rep) = solve(lambda, &w, warm.as_deref(), phase1_tol)?;
+                    let (z, _rep) =
+                        solve(lambda, &w, warm.as_deref(), phase1_tol, prefetched.take())?;
+                    // z is the next warm start whatever happens below
+                    // (the next inner solve, or the shift-update solve),
+                    // so its matvec round can overlap the drift probe —
+                    // never wasted in this loop
+                    let ticket =
+                        if probes { Some(session.dist_matvec_submit(&z)?) } else { None };
                     let mut znorm = z.clone();
                     let nz = normalize(&mut znorm);
                     if nz == 0.0 {
@@ -304,12 +347,16 @@ impl Algorithm for ShiftInvert {
                     let drift = alignment_error(&znorm, &w);
                     warm = Some(z);
                     w = znorm;
+                    prefetched = match ticket {
+                        Some(t) => Some(t.complete()?),
+                        None => None,
+                    };
                     if drift < 1e-4 {
                         break;
                     }
                 }
                 // shift update: v_s ~= M^{-1} w_s, w^T v ~= 1/(lambda - lambda_1)
-                let (v_s, _rep) = solve(lambda, &w, warm.as_deref(), 1e-3)?;
+                let (v_s, _rep) = solve(lambda, &w, warm.as_deref(), 1e-3, prefetched.take())?;
                 let wv = dot(&w, &v_s) - eps_tilde;
                 let delta_s = if wv > 0.0 { 0.5 / wv } else { delta_tilde };
                 if delta_s <= delta_tilde || outer >= cfg.max_outer {
@@ -337,8 +384,21 @@ impl Algorithm for ShiftInvert {
             let mut phase2_tol: f64 = 1e-2;
             let mut final_iters = 0usize;
             let mut warm: Option<Vec<f64>> = None;
-            for _t in 0..m2 {
-                let (z, _rep) = solve(lambda_f, &w, warm.as_deref(), phase2_tol)?;
+            let mut prefetched: Option<Vec<f64>> = None;
+            for t in 0..m2 {
+                let (z, _rep) =
+                    solve(lambda_f, &w, warm.as_deref(), phase2_tol, prefetched.take())?;
+                // prefetch the next solve's A·z round and overlap it
+                // with the drift probe + tolerance annealing below.
+                // Speculative at the convergence boundary: if this turns
+                // out to be the last iteration, the in-flight round is
+                // completed and discarded — one extra matvec round per
+                // run, paid identically by solo and concurrent runs.
+                let ticket = if probes && t + 1 < m2 {
+                    Some(session.dist_matvec_submit(&z)?)
+                } else {
+                    None
+                };
                 let mut znorm = z.clone();
                 let nz = normalize(&mut znorm);
                 final_iters += 1;
@@ -348,6 +408,10 @@ impl Algorithm for ShiftInvert {
                 let drift = alignment_error(&znorm, &w);
                 warm = Some(z);
                 w = znorm;
+                prefetched = match ticket {
+                    Some(t) => Some(t.complete()?),
+                    None => None,
+                };
                 // exit only once the solves have annealed to full accuracy
                 // AND the iterate has stopped moving — a small drift under
                 // coarse solves is not yet evidence of convergence.

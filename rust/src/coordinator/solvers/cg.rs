@@ -33,10 +33,31 @@ fn apply_adapter<'a>(
 /// (e.g. `C^{-1}` applied through the cached eigenbasis of machine 1's
 /// covariance, see [`crate::coordinator::precond`]).
 pub fn pcg(
+    apply: impl FnMut(&[f64]) -> Vec<f64>,
+    precond: impl FnMut(&[f64], &mut [f64]),
+    b: &[f64],
+    x0: Option<&[f64]>,
+    tol: f64,
+    max_iters: usize,
+) -> (Vec<f64>, SolveReport) {
+    pcg_with(apply, precond, b, x0, None, tol, max_iters)
+}
+
+/// [`pcg`] with an optionally **precomputed** first operator
+/// application `ax0 = A x0` — the split-phase pipelining hook: a caller
+/// that knows the next solve's warm start early can put the
+/// distributed matvec for `A x0` on the wire, overlap its own
+/// leader-side work with the round, and hand the completed product in
+/// here. The iterate sequence (and the reported iteration count, which
+/// keeps counting the application — it happened, on the wire) is
+/// bit-identical to computing `A x0` inside the solve; `ax0` is
+/// ignored when `x0` is absent or zero.
+pub fn pcg_with(
     mut apply: impl FnMut(&[f64]) -> Vec<f64>,
     mut precond: impl FnMut(&[f64], &mut [f64]),
     b: &[f64],
     x0: Option<&[f64]>,
+    ax0: Option<Vec<f64>>,
     tol: f64,
     max_iters: usize,
 ) -> (Vec<f64>, SolveReport) {
@@ -51,7 +72,13 @@ pub fn pcg(
     let mut r = if x.iter().all(|&v| v == 0.0) {
         b.to_vec()
     } else {
-        let ax = apply(&x);
+        let ax = match ax0 {
+            Some(ax) => {
+                debug_assert_eq!(ax.len(), d, "pcg_with: ax0 dimension mismatch");
+                ax
+            }
+            None => apply(&x),
+        };
         iters += 1;
         let mut r = b.to_vec();
         axpy(&mut r, -1.0, &ax);
@@ -128,6 +155,24 @@ mod tests {
         assert!(rep.converged);
         assert_eq!(rep.iters, 0);
         assert_eq!(x, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn precomputed_ax0_is_bit_identical_to_inline() {
+        // the pipelining hook must not perturb the iterate sequence:
+        // handing in A·x0 produces the same solution and iteration
+        // count as computing it inside the solve
+        let a = Matrix::from_vec(3, 3, vec![4., 1., 0., 1., 3., 1., 0., 1., 2.]);
+        let b = vec![1., 0., -1.];
+        let x0 = vec![0.2, -0.1, 0.4];
+        let ident = |r: &[f64], out: &mut [f64]| out.copy_from_slice(r);
+        let (x_inline, rep_inline) = pcg(|v| a.matvec(v), ident, &b, Some(&x0), 1e-12, 50);
+        let ax0 = a.matvec(&x0);
+        let (x_pre, rep_pre) =
+            pcg_with(|v| a.matvec(v), ident, &b, Some(&x0), Some(ax0), 1e-12, 50);
+        assert_eq!(x_inline, x_pre, "iterates must be bit-identical");
+        assert_eq!(rep_inline.iters, rep_pre.iters, "the prefetched matvec still counts");
+        assert!(rep_pre.converged);
     }
 
     #[test]

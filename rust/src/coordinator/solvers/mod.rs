@@ -20,7 +20,7 @@ pub mod agd;
 pub mod cg;
 
 pub use agd::agd;
-pub use cg::{cg, pcg};
+pub use cg::{cg, pcg, pcg_with};
 
 /// Result of an iterative solve.
 #[derive(Clone, Debug)]

@@ -98,6 +98,17 @@ impl CentralizedSubspace {
 /// and the thin QR re-orthonormalization runs at the leader for free.
 /// The seed's column-wise loop paid `k` rounds and `k` message
 /// round-trips per worker for the same numerical step.
+///
+/// **Pipelined by default** (split-phase collectives): instead of
+/// waiting for `X W` and only then running QR, the loop submits the
+/// round for the *pre-orthonormalization* block `Y_t` and computes
+/// `Y_t = Q_t R_t` while the round is in flight; when `X Y_t` arrives,
+/// the orthonormalized step is recovered leader-side as
+/// `X Q_t = (X Y_t) R_t^{-1}` (a `k x k` triangular solve — exact in
+/// exact arithmetic, the classic communication-hiding reformulation).
+/// Same iterates up to roundoff, same per-round bill; the leader-side
+/// QR is fully hidden behind the wire, plus one speculative round
+/// completed-and-discarded when the drift test stops the loop.
 #[derive(Clone, Debug)]
 pub struct DistributedOrthoIteration {
     pub k: usize,
@@ -106,11 +117,20 @@ pub struct DistributedOrthoIteration {
     /// `subspace_error(W_t, W_{t+1}) <= tol`.
     pub tol: f64,
     pub seed: u64,
+    /// Overlap each round with the previous block's QR (default). The
+    /// serialized loop is kept for A/B tests and as the fallback shape.
+    pub pipeline: bool,
 }
 
 impl DistributedOrthoIteration {
     pub fn new(k: usize) -> Self {
-        DistributedOrthoIteration { k, max_iters: 500, tol: 1e-16, seed: 0x0b10c }
+        DistributedOrthoIteration { k, max_iters: 500, tol: 1e-16, seed: 0x0b10c, pipeline: true }
+    }
+
+    /// The pre-split-phase serialized loop (complete each round before
+    /// the QR): for ablations and bill A/Bs.
+    pub fn serialized(k: usize) -> Self {
+        DistributedOrthoIteration { pipeline: false, ..Self::new(k) }
     }
 
     pub fn run_mat(&self, session: &Session<'_>) -> Result<SubspaceEstimate> {
@@ -122,23 +142,97 @@ impl DistributedOrthoIteration {
             let mut rng = Pcg64::new(self.seed);
             let g = Matrix::from_vec(d, self.k, (0..d * self.k).map(|_| rng.next_gaussian()).collect());
             let (mut w, _) = qr_thin(&g);
+            let mut info = BTreeMap::new();
             let mut iters = 0usize;
-            for _ in 0..self.max_iters {
-                // one block round for the whole basis + leader-side QR
-                let xw = session.dist_matmat(&w)?;
-                let (q, _) = qr_thin(&xw);
+            if !self.pipeline {
+                for _ in 0..self.max_iters {
+                    // one block round for the whole basis + leader-side QR
+                    let xw = session.dist_matmat(&w)?;
+                    let (q, _) = qr_thin(&xw);
+                    iters += 1;
+                    let drift = subspace_error(&q, &w);
+                    w = q;
+                    if drift <= self.tol {
+                        break;
+                    }
+                }
+                info.insert("iters".into(), iters as f64);
+                return Ok((w, info));
+            }
+            // Pipelined: `y` is the pre-QR block X·Q_{t-1}; the round
+            // for X·y is in flight while the leader factors y = Q R.
+            let mut y = session.dist_matmat(&w)?; // X·Q_0: the priming round
+            for t in 0..self.max_iters {
+                let ticket = if t + 1 < self.max_iters {
+                    Some(session.dist_matmat_submit(&y)?)
+                } else {
+                    None
+                };
+                let (q, r) = qr_thin(&y); // overlapped with the round
                 iters += 1;
                 let drift = subspace_error(&q, &w);
                 w = q;
                 if drift <= self.tol {
+                    // the speculative round at the stopping boundary is
+                    // completed (its replies are real, billed traffic)
+                    // and discarded
+                    if let Some(ticket) = ticket {
+                        ticket.complete()?;
+                    }
                     break;
                 }
+                let Some(ticket) = ticket else { break };
+                let mut xy = ticket.complete()?;
+                if !apply_rinv(&mut xy, &r) {
+                    bail!("block power iterate lost rank (pipelined R-solve)");
+                }
+                y = xy; // = X·(X·Q_{t-1})·R^{-1} = X·Q_t
             }
-            let mut info = BTreeMap::new();
             info.insert("iters".into(), iters as f64);
             Ok((w, info))
         })
     }
+}
+
+/// In-place `M <- M R^{-1}` for upper-triangular `R` (column forward
+/// substitution) — the leader-side recovery step of the pipelined block
+/// iterations. Returns `false` (caller bails) when the factor is rank
+/// deficient *relative to its own scale*: dividing by a diagonal entry
+/// `~eps` below the largest one would amplify roundoff by `1/|r_jj|`
+/// and deliver a garbage block where the serialized loop (which re-QRs
+/// the raw product) would recover — better to fail loudly.
+fn apply_rinv(m: &mut Matrix, r: &Matrix) -> bool {
+    let d = m.rows();
+    let k = m.cols();
+    debug_assert_eq!(r.rows(), k);
+    debug_assert_eq!(r.cols(), k);
+    // f64::max ignores NaN, so an all-NaN diagonal lands on 0.0 here
+    let max_diag = (0..k).map(|j| r.get(j, j).abs()).fold(0.0f64, f64::max);
+    if max_diag <= 0.0 {
+        return false; // zero (or NaN) factor
+    }
+    let floor = 1e-13 * max_diag;
+    for j in 0..k {
+        let mut col = m.col(j);
+        for i in 0..j {
+            let rij = r.get(i, j);
+            if rij != 0.0 {
+                let ci = m.col(i);
+                for t in 0..d {
+                    col[t] -= rij * ci[t];
+                }
+            }
+        }
+        let rjj = r.get(j, j);
+        if rjj.is_nan() || rjj.abs() <= floor {
+            return false;
+        }
+        for x in col.iter_mut() {
+            *x /= rjj;
+        }
+        m.set_col(j, &col);
+    }
+    true
 }
 
 /// One-round estimator: leader averages the local rank-`k` projectors and
@@ -224,7 +318,17 @@ impl DeflatedShiftInvert {
                 // `dist_matmat` round per iteration for the whole batch,
                 // where the seed ran a separate power loop (one matvec
                 // round per iteration) per component.
+                //
+                // Pipelined (split-phase): the round for the *pre-QR*
+                // deflated block `Y` is in flight while the leader
+                // deflates, factors `Y = Q R` and checks drift; on
+                // arrival the orthonormalized step is recovered as
+                // `(I-P) X Q = ((I-P) X Y) R^{-1}` (deflation is linear,
+                // so it commutes with the triangular solve). One
+                // speculative round is completed-and-discarded at the
+                // convergence boundary.
                 let kb = self.k - 1;
+                let cap = 2_000usize;
                 let mut rng = Pcg64::new(self.config.seed ^ 0xb10c);
                 let gauss: Vec<f64> = (0..d * kb).map(|_| rng.next_gaussian()).collect();
                 let mut g = Matrix::from_vec(d, kb, gauss);
@@ -234,15 +338,24 @@ impl DeflatedShiftInvert {
                     g.set_col(c, &col);
                 }
                 let (mut wb, _) = qr_thin(&g);
-                let mut iters = 0usize;
-                for _ in 0..2_000 {
-                    let mut next = session.dist_matmat(&wb)?;
+                let deflate_cols = |m: &mut Matrix| {
                     for c in 0..kb {
-                        let mut col = next.col(c);
+                        let mut col = m.col(c);
                         deflate(&mut col, &basis);
-                        next.set_col(c, &col);
+                        m.set_col(c, &col);
                     }
-                    let (q, r) = qr_thin(&next);
+                };
+                // priming round: Y_1 = (I-P)·X·Q_0
+                let mut y = session.dist_matmat(&wb)?;
+                deflate_cols(&mut y);
+                let mut iters = 0usize;
+                for t in 0..cap {
+                    let ticket = if t + 1 < cap {
+                        Some(session.dist_matmat_submit(&y)?)
+                    } else {
+                        None
+                    };
+                    let (q, r) = qr_thin(&y); // overlapped with the round
                     iters += 1;
                     if (0..kb).any(|c| r.get(c, c) <= 0.0) {
                         bail!("deflated block iterate lost rank");
@@ -250,8 +363,18 @@ impl DeflatedShiftInvert {
                     let drift = subspace_error(&q, &wb);
                     wb = q;
                     if drift < 1e-18 {
+                        if let Some(ticket) = ticket {
+                            ticket.complete()?; // speculative boundary round
+                        }
                         break;
                     }
+                    let Some(ticket) = ticket else { break };
+                    let mut xy = ticket.complete()?;
+                    deflate_cols(&mut xy);
+                    if !apply_rinv(&mut xy, &r) {
+                        bail!("deflated block iterate lost rank");
+                    }
+                    y = xy; // = (I-P)·X·Q_t, pre-QR
                 }
                 info.insert("block_power_iters".into(), iters as f64);
                 for c in 0..kb {
@@ -333,19 +456,39 @@ mod tests {
         let blk = DistributedOrthoIteration::new(k).run_mat(&c.session()).unwrap();
         let e = subspace_error(&blk.w, &cen.w);
         assert!(e < 1e-8, "block power should find the pooled top-k: {e:.3e}");
-        // block protocol: ONE round per iteration, k matvecs billed per round
-        assert_eq!(blk.comm.rounds, blk.info["iters"] as u64);
+        // block protocol: ONE round per iteration, k matvecs billed per
+        // round; the pipelined loop pays exactly one extra round — the
+        // speculative block in flight when the drift test fired
+        assert_eq!(blk.comm.rounds, blk.info["iters"] as u64 + 1);
         assert_eq!(blk.comm.matvec_products, blk.comm.rounds * k as u64);
     }
 
     #[test]
+    fn pipelined_and_serialized_ortho_agree() {
+        // the R^{-1} recovery step must not change what the iteration
+        // converges to, and costs exactly one speculative round
+        let (c, _) = cluster(4, 300, 10, 47);
+        let k = 3;
+        let piped = DistributedOrthoIteration::new(k).run_mat(&c.session()).unwrap();
+        let serial = DistributedOrthoIteration::serialized(k).run_mat(&c.session()).unwrap();
+        let e = subspace_error(&piped.w, &serial.w);
+        assert!(e < 1e-10, "pipelined subspace drifted from serialized: {e:.3e}");
+        assert!(crate::linalg::qr::orthonormality_defect(&piped.w) < 1e-10);
+        assert_eq!(serial.comm.rounds, serial.info["iters"] as u64, "serial: 1 round/iter");
+    }
+
+    #[test]
     fn ortho_iteration_one_round_one_message_per_worker_per_iter() {
+        // at a fixed iteration budget (tol = 0 never fires the drift
+        // stop) the pipelined loop never speculates: bills are the
+        // serialized loop's, exactly
         let (c, _) = cluster(5, 60, 12, 41);
         let k = 4;
         let iters = 3;
-        let est = DistributedOrthoIteration { k, max_iters: iters, tol: 0.0, seed: 0x7 }
-            .run_mat(&c.session())
-            .unwrap();
+        let est =
+            DistributedOrthoIteration { k, max_iters: iters, tol: 0.0, seed: 0x7, pipeline: true }
+                .run_mat(&c.session())
+                .unwrap();
         assert_eq!(est.info["iters"], iters as f64);
         assert_eq!(est.comm.rounds, iters as u64);
         assert_eq!(est.comm.requests_sent, (iters * 5) as u64);
@@ -362,16 +505,19 @@ mod tests {
         let sni_matvecs = est.info["sni_matvecs_0"];
         let block_iters = est.info["block_power_iters"];
         assert!(block_iters >= 1.0);
+        // the pipelined block loop pays block_iters rounds plus the one
+        // speculative round in flight when the drift test fired
+        let block_rounds = block_iters + 1.0;
         // total matvec bill: component-0 solve + (k-1) per block round
         assert_eq!(
             est.comm.matvec_products as f64,
-            sni_matvecs + block_iters * (k - 1) as f64
+            sni_matvecs + block_rounds * (k - 1) as f64
         );
         // and the block rounds moved k-1 vectors per worker per round
         assert_eq!(
             est.comm.rounds as f64,
-            sni_matvecs + block_iters,
-            "every solve matvec and every block iteration is one round"
+            sni_matvecs + block_rounds,
+            "every solve matvec and every block round is one round"
         );
     }
 

@@ -35,6 +35,13 @@ pub struct ServeConfig {
     pub oracle: OracleSpec,
     /// Message substrate (per-job bills are backend-invariant).
     pub transport: TransportSpec,
+    /// The split-phase acceptance gate: with `Some(r)`, and both a
+    /// 1-tenant and a 4-tenant point in the sweep, `ensure!` that the
+    /// 4-tenant batch wallclock is at most `r ×` the 1-tenant wallclock
+    /// (rounds overlapping on the wire is exactly what buys this).
+    /// `None` skips the gate (tiny smoke configs, hosts without
+    /// parallelism).
+    pub assert_overlap: Option<f64>,
 }
 
 impl Default for ServeConfig {
@@ -48,6 +55,7 @@ impl Default for ServeConfig {
             seed: 0x5e7e,
             oracle: OracleSpec::Native,
             transport: TransportSpec::InProc,
+            assert_overlap: Some(0.7),
         }
     }
 }
@@ -75,8 +83,12 @@ pub fn job_mix(jobs: usize) -> Vec<Job> {
 }
 
 /// Run the sweep; returns a CSV with one row per tenant count:
-/// `tenants, jobs, wall_s, throughput_jps, lat_mean_s, lat_p95_s,
-/// rounds_mean, bytes_mean, err_mean`.
+/// `tenants, jobs, wall_s, speedup_vs_1, throughput_jps, lat_mean_s,
+/// lat_p95_s, rounds_mean, bytes_mean, err_mean`. `speedup_vs_1` is the
+/// overlap column the split-phase wire opened: 1-tenant batch wallclock
+/// over this row's wallclock (NaN when the sweep has no 1-tenant
+/// point). With [`ServeConfig::assert_overlap`] set, the 4-tenant
+/// point must beat the configured ratio or the driver errors.
 pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
     anyhow::ensure!(cfg.jobs >= 1, "serve sweep needs at least one job per batch");
     let dist = CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x5e).gaussian();
@@ -84,6 +96,7 @@ pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
         "tenants",
         "jobs",
         "wall_s",
+        "speedup_vs_1",
         "throughput_jps",
         "lat_mean_s",
         "lat_p95_s",
@@ -91,6 +104,10 @@ pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
         "bytes_mean",
         "err_mean",
     ]);
+    // two passes: measure every tenant count first, then emit rows — so
+    // speedup_vs_1 is filled for every row whenever the sweep has a
+    // 1-tenant point, regardless of where in the list it appears
+    let mut measured: Vec<(usize, f64, Vec<f64>)> = Vec::new();
     for &tenants in &cfg.tenants_list {
         anyhow::ensure!(tenants >= 1, "tenants must be >= 1");
         // fresh cluster per point, same seed: identical data, so the
@@ -129,22 +146,49 @@ pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
         } else {
             errs.iter().sum::<f64>() / errs.len() as f64
         };
-        table.push_nums(&[
-            tenants as f64,
-            report.jobs.len() as f64,
-            report.wall.as_secs_f64(),
-            report.throughput,
-            lat.mean,
-            lat.p95,
-            rounds_mean,
-            bytes_mean,
-            err_mean,
-        ]);
+        let wall_s = report.wall.as_secs_f64();
         crate::info!(
-            "serve tenants={tenants}: {:.1} jobs/s lat_mean={:.3}s rounds/query={rounds_mean:.1} bytes/query={bytes_mean:.0}",
+            "serve tenants={tenants}: {:.1} jobs/s wall={wall_s:.3}s \
+             lat_mean={:.3}s rounds/query={rounds_mean:.1} bytes/query={bytes_mean:.0}",
             report.throughput,
             lat.mean
         );
+        measured.push((
+            tenants,
+            wall_s,
+            vec![
+                tenants as f64,
+                report.jobs.len() as f64,
+                wall_s,
+                f64::NAN, // speedup_vs_1, filled below
+                report.throughput,
+                lat.mean,
+                lat.p95,
+                rounds_mean,
+                bytes_mean,
+                err_mean,
+            ],
+        ));
+    }
+    let wall_at =
+        |t: usize| measured.iter().find(|(x, _, _)| *x == t).map(|&(_, w, _)| w);
+    let wall_1 = wall_at(1);
+    let wall_4 = wall_at(4);
+    for (_, wall_s, mut row) in measured {
+        row[3] = wall_1.map_or(f64::NAN, |w1| w1 / wall_s.max(1e-12));
+        table.push_nums(&row);
+    }
+    // the split-phase acceptance gate (E11): overlapped tenant rounds
+    // must buy real wallclock at 4 tenants vs 1
+    if let Some(ratio) = cfg.assert_overlap {
+        if let (Some(w1), Some(w4)) = (wall_1, wall_4) {
+            anyhow::ensure!(
+                w4 <= ratio * w1,
+                "overlap win missing: 4-tenant batch took {w4:.3}s, \
+                 expected <= {ratio} x the 1-tenant {w1:.3}s \
+                 (tenant rounds are not overlapping on the wire)"
+            );
+        }
     }
     Ok(table)
 }
@@ -172,6 +216,10 @@ mod tests {
             seed: 5,
             oracle: OracleSpec::Native,
             transport: TransportSpec::InProc,
+            // tiny workloads on an arbitrary CI host: measure the
+            // overlap, don't gate on it (the release-mode stress suite
+            // gates at real size)
+            assert_overlap: None,
         }
     }
 
@@ -182,16 +230,18 @@ mod tests {
         let rows = parse_rows(&table);
         assert_eq!(rows.len(), 2);
         for row in &rows {
-            assert_eq!(row.len(), 9, "schema-complete row");
+            assert_eq!(row.len(), 10, "schema-complete row");
             for cell in row {
                 assert!(cell.is_finite(), "non-finite cell {cell}");
             }
             assert_eq!(row[1], 5.0, "all jobs completed");
-            assert!(row[3] > 0.0, "positive throughput");
-            assert!((0.0..=1.0).contains(&row[8]), "error in range");
+            assert!(row[3] > 0.0, "positive speedup column");
+            assert!(row[4] > 0.0, "positive throughput");
+            assert!((0.0..=1.0).contains(&row[9]), "error in range");
         }
         assert_eq!(rows[0][0], 1.0);
         assert_eq!(rows[1][0], 2.0);
+        assert_eq!(rows[0][3], 1.0, "1-tenant row's speedup is exactly 1");
     }
 
     /// The session-layer signature: the mean per-query bill must not
@@ -204,7 +254,7 @@ mod tests {
     fn per_query_bill_is_invariant_in_tenant_count() {
         let table = run(&tiny_cfg()).unwrap();
         let rows = parse_rows(&table);
-        assert_eq!(rows[0][6], rows[1][6], "rounds/query moved with tenant count");
-        assert_eq!(rows[0][7], rows[1][7], "bytes/query moved with tenant count");
+        assert_eq!(rows[0][7], rows[1][7], "rounds/query moved with tenant count");
+        assert_eq!(rows[0][8], rows[1][8], "bytes/query moved with tenant count");
     }
 }

@@ -13,7 +13,18 @@
 //! the `round_us_mean` column is the price of frame
 //! encode/decode + syscalls + loopback delivery, the real-deployment
 //! overhead the in-proc simulation hides.
+//!
+//! Since the split-phase refactor the driver also times the same round
+//! count issued through a **pipelined window** of in-flight tickets
+//! ([`Session::dist_matvec_submit`](crate::cluster::Session)), and
+//! asserts (a) the pipelined session's bill is *identical* to the
+//! serialized session's — overlap changes when bytes move, never what
+//! they cost — and (b) on TCP loopback, where each serialized round
+//! pays real syscall + delivery latency, the pipelined rounds are
+//! strictly faster per round. That pair is the tentpole's payoff —
+//! same bills, better wall clock — measured on a real network path.
 
+use std::collections::VecDeque;
 use std::time::Instant;
 
 use anyhow::{ensure, Result};
@@ -40,6 +51,14 @@ pub struct TransportConfig {
     pub rounds: usize,
     pub seed: u64,
     pub oracle: OracleSpec,
+    /// Worker-side socket I/O deadline for the loopback workers
+    /// (`--io-timeout-secs`; also rides the generated
+    /// [`TransportSpec::Tcp`]).
+    pub io_timeout: std::time::Duration,
+    /// Split-phase acceptance gate: `ensure!` that pipelined rounds
+    /// beat serialized rounds on the TCP backend. Off for tiny smoke
+    /// configs where a four-round sample is all noise.
+    pub assert_pipeline_win: bool,
 }
 
 impl Default for TransportConfig {
@@ -51,14 +70,19 @@ impl Default for TransportConfig {
             rounds: super::runs_from_env(32),
             seed: 0x7ca9,
             oracle: OracleSpec::Native,
+            io_timeout: crate::transport::DEFAULT_IO_TIMEOUT,
+            assert_pipeline_win: true,
         }
     }
 }
 
 /// Run the sweep; returns a CSV with one row per
 /// `(backend, d, codec)`: `backend, d, bytes_per_entry, rounds,
-/// round_us_mean, round_us_p95, bytes_per_round, total_bytes`. Errors
-/// if any bill differs between backends.
+/// round_us_mean, round_us_p95, pipe_depth, pipe_us_mean, pipe_speedup,
+/// bytes_per_round, total_bytes`. Errors if any bill differs between
+/// backends, if a pipelined session's bill differs from the serialized
+/// session's, or (with [`TransportConfig::assert_pipeline_win`]) if
+/// pipelined rounds fail to beat serialized rounds on TCP.
 pub fn run(cfg: &TransportConfig) -> Result<CsvTable> {
     ensure!(cfg.rounds >= 1, "transport sweep needs at least one timed round");
     let mut table = CsvTable::new(&[
@@ -68,9 +92,13 @@ pub fn run(cfg: &TransportConfig) -> Result<CsvTable> {
         "rounds",
         "round_us_mean",
         "round_us_p95",
+        "pipe_depth",
+        "pipe_us_mean",
+        "pipe_speedup",
         "bytes_per_round",
         "total_bytes",
     ]);
+    let pipe_depth = cfg.rounds.min(8).max(2);
     for &d in &cfg.d_list {
         let dist = CovModel::paper_fig1(d, cfg.seed ^ 0x12).gaussian();
         let mut rng = crate::rng::Pcg64::new(cfg.seed ^ d as u64);
@@ -80,13 +108,17 @@ pub fn run(cfg: &TransportConfig) -> Result<CsvTable> {
         for backend in BACKENDS {
             // fresh loopback workers per cluster: each serves exactly
             // one leader connection, so their threads are joinable
-            let loopback =
-                if backend == "tcp" { Some(LoopbackWorkers::spawn(cfg.m, 1)?) } else { None };
+            let loopback = if backend == "tcp" {
+                Some(LoopbackWorkers::spawn_with(cfg.m, 1, cfg.io_timeout)?)
+            } else {
+                None
+            };
             let spec = loopback.as_ref().map_or(TransportSpec::InProc, |w| w.spec());
             let cluster =
                 Cluster::generate_on(&dist, cfg.m, cfg.n, cfg.seed, cfg.oracle.clone(), &spec)?;
             let mut backend_bills = Vec::with_capacity(CODECS.len());
             for prec in CODECS {
+                // serialized: complete every round before the next submit
                 let session = cluster.session();
                 session.set_codec(WireCodec::new(prec));
                 session.dist_matvec(&v)?; // warm (connection, caches)
@@ -99,6 +131,37 @@ pub fn run(cfg: &TransportConfig) -> Result<CsvTable> {
                 }
                 let bill = session.close();
                 let lat = Summary::of(&lat_us);
+
+                // pipelined: the same round count with up to
+                // `pipe_depth` tickets in flight — split-phase overlap
+                // hides per-round delivery latency behind the window
+                let piped = cluster.session();
+                piped.set_codec(WireCodec::new(prec));
+                piped.dist_matvec(&v)?; // warm
+                piped.reset_stats();
+                let t0 = Instant::now();
+                let mut window = VecDeque::with_capacity(pipe_depth);
+                for _ in 0..cfg.rounds {
+                    window.push_back(piped.dist_matvec_submit(&v)?);
+                    if window.len() >= pipe_depth {
+                        window.pop_front().expect("non-empty window").complete()?;
+                    }
+                }
+                while let Some(ticket) = window.pop_front() {
+                    ticket.complete()?;
+                }
+                drop(window);
+                let pipe_us = t0.elapsed().as_secs_f64() * 1e6 / cfg.rounds as f64;
+                let pipe_bill = piped.close();
+                // the tentpole contract, half one: overlap must not
+                // change a single counter
+                ensure!(
+                    pipe_bill == bill,
+                    "pipelined bill diverged from serialized at \
+                     {backend} d={d} {}: {pipe_bill} vs {bill}",
+                    prec.label()
+                );
+                let speedup = lat.mean / pipe_us.max(1e-9);
                 table.push_row(vec![
                     backend.to_string(),
                     d.to_string(),
@@ -106,15 +169,30 @@ pub fn run(cfg: &TransportConfig) -> Result<CsvTable> {
                     bill.rounds.to_string(),
                     format!("{:.3}", lat.mean),
                     format!("{:.3}", lat.p95),
+                    pipe_depth.to_string(),
+                    format!("{pipe_us:.3}"),
+                    format!("{speedup:.3}"),
                     (bill.bytes / bill.rounds.max(1)).to_string(),
                     bill.bytes.to_string(),
                 ]);
                 crate::info!(
-                    "transport {backend} d={d} {}: {:.1}us/round, {} B/round",
+                    "transport {backend} d={d} {}: {:.1}us/round serialized, \
+                     {pipe_us:.1}us/round pipelined (x{speedup:.2}), {} B/round",
                     prec.label(),
                     lat.mean,
                     bill.bytes / bill.rounds.max(1)
                 );
+                // the tentpole contract, half two: on a real network
+                // path, keeping the wire busy must buy wall clock
+                if cfg.assert_pipeline_win && backend == "tcp" {
+                    ensure!(
+                        pipe_us < lat.mean,
+                        "pipelined rounds did not beat serialized rounds on TCP at \
+                         d={d} {}: {pipe_us:.1}us/round vs {:.1}us/round",
+                        prec.label(),
+                        lat.mean
+                    );
+                }
                 backend_bills.push(bill);
             }
             bills.push(backend_bills);
@@ -147,11 +225,16 @@ mod tests {
             rounds: 4,
             seed: 5,
             oracle: OracleSpec::Native,
+            io_timeout: crate::transport::DEFAULT_IO_TIMEOUT,
+            // 4 rounds of microsecond noise prove nothing about overlap;
+            // the release-mode stress suite gates the win at real size
+            assert_pipeline_win: false,
         }
     }
 
     /// Tiny-size smoke: one schema-complete row per (backend, d, codec),
-    /// with the backend-invariance assertion inside `run` exercised.
+    /// with the backend-invariance and pipelined-bill assertions inside
+    /// `run` exercised.
     #[test]
     fn transport_smoke_rows_schema_complete_and_bills_invariant() {
         let table = run(&tiny_cfg()).unwrap();
@@ -160,7 +243,7 @@ mod tests {
             rendered.lines().skip(1).map(|l| l.split(',').collect()).collect();
         assert_eq!(rows.len(), BACKENDS.len() * CODECS.len());
         for row in &rows {
-            assert_eq!(row.len(), 8, "schema-complete row");
+            assert_eq!(row.len(), 11, "schema-complete row");
             assert!(row[0] == "inproc" || row[0] == "tcp");
             for cell in &row[1..] {
                 let x: f64 = cell.parse().unwrap();
@@ -169,7 +252,7 @@ mod tests {
         }
         // per-round bytes follow the codec width on both backends:
         // B(d)·(live+1) with live = m
-        let per_round = |r: &Vec<&str>| r[6].parse::<u64>().unwrap();
+        let per_round = |r: &Vec<&str>| r[9].parse::<u64>().unwrap();
         let f64_rows: Vec<&Vec<&str>> = rows.iter().filter(|r| r[2] == "8").collect();
         let bf16_rows: Vec<&Vec<&str>> = rows.iter().filter(|r| r[2] == "2").collect();
         for (a, b) in f64_rows.into_iter().zip(bf16_rows) {

@@ -19,10 +19,18 @@
 //!   the **wire layer** ([`cluster::WireCodec`]): every payload is
 //!   shipped through a configurable codec (lossless f64 / f32 / bf16)
 //!   and `CommStats.bytes` is billed from the encoded frames themselves.
-//!   The cluster is **multi-tenant**: it is `Sync`, and all billing,
-//!   codec state and collectives live on the per-tenant
-//!   [`cluster::Session`] ([`cluster::Cluster::session`]) — concurrent
-//!   queries bill independently and sum to the cluster's aggregate.
+//!   The cluster is **multi-tenant** and its collectives are
+//!   **split-phase**: it is `Sync`; all billing, codec state and
+//!   collectives live on the per-tenant [`cluster::Session`]
+//!   ([`cluster::Cluster::session`]); and every collective is
+//!   submit ([`cluster::Session::submit`] → [`cluster::Ticket`]) +
+//!   complete, with a reply router delivering every response by its
+//!   echoed sequence number — so concurrent tenants' rounds (and one
+//!   algorithm's independent rounds, via
+//!   [`cluster::Session::dist_matvec_submit`] /
+//!   [`cluster::Session::dist_matmat_submit`]) overlap on the wire
+//!   while bills stay exactly solo-run bills and sum to the cluster's
+//!   aggregate.
 //! - [`coordinator`] — the paper's algorithms: one-shot averaging
 //!   estimators (Thm 3/4/5), distributed power method / Lanczos,
 //!   hot-potato Oja SGD, Shift-and-Invert with locally-preconditioned
@@ -97,7 +105,10 @@ pub mod util;
 /// Convenience re-exports covering the public API surface used by the
 /// examples and benches.
 pub mod prelude {
-    pub use crate::cluster::{Cluster, CommStats, OracleSpec, Session, WireCodec, WirePrecision};
+    pub use crate::cluster::{
+        Cluster, CommStats, MatmatTicket, MatvecTicket, OracleSpec, Session, Ticket, WireCodec,
+        WirePrecision,
+    };
     pub use crate::coordinator::{
         Algorithm, BlockLanczos, CentralizedErm, CentralizedSubspace, DeflatedShiftInvert,
         DistributedLanczos, DistributedOrthoIteration, DistributedPower, Estimate, HotPotatoOja,

@@ -5,16 +5,20 @@
 //! dspca figure1   [--dist gaussian|uniform] [--d 300] [--m 25]
 //!                 [--n-list 25,50,...] [--runs 40] [--out results/]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
+//!                 [--io-timeout-secs 20]
 //! dspca table1    [--d 300] [--m 25] [--n 400] [--runs 12]
 //! dspca lower-bounds [--runs 60]
 //! dspca scaling   [--n-sweep | --m-sweep]
 //! dspca topk      [--d 60] [--m 8] [--n 400] [--k-list 1,2,4,8] [--runs 8]
 //! dspca wire      [--d 60] [--m 8] [--n 400] [--runs 8]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
+//!                 [--io-timeout-secs 20]
 //! dspca serve     [--d 60] [--m 8] [--n 400] [--jobs 12] [--tenants 1,2,4,8]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
+//!                 [--io-timeout-secs 20] [--no-overlap-assert]
 //! dspca transport [--d-list 16,64,256] [--m 4] [--n 200] [--rounds 32]
-//! dspca worker    [--listen 127.0.0.1:7070] [--once]
+//!                 [--io-timeout-secs 20] [--no-pipeline-assert]
+//! dspca worker    [--listen 127.0.0.1:7070] [--once] [--io-timeout-secs 20]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
 //! ```
@@ -79,17 +83,36 @@ fn oracle_from(args: &Args) -> OracleSpec {
     }
 }
 
-/// Parse `--transport {inproc,tcp}` / `--workers <addr,...>`. A bad
-/// combination (tcp without workers, workers under inproc, an unknown
-/// backend, an empty list) is a hard error, never a silent fallback.
+/// Parse `--transport {inproc,tcp}` / `--workers <addr,...>` /
+/// `--io-timeout-secs <n>`. A bad combination (tcp without workers,
+/// workers or io-timeout under inproc, an unknown backend, an empty
+/// list, a zero timeout) is a hard error, never a silent fallback.
 fn transport_from(args: &Args) -> Result<TransportSpec> {
-    TransportSpec::from_flags(args.get("transport"), args.get("workers"))
+    let io_timeout_secs = match args.get("io-timeout-secs") {
+        Some(v) => Some(v.parse::<u64>().map_err(|e| {
+            anyhow::anyhow!("--io-timeout-secs {v}: not a whole number of seconds ({e})")
+        })?),
+        None => None,
+    };
+    TransportSpec::from_flags(args.get("transport"), args.get("workers"), io_timeout_secs)
 }
 
 fn cmd_figure1(args: &Args, out_dir: &str) -> Result<()> {
     args.ensure_known_flags(
         "figure1",
-        &["dist", "d", "m", "n-list", "runs", "seed", "artifacts", "out", "transport", "workers"],
+        &[
+            "dist",
+            "d",
+            "m",
+            "n-list",
+            "runs",
+            "seed",
+            "artifacts",
+            "out",
+            "transport",
+            "workers",
+            "io-timeout-secs",
+        ],
     )?;
     let dist = match args.get("dist").unwrap_or("gaussian") {
         "gaussian" => figure1::Fig1Dist::Gaussian,
@@ -228,7 +251,18 @@ fn cmd_topk(args: &Args, out_dir: &str) -> Result<()> {
 fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
     args.ensure_known_flags(
         "wire",
-        &["d", "m", "n", "runs", "seed", "artifacts", "out", "transport", "workers"],
+        &[
+            "d",
+            "m",
+            "n",
+            "runs",
+            "seed",
+            "artifacts",
+            "out",
+            "transport",
+            "workers",
+            "io-timeout-secs",
+        ],
     )?;
     let defaults = wire::WireConfig::default();
     let cfg = wire::WireConfig {
@@ -250,7 +284,20 @@ fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
 fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
     args.ensure_known_flags(
         "serve",
-        &["d", "m", "n", "jobs", "tenants", "seed", "artifacts", "out", "transport", "workers"],
+        &[
+            "d",
+            "m",
+            "n",
+            "jobs",
+            "tenants",
+            "seed",
+            "artifacts",
+            "out",
+            "transport",
+            "workers",
+            "io-timeout-secs",
+            "no-overlap-assert",
+        ],
     )?;
     let defaults = serve_exp::ServeConfig::default();
     let cfg = serve_exp::ServeConfig {
@@ -262,6 +309,13 @@ fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
         seed: args.get_u64("seed", defaults.seed)?,
         oracle: oracle_from(args),
         transport: transport_from(args)?,
+        // the split-phase acceptance gate is on by default; constrained
+        // hosts can opt out explicitly
+        assert_overlap: if args.get_bool("no-overlap-assert") {
+            None
+        } else {
+            defaults.assert_overlap
+        },
     };
     let table = serve_exp::run(&cfg)?;
     let path = format!("{out_dir}/serve.csv");
@@ -273,9 +327,21 @@ fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
 fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
     args.ensure_known_flags(
         "transport",
-        &["d-list", "m", "n", "rounds", "seed", "artifacts", "out"],
+        &[
+            "d-list",
+            "m",
+            "n",
+            "rounds",
+            "seed",
+            "artifacts",
+            "out",
+            "io-timeout-secs",
+            "no-pipeline-assert",
+        ],
     )?;
     let defaults = transport_exp::TransportConfig::default();
+    let io_timeout_secs = args.get_u64("io-timeout-secs", defaults.io_timeout.as_secs())?;
+    anyhow::ensure!(io_timeout_secs >= 1, "--io-timeout-secs must be >= 1");
     let cfg = transport_exp::TransportConfig {
         d_list: args.get_usize_list("d-list", &defaults.d_list)?,
         m: args.get_usize("m", defaults.m)?,
@@ -283,6 +349,10 @@ fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
         rounds: args.get_usize("rounds", defaults.rounds)?,
         seed: args.get_u64("seed", defaults.seed)?,
         oracle: oracle_from(args),
+        io_timeout: std::time::Duration::from_secs(io_timeout_secs),
+        // the split-phase gate is on by default; constrained hosts can
+        // opt out explicitly (parity with serve's --no-overlap-assert)
+        assert_pipeline_win: !args.get_bool("no-pipeline-assert"),
     };
     let table = transport_exp::run(&cfg)?;
     let path = format!("{out_dir}/transport.csv");
@@ -292,8 +362,11 @@ fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
-    args.ensure_known_flags("worker", &["listen", "once"])?;
+    args.ensure_known_flags("worker", &["listen", "once", "io-timeout-secs"])?;
     let addr = args.get("listen").unwrap_or("127.0.0.1:7070");
+    let io_timeout_secs = args
+        .get_u64("io-timeout-secs", dspca::transport::DEFAULT_IO_TIMEOUT.as_secs())?;
+    anyhow::ensure!(io_timeout_secs >= 1, "--io-timeout-secs must be >= 1");
     let listener = std::net::TcpListener::bind(addr)
         .with_context(|| format!("worker: cannot listen on {addr}"))?;
     // the bound address is the first stdout line, so scripts (and the
@@ -301,7 +374,11 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // and read the ephemeral port back
     println!("dspca worker listening on {}", listener.local_addr()?);
     let max_conns = if args.get_bool("once") { Some(1) } else { None };
-    dspca::transport::serve_worker(listener, max_conns)
+    dspca::transport::serve_worker(
+        listener,
+        max_conns,
+        std::time::Duration::from_secs(io_timeout_secs),
+    )
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {
@@ -334,11 +411,12 @@ fn cmd_e2e(args: &Args) -> Result<()> {
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {
+    use dspca::cluster::{Cluster, WireCodec, WirePrecision};
     use dspca::coordinator::{Algorithm, CentralizedErm, SignFixedAverage};
     use dspca::data::{CovModel, Distribution};
     args.ensure_known_flags("selftest", &["out"])?;
     let dist = CovModel::paper_fig1(24, 1).gaussian();
-    let c = dspca::cluster::Cluster::generate(&dist, 4, 200, 2)?;
+    let c = Cluster::generate(&dist, 4, 200, 2)?;
     let cen = CentralizedErm.run(&c.session())?;
     let fix = SignFixedAverage.run(&c.session())?;
     println!(
@@ -352,14 +430,7 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     // the same queries over TCP loopback workers must produce the same
     // estimates and the same bills (the transport invariance contract)
     let workers = dspca::transport::LoopbackWorkers::spawn(4, 1)?;
-    let t = dspca::cluster::Cluster::generate_on(
-        &dist,
-        4,
-        200,
-        2,
-        OracleSpec::Native,
-        &workers.spec(),
-    )?;
+    let t = Cluster::generate_on(&dist, 4, 200, 2, OracleSpec::Native, &workers.spec())?;
     let cen_t = CentralizedErm.run(&t.session())?;
     let fix_t = SignFixedAverage.run(&t.session())?;
     println!(
@@ -375,6 +446,63 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     }
     drop(t);
     workers.join()?;
-    println!("selftest OK (inproc + tcp loopback, identical estimates and bills)");
+
+    // the split-phase overlap contract: two tenants with different wire
+    // codecs keep rounds genuinely in flight at once — submit both,
+    // then complete both — and each bills exactly its solo-run bill,
+    // summing to the aggregate window, on both transports
+    let v: Vec<f64> = (0..24).map(|i| ((i as f64) * 0.37).sin() + 0.05).collect();
+    for backend in ["inproc", "tcp"] {
+        let workers = (backend == "tcp")
+            .then(|| dspca::transport::LoopbackWorkers::spawn(4, 1))
+            .transpose()?;
+        let spec = workers
+            .as_ref()
+            .map_or(dspca::transport::TransportSpec::InProc, |w| w.spec());
+        let cluster = Cluster::generate_on(&dist, 4, 200, 2, OracleSpec::Native, &spec)?;
+        // solo reference bills, one quiet round each
+        let solo_lossless = {
+            let s = cluster.session();
+            s.dist_matvec(&v)?;
+            s.close()
+        };
+        let solo_bf16 = {
+            let s = cluster.session();
+            s.set_codec(WireCodec::new(WirePrecision::Bf16));
+            s.dist_matvec(&v)?;
+            s.close()
+        };
+        // overlapped: both tenants' rounds on the wire before either
+        // completes
+        let agg0 = cluster.aggregate_stats();
+        let lossless = cluster.session();
+        let lossy = cluster.session();
+        lossy.set_codec(WireCodec::new(WirePrecision::Bf16));
+        let t1 = lossless.dist_matvec_submit(&v)?;
+        let t2 = lossy.dist_matvec_submit(&v)?;
+        let _ = t1.complete()?;
+        let _ = t2.complete()?;
+        let (b1, b2) = (lossless.close(), lossy.close());
+        if b1 != solo_lossless || b2 != solo_bf16 {
+            bail!(
+                "selftest failed [{backend}]: overlapped bills diverged from solo \
+                 (lossless {b1} vs {solo_lossless}; bf16 {b2} vs {solo_bf16})"
+            );
+        }
+        let mut sum = b1.clone();
+        sum.merge(&b2);
+        if cluster.aggregate_stats().delta_since(&agg0) != sum {
+            bail!("selftest failed [{backend}]: overlapped bills do not sum to the aggregate");
+        }
+        println!("selftest[{backend}]: overlapped mixed-codec tenants bill like solo runs");
+        drop(cluster);
+        if let Some(w) = workers {
+            w.join()?;
+        }
+    }
+    println!(
+        "selftest OK (inproc + tcp loopback, identical estimates and bills, \
+         split-phase overlap billing exact)"
+    );
     Ok(())
 }

@@ -18,9 +18,13 @@
 //!   while the queue is non-empty, and no job is skipped or reordered
 //!   at dequeue time (completion order may differ; [`ServeReport::jobs`]
 //!   is returned in submission order regardless).
-//! - Cluster wire access serializes at round granularity (see
-//!   [`crate::cluster`]): concurrency changes *when* a job's rounds
-//!   happen, never what they cost.
+//! - Tenant rounds genuinely **overlap on the wire** (see
+//!   [`crate::cluster`]'s split-phase collectives): one tenant's
+//!   submit never waits behind another tenant's in-flight replies, so
+//!   batch wallclock drops as tenants are added until the workers
+//!   saturate — the E11 driver measures (and asserts) the win.
+//!   Concurrency changes *when* a job's rounds happen, never what they
+//!   cost.
 //!
 //! ## Accounting contract
 //!

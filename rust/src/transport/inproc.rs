@@ -11,7 +11,6 @@
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
@@ -19,7 +18,7 @@ use crate::cluster::worker::worker_main;
 use crate::cluster::{OracleSpec, Request, Response, WirePrecision};
 use crate::data::Shard;
 
-use super::{RecvError, Transport, CONTROL_SEQ};
+use super::{Transport, CONTROL_SEQ};
 
 /// The `mpsc` transport: worker threads owning their shards, typed
 /// messages, no serialization. Built by
@@ -27,7 +26,9 @@ use super::{RecvError, Transport, CONTROL_SEQ};
 /// with [`TransportSpec::InProc`](super::TransportSpec::InProc).
 pub struct InProcTransport {
     senders: Vec<mpsc::Sender<(u64, Request)>>,
-    receiver: mpsc::Receiver<(usize, u64, Response)>,
+    /// The shared reply stream, present until the cluster's router
+    /// takes it ([`Transport::take_reply_stream`]).
+    receiver: Option<mpsc::Receiver<(usize, u64, Response)>>,
     handles: Vec<Option<JoinHandle<()>>>,
     down: bool,
 }
@@ -57,7 +58,7 @@ impl InProcTransport {
             senders.push(req_tx);
             handles.push(Some(handle));
         }
-        Ok(InProcTransport { senders, receiver: resp_rx, handles, down: false })
+        Ok(InProcTransport { senders, receiver: Some(resp_rx), handles, down: false })
     }
 }
 
@@ -77,16 +78,8 @@ impl Transport for InProcTransport {
             .map_err(|_| anyhow!("worker {worker} channel closed"))
     }
 
-    fn recv_timeout(
-        &mut self,
-        timeout: Duration,
-    ) -> std::result::Result<(usize, u64, Response), RecvError> {
-        self.receiver.recv_timeout(timeout).map_err(|e| match e {
-            mpsc::RecvTimeoutError::Timeout => RecvError::TimedOut(timeout),
-            mpsc::RecvTimeoutError::Disconnected => {
-                RecvError::Disconnected("all worker threads exited".into())
-            }
-        })
+    fn take_reply_stream(&mut self) -> mpsc::Receiver<(usize, u64, Response)> {
+        self.receiver.take().expect("reply stream already taken")
     }
 
     fn shutdown(&mut self) {
@@ -115,8 +108,10 @@ impl Drop for InProcTransport {
 
 #[cfg(test)]
 mod tests {
+    use super::super::{recv_reply, RecvError};
     use super::*;
     use crate::rng::Pcg64;
+    use std::time::Duration;
 
     fn tiny_transport(m: usize) -> InProcTransport {
         let mut rng = Pcg64::new(9);
@@ -131,8 +126,9 @@ mod tests {
     #[test]
     fn send_recv_roundtrip_echoes_sequence_numbers() {
         let mut t = tiny_transport(2);
+        let rx = t.take_reply_stream();
         t.send(0, 5, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
-        let (id, seq, resp) = t.recv_timeout(Duration::from_secs(30)).unwrap();
+        let (id, seq, resp) = recv_reply(&rx, Duration::from_secs(30)).unwrap();
         assert_eq!((id, seq), (0, 5));
         assert!(matches!(resp, Response::Vector(v) if v.len() == 3));
         t.shutdown();
@@ -141,6 +137,7 @@ mod tests {
     #[test]
     fn shutdown_is_idempotent_and_fails_later_sends_cleanly() {
         let mut t = tiny_transport(2);
+        let rx = t.take_reply_stream();
         t.shutdown();
         t.shutdown(); // second call is a no-op, not a double-join
         let err =
@@ -148,7 +145,7 @@ mod tests {
         assert!(err.contains("worker 1"), "{err}");
         // recv after shutdown reports disconnection, not a hang
         assert!(matches!(
-            t.recv_timeout(Duration::from_millis(50)),
+            recv_reply(&rx, Duration::from_millis(50)),
             Err(RecvError::Disconnected(_) | RecvError::TimedOut(_))
         ));
     }

@@ -43,6 +43,7 @@ pub use inproc::InProcTransport;
 pub use tcp::{serve_worker, LoopbackWorkers, TcpTransport};
 
 use std::io::{self, Read, Write};
+use std::sync::mpsc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
@@ -53,15 +54,31 @@ use crate::cluster::{Request, Response, WirePrecision};
 /// part of any exchange; real exchanges start at 1.
 pub const CONTROL_SEQ: u64 = 0;
 
+/// Default I/O deadline for the byte-shipping backends: the TCP connect
+/// handshake (shard + ack) and every socket write on either side. An
+/// I/O stall this long on a loopback/LAN path means a wedged peer, not
+/// a slow one. Overridable per cluster via [`TransportSpec::Tcp`]'s
+/// `io_timeout` (CLI: `--io-timeout-secs`); distinct from the cluster's
+/// per-exchange *compute* deadline, which bounds how long a worker may
+/// take to answer, not how long a byte may take to move.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(20);
+
 /// Hard cap on one frame body — a corrupt length prefix must not turn
 /// into a multi-gigabyte allocation. Generous: the largest legitimate
 /// frame is a `Gram` reply, `8·d²` payload bytes plus a small envelope.
 pub(crate) const MAX_FRAME_BODY: usize = 1 << 30;
 
 /// How leader⇄worker messages physically move. One implementor per
-/// backend; the cluster holds a `Box<dyn Transport>` behind its wire
-/// lock, so methods take `&mut self` and implementors need only be
+/// backend; the cluster holds a `Box<dyn Transport>` behind its **send
+/// lock** (held only while requests go out — never while waiting for
+/// replies), so methods take `&mut self` and implementors need only be
 /// [`Send`].
+///
+/// The receive side is **router-driven**: every backend funnels replies
+/// into one [`mpsc`] stream that the cluster's reply router takes at
+/// construction ([`Transport::take_reply_stream`]) and drains for all
+/// tenants at once, routing each reply by its echoed sequence number.
+/// The transport itself never blocks a sender on a reply.
 pub trait Transport: Send {
     /// Backend name for reports ("inproc" / "tcp").
     fn name(&self) -> &'static str;
@@ -80,14 +97,13 @@ pub trait Transport: Send {
     /// every peer of the exchange.
     fn send(&mut self, worker: usize, seq: u64, prec: WirePrecision, req: &Request) -> Result<()>;
 
-    /// Block for the next response from any peer, up to `timeout` — the
-    /// per-exchange deadline. A [`RecvError`] (deadline passed, or no
-    /// peer can ever reply) routes the caller onto the same
-    /// timeout/straggler path on every backend.
-    fn recv_timeout(
-        &mut self,
-        timeout: Duration,
-    ) -> std::result::Result<(usize, u64, Response), RecvError>;
+    /// Hand the caller the shared reply stream: every peer's responses,
+    /// tagged `(worker, seq, response)`. Called exactly once, by the
+    /// cluster's reply router at construction; a second call panics.
+    /// After the stream's senders are all gone (shutdown, every peer
+    /// dead), receiving on it reports disconnection — the router maps
+    /// that onto [`RecvError::Disconnected`] via [`recv_reply`].
+    fn take_reply_stream(&mut self) -> mpsc::Receiver<(usize, u64, Response)>;
 
     /// Tell every peer to stop and release transport resources
     /// (join worker/reader threads, close sockets). **Idempotent**:
@@ -96,7 +112,23 @@ pub trait Transport: Send {
     fn shutdown(&mut self);
 }
 
-/// Why [`Transport::recv_timeout`] returned no message.
+/// Receive one routed reply from a taken reply stream with a deadline,
+/// mapping the channel's error modes onto [`RecvError`]. This is the
+/// single recv primitive the cluster's router (and the transport unit
+/// tests) use on every backend.
+pub fn recv_reply(
+    rx: &mpsc::Receiver<(usize, u64, Response)>,
+    timeout: Duration,
+) -> std::result::Result<(usize, u64, Response), RecvError> {
+    rx.recv_timeout(timeout).map_err(|e| match e {
+        mpsc::RecvTimeoutError::Timeout => RecvError::TimedOut(timeout),
+        mpsc::RecvTimeoutError::Disconnected => {
+            RecvError::Disconnected("every peer is gone (all reply senders dropped)".into())
+        }
+    })
+}
+
+/// Why [`recv_reply`] returned no message.
 #[derive(Debug)]
 pub enum RecvError {
     /// The per-exchange deadline passed with no frame — the worker may
@@ -120,8 +152,9 @@ impl std::fmt::Display for RecvError {
 impl std::error::Error for RecvError {}
 
 /// Which backend a cluster should run on — the value behind the CLI's
-/// `--transport {inproc,tcp}` / `--workers <addr,...>` flags and the
-/// experiment configs' `transport` field.
+/// `--transport {inproc,tcp}` / `--workers <addr,...>` /
+/// `--io-timeout-secs <n>` flags and the experiment configs'
+/// `transport` field.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub enum TransportSpec {
     /// One OS thread per machine, `mpsc` channels (the default).
@@ -133,10 +166,20 @@ pub enum TransportSpec {
     Tcp {
         /// Worker addresses (`host:port`), one per machine.
         workers: Vec<String>,
+        /// Socket I/O deadline: handshake ack + every write
+        /// ([`DEFAULT_IO_TIMEOUT`] unless overridden).
+        io_timeout: Duration,
     },
 }
 
 impl TransportSpec {
+    /// A TCP spec with the default I/O deadline — the common
+    /// constructor (`TransportSpec::Tcp { .. }` spelled out is for
+    /// callers that override `io_timeout`).
+    pub fn tcp(workers: Vec<String>) -> TransportSpec {
+        TransportSpec::Tcp { workers, io_timeout: DEFAULT_IO_TIMEOUT }
+    }
+
     /// Backend label for reports and CSV columns.
     pub fn label(&self) -> &'static str {
         match self {
@@ -146,18 +189,34 @@ impl TransportSpec {
     }
 
     /// Parse the CLI surface: `--transport {inproc,tcp}` plus
-    /// `--workers a:p,b:p,...`. `--workers` alone implies `tcp`; `tcp`
-    /// without `--workers`, an empty worker list, or `--workers` under
-    /// `inproc` are hard errors (never a silent fallback).
-    pub fn from_flags(transport: Option<&str>, workers: Option<&str>) -> Result<TransportSpec> {
+    /// `--workers a:p,b:p,...` plus `--io-timeout-secs <n>`.
+    /// `--workers` alone implies `tcp`; `tcp` without `--workers`, an
+    /// empty worker list, `--workers` under `inproc`, a zero timeout,
+    /// or `--io-timeout-secs` under `inproc` are hard errors (never a
+    /// silent fallback).
+    pub fn from_flags(
+        transport: Option<&str>,
+        workers: Option<&str>,
+        io_timeout_secs: Option<u64>,
+    ) -> Result<TransportSpec> {
         let workers: Option<Vec<String>> = workers.map(|w| {
             w.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect()
         });
+        if io_timeout_secs == Some(0) {
+            bail!("--io-timeout-secs must be >= 1");
+        }
+        let io_timeout = io_timeout_secs.map(Duration::from_secs);
         match (transport, workers) {
-            (None, None) | (Some("inproc"), None) => Ok(TransportSpec::InProc),
-            (None | Some("tcp"), Some(w)) if !w.is_empty() => {
-                Ok(TransportSpec::Tcp { workers: w })
+            (None, None) | (Some("inproc"), None) => {
+                if io_timeout.is_some() {
+                    bail!("--io-timeout-secs only applies to --transport tcp");
+                }
+                Ok(TransportSpec::InProc)
             }
+            (None | Some("tcp"), Some(w)) if !w.is_empty() => Ok(TransportSpec::Tcp {
+                workers: w,
+                io_timeout: io_timeout.unwrap_or(DEFAULT_IO_TIMEOUT),
+            }),
             (None | Some("tcp"), Some(_)) => {
                 bail!("--workers list is empty; expected --workers <addr,addr,...>")
             }
@@ -240,22 +299,21 @@ mod tests {
 
     #[test]
     fn spec_from_flags_parses_every_surface() {
-        assert_eq!(TransportSpec::from_flags(None, None).unwrap(), TransportSpec::InProc);
+        assert_eq!(TransportSpec::from_flags(None, None, None).unwrap(), TransportSpec::InProc);
         assert_eq!(
-            TransportSpec::from_flags(Some("inproc"), None).unwrap(),
+            TransportSpec::from_flags(Some("inproc"), None, None).unwrap(),
             TransportSpec::InProc
         );
-        let tcp = TransportSpec::Tcp {
-            workers: vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()],
-        };
+        let tcp =
+            TransportSpec::tcp(vec!["127.0.0.1:9001".into(), "127.0.0.1:9002".into()]);
         assert_eq!(
-            TransportSpec::from_flags(Some("tcp"), Some("127.0.0.1:9001, 127.0.0.1:9002"))
+            TransportSpec::from_flags(Some("tcp"), Some("127.0.0.1:9001, 127.0.0.1:9002"), None)
                 .unwrap(),
             tcp
         );
         // --workers alone implies tcp
         assert_eq!(
-            TransportSpec::from_flags(None, Some("127.0.0.1:9001,127.0.0.1:9002")).unwrap(),
+            TransportSpec::from_flags(None, Some("127.0.0.1:9001,127.0.0.1:9002"), None).unwrap(),
             tcp
         );
         assert_eq!(tcp.label(), "tcp");
@@ -264,14 +322,34 @@ mod tests {
     }
 
     #[test]
+    fn spec_from_flags_carries_the_io_timeout() {
+        // default: the shared DEFAULT_IO_TIMEOUT constant
+        match TransportSpec::from_flags(None, Some("127.0.0.1:9001"), None).unwrap() {
+            TransportSpec::Tcp { io_timeout, .. } => assert_eq!(io_timeout, DEFAULT_IO_TIMEOUT),
+            other => panic!("expected tcp, got {other:?}"),
+        }
+        // explicit override rides the spec
+        match TransportSpec::from_flags(Some("tcp"), Some("127.0.0.1:9001"), Some(7)).unwrap() {
+            TransportSpec::Tcp { io_timeout, .. } => {
+                assert_eq!(io_timeout, Duration::from_secs(7))
+            }
+            other => panic!("expected tcp, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn spec_from_flags_rejects_bad_combinations() {
-        let msg = |t: Option<&str>, w: Option<&str>| {
-            TransportSpec::from_flags(t, w).unwrap_err().to_string()
+        let msg = |t: Option<&str>, w: Option<&str>, io: Option<u64>| {
+            TransportSpec::from_flags(t, w, io).unwrap_err().to_string()
         };
-        assert!(msg(Some("tcp"), None).contains("--workers"));
-        assert!(msg(Some("inproc"), Some("127.0.0.1:9001")).contains("inproc"));
-        assert!(msg(Some("udp"), None).contains("udp"));
-        assert!(msg(None, Some(" , ,")).contains("empty"));
-        assert!(msg(Some("tcp"), Some(",")).contains("empty"));
+        assert!(msg(Some("tcp"), None, None).contains("--workers"));
+        assert!(msg(Some("inproc"), Some("127.0.0.1:9001"), None).contains("inproc"));
+        assert!(msg(Some("udp"), None, None).contains("udp"));
+        assert!(msg(None, Some(" , ,"), None).contains("empty"));
+        assert!(msg(Some("tcp"), Some(","), None).contains("empty"));
+        // the io-timeout flag is tcp-only and must be positive
+        assert!(msg(Some("inproc"), None, Some(30)).contains("--io-timeout-secs"));
+        assert!(msg(None, None, Some(30)).contains("--io-timeout-secs"));
+        assert!(msg(Some("tcp"), Some("127.0.0.1:9001"), Some(0)).contains(">= 1"));
     }
 }

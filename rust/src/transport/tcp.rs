@@ -5,11 +5,11 @@
 //! ships each worker its shard + per-worker RNG seed + oracle spec in a
 //! one-time `Init` handshake frame (setup traffic, outside the §2.1
 //! round bill), then spawns one reader thread per peer. Readers decode
-//! response frames and feed them into a single queue, so
-//! [`Transport::recv_timeout`] has the same per-exchange deadline
-//! semantics as the in-proc channel — a straggling or dead peer trips
-//! the deadline and the session's straggler accounting takes over
-//! unchanged.
+//! response frames and feed them into the single reply stream the
+//! cluster's router takes ([`Transport::take_reply_stream`]) — so the
+//! router's per-exchange deadline semantics match the in-proc channel:
+//! a straggling or dead peer trips the deadline and the straggler
+//! accounting takes over unchanged.
 //!
 //! **Worker side** ([`serve_worker`]): accept a leader connection, read
 //! `Init`, ack, then answer request frames with response frames until
@@ -22,6 +22,14 @@
 //! **Framing**: length-prefixed whole-message frames (`cluster/wire.rs`
 //! format); payload sections are the materialized `WireCodec` output,
 //! i.e. the billed bytes are exactly the payload bytes on the socket.
+//!
+//! **I/O deadlines**: one knob, the [`TransportSpec::Tcp`]-carried
+//! `io_timeout` (default [`DEFAULT_IO_TIMEOUT`], CLI
+//! `--io-timeout-secs`), bounds the connect-time handshake (shard +
+//! ack) and every socket write on both sides — a peer that stalls a
+//! byte that long is wedged, not slow. The per-exchange *compute*
+//! deadline (how long a worker may take to answer) stays with the
+//! cluster, on the recv path.
 //!
 //! **Shutdown** is idempotent and drop-order-safe: a `Shutdown` frame
 //! is written best-effort to each peer, both socket halves are shut
@@ -47,7 +55,9 @@ use crate::cluster::{
 };
 use crate::data::Shard;
 
-use super::{read_frame, write_frame, RecvError, Transport, TransportSpec, CONTROL_SEQ};
+use super::{
+    read_frame, write_frame, Transport, TransportSpec, CONTROL_SEQ, DEFAULT_IO_TIMEOUT,
+};
 
 /// Handshake magic ("DSPC") so connecting to something that is not a
 /// `dspca worker` fails fast with a clear error instead of a timeout.
@@ -55,16 +65,6 @@ const INIT_MAGIC: u32 = 0x4453_5043;
 const INIT_VERSION: u8 = 1;
 const ORACLE_NATIVE: u8 = 0;
 const ORACLE_PJRT: u8 = 1;
-
-/// Deadline for the connect-time handshake (shard shipping + ack). Kept
-/// separate from the per-exchange deadline: a peer that accepts but
-/// never acks is misconfigured, not straggling.
-const HANDSHAKE_TIMEOUT: Duration = Duration::from_secs(20);
-
-/// Worker-side write deadline (mirrors the leader's 120 s socket write
-/// timeout): a leader that stops reading must not wedge the worker's
-/// serve loop forever in `write_frame`.
-const WORKER_WRITE_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// One worker's shard + identity, shipped once at connect time.
 struct Init {
@@ -157,7 +157,9 @@ struct Peer {
 /// with [`TransportSpec::Tcp`].
 pub struct TcpTransport {
     peers: Vec<Peer>,
-    rx: mpsc::Receiver<(usize, u64, Response)>,
+    /// The shared reply stream the per-peer readers feed, present until
+    /// the cluster's router takes it ([`Transport::take_reply_stream`]).
+    rx: Option<mpsc::Receiver<(usize, u64, Response)>>,
     /// One exchange broadcasts the same `(seq, prec, req)` to every
     /// peer (a sequence number identifies exactly one request — the
     /// invariant the whole straggler protocol rests on), so the encoded
@@ -184,7 +186,7 @@ impl TcpTransport {
         let (tx, rx) = mpsc::channel::<(usize, u64, Response)>();
         let mut peers = Vec::with_capacity(addrs.len());
         match Self::connect_all(addrs, shards, oracle, seed, io_timeout, &tx, &mut peers) {
-            Ok(()) => Ok(TcpTransport { peers, rx, encoded: None, down: false }),
+            Ok(()) => Ok(TcpTransport { peers, rx: Some(rx), encoded: None, down: false }),
             Err(e) => {
                 for peer in &mut peers {
                     let _ = peer.stream.shutdown(SockShutdown::Both);
@@ -223,7 +225,7 @@ impl TcpTransport {
                 .with_context(|| format!("worker {i}: cannot connect to {addr}"))?;
             let _ = stream.set_nodelay(true);
             let _ = stream.set_write_timeout(Some(io_timeout));
-            let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
+            let _ = stream.set_read_timeout(Some(io_timeout));
             let init = Init {
                 worker_id: i,
                 wseed,
@@ -308,16 +310,8 @@ impl Transport for TcpTransport {
             .with_context(|| format!("worker {worker} at {} unreachable", peer.addr))
     }
 
-    fn recv_timeout(
-        &mut self,
-        timeout: Duration,
-    ) -> std::result::Result<(usize, u64, Response), RecvError> {
-        self.rx.recv_timeout(timeout).map_err(|e| match e {
-            mpsc::RecvTimeoutError::Timeout => RecvError::TimedOut(timeout),
-            mpsc::RecvTimeoutError::Disconnected => {
-                RecvError::Disconnected("every peer socket is closed".into())
-            }
-        })
+    fn take_reply_stream(&mut self) -> mpsc::Receiver<(usize, u64, Response)> {
+        self.rx.take().expect("reply stream already taken")
     }
 
     fn shutdown(&mut self) {
@@ -359,8 +353,15 @@ impl Drop for TcpTransport {
 /// are joinable); `None` serves until the process is killed. Only
 /// connections that complete the `Init` handshake count as a leader
 /// session — a port scanner or crashed process probing the socket must
-/// not consume the `--once` budget.
-pub fn serve_worker(listener: TcpListener, max_conns: Option<usize>) -> Result<()> {
+/// not consume the `--once` budget. `io_timeout` bounds the handshake
+/// read and every response write (the worker-side half of the
+/// [`TransportSpec::Tcp`] `io_timeout` contract; CLI
+/// `--io-timeout-secs`).
+pub fn serve_worker(
+    listener: TcpListener,
+    max_conns: Option<usize>,
+    io_timeout: Duration,
+) -> Result<()> {
     let mut served = 0usize;
     loop {
         if let Some(limit) = max_conns {
@@ -370,7 +371,7 @@ pub fn serve_worker(listener: TcpListener, max_conns: Option<usize>) -> Result<(
         }
         let (stream, peer) = listener.accept().context("accepting leader connection")?;
         crate::debug!("dspca worker: connection from {peer}");
-        match serve_leader(stream) {
+        match serve_leader(stream, io_timeout) {
             Ok(true) => served += 1,
             // never completed the handshake: not a leader session
             Ok(false) => {}
@@ -387,10 +388,10 @@ pub fn serve_worker(listener: TcpListener, max_conns: Option<usize>) -> Result<(
 /// Returns `Ok(false)` if the connection never completed the handshake
 /// (not a real leader), `Ok(true)` after a clean session; an `Err` is a
 /// session that failed *after* the handshake.
-fn serve_leader(mut stream: TcpStream) -> Result<bool> {
+fn serve_leader(mut stream: TcpStream, io_timeout: Duration) -> Result<bool> {
     let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(HANDSHAKE_TIMEOUT));
-    let _ = stream.set_write_timeout(Some(WORKER_WRITE_TIMEOUT));
+    let _ = stream.set_read_timeout(Some(io_timeout));
+    let _ = stream.set_write_timeout(Some(io_timeout));
     let init = match read_frame(&mut stream) {
         Ok(body) => match decode_init(&body) {
             Ok(init) => init,
@@ -446,12 +447,21 @@ fn serve_leader(mut stream: TcpStream) -> Result<bool> {
 pub struct LoopbackWorkers {
     addrs: Vec<String>,
     handles: Vec<JoinHandle<Result<()>>>,
+    io_timeout: Duration,
 }
 
 impl LoopbackWorkers {
     /// Bind `m` ephemeral localhost listeners and serve `conns` leader
-    /// connections each on background threads.
+    /// connections each on background threads, at the default I/O
+    /// deadline.
     pub fn spawn(m: usize, conns: usize) -> Result<LoopbackWorkers> {
+        Self::spawn_with(m, conns, DEFAULT_IO_TIMEOUT)
+    }
+
+    /// [`LoopbackWorkers::spawn`] with an explicit worker-side
+    /// `io_timeout` (pair it with the same value in the cluster's
+    /// [`TransportSpec::Tcp`]).
+    pub fn spawn_with(m: usize, conns: usize, io_timeout: Duration) -> Result<LoopbackWorkers> {
         let mut addrs = Vec::with_capacity(m);
         let mut handles = Vec::with_capacity(m);
         for i in 0..m {
@@ -460,11 +470,11 @@ impl LoopbackWorkers {
             addrs.push(listener.local_addr().context("loopback local addr")?.to_string());
             let handle = std::thread::Builder::new()
                 .name(format!("dspca-loopback-worker-{i}"))
-                .spawn(move || serve_worker(listener, Some(conns)))
+                .spawn(move || serve_worker(listener, Some(conns), io_timeout))
                 .context("spawning loopback worker thread")?;
             handles.push(handle);
         }
-        Ok(LoopbackWorkers { addrs, handles })
+        Ok(LoopbackWorkers { addrs, handles, io_timeout })
     }
 
     /// The bound `host:port` addresses, in worker order.
@@ -472,9 +482,10 @@ impl LoopbackWorkers {
         &self.addrs
     }
 
-    /// A [`TransportSpec::Tcp`] pointing at these workers.
+    /// A [`TransportSpec::Tcp`] pointing at these workers, carrying the
+    /// same `io_timeout` they serve with.
     pub fn spec(&self) -> TransportSpec {
-        TransportSpec::Tcp { workers: self.addrs.clone() }
+        TransportSpec::Tcp { workers: self.addrs.clone(), io_timeout: self.io_timeout }
     }
 
     /// Join every worker thread, surfacing the first worker error. Call
@@ -553,11 +564,12 @@ mod tests {
         )
         .unwrap();
         assert_eq!(t.name(), "tcp");
+        let rx = t.take_reply_stream();
         t.send(0, 7, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
         t.send(1, 7, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
         let mut got = [false, false];
         for _ in 0..2 {
-            let (id, seq, resp) = t.recv_timeout(Duration::from_secs(30)).unwrap();
+            let (id, seq, resp) = super::super::recv_reply(&rx, Duration::from_secs(30)).unwrap();
             assert_eq!(seq, 7, "workers echo the sequence number");
             assert!(matches!(resp, Response::Vector(ref v) if v.len() == 3));
             got[id] = true;
@@ -641,10 +653,11 @@ mod tests {
         .unwrap();
         // a bf16 request comes back as a bf16-gridded response: every
         // delivered value must be exactly representable in bf16
+        let rx = t.take_reply_stream();
         let mut v = vec![0.731, -0.25, 1.0001];
         WirePrecision::Bf16.quantize(&mut v);
         t.send(0, 1, WirePrecision::Bf16, &Request::CovMatVec(v)).unwrap();
-        let (_, _, resp) = t.recv_timeout(Duration::from_secs(30)).unwrap();
+        let (_, _, resp) = super::super::recv_reply(&rx, Duration::from_secs(30)).unwrap();
         let Response::Vector(out) = resp else { panic!("expected a vector reply") };
         for x in &out {
             let mut q = [*x];

@@ -478,9 +478,10 @@ fn prop_block_power_iteration_at_k8_costs_one_round_one_message_per_live_worker(
             c.kill_worker(m - 1).unwrap();
             live -= 1;
         }
-        let est = DistributedOrthoIteration { k, max_iters: 1, tol: 0.0, seed: 0xb }
-            .run_mat(&c.session())
-            .unwrap();
+        let est =
+            DistributedOrthoIteration { k, max_iters: 1, tol: 0.0, seed: 0xb, pipeline: true }
+                .run_mat(&c.session())
+                .unwrap();
         assert_eq!(est.info["iters"], 1.0);
         assert_eq!(est.comm.rounds, 1, "one block iteration must be exactly one round");
         assert_eq!(est.comm.requests_sent, live as u64, "one request per live worker");

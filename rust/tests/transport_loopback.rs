@@ -192,7 +192,7 @@ fn real_worker_processes_complete_a_run_with_the_inproc_bill() {
     let want = SignFixedAverage.run(&inproc.session()).unwrap();
     drop(inproc);
 
-    let spec = TransportSpec::Tcp { workers: addrs };
+    let spec = TransportSpec::tcp(addrs);
     let tcp = Cluster::generate_on(&dist, m, n, seed, OracleSpec::Native, &spec).unwrap();
     let got = SignFixedAverage.run(&tcp.session()).unwrap();
     assert_eq!(got.comm, want.comm, "process-level TCP bill == in-proc bill");
@@ -215,7 +215,7 @@ fn unreachable_worker_is_a_clean_error_naming_the_peer() {
         l.local_addr().unwrap().to_string()
     };
     let dist = fig1_dist(6, 1);
-    let spec = TransportSpec::Tcp { workers: vec![addr.clone()] };
+    let spec = TransportSpec::tcp(vec![addr.clone()]);
     let err = Cluster::generate_on(&dist, 1, 20, 5, OracleSpec::Native, &spec)
         .map(|_| ())
         .unwrap_err();
