@@ -1,10 +1,12 @@
 //! L3 hot-path microbenchmarks: the dense kernels every communication
-//! round leans on (gemv/syrk/eigensolve/preconditioner application).
-//! This is the profile target for the §Perf optimization loop.
+//! round leans on (gemv/syrk/eigensolve/preconditioner application),
+//! plus the ISSUE-6 shard-kernel contrast — scalar vs threaded
+//! `cov_matmat`, the f32-accumulate fast path, and the CSR streaming
+//! kernel. This is the profile target for the §Perf optimization loop.
 
-use dspca::bench_harness::{scaled, Bencher};
+use dspca::bench_harness::{fast_mode, scaled, Bencher};
 use dspca::coordinator::precond::Preconditioner;
-use dspca::data::Shard;
+use dspca::data::{Distribution, Shard, SparseDiag};
 use dspca::linalg::{Matrix, SymEigen};
 use dspca::rng::Pcg64;
 
@@ -51,10 +53,57 @@ fn main() {
     b.bench("gaussian_vec/8192", || rng.gaussian_vec(8192));
 
     let dist_fig1 = dspca::data::CovModel::paper_fig1(300, 3).gaussian();
-    b.bench("sample_shard_fig1/400x300", || {
-        use dspca::data::Distribution;
-        dist_fig1.sample_shard(&mut rng, 400).n()
+    b.bench("sample_shard_fig1/400x300", || dist_fig1.sample_shard(&mut rng, 400).n());
+
+    // ISSUE 6 tentpole contrast at d = 512, k = 8: scalar vs threaded
+    // blocked cov_matmat, the f32-accumulate fast path, and the CSR
+    // streaming kernel on a 5% sparse shard of the same shape
+    let (d2, k2) = (512usize, 8usize);
+    let n2 = scaled(400).max(64);
+    let shard2 = Shard::new(n2, d2, (0..n2 * d2).map(|_| rng.next_gaussian()).collect());
+    let vmat = Matrix::from_vec(d2, k2, (0..d2 * k2).map(|_| rng.next_gaussian()).collect());
+    let mut scratch_nk = Vec::new();
+    let mut out_mat = Matrix::zeros(d2, k2);
+    let scalar_median = b
+        .bench(&format!("cov_matmat_scalar/{n2}x{d2}xk{k2}"), || {
+            shard2.cov_matmat_into_threads(&vmat, &mut scratch_nk, &mut out_mat, 1);
+            out_mat.get(0, 0)
+        })
+        .summary()
+        .median;
+    let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(1);
+    let t = cores.clamp(2, 8);
+    let threaded_median = b
+        .bench(&format!("cov_matmat_threads{t}/{n2}x{d2}xk{k2}"), || {
+            shard2.cov_matmat_into_threads(&vmat, &mut scratch_nk, &mut out_mat, t);
+            out_mat.get(0, 0)
+        })
+        .summary()
+        .median;
+    b.bench(&format!("cov_matmat_f32/{n2}x{d2}xk{k2}"), || shard2.cov_matmat_f32(&vmat).get(0, 0));
+
+    let sparse_dist = SparseDiag::paper_fig1(d2, 0.05);
+    let csr = sparse_dist.sample_shard(&mut rng, n2);
+    assert!(csr.is_sparse());
+    b.bench(&format!("cov_matmat_csr_rho0.05/{n2}x{d2}xk{k2}"), || {
+        csr.cov_matmat_into_threads(&vmat, &mut scratch_nk, &mut out_mat, 1);
+        out_mat.get(0, 0)
     });
 
-    let _ = b.write_json("linalg", &[("d", d as f64), ("n", n as f64)]);
+    // acceptance gate (full mode, >= 4 cores): the threaded kernel must
+    // beat scalar by >= 2x at the tentpole shape — the bills are
+    // bit-identical by construction (kernels never touch the wire)
+    if !fast_mode() && cores >= 4 {
+        let speedup = scalar_median / threaded_median.max(1e-12);
+        assert!(
+            speedup >= 2.0,
+            "threaded cov_matmat speedup {speedup:.2}x < 2x at {n2}x{d2} k={k2} ({cores} cores)"
+        );
+        println!("threaded cov_matmat speedup: {speedup:.2}x on {cores} cores");
+    }
+
+    let _ = b.write_json(
+        "linalg",
+        &[("d", d as f64), ("n", n as f64), ("d2", d2 as f64), ("k2", k2 as f64)],
+    );
 }

@@ -1,8 +1,9 @@
 //! E9 bench — top-`k` block-protocol scaling: the full top-`k` family
-//! swept over `k` (error vs rounds vs k), plus a direct block-vs-column
-//! round-trip latency contrast at k = 8.
+//! swept over `k` (error vs rounds vs k) on the dense §5 model and the
+//! 5%-dense sparse model (CSR shards, streaming kernels), plus a direct
+//! block-vs-column round-trip latency contrast at k = 8.
 
-use dspca::bench_harness::{fast_mode, scaled, Bencher};
+use dspca::bench_harness::{fast_mode, results_dir, scaled, Bencher};
 use dspca::cluster::{Cluster, OracleSpec};
 use dspca::data::CovModel;
 use dspca::experiments::topk::{run, TopkConfig};
@@ -21,7 +22,15 @@ fn main() -> anyhow::Result<()> {
     let t0 = std::time::Instant::now();
     let table = run(&cfg)?;
     b.record("topk/sweep", vec![t0.elapsed().as_secs_f64()]);
-    table.write("results/bench_topk.csv")?;
+    let csv_path = results_dir().join("bench_topk.csv");
+    table.write(&csv_path)?;
+
+    // the same sweep on CSR shards (ISSUE 6): the sparse workload E9
+    // exists for, timed end to end through the streaming kernels
+    let sparse_cfg = TopkConfig { density: Some(0.05), ..cfg.clone() };
+    let t0 = std::time::Instant::now();
+    let _ = run(&sparse_cfg)?;
+    b.record("topk/sweep_sparse_rho0.05", vec![t0.elapsed().as_secs_f64()]);
 
     // block protocol vs column-wise loop: same numerical product, one
     // round vs k rounds — measured wall clock per full exchange
@@ -46,7 +55,7 @@ fn main() -> anyhow::Result<()> {
         session.dist_matvec(&v.col(c)).unwrap();
     }
     b.set_last_bytes(session.stats().bytes);
-    println!("wrote results/bench_topk.csv");
+    println!("wrote {}", csv_path.display());
     b.write_json(
         "topk",
         &[("d", cfg.d as f64), ("m", cfg.m as f64), ("n", cfg.n as f64), ("k", k as f64)],

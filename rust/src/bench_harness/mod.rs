@@ -5,13 +5,24 @@
 //! median/p95 reporting, and environment-scaled iteration counts
 //! (`DSPCA_BENCH_FAST=1` shrinks everything for CI smoke runs).
 //!
+//! Fast mode is resolved from the environment **once, at
+//! [`Bencher::new`]** and threaded through as a field — tests inject it
+//! with [`Bencher::with_fast_mode`] / [`scaled_with`] instead of
+//! mutating process env (`cargo test` runs tests on parallel threads;
+//! `set_var` races would leak into unrelated tests).
+//!
 //! Besides the stdout table, every bench finishes with
 //! [`Bencher::write_json`]: a machine-readable
-//! `results/bench_<name>.json` (name, params, per-result median/p95
-//! nanoseconds, bytes where the workload has a wire cost) so the perf
-//! trajectory can be tracked across commits instead of scraped from
-//! logs.
+//! `bench_<name>.json` (name, params, per-result median/p95
+//! nanoseconds, bytes where the workload has a wire cost) written under
+//! [`results_dir`] — `$DSPCA_RESULTS_DIR` if set, else
+//! `<workspace root>/results/` resolved from the compile-time manifest
+//! path, so output lands in the same place no matter the invocation
+//! CWD. Committed `BENCH_*.json` snapshots at the repo root are copies
+//! of these files; CI's bench-snapshot job regenerates and validates
+//! them.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
@@ -78,22 +89,45 @@ pub fn fmt_dur(secs: f64) -> String {
     }
 }
 
-/// True when `DSPCA_BENCH_FAST=1`: benches shrink workloads for smoke runs.
+/// True when `DSPCA_BENCH_FAST=1`: benches shrink workloads for smoke
+/// runs. Bench binaries read this once at startup; tests use
+/// [`Bencher::with_fast_mode`] / [`scaled_with`] instead of setting the
+/// env var.
 pub fn fast_mode() -> bool {
     std::env::var("DSPCA_BENCH_FAST").as_deref() == Ok("1")
 }
 
-/// Scale an iteration count down in fast mode.
+/// Scale an iteration count down in fast mode (env-resolved).
 pub fn scaled(n: usize) -> usize {
-    if fast_mode() {
+    scaled_with(n, fast_mode())
+}
+
+/// [`scaled`] with fast mode passed explicitly (env-independent).
+pub fn scaled_with(n: usize, fast: bool) -> usize {
+    if fast {
         (n / 8).max(1)
     } else {
         n
     }
 }
 
+/// Deterministic directory bench JSON lands in: `$DSPCA_RESULTS_DIR` if
+/// set and non-empty, else `<workspace root>/results` (the workspace
+/// root is the parent of this crate's compile-time manifest dir —
+/// independent of the invocation CWD).
+pub fn results_dir() -> PathBuf {
+    match std::env::var("DSPCA_RESULTS_DIR") {
+        Ok(dir) if !dir.is_empty() => PathBuf::from(dir),
+        _ => {
+            let manifest = Path::new(env!("CARGO_MANIFEST_DIR"));
+            manifest.parent().unwrap_or(manifest).join("results")
+        }
+    }
+}
+
 /// Bench runner: prints a header then each result as it completes.
 pub struct Bencher {
+    fast: bool,
     header_printed: bool,
     results: Vec<BenchResult>,
 }
@@ -105,8 +139,20 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Env-resolving constructor: fast mode is read from
+    /// `DSPCA_BENCH_FAST` here, once, and never re-read.
     pub fn new() -> Self {
-        Bencher { header_printed: false, results: Vec::new() }
+        Self::with_fast_mode(fast_mode())
+    }
+
+    /// Env-independent constructor with fast mode injected (tests).
+    pub fn with_fast_mode(fast: bool) -> Self {
+        Bencher { fast, header_printed: false, results: Vec::new() }
+    }
+
+    /// Whether this bencher runs in fast (smoke) mode.
+    pub fn fast(&self) -> bool {
+        self.fast
     }
 
     /// Time `f` with automatic calibration: warm up, pick an iteration
@@ -114,7 +160,8 @@ impl Bencher {
     /// batches. `f` should return something observable to block dead-code
     /// elimination (use [`std::hint::black_box`] inside if needed).
     pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
-        let budget = if fast_mode() { Duration::from_millis(120) } else { Duration::from_millis(900) };
+        let budget =
+            if self.fast { Duration::from_millis(120) } else { Duration::from_millis(900) };
         // warmup + calibration
         let t0 = Instant::now();
         let mut iters_done = 0u64;
@@ -185,7 +232,7 @@ impl Bencher {
     pub fn to_json(&self, bench: &str, params: &[(&str, f64)]) -> Json {
         let mut obj = std::collections::BTreeMap::new();
         obj.insert("bench".to_string(), Json::Str(bench.to_string()));
-        obj.insert("fast_mode".to_string(), Json::Bool(fast_mode()));
+        obj.insert("fast_mode".to_string(), Json::Bool(self.fast));
         let mut p = std::collections::BTreeMap::new();
         for (k, v) in params {
             p.insert((*k).to_string(), Json::Num(*v));
@@ -198,16 +245,28 @@ impl Bencher {
         Json::Obj(obj)
     }
 
-    /// Write `results/bench_<name>.json` (creating `results/`) and
+    /// Write `bench_<name>.json` under [`results_dir`] (creating it) and
     /// return the path — called by every bench binary after its stdout
-    /// table, so `BENCH_*.json` trajectories are populated on each run,
-    /// fast mode included.
+    /// table, so the JSON trajectories are populated on each run, fast
+    /// mode included, at the same location regardless of CWD.
     pub fn write_json(&self, bench: &str, params: &[(&str, f64)]) -> std::io::Result<String> {
-        let path = format!("results/bench_{bench}.json");
-        std::fs::create_dir_all("results")?;
+        self.write_json_in(&results_dir(), bench, params)
+    }
+
+    /// [`Bencher::write_json`] into an explicit directory (tests use a
+    /// temp dir).
+    pub fn write_json_in(
+        &self,
+        dir: &Path,
+        bench: &str,
+        params: &[(&str, f64)],
+    ) -> std::io::Result<String> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("bench_{bench}.json"));
         std::fs::write(&path, format!("{}\n", self.to_json(bench, params)))?;
-        println!("wrote {path}");
-        Ok(path)
+        let shown = path.display().to_string();
+        println!("wrote {shown}");
+        Ok(shown)
     }
 }
 
@@ -225,8 +284,8 @@ mod tests {
 
     #[test]
     fn bench_collects_samples() {
-        std::env::set_var("DSPCA_BENCH_FAST", "1");
-        let mut b = Bencher::new();
+        // fast mode injected — never set process env from a test
+        let mut b = Bencher::with_fast_mode(true);
         let r = b.bench("noop-ish", || std::hint::black_box(1 + 1));
         assert!(!r.samples.is_empty());
         assert!(r.summary().median >= 0.0);
@@ -242,13 +301,14 @@ mod tests {
 
     #[test]
     fn json_report_is_parseable_and_carries_the_schema() {
-        let mut b = Bencher::new();
+        let mut b = Bencher::with_fast_mode(false);
         b.record("plain", vec![1e-3, 2e-3]);
         b.record_with_bytes("wired", vec![5e-4], 4096);
         let j = b.to_json("unit", &[("d", 8.0), ("m", 3.0)]);
         // round-trips through the in-tree parser
         let back = Json::parse(&j.to_string()).unwrap();
         assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(back.get("fast_mode").unwrap(), &Json::Bool(false));
         assert_eq!(back.get("params").unwrap().get("d").unwrap().as_f64().unwrap(), 8.0);
         let results = back.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 2);
@@ -258,6 +318,14 @@ mod tests {
         assert_eq!(results[0].get("median_ns").unwrap().as_f64().unwrap(), 1.5e6);
         assert_eq!(results[1].get("bytes").unwrap().as_f64().unwrap(), 4096.0);
         assert!(results[1].get("p95_ns").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn json_report_carries_injected_fast_mode() {
+        let mut b = Bencher::with_fast_mode(true);
+        b.record("x", vec![1.0]);
+        let j = b.to_json("unit", &[]);
+        assert_eq!(j.get("fast_mode").unwrap(), &Json::Bool(true));
     }
 
     #[test]
@@ -272,8 +340,34 @@ mod tests {
 
     #[test]
     fn scaled_respects_fast_mode() {
-        std::env::set_var("DSPCA_BENCH_FAST", "1");
-        assert_eq!(scaled(80), 10);
-        assert_eq!(scaled(4), 1);
+        // parameterized — no process-env mutation
+        assert_eq!(scaled_with(80, true), 10);
+        assert_eq!(scaled_with(4, true), 1);
+        assert_eq!(scaled_with(80, false), 80);
+    }
+
+    #[test]
+    fn results_dir_is_cwd_independent() {
+        // without the env override, the default resolves from the
+        // compile-time manifest path — absolute, never CWD-relative
+        if std::env::var("DSPCA_RESULTS_DIR").is_err() {
+            let dir = results_dir();
+            assert!(dir.is_absolute(), "results dir must not depend on CWD: {dir:?}");
+            assert!(dir.ends_with("results"));
+        }
+    }
+
+    #[test]
+    fn write_json_in_writes_parseable_file() {
+        let dir = std::env::temp_dir()
+            .join(format!("dspca_bench_harness_test_{}", std::process::id()));
+        let mut b = Bencher::with_fast_mode(true);
+        b.record("w", vec![2e-3]);
+        let path = b.write_json_in(&dir, "unit_write", &[("n", 4.0)]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.ends_with('\n'));
+        let j = Json::parse(text.trim_end()).unwrap();
+        assert_eq!(j.get("bench").unwrap().as_str().unwrap(), "unit_write");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -89,20 +89,35 @@ pub trait ComputeOracle {
         // update is O(d) and memory-bound; there is nothing for an
         // accelerator kernel to win here unless batched (see
         // python/compile/model.py:oja_pass for the batched variant).
+        // Store-agnostic via row_dot/row_axpy: identical arithmetic to
+        // the historical dense slice loop, and CSR shards stream their
+        // non-zeros.
         let mut w = w.to_vec();
         let d = shard.d();
         assert_eq!(w.len(), d);
         for i in 0..shard.n() {
             let t = t_start + i as u64;
             let eta = eta0 / (t0 + t as f64);
-            let x = shard.row(i);
-            let xw = vec_ops::dot(x, &w);
-            vec_ops::axpy(&mut w, eta * xw, x);
+            let xw = shard.row_dot(i, &w);
+            shard.row_axpy(i, eta * xw, &mut w);
             vec_ops::normalize(&mut w);
         }
         Ok(w)
     }
 }
+
+/// Product horizon the native oracle assumes when consulting
+/// [`Shard::prefer_gram`]: iterative coordinators (power, Lanczos, Oja
+/// chains) issue at least this many matvec-equivalent products per run.
+///
+/// Deliberately a **fixed constant**, not a running counter: the
+/// materialization decision must be a pure function of the shard shape so
+/// worker numerics stay bit-identical across transport backends and
+/// independent of request interleaving under concurrent multi-tenant
+/// serve (round counts are convergence-dependent, so
+/// interleaving-dependent last-bit drift would make bills
+/// nondeterministic).
+const GRAM_HORIZON: usize = 64;
 
 /// Pure-Rust compute oracle.
 #[derive(Default)]
@@ -110,8 +125,21 @@ pub struct NativeOracle {
     scratch: Vec<f64>,
 }
 
+impl NativeOracle {
+    /// Materialize the shard Gram up front when the
+    /// [`Shard::prefer_gram`] cost model says repeated products amortize
+    /// the build (fixing the "stream O(nd) forever" regression — the
+    /// model used to be computed and never consulted). No-op once cached.
+    fn ensure_preferred_path(shard: &Shard) {
+        if !shard.gram_ready() && shard.prefer_gram(GRAM_HORIZON) {
+            let _ = shard.empirical_covariance();
+        }
+    }
+}
+
 impl ComputeOracle for NativeOracle {
     fn cov_matvec(&mut self, shard: &Shard, v: &[f64]) -> anyhow::Result<Vec<f64>> {
+        Self::ensure_preferred_path(shard);
         let mut out = vec![0.0; shard.d()];
         shard.cov_matvec_into(v, &mut self.scratch, &mut out);
         Ok(out)
@@ -125,6 +153,7 @@ impl ComputeOracle for NativeOracle {
         let d = shard.d();
         anyhow::ensure!(v.rows() == d, "cov_matmat: block must be {d} x k, got {} rows", v.rows());
         anyhow::ensure!(v.cols() >= 1, "cov_matmat: empty block");
+        Self::ensure_preferred_path(shard);
         let mut out = crate::linalg::Matrix::zeros(d, v.cols());
         shard.cov_matmat_into(v, &mut self.scratch, &mut out);
         Ok(out)
@@ -363,6 +392,86 @@ mod tests {
         let mut fallback = LoopOracle(NativeOracle::default());
         let via_loop = fallback.cov_matmat(&s, &v).unwrap();
         assert!(got.sub(&via_loop).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn oracle_materializes_gram_when_cost_model_prefers_it() {
+        // n=30, d=5: the gram build amortizes well inside GRAM_HORIZON
+        let s = shard(30, 5, 21);
+        assert!(s.prefer_gram(GRAM_HORIZON));
+        assert!(!s.gram_ready());
+        // streaming reference from an identical shard the oracle never saw
+        // (clones reset the gram cache)
+        let fresh = s.clone();
+        let v = vec![0.3, -1.0, 0.25, 2.0, -0.5];
+        let streamed = fresh.cov_matvec(&v);
+        assert!(!fresh.gram_ready(), "reference must have streamed");
+        let mut o = NativeOracle::default();
+        let via_oracle = o.cov_matvec(&s, &v).unwrap();
+        assert!(s.gram_ready(), "oracle must wire prefer_gram into the hot path");
+        // regression (ISSUE 6): identical results on both paths
+        for i in 0..5 {
+            assert!(
+                (via_oracle[i] - streamed[i]).abs() < 1e-12,
+                "gram vs streaming mismatch at {i}"
+            );
+        }
+    }
+
+    #[test]
+    fn oracle_keeps_streaming_when_gram_does_not_amortize() {
+        // n=4, d=40: wide shard, gram build + d^2 products lose to
+        // streaming within the horizon
+        let s = shard(4, 40, 22);
+        assert!(!s.prefer_gram(GRAM_HORIZON));
+        let mut o = NativeOracle::default();
+        let v = vec![0.1; 40];
+        let _ = o.cov_matvec(&s, &v).unwrap();
+        assert!(!s.gram_ready(), "oracle must not materialize an unprofitable gram");
+    }
+
+    #[test]
+    fn oracle_serves_csr_shards() {
+        // CSR shard through the full oracle surface the request loop uses
+        let (n, d) = (20, 6);
+        let mut rng = Pcg64::new(23);
+        let mut dense = vec![0.0; n * d];
+        let (mut indptr, mut indices, mut values) = (vec![0usize], Vec::new(), Vec::new());
+        for r in 0..n {
+            for c in 0..d {
+                if c == r % d || rng.next_f64() < 0.4 {
+                    let x = rng.next_gaussian();
+                    dense[r * d + c] = x;
+                    indices.push(c as u32);
+                    values.push(x);
+                }
+            }
+            indptr.push(values.len());
+        }
+        let csr = Shard::from_csr(n, d, indptr, indices, values);
+        let dense = Shard::new(n, d, dense);
+        let mut oc = NativeOracle::default();
+        let mut od = NativeOracle::default();
+        let v = vec![0.5, -0.5, 1.0, 0.0, 0.25, -1.0];
+        let got = oc.cov_matvec(&csr, &v).unwrap();
+        let want = od.cov_matvec(&dense, &v).unwrap();
+        for i in 0..d {
+            assert!((got[i] - want[i]).abs() < 1e-12);
+        }
+        let block = crate::linalg::Matrix::identity(d);
+        let gm = oc.cov_matmat(&csr, &block).unwrap();
+        let gw = od.cov_matmat(&dense, &block).unwrap();
+        assert!(gm.sub(&gw).max_abs() < 1e-12);
+        assert!(oc.gram(&csr).unwrap().sub(&od.gram(&dense).unwrap()).max_abs() < 1e-12);
+        let e = oc.local_top_eigvec(&csr).unwrap();
+        assert!((vec_ops::norm(&e) - 1.0).abs() < 1e-9);
+        // oja default goes through row_dot/row_axpy on both stores
+        let w0 = vec_ops::normalized(&[1.0; 6]);
+        let wc = oc.oja_pass(&csr, &w0, 0.5, 10.0, 0).unwrap();
+        let wd = od.oja_pass(&dense, &w0, 0.5, 10.0, 0).unwrap();
+        for i in 0..d {
+            assert!((wc[i] - wd[i]).abs() < 1e-10);
+        }
     }
 
     #[test]

@@ -144,18 +144,8 @@ fn split_mu_estimate(shard: &Shard, s2: f64) -> f64 {
     let mut a = Matrix::zeros(d, d);
     let mut b = Matrix::zeros(d, d);
     for i in 0..n {
-        let row = shard.row(i);
         let target = if i < half { &mut a } else { &mut b };
-        for r in 0..d {
-            let x = row[r];
-            if x == 0.0 {
-                continue;
-            }
-            let trow = &mut target.data_mut()[r * d..(r + 1) * d];
-            for (t, &y) in trow.iter_mut().zip(row.iter()) {
-                *t += x * y;
-            }
-        }
+        shard.add_row_outer(i, target);
     }
     a.scale_mut(s2 / half as f64);
     b.scale_mut(s2 / (n - half) as f64);

@@ -15,6 +15,20 @@ use crate::rng::Pcg64;
 
 use super::Distribution;
 
+/// The §5 spectrum `diag(1, 0.8, 0.9 * prev, ...)` in dimension `d`
+/// (`delta = 0.2`), shared by [`CovModel::paper_fig1`] and the sparse
+/// generator ([`SparseDiag::paper_fig1`](super::SparseDiag::paper_fig1)).
+pub fn fig1_spectrum(d: usize) -> Vec<f64> {
+    assert!(d >= 2);
+    let mut sigma = Vec::with_capacity(d);
+    sigma.push(1.0);
+    sigma.push(0.8);
+    for j in 2..d {
+        sigma.push(0.9 * sigma[j - 1]);
+    }
+    sigma
+}
+
 /// The population covariance model `X = U Sigma U^T`.
 #[derive(Clone, Debug)]
 pub struct CovModel {
@@ -32,14 +46,7 @@ impl CovModel {
     /// The exact §5 model in dimension `d` with a Haar-random `U` drawn
     /// from `seed`.
     pub fn paper_fig1(d: usize, seed: u64) -> CovModel {
-        assert!(d >= 2);
-        let mut sigma = Vec::with_capacity(d);
-        sigma.push(1.0);
-        sigma.push(0.8);
-        for j in 2..d {
-            sigma.push(0.9 * sigma[j - 1]);
-        }
-        Self::with_spectrum(sigma, seed)
+        Self::with_spectrum(fig1_spectrum(d), seed)
     }
 
     /// Arbitrary descending spectrum with a Haar-random basis.

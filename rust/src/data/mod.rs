@@ -5,6 +5,9 @@
 //! - [`CovModel`] — the §5 experimental covariance model
 //!   `X = U Sigma U^T` with `Sigma = diag(1, 0.8, 0.8*0.9, ...)`, plus its
 //!   gaussian and scaled-uniform samplers (left/right panes of Figure 1).
+//! - [`SparseDiag`] — axis-aligned sparse sampler (coordinates kept with
+//!   probability `density`) whose shards are CSR; the workload the sparse
+//!   shard kernels target.
 //! - [`Thm3Dist`] / [`Thm5Dist`] — the lower-bound constructions from the
 //!   appendix (naive-averaging failure; sign-fixing bias).
 //! - [`Shard`] — one machine's `n x d` sample with its empirical
@@ -13,10 +16,12 @@
 mod cov_model;
 mod lower_bounds;
 mod shard;
+mod sparse;
 
-pub use cov_model::{CovModel, GaussianCov, ScaledUniformCov};
+pub use cov_model::{fig1_spectrum, CovModel, GaussianCov, ScaledUniformCov};
 pub use lower_bounds::{Lemma8Dist, Thm3Dist, Thm5Dist};
 pub use shard::Shard;
+pub use sparse::SparseDiag;
 
 use crate::rng::Pcg64;
 

@@ -1,21 +1,52 @@
 //! One machine's local sample and its empirical-covariance kernels.
 //!
-//! A shard is the `n x d` row-major sample matrix `A`. The empirical
-//! covariance is `Xhat = A^T A / n`; the two operations the paper's
-//! communication model exposes are
+//! A shard is the `n x d` sample matrix `A`, stored **dense** (row-major)
+//! or **CSR sparse** (row pointers + column indices + values). The
+//! empirical covariance is `Xhat = A^T A / n`; the two operations the
+//! paper's communication model exposes are
 //!
 //! - `cov_matvec(v) = Xhat v = A^T (A v) / n` — computed *without*
-//!   forming `Xhat` (O(nd) per product), and
+//!   forming `Xhat` (O(nd) dense / O(nnz) sparse per product), and
 //! - the local leading eigenvector (the machine's ERM solution).
 //!
 //! The Gram matrix is cached after first use (the one-shot estimators and
-//! local eigensolves need it; the iterative algorithms never form it when
-//! `n` is small relative to `d` — see [`Shard::prefer_gram`]).
+//! local eigensolves need it; the iterative algorithms only form it when
+//! the [`Shard::prefer_gram`] cost model says repeated products amortize
+//! the build — the oracle layer consults it, see
+//! [`crate::cluster::NativeOracle`]).
+//!
+//! ## Threading and determinism
+//!
+//! `cov_matvec_into` / `cov_matmat_into` honor the process-global thread
+//! budget ([`crate::linalg::compute_threads`], default 1); the
+//! `*_into_threads` variants take the count explicitly (tests use these so
+//! `cargo test` never mutates process globals). At `threads == 1` the
+//! kernels are the exact scalar loops this repo has always had —
+//! bit-identical to every prior release. At `threads > 1` rows are split
+//! into contiguous panels, each thread accumulates a private `d x k`
+//! partial, and partials are reduced **in panel order** — deterministic at
+//! a fixed thread count, within ~1e-12 elementwise of the scalar result
+//! across thread counts (floating-point reassociation only). Communication
+//! bills never depend on the thread count: kernels change wall clock, not
+//! rounds/messages/bytes.
+//!
+//! ## f32-accumulate fast path
+//!
+//! [`Shard::cov_matmat_f32`] is an explicit opt-in kernel that streams the
+//! same fused product with `f32` accumulators. Per-entry absolute error vs
+//! the f64 kernel is bounded by `gamma * (|A|^T (|A| |V|))_{ij} / n` with
+//! `gamma = (2(n + d) + 8) * 2^-24` (standard dot-product forward error;
+//! checked by the kernel-equivalence suite). It never consults the cached
+//! Gram and is never used implicitly.
 
+use std::fmt;
 use std::sync::OnceLock;
 
+use anyhow::{ensure, Result};
+
 use crate::linalg::eigen::SymEigen;
-use crate::linalg::Matrix;
+use crate::linalg::threads::row_panels;
+use crate::linalg::{vec_ops, Matrix};
 
 /// Sign convention shared with [`SymEigen::leading`]: entry of largest
 /// magnitude made positive.
@@ -34,83 +65,377 @@ fn canonical_sign(mut v: Vec<f64>) -> Vec<f64> {
     v
 }
 
-/// An `n x d` local dataset (row-major).
-#[derive(Debug)]
+/// CSR storage: row `r` holds `indices[indptr[r]..indptr[r+1]]` (strictly
+/// ascending column ids) with matching `values`.
+#[derive(Clone)]
+struct CsrData {
+    n: usize,
+    d: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+impl CsrData {
+    #[inline(always)]
+    fn row(&self, r: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.indptr[r], self.indptr[r + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+}
+
+enum Store {
+    Dense(Matrix),
+    Csr(CsrData),
+}
+
+/// An `n x d` local dataset, dense or CSR sparse.
 pub struct Shard {
-    rows: Matrix,
+    store: Store,
     gram: OnceLock<Matrix>,
+}
+
+impl fmt::Debug for Shard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.store {
+            Store::Dense(m) => write!(f, "Shard(dense {}x{})", m.rows(), m.cols()),
+            Store::Csr(c) => write!(f, "Shard(csr {}x{}, nnz={})", c.n, c.d, c.values.len()),
+        }
+    }
 }
 
 impl Clone for Shard {
     fn clone(&self) -> Self {
-        Shard { rows: self.rows.clone(), gram: OnceLock::new() }
+        let store = match &self.store {
+            Store::Dense(m) => Store::Dense(m.clone()),
+            Store::Csr(c) => Store::Csr(c.clone()),
+        };
+        Shard { store, gram: OnceLock::new() }
     }
 }
 
 impl Shard {
     pub fn new(n: usize, d: usize, data: Vec<f64>) -> Shard {
         assert!(n > 0 && d > 0, "empty shard");
-        Shard { rows: Matrix::from_vec(n, d, data), gram: OnceLock::new() }
+        Shard { store: Store::Dense(Matrix::from_vec(n, d, data)), gram: OnceLock::new() }
     }
 
     pub fn from_matrix(rows: Matrix) -> Shard {
-        Shard { rows, gram: OnceLock::new() }
+        assert!(rows.rows() > 0 && rows.cols() > 0, "empty shard");
+        Shard { store: Store::Dense(rows), gram: OnceLock::new() }
+    }
+
+    /// CSR constructor. Panics on malformed input (programmer error); the
+    /// wire decoder uses [`Shard::try_from_csr`] instead.
+    pub fn from_csr(
+        n: usize,
+        d: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Shard {
+        Shard::try_from_csr(n, d, indptr, indices, values).expect("malformed CSR shard")
+    }
+
+    /// Validating CSR constructor: `indptr` must be a monotone `n + 1`
+    /// prefix-sum ending at `nnz`, per-row column indices strictly
+    /// ascending and `< d`.
+    pub fn try_from_csr(
+        n: usize,
+        d: usize,
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+    ) -> Result<Shard> {
+        ensure!(n > 0 && d > 0, "empty shard");
+        ensure!(indptr.len() == n + 1, "csr: indptr must have n+1 entries");
+        ensure!(indptr[0] == 0, "csr: indptr must start at 0");
+        ensure!(indices.len() == values.len(), "csr: indices/values length mismatch");
+        ensure!(indptr[n] == values.len(), "csr: indptr must end at nnz");
+        for r in 0..n {
+            ensure!(indptr[r] <= indptr[r + 1], "csr: indptr must be monotone");
+            let row = &indices[indptr[r]..indptr[r + 1]];
+            for (i, &c) in row.iter().enumerate() {
+                ensure!((c as usize) < d, "csr: column index {c} out of range (d={d})");
+                ensure!(i == 0 || row[i - 1] < c, "csr: row {r} columns must be ascending");
+            }
+        }
+        Ok(Shard {
+            store: Store::Csr(CsrData { n, d, indptr, indices, values }),
+            gram: OnceLock::new(),
+        })
     }
 
     /// Number of local samples `n`.
     pub fn n(&self) -> usize {
-        self.rows.rows()
+        match &self.store {
+            Store::Dense(m) => m.rows(),
+            Store::Csr(c) => c.n,
+        }
     }
 
     /// Dimension `d`.
     pub fn d(&self) -> usize {
-        self.rows.cols()
+        match &self.store {
+            Store::Dense(m) => m.cols(),
+            Store::Csr(c) => c.d,
+        }
     }
 
-    /// Sample `i` as a slice.
+    /// Stored non-zeros (`n * d` for dense).
+    pub fn nnz(&self) -> usize {
+        match &self.store {
+            Store::Dense(m) => m.rows() * m.cols(),
+            Store::Csr(c) => c.values.len(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.store, Store::Csr(_))
+    }
+
+    /// Dense row-major view, if this shard is dense.
+    pub fn try_dense(&self) -> Option<&Matrix> {
+        match &self.store {
+            Store::Dense(m) => Some(m),
+            Store::Csr(_) => None,
+        }
+    }
+
+    /// CSR view `(indptr, indices, values)`, if this shard is sparse.
+    pub fn csr_parts(&self) -> Option<(&[usize], &[u32], &[f64])> {
+        match &self.store {
+            Store::Dense(_) => None,
+            Store::Csr(c) => Some((&c.indptr, &c.indices, &c.values)),
+        }
+    }
+
+    /// Sample `i` as a slice. Dense shards only — sparse callers use
+    /// [`Shard::row_dot`] / [`Shard::row_axpy`].
     pub fn row(&self, i: usize) -> &[f64] {
-        self.rows.row(i)
+        self.try_dense()
+            .expect("Shard::row: sparse shard has no dense rows; use row_dot/row_axpy")
+            .row(i)
     }
 
-    /// The raw sample matrix.
+    /// The raw sample matrix. Dense shards only.
     pub fn matrix(&self) -> &Matrix {
-        &self.rows
+        self.try_dense()
+            .expect("Shard::matrix: sparse shard has no dense matrix; use csr_parts()")
+    }
+
+    /// `x_i . w` for sample `i` — works on both stores.
+    pub fn row_dot(&self, i: usize, w: &[f64]) -> f64 {
+        match &self.store {
+            Store::Dense(m) => vec_ops::dot(m.row(i), w),
+            Store::Csr(c) => {
+                let (idx, vals) = c.row(i);
+                let mut acc = 0.0;
+                for (&col, &a) in idx.iter().zip(vals.iter()) {
+                    acc += a * w[col as usize];
+                }
+                acc
+            }
+        }
+    }
+
+    /// `out += s * x_i` for sample `i` — works on both stores.
+    pub fn row_axpy(&self, i: usize, s: f64, out: &mut [f64]) {
+        match &self.store {
+            Store::Dense(m) => vec_ops::axpy(out, s, m.row(i)),
+            Store::Csr(c) => {
+                let (idx, vals) = c.row(i);
+                for (&col, &a) in idx.iter().zip(vals.iter()) {
+                    out[col as usize] += s * a;
+                }
+            }
+        }
+    }
+
+    /// `target += x_i x_i^T` for sample `i` — works on both stores.
+    /// `target` must be `d x d`.
+    pub fn add_row_outer(&self, i: usize, target: &mut Matrix) {
+        let d = self.d();
+        assert!(target.rows() == d && target.cols() == d, "add_row_outer: target must be d x d");
+        match &self.store {
+            Store::Dense(m) => {
+                let x = m.row(i);
+                for (ci, &a) in x.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let trow = target.row_mut(ci);
+                    for (t, &b) in trow.iter_mut().zip(x.iter()) {
+                        *t += a * b;
+                    }
+                }
+            }
+            Store::Csr(c) => {
+                let (idx, vals) = c.row(i);
+                for (&ci, &a) in idx.iter().zip(vals.iter()) {
+                    let trow = target.row_mut(ci as usize);
+                    for (&cj, &b) in idx.iter().zip(vals.iter()) {
+                        trow[cj as usize] += a * b;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Whether the Gram has already been materialized (cached).
+    pub fn gram_ready(&self) -> bool {
+        self.gram.get().is_some()
     }
 
     /// Empirical covariance `Xhat_i = A^T A / n` (cached).
     pub fn empirical_covariance(&self) -> &Matrix {
         self.gram.get_or_init(|| {
-            let mut g = self.rows.syrk_t();
-            g.scale_mut(1.0 / self.n() as f64);
+            let n = self.n();
+            let mut g = match &self.store {
+                Store::Dense(m) => m.syrk_t(),
+                Store::Csr(c) => {
+                    let d = c.d;
+                    let mut g = Matrix::zeros(d, d);
+                    for r in 0..c.n {
+                        let (idx, vals) = c.row(r);
+                        // ascending indices: inner j >= i stays in the
+                        // upper triangle, mirrored below
+                        for (ii, (&ci, &a)) in idx.iter().zip(vals.iter()).enumerate() {
+                            let grow = g.row_mut(ci as usize);
+                            for (&cj, &b) in idx[ii..].iter().zip(vals[ii..].iter()) {
+                                grow[cj as usize] += a * b;
+                            }
+                        }
+                    }
+                    for i in 0..d {
+                        for j in (i + 1)..d {
+                            let v = g.get(i, j);
+                            g.set(j, i, v);
+                        }
+                    }
+                    g
+                }
+            };
+            g.scale_mut(1.0 / n as f64);
             g
         })
     }
 
-    /// Whether the cached-Gram path is cheaper for repeated matvecs:
-    /// forming `Xhat` costs `O(n d^2)` once and `O(d^2)` per product vs
-    /// `O(n d)` per product streaming.
+    /// Whether the cached-Gram path is cheaper for `expected_products`
+    /// repeated matvecs: forming `Xhat` costs the one-time build (dense
+    /// `n d^2 / 2`, CSR `sum_r nnz_r^2 / 2`) plus `O(d^2)` per product,
+    /// vs `O(nd)` (dense) / `O(nnz)` (sparse) per streamed product.
     pub fn prefer_gram(&self, expected_products: usize) -> bool {
-        let (n, d) = (self.n() as f64, self.d() as f64);
-        let stream = expected_products as f64 * 2.0 * n * d;
-        let gram = n * d * d / 2.0 + expected_products as f64 * d * d;
-        gram < stream
+        let d = self.d() as f64;
+        let p = expected_products as f64;
+        let (build, stream_per) = match &self.store {
+            Store::Dense(m) => {
+                let n = m.rows() as f64;
+                (n * d * d / 2.0, 2.0 * n * d)
+            }
+            Store::Csr(c) => {
+                let mut build = 0.0;
+                for r in 0..c.n {
+                    let len = (c.indptr[r + 1] - c.indptr[r]) as f64;
+                    build += len * len;
+                }
+                (build / 2.0, 2.0 * c.values.len() as f64)
+            }
+        };
+        build + p * d * d < p * stream_per
     }
 
-    /// `Xhat v` streaming the rows: `A^T (A v) / n`, never forming `Xhat`.
-    /// Allocation-free given a caller scratch buffer of length `n`.
+    /// `Xhat v` without forming `Xhat`: dense shards stream
+    /// `A^T (A v) / n`, CSR shards stream the non-zeros once. Uses the
+    /// cached Gram when already materialized (`O(d^2)` is then cheaper).
+    /// Allocation-free given a caller scratch buffer; the scratch is only
+    /// touched on the dense single-threaded streaming path.
     pub fn cov_matvec_into(&self, v: &[f64], scratch_n: &mut Vec<f64>, out: &mut [f64]) {
-        let n = self.n();
-        scratch_n.resize(n, 0.0);
+        self.cov_matvec_into_threads(v, scratch_n, out, crate::linalg::compute_threads());
+    }
+
+    /// [`Shard::cov_matvec_into`] with an explicit thread count.
+    /// `threads == 1` is the exact scalar kernel (bit-identical to the
+    /// historical implementation); `threads > 1` fuses both stages over
+    /// row panels with per-thread `d`-vector partials reduced in panel
+    /// order.
+    pub fn cov_matvec_into_threads(
+        &self,
+        v: &[f64],
+        scratch_n: &mut Vec<f64>,
+        out: &mut [f64],
+        threads: usize,
+    ) {
+        let (n, d) = (self.n(), self.d());
+        assert_eq!(v.len(), d, "cov_matvec: dim mismatch");
+        assert_eq!(out.len(), d, "cov_matvec: output dim mismatch");
         if let Some(g) = self.gram.get() {
-            // Gram already materialized: O(d^2) product is cheaper.
+            // Gram already materialized: O(d^2) product is cheaper. The
+            // scratch buffer is deliberately untouched on this path.
             g.matvec_into(v, out);
             return;
         }
-        self.rows.matvec_into(v, scratch_n);
-        self.rows.matvec_t_into(scratch_n, out);
         let inv = 1.0 / n as f64;
-        for o in out.iter_mut() {
-            *o *= inv;
+        match (&self.store, threads <= 1 || n == 1) {
+            (Store::Dense(rows), true) => {
+                scratch_n.resize(n, 0.0);
+                rows.matvec_into(v, scratch_n);
+                rows.matvec_t_into(scratch_n, out);
+                for o in out.iter_mut() {
+                    *o *= inv;
+                }
+            }
+            (Store::Dense(rows), false) => {
+                let partials = map_panels(n, threads, |r0, r1| {
+                    let mut partial = vec![0.0; d];
+                    for r in r0..r1 {
+                        let arow = rows.row(r);
+                        let y = vec_ops::dot(arow, v);
+                        if y != 0.0 {
+                            vec_ops::axpy(&mut partial, y, arow);
+                        }
+                    }
+                    partial
+                });
+                reduce_partials(&partials, out, inv);
+            }
+            (Store::Csr(c), true) => {
+                out.iter_mut().for_each(|x| *x = 0.0);
+                for r in 0..n {
+                    let (idx, vals) = c.row(r);
+                    let mut y = 0.0;
+                    for (&col, &a) in idx.iter().zip(vals.iter()) {
+                        y += a * v[col as usize];
+                    }
+                    if y != 0.0 {
+                        for (&col, &a) in idx.iter().zip(vals.iter()) {
+                            out[col as usize] += y * a;
+                        }
+                    }
+                }
+                for o in out.iter_mut() {
+                    *o *= inv;
+                }
+            }
+            (Store::Csr(c), false) => {
+                let partials = map_panels(n, threads, |r0, r1| {
+                    let mut partial = vec![0.0; d];
+                    for r in r0..r1 {
+                        let (idx, vals) = c.row(r);
+                        let mut y = 0.0;
+                        for (&col, &a) in idx.iter().zip(vals.iter()) {
+                            y += a * v[col as usize];
+                        }
+                        if y != 0.0 {
+                            for (&col, &a) in idx.iter().zip(vals.iter()) {
+                                partial[col as usize] += y * a;
+                            }
+                        }
+                    }
+                    partial
+                });
+                reduce_partials(&partials, out, inv);
+            }
         }
     }
 
@@ -123,13 +448,28 @@ impl Shard {
     }
 
     /// Blocked shard-level block product `Xhat V = A^T (A V) / n` for a
-    /// `d x k` basis `V`, never forming `Xhat`. Both stages stream the
-    /// rows of `A` once with a contiguous `k`-wide multiply-accumulate
-    /// inner loop, so the whole block costs one pass over the shard per
-    /// stage instead of `k` separate streaming matvecs — this is the
+    /// `d x k` basis `V`, never forming `Xhat`. The single-threaded dense
+    /// kernel streams the rows of `A` once per stage with a contiguous
+    /// `k`-wide multiply-accumulate inner loop; the threaded kernel fuses
+    /// both stages over row panels (per-thread `d x k` partials, reduced
+    /// in panel order); CSR shards stream non-zeros. This is the
     /// worker-side kernel behind the cluster's one-round block protocol.
-    /// Allocation-free given a caller scratch buffer (`n * k` doubles).
+    /// Allocation-free given a caller scratch buffer (`n * k` doubles;
+    /// only touched on the dense single-threaded path).
     pub fn cov_matmat_into(&self, v: &Matrix, scratch_nk: &mut Vec<f64>, out: &mut Matrix) {
+        self.cov_matmat_into_threads(v, scratch_nk, out, crate::linalg::compute_threads());
+    }
+
+    /// [`Shard::cov_matmat_into`] with an explicit thread count.
+    /// `threads == 1` is the exact scalar kernel (bit-identical to the
+    /// historical implementation).
+    pub fn cov_matmat_into_threads(
+        &self,
+        v: &Matrix,
+        scratch_nk: &mut Vec<f64>,
+        out: &mut Matrix,
+        threads: usize,
+    ) {
         let (n, d) = (self.n(), self.d());
         assert_eq!(v.rows(), d, "cov_matmat: block must be d x k");
         let k = v.cols();
@@ -154,38 +494,94 @@ impl Shard {
             }
             return;
         }
-        // stage 1: Y = A V (n x k), streaming A row by row
-        scratch_nk.clear();
-        scratch_nk.resize(n * k, 0.0);
-        for r in 0..n {
-            let arow = self.rows.row(r);
-            let yrow = &mut scratch_nk[r * k..(r + 1) * k];
-            for (c, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
+        let inv = 1.0 / n as f64;
+        match (&self.store, threads <= 1 || n == 1) {
+            (Store::Dense(rows), true) => {
+                // stage 1: Y = A V (n x k), streaming A row by row
+                scratch_nk.clear();
+                scratch_nk.resize(n * k, 0.0);
+                for r in 0..n {
+                    let arow = rows.row(r);
+                    let yrow = &mut scratch_nk[r * k..(r + 1) * k];
+                    for (c, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let vrow = v.row(c);
+                        for (y, &vv) in yrow.iter_mut().zip(vrow.iter()) {
+                            *y += a * vv;
+                        }
+                    }
                 }
-                let vrow = v.row(c);
-                for (y, &vv) in yrow.iter_mut().zip(vrow.iter()) {
-                    *y += a * vv;
+                // stage 2: out = A^T Y / n, streaming A again (axpy per row)
+                out.data_mut().iter_mut().for_each(|x| *x = 0.0);
+                for r in 0..n {
+                    let arow = rows.row(r);
+                    let yrow = &scratch_nk[r * k..(r + 1) * k];
+                    for (c, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let orow = &mut out.data_mut()[c * k..(c + 1) * k];
+                        for (o, &y) in orow.iter_mut().zip(yrow.iter()) {
+                            *o += a * y;
+                        }
+                    }
                 }
+                out.scale_mut(inv);
+            }
+            (Store::Dense(rows), false) => {
+                let partials = map_panels(n, threads, |r0, r1| {
+                    let mut partial = vec![0.0; d * k];
+                    let mut yrow = vec![0.0; k];
+                    for r in r0..r1 {
+                        let arow = rows.row(r);
+                        yrow.iter_mut().for_each(|y| *y = 0.0);
+                        for (c, &a) in arow.iter().enumerate() {
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let vrow = v.row(c);
+                            for (y, &vv) in yrow.iter_mut().zip(vrow.iter()) {
+                                *y += a * vv;
+                            }
+                        }
+                        for (c, &a) in arow.iter().enumerate() {
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let prow = &mut partial[c * k..(c + 1) * k];
+                            for (p, &y) in prow.iter_mut().zip(yrow.iter()) {
+                                *p += a * y;
+                            }
+                        }
+                    }
+                    partial
+                });
+                reduce_partials(&partials, out.data_mut(), inv);
+            }
+            (Store::Csr(c), true) => {
+                out.data_mut().iter_mut().for_each(|x| *x = 0.0);
+                let mut yrow = vec![0.0; k];
+                for r in 0..n {
+                    let (idx, vals) = c.row(r);
+                    stream_csr_row_matmat(idx, vals, v, &mut yrow, out.data_mut(), k);
+                }
+                out.scale_mut(inv);
+            }
+            (Store::Csr(c), false) => {
+                let partials = map_panels(n, threads, |r0, r1| {
+                    let mut partial = vec![0.0; d * k];
+                    let mut yrow = vec![0.0; k];
+                    for r in r0..r1 {
+                        let (idx, vals) = c.row(r);
+                        stream_csr_row_matmat(idx, vals, v, &mut yrow, &mut partial, k);
+                    }
+                    partial
+                });
+                reduce_partials(&partials, out.data_mut(), inv);
             }
         }
-        // stage 2: out = A^T Y / n, streaming A again (axpy per row)
-        out.data_mut().iter_mut().for_each(|x| *x = 0.0);
-        for r in 0..n {
-            let arow = self.rows.row(r);
-            let yrow = &scratch_nk[r * k..(r + 1) * k];
-            for (c, &a) in arow.iter().enumerate() {
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = &mut out.data_mut()[c * k..(c + 1) * k];
-                for (o, &y) in orow.iter_mut().zip(yrow.iter()) {
-                    *o += a * y;
-                }
-            }
-        }
-        out.scale_mut(1.0 / n as f64);
     }
 
     /// Convenience allocating form of [`Shard::cov_matmat_into`].
@@ -194,6 +590,68 @@ impl Shard {
         let mut out = Matrix::zeros(self.d(), v.cols());
         self.cov_matmat_into(v, &mut scratch, &mut out);
         out
+    }
+
+    /// Explicit opt-in f32-accumulate block product: the fused streaming
+    /// kernel with `f32` accumulators (inputs cast once). Per-entry
+    /// absolute error vs [`Shard::cov_matmat`] is bounded by
+    /// `gamma * (|A|^T (|A| |V|))_{ij} / n` with
+    /// `gamma = (2(n + d) + 8) * 2^-24` — see the module docs. Never uses
+    /// the cached Gram; never used implicitly by the oracle layer.
+    pub fn cov_matmat_f32(&self, v: &Matrix) -> Matrix {
+        let (n, d) = (self.n(), self.d());
+        assert_eq!(v.rows(), d, "cov_matmat_f32: block must be d x k");
+        let k = v.cols();
+        let vf: Vec<f32> = v.data().iter().map(|&x| x as f32).collect();
+        let mut acc = vec![0.0f32; d * k];
+        let mut yrow = vec![0.0f32; k];
+        for r in 0..n {
+            yrow.iter_mut().for_each(|y| *y = 0.0);
+            match &self.store {
+                Store::Dense(m) => {
+                    let arow = m.row(r);
+                    for (c, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let a32 = a as f32;
+                        let vrow = &vf[c * k..(c + 1) * k];
+                        for (y, &vv) in yrow.iter_mut().zip(vrow.iter()) {
+                            *y += a32 * vv;
+                        }
+                    }
+                    for (c, &a) in arow.iter().enumerate() {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let a32 = a as f32;
+                        let prow = &mut acc[c * k..(c + 1) * k];
+                        for (p, &y) in prow.iter_mut().zip(yrow.iter()) {
+                            *p += a32 * y;
+                        }
+                    }
+                }
+                Store::Csr(c) => {
+                    let (idx, vals) = c.row(r);
+                    for (&col, &a) in idx.iter().zip(vals.iter()) {
+                        let a32 = a as f32;
+                        let vrow = &vf[col as usize * k..(col as usize + 1) * k];
+                        for (y, &vv) in yrow.iter_mut().zip(vrow.iter()) {
+                            *y += a32 * vv;
+                        }
+                    }
+                    for (&col, &a) in idx.iter().zip(vals.iter()) {
+                        let a32 = a as f32;
+                        let prow = &mut acc[col as usize * k..(col as usize + 1) * k];
+                        for (p, &y) in prow.iter_mut().zip(yrow.iter()) {
+                            *p += a32 * y;
+                        }
+                    }
+                }
+            }
+        }
+        let inv = 1.0 / n as f64;
+        Matrix::from_vec(d, k, acc.iter().map(|&x| x as f64 * inv).collect())
     }
 
     /// Local ERM: eigendecomposition of the empirical covariance.
@@ -250,15 +708,96 @@ impl Shard {
 
     /// Largest squared row norm — the empirical `b`.
     pub fn max_row_norm_sq(&self) -> f64 {
-        (0..self.n())
-            .map(|i| crate::linalg::vec_ops::dot(self.row(i), self.row(i)))
-            .fold(0.0, f64::max)
+        match &self.store {
+            Store::Dense(m) => (0..m.rows())
+                .map(|i| vec_ops::dot(m.row(i), m.row(i)))
+                .fold(0.0, f64::max),
+            Store::Csr(c) => (0..c.n)
+                .map(|r| {
+                    let (_, vals) = c.row(r);
+                    vals.iter().map(|a| a * a).sum::<f64>()
+                })
+                .fold(0.0, f64::max),
+        }
     }
 
     /// Rescale all samples by `s` (used to normalize to `b = 1` for the
     /// Shift-and-Invert algorithm, which the paper assumes w.l.o.g.).
+    /// Preserves the storage format.
     pub fn rescaled(&self, s: f64) -> Shard {
-        Shard::from_matrix(self.rows.scale(s))
+        match &self.store {
+            Store::Dense(m) => Shard::from_matrix(m.scale(s)),
+            Store::Csr(c) => {
+                let mut scaled = c.clone();
+                for v in &mut scaled.values {
+                    *v *= s;
+                }
+                Shard { store: Store::Csr(scaled), gram: OnceLock::new() }
+            }
+        }
+    }
+}
+
+/// Run `work(r0, r1)` over contiguous row panels on `threads` scoped
+/// threads; returns the per-panel results **in panel order**.
+fn map_panels<T, F>(total_rows: usize, threads: usize, work: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, usize) -> T + Sync,
+{
+    let panels = row_panels(total_rows, threads);
+    if panels.len() == 1 {
+        return vec![work(0, total_rows)];
+    }
+    let work = &work;
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            panels.iter().map(|&(r0, r1)| s.spawn(move || work(r0, r1))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("shard kernel panel thread panicked"))
+            .collect()
+    })
+}
+
+/// Sum per-panel partials into `out` (zeroed first) in panel order, then
+/// scale by `inv` — the deterministic reduction shared by the threaded
+/// kernels.
+fn reduce_partials(partials: &[Vec<f64>], out: &mut [f64], inv: f64) {
+    out.iter_mut().for_each(|x| *x = 0.0);
+    for partial in partials {
+        for (o, &p) in out.iter_mut().zip(partial.iter()) {
+            *o += p;
+        }
+    }
+    for o in out.iter_mut() {
+        *o *= inv;
+    }
+}
+
+/// One CSR row of the fused block kernel: `yrow = x_r^T V`, then
+/// `acc += x_r yrow` (rank-1 update on the touched coordinates only).
+#[inline(always)]
+fn stream_csr_row_matmat(
+    idx: &[u32],
+    vals: &[f64],
+    v: &Matrix,
+    yrow: &mut [f64],
+    acc: &mut [f64],
+    k: usize,
+) {
+    yrow.iter_mut().for_each(|y| *y = 0.0);
+    for (&col, &a) in idx.iter().zip(vals.iter()) {
+        let vrow = v.row(col as usize);
+        for (y, &vv) in yrow.iter_mut().zip(vrow.iter()) {
+            *y += a * vv;
+        }
+    }
+    for (&col, &a) in idx.iter().zip(vals.iter()) {
+        let arow = &mut acc[col as usize * k..(col as usize + 1) * k];
+        for (o, &y) in arow.iter_mut().zip(yrow.iter()) {
+            *o += a * y;
+        }
     }
 }
 
@@ -271,6 +810,27 @@ mod tests {
     fn random_shard(n: usize, d: usize, seed: u64) -> Shard {
         let mut rng = Pcg64::new(seed);
         Shard::new(n, d, (0..n * d).map(|_| rng.next_gaussian()).collect())
+    }
+
+    /// A CSR shard plus the equivalent dense shard, ~`density` fill.
+    fn random_csr_pair(n: usize, d: usize, density: f64, seed: u64) -> (Shard, Shard) {
+        let mut rng = Pcg64::new(seed);
+        let mut dense = vec![0.0; n * d];
+        let (mut indptr, mut indices, mut values) = (vec![0usize], Vec::new(), Vec::new());
+        for r in 0..n {
+            for c in 0..d {
+                // guarantee at least one entry on the diagonal band so no
+                // row is empty-by-chance in tiny tests
+                if rng.next_f64() < density || c == r % d {
+                    let x = rng.next_gaussian();
+                    dense[r * d + c] = x;
+                    indices.push(c as u32);
+                    values.push(x);
+                }
+            }
+            indptr.push(values.len());
+        }
+        (Shard::new(n, d, dense), Shard::from_csr(n, d, indptr, indices, values))
     }
 
     #[test]
@@ -355,6 +915,143 @@ mod tests {
     }
 
     #[test]
+    fn gram_path_matvec_leaves_scratch_untouched() {
+        // regression (ISSUE 6): the n-length scratch used to be resized
+        // *before* the cached-Gram check — a wasted alloc/touch per call
+        let s = random_shard(30, 5, 40);
+        let _ = s.empirical_covariance(); // materialize
+        let v = vec![1.0; 5];
+        let mut scratch: Vec<f64> = Vec::new();
+        let mut out = vec![0.0; 5];
+        s.cov_matvec_into(&v, &mut scratch, &mut out);
+        assert!(scratch.is_empty(), "gram path must not touch the scratch buffer");
+    }
+
+    #[test]
+    fn threaded_cov_kernels_match_scalar() {
+        let s = random_shard(67, 9, 41);
+        let mut rng = Pcg64::new(42);
+        let v = rng.gaussian_vec(9);
+        let block =
+            crate::linalg::Matrix::from_vec(9, 3, (0..27).map(|_| rng.next_gaussian()).collect());
+        let mut scratch = Vec::new();
+        let mut want_v = vec![0.0; 9];
+        s.cov_matvec_into_threads(&v, &mut scratch, &mut want_v, 1);
+        let mut want_m = crate::linalg::Matrix::zeros(9, 3);
+        s.cov_matmat_into_threads(&block, &mut scratch, &mut want_m, 1);
+        for t in [2, 4, 8] {
+            let mut got_v = vec![0.0; 9];
+            s.cov_matvec_into_threads(&v, &mut scratch, &mut got_v, t);
+            for i in 0..9 {
+                assert!((got_v[i] - want_v[i]).abs() < 1e-12, "matvec t={t} i={i}");
+            }
+            let mut got_m = crate::linalg::Matrix::zeros(9, 3);
+            s.cov_matmat_into_threads(&block, &mut scratch, &mut got_m, t);
+            assert!(got_m.sub(&want_m).max_abs() < 1e-12, "matmat t={t}");
+        }
+    }
+
+    #[test]
+    fn csr_shard_matches_dense_on_core_kernels() {
+        let (dense, csr) = random_csr_pair(30, 8, 0.3, 43);
+        assert!(csr.is_sparse() && !dense.is_sparse());
+        assert_eq!(csr.n(), 30);
+        assert_eq!(csr.d(), 8);
+        assert!(csr.nnz() < dense.nnz());
+        let mut rng = Pcg64::new(44);
+        let v = rng.gaussian_vec(8);
+        let got = csr.cov_matvec(&v);
+        let want = dense.cov_matvec(&v);
+        for i in 0..8 {
+            assert!((got[i] - want[i]).abs() < 1e-12);
+        }
+        assert!(
+            csr.empirical_covariance().sub(dense.empirical_covariance()).max_abs() < 1e-12
+        );
+        assert!((csr.max_row_norm_sq() - dense.max_row_norm_sq()).abs() < 1e-12);
+        for i in [0usize, 7, 29] {
+            assert!((csr.row_dot(i, &v) - dense.row_dot(i, &v)).abs() < 1e-12);
+            let mut a = vec![1.0; 8];
+            let mut b = vec![1.0; 8];
+            csr.row_axpy(i, 0.5, &mut a);
+            dense.row_axpy(i, 0.5, &mut b);
+            for j in 0..8 {
+                assert!((a[j] - b[j]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn csr_rescaled_scales_covariance_quadratically() {
+        let (_, csr) = random_csr_pair(20, 6, 0.4, 45);
+        let csr2 = csr.rescaled(0.5);
+        assert!(csr2.is_sparse());
+        let g1 = csr.empirical_covariance();
+        let g2 = csr2.empirical_covariance();
+        assert!(g2.sub(&g1.scale(0.25)).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn add_row_outer_matches_gram_accumulation() {
+        let (dense, csr) = random_csr_pair(10, 5, 0.5, 46);
+        for shard in [&dense, &csr] {
+            let mut acc = crate::linalg::Matrix::zeros(5, 5);
+            for i in 0..10 {
+                shard.add_row_outer(i, &mut acc);
+            }
+            acc.scale_mut(1.0 / 10.0);
+            assert!(acc.sub(shard.empirical_covariance()).max_abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn try_from_csr_rejects_malformed_input() {
+        // bad indptr tail
+        assert!(Shard::try_from_csr(2, 3, vec![0, 1, 3], vec![0, 1], vec![1.0, 2.0]).is_err());
+        // out-of-range column
+        assert!(Shard::try_from_csr(1, 3, vec![0, 1], vec![3], vec![1.0]).is_err());
+        // non-ascending columns within a row
+        assert!(
+            Shard::try_from_csr(1, 3, vec![0, 2], vec![1, 1], vec![1.0, 2.0]).is_err()
+        );
+        // non-monotone indptr
+        assert!(
+            Shard::try_from_csr(2, 3, vec![0, 2, 1], vec![0, 1, 2], vec![1.0; 3]).is_err()
+        );
+        // valid
+        assert!(Shard::try_from_csr(2, 3, vec![0, 1, 2], vec![2, 0], vec![1.0, 2.0]).is_ok());
+    }
+
+    #[test]
+    fn cov_matmat_f32_within_documented_bound() {
+        let s = random_shard(60, 7, 47);
+        let mut rng = Pcg64::new(48);
+        let v = crate::linalg::Matrix::from_vec(
+            7,
+            3,
+            (0..21).map(|_| rng.next_gaussian()).collect(),
+        );
+        let exact = s.cov_matmat(&v);
+        let fast = s.cov_matmat_f32(&v);
+        // bound: gamma * |A|^T (|A| |V|) / n, via the same kernel on abs values
+        let abs_shard =
+            Shard::new(60, 7, s.matrix().data().iter().map(|x| x.abs()).collect());
+        let abs_v =
+            crate::linalg::Matrix::from_vec(7, 3, v.data().iter().map(|x| x.abs()).collect());
+        let bound = abs_shard.cov_matmat(&abs_v);
+        let gamma = (2.0 * (60.0 + 7.0) + 8.0) * 2f64.powi(-24);
+        for i in 0..7 {
+            for c in 0..3 {
+                let err = (fast.get(i, c) - exact.get(i, c)).abs();
+                assert!(
+                    err <= gamma * bound.get(i, c) + 1e-12,
+                    "f32 error {err:.3e} exceeds bound at ({i},{c})"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn local_top_eigvec_solves_erm() {
         let s = random_shard(200, 6, 5);
         let v = s.local_top_eigvec();
@@ -383,6 +1080,18 @@ mod tests {
     }
 
     #[test]
+    fn prefer_gram_sparse_accounts_for_nnz() {
+        // very sparse wide shard: streaming O(nnz) beats the dense d^2
+        // gram product even for many repeated matvecs
+        let (_, csr) = random_csr_pair(50, 40, 0.05, 49);
+        assert!(!csr.prefer_gram(1));
+        assert!(!csr.prefer_gram(100_000));
+        // dense-ish sparse storage on a small d behaves like dense
+        let (_, csr2) = random_csr_pair(200, 6, 0.9, 50);
+        assert!(csr2.prefer_gram(1000));
+    }
+
+    #[test]
     fn max_row_norm_sq_is_max() {
         let s = Shard::new(2, 2, vec![3.0, 4.0, 1.0, 0.0]);
         assert!((s.max_row_norm_sq() - 25.0).abs() < 1e-15);
@@ -392,5 +1101,12 @@ mod tests {
     #[should_panic]
     fn empty_shard_panics() {
         let _ = Shard::new(0, 3, vec![]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn sparse_shard_dense_row_access_panics() {
+        let s = Shard::from_csr(1, 2, vec![0, 1], vec![0], vec![1.0]);
+        let _ = s.row(0);
     }
 }

@@ -1,0 +1,214 @@
+//! Sparse synthetic distribution (ISSUE 6): the workload the CSR shard
+//! kernels exist for.
+//!
+//! [`SparseDiag`] draws rows whose coordinates are independently zero
+//! with probability `1 - density`; a kept coordinate `j` is gaussian
+//! with variance `sigma_j / density`, so the population covariance is
+//! exactly `diag(sigma)` — axis-aligned, `v1 = e1`, eigengap
+//! `sigma_1 - sigma_2` — and every estimator/baseline that consumes a
+//! [`Distribution`] runs unchanged on sparse data.
+//!
+//! **Dense/CSR equivalence is bit-exact by construction**: the
+//! [`Distribution::sample_shard`] override emits a CSR shard but
+//! consumes the RNG in *exactly* the per-coordinate order
+//! [`SparseDiag::sample_into`] does (one uniform inclusion coin per
+//! coordinate, one gaussian per kept coordinate), so a CSR shard and
+//! the dense shard built row-by-row from the same seed hold the same
+//! values bit for bit. The experiments lean on this: E9/E12 sparse
+//! runs are the dense runs with a different storage format, and the
+//! bills must not move.
+
+use crate::rng::Pcg64;
+
+use super::cov_model::fig1_spectrum;
+use super::{CovModel, Distribution, Shard};
+
+/// Axis-aligned sparse distribution with covariance `diag(sigma)`.
+pub struct SparseDiag {
+    /// Spectrum, descending (`= the population eigenvalues`).
+    sigma: Vec<f64>,
+    /// Per-coordinate keep probability in `(0, 1]`.
+    density: f64,
+    /// `e1` — the leading population eigenvector.
+    v1: Vec<f64>,
+    /// `sqrt(sigma_j / density)` — the kept-coordinate scale that makes
+    /// `E[x_j^2] = sigma_j` exactly.
+    scale: Vec<f64>,
+    norm_bound_sq: f64,
+}
+
+impl SparseDiag {
+    /// Sparse distribution with the given descending spectrum and
+    /// per-coordinate keep probability `density` in `(0, 1]`.
+    pub fn new(sigma: Vec<f64>, density: f64) -> SparseDiag {
+        let d = sigma.len();
+        assert!(d >= 2, "need d >= 2 for an eigengap");
+        for w in sigma.windows(2) {
+            assert!(w[0] >= w[1], "spectrum must be descending");
+        }
+        assert!(sigma[d - 1] >= 0.0, "spectrum must be PSD");
+        assert!(
+            density > 0.0 && density <= 1.0,
+            "density must be in (0, 1], got {density}"
+        );
+        let mut v1 = vec![0.0; d];
+        v1[0] = 1.0;
+        let scale: Vec<f64> = sigma.iter().map(|s| (s / density).sqrt()).collect();
+        // E||x||^2 = tr(Sigma) but each kept coordinate is inflated by
+        // 1/density, so the high-probability envelope scales with it
+        // (same 4x slack convention as the gaussian sampler's).
+        let tr: f64 = sigma.iter().sum();
+        SparseDiag { sigma, density, v1, scale, norm_bound_sq: 4.0 * tr / density }
+    }
+
+    /// The §5 spectrum ([`fig1_spectrum`]) at keep probability
+    /// `density` — the sparse twin of [`CovModel::paper_fig1`], minus
+    /// the Haar rotation (a rotated sparse vector is dense).
+    pub fn paper_fig1(d: usize, density: f64) -> SparseDiag {
+        SparseDiag::new(fig1_spectrum(d), density)
+    }
+
+    /// Keep probability.
+    pub fn density(&self) -> f64 {
+        self.density
+    }
+
+    /// The population model (`axis_aligned`, so `top_k_basis`-style
+    /// reference subspaces work unchanged on sparse runs).
+    pub fn model(&self) -> CovModel {
+        CovModel::axis_aligned(self.sigma.clone())
+    }
+}
+
+impl Distribution for SparseDiag {
+    fn dim(&self) -> usize {
+        self.sigma.len()
+    }
+
+    fn sample_into(&self, rng: &mut Pcg64, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.sigma.len());
+        for (j, o) in out.iter_mut().enumerate() {
+            // one inclusion coin per coordinate, one gaussian per kept
+            // coordinate — the exact consumption order sample_shard
+            // mirrors, which is what makes dense == CSR bit-exact
+            if rng.next_f64() < self.density {
+                *o = self.scale[j] * rng.next_gaussian();
+            } else {
+                *o = 0.0;
+            }
+        }
+    }
+
+    /// CSR-emitting override: same draws as [`SparseDiag::sample_into`]
+    /// row by row, stored sparse.
+    fn sample_shard(&self, rng: &mut Pcg64, n: usize) -> Shard {
+        let d = self.dim();
+        let expected = ((n * d) as f64 * self.density) as usize + 8;
+        let mut indptr = Vec::with_capacity(n + 1);
+        indptr.push(0);
+        let mut indices: Vec<u32> = Vec::with_capacity(expected);
+        let mut values: Vec<f64> = Vec::with_capacity(expected);
+        for _ in 0..n {
+            for j in 0..d {
+                if rng.next_f64() < self.density {
+                    indices.push(j as u32);
+                    values.push(self.scale[j] * rng.next_gaussian());
+                }
+            }
+            indptr.push(values.len());
+        }
+        Shard::from_csr(n, d, indptr, indices, values)
+    }
+
+    fn v1(&self) -> &[f64] {
+        &self.v1
+    }
+
+    fn eigengap(&self) -> f64 {
+        self.sigma[0] - self.sigma[1]
+    }
+
+    fn lambda1(&self) -> f64 {
+        self.sigma[0]
+    }
+
+    fn norm_bound_sq(&self) -> f64 {
+        self.norm_bound_sq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csr_shard_matches_dense_rows_bit_for_bit() {
+        let dist = SparseDiag::paper_fig1(9, 0.3);
+        let n = 40;
+        let sparse = dist.sample_shard(&mut Pcg64::new(71), n);
+        assert!(sparse.is_sparse());
+        // dense twin from the same seed via the per-row sampler
+        let mut rng = Pcg64::new(71);
+        let mut row = vec![0.0; 9];
+        for i in 0..n {
+            dist.sample_into(&mut rng, &mut row);
+            for (j, want) in row.iter().enumerate() {
+                let got = sparse.csr_parts().map(|(ip, ix, vals)| {
+                    let (lo, hi) = (ip[i], ip[i + 1]);
+                    ix[lo..hi]
+                        .iter()
+                        .position(|&c| c as usize == j)
+                        .map_or(0.0, |p| vals[lo + p])
+                });
+                assert_eq!(got.unwrap().to_bits(), want.to_bits(), "row {i} col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn empirical_covariance_converges_to_diag_sigma() {
+        let dist = SparseDiag::paper_fig1(6, 0.3);
+        let shard = dist.sample_shard(&mut Pcg64::new(5), 60_000);
+        let emp = shard.empirical_covariance();
+        for r in 0..6 {
+            for c in 0..6 {
+                let want = if r == c { dist.sigma[r] } else { 0.0 };
+                let got = emp.get(r, c);
+                assert!((got - want).abs() < 0.1, "cov[{r}][{c}] = {got}, want {want}");
+            }
+        }
+    }
+
+    #[test]
+    fn nnz_tracks_density() {
+        let dist = SparseDiag::paper_fig1(20, 0.1);
+        let shard = dist.sample_shard(&mut Pcg64::new(13), 2_000);
+        let frac = shard.nnz() as f64 / (2_000.0 * 20.0);
+        assert!((frac - 0.1).abs() < 0.02, "nnz fraction {frac} far from density 0.1");
+    }
+
+    #[test]
+    fn population_facts_are_axis_aligned() {
+        let dist = SparseDiag::paper_fig1(8, 0.5);
+        assert_eq!(dist.dim(), 8);
+        assert_eq!(dist.v1()[0], 1.0);
+        assert!(dist.v1()[1..].iter().all(|&x| x == 0.0));
+        assert!((dist.eigengap() - 0.2).abs() < 1e-15);
+        assert_eq!(dist.lambda1(), 1.0);
+        assert_eq!(dist.model().spectrum(), CovModel::paper_fig1(8, 3).spectrum());
+        assert!(dist.norm_bound_sq() > 0.0);
+    }
+
+    #[test]
+    fn full_density_rows_are_fully_dense() {
+        let dist = SparseDiag::new(vec![2.0, 1.0, 0.5], 1.0);
+        let shard = dist.sample_shard(&mut Pcg64::new(3), 25);
+        assert_eq!(shard.nnz(), 25 * 3, "density 1.0 keeps every coordinate");
+    }
+
+    #[test]
+    #[should_panic(expected = "density must be in (0, 1]")]
+    fn zero_density_is_rejected() {
+        let _ = SparseDiag::new(vec![1.0, 0.5], 0.0);
+    }
+}

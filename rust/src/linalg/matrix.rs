@@ -126,18 +126,50 @@ impl Matrix {
         t
     }
 
-    /// `self * other` with cache-blocked i-k-j GEMM.
+    /// `self * other` with cache-blocked i-k-j GEMM, parallelized over
+    /// output row panels per the process-global thread budget
+    /// ([`crate::linalg::compute_threads`]).
     pub fn matmul(&self, other: &Matrix) -> Matrix {
+        self.matmul_threads(other, crate::linalg::compute_threads())
+    }
+
+    /// [`Matrix::matmul`] with an explicit thread count. Each output row
+    /// is computed by exactly one thread in the same blocked loop order
+    /// as the scalar kernel, so the result is **bit-identical** at any
+    /// thread count (owner-computes: no cross-thread reduction).
+    pub fn matmul_threads(&self, other: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul: inner dims mismatch");
         let (m, k, n) = (self.rows, self.cols, other.cols);
         let mut out = Matrix::zeros(m, n);
-        for ib in (0..m).step_by(GEMM_BLOCK) {
-            let imax = (ib + GEMM_BLOCK).min(m);
+        // Small products are not worth a thread spawn.
+        let t = if m.saturating_mul(k).saturating_mul(n) < 1 << 16 { 1 } else { threads };
+        let panels = crate::linalg::threads::row_panels(m, t);
+        if panels.len() == 1 {
+            self.gemm_panel(other, 0, &mut out.data);
+            return out;
+        }
+        std::thread::scope(|s| {
+            let mut rest: &mut [f64] = &mut out.data;
+            for &(r0, r1) in &panels {
+                let (panel, tail) = std::mem::take(&mut rest).split_at_mut((r1 - r0) * n);
+                rest = tail;
+                s.spawn(move || self.gemm_panel(other, r0, panel));
+            }
+        });
+        out
+    }
+
+    /// Blocked i-k-j GEMM for output rows `r0..r0 + out_panel.len()/n`.
+    fn gemm_panel(&self, other: &Matrix, r0: usize, out_panel: &mut [f64]) {
+        let (k, n) = (self.cols, other.cols);
+        let rows = out_panel.len() / n.max(1);
+        for ib in (0..rows).step_by(GEMM_BLOCK) {
+            let imax = (ib + GEMM_BLOCK).min(rows);
             for kb in (0..k).step_by(GEMM_BLOCK) {
                 let kmax = (kb + GEMM_BLOCK).min(k);
                 for i in ib..imax {
-                    let arow = &self.data[i * k..(i + 1) * k];
-                    let orow = &mut out.data[i * n..(i + 1) * n];
+                    let arow = &self.data[(r0 + i) * k..(r0 + i + 1) * k];
+                    let orow = &mut out_panel[i * n..(i + 1) * n];
                     for p in kb..kmax {
                         let a = arow[p];
                         if a == 0.0 {
@@ -151,7 +183,6 @@ impl Matrix {
                 }
             }
         }
-        out
     }
 
     /// `self * v` (GEMV). Output has length `rows`.
@@ -377,6 +408,21 @@ mod tests {
                 }
                 assert!((acc - c.get(i, j)).abs() < 1e-10, "mismatch at ({i},{j})");
             }
+        }
+    }
+
+    #[test]
+    fn matmul_threads_bit_identical_to_scalar() {
+        // owner-computes partitioning: per-row loop order is unchanged,
+        // so every thread count must produce the exact same bits
+        let (m, k, n) = (90, 70, 40); // m*k*n > the spawn threshold
+        let mut rng = crate::rng::Pcg64::new(6);
+        let a = Matrix::from_vec(m, k, (0..m * k).map(|_| rng.next_f64() - 0.5).collect());
+        let b = Matrix::from_vec(k, n, (0..k * n).map(|_| rng.next_f64() - 0.5).collect());
+        let scalar = a.matmul_threads(&b, 1);
+        for t in [2, 3, 8, 64] {
+            let threaded = a.matmul_threads(&b, t);
+            assert_eq!(threaded.data(), scalar.data(), "t={t} must be bit-identical");
         }
     }
 

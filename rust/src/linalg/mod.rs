@@ -16,16 +16,21 @@
 //! - [`jacobi`] — cyclic Jacobi eigensolver, kept as an independent
 //!   cross-check oracle for the QL implementation.
 //! - [`eigen2x2`] — analytic 2x2 eigenvectors (Thm 3 / Thm 5 constructions).
+//! - [`threads`] — the process-global compute-thread budget the blocked
+//!   GEMM and the shard covariance kernels honor (`--threads` /
+//!   `DSPCA_THREADS`; default 1 = the exact scalar kernels).
 
 pub mod eigen;
 pub mod eigen2x2;
 pub mod jacobi;
 pub mod matrix;
 pub mod qr;
+pub mod threads;
 pub mod vec_ops;
 
 pub use eigen::SymEigen;
 pub use matrix::Matrix;
+pub use threads::{compute_threads, set_compute_threads};
 
 /// Machine-epsilon-scale tolerance used by the iterative eigensolvers.
 pub const EIG_TOL: f64 = 1e-13;

@@ -1,0 +1,96 @@
+//! Process-global compute-thread budget for the shard/matrix kernels.
+//!
+//! The kernels in [`crate::linalg::matrix`] and [`crate::data::shard`]
+//! take an explicit thread count in their `*_threads` variants; the
+//! plain entry points read this global. Default is **1** (the exact
+//! scalar kernels the repo has always had), overridable by the
+//! `DSPCA_THREADS` env var at startup or the `--threads` CLI flag via
+//! [`set_compute_threads`].
+//!
+//! Tests never mutate this global implicitly: equivalence suites use
+//! the explicit `*_threads` kernel variants so `cargo test` stays
+//! order-independent (the ISSUE 6 bench-harness env race must not be
+//! reintroduced here).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// 0 means "not yet initialized"; first read resolves `DSPCA_THREADS`.
+static THREADS: AtomicUsize = AtomicUsize::new(0);
+
+fn env_default() -> usize {
+    match std::env::var("DSPCA_THREADS") {
+        Ok(v) => v.trim().parse::<usize>().ok().filter(|&t| t >= 1).unwrap_or(1),
+        Err(_) => 1,
+    }
+}
+
+/// Current compute-thread budget (`>= 1`).
+pub fn compute_threads() -> usize {
+    let t = THREADS.load(Ordering::Relaxed);
+    if t != 0 {
+        return t;
+    }
+    static INIT: OnceLock<usize> = OnceLock::new();
+    let resolved = *INIT.get_or_init(env_default);
+    // Publish only if nobody called `set_compute_threads` in between.
+    let _ = THREADS.compare_exchange(0, resolved, Ordering::Relaxed, Ordering::Relaxed);
+    THREADS.load(Ordering::Relaxed).max(1)
+}
+
+/// Set the compute-thread budget (clamped to `>= 1`). Wins over
+/// `DSPCA_THREADS`.
+pub fn set_compute_threads(threads: usize) {
+    THREADS.store(threads.max(1), Ordering::Relaxed);
+}
+
+/// Split `total_rows` into at most `threads` contiguous, near-equal
+/// `[start, end)` panels (earlier panels get the remainder). Never
+/// returns an empty panel; returns a single panel covering everything
+/// when `threads <= 1` or `total_rows` is small.
+pub(crate) fn row_panels(total_rows: usize, threads: usize) -> Vec<(usize, usize)> {
+    let t = threads.clamp(1, total_rows.max(1));
+    let base = total_rows / t;
+    let extra = total_rows % t;
+    let mut panels = Vec::with_capacity(t);
+    let mut start = 0;
+    for i in 0..t {
+        let len = base + usize::from(i < extra);
+        panels.push((start, start + len));
+        start += len;
+    }
+    debug_assert_eq!(start, total_rows);
+    panels
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn row_panels_cover_and_partition() {
+        for &(rows, t) in &[(10usize, 3usize), (7, 8), (64, 4), (1, 16), (100, 1)] {
+            let p = row_panels(rows, t);
+            assert!(p.len() <= t.max(1));
+            assert_eq!(p[0].0, 0);
+            assert_eq!(p.last().unwrap().1, rows);
+            for w in p.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "panels must be contiguous");
+                assert!(w[0].1 > w[0].0, "panels must be non-empty");
+            }
+        }
+    }
+
+    #[test]
+    fn row_panels_near_equal() {
+        let p = row_panels(10, 3);
+        let sizes: Vec<usize> = p.iter().map(|&(a, b)| b - a).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn compute_threads_is_at_least_one() {
+        // Read-only: must not mutate the global (order-independence).
+        assert!(compute_threads() >= 1);
+    }
+}

@@ -5,23 +5,34 @@
 //! dspca figure1   [--dist gaussian|uniform] [--d 300] [--m 25]
 //!                 [--n-list 25,50,...] [--runs 40] [--out results/]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
-//!                 [--io-timeout-secs 20]
+//!                 [--io-timeout-secs 20] [--threads 4]
 //! dspca table1    [--d 300] [--m 25] [--n 400] [--runs 12]
 //! dspca lower-bounds [--runs 60]
 //! dspca scaling   [--n-sweep | --m-sweep]
 //! dspca topk      [--d 60] [--m 8] [--n 400] [--k-list 1,2,4,8] [--runs 8]
+//!                 [--threads 4] [--density 0.05]
 //! dspca wire      [--d 60] [--m 8] [--n 400] [--runs 8]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
 //!                 [--io-timeout-secs 20]
 //! dspca serve     [--d 60] [--m 8] [--n 400] [--jobs 12] [--tenants 1,2,4,8]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
-//!                 [--io-timeout-secs 20] [--no-overlap-assert]
+//!                 [--io-timeout-secs 20] [--no-overlap-assert] [--threads 4]
 //! dspca transport [--d-list 16,64,256] [--m 4] [--n 200] [--rounds 32]
 //!                 [--io-timeout-secs 20] [--no-pipeline-assert]
+//!                 [--density 0.05]
 //! dspca worker    [--listen 127.0.0.1:7070] [--once] [--io-timeout-secs 20]
+//!                 [--threads 4]
+//! dspca bench-check [--files BENCH_linalg.json,BENCH_topk.json]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
 //! ```
+//!
+//! `--threads N` sets the process-global compute-thread budget the
+//! blocked GEMM and shard covariance kernels use (`DSPCA_THREADS` is the
+//! env equivalent; default 1 = the exact scalar kernels). It changes
+//! wall clock only — rounds/messages/bytes are kernel-invariant.
+//! `--density rho` swaps the gaussian §5 model for the sparse
+//! axis-aligned one; shards become CSR end to end.
 //!
 //! `dspca worker --listen <addr>` turns this binary into one remote
 //! machine of the paper's cluster: it waits for a leader, receives its
@@ -62,16 +73,47 @@ fn run() -> Result<()> {
         Some("serve") => cmd_serve(&args, &out_dir),
         Some("transport") => cmd_transport(&args, &out_dir),
         Some("worker") => cmd_worker(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("selftest") => cmd_selftest(&args),
-        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, transport, worker, e2e, selftest)"),
+        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, transport, worker, bench-check, e2e, selftest)"),
         None => {
             println!(
                 "dspca — Communication-efficient Distributed Stochastic PCA\n\
-                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | transport | worker | e2e | selftest\n\
+                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | transport | worker | bench-check | e2e | selftest\n\
                  see README.md for flags"
             );
             Ok(())
+        }
+    }
+}
+
+/// Apply `--threads N` (N >= 1) to the process-global compute-thread
+/// budget. Absent flag leaves the `DSPCA_THREADS`/default resolution
+/// alone; `--threads 0` is an error rather than a silent no-op.
+fn threads_from(args: &Args) -> Result<()> {
+    if let Some(v) = args.get("threads") {
+        let t = v
+            .parse::<usize>()
+            .map_err(|e| anyhow::anyhow!("--threads {v}: not a whole number ({e})"))?;
+        anyhow::ensure!(t >= 1, "--threads must be >= 1");
+        dspca::linalg::set_compute_threads(t);
+    }
+    Ok(())
+}
+
+/// Parse `--density rho` into the sparse-workload option (`None` =
+/// dense gaussian model). Out-of-range values are a hard error.
+fn density_from(args: &Args) -> Result<Option<f64>> {
+    match args.get("density") {
+        None => Ok(None),
+        Some(_) => {
+            let rho = args.get_f64("density", 1.0)?;
+            anyhow::ensure!(
+                rho > 0.0 && rho <= 1.0,
+                "--density must be in (0, 1], got {rho}"
+            );
+            Ok(Some(rho))
         }
     }
 }
@@ -112,8 +154,10 @@ fn cmd_figure1(args: &Args, out_dir: &str) -> Result<()> {
             "transport",
             "workers",
             "io-timeout-secs",
+            "threads",
         ],
     )?;
+    threads_from(args)?;
     let dist = match args.get("dist").unwrap_or("gaussian") {
         "gaussian" => figure1::Fig1Dist::Gaussian,
         "uniform" => figure1::Fig1Dist::ScaledUniform,
@@ -229,8 +273,9 @@ fn cmd_scaling(args: &Args, out_dir: &str) -> Result<()> {
 fn cmd_topk(args: &Args, out_dir: &str) -> Result<()> {
     args.ensure_known_flags(
         "topk",
-        &["d", "m", "n", "k-list", "runs", "seed", "artifacts", "out"],
+        &["d", "m", "n", "k-list", "runs", "seed", "artifacts", "out", "threads", "density"],
     )?;
+    threads_from(args)?;
     let defaults = topk::TopkConfig::default();
     let cfg = topk::TopkConfig {
         d: args.get_usize("d", defaults.d)?,
@@ -240,6 +285,7 @@ fn cmd_topk(args: &Args, out_dir: &str) -> Result<()> {
         runs: args.get_usize("runs", defaults.runs)?,
         seed: args.get_u64("seed", defaults.seed)?,
         oracle: oracle_from(args),
+        density: density_from(args)?,
     };
     let table = topk::run(&cfg)?;
     let path = format!("{out_dir}/topk.csv");
@@ -297,8 +343,10 @@ fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
             "workers",
             "io-timeout-secs",
             "no-overlap-assert",
+            "threads",
         ],
     )?;
+    threads_from(args)?;
     let defaults = serve_exp::ServeConfig::default();
     let cfg = serve_exp::ServeConfig {
         d: args.get_usize("d", defaults.d)?,
@@ -337,6 +385,7 @@ fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
             "out",
             "io-timeout-secs",
             "no-pipeline-assert",
+            "density",
         ],
     )?;
     let defaults = transport_exp::TransportConfig::default();
@@ -353,6 +402,7 @@ fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
         // the split-phase gate is on by default; constrained hosts can
         // opt out explicitly (parity with serve's --no-overlap-assert)
         assert_pipeline_win: !args.get_bool("no-pipeline-assert"),
+        density: density_from(args)?,
     };
     let table = transport_exp::run(&cfg)?;
     let path = format!("{out_dir}/transport.csv");
@@ -362,7 +412,8 @@ fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
 }
 
 fn cmd_worker(args: &Args) -> Result<()> {
-    args.ensure_known_flags("worker", &["listen", "once", "io-timeout-secs"])?;
+    args.ensure_known_flags("worker", &["listen", "once", "io-timeout-secs", "threads"])?;
+    threads_from(args)?;
     let addr = args.get("listen").unwrap_or("127.0.0.1:7070");
     let io_timeout_secs = args
         .get_u64("io-timeout-secs", dspca::transport::DEFAULT_IO_TIMEOUT.as_secs())?;
@@ -379,6 +430,60 @@ fn cmd_worker(args: &Args) -> Result<()> {
         max_conns,
         std::time::Duration::from_secs(io_timeout_secs),
     )
+}
+
+/// Validate committed/produced benchmark snapshots against the report
+/// schema using the in-tree JSON parser — the CI bench-snapshot job's
+/// acceptance gate. A missing file, unparseable JSON, or a report
+/// missing any schema field is a hard error.
+fn cmd_bench_check(args: &Args) -> Result<()> {
+    use dspca::util::json::Json;
+    args.ensure_known_flags("bench-check", &["files", "out"])?;
+    let files = args.get("files").unwrap_or("BENCH_linalg.json,BENCH_topk.json");
+    let mut checked = 0usize;
+    for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("bench-check: missing snapshot {path}"))?;
+        let doc = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("bench-check: {path}: invalid JSON: {e}"))?;
+        let bench = doc
+            .get("bench")
+            .and_then(Json::as_str)
+            .with_context(|| format!("bench-check: {path}: missing string field 'bench'"))?;
+        anyhow::ensure!(
+            matches!(doc.get("fast_mode"), Some(Json::Bool(_))),
+            "bench-check: {path}: missing bool field 'fast_mode'"
+        );
+        anyhow::ensure!(
+            doc.get("params").and_then(Json::as_obj).is_some(),
+            "bench-check: {path}: missing object field 'params'"
+        );
+        let results = doc
+            .get("results")
+            .and_then(Json::as_arr)
+            .with_context(|| format!("bench-check: {path}: missing array field 'results'"))?;
+        anyhow::ensure!(!results.is_empty(), "bench-check: {path}: empty results array");
+        for (i, r) in results.iter().enumerate() {
+            let name = r
+                .get("name")
+                .and_then(Json::as_str)
+                .with_context(|| format!("bench-check: {path}: result {i} missing 'name'"))?;
+            for field in ["median_ns", "mean_ns", "p95_ns", "samples"] {
+                anyhow::ensure!(
+                    r.get(field).and_then(Json::as_f64).is_some(),
+                    "bench-check: {path}: result '{name}' missing numeric '{field}'"
+                );
+            }
+            anyhow::ensure!(
+                matches!(r.get("bytes"), Some(Json::Num(_)) | Some(Json::Null)),
+                "bench-check: {path}: result '{name}' has malformed 'bytes'"
+            );
+        }
+        println!("bench-check: {path}: '{bench}' ok ({} results)", results.len());
+        checked += 1;
+    }
+    anyhow::ensure!(checked > 0, "bench-check: no files given");
+    Ok(())
 }
 
 fn cmd_e2e(args: &Args) -> Result<()> {

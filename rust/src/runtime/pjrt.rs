@@ -128,7 +128,13 @@ impl PjrtOracle {
             None => true,
         };
         if fresh {
-            let buf = self.engine.upload(shard.matrix().data(), &[n, d])?;
+            // the AOT kernels are dense-only; a CSR shard surfaces as a
+            // per-request error (mirroring oracle-init failures) rather
+            // than a panic in the worker thread
+            let dense = shard.try_dense().ok_or_else(|| {
+                anyhow!("pjrt oracle: sparse (CSR) shards are not supported by the AOT kernels")
+            })?;
+            let buf = self.engine.upload(dense.data(), &[n, d])?;
             self.shard_buf = Some((n, d, buf));
         }
         Ok(())

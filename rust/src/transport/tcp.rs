@@ -62,27 +62,30 @@ use super::{
 /// Handshake magic ("DSPC") so connecting to something that is not a
 /// `dspca worker` fails fast with a clear error instead of a timeout.
 const INIT_MAGIC: u32 = 0x4453_5043;
-const INIT_VERSION: u8 = 1;
+/// v2 (ISSUE 6): a storage tag byte after the shape header selects
+/// dense rows or a CSR sparse shard. v1 peers fail the version check
+/// with a clear error instead of misparsing the frame.
+const INIT_VERSION: u8 = 2;
 const ORACLE_NATIVE: u8 = 0;
 const ORACLE_PJRT: u8 = 1;
+const STORE_DENSE: u8 = 0;
+const STORE_CSR: u8 = 1;
 
 /// One worker's shard + identity, shipped once at connect time.
 struct Init {
     worker_id: usize,
     wseed: u64,
     oracle: OracleSpec,
-    n: usize,
-    d: usize,
-    data: Vec<f64>,
+    shard: Shard,
 }
 
-fn encode_init(init: &Init) -> Vec<u8> {
-    let mut out = Vec::with_capacity(64 + 8 * init.data.len());
+fn encode_init(worker_id: usize, wseed: u64, oracle: &OracleSpec, shard: &Shard) -> Vec<u8> {
+    let mut out = Vec::with_capacity(80 + 8 * shard.nnz());
     out.extend_from_slice(&INIT_MAGIC.to_le_bytes());
     out.push(INIT_VERSION);
-    out.extend_from_slice(&(init.worker_id as u64).to_le_bytes());
-    out.extend_from_slice(&init.wseed.to_le_bytes());
-    match &init.oracle {
+    out.extend_from_slice(&(worker_id as u64).to_le_bytes());
+    out.extend_from_slice(&wseed.to_le_bytes());
+    match oracle {
         OracleSpec::Native => out.push(ORACLE_NATIVE),
         OracleSpec::Pjrt { artifact_dir } => {
             out.push(ORACLE_PJRT);
@@ -90,13 +93,29 @@ fn encode_init(init: &Init) -> Vec<u8> {
             out.extend_from_slice(artifact_dir.as_bytes());
         }
     }
-    out.extend_from_slice(&(init.n as u64).to_le_bytes());
-    out.extend_from_slice(&(init.d as u64).to_le_bytes());
-    // shard rows always ship lossless — this is dataset setup, not a
+    out.extend_from_slice(&(shard.n() as u64).to_le_bytes());
+    out.extend_from_slice(&(shard.d() as u64).to_le_bytes());
+    // shard values always ship lossless — this is dataset setup, not a
     // round payload, and never enters the communication bill
-    out.extend_from_slice(&(init.data.len() as u64).to_le_bytes());
-    for x in &init.data {
-        out.extend_from_slice(&x.to_le_bytes());
+    if let Some((indptr, indices, values)) = shard.csr_parts() {
+        out.push(STORE_CSR);
+        out.extend_from_slice(&(values.len() as u64).to_le_bytes());
+        for p in indptr {
+            out.extend_from_slice(&(*p as u64).to_le_bytes());
+        }
+        for j in indices {
+            out.extend_from_slice(&j.to_le_bytes());
+        }
+        for x in values {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
+    } else {
+        let data = shard.matrix().data();
+        out.push(STORE_DENSE);
+        out.extend_from_slice(&(data.len() as u64).to_le_bytes());
+        for x in data {
+            out.extend_from_slice(&x.to_le_bytes());
+        }
     }
     out
 }
@@ -116,14 +135,59 @@ fn decode_init(body: &[u8]) -> Result<Init> {
     };
     let n = c.usize()?;
     let d = c.usize()?;
-    let data = c.payload(WirePrecision::F64)?;
-    ensure!(
-        n.checked_mul(d) == Some(data.len()),
-        "init frame: shard of {} values != {n}x{d}",
-        data.len()
-    );
+    ensure!(n > 0 && d > 0, "init frame: empty shard shape {n}x{d}");
+    let shard = match c.u8()? {
+        STORE_DENSE => {
+            let data = c.payload(WirePrecision::F64)?;
+            ensure!(
+                n.checked_mul(d) == Some(data.len()),
+                "init frame: shard of {} values != {n}x{d}",
+                data.len()
+            );
+            Shard::new(n, d, data)
+        }
+        STORE_CSR => {
+            let nnz = c.usize()?;
+            // take the raw byte sections (bounds-checked) before
+            // allocating, so a truncated frame errors without an
+            // attacker-controlled huge allocation
+            let ip_bytes = n
+                .checked_add(1)
+                .and_then(|r| r.checked_mul(8))
+                .ok_or_else(|| anyhow!("init frame: csr row count {n} overflows"))?;
+            let ip_raw = c.take(ip_bytes)?;
+            let ix_raw = c.take(
+                nnz.checked_mul(4)
+                    .ok_or_else(|| anyhow!("init frame: csr nnz {nnz} overflows"))?,
+            )?;
+            let val_raw = c.take(
+                nnz.checked_mul(8)
+                    .ok_or_else(|| anyhow!("init frame: csr nnz {nnz} overflows"))?,
+            )?;
+            let mut indptr = Vec::with_capacity(n + 1);
+            for b in ip_raw.chunks_exact(8) {
+                let p = usize::try_from(u64::from_le_bytes(b.try_into().unwrap()))
+                    .context("csr indptr entry does not fit this platform's usize")?;
+                indptr.push(p);
+            }
+            let mut indices = Vec::with_capacity(nnz);
+            for b in ix_raw.chunks_exact(4) {
+                indices.push(u32::from_le_bytes(b.try_into().unwrap()));
+            }
+            let mut values = Vec::with_capacity(nnz);
+            for b in val_raw.chunks_exact(8) {
+                values.push(f64::from_le_bytes(b.try_into().unwrap()));
+            }
+            // try_from_csr re-validates the structural invariants
+            // (monotone indptr, ascending in-range column indices), so a
+            // corrupt frame is an error here, never a panic later
+            Shard::try_from_csr(n, d, indptr, indices, values)
+                .context("init frame: malformed csr shard")?
+        }
+        other => bail!("unknown shard storage tag {other} in handshake"),
+    };
     c.finish()?;
-    Ok(Init { worker_id, wseed, oracle, n, d, data })
+    Ok(Init { worker_id, wseed, oracle, shard })
 }
 
 fn encode_ack(worker_id: usize) -> Vec<u8> {
@@ -226,15 +290,7 @@ impl TcpTransport {
             let _ = stream.set_nodelay(true);
             let _ = stream.set_write_timeout(Some(io_timeout));
             let _ = stream.set_read_timeout(Some(io_timeout));
-            let init = Init {
-                worker_id: i,
-                wseed,
-                oracle: oracle.clone(),
-                n: shard.n(),
-                d: shard.d(),
-                data: shard.matrix().data().to_vec(),
-            };
-            write_frame(&mut stream, &encode_init(&init))
+            write_frame(&mut stream, &encode_init(i, wseed, oracle, &shard))
                 .with_context(|| format!("worker {i} at {addr}: shipping shard failed"))?;
             let ack = read_frame(&mut stream).with_context(|| {
                 format!(
@@ -405,7 +461,7 @@ fn serve_leader(mut stream: TcpStream, io_timeout: Duration) -> Result<bool> {
             return Ok(false);
         }
     };
-    let shard = Shard::new(init.n, init.d, init.data);
+    let shard = init.shard;
     let mut rng = worker_rng(init.worker_id, init.wseed);
     // oracle construction failure is surfaced per-request (mirroring the
     // in-proc worker thread) instead of killing the session silently
@@ -515,24 +571,19 @@ mod tests {
 
     #[test]
     fn init_frame_roundtrips_for_both_oracle_specs() {
+        let data = vec![1.0, -2.5, 0.25, 3.0, -0.5, 9.0];
         for oracle in [
             OracleSpec::Native,
             OracleSpec::Pjrt { artifact_dir: "artifacts/aot".to_string() },
         ] {
-            let init = Init {
-                worker_id: 3,
-                wseed: 0xfeed,
-                oracle: oracle.clone(),
-                n: 2,
-                d: 3,
-                data: vec![1.0, -2.5, 0.25, 3.0, -0.5, 9.0],
-            };
-            let body = encode_init(&init);
+            let shard = Shard::new(2, 3, data.clone());
+            let body = encode_init(3, 0xfeed, &oracle, &shard);
             let back = decode_init(&body).unwrap();
             assert_eq!(back.worker_id, 3);
             assert_eq!(back.wseed, 0xfeed);
-            assert_eq!((back.n, back.d), (2, 3));
-            assert_eq!(back.data, init.data);
+            assert_eq!((back.shard.n(), back.shard.d()), (2, 3));
+            assert!(!back.shard.is_sparse());
+            assert_eq!(back.shard.matrix().data(), &data[..]);
             match (&back.oracle, &oracle) {
                 (OracleSpec::Native, OracleSpec::Native) => {}
                 (
@@ -550,6 +601,49 @@ mod tests {
         let ack = encode_ack(2);
         assert!(decode_ack(&ack, 2).is_ok());
         assert!(decode_ack(&ack, 1).is_err(), "ack must carry the right worker id");
+    }
+
+    #[test]
+    fn init_frame_ships_csr_shards_and_rejects_corruption() {
+        let shard = Shard::from_csr(
+            3,
+            4,
+            vec![0, 2, 3, 5],
+            vec![0, 2, 1, 0, 3],
+            vec![1.0, -2.0, 0.5, 4.0, -0.25],
+        );
+        let body = encode_init(1, 0xbeef, &OracleSpec::Native, &shard);
+        let back = decode_init(&body).unwrap();
+        assert_eq!(back.worker_id, 1);
+        assert!(back.shard.is_sparse());
+        assert_eq!((back.shard.n(), back.shard.d(), back.shard.nnz()), (3, 4, 5));
+        let (indptr, indices, values) = back.shard.csr_parts().unwrap();
+        assert_eq!(indptr, &[0, 2, 3, 5]);
+        assert_eq!(indices, &[0, 2, 1, 0, 3]);
+        assert_eq!(values, &[1.0, -2.0, 0.5, 4.0, -0.25]);
+        // the decoded shard computes like its dense expansion
+        #[rustfmt::skip]
+        let dense = Shard::new(3, 4, vec![
+            1.0, 0.0, -2.0,  0.0,
+            0.0, 0.5,  0.0,  0.0,
+            4.0, 0.0,  0.0, -0.25,
+        ]);
+        let v = vec![0.3, -1.0, 0.7, 2.0];
+        for (a, b) in back.shard.cov_matvec(&v).iter().zip(dense.cov_matvec(&v)) {
+            assert!((a - b).abs() <= 1e-12, "{a} vs {b}");
+        }
+        // truncation errors, never panics
+        for cut in 0..body.len() {
+            assert!(decode_init(&body[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        // a structurally corrupt CSR section is an error, not a panic:
+        // clobber indptr[1] (offset = magic 4 + version 1 + worker_id 8 +
+        // wseed 8 + oracle tag 1 + n 8 + d 8 + store tag 1 + nnz 8 +
+        // one indptr entry 8 = 55) so the row pointers go non-monotone
+        let mut bad = body.clone();
+        bad[55] = 0xff;
+        let err = decode_init(&bad).unwrap_err();
+        assert!(format!("{err:#}").contains("csr"), "{err:#}");
     }
 
     #[test]

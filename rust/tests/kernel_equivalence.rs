@@ -1,0 +1,220 @@
+//! Kernel-equivalence suite (ISSUE 6): the threaded / sparse / reduced-
+//! precision shard kernels must agree with the exact scalar kernels, and
+//! the communication bill must never depend on the compute-thread budget.
+//!
+//! Every property here uses the explicit `*_threads` kernel variants so
+//! `cargo test` stays order-independent — only the bill-invariance test
+//! touches the process-global budget, and it restores the default through
+//! a drop guard even on panic.
+
+use dspca::cluster::{Cluster, CommStats};
+use dspca::coordinator::{Algorithm, DistributedPower, ShiftInvert};
+use dspca::data::{CovModel, Shard, SparseDiag};
+use dspca::linalg::{set_compute_threads, Matrix};
+use dspca::propcheck::{run as propcheck, Config, Gen};
+
+/// Random dense shard drawn from the property generator.
+fn gen_shard(g: &mut Gen, n: usize, d: usize) -> Shard {
+    let data = g.gaussian_vec(n * d);
+    Shard::new(n, d, data)
+}
+
+/// Dense shard plus the bit-equal CSR shard (~`density` fill, every row
+/// guaranteed one entry so no row is empty by chance).
+fn gen_csr_pair(g: &mut Gen, n: usize, d: usize, density: f64) -> (Shard, Shard) {
+    let mut dense = vec![0.0; n * d];
+    let (mut indptr, mut indices, mut values) = (vec![0usize], Vec::new(), Vec::new());
+    for r in 0..n {
+        for c in 0..d {
+            if g.f64_in(0.0, 1.0) < density || c == r % d {
+                let x = g.rng().next_gaussian();
+                dense[r * d + c] = x;
+                indices.push(c as u32);
+                values.push(x);
+            }
+        }
+        indptr.push(values.len());
+    }
+    (Shard::new(n, d, dense), Shard::from_csr(n, d, indptr, indices, values))
+}
+
+#[test]
+fn prop_threaded_cov_matvec_matches_scalar() {
+    propcheck(Config::default().cases(32).seed(0x6e51), "threaded matvec == scalar", |g| {
+        let n = g.usize_in(1, 90);
+        let d = g.usize_in(2, 24);
+        let shard = gen_shard(g, n, d);
+        let v = g.gaussian_vec(d);
+        let mut scratch = Vec::new();
+        let mut want = vec![0.0; d];
+        shard.cov_matvec_into_threads(&v, &mut scratch, &mut want, 1);
+        for t in [2usize, 8] {
+            let mut got = vec![0.0; d];
+            shard.cov_matvec_into_threads(&v, &mut scratch, &mut got, t);
+            for i in 0..d {
+                let tol = 1e-12 * (1.0 + want[i].abs());
+                assert!(
+                    (got[i] - want[i]).abs() <= tol,
+                    "n={n} d={d} t={t} i={i}: {} vs {}",
+                    got[i],
+                    want[i]
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_threaded_cov_matmat_matches_scalar() {
+    propcheck(Config::default().cases(32).seed(0x6e52), "threaded matmat == scalar", |g| {
+        let n = g.usize_in(1, 70);
+        let d = g.usize_in(2, 20);
+        let k = g.usize_in(1, 6);
+        let shard = gen_shard(g, n, d);
+        let v = Matrix::from_vec(d, k, g.gaussian_vec(d * k));
+        let mut scratch = Vec::new();
+        let mut want = Matrix::zeros(d, k);
+        shard.cov_matmat_into_threads(&v, &mut scratch, &mut want, 1);
+        for t in [2usize, 8] {
+            let mut got = Matrix::zeros(d, k);
+            shard.cov_matmat_into_threads(&v, &mut scratch, &mut got, t);
+            let err = got.sub(&want).max_abs();
+            assert!(err <= 1e-12 * (1.0 + want.max_abs()), "n={n} d={d} k={k} t={t}: {err:.3e}");
+        }
+    });
+}
+
+#[test]
+fn prop_csr_kernels_match_dense_across_thread_counts() {
+    propcheck(Config::default().cases(24).seed(0x6e53), "csr == dense", |g| {
+        let n = g.usize_in(2, 50);
+        let d = g.usize_in(2, 16);
+        let k = g.usize_in(1, 4);
+        let density = g.f64_in(0.05, 0.9);
+        let (dense, csr) = gen_csr_pair(g, n, d, density);
+        let v = g.gaussian_vec(d);
+        let block = Matrix::from_vec(d, k, g.gaussian_vec(d * k));
+        let mut scratch = Vec::new();
+        let mut want_v = vec![0.0; d];
+        dense.cov_matvec_into_threads(&v, &mut scratch, &mut want_v, 1);
+        let mut want_m = Matrix::zeros(d, k);
+        dense.cov_matmat_into_threads(&block, &mut scratch, &mut want_m, 1);
+        for t in [1usize, 2, 8] {
+            let mut got_v = vec![0.0; d];
+            csr.cov_matvec_into_threads(&v, &mut scratch, &mut got_v, t);
+            for i in 0..d {
+                let tol = 1e-12 * (1.0 + want_v[i].abs());
+                assert!((got_v[i] - want_v[i]).abs() <= tol, "matvec t={t} i={i}");
+            }
+            let mut got_m = Matrix::zeros(d, k);
+            csr.cov_matmat_into_threads(&block, &mut scratch, &mut got_m, t);
+            let err = got_m.sub(&want_m).max_abs();
+            assert!(err <= 1e-12 * (1.0 + want_m.max_abs()), "matmat t={t}: {err:.3e}");
+        }
+        // the shared structural facts too
+        assert_eq!(csr.n(), dense.n());
+        assert_eq!(csr.d(), dense.d());
+        let g_err = csr.empirical_covariance().sub(dense.empirical_covariance()).max_abs();
+        assert!(g_err <= 1e-12, "gram: {g_err:.3e}");
+    });
+}
+
+#[test]
+fn prop_f32_fast_path_within_documented_bound() {
+    propcheck(Config::default().cases(24).seed(0x6e54), "f32 error bound", |g| {
+        let n = g.usize_in(4, 60);
+        let d = g.usize_in(2, 12);
+        let k = g.usize_in(1, 4);
+        let shard = gen_shard(g, n, d);
+        let v = Matrix::from_vec(d, k, g.gaussian_vec(d * k));
+        let exact = shard.cov_matmat(&v);
+        let fast = shard.cov_matmat_f32(&v);
+        // bound: gamma * (|A|^T (|A| |V|))_{ij} / n with
+        // gamma = (2(n + d) + 8) * 2^-24 — shard.rs module docs
+        let abs_shard =
+            Shard::new(n, d, shard.matrix().data().iter().map(|x| x.abs()).collect());
+        let abs_v = Matrix::from_vec(d, k, v.data().iter().map(|x| x.abs()).collect());
+        let bound = abs_shard.cov_matmat(&abs_v);
+        let gamma = (2.0 * (n as f64 + d as f64) + 8.0) * 2f64.powi(-24);
+        for i in 0..d {
+            for c in 0..k {
+                let err = (fast.get(i, c) - exact.get(i, c)).abs();
+                assert!(
+                    err <= gamma * bound.get(i, c) + 1e-12,
+                    "n={n} d={d} k={k}: f32 error {err:.3e} exceeds bound at ({i},{c})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_matmul_threads_bit_identical() {
+    // Owner-computes GEMM: every output row is written by exactly one
+    // thread in the scalar loop order, so the result is bit-identical —
+    // not merely close — at any thread count.
+    propcheck(Config::default().cases(16).seed(0x6e55), "gemm bit-identical", |g| {
+        // big enough to clear the kernel's small-product cutoff so the
+        // panels genuinely run on separate threads
+        let m = g.usize_in(40, 56);
+        let k = g.usize_in(32, 48);
+        let n = g.usize_in(32, 48);
+        let a = Matrix::from_vec(m, k, g.gaussian_vec(m * k));
+        let b = Matrix::from_vec(k, n, g.gaussian_vec(k * n));
+        let want = a.matmul_threads(&b, 1);
+        for t in [2usize, 3, 8] {
+            let got = a.matmul_threads(&b, t);
+            assert!(got.data() == want.data(), "gemm t={t} not bit-identical");
+        }
+    });
+}
+
+/// Restores the default single-thread budget even if the test panics, so
+/// no other test in this binary can observe a stray global.
+struct ThreadBudgetGuard;
+
+impl Drop for ThreadBudgetGuard {
+    fn drop(&mut self) {
+        set_compute_threads(1);
+    }
+}
+
+#[test]
+fn bills_are_invariant_across_thread_counts() {
+    // The tentpole's contract: threads change wall clock, never the bill.
+    // Run the same convergence-dependent algorithms under thread budgets
+    // 1 and 4 and require the CommStats to be *exactly* equal — rounds,
+    // messages, and bytes are all convergence-driven, so this catches any
+    // numerical drift large enough to flip an iteration count.
+    let _guard = ThreadBudgetGuard;
+    let dense_dist = CovModel::paper_fig1(12, 0x1111).gaussian();
+    let sparse_dist = SparseDiag::paper_fig1(16, 0.3);
+    let run_all = |threads: usize| -> Vec<(String, CommStats)> {
+        set_compute_threads(threads);
+        let mut bills = Vec::new();
+        let dense = Cluster::generate(&dense_dist, 3, 60, 5).unwrap();
+        for alg in [
+            &DistributedPower::default() as &dyn Algorithm,
+            &ShiftInvert::default(),
+        ] {
+            let session = dense.session();
+            let est = alg.run(&session).unwrap();
+            assert!(est.w.iter().all(|x| x.is_finite()));
+            bills.push((format!("dense/{}", alg.name()), session.close()));
+        }
+        let sparse = Cluster::generate(&sparse_dist, 3, 80, 6).unwrap();
+        let session = sparse.session();
+        let est = DistributedPower::default().run(&session).unwrap();
+        assert!(est.w.iter().all(|x| x.is_finite()));
+        bills.push(("sparse/power".to_string(), session.close()));
+        bills
+    };
+    let at_1 = run_all(1);
+    let at_4 = run_all(4);
+    set_compute_threads(1);
+    assert_eq!(at_1.len(), at_4.len());
+    for ((name1, bill1), (name4, bill4)) in at_1.iter().zip(at_4.iter()) {
+        assert_eq!(name1, name4);
+        assert_eq!(bill1, bill4, "{name1}: bill differs between 1 and 4 threads");
+    }
+}
