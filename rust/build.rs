@@ -1,0 +1,24 @@
+//! Build script: wire the `DSPCA_ANALYZE` environment variable to the
+//! `dspca_analyze` cfg flag.
+//!
+//! `DSPCA_ANALYZE=1 cargo test` compiles the instrumented sync shim
+//! (`crate::sync`) with the lock-order/IO-section detectors enabled; a
+//! plain build compiles the shim down to bare `std::sync` wrappers with
+//! no extra state (see `src/sync/mod.rs` for the zero-overhead
+//! contract). A cfg flag — not a cargo feature — so the switch cannot
+//! be enabled transitively by a dependent crate and never appears in
+//! the public feature surface.
+
+fn main() {
+    // Declare the custom cfg so `cargo check`'s unexpected_cfgs lint
+    // knows it is ours.
+    println!("cargo:rustc-check-cfg=cfg(dspca_analyze)");
+    println!("cargo:rerun-if-env-changed=DSPCA_ANALYZE");
+    let on = match std::env::var("DSPCA_ANALYZE") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    };
+    if on {
+        println!("cargo:rustc-cfg=dspca_analyze");
+    }
+}

@@ -1,0 +1,501 @@
+//! `dspca lint` — repo-invariant scanner (line-level, no external
+//! parser), the third layer of the ISSUE 7 analysis subsystem.
+//!
+//! Enforces the conventions the codebase previously kept by discipline:
+//!
+//! 1. **`commstats-mutation`** — `CommStats` counters are only ever
+//!    incremented in `cluster/comm.rs` (merge) and
+//!    `cluster/session.rs` (the billing paths). Anywhere else, a
+//!    `.field +=` on a stats counter is a second biller that would
+//!    silently break the Σ-bills == aggregate invariant the model
+//!    checker proves.
+//! 2. **`unwrap-budget`** — no `unwrap()`/`expect("...")` in non-test
+//!    `src/` beyond an explicit per-file allowlist
+//!    ([`UNWRAP_BUDGET`]); the remaining entries are documented
+//!    internal-invariant panics. Lock-poisoning unwraps are gone at the
+//!    source: the sync shim recovers poison centrally.
+//! 3. **`env-set-var`** — `std::env::set_var` only inside the bench
+//!    harness (process-global state; everywhere else it is a race with
+//!    concurrent tests).
+//! 4. **`flag-validation`** — every `cmd_*` handler in `main.rs` calls
+//!    `ensure_known_flags` (typo'd flags must error, not silently run
+//!    with defaults).
+//! 5. **`raw-sync-import`** — no `std::sync::Mutex`/`Condvar` outside
+//!    `src/sync/`: every lock goes through the instrumented shim so
+//!    the `DSPCA_ANALYZE=1` build sees it.
+//!
+//! The scanner strips `//` and `/* */` comments and skips
+//! `#[cfg(test)] mod` bodies by brace counting. It is deliberately
+//! approximate (a needle inside a string literal counts; a `//` inside
+//!  a string truncates the line) — the rules are written so the
+//! approximation errs loud on the current tree, and
+//! `tests/lint_clean.rs` pins "loud" to zero findings.
+//!
+//! The needle strings below are assembled with `concat!` so this file
+//! does not flag itself.
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One rule violation at a source location.
+#[derive(Debug)]
+pub struct Finding {
+    /// Path relative to `src/`.
+    pub file: String,
+    /// 1-based line.
+    pub line: usize,
+    pub rule: &'static str,
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "src/{}:{}: [{}] {}", self.file, self.line, self.rule, self.message)
+    }
+}
+
+// Needles are split so this file never contains its own match targets.
+const UNWRAP_NEEDLE: &str = concat!(".unw", "rap()");
+const EXPECT_NEEDLE: &str = concat!(".exp", "ect(\"");
+const SET_VAR_NEEDLE: &str = concat!("env::set_", "var");
+const RAW_MUTEX: &str = concat!("std::sync::", "Mutex");
+const RAW_CONDVAR: &str = concat!("std::sync::", "Condvar");
+const USE_STD_SYNC: &str = concat!("use std::", "sync::");
+const KNOWN_FLAGS_CALL: &str = concat!("ensure_known", "_flags");
+
+/// The `CommStats` counters rule 1 protects.
+const COMMSTATS_FIELDS: [&str; 7] = [
+    "rounds",
+    "matvec_products",
+    "vectors_broadcast",
+    "vectors_gathered",
+    "requests_sent",
+    "responses_received",
+    "bytes",
+];
+
+/// Files allowed to increment `CommStats` fields.
+const COMMSTATS_ALLOWED: [&str; 2] = ["cluster/comm.rs", "cluster/session.rs"];
+
+/// Files allowed to call `std::env::set_var` (the bench harness owns
+/// process-global bench configuration).
+const SET_VAR_ALLOWED: [&str; 1] = ["bench_harness/mod.rs"];
+
+/// Per-file budget of panicking `unwrap()`/`expect("...")` calls in
+/// non-test code. Every entry is a documented internal-invariant panic
+/// (e.g. "slot vanished while the ticket existed", fixed-width slice
+/// conversions after an explicit length check). Files not listed have
+/// budget 0. Exceeding a budget is a finding — shrink the code, or
+/// justify the new panic here in review.
+const UNWRAP_BUDGET: &[(&str, usize)] = &[
+    ("bench_harness/mod.rs", 1),
+    ("cluster/mod.rs", 2),
+    ("cluster/session.rs", 1),
+    ("cluster/wire.rs", 5),
+    ("config/mod.rs", 1),
+    ("coordinator/shift_invert.rs", 1),
+    ("data/shard.rs", 4),
+    ("experiments/lower_bounds.rs", 1),
+    ("experiments/transport.rs", 1),
+    ("linalg/eigen.rs", 2),
+    ("linalg/jacobi.rs", 1),
+    ("runtime/pjrt.rs", 2),
+    ("transport/inproc.rs", 1),
+    ("transport/tcp.rs", 1),
+    ("util/json.rs", 1),
+    ("util/stats.rs", 1),
+];
+
+/// Default lint root: the crate directory this binary was built from
+/// (same convention as the bench harness's results root).
+pub fn default_root() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+/// Lint `<root>/src`, returning every finding (empty = clean tree).
+pub fn run(root: &Path) -> Result<Vec<Finding>> {
+    let src = root.join("src");
+    let mut files = Vec::new();
+    collect_rs_files(&src, &mut files)
+        .with_context(|| format!("lint: walking {}", src.display()))?;
+    anyhow::ensure!(!files.is_empty(), "lint: no .rs files under {}", src.display());
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(&src)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let text = fs::read_to_string(path)
+            .with_context(|| format!("lint: reading {}", path.display()))?;
+        scan_file(&rel, &text, &mut findings);
+    }
+    Ok(findings)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+        .map(|e| e.map(|e| e.path()))
+        .collect::<std::io::Result<_>>()?;
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Net brace depth change of a code line (comment-stripped). Braces
+/// inside string literals are counted too — in practice format strings
+/// keep `{`/`}` balanced, and `tests/lint_clean.rs` pins the heuristic
+/// against the real tree.
+fn brace_delta(code: &str) -> i64 {
+    let mut d = 0i64;
+    for b in code.bytes() {
+        match b {
+            b'{' => d += 1,
+            b'}' => d -= 1,
+            _ => {}
+        }
+    }
+    d
+}
+
+/// Drop `//` line comments and `/* */` block comments (tracking block
+/// state across lines).
+fn strip_comments(line: &str, in_block: &mut bool) -> String {
+    let bytes = line.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if *in_block {
+            if bytes[i] == b'*' && bytes.get(i + 1) == Some(&b'/') {
+                *in_block = false;
+                i += 2;
+            } else {
+                i += 1;
+            }
+        } else if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'/') {
+            break; // line (or doc) comment: ignore the rest
+        } else if bytes[i] == b'/' && bytes.get(i + 1) == Some(&b'*') {
+            *in_block = true;
+            i += 2;
+        } else {
+            out.push(bytes[i]);
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+fn count_occurrences(hay: &str, needle: &str) -> usize {
+    hay.match_indices(needle).count()
+}
+
+/// Scan one file's source text. Separated from [`run`] so tests can
+/// feed synthetic sources.
+pub fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
+    let in_sync_module = rel.starts_with("sync/") || rel == "sync.rs";
+    let unwrap_budget = UNWRAP_BUDGET
+        .iter()
+        .find(|(f, _)| *f == rel)
+        .map_or(0, |&(_, n)| n);
+    let mut unwrap_lines: Vec<usize> = Vec::new();
+
+    // cmd_* tracking (rule 4), active only in main.rs
+    struct CmdFn {
+        name: String,
+        line: usize,
+        depth: i64,
+        body_started: bool,
+        validated: bool,
+    }
+    let mut current_cmd: Option<CmdFn> = None;
+
+    let mut in_block_comment = false;
+    // Some(depth) while inside a `#[cfg(test)] mod` (or any cfg(test)
+    // braced item); depth is the running brace balance
+    let mut skip: Option<i64> = None;
+    let mut pending_test_cfg = false;
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let code = strip_comments(raw, &mut in_block_comment);
+        let trimmed = code.trim();
+
+        if let Some(depth) = &mut skip {
+            *depth += brace_delta(&code);
+            if *depth <= 0 {
+                skip = None;
+            }
+            continue;
+        }
+
+        if trimmed.starts_with("#[") && trimmed.contains("cfg(") && trimmed.contains("test") {
+            pending_test_cfg = true;
+            continue;
+        }
+        if pending_test_cfg {
+            if trimmed.starts_with("#[") || trimmed.is_empty() {
+                continue; // stacked attributes
+            }
+            pending_test_cfg = false;
+            let delta = brace_delta(&code);
+            if delta > 0 {
+                // braced item under cfg(test): skip to its closing brace
+                skip = Some(delta);
+                continue;
+            }
+            // single-line item (e.g. `#[cfg(test)] use ...;`): fall
+            // through and lint it like anything else
+        }
+
+        // ---- rule 4: flag validation (main.rs only) ----
+        if rel == "main.rs" {
+            if let Some(cmd) = &mut current_cmd {
+                if code.contains(KNOWN_FLAGS_CALL) {
+                    cmd.validated = true;
+                }
+                cmd.depth += brace_delta(&code);
+                if cmd.depth > 0 {
+                    cmd.body_started = true;
+                }
+                if cmd.body_started && cmd.depth <= 0 {
+                    if !cmd.validated {
+                        findings.push(Finding {
+                            file: rel.to_string(),
+                            line: cmd.line,
+                            rule: "flag-validation",
+                            message: format!(
+                                "{} does not call {KNOWN_FLAGS_CALL}: unknown flags \
+                                 would silently run with defaults",
+                                cmd.name
+                            ),
+                        });
+                    }
+                    current_cmd = None;
+                }
+            } else if let Some(pos) = code.find("fn cmd_") {
+                let rest = &code[pos + 3..];
+                let name: String =
+                    rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+                let depth = brace_delta(&code);
+                current_cmd = Some(CmdFn {
+                    name,
+                    line: line_no,
+                    depth,
+                    body_started: depth > 0,
+                    validated: code.contains(KNOWN_FLAGS_CALL),
+                });
+            }
+        }
+
+        // ---- rule 1: CommStats mutation containment ----
+        if !COMMSTATS_ALLOWED.contains(&rel) {
+            for field in COMMSTATS_FIELDS {
+                let needle = format!(".{field} +=");
+                if code.contains(&needle) {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: line_no,
+                        rule: "commstats-mutation",
+                        message: format!(
+                            "CommStats counter `{field}` incremented outside {}: \
+                             billing must stay in the session layer so \
+                             Σ session bills == aggregate holds",
+                            COMMSTATS_ALLOWED.join(", ")
+                        ),
+                    });
+                }
+            }
+        }
+
+        // ---- rule 2: unwrap/expect budget ----
+        let panics =
+            count_occurrences(&code, UNWRAP_NEEDLE) + count_occurrences(&code, EXPECT_NEEDLE);
+        for _ in 0..panics {
+            unwrap_lines.push(line_no);
+        }
+
+        // ---- rule 3: env::set_var containment ----
+        if code.contains(SET_VAR_NEEDLE) && !SET_VAR_ALLOWED.contains(&rel) {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: line_no,
+                rule: "env-set-var",
+                message: "process-global env mutation outside the bench harness races \
+                          with concurrent tests"
+                    .to_string(),
+            });
+        }
+
+        // ---- rule 5: raw std::sync lock types ----
+        if !in_sync_module {
+            let qualified = code.contains(RAW_MUTEX) || code.contains(RAW_CONDVAR);
+            let imported = code.contains(USE_STD_SYNC)
+                && (code.contains("Mutex") || code.contains("Condvar"));
+            if qualified || imported {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: line_no,
+                    rule: "raw-sync-import",
+                    message: "lock types must come from crate::sync (the instrumented \
+                              shim), not std::sync"
+                        .to_string(),
+                });
+            }
+        }
+    }
+
+    if unwrap_lines.len() > unwrap_budget {
+        let first_over = unwrap_lines[unwrap_budget];
+        findings.push(Finding {
+            file: rel.to_string(),
+            line: first_over,
+            rule: "unwrap-budget",
+            message: format!(
+                "{} panicking unwrap/expect call(s) in non-test code, budget is \
+                 {unwrap_budget} (lines {:?}); return anyhow errors or extend \
+                 UNWRAP_BUDGET with justification",
+                unwrap_lines.len(),
+                unwrap_lines
+            ),
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn scan(rel: &str, text: &str) -> Vec<Finding> {
+        let mut f = Vec::new();
+        scan_file(rel, text, &mut f);
+        f
+    }
+
+    // Synthetic sources build their needles by string concat so this
+    // test module stays invisible to the scanner's own pass over the
+    // real tree (it skips cfg(test) mods anyway — belt and braces).
+    fn unwrap_call() -> String {
+        format!("let x = y{};\n", concat!(".unw", "rap()"))
+    }
+
+    #[test]
+    fn unwrap_over_budget_is_flagged_and_test_mods_are_skipped() {
+        let src = format!(
+            "fn live() {{\n    {u}}}\n\n#[cfg(test)]\nmod tests {{\n    fn t() {{\n        {u}        {u}    }}\n}}\n",
+            u = unwrap_call()
+        );
+        // "config/mod.rs" has budget 1: the single live call passes …
+        assert!(scan("config/mod.rs", &src).is_empty());
+        // … but an unbudgeted file flags it, counting only the live one
+        let f = scan("linalg/threads.rs", &src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "unwrap-budget");
+        assert!(f[0].message.contains("budget is 0"));
+        assert_eq!(f[0].line, 2);
+    }
+
+    #[test]
+    fn expect_with_string_counts_but_byte_expect_does_not() {
+        let with_str = format!("v{}fail\");\n", concat!(".exp", "ect(\""));
+        let f = scan("util/vec.rs", &with_str);
+        assert_eq!(f.len(), 1);
+        // the JSON scanner's self.expect(b'x') method is not a panic;
+        // the synthetic source keeps its braces balanced because the
+        // scanner counts braces inside string literals too
+        let byte_call = format!("fn f() {{\n    self{}b'x')?;\n}}\n", concat!(".exp", "ect("));
+        assert!(scan("util/vec.rs", &byte_call).is_empty());
+    }
+
+    #[test]
+    fn comments_do_not_count() {
+        let src = format!(
+            "// doc says {u}fine\n/* block {u}\nstill comment {u} */\nfn f() {{}}\n",
+            u = unwrap_call()
+        );
+        assert!(scan("serve/mod.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn commstats_mutation_outside_session_layer_is_flagged() {
+        let src = "fn f(st: &mut CommStats) {\n    st.responses_received += 1;\n}\n";
+        let f = scan("cluster/mod.rs", src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "commstats-mutation");
+        assert_eq!(f[0].line, 2);
+        // the billing layer itself is allowed
+        assert!(scan("cluster/session.rs", src).is_empty());
+        assert!(scan("cluster/comm.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_sync_imports_are_flagged_outside_the_shim() {
+        let qualified = format!("let m = {}::new(0);\n", concat!("std::sync::", "Mutex"));
+        let f = scan("cluster/mod.rs", &qualified);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].rule, "raw-sync-import");
+        let braced = format!("{}{{Arc, Mutex}};\n", concat!("use std::", "sync::"));
+        assert_eq!(scan("serve/mod.rs", &braced).len(), 1);
+        // mpsc/Arc imports and the shim itself are fine
+        let ok = format!("{}{{mpsc, Arc}};\n", concat!("use std::", "sync::"));
+        assert!(scan("serve/mod.rs", &ok).is_empty());
+        assert!(scan("sync/analyze.rs", &qualified).is_empty());
+    }
+
+    #[test]
+    fn set_var_is_only_allowed_in_the_bench_harness() {
+        let src = format!("std::{}(\"X\", \"1\");\n", concat!("env::set_", "var"));
+        assert_eq!(scan("experiments/mod.rs", &src)[0].rule, "env-set-var");
+        assert!(scan("bench_harness/mod.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn cmd_fn_without_flag_validation_is_flagged() {
+        let bad = "fn cmd_bad(args: &Args) -> Result<()> {\n    Ok(())\n}\n";
+        let f = scan("main.rs", bad);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "flag-validation");
+        assert!(f[0].message.contains("cmd_bad"));
+        let good = format!(
+            "fn cmd_good(args: &Args) -> Result<()> {{\n    args.{}(\"good\", &[])?;\n    Ok(())\n}}\n",
+            concat!("ensure_known", "_flags")
+        );
+        assert!(scan("main.rs", &good).is_empty());
+        // the rule only applies to main.rs
+        assert!(scan("experiments/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_blocks_with_nested_braces_are_fully_skipped() {
+        let src = format!(
+            "#[cfg(all(test, dspca_analyze))]\nmod tests {{\n    mod inner {{\n        fn f() {{ {u}    }}\n    }}\n}}\nfn live() {{ {u}}}\n",
+            u = unwrap_call()
+        );
+        let f = scan("analysis/sched.rs", &src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].line, 8, "only the live unwrap counts");
+    }
+
+    #[test]
+    fn the_real_tree_is_clean() {
+        // the library-level equivalent of tests/lint_clean.rs, so a
+        // plain `cargo test` catches regressions without the
+        // integration-test binary
+        let findings = run(&default_root()).expect("lint walk failed");
+        assert!(
+            findings.is_empty(),
+            "dspca lint found {} issue(s):\n{}",
+            findings.len(),
+            findings.iter().map(|f| f.to_string()).collect::<Vec<_>>().join("\n")
+        );
+    }
+}

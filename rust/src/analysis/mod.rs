@@ -1,0 +1,31 @@
+//! In-tree concurrency analysis (ISSUE 7): everything the repo uses to
+//! *prove things about its own threading*, with zero new dependencies.
+//!
+//! Three layers, complementing the instrumented sync shim in
+//! [`crate::sync`]:
+//!
+//! * [`sched`] — a loom-style, bounded-preemption schedule explorer
+//!   (DFS over interleavings with state-hash memoization). It is the
+//!   engine; it knows nothing about the cluster.
+//! * [`model`] — miniature, exactly-faithful models of the router /
+//!   ticket / billing protocol from `cluster/mod.rs` +
+//!   `cluster/session.rs`, run under [`sched`] across *all*
+//!   interleavings: every reply is routed-or-dropped exactly once,
+//!   Σ session bills == the aggregate ledger, stragglers never
+//!   double-bill, aged replies are dropped on the floor, and every
+//!   schedule terminates (no lost wakeup in the driver-election
+//!   protocol). Seeded-bug variants prove the checks can fail.
+//! * [`lint`] — the `dspca lint` repo-invariant scanner (CI hard gate):
+//!   line-level rules that keep the invariants the other two layers
+//!   verify *enforceable at the source level* (no stats mutation
+//!   outside the billing layer, no raw `std::sync` locks outside the
+//!   shim, unwrap budgets, flag validation, env hygiene).
+//!
+//! Division of labor with the existing `propcheck` module: `propcheck`
+//! checks *numerical* properties of randomized linear-algebra inputs;
+//! `analysis` checks *concurrency* properties of the distributed
+//! runtime and *structural* properties of the source tree.
+
+pub mod lint;
+pub mod model;
+pub mod sched;

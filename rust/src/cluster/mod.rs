@@ -86,16 +86,18 @@ pub use wire::{
 pub use worker::{ComputeOracle, NativeOracle, OracleSpec};
 
 use std::collections::{HashMap, HashSet};
-use std::sync::atomic::AtomicU64;
-use std::sync::{mpsc, Arc, Condvar, Mutex, TryLockError, Weak};
+use std::sync::{Arc, Weak};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::data::{Distribution, Shard};
 use crate::rng::Pcg64;
+use crate::sync::atomic::AtomicU64;
+use crate::sync::{mpsc, Condvar, Mutex};
 use crate::transport::{
-    recv_reply, InProcTransport, RecvError, TcpTransport, Transport, TransportSpec, CONTROL_SEQ,
+    recv_reply, InProcTransport, RecvError, ReplyFrame, TcpTransport, Transport, TransportSpec,
+    CONTROL_SEQ,
 };
 
 use session::SessionCore;
@@ -133,7 +135,7 @@ struct Router {
     cv: Condvar,
     /// The transport's shared reply stream. Held only by the current
     /// driver; never held while the router's `state` lock is held.
-    rx: Mutex<mpsc::Receiver<(usize, u64, Response)>>,
+    rx: Mutex<mpsc::Receiver<ReplyFrame>>,
 }
 
 /// Routing tables: open tickets' parking slots plus retired exchanges'
@@ -303,17 +305,21 @@ impl Cluster {
             n,
             d,
             leader_shard,
-            dead: Mutex::new(HashSet::new()),
-            aggregate: Mutex::new(CommStats::default()),
+            dead: Mutex::named(HashSet::new(), "cluster.dead"),
+            aggregate: Mutex::named(CommStats::default(), "cluster.aggregate"),
             seq: AtomicU64::new(CONTROL_SEQ),
-            sender: Mutex::new(transport),
+            // the send lock and the reply stream are the two locks
+            // legitimately held across transport I/O (DESIGN.md §11) —
+            // `named_io` exempts them from the analyze build's
+            // no-locks-across-I/O check
+            sender: Mutex::named_io(transport, "cluster.sender"),
             router: Router {
-                state: Mutex::new(RouterState {
-                    open: HashMap::new(),
-                    inflight: HashMap::new(),
-                }),
+                state: Mutex::named(
+                    RouterState { open: HashMap::new(), inflight: HashMap::new() },
+                    "router.state",
+                ),
                 cv: Condvar::new(),
-                rx: Mutex::new(reply_stream),
+                rx: Mutex::named_io(reply_stream, "router.rx"),
             },
             timeout: EXCHANGE_TIMEOUT,
         })
@@ -321,7 +327,7 @@ impl Cluster {
 
     /// Which transport backend this cluster runs on ("inproc" / "tcp").
     pub fn transport_name(&self) -> &'static str {
-        self.sender.lock().unwrap().name()
+        self.sender.lock().name()
     }
 
     /// Open a new tenant session: its own bill, its own codec, the full
@@ -357,11 +363,11 @@ impl Cluster {
     /// stomp concurrent tenants) — meter a window by snapshotting before
     /// and using [`CommStats::delta_since`] after.
     pub fn aggregate_stats(&self) -> CommStats {
-        self.aggregate.lock().unwrap().clone()
+        self.aggregate.lock().clone()
     }
 
     fn alive_workers(&self) -> Vec<usize> {
-        let dead = self.dead.lock().unwrap();
+        let dead = self.dead.lock();
         (0..self.m).filter(|i| !dead.contains(i)).collect()
     }
 
@@ -375,11 +381,13 @@ impl Cluster {
         if i >= self.m {
             bail!("no such worker {i}");
         }
-        let mut dead = self.dead.lock().unwrap();
-        if dead.insert(i) {
+        // record first, notify after: the dead-set guard must not be
+        // held across the (potentially blocking) transport send
+        let newly_dead = self.dead.lock().insert(i);
+        if newly_dead {
             // best effort: tell the worker (thread or remote process'
             // connection handler) to exit
-            let _ = self.sender.lock().unwrap().send(
+            let _ = self.sender.lock().send(
                 i,
                 CONTROL_SEQ,
                 WirePrecision::F64,
@@ -407,18 +415,14 @@ impl Cluster {
     /// that session closed), or — unknown seq, record aged out — the
     /// floor. Always notifies parked completers.
     fn route_reply(&self, id: usize, rseq: u64, mut resp: Response) {
-        let mut st = self.router.state.lock().unwrap();
+        let mut st = self.router.state.lock();
         if let Some(slot) = st.open.get_mut(&rseq) {
             let resp_bytes = resp.payload_mut().map_or(0, |p| slot.codec.transcode(p)) as u64;
             if let Some(owner) = slot.owner.upgrade() {
-                {
-                    let mut stats = owner.stats.lock().unwrap();
-                    stats.responses_received += 1;
-                    stats.bytes += resp_bytes;
-                }
-                let mut agg = self.aggregate.lock().unwrap();
-                agg.responses_received += 1;
-                agg.bytes += resp_bytes;
+                // billing lives in the session layer (lint rule
+                // `commstats-mutation`): one helper bills the issuing
+                // session and the aggregate together
+                owner.bill_reply_arrival(&self.aggregate, resp_bytes);
             }
             slot.replies.push((id, resp));
             slot.deadline = Instant::now() + self.timeout;
@@ -439,14 +443,7 @@ impl Cluster {
                 if let Some(owner) = owner.upgrade() {
                     let stale_bytes =
                         resp.payload().map_or(0, |p| stale_codec.frame_bytes(p.len())) as u64;
-                    {
-                        let mut stats = owner.stats.lock().unwrap();
-                        stats.responses_received += 1;
-                        stats.bytes += stale_bytes;
-                    }
-                    let mut agg = self.aggregate.lock().unwrap();
-                    agg.responses_received += 1;
-                    agg.bytes += stale_bytes;
+                    owner.bill_reply_arrival(&self.aggregate, stale_bytes);
                 }
             }
         }
@@ -472,7 +469,7 @@ impl Cluster {
     /// Retire a ticket's slot (used by `Ticket::drop` and the failure
     /// paths) and wake parked completers.
     pub(crate) fn retire_ticket(&self, seq: u64) {
-        let mut st = self.router.state.lock().unwrap();
+        let mut st = self.router.state.lock();
         Self::retire_slot_locked(&mut st, seq);
         drop(st);
         self.router.cv.notify_all();
@@ -487,7 +484,7 @@ impl Cluster {
     /// table and the same error the old drain loop produced is returned.
     fn await_ticket(&self, seq: u64) -> Result<Vec<(usize, Response)>> {
         loop {
-            let mut st = self.router.state.lock().unwrap();
+            let mut st = self.router.state.lock();
             loop {
                 let slot = st.open.get(&seq).expect("await_ticket: no slot for ticket");
                 if slot.replies.len() == slot.expected {
@@ -499,14 +496,13 @@ impl Cluster {
                 }
                 let now = Instant::now();
                 let deadline = slot.deadline;
-                // a panicked driver poisons the stream lock but not the
-                // stream; recover the guard and keep delivering
-                let rx_guard = match self.router.rx.try_lock() {
-                    Ok(guard) => Some(guard),
-                    Err(TryLockError::Poisoned(poisoned)) => Some(poisoned.into_inner()),
-                    Err(TryLockError::WouldBlock) => None,
-                };
-                match rx_guard {
+                // driver election: a try_lock cannot block, so taking
+                // `rx` under `state` here does not order state before rx
+                // (the shim records no incoming edge for try_lock) —
+                // which is what lets the elected driver take rx → state
+                // in the opposite order without a lockdep cycle. A
+                // panicked driver's poison is recovered inside the shim.
+                match self.router.rx.try_lock() {
                     Some(rx) => {
                         if now >= deadline {
                             // deadline passed with the stream idle: one
@@ -570,8 +566,7 @@ impl Cluster {
                         }
                         // park until the driver routes something or
                         // retires; re-check the slot on every wake
-                        let (guard, _) =
-                            self.router.cv.wait_timeout(st, deadline - now).unwrap();
+                        let (guard, _) = self.router.cv.wait_timeout(st, deadline - now);
                         st = guard;
                     }
                 }
@@ -582,14 +577,11 @@ impl Cluster {
 
 impl Drop for Cluster {
     fn drop(&mut self) {
-        let transport = match self.sender.get_mut() {
-            Ok(t) => t,
-            Err(poisoned) => poisoned.into_inner(),
-        };
         // idempotent on every backend: workers are told to stop, threads
         // and sockets are released; a second shutdown (e.g. the
-        // transport's own Drop) is a no-op
-        transport.shutdown();
+        // transport's own Drop) is a no-op. `get_mut` recovers poison
+        // inside the shim.
+        self.sender.get_mut().shutdown();
     }
 }
 
@@ -612,7 +604,7 @@ mod tests {
     /// routed — this drain just makes that deterministic at the margin.
     fn drain_router(c: &Cluster) {
         loop {
-            let rx = c.router.rx.lock().unwrap();
+            let rx = c.router.rx.lock();
             match rx.try_recv() {
                 Ok((id, seq, resp)) => {
                     drop(rx);
@@ -957,7 +949,7 @@ mod tests {
         let g = drainer.gram_average().unwrap();
         let want = g.matvec(&v);
         {
-            let mut st = c.router.state.lock().unwrap();
+            let mut st = c.router.state.lock();
             st.inflight.insert(
                 1000,
                 Inflight {
@@ -966,12 +958,13 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            c.sender
-                .lock()
-                .unwrap()
-                .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
-                .unwrap();
         }
+        // send outside the router-state guard: nothing holds a non-IO
+        // lock across transport I/O (the analyze build enforces this)
+        c.sender
+            .lock()
+            .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+            .unwrap();
         issuer.reset_stats();
         drainer.reset_stats();
         let got = drainer.dist_matvec(&v).unwrap();
@@ -992,7 +985,7 @@ mod tests {
         assert_eq!(ib.responses_received, 1, "the straggler bills to its issuer on arrival");
         assert_eq!(ib.bytes, (2 * 8) as u64, "at the bf16 width its round shipped under");
         assert!(
-            c.router.state.lock().unwrap().inflight.is_empty(),
+            c.router.state.lock().inflight.is_empty(),
             "straggler record is forgotten"
         );
     }
@@ -1008,18 +1001,19 @@ mod tests {
         let v = vec![0.3; 8];
         {
             let issuer = c.session();
-            let mut st = c.router.state.lock().unwrap();
-            st.inflight.insert(
-                2000,
-                Inflight {
-                    codec: WireCodec::new(WirePrecision::Bf16),
-                    outstanding: 1,
-                    owner: Arc::downgrade(&issuer.core),
-                },
-            );
+            {
+                let mut st = c.router.state.lock();
+                st.inflight.insert(
+                    2000,
+                    Inflight {
+                        codec: WireCodec::new(WirePrecision::Bf16),
+                        outstanding: 1,
+                        owner: Arc::downgrade(&issuer.core),
+                    },
+                );
+            }
             c.sender
                 .lock()
-                .unwrap()
                 .send(1, 2000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
                 .unwrap();
             // `issuer` drops here: the session is closed
@@ -1036,7 +1030,7 @@ mod tests {
         // dropped without billing anyone
         assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
         assert!(
-            c.router.state.lock().unwrap().inflight.is_empty(),
+            c.router.state.lock().inflight.is_empty(),
             "orphan record is forgotten"
         );
     }
@@ -1130,8 +1124,8 @@ mod tests {
         assert_eq!(st.rounds, 1, "the abandoned round was still billed at submit");
         assert_eq!(st.requests_sent, 2);
         assert_eq!(st.responses_received, 2, "its replies bill to the issuer on arrival");
-        assert!(c.router.state.lock().unwrap().inflight.is_empty());
-        assert!(c.router.state.lock().unwrap().open.is_empty());
+        assert!(c.router.state.lock().inflight.is_empty());
+        assert!(c.router.state.lock().open.is_empty());
     }
 
     #[test]
@@ -1143,7 +1137,7 @@ mod tests {
         let v = vec![0.3; 8];
         let issuer = c.session();
         {
-            let mut st = c.router.state.lock().unwrap();
+            let mut st = c.router.state.lock();
             st.inflight.insert(
                 1,
                 Inflight {
@@ -1152,20 +1146,19 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            c.sender
-                .lock()
-                .unwrap()
-                .send(1, 1, WirePrecision::F64, &Request::CovMatVec(v.clone()))
-                .unwrap();
         }
+        c.sender
+            .lock()
+            .send(1, 1, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+            .unwrap();
         // burn the sequence namespace past the retention horizon, so
         // the next submit prunes the record before its reply lands
-        c.seq.fetch_add(INFLIGHT_RETENTION + 8, std::sync::atomic::Ordering::Relaxed);
+        c.seq.fetch_add(INFLIGHT_RETENTION + 8, crate::sync::atomic::Ordering::Relaxed);
         let agg0 = c.aggregate_stats();
         let drainer = c.session();
         let ticket = drainer.dist_matvec_submit(&v).unwrap();
         assert!(
-            !c.router.state.lock().unwrap().inflight.contains_key(&1),
+            !c.router.state.lock().inflight.contains_key(&1),
             "submit must prune records older than the horizon"
         );
         let got = ticket.complete().unwrap();
@@ -1177,7 +1170,7 @@ mod tests {
         assert_eq!(issuer.stats(), CommStats::default(), "aged straggler bills nobody");
         // aggregate window == the drainer's bill alone: exact identity
         assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
-        assert!(c.router.state.lock().unwrap().inflight.is_empty());
+        assert!(c.router.state.lock().inflight.is_empty());
     }
 
     #[test]
@@ -1283,7 +1276,7 @@ mod tests {
         let (c, _) = small_cluster(2, 10);
         assert_eq!(c.transport_name(), "inproc");
         {
-            let mut sender = c.sender.lock().unwrap();
+            let mut sender = c.sender.lock();
             sender.shutdown();
             sender.shutdown(); // double shutdown is a no-op
             let err = sender
@@ -1310,7 +1303,6 @@ mod tests {
             // a request whose reply no ticket will ever collect
             c.sender
                 .lock()
-                .unwrap()
                 .send(1, 999, WirePrecision::F64, &Request::CovMatVec(vec![1.0; 8]))
                 .unwrap();
         }
@@ -1329,7 +1321,7 @@ mod tests {
         let g = drainer.gram_average().unwrap();
         let want = g.matvec(&v);
         {
-            let mut st = c.router.state.lock().unwrap();
+            let mut st = c.router.state.lock();
             st.inflight.insert(
                 1000,
                 Inflight {
@@ -1338,12 +1330,11 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            c.sender
-                .lock()
-                .unwrap()
-                .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
-                .unwrap();
         }
+        c.sender
+            .lock()
+            .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+            .unwrap();
         issuer.reset_stats();
         drainer.reset_stats();
         let got = drainer.dist_matvec(&v).unwrap();
@@ -1358,7 +1349,7 @@ mod tests {
         assert_eq!(ib.responses_received, 1, "the straggler bills to its issuer on arrival");
         assert_eq!(ib.bytes, (2 * 8) as u64, "at the bf16 width its round shipped under");
         assert!(
-            c.router.state.lock().unwrap().inflight.is_empty(),
+            c.router.state.lock().inflight.is_empty(),
             "straggler record is forgotten"
         );
         drop(issuer);
@@ -1377,18 +1368,19 @@ mod tests {
         let v = vec![0.3; 8];
         {
             let issuer = c.session();
-            let mut st = c.router.state.lock().unwrap();
-            st.inflight.insert(
-                2000,
-                Inflight {
-                    codec: WireCodec::new(WirePrecision::Bf16),
-                    outstanding: 1,
-                    owner: Arc::downgrade(&issuer.core),
-                },
-            );
+            {
+                let mut st = c.router.state.lock();
+                st.inflight.insert(
+                    2000,
+                    Inflight {
+                        codec: WireCodec::new(WirePrecision::Bf16),
+                        outstanding: 1,
+                        owner: Arc::downgrade(&issuer.core),
+                    },
+                );
+            }
             c.sender
                 .lock()
-                .unwrap()
                 .send(1, 2000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
                 .unwrap();
             // `issuer` drops here: the session is closed
@@ -1403,7 +1395,7 @@ mod tests {
         assert_eq!(db.bytes, (8 * 8 * 3) as u64);
         assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
         assert!(
-            c.router.state.lock().unwrap().inflight.is_empty(),
+            c.router.state.lock().inflight.is_empty(),
             "orphan record is forgotten"
         );
         drop(drainer);
@@ -1419,7 +1411,7 @@ mod tests {
         let v = vec![0.3; 8];
         let issuer = c.session();
         {
-            let mut st = c.router.state.lock().unwrap();
+            let mut st = c.router.state.lock();
             st.inflight.insert(
                 1,
                 Inflight {
@@ -1428,17 +1420,16 @@ mod tests {
                     owner: Arc::downgrade(&issuer.core),
                 },
             );
-            c.sender
-                .lock()
-                .unwrap()
-                .send(1, 1, WirePrecision::F64, &Request::CovMatVec(v.clone()))
-                .unwrap();
         }
-        c.seq.fetch_add(INFLIGHT_RETENTION + 8, std::sync::atomic::Ordering::Relaxed);
+        c.sender
+            .lock()
+            .send(1, 1, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+            .unwrap();
+        c.seq.fetch_add(INFLIGHT_RETENTION + 8, crate::sync::atomic::Ordering::Relaxed);
         let agg0 = c.aggregate_stats();
         let drainer = c.session();
         let ticket = drainer.dist_matvec_submit(&v).unwrap();
-        assert!(!c.router.state.lock().unwrap().inflight.contains_key(&1));
+        assert!(!c.router.state.lock().inflight.contains_key(&1));
         let got = ticket.complete().unwrap();
         assert_eq!(got.len(), 8);
         drain_router(&c);
@@ -1447,7 +1438,7 @@ mod tests {
         assert_eq!(db.bytes, (8 * 8 * 3) as u64);
         assert_eq!(issuer.stats(), CommStats::default(), "aged straggler bills nobody");
         assert_eq!(c.aggregate_stats().delta_since(&agg0), db);
-        assert!(c.router.state.lock().unwrap().inflight.is_empty());
+        assert!(c.router.state.lock().inflight.is_empty());
         drop(issuer);
         drop(drainer);
         drop(c);

@@ -39,14 +39,15 @@
 //! session are dropped unbilled on both sides — see the router in
 //! `cluster/mod.rs`).
 
-use std::sync::atomic::Ordering;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
 use crate::data::Shard;
 use crate::linalg::Matrix;
+use crate::sync::atomic::Ordering;
+use crate::sync::Mutex;
 
 use super::comm::CommStats;
 use super::message::{Request, Response};
@@ -60,6 +61,26 @@ use super::{prune_inflight, Cluster, Slot};
 pub(super) struct SessionCore {
     pub(super) stats: Mutex<CommStats>,
     pub(super) codec: Mutex<WireCodec>,
+}
+
+impl SessionCore {
+    /// Bill one routed reply to this session **and** the cluster
+    /// aggregate. This is the inbound half of the billing contract (the
+    /// outbound half is [`Session::bill`]); the router calls it with the
+    /// router-state lock held, so the lock order is
+    /// `router.state → session.stats` and
+    /// `router.state → cluster.aggregate` — and every `CommStats`
+    /// mutation stays in this file (lint rule `commstats-mutation`).
+    pub(super) fn bill_reply_arrival(&self, aggregate: &Mutex<CommStats>, bytes: u64) {
+        {
+            let mut stats = self.stats.lock();
+            stats.responses_received += 1;
+            stats.bytes += bytes;
+        }
+        let mut agg = aggregate.lock();
+        agg.responses_received += 1;
+        agg.bytes += bytes;
+    }
 }
 
 /// One tenant's handle on a shared [`Cluster`]: per-session
@@ -83,8 +104,8 @@ impl<'c> Session<'c> {
         Session {
             cluster,
             core: Arc::new(SessionCore {
-                stats: Mutex::new(CommStats::default()),
-                codec: Mutex::new(WireCodec::default()),
+                stats: Mutex::named(CommStats::default(), "session.stats"),
+                codec: Mutex::named(WireCodec::default(), "session.codec"),
             }),
         }
     }
@@ -124,18 +145,18 @@ impl<'c> Session<'c> {
     /// [`Session::reset_stats`]. Only traffic this session generated is
     /// in here — concurrent tenants bill separately.
     pub fn stats(&self) -> CommStats {
-        self.core.stats.lock().unwrap().clone()
+        self.core.stats.lock().clone()
     }
 
     /// Zero this session's bill. The cluster aggregate is monotonic and
     /// unaffected.
     pub fn reset_stats(&self) {
-        *self.core.stats.lock().unwrap() = CommStats::default();
+        *self.core.stats.lock() = CommStats::default();
     }
 
     /// The wire codec installed on this session (default: lossless f64).
     pub fn codec(&self) -> WireCodec {
-        *self.core.codec.lock().unwrap()
+        *self.core.codec.lock()
     }
 
     /// Install a wire codec **for this session only**. Every subsequent
@@ -144,7 +165,7 @@ impl<'c> Session<'c> {
     /// exactly as a real quantized wire would — without touching any
     /// concurrent tenant's traffic.
     pub fn set_codec(&self, codec: WireCodec) {
-        *self.core.codec.lock().unwrap() = codec;
+        *self.core.codec.lock() = codec;
     }
 
     /// Close the session and return its final bill, **race-free**: after
@@ -165,7 +186,8 @@ impl<'c> Session<'c> {
             // is impossible, and the stats we now own are final.
             match Arc::try_unwrap(core) {
                 Ok(owned) => {
-                    return owned.stats.into_inner().unwrap_or_else(|p| p.into_inner());
+                    // `into_inner` recovers poison inside the shim
+                    return owned.stats.into_inner();
                 }
                 Err(still_shared) => {
                     core = still_shared;
@@ -180,8 +202,8 @@ impl<'c> Session<'c> {
     /// what makes "sum of session bills == aggregate" hold by
     /// construction.
     fn bill(&self, f: impl Fn(&mut CommStats)) {
-        f(&mut self.core.stats.lock().unwrap());
-        f(&mut self.cluster.aggregate.lock().unwrap());
+        f(&mut self.core.stats.lock());
+        f(&mut self.cluster.aggregate.lock());
     }
 
     /// **Submit phase** of a collective round: send `req` to every
@@ -230,7 +252,7 @@ impl<'c> Session<'c> {
         // open the routing slot before the first byte moves: a reply can
         // be routed by a concurrent driver the instant the send lands
         {
-            let mut st = self.cluster.router.state.lock().unwrap();
+            let mut st = self.cluster.router.state.lock();
             prune_inflight(&mut st.inflight, seq);
             st.open.insert(
                 seq,
@@ -245,7 +267,7 @@ impl<'c> Session<'c> {
         }
         let mut sent = 0usize;
         let send_err = {
-            let mut sender = self.cluster.sender.lock().unwrap();
+            let mut sender = self.cluster.sender.lock();
             let mut err = None;
             for &w in workers {
                 // the transport moves the message (typed enum in-proc,
@@ -277,7 +299,7 @@ impl<'c> Session<'c> {
             // only the workers actually reached owe replies; retire the
             // slot so their stragglers bill here (or nowhere, if we
             // reached nobody)
-            let mut st = self.cluster.router.state.lock().unwrap();
+            let mut st = self.cluster.router.state.lock();
             if let Some(slot) = st.open.get_mut(&seq) {
                 slot.expected = sent;
             }

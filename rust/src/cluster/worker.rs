@@ -282,7 +282,7 @@ pub(crate) fn worker_main(
     spec: OracleSpec,
     seed: u64,
     rx: mpsc::Receiver<(u64, Request)>,
-    tx: mpsc::Sender<(usize, u64, Response)>,
+    tx: mpsc::Sender<crate::transport::ReplyFrame>,
 ) {
     let mut rng = worker_rng(id, seed);
     let mut oracle: Box<dyn ComputeOracle> = match spec.build() {

@@ -53,6 +53,16 @@
 //!   (behind the `pjrt` cargo feature; the default build uses a stub).
 //! - [`experiments`] — drivers regenerating every table and figure in the
 //!   paper's evaluation (see `DESIGN.md` §4 for the experiment index).
+//! - [`sync`] — instrumented synchronization shim: every lock/condvar in
+//!   the crate goes through it. Transparent over `std::sync` in normal
+//!   builds; under `DSPCA_ANALYZE=1` it becomes a lockdep (lock-order
+//!   cycle detection, fail-fast with the witness chain) plus a
+//!   no-locks-across-transport-I/O checker.
+//! - [`analysis`] — the in-tree concurrency analyzer: a
+//!   bounded-preemption schedule explorer ([`analysis::sched`]), model
+//!   checks of the router/ticket/billing protocol across all
+//!   interleavings ([`analysis::model`]), and the `dspca lint`
+//!   repo-invariant gate ([`analysis::lint`]).
 //! - [`util`], [`propcheck`], [`bench_harness`] — JSON/CSV/stats,
 //!   property-testing and benchmarking substrates (offline image has no
 //!   serde/proptest/criterion).
@@ -88,6 +98,7 @@
 //! }
 //! ```
 
+pub mod analysis;
 pub mod bench_harness;
 pub mod cluster;
 pub mod config;
@@ -99,6 +110,7 @@ pub mod propcheck;
 pub mod rng;
 pub mod runtime;
 pub mod serve;
+pub mod sync;
 pub mod transport;
 pub mod util;
 

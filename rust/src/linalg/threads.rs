@@ -12,8 +12,9 @@
 //! order-independent (the ISSUE 6 bench-harness env race must not be
 //! reintroduced here).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::OnceLock;
+
+use crate::sync::atomic::{AtomicUsize, Ordering};
 
 /// 0 means "not yet initialized"; first read resolves `DSPCA_THREADS`.
 static THREADS: AtomicUsize = AtomicUsize::new(0);

@@ -25,6 +25,7 @@
 //! dspca bench-check [--files BENCH_linalg.json,BENCH_topk.json]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
+//! dspca lint      [--root path/to/crate]
 //! ```
 //!
 //! `--threads N` sets the process-global compute-thread budget the
@@ -76,11 +77,12 @@ fn run() -> Result<()> {
         Some("bench-check") => cmd_bench_check(&args),
         Some("e2e") => cmd_e2e(&args),
         Some("selftest") => cmd_selftest(&args),
-        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, transport, worker, bench-check, e2e, selftest)"),
+        Some("lint") => cmd_lint(&args),
+        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, transport, worker, bench-check, e2e, selftest, lint)"),
         None => {
             println!(
                 "dspca — Communication-efficient Distributed Stochastic PCA\n\
-                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | transport | worker | bench-check | e2e | selftest\n\
+                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | transport | worker | bench-check | e2e | selftest | lint\n\
                  see README.md for flags"
             );
             Ok(())
@@ -513,6 +515,28 @@ fn cmd_e2e(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+/// Run the repo-invariant lint over `src/` and fail on any finding —
+/// the CI `lint` job's gate. `--root` points at an alternate crate
+/// root (directory containing `src/`); the default is this crate.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use dspca::analysis::lint;
+    args.ensure_known_flags("lint", &["root", "out"])?;
+    let root = match args.get("root") {
+        Some(dir) => std::path::PathBuf::from(dir),
+        None => lint::default_root(),
+    };
+    let findings = lint::run(&root)
+        .with_context(|| format!("lint: scanning {}", root.display()))?;
+    if findings.is_empty() {
+        println!("lint: {} clean (all repo invariants hold)", root.join("src").display());
+        return Ok(());
+    }
+    for f in &findings {
+        println!("{f}");
+    }
+    bail!("lint: {} finding(s) in {}", findings.len(), root.join("src").display());
 }
 
 fn cmd_selftest(args: &Args) -> Result<()> {

@@ -43,13 +43,13 @@
 //!   failing; its partial bill is included in the sum.
 
 use std::collections::VecDeque;
-use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
 
 use crate::cluster::{Cluster, CommStats};
 use crate::coordinator::Algorithm;
+use crate::sync::Mutex;
 
 /// One queued query: a display name plus the algorithm to run. The
 /// algorithm chooses its own wire codec (e.g.
@@ -142,12 +142,14 @@ pub fn serve(cluster: &Cluster, jobs: Vec<Job>, tenants: usize) -> Result<ServeR
     let n_jobs = jobs.len();
     let agg0 = cluster.aggregate_stats();
     let t_start = Instant::now();
-    let queue: Mutex<VecDeque<(usize, Job)>> = Mutex::new(jobs.into_iter().enumerate().collect());
-    let done: Mutex<Vec<(usize, JobReport)>> = Mutex::new(Vec::with_capacity(n_jobs));
+    let queue: Mutex<VecDeque<(usize, Job)>> =
+        Mutex::named(jobs.into_iter().enumerate().collect(), "serve.queue");
+    let done: Mutex<Vec<(usize, JobReport)>> =
+        Mutex::named(Vec::with_capacity(n_jobs), "serve.done");
     std::thread::scope(|s| {
         for _ in 0..tenants.min(n_jobs.max(1)) {
             s.spawn(|| loop {
-                let next = queue.lock().unwrap().pop_front();
+                let next = queue.lock().pop_front();
                 let Some((idx, job)) = next else { break };
                 let alg_name = job.alg.name();
                 let session = cluster.session();
@@ -182,12 +184,12 @@ pub fn serve(cluster: &Cluster, jobs: Vec<Job>, tenants: usize) -> Result<ServeR
                         comm,
                     },
                 };
-                done.lock().unwrap().push((idx, report));
+                done.lock().push((idx, report));
             });
         }
     });
     let wall = t_start.elapsed();
-    let mut reports = done.into_inner().unwrap();
+    let mut reports = done.into_inner();
     reports.sort_by_key(|(idx, _)| *idx);
     let jobs: Vec<JobReport> = reports.into_iter().map(|(_, r)| r).collect();
     let aggregate = cluster.aggregate_stats().delta_since(&agg0);

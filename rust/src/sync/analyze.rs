@@ -1,0 +1,469 @@
+//! `cfg(dspca_analyze)` backend of the sync shim: lockdep-style
+//! lock-order tracking and IO-section checking.
+//!
+//! Every mutex belongs to a lock *class* (shared by name via
+//! [`Mutex::named`], or per-instance for anonymous [`Mutex::new`]).
+//! A global registry keeps a directed graph over classes: acquiring
+//! class `B` while holding class `A` (via a *blocking* `lock()`)
+//! records the edge `A -> B`. The moment a new edge closes a directed
+//! cycle, the acquisition panics with the witness chain — a lock-order
+//! inversion that could deadlock under some interleaving, caught on the
+//! first run that exhibits both orders, no actual deadlock required.
+//!
+//! `try_lock` records no incoming edge (it cannot block, so it cannot
+//! be the waiting edge of a deadlock cycle) but the guard still sits on
+//! the per-thread held stack, so locks acquired *under* it produce
+//! outgoing edges as usual.
+//!
+//! [`check_io`] is called by the transport layer at every
+//! `Transport::send` / `recv_reply` entry: holding any lock whose class
+//! was not declared IO-ok ([`Mutex::named_io`]) across those boundaries
+//! panics with the held-lock list.
+//!
+//! Panic hygiene: detector panics are raised *after* the registry guard
+//! is dropped, and the held-stack bookkeeping is unwind-safe (guards
+//! pop their class in `Drop`), so `catch_unwind`-based self-tests leave
+//! the instrumentation consistent.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::{OnceLock, PoisonError, TryLockError, WaitTimeoutResult};
+use std::time::Duration;
+
+/// Index into [`Registry::classes`].
+type ClassId = usize;
+
+struct ClassInfo {
+    name: String,
+    io_ok: bool,
+}
+
+#[derive(Default)]
+struct Registry {
+    classes: Vec<ClassInfo>,
+    by_name: HashMap<&'static str, ClassId>,
+    /// Adjacency: `edges[from]` = classes acquired while `from` was held.
+    edges: HashMap<ClassId, Vec<ClassId>>,
+}
+
+impl Registry {
+    fn intern_named(&mut self, name: &'static str, io_ok: bool) -> ClassId {
+        if let Some(&id) = self.by_name.get(name) {
+            return id;
+        }
+        let id = self.classes.len();
+        self.classes.push(ClassInfo { name: name.to_string(), io_ok });
+        self.by_name.insert(name, id);
+        id
+    }
+
+    fn intern_anon(&mut self) -> ClassId {
+        let id = self.classes.len();
+        self.classes.push(ClassInfo { name: format!("mutex#{id}"), io_ok: false });
+        id
+    }
+
+    /// Add `from -> to` if absent; returns whether it was new.
+    fn add_edge(&mut self, from: ClassId, to: ClassId) -> bool {
+        let out = self.edges.entry(from).or_default();
+        if out.contains(&to) {
+            false
+        } else {
+            out.push(to);
+            true
+        }
+    }
+
+    /// DFS path `from ->* to`, returned as the class-id chain (including
+    /// both endpoints) if one exists.
+    fn find_path(&self, from: ClassId, to: ClassId) -> Option<Vec<ClassId>> {
+        let mut stack = vec![vec![from]];
+        let mut visited = vec![false; self.classes.len()];
+        visited[from] = true;
+        while let Some(path) = stack.pop() {
+            let &last = path.last()?;
+            if last == to {
+                return Some(path);
+            }
+            if let Some(outs) = self.edges.get(&last) {
+                for &next in outs {
+                    if !visited[next] {
+                        visited[next] = true;
+                        let mut p = path.clone();
+                        p.push(next);
+                        stack.push(p);
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    fn name(&self, id: ClassId) -> &str {
+        &self.classes[id].name
+    }
+}
+
+fn registry() -> std::sync::MutexGuard<'static, Registry> {
+    static REGISTRY: OnceLock<std::sync::Mutex<Registry>> = OnceLock::new();
+    REGISTRY
+        .get_or_init(|| std::sync::Mutex::new(Registry::default()))
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+}
+
+thread_local! {
+    /// Classes of locks this thread currently holds, in acquisition order.
+    static HELD: RefCell<Vec<ClassId>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Record order edges `held -> class` for every lock the thread holds,
+/// panicking (with the witness chain) if any edge closes a cycle. Call
+/// only for acquisitions that can block.
+fn before_blocking_acquire(class: ClassId) {
+    let held = HELD.with(|h| h.borrow().clone());
+    if held.is_empty() {
+        return;
+    }
+    let mut violation: Option<String> = None;
+    {
+        let mut reg = registry();
+        for &from in &held {
+            if reg.add_edge(from, class) {
+                // new edge: a pre-existing path class ->* from now closes
+                // a cycle (some thread acquires in the opposite order)
+                if let Some(path) = reg.find_path(class, from) {
+                    let chain: Vec<&str> = path.iter().map(|&c| reg.name(c)).collect();
+                    violation = Some(format!(
+                        "lock-order inversion: acquiring '{}' while holding '{}', \
+                         but the recorded order is {} -> '{}' — potential deadlock",
+                        reg.name(class),
+                        reg.name(from),
+                        chain.join(" -> "),
+                        reg.name(class),
+                    ));
+                    break;
+                }
+            }
+        }
+    } // registry guard dropped before panicking
+    if let Some(msg) = violation {
+        panic!("dspca_analyze: {msg}");
+    }
+}
+
+fn push_held(class: ClassId) {
+    HELD.with(|h| h.borrow_mut().push(class));
+}
+
+fn pop_held(class: ClassId) {
+    HELD.with(|h| {
+        let mut held = h.borrow_mut();
+        // pop the *last* occurrence: guards may be released out of
+        // acquisition order, and one class can be held twice (distinct
+        // instances) on the way to a detector panic
+        if let Some(pos) = held.iter().rposition(|&c| c == class) {
+            held.remove(pos);
+        }
+    });
+}
+
+/// Panic if the calling thread holds any lock not declared IO-ok. The
+/// transport layer calls this at every `Transport::send` and
+/// `recv_reply` entry.
+pub fn check_io(site: &str) {
+    let offenders: Vec<String> = HELD.with(|h| {
+        let held = h.borrow();
+        if held.is_empty() {
+            return Vec::new();
+        }
+        let reg = registry();
+        held.iter()
+            .filter(|&&c| !reg.classes[c].io_ok)
+            .map(|&c| reg.name(c).to_string())
+            .collect()
+    });
+    if !offenders.is_empty() {
+        panic!(
+            "dspca_analyze: lock(s) [{}] held across blocking transport I/O at {site} — \
+             a slow or dead peer would stall every thread contending on them",
+            offenders.join(", "),
+        );
+    }
+}
+
+/// Instrumented mutex (analyze mode). Same API as the release wrapper
+/// in `sync/mod.rs`.
+pub struct Mutex<T> {
+    class: ClassId,
+    inner: std::sync::Mutex<T>,
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        let class = registry().intern_anon();
+        Self { class, inner: std::sync::Mutex::new(value) }
+    }
+
+    pub fn named(value: T, class: &'static str) -> Self {
+        let class = registry().intern_named(class, false);
+        Self { class, inner: std::sync::Mutex::new(value) }
+    }
+
+    pub fn named_io(value: T, class: &'static str) -> Self {
+        let class = registry().intern_named(class, true);
+        Self { class, inner: std::sync::Mutex::new(value) }
+    }
+
+    pub fn lock(&self) -> MutexGuard<'_, T> {
+        before_blocking_acquire(self.class);
+        let inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        push_held(self.class);
+        MutexGuard { class: self.class, inner: Some(inner) }
+    }
+
+    pub fn try_lock(&self) -> Option<MutexGuard<'_, T>> {
+        // no before_blocking_acquire: a try-lock cannot wait, so it
+        // cannot be the blocking edge of a deadlock cycle
+        let inner = match self.inner.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => return None,
+        };
+        push_held(self.class);
+        Some(MutexGuard { class: self.class, inner: Some(inner) })
+    }
+
+    pub fn get_mut(&mut self) -> &mut T {
+        // exclusive access: no lock is taken, nothing to record
+        self.inner.get_mut().unwrap_or_else(PoisonError::into_inner)
+    }
+
+    pub fn into_inner(self) -> T {
+        self.inner.into_inner().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
+pub struct MutexGuard<'a, T> {
+    class: ClassId,
+    /// `Some` except transiently inside `Condvar::wait_timeout` (the
+    /// inner guard moves through the std condvar) and in `Drop`.
+    inner: Option<std::sync::MutexGuard<'a, T>>,
+}
+
+impl<T> Deref for MutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        match &self.inner {
+            Some(g) => g,
+            // unreachable by construction: `inner` is only `None` after
+            // the guard has been consumed or dropped
+            None => unreachable!("dspca_analyze: guard used after release"),
+        }
+    }
+}
+
+impl<T> DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        match &mut self.inner {
+            Some(g) => g,
+            None => unreachable!("dspca_analyze: guard used after release"),
+        }
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        if self.inner.take().is_some() {
+            pop_held(self.class);
+        }
+    }
+}
+
+/// Instrumented condvar (analyze mode): the wait releases the guard's
+/// class from the held stack for its duration and re-records the
+/// reacquisition as a blocking acquire.
+#[derive(Default)]
+pub struct Condvar(std::sync::Condvar);
+
+impl Condvar {
+    pub fn new() -> Self {
+        Self(std::sync::Condvar::new())
+    }
+
+    pub fn notify_all(&self) {
+        self.0.notify_all();
+    }
+
+    pub fn notify_one(&self) {
+        self.0.notify_one();
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        mut guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (MutexGuard<'a, T>, WaitTimeoutResult) {
+        let class = guard.class;
+        let inner = match guard.inner.take() {
+            Some(g) => g,
+            None => unreachable!("dspca_analyze: wait on a released guard"),
+        };
+        pop_held(class); // the lock is released while waiting
+        drop(guard); // inner already taken: Drop sees None and pops nothing
+        let (back, res) = self.0.wait_timeout(inner, dur).unwrap_or_else(PoisonError::into_inner);
+        before_blocking_acquire(class); // reacquisition can block
+        push_held(class);
+        (MutexGuard { class, inner: Some(back) }, res)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Detector self-tests (ISSUE 7 satellite: guard against false
+    //! negatives). Only compiled under `dspca_analyze`, i.e. the
+    //! `DSPCA_ANALYZE=1` CI job. Each test uses its own class names —
+    //! the registry is process-global and tests run concurrently.
+
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn abba_inversion_is_flagged() {
+        let a = Mutex::named(0u32, "test.abba.A");
+        let b = Mutex::named(0u32, "test.abba.B");
+        {
+            let _ga = a.lock();
+            let _gb = b.lock(); // records A -> B
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _gb = b.lock();
+            let _ga = a.lock(); // B -> A closes the cycle: must panic
+        }));
+        let msg = match r {
+            Ok(()) => panic!("seeded ABBA inversion was not flagged"),
+            Err(e) => match e.downcast::<String>() {
+                Ok(s) => *s,
+                Err(_) => panic!("detector panicked without a message"),
+            },
+        };
+        assert!(msg.contains("lock-order inversion"), "unexpected message: {msg}");
+        assert!(msg.contains("test.abba.A") && msg.contains("test.abba.B"));
+        // unwinding dropped the guards: the held stack must be clean
+        HELD.with(|h| assert!(h.borrow().is_empty(), "held stack leaked after panic"));
+    }
+
+    #[test]
+    fn transitive_cycle_is_flagged() {
+        // A -> B and B -> C recorded, then C -> A must be rejected even
+        // though no direct A/C pair was ever nested before.
+        let a = Mutex::named(0u32, "test.chain.A");
+        let b = Mutex::named(0u32, "test.chain.B");
+        let c = Mutex::named(0u32, "test.chain.C");
+        {
+            let _ga = a.lock();
+            let _gb = b.lock();
+        }
+        {
+            let _gb = b.lock();
+            let _gc = c.lock();
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _gc = c.lock();
+            let _ga = a.lock();
+        }));
+        assert!(r.is_err(), "transitive inversion (A->B->C vs C->A) was not flagged");
+    }
+
+    #[test]
+    fn try_lock_is_not_a_blocking_edge() {
+        // The router's driver-election pattern: thread holds `state` and
+        // try_locks `rx`, while the driver holds `rx` and blocks on
+        // `state`. Legal — the try_lock side cannot wait.
+        let state = Mutex::named(0u32, "test.election.state");
+        let rx = Mutex::named(0u32, "test.election.rx");
+        {
+            let _gs = state.lock();
+            let _gr = rx.try_lock().expect("uncontended"); // NO state -> rx edge
+        }
+        {
+            let _gr = rx.lock();
+            let _gs = state.lock(); // rx -> state: fine, no cycle
+        }
+        // and the recorded rx -> state order keeps working
+        let _gr = rx.lock();
+        let _gs = state.lock();
+    }
+
+    #[test]
+    fn outgoing_edges_under_a_try_locked_guard_still_count() {
+        let a = Mutex::named(0u32, "test.tryout.A");
+        let b = Mutex::named(0u32, "test.tryout.B");
+        {
+            let _ga = a.try_lock().expect("uncontended");
+            let _gb = b.lock(); // records A -> B even though A came from try_lock
+        }
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            let _gb = b.lock();
+            let _ga = a.lock();
+        }));
+        assert!(r.is_err(), "B -> A after a try-lock-recorded A -> B must still be a cycle");
+    }
+
+    #[test]
+    fn io_section_rejects_ordinary_lock() {
+        let m = Mutex::named(0u32, "test.io.plain");
+        let _g = m.lock();
+        let r = catch_unwind(AssertUnwindSafe(|| check_io("test.io.site")));
+        let msg = match r {
+            Ok(()) => panic!("check_io accepted an ordinary lock held across I/O"),
+            Err(e) => match e.downcast::<String>() {
+                Ok(s) => *s,
+                Err(_) => panic!("check_io panicked without a message"),
+            },
+        };
+        assert!(msg.contains("test.io.plain") && msg.contains("test.io.site"));
+    }
+
+    #[test]
+    fn io_section_accepts_io_ok_lock() {
+        let m = Mutex::named_io(0u32, "test.io.sender");
+        let _g = m.lock();
+        check_io("test.io.site2"); // must not panic
+    }
+
+    #[test]
+    fn condvar_wait_releases_class_for_its_duration() {
+        use std::sync::Arc;
+        let pair = Arc::new((Mutex::named(false, "test.cvheld.m"), Condvar::new()));
+        let p2 = Arc::clone(&pair);
+        let h = std::thread::spawn(move || {
+            let (m, cv) = &*p2;
+            *m.lock() = true;
+            cv.notify_all();
+        });
+        let (m, cv) = &*pair;
+        let mut g = m.lock();
+        while !*g {
+            let (back, _) = cv.wait_timeout(g, Duration::from_millis(50));
+            g = back;
+            // while waiting, the class must NOT appear held; after
+            // reacquisition it must appear exactly once
+            HELD.with(|held| {
+                assert_eq!(
+                    held.borrow().iter().filter(|&&c| c == back_class(m)).count(),
+                    1,
+                    "class held count wrong after condvar reacquire"
+                );
+            });
+        }
+        drop(g);
+        HELD.with(|held| assert!(held.borrow().is_empty()));
+        h.join().expect("signaller panicked");
+    }
+
+    fn back_class<T>(m: &Mutex<T>) -> ClassId {
+        m.class
+    }
+}

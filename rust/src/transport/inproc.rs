@@ -8,7 +8,6 @@
 //! codec-encoded payload frames, so the bill is identical to the TCP
 //! backend's by construction.
 
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
@@ -17,8 +16,9 @@ use anyhow::{anyhow, Context, Result};
 use crate::cluster::worker::worker_main;
 use crate::cluster::{OracleSpec, Request, Response, WirePrecision};
 use crate::data::Shard;
+use crate::sync::{check_io, mpsc};
 
-use super::{Transport, CONTROL_SEQ};
+use super::{ReplyFrame, Transport, CONTROL_SEQ};
 
 /// The `mpsc` transport: worker threads owning their shards, typed
 /// messages, no serialization. Built by
@@ -28,7 +28,7 @@ pub struct InProcTransport {
     senders: Vec<mpsc::Sender<(u64, Request)>>,
     /// The shared reply stream, present until the cluster's router
     /// takes it ([`Transport::take_reply_stream`]).
-    receiver: Option<mpsc::Receiver<(usize, u64, Response)>>,
+    receiver: Option<mpsc::Receiver<ReplyFrame>>,
     handles: Vec<Option<JoinHandle<()>>>,
     down: bool,
 }
@@ -42,7 +42,7 @@ impl InProcTransport {
         oracle: &OracleSpec,
         seed: u64,
     ) -> Result<InProcTransport> {
-        let (resp_tx, resp_rx) = mpsc::channel::<(usize, u64, Response)>();
+        let (resp_tx, resp_rx) = mpsc::channel::<ReplyFrame>();
         let mut senders = Vec::with_capacity(shards.len());
         let mut handles = Vec::with_capacity(shards.len());
         let mut seeder = crate::cluster::worker::worker_seeder(seed);
@@ -68,6 +68,7 @@ impl Transport for InProcTransport {
     }
 
     fn send(&mut self, worker: usize, seq: u64, _prec: WirePrecision, req: &Request) -> Result<()> {
+        check_io("InProcTransport::send");
         // typed enums cross the channel directly; the session has
         // already transcoded the payload through its codec, so the
         // precision needs no further handling here
@@ -78,7 +79,7 @@ impl Transport for InProcTransport {
             .map_err(|_| anyhow!("worker {worker} channel closed"))
     }
 
-    fn take_reply_stream(&mut self) -> mpsc::Receiver<(usize, u64, Response)> {
+    fn take_reply_stream(&mut self) -> mpsc::Receiver<ReplyFrame> {
         self.receiver.take().expect("reply stream already taken")
     }
 

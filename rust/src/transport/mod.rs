@@ -43,12 +43,16 @@ pub use inproc::InProcTransport;
 pub use tcp::{serve_worker, LoopbackWorkers, TcpTransport};
 
 use std::io::{self, Read, Write};
-use std::sync::mpsc;
 use std::time::Duration;
 
 use anyhow::{bail, Result};
 
 use crate::cluster::{Request, Response, WirePrecision};
+use crate::sync::{check_io, mpsc};
+
+/// One routed reply as it travels the shared reply stream:
+/// `(worker id, echoed sequence number, response)`.
+pub type ReplyFrame = (usize, u64, Response);
 
 /// Sequence number used for control messages (`Shutdown`) that are not
 /// part of any exchange; real exchanges start at 1.
@@ -103,7 +107,7 @@ pub trait Transport: Send {
     /// After the stream's senders are all gone (shutdown, every peer
     /// dead), receiving on it reports disconnection — the router maps
     /// that onto [`RecvError::Disconnected`] via [`recv_reply`].
-    fn take_reply_stream(&mut self) -> mpsc::Receiver<(usize, u64, Response)>;
+    fn take_reply_stream(&mut self) -> mpsc::Receiver<ReplyFrame>;
 
     /// Tell every peer to stop and release transport resources
     /// (join worker/reader threads, close sockets). **Idempotent**:
@@ -117,9 +121,12 @@ pub trait Transport: Send {
 /// single recv primitive the cluster's router (and the transport unit
 /// tests) use on every backend.
 pub fn recv_reply(
-    rx: &mpsc::Receiver<(usize, u64, Response)>,
+    rx: &mpsc::Receiver<ReplyFrame>,
     timeout: Duration,
-) -> std::result::Result<(usize, u64, Response), RecvError> {
+) -> std::result::Result<ReplyFrame, RecvError> {
+    // blocking up to the full exchange deadline: the analyze build
+    // verifies nothing but the IO-marked driver locks are held here
+    check_io("transport::recv_reply");
     rx.recv_timeout(timeout).map_err(|e| match e {
         mpsc::RecvTimeoutError::Timeout => RecvError::TimedOut(timeout),
         mpsc::RecvTimeoutError::Disconnected => {

@@ -40,7 +40,6 @@
 
 use std::io;
 use std::net::{Shutdown as SockShutdown, TcpListener, TcpStream};
-use std::sync::mpsc;
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -54,9 +53,11 @@ use crate::cluster::{
     Request, Response, WireCodec, WirePrecision,
 };
 use crate::data::Shard;
+use crate::sync::{check_io, mpsc};
 
 use super::{
-    read_frame, write_frame, Transport, TransportSpec, CONTROL_SEQ, DEFAULT_IO_TIMEOUT,
+    read_frame, write_frame, ReplyFrame, Transport, TransportSpec, CONTROL_SEQ,
+    DEFAULT_IO_TIMEOUT,
 };
 
 /// Handshake magic ("DSPC") so connecting to something that is not a
@@ -164,19 +165,28 @@ fn decode_init(body: &[u8]) -> Result<Init> {
                 nnz.checked_mul(8)
                     .ok_or_else(|| anyhow!("init frame: csr nnz {nnz} overflows"))?,
             )?;
+            // chunks_exact yields exactly-sized slices, so the array
+            // conversions below cannot fail; copy_from_slice keeps the
+            // decode panic-free without an unwrap
             let mut indptr = Vec::with_capacity(n + 1);
             for b in ip_raw.chunks_exact(8) {
-                let p = usize::try_from(u64::from_le_bytes(b.try_into().unwrap()))
+                let mut w = [0u8; 8];
+                w.copy_from_slice(b);
+                let p = usize::try_from(u64::from_le_bytes(w))
                     .context("csr indptr entry does not fit this platform's usize")?;
                 indptr.push(p);
             }
             let mut indices = Vec::with_capacity(nnz);
             for b in ix_raw.chunks_exact(4) {
-                indices.push(u32::from_le_bytes(b.try_into().unwrap()));
+                let mut w = [0u8; 4];
+                w.copy_from_slice(b);
+                indices.push(u32::from_le_bytes(w));
             }
             let mut values = Vec::with_capacity(nnz);
             for b in val_raw.chunks_exact(8) {
-                values.push(f64::from_le_bytes(b.try_into().unwrap()));
+                let mut w = [0u8; 8];
+                w.copy_from_slice(b);
+                values.push(f64::from_le_bytes(w));
             }
             // try_from_csr re-validates the structural invariants
             // (monotone indptr, ascending in-range column indices), so a
@@ -223,7 +233,7 @@ pub struct TcpTransport {
     peers: Vec<Peer>,
     /// The shared reply stream the per-peer readers feed, present until
     /// the cluster's router takes it ([`Transport::take_reply_stream`]).
-    rx: Option<mpsc::Receiver<(usize, u64, Response)>>,
+    rx: Option<mpsc::Receiver<ReplyFrame>>,
     /// One exchange broadcasts the same `(seq, prec, req)` to every
     /// peer (a sequence number identifies exactly one request — the
     /// invariant the whole straggler protocol rests on), so the encoded
@@ -247,7 +257,7 @@ impl TcpTransport {
         seed: u64,
         io_timeout: Duration,
     ) -> Result<TcpTransport> {
-        let (tx, rx) = mpsc::channel::<(usize, u64, Response)>();
+        let (tx, rx) = mpsc::channel::<ReplyFrame>();
         let mut peers = Vec::with_capacity(addrs.len());
         match Self::connect_all(addrs, shards, oracle, seed, io_timeout, &tx, &mut peers) {
             Ok(()) => Ok(TcpTransport { peers, rx: Some(rx), encoded: None, down: false }),
@@ -269,7 +279,7 @@ impl TcpTransport {
         oracle: &OracleSpec,
         seed: u64,
         io_timeout: Duration,
-        tx: &mpsc::Sender<(usize, u64, Response)>,
+        tx: &mpsc::Sender<ReplyFrame>,
         peers: &mut Vec<Peer>,
     ) -> Result<()> {
         ensure!(
@@ -320,7 +330,7 @@ impl TcpTransport {
 /// clean EOF (normal shutdown) is silent; an undecodable frame is
 /// warned about so a version-mismatched peer is diagnosable instead of
 /// surfacing only as a later generic timeout.
-fn reader_loop(worker: usize, mut stream: TcpStream, tx: mpsc::Sender<(usize, u64, Response)>) {
+fn reader_loop(worker: usize, mut stream: TcpStream, tx: mpsc::Sender<ReplyFrame>) {
     loop {
         let body = match read_frame(&mut stream) {
             Ok(b) => b,
@@ -353,6 +363,7 @@ impl Transport for TcpTransport {
     }
 
     fn send(&mut self, worker: usize, seq: u64, prec: WirePrecision, req: &Request) -> Result<()> {
+        check_io("TcpTransport::send");
         let cached = matches!(&self.encoded, Some((s, p, _)) if *s == seq && *p == prec);
         if !cached {
             self.encoded = Some((seq, prec, encode_request(seq, WireCodec::new(prec), req)));
@@ -361,12 +372,14 @@ impl Transport for TcpTransport {
             .peers
             .get_mut(worker)
             .ok_or_else(|| anyhow!("no such worker {worker}"))?;
-        let (_, _, body) = self.encoded.as_ref().expect("encoded body just ensured");
+        let Some((_, _, body)) = self.encoded.as_ref() else {
+            bail!("worker {worker} at {}: request body missing after encode", peer.addr);
+        };
         write_frame(&mut peer.stream, body)
             .with_context(|| format!("worker {worker} at {} unreachable", peer.addr))
     }
 
-    fn take_reply_stream(&mut self) -> mpsc::Receiver<(usize, u64, Response)> {
+    fn take_reply_stream(&mut self) -> mpsc::Receiver<ReplyFrame> {
         self.rx.take().expect("reply stream already taken")
     }
 

@@ -1,0 +1,30 @@
+//! The repo-invariant lint gate, as an integration test: the committed
+//! tree must produce zero findings from `dspca lint`. This is the same
+//! scan the CI `lint` job runs via the CLI — having it in `cargo test`
+//! means a violation fails the ordinary test suite too, not just a
+//! separate CI job someone might not run locally.
+//!
+//! The rules (see `src/analysis/lint.rs` for the full statement):
+//! 1. `CommStats` fields are mutated only in `cluster/comm.rs` and
+//!    `cluster/session.rs` — the billing surface stays auditable.
+//! 2. No `unwrap()`/`expect(` in non-test `src/` beyond each file's
+//!    explicit budget.
+//! 3. `std::env::set_var` only inside the bench-harness guard.
+//! 4. Every `cmd_*` in `main.rs` validates its flags via
+//!    `ensure_known_flags`.
+//! 5. No raw `std::sync::Mutex`/`Condvar` outside `src/sync/` — all
+//!    locks go through the instrumented shim.
+
+use dspca::analysis::lint;
+
+#[test]
+fn the_committed_tree_passes_the_repo_invariant_lint() {
+    let root = lint::default_root();
+    let findings = lint::run(&root).expect("lint scan must not error");
+    assert!(
+        findings.is_empty(),
+        "repo-invariant lint found {} violation(s):\n{}",
+        findings.len(),
+        findings.iter().map(|f| format!("  {f}\n")).collect::<String>()
+    );
+}
