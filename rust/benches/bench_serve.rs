@@ -1,12 +1,13 @@
 //! E11 bench — the multi-tenant session layer: session-creation
 //! overhead, collective latency through the session view, serve-batch
-//! throughput at 1 vs N tenants, and the E11 sweep at reduced size.
+//! throughput at 1 vs N tenants (with per-QoS-class latency and a
+//! round-fusion batch), and the E11 sweep at reduced size.
 
 use dspca::bench_harness::{fast_mode, scaled, Bencher};
 use dspca::cluster::{Cluster, OracleSpec};
 use dspca::data::CovModel;
 use dspca::experiments::serve::{job_mix, run, ServeConfig};
-use dspca::serve::serve;
+use dspca::serve::{serve, QosClass};
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::new();
@@ -42,7 +43,37 @@ fn main() -> anyhow::Result<()> {
             vec![report.wall.as_secs_f64() / jobs_n as f64],
             report.bills_sum.bytes / jobs_n as u64,
         );
+        if tenants == 4 {
+            // per-QoS-class latency samples at the concurrent point:
+            // the weighted-fair scheduler's class separation, tracked
+            // as a JSON trajectory (job_mix rotates classes i % 3, so
+            // every class has jobs from 4 up)
+            for q in QosClass::ALL {
+                let lat: Vec<f64> = report
+                    .jobs
+                    .iter()
+                    .filter(|j| j.qos == q)
+                    .map(|j| j.latency.as_secs_f64())
+                    .collect();
+                if !lat.is_empty() {
+                    b.record(&format!("serve/tenants=4/qos={}", q.label()), lat);
+                }
+            }
+        }
     }
+
+    // the same batch with round fusion on: compatible tenant rounds
+    // coalesce into stacked carriers (bills unchanged by construction —
+    // the serve scheduler re-verifies Σ bills == aggregate), and the
+    // engagement counters ride out in the JSON params
+    cluster.enable_fusion(std::time::Duration::from_millis(2), 8)?;
+    let fused = serve(&cluster, job_mix(jobs_n), 4)?;
+    b.record_with_bytes(
+        &format!("serve/jobs={jobs_n}/tenants=4/fused"),
+        vec![fused.wall.as_secs_f64() / jobs_n as f64],
+        fused.bills_sum.bytes / jobs_n as u64,
+    );
+    let (fused_carriers, fused_members) = cluster.fusion_counters();
 
     // the E11 sweep itself, reduced — overlap measured via the
     // speedup_vs_1 column, not gated (CI smoke hosts vary)
@@ -62,7 +93,14 @@ fn main() -> anyhow::Result<()> {
     println!("wrote results/bench_serve.csv");
     b.write_json(
         "serve",
-        &[("d", d as f64), ("m", m as f64), ("n", n as f64), ("jobs", jobs_n as f64)],
+        &[
+            ("d", d as f64),
+            ("m", m as f64),
+            ("n", n as f64),
+            ("jobs", jobs_n as f64),
+            ("fused_carriers", fused_carriers as f64),
+            ("fused_members", fused_members as f64),
+        ],
     )?;
     Ok(())
 }

@@ -34,6 +34,18 @@
 //! ledger equal to the sum of all traffic its sessions ever billed. The
 //! `serve` module schedules whole job queues over this substrate.
 //!
+//! **Round fusion (opt-in).** [`Cluster::enable_fusion`] opens a short
+//! fusion window in the matvec/matmat submit path: compatible rounds —
+//! same codec, same live-worker set — submitted by any sessions within
+//! the window coalesce into one stacked `CovMatMat` *carrier* round.
+//! The router splits the carrier's reply columns back into each
+//! member's own slot, so `k` concurrent power-method tenants cost the
+//! workers one block pass instead of `k` vector passes. Fusion changes
+//! wall clock only, never bills: each member session is billed exactly
+//! its solo traffic at its own codec width — outbound when the batch
+//! flushes, inbound per split reply on arrival (`tests/fusion.rs` pins
+//! the equality per codec × backend).
+//!
 //! Every request/response payload passes through the owning session's
 //! [`WireCodec`] (default: lossless f64), and `CommStats.bytes` is the
 //! sum of the **encoded frames' sizes** — billed inside the exchange as
@@ -93,7 +105,7 @@ use anyhow::{bail, Result};
 
 use crate::data::{Distribution, Shard};
 use crate::rng::Pcg64;
-use crate::sync::atomic::AtomicU64;
+use crate::sync::atomic::{AtomicU64, Ordering};
 use crate::sync::{mpsc, Condvar, Mutex};
 use crate::transport::{
     recv_reply, InProcTransport, RecvError, ReplyFrame, TcpTransport, Transport, TransportSpec,
@@ -151,6 +163,77 @@ struct RouterState {
     /// dropped cleanly if that session has been closed. Empty in every
     /// fully-drained (i.e. normal) history.
     inflight: HashMap<u64, Inflight>,
+    /// Carrier-round split tables, keyed by the carrier's sequence
+    /// number: how a fused reply's columns map back onto member rounds.
+    /// Pruned on the same retention horizon as `inflight`.
+    fused: HashMap<u64, FusedRoute>,
+}
+
+/// How to split one fused carrier reply back into its member rounds'
+/// responses. The carrier itself has no slot and no owner — only the
+/// members do, so only the members are ever billed.
+struct FusedRoute {
+    d: usize,
+    /// Total stacked columns the carrier shipped.
+    cols: usize,
+    /// Carrier replies still owed (successful carrier sends).
+    outstanding: usize,
+    members: Vec<FusedSlice>,
+}
+
+/// One member round's column range within a carrier reply.
+struct FusedSlice {
+    seq: u64,
+    col0: usize,
+    k: usize,
+    /// Deliver a `Response::Vector` (matvec member) instead of a
+    /// `Response::Mat` block.
+    vector: bool,
+}
+
+/// Fusion-window configuration ([`Cluster::enable_fusion`]).
+#[derive(Clone, Copy)]
+struct FusionConfig {
+    window: Duration,
+    max_cols: usize,
+}
+
+/// One member of a pending fusion batch: a submitted matvec/matmat
+/// round whose request has not hit the wire yet. Its routing slot is
+/// already open (opened before registration, so a carrier reply can
+/// never race an absent slot).
+pub(super) struct FuseMember {
+    pub(super) seq: u64,
+    pub(super) owner: Weak<SessionCore>,
+    /// Payload, row-major `d x k`, already transcoded at the member's
+    /// codec — exactly the frame a solo submit would ship.
+    pub(super) cols: Vec<f64>,
+    pub(super) k: usize,
+    /// The member's solo broadcast-frame bill, applied at flush time.
+    pub(super) req_bytes: u64,
+    /// The member was a matvec (reply as `Response::Vector`).
+    pub(super) vector: bool,
+}
+
+/// At most one fusion batch accumulates at a time; an incompatible
+/// submit displaces (flushes) the current batch and opens its own.
+struct PendingFuse {
+    codec: WireCodec,
+    workers: Vec<usize>,
+    d: usize,
+    members: Vec<FuseMember>,
+    total_cols: usize,
+    opened: Instant,
+}
+
+/// State behind the `cluster.fuse` lock: the window configuration, the
+/// pending batch, and the member seqs currently being flushed (a
+/// completer must not collect its replies before its outbound bill has
+/// been applied — `flushing` is what it waits out).
+struct FusionState {
+    config: Option<FusionConfig>,
+    pending: Option<PendingFuse>,
+    flushing: Vec<u64>,
 }
 
 /// One in-flight ticket's parking slot: where the router delivers (and
@@ -177,10 +260,11 @@ struct Inflight {
     owner: Weak<SessionCore>,
 }
 
-/// Drop inflight records too old to attribute (see
-/// [`INFLIGHT_RETENTION`]).
-fn prune_inflight(inflight: &mut HashMap<u64, Inflight>, seq: u64) {
-    inflight.retain(|&s, _| s + INFLIGHT_RETENTION > seq);
+/// Drop inflight records — and fused split tables — too old to
+/// attribute (see [`INFLIGHT_RETENTION`]).
+fn prune_inflight(st: &mut RouterState, seq: u64) {
+    st.inflight.retain(|&s, _| s + INFLIGHT_RETENTION > seq);
+    st.fused.retain(|&s, _| s + INFLIGHT_RETENTION > seq);
 }
 
 /// Handle to a running simulated cluster. `Sync`: share it across leader
@@ -212,6 +296,17 @@ pub struct Cluster {
     /// The reply router (see [`Router`]): owns the transport's reply
     /// stream and delivers every response to its ticket's slot.
     router: Router,
+    /// The fusion window ([`Cluster::enable_fusion`]): configuration
+    /// plus the pending batch. Leaf lock — never held while any router
+    /// or transport lock is taken.
+    fusion: Mutex<FusionState>,
+    /// Wakes fusion-window waiters: batch flushed or displaced.
+    fuse_cv: Condvar,
+    /// Carrier rounds sent / member rounds fused into them, for
+    /// observability (bills never change under fusion, so the bill
+    /// cannot tell you whether fusion engaged — these counters can).
+    fused_carriers: AtomicU64,
+    fused_members: AtomicU64,
     /// Max wall time to wait for any single worker response.
     timeout: Duration,
 }
@@ -315,12 +410,23 @@ impl Cluster {
             sender: Mutex::named_io(transport, "cluster.sender"),
             router: Router {
                 state: Mutex::named(
-                    RouterState { open: HashMap::new(), inflight: HashMap::new() },
+                    RouterState {
+                        open: HashMap::new(),
+                        inflight: HashMap::new(),
+                        fused: HashMap::new(),
+                    },
                     "router.state",
                 ),
                 cv: Condvar::new(),
                 rx: Mutex::named_io(reply_stream, "router.rx"),
             },
+            fusion: Mutex::named(
+                FusionState { config: None, pending: None, flushing: Vec::new() },
+                "cluster.fuse",
+            ),
+            fuse_cv: Condvar::new(),
+            fused_carriers: AtomicU64::new(0),
+            fused_members: AtomicU64::new(0),
             timeout: EXCHANGE_TIMEOUT,
         })
     }
@@ -328,6 +434,14 @@ impl Cluster {
     /// Which transport backend this cluster runs on ("inproc" / "tcp").
     pub fn transport_name(&self) -> &'static str {
         self.sender.lock().name()
+    }
+
+    /// Leader-side reply-plumbing threads the transport runs
+    /// ([`Transport::reader_threads`](crate::transport::Transport::reader_threads)):
+    /// the TCP reactor reports 1 at any peer count — the E12
+    /// constant-thread-budget gate reads this.
+    pub fn reader_threads(&self) -> usize {
+        self.sender.lock().reader_threads()
     }
 
     /// Open a new tenant session: its own bill, its own codec, the full
@@ -414,8 +528,77 @@ impl Cluster {
     /// issuer at the width its round shipped under, or drop unbilled if
     /// that session closed), or — unknown seq, record aged out — the
     /// floor. Always notifies parked completers.
-    fn route_reply(&self, id: usize, rseq: u64, mut resp: Response) {
+    fn route_reply(&self, id: usize, rseq: u64, resp: Response) {
         let mut st = self.router.state.lock();
+        if st.fused.contains_key(&rseq) {
+            self.route_carrier_locked(&mut st, id, rseq, resp);
+        } else {
+            self.deliver_locked(&mut st, id, rseq, resp);
+        }
+        drop(st);
+        self.router.cv.notify_all();
+    }
+
+    /// Split one carrier reply into its member responses and deliver
+    /// each through the ordinary per-seq path — so billing, straggling,
+    /// aging and orphan handling are *identical* to unfused rounds by
+    /// construction. A worker error (or a malformed carrier shape) is
+    /// delivered to every member. Caller holds the router state lock.
+    fn route_carrier_locked(&self, st: &mut RouterState, id: usize, rseq: u64, resp: Response) {
+        let (parts, emptied) = {
+            let Some(route) = st.fused.get_mut(&rseq) else { return };
+            route.outstanding = route.outstanding.saturating_sub(1);
+            let parts: Vec<(u64, Response)> = match &resp {
+                Response::Mat { rows, cols, data }
+                    if *rows == route.d && *cols == route.cols =>
+                {
+                    route
+                        .members
+                        .iter()
+                        .map(|m| {
+                            let mut block = Vec::with_capacity(route.d * m.k);
+                            for r in 0..route.d {
+                                let at = r * route.cols + m.col0;
+                                block.extend_from_slice(&data[at..at + m.k]);
+                            }
+                            let part = if m.vector {
+                                Response::Vector(block)
+                            } else {
+                                Response::Mat { rows: route.d, cols: m.k, data: block }
+                            };
+                            (m.seq, part)
+                        })
+                        .collect()
+                }
+                Response::Err(e) => route
+                    .members
+                    .iter()
+                    .map(|m| (m.seq, Response::Err(e.clone())))
+                    .collect(),
+                _ => {
+                    let msg = "fused carrier returned a malformed reply".to_string();
+                    route
+                        .members
+                        .iter()
+                        .map(|m| (m.seq, Response::Err(msg.clone())))
+                        .collect()
+                }
+            };
+            (parts, route.outstanding == 0)
+        };
+        if emptied {
+            st.fused.remove(&rseq);
+        }
+        for (mseq, part) in parts {
+            self.deliver_locked(st, id, mseq, part);
+        }
+    }
+
+    /// Deliver one (possibly split-off) reply to wherever its sequence
+    /// number points — an open slot, a straggler record, or the floor.
+    /// Caller holds the router state lock and notifies the router
+    /// condvar afterwards.
+    fn deliver_locked(&self, st: &mut RouterState, id: usize, rseq: u64, mut resp: Response) {
         if let Some(slot) = st.open.get_mut(&rseq) {
             let resp_bytes = resp.payload_mut().map_or(0, |p| slot.codec.transcode(p)) as u64;
             if let Some(owner) = slot.owner.upgrade() {
@@ -447,8 +630,6 @@ impl Cluster {
                 }
             }
         }
-        drop(st);
-        self.router.cv.notify_all();
     }
 
     /// Move an open slot to the straggler table (timeout, send failure,
@@ -459,7 +640,7 @@ impl Cluster {
         if let Some(slot) = st.open.remove(&seq) {
             let outstanding = slot.expected - slot.replies.len();
             if outstanding > 0 {
-                prune_inflight(&mut st.inflight, seq);
+                prune_inflight(st, seq);
                 st.inflight
                     .insert(seq, Inflight { codec: slot.codec, outstanding, owner: slot.owner });
             }
@@ -473,6 +654,249 @@ impl Cluster {
         Self::retire_slot_locked(&mut st, seq);
         drop(st);
         self.router.cv.notify_all();
+    }
+
+    // -----------------------------------------------------------------
+    // Round fusion (see the module doc and DESIGN.md §2). The session
+    // layer registers member rounds; these methods batch, flush, and
+    // split them. All state lives behind the leaf `cluster.fuse` lock,
+    // never held while a router or transport lock is taken.
+    // -----------------------------------------------------------------
+
+    /// Enable cross-tenant round fusion: compatible matvec/matmat
+    /// rounds — same codec, same live-worker set — submitted within
+    /// `window` of each other coalesce into one stacked `CovMatMat`
+    /// carrier of at most `max_cols` columns. Wall clock changes; bills
+    /// do **not**: every member session is billed exactly what its
+    /// round costs solo, at its own codec width. Off by default; cannot
+    /// be disabled once enabled (calling again adjusts the knobs).
+    ///
+    /// Latency note: a fused round reaches the wire when the batch
+    /// fills, when an incompatible round displaces it, or when a member
+    /// completes/drops its ticket and waits out the remainder of the
+    /// window — so a *lone* session completing immediately after submit
+    /// pays up to `window` extra latency per round. Size the window for
+    /// the concurrency you expect (hundreds of microseconds to a few
+    /// milliseconds).
+    pub fn enable_fusion(&self, window: Duration, max_cols: usize) -> Result<()> {
+        if max_cols == 0 {
+            bail!("fusion max_cols must be >= 1");
+        }
+        self.fusion.lock().config = Some(FusionConfig { window, max_cols });
+        Ok(())
+    }
+
+    /// Whether a fusion window is currently configured.
+    pub(super) fn fusion_enabled(&self) -> bool {
+        self.fusion.lock().config.is_some()
+    }
+
+    /// (carrier rounds sent, member rounds fused into them). Bills are
+    /// fusion-invariant by design, so they cannot tell you whether
+    /// fusion engaged — these counters can (the E11 driver and the
+    /// regression tests use them).
+    pub fn fusion_counters(&self) -> (u64, u64) {
+        (self.fused_carriers.load(Ordering::Relaxed), self.fused_members.load(Ordering::Relaxed))
+    }
+
+    /// Register a member round with the pending batch: join a
+    /// compatible batch (flushing it once full), displace an
+    /// incompatible one, or open a fresh batch. The member's routing
+    /// slot is already open. Called by `Session` right after slot
+    /// creation; holds only the fuse lock, then flushes outside it.
+    pub(super) fn enqueue_fused(&self, codec: WireCodec, workers: &[usize], member: FuseMember) {
+        let d = self.d;
+        let k = member.k;
+        let mut flush_now: Vec<PendingFuse> = Vec::new();
+        {
+            let mut fu = self.fusion.lock();
+            let cfg = fu
+                .config
+                .unwrap_or(FusionConfig { window: Duration::from_micros(0), max_cols: 1 });
+            let mut leftover = Some(member);
+            let mut take_current = false;
+            match &mut fu.pending {
+                Some(p)
+                    if p.codec == codec
+                        && p.workers.as_slice() == workers
+                        && p.d == d
+                        && p.total_cols + k <= cfg.max_cols =>
+                {
+                    if let Some(m) = leftover.take() {
+                        p.total_cols += m.k;
+                        p.members.push(m);
+                    }
+                    take_current = p.total_cols >= cfg.max_cols;
+                }
+                Some(_) => take_current = true,
+                None => {}
+            }
+            if take_current {
+                if let Some(batch) = fu.pending.take() {
+                    fu.flushing.extend(batch.members.iter().map(|m| m.seq));
+                    flush_now.push(batch);
+                }
+            }
+            if let Some(m) = leftover {
+                let batch = PendingFuse {
+                    codec,
+                    workers: workers.to_vec(),
+                    d,
+                    total_cols: m.k,
+                    members: vec![m],
+                    opened: Instant::now(),
+                };
+                if batch.total_cols >= cfg.max_cols {
+                    fu.flushing.extend(batch.members.iter().map(|m| m.seq));
+                    flush_now.push(batch);
+                } else {
+                    fu.pending = Some(batch);
+                }
+            }
+        }
+        for batch in flush_now {
+            self.flush_batch(batch);
+        }
+    }
+
+    /// Get ticket `seq`'s round onto the wire if it is still pending in
+    /// the fusion window, and — for completers (`wait`) — block until
+    /// its outbound bill has been applied, so `complete()` can never
+    /// observe a round whose submit half is unbilled. No-op for
+    /// non-fused tickets; cheap when fusion is disabled.
+    pub(crate) fn ensure_flushed(&self, seq: u64, wait: bool) {
+        let mut fu = self.fusion.lock();
+        loop {
+            let pending_deadline = match (&fu.config, &fu.pending) {
+                (Some(cfg), Some(p)) if p.members.iter().any(|m| m.seq == seq) => {
+                    Some(p.opened + cfg.window)
+                }
+                _ => None,
+            };
+            if let Some(deadline) = pending_deadline {
+                let now = Instant::now();
+                if !wait || now >= deadline {
+                    if let Some(batch) = fu.pending.take() {
+                        fu.flushing.extend(batch.members.iter().map(|m| m.seq));
+                        drop(fu);
+                        self.flush_batch(batch);
+                        fu = self.fusion.lock();
+                    }
+                    continue;
+                }
+                // park for the window remainder: a joiner may still
+                // fill the batch (its flush notifies us early)
+                let (guard, _) = self.fuse_cv.wait_timeout(fu, deadline - now);
+                fu = guard;
+                continue;
+            }
+            if wait && fu.flushing.contains(&seq) {
+                let (guard, _) = self.fuse_cv.wait_timeout(fu, Duration::from_millis(10));
+                fu = guard;
+                continue;
+            }
+            return;
+        }
+    }
+
+    /// Put one fusion batch on the wire. A single-member batch ships
+    /// the member's own request under its own sequence number —
+    /// wire-identical to an unfused submit, no carrier. A multi-member
+    /// batch interleaves the member columns into one row-major
+    /// `d x K` carrier `CovMatMat`, registers the column split with the
+    /// router *before* sending, then sends once per worker. Each member
+    /// is billed its solo outbound (the billing body lives in
+    /// `cluster/session.rs`); a partial send failure synthesizes a
+    /// worker error into every member's slot for each unreached worker
+    /// (unbilled — no bytes moved), so completers fail fast exactly
+    /// like a solo submit error, while replies from reached workers
+    /// still bill on arrival.
+    fn flush_batch(&self, batch: PendingFuse) {
+        let PendingFuse { codec, workers, d, members, total_cols, .. } = batch;
+        let seqs: Vec<u64> = members.iter().map(|m| m.seq).collect();
+        let (send_seq, req) = if members.len() == 1 {
+            let m = &members[0];
+            let req = if m.vector {
+                Request::CovMatVec(m.cols.clone())
+            } else {
+                Request::CovMatMat { rows: d, cols: m.k, data: m.cols.clone() }
+            };
+            (m.seq, req)
+        } else {
+            let mut data = Vec::with_capacity(d * total_cols);
+            for r in 0..d {
+                for m in &members {
+                    data.extend_from_slice(&m.cols[r * m.k..(r + 1) * m.k]);
+                }
+            }
+            let carrier_seq = self.seq.fetch_add(1, Ordering::Relaxed) + 1;
+            let mut col0 = 0;
+            let slices: Vec<FusedSlice> = members
+                .iter()
+                .map(|m| {
+                    let s = FusedSlice { seq: m.seq, col0, k: m.k, vector: m.vector };
+                    col0 += m.k;
+                    s
+                })
+                .collect();
+            {
+                let mut st = self.router.state.lock();
+                prune_inflight(&mut st, carrier_seq);
+                st.fused.insert(
+                    carrier_seq,
+                    FusedRoute { d, cols: total_cols, outstanding: workers.len(), members: slices },
+                );
+            }
+            self.fused_carriers.fetch_add(1, Ordering::Relaxed);
+            self.fused_members.fetch_add(members.len() as u64, Ordering::Relaxed);
+            (carrier_seq, Request::CovMatMat { rows: d, cols: total_cols, data })
+        };
+        let mut sent = 0usize;
+        {
+            let mut sender = self.sender.lock();
+            for &w in &workers {
+                if sender.send(w, send_seq, codec.precision(), &req).is_err() {
+                    break;
+                }
+                sent += 1;
+            }
+        }
+        for m in &members {
+            if let Some(owner) = m.owner.upgrade() {
+                owner.bill_fused_submit(&self.aggregate, sent as u64, m.req_bytes);
+            }
+        }
+        if sent < workers.len() {
+            // the unreached tail owes no replies
+            let mut st = self.router.state.lock();
+            if members.len() > 1 {
+                let missing = workers.len() - sent;
+                let mut emptied = false;
+                if let Some(route) = st.fused.get_mut(&send_seq) {
+                    route.outstanding = route.outstanding.saturating_sub(missing);
+                    emptied = route.outstanding == 0;
+                }
+                if emptied {
+                    st.fused.remove(&send_seq);
+                }
+            }
+            for &w in &workers[sent..] {
+                for m in &members {
+                    if let Some(slot) = st.open.get_mut(&m.seq) {
+                        slot.replies.push((
+                            w,
+                            Response::Err(format!("fused send to worker {w} failed")),
+                        ));
+                    }
+                }
+            }
+            drop(st);
+            self.router.cv.notify_all();
+        }
+        let mut fu = self.fusion.lock();
+        fu.flushing.retain(|s| !seqs.contains(s));
+        drop(fu);
+        self.fuse_cv.notify_all();
     }
 
     /// Block until ticket `seq`'s slot holds every owed reply, driving
@@ -1441,6 +1865,213 @@ mod tests {
         assert!(c.router.state.lock().inflight.is_empty());
         drop(issuer);
         drop(drainer);
+        drop(c);
+        workers.join().unwrap();
+    }
+
+    // -----------------------------------------------------------------
+    // Round fusion (ISSUE 8 tentpole): batching, carrier splitting,
+    // solo-identical billing. tests/fusion.rs drives the same contract
+    // across codec × backend × tenant-thread count.
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn fused_matvec_results_and_bills_match_solo() {
+        let (c, _) = small_cluster(3, 40);
+        let va: Vec<f64> = (0..8).map(|i| (i as f64 * 0.37).sin()).collect();
+        let vb: Vec<f64> = (0..8).map(|i| (i as f64 * 0.11).cos()).collect();
+        let (ra, solo_a) = {
+            let s = c.session();
+            let r = s.dist_matvec(&va).unwrap();
+            (r, s.close())
+        };
+        let (rb, solo_b) = {
+            let s = c.session();
+            let r = s.dist_matvec(&vb).unwrap();
+            (r, s.close())
+        };
+        c.enable_fusion(Duration::from_millis(50), 2).unwrap();
+        let agg0 = c.aggregate_stats();
+        let a = c.session();
+        let b = c.session();
+        let ta = a.dist_matvec_submit(&va).unwrap();
+        let tb = b.dist_matvec_submit(&vb).unwrap(); // fills the 2-col batch: flush
+        let fa = ta.complete().unwrap();
+        let fb = tb.complete().unwrap();
+        for i in 0..8 {
+            assert!((fa[i] - ra[i]).abs() < 1e-12, "member A row {i}");
+            assert!((fb[i] - rb[i]).abs() < 1e-12, "member B row {i}");
+        }
+        let (ba, bb) = (a.close(), b.close());
+        assert_eq!(ba, solo_a, "fused bill != solo bill (A)");
+        assert_eq!(bb, solo_b, "fused bill != solo bill (B)");
+        let mut sum = ba;
+        sum.merge(&bb);
+        assert_eq!(c.aggregate_stats().delta_since(&agg0), sum);
+        assert_eq!(c.fusion_counters(), (1, 2), "one carrier, two members");
+        assert!(c.router.state.lock().fused.is_empty(), "split table cleaned up");
+    }
+
+    #[test]
+    fn fused_mixed_matvec_and_matmat_split_correctly() {
+        let (c, _) = small_cluster(3, 30);
+        let x: Vec<f64> = (0..8).map(|i| 1.0 / (i as f64 + 2.0)).collect();
+        let v = Matrix::from_vec(8, 2, (0..16).map(|i| (i as f64 * 0.21).sin()).collect());
+        let (rx, solo_x) = {
+            let s = c.session();
+            let r = s.dist_matvec(&x).unwrap();
+            (r, s.close())
+        };
+        let (rv, solo_v) = {
+            let s = c.session();
+            let r = s.dist_matmat(&v).unwrap();
+            (r, s.close())
+        };
+        c.enable_fusion(Duration::from_millis(50), 3).unwrap();
+        let a = c.session();
+        let b = c.session();
+        let ta = a.dist_matvec_submit(&x).unwrap();
+        let tb = b.dist_matmat_submit(&v).unwrap(); // 1 + 2 cols fills the batch
+        let fa = ta.complete().unwrap();
+        let fv = tb.complete().unwrap();
+        for i in 0..8 {
+            assert!((fa[i] - rx[i]).abs() < 1e-12, "matvec member row {i}");
+            for j in 0..2 {
+                assert!((fv.get(i, j) - rv.get(i, j)).abs() < 1e-12, "matmat member {i},{j}");
+            }
+        }
+        assert_eq!(a.close(), solo_x, "matvec member bill != solo");
+        assert_eq!(b.close(), solo_v, "matmat member bill != solo");
+        assert_eq!(c.fusion_counters(), (1, 2));
+    }
+
+    #[test]
+    fn mixed_codec_rounds_never_fuse() {
+        let (c, _) = small_cluster(2, 20);
+        c.enable_fusion(Duration::from_millis(5), 8).unwrap();
+        let a = c.session();
+        let b = c.session();
+        b.set_codec(WireCodec::new(WirePrecision::Bf16));
+        let v = vec![0.4; 8];
+        let ta = a.dist_matvec_submit(&v).unwrap();
+        // incompatible codec: B's submit displaces A's batch (flushed
+        // unfused, no carrier) and opens its own
+        let tb = b.dist_matvec_submit(&v).unwrap();
+        ta.complete().unwrap();
+        tb.complete().unwrap();
+        assert_eq!(c.fusion_counters(), (0, 0), "mixed codecs must not share a carrier");
+        assert_eq!(a.stats().bytes, 8 * 8 * 3, "lossless bill at 8B/entry");
+        assert_eq!(b.stats().bytes, 2 * 8 * 3, "bf16 bill at 2B/entry");
+    }
+
+    #[test]
+    fn fused_round_with_dead_worker_degrades_like_unfused() {
+        let (c, _) = small_cluster(4, 25);
+        c.kill_worker(3).unwrap();
+        let v = vec![0.7; 8];
+        let solo = {
+            let s = c.session();
+            s.dist_matvec(&v).unwrap();
+            s.close()
+        };
+        assert_eq!(solo.requests_sent, 3, "dead worker excluded from the solo round");
+        c.enable_fusion(Duration::from_millis(50), 2).unwrap();
+        let a = c.session();
+        let b = c.session();
+        let ta = a.dist_matvec_submit(&v).unwrap();
+        let tb = b.dist_matvec_submit(&v).unwrap();
+        let ra = ta.complete().unwrap();
+        let rb = tb.complete().unwrap();
+        assert_eq!(ra, rb, "identical inputs, identical split columns");
+        assert_eq!(a.close(), solo, "fused member bill != unfused bill with a dead worker");
+        assert_eq!(b.close(), solo);
+        assert_eq!(c.fusion_counters(), (1, 2));
+    }
+
+    #[test]
+    fn one_sessions_pipelined_rounds_fuse_and_bill_like_serial() {
+        let (c, _) = small_cluster(3, 20);
+        let v = vec![1.0; 8];
+        let serial = {
+            let s = c.session();
+            for _ in 0..3 {
+                s.dist_matvec(&v).unwrap();
+            }
+            s.close()
+        };
+        c.enable_fusion(Duration::from_millis(50), 3).unwrap();
+        let s = c.session();
+        let t1 = s.dist_matvec_submit(&v).unwrap();
+        let t2 = s.dist_matvec_submit(&v).unwrap();
+        let t3 = s.dist_matvec_submit(&v).unwrap(); // fills the batch
+        let r3 = t3.complete().unwrap();
+        let r1 = t1.complete().unwrap();
+        let r2 = t2.complete().unwrap();
+        assert_eq!(r1, r2);
+        assert_eq!(r2, r3);
+        assert_eq!(s.close(), serial, "fused pipelined bill != serial bill");
+        assert_eq!(c.fusion_counters(), (1, 3));
+    }
+
+    #[test]
+    fn lone_fused_round_flushes_at_the_window_deadline() {
+        let (c, _) = small_cluster(2, 15);
+        c.enable_fusion(Duration::from_millis(5), 8).unwrap();
+        let s = c.session();
+        let v = vec![0.9; 8];
+        let t = s.dist_matvec_submit(&v).unwrap();
+        // waits out the 5ms window, flushes unfused, collects
+        let out = t.complete().unwrap();
+        assert_eq!(out.len(), 8);
+        assert_eq!(s.stats().rounds, 1);
+        assert_eq!(c.fusion_counters(), (0, 0), "a lone member ships unfused");
+    }
+
+    #[test]
+    fn dropping_a_pending_fused_ticket_flushes_and_bills_its_round() {
+        let (c, _) = small_cluster(2, 15);
+        c.enable_fusion(Duration::from_millis(200), 8).unwrap();
+        let s = c.session();
+        let v = vec![1.0; 8];
+        {
+            let _abandoned = s.dist_matvec_submit(&v).unwrap();
+            // dropped while still pending in the fusion window
+        }
+        let s2 = c.session();
+        s2.dist_matvec(&v).unwrap();
+        drain_router(&c);
+        let st = s.stats();
+        assert_eq!(st.rounds, 1, "the abandoned fused round was still billed");
+        assert_eq!(st.requests_sent, 2);
+        assert_eq!(st.responses_received, 2, "its replies bill to the issuer");
+        assert_eq!(c.fusion_counters(), (0, 0), "single-member flush ships unfused");
+        assert!(c.router.state.lock().open.is_empty());
+        assert!(c.router.state.lock().inflight.is_empty());
+    }
+
+    #[test]
+    fn tcp_fused_rounds_bill_and_split_like_inproc() {
+        let (c, workers) = tcp_cluster(3, 25);
+        let v: Vec<f64> = (0..8).map(|i| (i as f64 * 0.53).sin()).collect();
+        let (solo_out, solo) = {
+            let s = c.session();
+            let r = s.dist_matvec(&v).unwrap();
+            (r, s.close())
+        };
+        c.enable_fusion(Duration::from_millis(50), 2).unwrap();
+        let a = c.session();
+        let b = c.session();
+        let ta = a.dist_matvec_submit(&v).unwrap();
+        let tb = b.dist_matvec_submit(&v).unwrap();
+        let fa = ta.complete().unwrap();
+        let fb = tb.complete().unwrap();
+        for i in 0..8 {
+            assert!((fa[i] - solo_out[i]).abs() < 1e-12, "row {i}");
+        }
+        assert_eq!(fa, fb);
+        assert_eq!(a.close(), solo, "fused bill != solo bill over TCP");
+        assert_eq!(b.close(), solo);
+        assert_eq!(c.fusion_counters(), (1, 2));
         drop(c);
         workers.join().unwrap();
     }

@@ -52,7 +52,7 @@ use crate::sync::Mutex;
 use super::comm::CommStats;
 use super::message::{Request, Response};
 use super::wire::WireCodec;
-use super::{prune_inflight, Cluster, Slot};
+use super::{prune_inflight, Cluster, FuseMember, Slot};
 
 /// The session state shared with the cluster's straggler-routing table:
 /// inflight records hold a `Weak` to this, so a late reply can be billed
@@ -80,6 +80,31 @@ impl SessionCore {
         let mut agg = aggregate.lock();
         agg.responses_received += 1;
         agg.bytes += bytes;
+    }
+
+    /// Bill a member round's outbound traffic at fusion-flush time:
+    /// `sent` request messages plus — if anything moved — one round and
+    /// one broadcast frame of `req_bytes`. This is exactly what the
+    /// same round bills in [`Session::submit`] (where the increments
+    /// happen per send; the net effect is identical, including the
+    /// partial-send-failure case where only the reached workers'
+    /// messages are billed). Called by the cluster's fusion flusher
+    /// with no router locks held; like [`Session::bill`], the two
+    /// ledgers are locked one after the other, never nested.
+    pub(super) fn bill_fused_submit(&self, aggregate: &Mutex<CommStats>, sent: u64, req_bytes: u64) {
+        if sent == 0 {
+            return;
+        }
+        {
+            let mut st = self.stats.lock();
+            st.requests_sent += sent;
+            st.rounds += 1;
+            st.bytes += req_bytes;
+        }
+        let mut agg = aggregate.lock();
+        agg.requests_sent += sent;
+        agg.rounds += 1;
+        agg.bytes += req_bytes;
     }
 }
 
@@ -253,7 +278,7 @@ impl<'c> Session<'c> {
         // be routed by a concurrent driver the instant the send lands
         {
             let mut st = self.cluster.router.state.lock();
-            prune_inflight(&mut st.inflight, seq);
+            prune_inflight(&mut st, seq);
             st.open.insert(
                 seq,
                 Slot {
@@ -317,6 +342,69 @@ impl<'c> Session<'c> {
         self.submit(workers, req)?.complete()
     }
 
+    /// Fusable submit for matvec/matmat rounds (`data` row-major
+    /// `d x k`; `vector` marks a matvec, whose reply comes back as a
+    /// `Response::Vector`). With no fusion window configured this is a
+    /// plain [`Session::submit`]. With one, the payload is transcoded
+    /// once at this session's codec (exactly the frame a solo submit
+    /// ships), the routing slot is opened *before* the member joins the
+    /// pending batch — so a carrier reply can never race an absent
+    /// slot — and the wire round happens at flush time. The returned
+    /// ticket behaves exactly like an unfused one, and the bill is
+    /// solo-identical by construction: outbound applied per member at
+    /// flush ([`SessionCore::bill_fused_submit`]), inbound per split
+    /// reply on arrival at this session's codec width.
+    fn submit_fusable(
+        &self,
+        workers: &[usize],
+        k: usize,
+        data: Vec<f64>,
+        vector: bool,
+    ) -> Result<Ticket<'_, 'c>> {
+        let d = self.d();
+        if !self.cluster.fusion_enabled() {
+            let req = if vector {
+                Request::CovMatVec(data)
+            } else {
+                Request::CovMatMat { rows: d, cols: k, data }
+            };
+            return self.submit(workers, &req);
+        }
+        // `workers` is always the alive set here (distinct, in range),
+        // so the duplicate/range validation in `submit` is not repeated
+        let codec = self.codec();
+        let mut data = data;
+        let req_bytes = codec.transcode(&mut data) as u64;
+        let seq = self.cluster.seq.fetch_add(1, Ordering::Relaxed) + 1;
+        {
+            let mut st = self.cluster.router.state.lock();
+            prune_inflight(&mut st, seq);
+            st.open.insert(
+                seq,
+                Slot {
+                    codec,
+                    owner: Arc::downgrade(&self.core),
+                    expected: workers.len(),
+                    replies: Vec::with_capacity(workers.len()),
+                    deadline: Instant::now() + self.cluster.timeout,
+                },
+            );
+        }
+        self.cluster.enqueue_fused(
+            codec,
+            workers,
+            FuseMember {
+                seq,
+                owner: Arc::downgrade(&self.core),
+                cols: data,
+                k,
+                req_bytes,
+                vector,
+            },
+        );
+        Ok(Ticket { session: self, seq, workers: workers.to_vec(), done: false })
+    }
+
     /// Distributed covariance matvec: `Xhat v = (1/m) sum_i Xhat_i v`.
     /// One communication round; the core primitive of the power method,
     /// Lanczos and the Shift-and-Invert solver (Algorithm 2, lines 2–6).
@@ -336,7 +424,7 @@ impl<'c> Session<'c> {
         if workers.is_empty() {
             bail!("no live workers");
         }
-        let inner = self.submit(&workers, &Request::CovMatVec(v.to_vec()))?;
+        let inner = self.submit_fusable(&workers, 1, v.to_vec(), true)?;
         Ok(MatvecTicket { inner, d })
     }
 
@@ -367,8 +455,7 @@ impl<'c> Session<'c> {
         if workers.is_empty() {
             bail!("no live workers");
         }
-        let req = Request::CovMatMat { rows: d, cols: k, data: v.data().to_vec() };
-        let inner = self.submit(&workers, &req)?;
+        let inner = self.submit_fusable(&workers, k, v.data().to_vec(), false)?;
         Ok(MatmatTicket { inner, d, k })
     }
 
@@ -505,6 +592,10 @@ impl Ticket<'_, '_> {
         self.done = true;
         let workers = std::mem::take(&mut self.workers);
         let session = self.session;
+        // a fused round may still be waiting in the fusion window: get
+        // it onto the wire (waiting out the window remainder for more
+        // members) and make sure its outbound bill has been applied
+        session.cluster.ensure_flushed(self.seq, true);
         let replies = session.cluster.await_ticket(self.seq)?;
         let mut by_worker: Vec<Option<Response>> = (0..session.m()).map(|_| None).collect();
         let mut first_err: Option<(usize, String)> = None;
@@ -527,6 +618,10 @@ impl Ticket<'_, '_> {
 impl Drop for Ticket<'_, '_> {
     fn drop(&mut self) {
         if !self.done {
+            // an abandoned fused round still owes its wire traffic —
+            // flush immediately (no window wait in a destructor) so the
+            // submit half is billed exactly like a solo abandoned round
+            self.session.cluster.ensure_flushed(self.seq, false);
             self.session.cluster.retire_ticket(self.seq);
         }
     }

@@ -10,17 +10,33 @@
 //! move with concurrency (each session's bill is its solo bill; the
 //! scheduler verifies Σ job bills == cluster aggregate on every call).
 
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
 use anyhow::Result;
 
-use crate::cluster::{Cluster, OracleSpec, WirePrecision};
+use crate::cluster::{Cluster, CommStats, OracleSpec, WirePrecision};
 use crate::coordinator::{
     DistributedLanczos, DistributedPower, ProjectionAverage, QuantizedPower, SignFixedAverage,
 };
 use crate::data::{CovModel, Distribution};
-use crate::serve::{serve, Job};
+use crate::linalg::vec_ops::normalize;
+use crate::serve::{serve, Job, QosClass};
 use crate::transport::TransportSpec;
 use crate::util::csv::CsvTable;
 use crate::util::stats::Summary;
+
+/// `Some(ratio)` iff the wall-clock stress gates are armed
+/// (`DSPCA_STRESS=1` — the release-mode CI concurrency job). Loaded
+/// debug CI runners and arbitrary dev laptops measure the ratio but do
+/// not gate on it; bill-equality checks stay unconditional everywhere.
+pub fn stress_gate(ratio: f64) -> Option<f64> {
+    if std::env::var("DSPCA_STRESS").as_deref() == Ok("1") {
+        Some(ratio)
+    } else {
+        None
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -40,7 +56,9 @@ pub struct ServeConfig {
     /// 4-tenant batch wallclock is at most `r ×` the 1-tenant wallclock
     /// (rounds overlapping on the wire is exactly what buys this).
     /// `None` skips the gate (tiny smoke configs, hosts without
-    /// parallelism).
+    /// parallelism). The default arms it only under `DSPCA_STRESS=1`
+    /// ([`stress_gate`]), so loaded CI runners can't flake it; the
+    /// bill-accounting `ensure!`s run unconditionally.
     pub assert_overlap: Option<f64>,
 }
 
@@ -55,7 +73,7 @@ impl Default for ServeConfig {
             seed: 0x5e7e,
             oracle: OracleSpec::Native,
             transport: TransportSpec::InProc,
-            assert_overlap: Some(0.7),
+            assert_overlap: stress_gate(0.7),
         }
     }
 }
@@ -63,32 +81,45 @@ impl Default for ServeConfig {
 /// The heterogeneous job mix: iterative lossless, iterative lossy
 /// (bf16 and f32 wire codecs — exercising per-session codecs under
 /// concurrency), and one-round estimators, cycled to `jobs` entries.
+/// QoS classes rotate `i % 3` (standard / interactive / batch) —
+/// independent of the algorithm rotation so every class appears from 3
+/// jobs up, making the per-class latency columns of [`run`] total.
 pub fn job_mix(jobs: usize) -> Vec<Job> {
     (0..jobs)
-        .map(|i| match i % 6 {
-            0 => Job::new(format!("power-{i}"), Box::new(DistributedPower::default())),
-            1 => Job::new(
-                format!("quantized-bf16-{i}"),
-                Box::new(QuantizedPower::new(WirePrecision::Bf16)),
-            ),
-            2 => Job::new(format!("sign-fixed-{i}"), Box::new(SignFixedAverage)),
-            3 => Job::new(
-                format!("quantized-f32-{i}"),
-                Box::new(QuantizedPower::new(WirePrecision::F32)),
-            ),
-            4 => Job::new(format!("projection-{i}"), Box::new(ProjectionAverage)),
-            _ => Job::new(format!("lanczos-{i}"), Box::new(DistributedLanczos::default())),
+        .map(|i| {
+            let job = match i % 6 {
+                0 => Job::new(format!("power-{i}"), Box::new(DistributedPower::default())),
+                1 => Job::new(
+                    format!("quantized-bf16-{i}"),
+                    Box::new(QuantizedPower::new(WirePrecision::Bf16)),
+                ),
+                2 => Job::new(format!("sign-fixed-{i}"), Box::new(SignFixedAverage)),
+                3 => Job::new(
+                    format!("quantized-f32-{i}"),
+                    Box::new(QuantizedPower::new(WirePrecision::F32)),
+                ),
+                4 => Job::new(format!("projection-{i}"), Box::new(ProjectionAverage)),
+                _ => Job::new(format!("lanczos-{i}"), Box::new(DistributedLanczos::default())),
+            };
+            match i % 3 {
+                0 => job,
+                1 => job.with_qos(QosClass::Interactive),
+                _ => job.with_qos(QosClass::Batch),
+            }
         })
         .collect()
 }
 
 /// Run the sweep; returns a CSV with one row per tenant count:
 /// `tenants, jobs, wall_s, speedup_vs_1, throughput_jps, lat_mean_s,
-/// lat_p95_s, rounds_mean, bytes_mean, err_mean`. `speedup_vs_1` is the
-/// overlap column the split-phase wire opened: 1-tenant batch wallclock
-/// over this row's wallclock (NaN when the sweep has no 1-tenant
-/// point). With [`ServeConfig::assert_overlap`] set, the 4-tenant
-/// point must beat the configured ratio or the driver errors.
+/// lat_p50_s, lat_p95_s`, then `p50/p95` per QoS class
+/// (interactive/standard/batch — the scheduler's fairness claims,
+/// observable per class; 0.0 when no job of a class ran), then
+/// `rounds_mean, bytes_mean, err_mean`. `speedup_vs_1` is the overlap
+/// column the split-phase wire opened: 1-tenant batch wallclock over
+/// this row's wallclock (NaN when the sweep has no 1-tenant point).
+/// With [`ServeConfig::assert_overlap`] set, the 4-tenant point must
+/// beat the configured ratio or the driver errors.
 pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
     anyhow::ensure!(cfg.jobs >= 1, "serve sweep needs at least one job per batch");
     let dist = CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x5e).gaussian();
@@ -99,7 +130,14 @@ pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
         "speedup_vs_1",
         "throughput_jps",
         "lat_mean_s",
+        "lat_p50_s",
         "lat_p95_s",
+        "p50_interactive_s",
+        "p95_interactive_s",
+        "p50_standard_s",
+        "p95_standard_s",
+        "p50_batch_s",
+        "p95_batch_s",
         "rounds_mean",
         "bytes_mean",
         "err_mean",
@@ -132,6 +170,16 @@ pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
         let latencies: Vec<f64> =
             report.jobs.iter().map(|j| j.latency.as_secs_f64()).collect();
         let lat = Summary::of(&latencies);
+        // per-class p50/p95 (satellite: fairness observable per QoS
+        // class); a class with no jobs reports 0.0, keeping rows finite
+        let class_lat: Vec<(f64, f64)> = QosClass::ALL
+            .iter()
+            .map(|&q| {
+                report
+                    .latency_summary(Some(q))
+                    .map_or((0.0, 0.0), |s| (s.median, s.p95))
+            })
+            .collect();
         let rounds_mean =
             report.jobs.iter().map(|j| j.comm.rounds as f64).sum::<f64>() / k;
         let bytes_mean = report.jobs.iter().map(|j| j.comm.bytes as f64).sum::<f64>() / k;
@@ -163,7 +211,14 @@ pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
                 f64::NAN, // speedup_vs_1, filled below
                 report.throughput,
                 lat.mean,
+                lat.median,
                 lat.p95,
+                class_lat[0].0,
+                class_lat[0].1,
+                class_lat[1].0,
+                class_lat[1].1,
+                class_lat[2].0,
+                class_lat[2].1,
                 rounds_mean,
                 bytes_mean,
                 err_mean,
@@ -190,6 +245,188 @@ pub fn run(cfg: &ServeConfig) -> Result<CsvTable> {
             );
         }
     }
+    Ok(table)
+}
+
+/// Config for the E11 **round-fusion acceptance gate**
+/// ([`run_fusion`]): many power-method tenants iterating concurrently
+/// on one in-proc cluster, unfused vs fused.
+#[derive(Clone, Debug)]
+pub struct FusionSweepConfig {
+    pub d: usize,
+    pub m: usize,
+    pub n: usize,
+    /// Concurrent power-method tenants (the acceptance run uses 8).
+    pub tenants: usize,
+    /// Power iterations per tenant (every iteration is one matvec
+    /// round; tenants sync per iteration so each round's batch fills).
+    pub iters: usize,
+    /// Fusion window handed to `Cluster::enable_fusion` for the fused
+    /// phase; `max_cols` is the tenant count. Deliberately generous:
+    /// tenants sync per iteration, so every batch *fills* (and flushes
+    /// inside the last joiner's submit) — the window is only the
+    /// timeout bound, and a tight one would let a scheduling hiccup
+    /// flush a partial batch and flake the counter `ensure!`.
+    pub window: Duration,
+    pub seed: u64,
+    /// With `Some(r)`, `ensure!` fused wall clock ≤ `r ×` the
+    /// unfused-overlapped wall clock. Armed at 0.6 only under
+    /// `DSPCA_STRESS=1` by default ([`stress_gate`]); bill equality,
+    /// the aggregate identity and the fusion-engagement counters are
+    /// `ensure!`d unconditionally.
+    pub assert_speedup: Option<f64>,
+}
+
+impl Default for FusionSweepConfig {
+    fn default() -> Self {
+        FusionSweepConfig {
+            d: 64,
+            m: 4,
+            n: 1500,
+            tenants: 8,
+            iters: 24,
+            window: Duration::from_millis(500),
+            seed: 0xf05e,
+            assert_speedup: stress_gate(0.6),
+        }
+    }
+}
+
+/// E11 fusion gate: run `tenants` concurrent fixed-iteration power
+/// methods twice on one in-proc cluster — unfused-overlapped, then
+/// with round fusion on — and `ensure!` that (a) every tenant's bill
+/// equals the solo bill in **both** phases, (b) Σ bills == the
+/// aggregate ledger window per phase, (c) fusion actually engaged
+/// (every fused iteration formed exactly one `tenants`-column
+/// carrier), and (d) under [`FusionSweepConfig::assert_speedup`], the
+/// fused phase beat the configured wall-clock ratio. Returns a CSV
+/// with one row per phase:
+/// `fused, tenants, iters, wall_s, speedup_vs_unfused, carriers,
+/// members`.
+pub fn run_fusion(cfg: &FusionSweepConfig) -> Result<CsvTable> {
+    anyhow::ensure!(cfg.tenants >= 2, "the fusion gate needs at least two tenants");
+    anyhow::ensure!(cfg.iters >= 1, "the fusion gate needs at least one iteration");
+    let dist = CovModel::paper_fig1(cfg.d, cfg.seed ^ 0xf5).gaussian();
+    let cluster = Cluster::generate(&dist, cfg.m, cfg.n, cfg.seed)?;
+    let d = cfg.d;
+    let start = |tenant: usize| -> Vec<f64> {
+        let mut v: Vec<f64> =
+            (0..d).map(|j| ((tenant * 37 + j + 1) as f64 * 0.61).sin()).collect();
+        normalize(&mut v);
+        v
+    };
+    let power = |v0: Vec<f64>| -> Result<CommStats> {
+        let s = cluster.session();
+        let mut v = v0;
+        for _ in 0..cfg.iters {
+            v = s.dist_matvec(&v)?;
+            normalize(&mut v);
+        }
+        Ok(s.close())
+    };
+    // solo reference bill on the quiesced cluster: every tenant's
+    // workload has the same shape, so one solo run prices them all
+    let solo = power(start(0))?;
+    let phase = |label: &str| -> Result<(f64, Vec<CommStats>)> {
+        let agg0 = cluster.aggregate_stats();
+        let barrier = Barrier::new(cfg.tenants);
+        let t0 = Instant::now();
+        let bills: Vec<CommStats> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..cfg.tenants)
+                .map(|i| {
+                    let (cluster, barrier, start) = (&cluster, &barrier, &start);
+                    scope.spawn(move || -> Result<CommStats> {
+                        let s = cluster.session();
+                        let mut v = start(i);
+                        for _ in 0..cfg.iters {
+                            // per-iteration sync keeps every fused
+                            // batch full (and is phase-invariant, so
+                            // the unfused baseline pays it too)
+                            barrier.wait();
+                            v = s.dist_matvec(&v)?;
+                            normalize(&mut v);
+                        }
+                        Ok(s.close())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().map_err(|_| anyhow::anyhow!("tenant thread panicked"))?)
+                .collect::<Result<Vec<_>>>()
+        })?;
+        let wall = t0.elapsed().as_secs_f64();
+        let mut sum = CommStats::default();
+        for (i, b) in bills.iter().enumerate() {
+            anyhow::ensure!(
+                *b == solo,
+                "{label}: tenant {i}'s bill diverged from its solo bill \
+                 ({b:?} vs {solo:?})"
+            );
+            sum.merge(b);
+        }
+        anyhow::ensure!(
+            cluster.aggregate_stats().delta_since(&agg0) == sum,
+            "{label}: sum of tenant bills != aggregate ledger window"
+        );
+        Ok((wall, bills))
+    };
+
+    let (unfused_wall, _) = phase("unfused-overlapped")?;
+    let counters0 = cluster.fusion_counters();
+    anyhow::ensure!(counters0 == (0, 0), "fusion engaged before it was enabled");
+    cluster.enable_fusion(cfg.window, cfg.tenants)?;
+    let (fused_wall, _) = phase("fused")?;
+    let (carriers, members) = cluster.fusion_counters();
+    anyhow::ensure!(
+        carriers == cfg.iters as u64 && members == (cfg.iters * cfg.tenants) as u64,
+        "fusion under-engaged: {carriers} carriers / {members} members, \
+         expected every iteration to form one {}-column carrier ({} / {})",
+        cfg.tenants,
+        cfg.iters,
+        cfg.iters * cfg.tenants
+    );
+    let speedup = unfused_wall / fused_wall.max(1e-12);
+    crate::info!(
+        "fusion gate: {} tenants x {} iters — unfused {unfused_wall:.3}s, \
+         fused {fused_wall:.3}s ({speedup:.2}x), {carriers} carriers / {members} members",
+        cfg.tenants,
+        cfg.iters
+    );
+    if let Some(ratio) = cfg.assert_speedup {
+        anyhow::ensure!(
+            fused_wall <= ratio * unfused_wall,
+            "fusion win missing: fused batch took {fused_wall:.3}s, \
+             expected <= {ratio} x the unfused {unfused_wall:.3}s"
+        );
+    }
+    let mut table = CsvTable::new(&[
+        "fused",
+        "tenants",
+        "iters",
+        "wall_s",
+        "speedup_vs_unfused",
+        "carriers",
+        "members",
+    ]);
+    table.push_nums(&[
+        0.0,
+        cfg.tenants as f64,
+        cfg.iters as f64,
+        unfused_wall,
+        1.0,
+        0.0,
+        0.0,
+    ]);
+    table.push_nums(&[
+        1.0,
+        cfg.tenants as f64,
+        cfg.iters as f64,
+        fused_wall,
+        speedup,
+        carriers as f64,
+        members as f64,
+    ]);
     Ok(table)
 }
 
@@ -230,18 +467,52 @@ mod tests {
         let rows = parse_rows(&table);
         assert_eq!(rows.len(), 2);
         for row in &rows {
-            assert_eq!(row.len(), 10, "schema-complete row");
+            assert_eq!(row.len(), 17, "schema-complete row");
             for cell in row {
                 assert!(cell.is_finite(), "non-finite cell {cell}");
             }
             assert_eq!(row[1], 5.0, "all jobs completed");
             assert!(row[3] > 0.0, "positive speedup column");
             assert!(row[4] > 0.0, "positive throughput");
-            assert!((0.0..=1.0).contains(&row[9]), "error in range");
+            // 5 jobs rotate i % 3, so every QoS class ran: per-class
+            // p50/p95 must be populated, not the empty-class 0.0
+            for c in 8..14 {
+                assert!(row[c] > 0.0, "per-class latency column {c} empty");
+            }
+            assert!((0.0..=1.0).contains(&row[16]), "error in range");
         }
         assert_eq!(rows[0][0], 1.0);
         assert_eq!(rows[1][0], 2.0);
         assert_eq!(rows[0][3], 1.0, "1-tenant row's speedup is exactly 1");
+    }
+
+    /// Tiny-size fusion gate: the bill-equality, aggregate-identity
+    /// and counter `ensure!`s inside [`run_fusion`] all run
+    /// unconditionally — this smoke proves them and the two-row schema
+    /// at toy size (the wall-clock ratio stays un-gated here; the
+    /// release-mode stress suite arms it at real size).
+    #[test]
+    fn fusion_gate_smoke_bills_counters_and_schema() {
+        let cfg = FusionSweepConfig {
+            d: 6,
+            m: 2,
+            n: 40,
+            tenants: 2,
+            iters: 2,
+            window: Duration::from_millis(100),
+            seed: 11,
+            assert_speedup: None,
+        };
+        let table = run_fusion(&cfg).unwrap();
+        let rows = parse_rows(&table);
+        assert_eq!(rows.len(), 2, "one row per phase");
+        for row in &rows {
+            assert_eq!(row.len(), 7, "schema-complete row");
+            assert!(row[3] > 0.0, "positive wall clock");
+        }
+        assert_eq!((rows[0][0], rows[1][0]), (0.0, 1.0), "unfused then fused");
+        assert_eq!(rows[1][5], 2.0, "one carrier per fused iteration");
+        assert_eq!(rows[1][6], 4.0, "every tenant joined every carrier");
     }
 
     /// The session-layer signature: the mean per-query bill must not
@@ -254,7 +525,7 @@ mod tests {
     fn per_query_bill_is_invariant_in_tenant_count() {
         let table = run(&tiny_cfg()).unwrap();
         let rows = parse_rows(&table);
-        assert_eq!(rows[0][7], rows[1][7], "rounds/query moved with tenant count");
-        assert_eq!(rows[0][8], rows[1][8], "bytes/query moved with tenant count");
+        assert_eq!(rows[0][14], rows[1][14], "rounds/query moved with tenant count");
+        assert_eq!(rows[0][15], rows[1][15], "bytes/query moved with tenant count");
     }
 }

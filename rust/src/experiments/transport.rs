@@ -228,6 +228,127 @@ pub fn run(cfg: &TransportConfig) -> Result<CsvTable> {
     Ok(table)
 }
 
+/// Config for the E12 **reactor acceptance gate** ([`run_reactor`]):
+/// one leader collecting from many TCP peers, with the leader-side
+/// reply plumbing capped at a single reactor thread.
+#[derive(Clone, Debug)]
+pub struct ReactorConfig {
+    /// Loopback TCP peers (the acceptance run uses 64).
+    pub peers: usize,
+    pub d: usize,
+    /// Samples per peer shard (total `n = peers * n_per_peer`).
+    pub n_per_peer: usize,
+    /// Normalized power-iteration rounds driven through the reactor.
+    pub rounds: usize,
+    pub seed: u64,
+    pub io_timeout: std::time::Duration,
+}
+
+impl Default for ReactorConfig {
+    fn default() -> Self {
+        ReactorConfig {
+            peers: 64,
+            d: 16,
+            n_per_peer: 3,
+            rounds: 8,
+            seed: 0xeac7,
+            io_timeout: crate::transport::DEFAULT_IO_TIMEOUT,
+        }
+    }
+}
+
+/// E12 reactor gate: run the same normalized power iteration on the
+/// in-proc backend and on `peers` loopback TCP sockets, and `ensure!`
+/// that (a) the TCP leader's reply plumbing is **at most one reader
+/// thread** ([`Cluster::reader_threads`] — before the reactor this was
+/// one blocking thread per peer, 64 here) and (b) the two backends'
+/// bills are bit-identical. Both checks are unconditional: they are
+/// structural, not wall-clock, so no host can flake them. Returns a
+/// CSV with one row per backend: `backend, peers, rounds,
+/// reader_threads, wall_s, total_bytes`.
+pub fn run_reactor(cfg: &ReactorConfig) -> Result<CsvTable> {
+    ensure!(cfg.peers >= 2, "the reactor gate needs at least two peers");
+    ensure!(cfg.rounds >= 1 && cfg.n_per_peer >= 1, "empty reactor workload");
+    let dist = CovModel::paper_fig1(cfg.d, cfg.seed ^ 0xea).gaussian();
+    let n = cfg.peers * cfg.n_per_peer;
+    let mut rng = crate::rng::Pcg64::new(cfg.seed ^ 0x1);
+    let v0 = rng.gaussian_vec(cfg.d);
+    let mut table = CsvTable::new(&[
+        "backend",
+        "peers",
+        "rounds",
+        "reader_threads",
+        "wall_s",
+        "total_bytes",
+    ]);
+    let mut bills: Vec<CommStats> = Vec::with_capacity(BACKENDS.len());
+    for backend in BACKENDS {
+        let loopback = if backend == "tcp" {
+            Some(LoopbackWorkers::spawn_with(cfg.peers, 1, cfg.io_timeout)?)
+        } else {
+            None
+        };
+        let spec = loopback.as_ref().map_or(TransportSpec::InProc, |w| w.spec());
+        let cluster = Cluster::generate_on(
+            &dist,
+            cfg.peers,
+            n,
+            cfg.seed,
+            OracleSpec::Native,
+            &spec,
+        )?;
+        // the gate, half one: leader-side reply plumbing is one reactor
+        // thread regardless of peer count (in-proc reports 0 — its
+        // threads are the simulated machines, not reply plumbing)
+        let readers = cluster.reader_threads();
+        ensure!(
+            readers <= 1,
+            "leader reply plumbing did not stay constant: {readers} reader \
+             threads for {} {backend} peers",
+            cfg.peers
+        );
+        let session = cluster.session();
+        let t0 = Instant::now();
+        let mut v = v0.clone();
+        for _ in 0..cfg.rounds {
+            v = session.dist_matvec(&v)?;
+            crate::linalg::vec_ops::normalize(&mut v);
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let bill = session.close();
+        table.push_row(vec![
+            backend.to_string(),
+            cfg.peers.to_string(),
+            bill.rounds.to_string(),
+            readers.to_string(),
+            format!("{wall:.6}"),
+            bill.bytes.to_string(),
+        ]);
+        crate::info!(
+            "reactor {backend} peers={}: {} rounds in {wall:.3}s with \
+             {readers} reader threads, {} B total",
+            cfg.peers,
+            bill.rounds,
+            bill.bytes
+        );
+        bills.push(bill);
+        drop(cluster);
+        if let Some(workers) = loopback {
+            workers.join()?;
+        }
+    }
+    // the gate, half two: the reactor moved the reply path off
+    // per-peer threads without touching a single counter
+    ensure!(
+        bills[0] == bills[1],
+        "reactor bills diverged from in-proc at {} peers: inproc={:?} tcp={:?}",
+        cfg.peers,
+        bills[0],
+        bills[1]
+    );
+    Ok(table)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,6 +397,27 @@ mod tests {
             assert_eq!(per_round(b), 2 * 6 * 3, "bf16 row");
             assert_eq!(per_round(a), 4 * per_round(b));
         }
+    }
+
+    /// Tiny-size reactor gate: the reader-thread cap and bill-identity
+    /// `ensure!`s inside [`run_reactor`] are unconditional, so this
+    /// smoke proves them at 8 peers; the stress suite runs the 64-peer
+    /// acceptance size.
+    #[test]
+    fn reactor_gate_smoke_caps_reader_threads_and_matches_bills() {
+        let cfg = ReactorConfig { peers: 8, rounds: 3, seed: 7, ..Default::default() };
+        let table = run_reactor(&cfg).unwrap();
+        let rendered = table.render();
+        let rows: Vec<Vec<&str>> =
+            rendered.lines().skip(1).map(|l| l.split(',').collect()).collect();
+        assert_eq!(rows.len(), 2, "one row per backend");
+        for row in &rows {
+            assert_eq!(row.len(), 6, "schema-complete row");
+        }
+        assert_eq!((rows[0][0], rows[1][0]), ("inproc", "tcp"));
+        assert_eq!(rows[0][3], "0", "in-proc worker threads are machines, not readers");
+        assert_eq!(rows[1][3], "1", "tcp reply plumbing is exactly the reactor");
+        assert_eq!(rows[0][5], rows[1][5], "total bytes backend-invariant");
     }
 
     /// Sparse workload across a real socket (ISSUE 6): CSR shards take

@@ -17,12 +17,13 @@
 //! dspca serve     [--d 60] [--m 8] [--n 400] [--jobs 12] [--tenants 1,2,4,8]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
 //!                 [--io-timeout-secs 20] [--no-overlap-assert] [--threads 4]
+//!                 [--fusion]
 //! dspca transport [--d-list 16,64,256] [--m 4] [--n 200] [--rounds 32]
 //!                 [--io-timeout-secs 20] [--no-pipeline-assert]
-//!                 [--density 0.05]
+//!                 [--density 0.05] [--reactor]
 //! dspca worker    [--listen 127.0.0.1:7070] [--once] [--io-timeout-secs 20]
 //!                 [--threads 4]
-//! dspca bench-check [--files BENCH_linalg.json,BENCH_topk.json]
+//! dspca bench-check [--files BENCH_linalg.json,BENCH_topk.json,BENCH_serve.json]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
 //! dspca lint      [--root path/to/crate]
@@ -346,6 +347,7 @@ fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
             "io-timeout-secs",
             "no-overlap-assert",
             "threads",
+            "fusion",
         ],
     )?;
     threads_from(args)?;
@@ -371,6 +373,16 @@ fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
     let path = format!("{out_dir}/serve.csv");
     table.write(&path)?;
     println!("wrote {path}");
+    // --fusion additionally runs the E11 round-fusion gate (in-proc;
+    // bill + counter ensures unconditional, wall-clock ratio gated by
+    // DSPCA_STRESS=1 like the overlap gate)
+    if args.get_bool("fusion") {
+        let fcfg = serve_exp::FusionSweepConfig { seed: cfg.seed, ..Default::default() };
+        let table = serve_exp::run_fusion(&fcfg)?;
+        let path = format!("{out_dir}/serve_fusion.csv");
+        table.write(&path)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -388,6 +400,7 @@ fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
             "io-timeout-secs",
             "no-pipeline-assert",
             "density",
+            "reactor",
         ],
     )?;
     let defaults = transport_exp::TransportConfig::default();
@@ -410,6 +423,20 @@ fn cmd_transport(args: &Args, out_dir: &str) -> Result<()> {
     let path = format!("{out_dir}/transport.csv");
     table.write(&path)?;
     println!("wrote {path}");
+    // --reactor additionally runs the E12 reactor gate: 64 loopback
+    // peers, <= 1 leader-side reader thread, bills identical to
+    // in-proc (both ensures structural — never wall-clock)
+    if args.get_bool("reactor") {
+        let rcfg = transport_exp::ReactorConfig {
+            seed: cfg.seed,
+            io_timeout: cfg.io_timeout,
+            ..Default::default()
+        };
+        let table = transport_exp::run_reactor(&rcfg)?;
+        let path = format!("{out_dir}/transport_reactor.csv");
+        table.write(&path)?;
+        println!("wrote {path}");
+    }
     Ok(())
 }
 
@@ -441,7 +468,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
 fn cmd_bench_check(args: &Args) -> Result<()> {
     use dspca::util::json::Json;
     args.ensure_known_flags("bench-check", &["files", "out"])?;
-    let files = args.get("files").unwrap_or("BENCH_linalg.json,BENCH_topk.json");
+    let files =
+        args.get("files").unwrap_or("BENCH_linalg.json,BENCH_topk.json,BENCH_serve.json");
     let mut checked = 0usize;
     for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let text = std::fs::read_to_string(path)

@@ -13,11 +13,32 @@
 //!
 //! ## Scheduling & fairness contract
 //!
-//! - Jobs are taken from a FIFO queue by `tenants` identical worker
-//!   ("leader") threads — work-conserving: a tenant thread never idles
-//!   while the queue is non-empty, and no job is skipped or reordered
-//!   at dequeue time (completion order may differ; [`ServeReport::jobs`]
-//!   is returned in submission order regardless).
+//! - Every job belongs to a **tenant** and a **QoS class**
+//!   ([`QosClass`]) and carries a fair-share **weight**. Dispatch is
+//!   two-level: strictly by QoS class (`Interactive` > `Standard` >
+//!   `Batch`), then weighted-fair within the class — each tenant keeps
+//!   a virtual time that advances by `1/weight` per dispatched job, and
+//!   the eligible tenant with the smallest virtual time runs next
+//!   (ties break by first-submission order, so dispatch is
+//!   deterministic). Jobs of one tenant within one class stay FIFO.
+//! - **Admission control**: [`ServePolicy::queue_depth`] bounds how many
+//!   jobs the batch accepts. Excess jobs are rejected with a typed
+//!   [`RejectReason`] in their [`JobReport`] — never a panic, and never
+//!   silently dropped: rejected jobs appear in [`ServeReport::jobs`] at
+//!   their submission position with an empty bill.
+//! - **Rate limits**: [`ServePolicy::max_inflight`] caps how many of a
+//!   tenant's jobs run concurrently. A capped tenant's surplus jobs
+//!   wait; other tenants' jobs are dispatched around them.
+//! - Work-conserving up to the declared limits: a tenant thread never
+//!   idles while an *eligible* job (one whose tenant is under its rate
+//!   cap) is queued, and [`ServeReport::jobs`] is returned in
+//!   submission order regardless of execution order.
+//! - Starvation-freedom: a serve batch is finite and
+//!   admission-bounded, every dispatch removes one job, and min-vtime
+//!   selection within a class serves every tenant with weight ≥ 1
+//!   infinitely often — so every admitted job runs. (A continuously-fed
+//!   queue would additionally age `Batch` jobs into higher classes;
+//!   see DESIGN.md §8.)
 //! - Tenant rounds genuinely **overlap on the wire** (see
 //!   [`crate::cluster`]'s split-phase collectives): one tenant's
 //!   submit never waits behind another tenant's in-flight replies, so
@@ -30,7 +51,9 @@
 //!
 //! - Each [`JobReport::comm`] is exactly the bill the same job would
 //!   pay running alone on an idle cluster (same rounds, messages,
-//!   bytes).
+//!   bytes) — scheduling policy, concurrency, and cross-tenant round
+//!   fusion ([`Cluster::enable_fusion`](crate::cluster::Cluster::enable_fusion))
+//!   never change what a job costs.
 //! - The sum of all job bills ([`ServeReport::bills_sum`]) equals
 //!   [`ServeReport::aggregate`], the delta of the cluster's monotonic
 //!   aggregate ledger over the serve window, whenever the batch has
@@ -40,7 +63,8 @@
 //!   lands in the aggregate but in no job's bill); exclusive-use
 //!   callers assert it.
 //! - A failed job still pays for the traffic it generated before
-//!   failing; its partial bill is included in the sum.
+//!   failing; its partial bill is included in the sum. A rejected job
+//!   never touched the cluster and bills nothing.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -49,9 +73,93 @@ use anyhow::{ensure, Result};
 
 use crate::cluster::{Cluster, CommStats};
 use crate::coordinator::Algorithm;
-use crate::sync::Mutex;
+use crate::sync::{Condvar, Mutex};
+use crate::util::stats::Summary;
 
-/// One queued query: a display name plus the algorithm to run. The
+/// Priority class of a job. Dispatch is strict across classes —
+/// an eligible `Interactive` job always runs before an eligible
+/// `Standard` one — and weighted-fair within a class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum QosClass {
+    /// Latency-sensitive foreground queries.
+    Interactive,
+    /// The default class.
+    Standard,
+    /// Throughput-oriented background work.
+    Batch,
+}
+
+impl QosClass {
+    /// All classes, highest priority first (dispatch scan order).
+    pub const ALL: [QosClass; 3] = [QosClass::Interactive, QosClass::Standard, QosClass::Batch];
+
+    /// Short label for reports and CSV columns.
+    pub fn label(&self) -> &'static str {
+        match self {
+            QosClass::Interactive => "interactive",
+            QosClass::Standard => "standard",
+            QosClass::Batch => "batch",
+        }
+    }
+}
+
+/// Why a job was refused admission. Typed so callers can branch on the
+/// cause; rejected jobs surface this in [`JobReport::rejected`] rather
+/// than panicking or vanishing from the report.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The batch already admitted `depth` jobs
+    /// ([`ServePolicy::queue_depth`]).
+    QueueFull { depth: usize },
+    /// The tenant already admitted its per-batch maximum
+    /// ([`ServePolicy::max_admitted`]).
+    RateLimited { tenant: String, limit: usize },
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::QueueFull { depth } => {
+                write!(f, "queue full (admission depth {depth})")
+            }
+            RejectReason::RateLimited { tenant, limit } => {
+                write!(f, "tenant '{tenant}' over its admission limit of {limit}")
+            }
+        }
+    }
+}
+
+/// Scheduler policy for one [`serve_with`] call. The default is the
+/// pre-scheduler behavior: everything admitted, no rate caps, one
+/// implicit tenant per job's declared tenant name.
+#[derive(Clone, Debug, Default)]
+pub struct ServePolicy {
+    /// Maximum number of jobs the batch admits (`None` = unbounded).
+    /// Jobs beyond the bound are rejected with
+    /// [`RejectReason::QueueFull`].
+    pub queue_depth: Option<usize>,
+    /// Per-tenant admission cap: at most `limit` jobs of `tenant`
+    /// are admitted per batch; the rest are rejected with
+    /// [`RejectReason::RateLimited`].
+    pub max_admitted: Vec<(String, usize)>,
+    /// Per-tenant concurrency cap: at most `limit` jobs of `tenant`
+    /// run at once. Surplus jobs wait (they are admitted, not
+    /// rejected) while other tenants dispatch around them.
+    pub max_inflight: Vec<(String, usize)>,
+}
+
+impl ServePolicy {
+    fn admitted_cap(&self, tenant: &str) -> Option<usize> {
+        self.max_admitted.iter().find(|(t, _)| t == tenant).map(|(_, l)| *l)
+    }
+
+    fn inflight_cap(&self, tenant: &str) -> Option<usize> {
+        self.max_inflight.iter().find(|(t, _)| t == tenant).map(|(_, l)| *l)
+    }
+}
+
+/// One queued query: a display name plus the algorithm to run, tagged
+/// with the scheduling attributes the weighted-fair queue uses. The
 /// algorithm chooses its own wire codec (e.g.
 /// [`QuantizedPower`](crate::coordinator::QuantizedPower) installs a
 /// lossy codec on its session); everything else runs lossless.
@@ -59,13 +167,47 @@ pub struct Job {
     /// Display name for reports (distinct from the algorithm's own
     /// [`Algorithm::name`], so two jobs may run the same algorithm).
     pub name: String,
+    /// Tenant the job bills its fair share against. Defaults to
+    /// `"default"`; jobs sharing a tenant share one FIFO lane per QoS
+    /// class and one virtual clock.
+    pub tenant: String,
+    /// Priority class (default [`QosClass::Standard`]).
+    pub qos: QosClass,
+    /// Fair-share weight of the job's tenant (≥ 1; a tenant's weight
+    /// is the maximum declared across its jobs). Weight 2 receives
+    /// twice the dispatch share of weight 1 within a class.
+    pub weight: u32,
     /// The query itself.
     pub alg: Box<dyn Algorithm + Send>,
 }
 
 impl Job {
     pub fn new(name: impl Into<String>, alg: Box<dyn Algorithm + Send>) -> Job {
-        Job { name: name.into(), alg }
+        Job {
+            name: name.into(),
+            tenant: "default".to_string(),
+            qos: QosClass::Standard,
+            weight: 1,
+            alg,
+        }
+    }
+
+    /// Assign the job to a tenant (fair-share lane).
+    pub fn with_tenant(mut self, tenant: impl Into<String>) -> Job {
+        self.tenant = tenant.into();
+        self
+    }
+
+    /// Assign a priority class.
+    pub fn with_qos(mut self, qos: QosClass) -> Job {
+        self.qos = qos;
+        self
+    }
+
+    /// Assign a fair-share weight (clamped to ≥ 1).
+    pub fn with_weight(mut self, weight: u32) -> Job {
+        self.weight = weight.max(1);
+        self
     }
 }
 
@@ -75,9 +217,14 @@ pub struct JobReport {
     pub name: String,
     /// The algorithm's identifier ([`Algorithm::name`]).
     pub alg: &'static str,
+    /// Tenant the job ran under.
+    pub tenant: String,
+    /// Priority class the job ran under.
+    pub qos: QosClass,
     /// The job's own communication bill — identical to its solo-run
     /// bill; a partial bill if the job failed (including any straggler
-    /// replies from its own failed rounds, billed to it on arrival).
+    /// replies from its own failed rounds, billed to it on arrival);
+    /// empty if the job was rejected at admission.
     pub comm: CommStats,
     /// Leader-side wallclock of the run itself (excludes queue wait).
     pub wall: Duration,
@@ -86,19 +233,23 @@ pub struct JobReport {
     pub latency: Duration,
     /// The estimate, if the job succeeded.
     pub w: Option<Vec<f64>>,
-    /// The failure, if it did not.
+    /// The failure, if it ran and did not succeed.
     pub error: Option<String>,
+    /// Set iff the job was refused admission (it never ran and billed
+    /// nothing).
+    pub rejected: Option<RejectReason>,
 }
 
 impl JobReport {
     pub fn succeeded(&self) -> bool {
-        self.error.is_none()
+        self.error.is_none() && self.rejected.is_none()
     }
 }
 
 /// Outcome of one [`serve`] call.
 pub struct ServeReport {
-    /// Per-job reports in **submission order**.
+    /// Per-job reports in **submission order** (rejected jobs
+    /// included, at their submission position).
     pub jobs: Vec<JobReport>,
     /// End-to-end wallclock of the whole batch.
     pub wall: Duration,
@@ -119,38 +270,222 @@ pub struct ServeReport {
 }
 
 impl ServeReport {
-    /// Mean submission-to-completion latency in seconds.
+    /// Mean submission-to-completion latency in seconds over the jobs
+    /// that actually ran (rejected jobs have no latency).
     pub fn mean_latency_s(&self) -> f64 {
-        if self.jobs.is_empty() {
+        let ran: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.rejected.is_none())
+            .map(|j| j.latency.as_secs_f64())
+            .collect();
+        if ran.is_empty() {
             return 0.0;
         }
-        self.jobs.iter().map(|j| j.latency.as_secs_f64()).sum::<f64>() / self.jobs.len() as f64
+        ran.iter().sum::<f64>() / ran.len() as f64
+    }
+
+    /// Latency distribution (p50 = median, p95, mean, …) over the jobs
+    /// that ran, optionally restricted to one QoS class. `None` when no
+    /// job of the class ran — the scheduler's fairness claims are
+    /// observable per class, not just in aggregate.
+    pub fn latency_summary(&self, qos: Option<QosClass>) -> Option<Summary> {
+        let samples: Vec<f64> = self
+            .jobs
+            .iter()
+            .filter(|j| j.rejected.is_none() && qos.is_none_or(|q| j.qos == q))
+            .map(|j| j.latency.as_secs_f64())
+            .collect();
+        if samples.is_empty() {
+            None
+        } else {
+            Some(Summary::of(&samples))
+        }
+    }
+
+    /// Number of jobs refused admission.
+    pub fn rejected(&self) -> usize {
+        self.jobs.iter().filter(|j| j.rejected.is_some()).count()
     }
 }
 
+/// One tenant's scheduling lane: FIFO subqueues per QoS class plus the
+/// weighted-fair virtual clock. Lane index = first-submission order
+/// (the deterministic tie-break).
+struct Lane {
+    tenant: String,
+    weight: u32,
+    inflight_cap: Option<usize>,
+    inflight: usize,
+    /// Virtual time: advanced by `1/weight` per dispatched job; the
+    /// eligible lane with the smallest vtime dispatches next.
+    vtime: f64,
+    /// One FIFO per QoS class, indexed as [`QosClass::ALL`].
+    queues: [VecDeque<(usize, Job)>; 3],
+}
+
+impl Lane {
+    fn pending(&self) -> usize {
+        self.queues.iter().map(VecDeque::len).sum()
+    }
+
+    fn eligible(&self) -> bool {
+        self.pending() > 0 && self.inflight_cap.is_none_or(|cap| self.inflight < cap)
+    }
+}
+
+/// Shared scheduler state behind the `serve.queue` lock.
+struct Sched {
+    lanes: Vec<Lane>,
+    /// Queued (not yet dispatched) jobs across all lanes.
+    pending: usize,
+}
+
+impl Sched {
+    /// Pick the next job under the two-level policy: strict QoS class
+    /// priority, weighted-fair (min vtime, ties by lane order) within
+    /// the class, honoring inflight caps. `None` with `pending > 0`
+    /// means every queued tenant is at its rate cap — the caller waits.
+    fn pop_next(&mut self) -> Option<(usize, usize, Job)> {
+        for (ci, _) in QosClass::ALL.iter().enumerate() {
+            let mut best: Option<usize> = None;
+            for (li, lane) in self.lanes.iter().enumerate() {
+                if !lane.eligible() || lane.queues[ci].is_empty() {
+                    continue;
+                }
+                if best.is_none_or(|b| lane.vtime < self.lanes[b].vtime) {
+                    best = Some(li);
+                }
+            }
+            if let Some(li) = best {
+                let lane = &mut self.lanes[li];
+                if let Some((idx, job)) = lane.queues[ci].pop_front() {
+                    lane.inflight += 1;
+                    lane.vtime += 1.0 / lane.weight as f64;
+                    self.pending -= 1;
+                    return Some((li, idx, job));
+                }
+            }
+        }
+        None
+    }
+}
+
+/// Run `jobs` over `tenants` concurrent leader threads with the default
+/// policy (everything admitted, no rate caps) — the pre-scheduler
+/// behavior, kept as the one-line entry point.
+pub fn serve(cluster: &Cluster, jobs: Vec<Job>, tenants: usize) -> Result<ServeReport> {
+    serve_with(cluster, jobs, tenants, &ServePolicy::default())
+}
+
 /// Run `jobs` to completion over `tenants` concurrent leader threads on
-/// one shared cluster. Returns per-job bills (each identical to the
-/// job's solo-run bill) plus batch metrics; errors only on a bad
-/// `tenants` count — individual job failures are reported in their
-/// [`JobReport::error`], and completed work is never discarded.
+/// one shared cluster under `policy`. Returns per-job bills (each
+/// identical to the job's solo-run bill) plus batch metrics; errors
+/// only on a bad configuration — individual job failures are reported
+/// in their [`JobReport::error`], admission rejects in
+/// [`JobReport::rejected`], and completed work is never discarded.
 ///
 /// The Σ-bills == aggregate identity is exact when the serve batch has
 /// the cluster to itself for the window; its outcome is recorded in
 /// [`ServeReport::accounting_exact`] (see the module docs).
-pub fn serve(cluster: &Cluster, jobs: Vec<Job>, tenants: usize) -> Result<ServeReport> {
+pub fn serve_with(
+    cluster: &Cluster,
+    jobs: Vec<Job>,
+    tenants: usize,
+    policy: &ServePolicy,
+) -> Result<ServeReport> {
     ensure!(tenants >= 1, "serve requires at least one tenant thread");
+    for (t, l) in policy.max_inflight.iter().chain(&policy.max_admitted) {
+        ensure!(*l >= 1, "serve policy: tenant '{t}' limit must be >= 1 (0 admits nothing)");
+    }
     let n_jobs = jobs.len();
     let agg0 = cluster.aggregate_stats();
     let t_start = Instant::now();
-    let queue: Mutex<VecDeque<(usize, Job)>> =
-        Mutex::named(jobs.into_iter().enumerate().collect(), "serve.queue");
+
+    // Admission + lane construction, in submission order. Rejected
+    // jobs turn into reports immediately; admitted jobs land in their
+    // tenant's per-class FIFO.
+    let mut sched = Sched { lanes: Vec::new(), pending: 0 };
+    let mut rejects: Vec<(usize, JobReport)> = Vec::new();
+    let mut admitted_total = 0usize;
+    for (idx, job) in jobs.into_iter().enumerate() {
+        let reject = if policy.queue_depth.is_some_and(|cap| admitted_total >= cap) {
+            Some(RejectReason::QueueFull { depth: policy.queue_depth.unwrap_or(0) })
+        } else {
+            policy.admitted_cap(&job.tenant).and_then(|limit| {
+                let already = sched
+                    .lanes
+                    .iter()
+                    .find(|l| l.tenant == job.tenant)
+                    .map_or(0, |l| l.pending());
+                (already >= limit)
+                    .then(|| RejectReason::RateLimited { tenant: job.tenant.clone(), limit })
+            })
+        };
+        if let Some(reason) = reject {
+            rejects.push((
+                idx,
+                JobReport {
+                    name: job.name,
+                    alg: job.alg.name(),
+                    tenant: job.tenant,
+                    qos: job.qos,
+                    comm: CommStats::default(),
+                    wall: Duration::ZERO,
+                    latency: Duration::ZERO,
+                    w: None,
+                    error: None,
+                    rejected: Some(reason),
+                },
+            ));
+            continue;
+        }
+        admitted_total += 1;
+        let lane_idx = match sched.lanes.iter().position(|l| l.tenant == job.tenant) {
+            Some(i) => i,
+            None => {
+                sched.lanes.push(Lane {
+                    tenant: job.tenant.clone(),
+                    weight: 1,
+                    inflight_cap: policy.inflight_cap(&job.tenant),
+                    inflight: 0,
+                    vtime: 0.0,
+                    queues: [VecDeque::new(), VecDeque::new(), VecDeque::new()],
+                });
+                sched.lanes.len() - 1
+            }
+        };
+        let lane = &mut sched.lanes[lane_idx];
+        lane.weight = lane.weight.max(job.weight.max(1));
+        let class = QosClass::ALL.iter().position(|c| *c == job.qos).unwrap_or(1);
+        lane.queues[class].push_back((idx, job));
+        sched.pending += 1;
+    }
+
+    let queue: Mutex<Sched> = Mutex::named(sched, "serve.queue");
+    let queue_cv = Condvar::new();
     let done: Mutex<Vec<(usize, JobReport)>> =
         Mutex::named(Vec::with_capacity(n_jobs), "serve.done");
     std::thread::scope(|s| {
-        for _ in 0..tenants.min(n_jobs.max(1)) {
+        for _ in 0..tenants.min(admitted_total.max(1)) {
             s.spawn(|| loop {
-                let next = queue.lock().pop_front();
-                let Some((idx, job)) = next else { break };
+                let (lane_idx, idx, job) = {
+                    let mut st = queue.lock();
+                    loop {
+                        match st.pop_next() {
+                            Some(next) => break next,
+                            None if st.pending == 0 => return,
+                            None => {
+                                // queued work exists but every tenant
+                                // with queued jobs is at its rate cap —
+                                // wait for a completion to free a slot
+                                let (guard, _) =
+                                    queue_cv.wait_timeout(st, Duration::from_millis(50));
+                                st = guard;
+                            }
+                        }
+                    }
+                };
                 let alg_name = job.alg.name();
                 let session = cluster.session();
                 let t_run = Instant::now();
@@ -166,30 +501,42 @@ pub fn serve(cluster: &Cluster, jobs: Vec<Job>, tenants: usize) -> Result<ServeR
                     Ok(est) => JobReport {
                         name: job.name,
                         alg: alg_name,
+                        tenant: job.tenant,
+                        qos: job.qos,
                         comm,
                         wall: est.wall,
                         latency,
                         w: Some(est.w),
                         error: None,
+                        rejected: None,
                     },
                     Err(e) => JobReport {
                         name: job.name,
                         alg: alg_name,
+                        tenant: job.tenant,
+                        qos: job.qos,
                         // comm above: the traffic the job generated
                         // before failing
                         wall: t_run.elapsed(),
                         latency,
                         w: None,
                         error: Some(format!("{e:#}")),
+                        rejected: None,
                         comm,
                     },
                 };
                 done.lock().push((idx, report));
+                {
+                    let mut st = queue.lock();
+                    st.lanes[lane_idx].inflight -= 1;
+                }
+                queue_cv.notify_all();
             });
         }
     });
     let wall = t_start.elapsed();
     let mut reports = done.into_inner();
+    reports.extend(rejects);
     reports.sort_by_key(|(idx, _)| *idx);
     let jobs: Vec<JobReport> = reports.into_iter().map(|(_, r)| r).collect();
     let aggregate = cluster.aggregate_stats().delta_since(&agg0);
@@ -250,10 +597,13 @@ mod tests {
             assert!(j.w.is_some());
             assert!(j.comm.rounds >= 1, "{} billed no rounds", j.name);
             assert!(j.latency >= j.wall, "latency includes queue wait");
+            assert_eq!(j.tenant, "default");
+            assert_eq!(j.qos, QosClass::Standard);
         }
         assert!(report.accounting_exact, "exclusive batch: Σ bills must equal aggregate");
         assert_eq!(report.bills_sum, report.aggregate);
         assert!(report.throughput > 0.0);
+        assert_eq!(report.rejected(), 0);
     }
 
     #[test]
@@ -327,5 +677,155 @@ mod tests {
         assert!(report.jobs[0].succeeded());
         assert!(serve(&c, Vec::new(), 2).unwrap().jobs.is_empty());
         assert!(serve(&c, Vec::new(), 0).is_err(), "zero tenants is a config error");
+    }
+
+    /// An algorithm that records its dispatch order into a shared log
+    /// before delegating to a real (cheap) estimator.
+    struct Recorder {
+        tag: &'static str,
+        log: std::sync::Arc<Mutex<Vec<&'static str>>>,
+    }
+    impl Algorithm for Recorder {
+        fn name(&self) -> &'static str {
+            "recorder"
+        }
+        fn run(&self, session: &Session<'_>) -> Result<Estimate> {
+            self.log.lock().push(self.tag);
+            SignFixedAverage.run(session)
+        }
+    }
+
+    #[test]
+    fn weighted_fair_dispatch_follows_virtual_time() {
+        use std::sync::Arc;
+        let c = small_cluster(2, 30, 6, 6);
+        let log = Arc::new(Mutex::named(Vec::new(), "test.dispatch_log"));
+        // tenant A at weight 3, tenant B at weight 1, one worker thread:
+        // dispatch must interleave 3 A's per B by min-vtime, not FIFO
+        let mut jobs = Vec::new();
+        for i in 0..6 {
+            jobs.push(
+                Job::new(format!("a{i}"), Box::new(Recorder { tag: "A", log: Arc::clone(&log) }))
+                    .with_tenant("A")
+                    .with_weight(3),
+            );
+        }
+        for i in 0..2 {
+            jobs.push(
+                Job::new(format!("b{i}"), Box::new(Recorder { tag: "B", log: Arc::clone(&log) }))
+                    .with_tenant("B"),
+            );
+        }
+        let report = serve(&c, jobs, 1).unwrap();
+        assert!(report.jobs.iter().all(|j| j.succeeded()));
+        // vtime trace (deterministic): A(0) ties B(0) → lane order picks
+        // A; A reaches vtime 1/3, B(0) runs, B jumps to 1; A catches up
+        // at 1/3, 2/3, 1 (tie → A), B runs at 1 vs 4/3, then A drains:
+        // A B A A A B A A — i.e. 3 A's in the first 4 dispatches and
+        // A's tail after B's share exhausts.
+        let order = log.lock().clone();
+        assert_eq!(order.len(), 8);
+        let head_a = order[..4].iter().filter(|t| **t == "A").count();
+        assert_eq!(head_a, 3, "weight 3:1 → 3 A's in the first 4 dispatches, got {order:?}");
+        assert_eq!(order[8 - 2..], ["A", "A"], "B's share exhausts first: {order:?}");
+    }
+
+    #[test]
+    fn interactive_class_preempts_batch_class_at_dispatch() {
+        use std::sync::Arc;
+        let c = small_cluster(2, 30, 6, 7);
+        let log = Arc::new(Mutex::named(Vec::new(), "test.qos_log"));
+        // submitted batch-first; with one worker thread the interactive
+        // job must still dispatch first (strict class priority)
+        let jobs = vec![
+            Job::new("bg", Box::new(Recorder { tag: "batch", log: Arc::clone(&log) }))
+                .with_qos(QosClass::Batch),
+            Job::new("fg", Box::new(Recorder { tag: "interactive", log: Arc::clone(&log) }))
+                .with_qos(QosClass::Interactive),
+        ];
+        let report = serve(&c, jobs, 1).unwrap();
+        assert!(report.jobs.iter().all(|j| j.succeeded()));
+        assert_eq!(*log.lock(), ["interactive", "batch"]);
+        // reports stay in submission order regardless of dispatch order
+        assert_eq!(report.jobs[0].name, "bg");
+        assert_eq!(report.jobs[1].name, "fg");
+        // per-class latency summaries are populated
+        assert!(report.latency_summary(Some(QosClass::Interactive)).is_some());
+        assert!(report.latency_summary(Some(QosClass::Batch)).is_some());
+        assert!(report.latency_summary(Some(QosClass::Standard)).is_none());
+        let all = report.latency_summary(None).unwrap();
+        assert!(all.p95 >= all.median, "p95 >= p50 by construction");
+    }
+
+    #[test]
+    fn queue_depth_rejects_typed_not_panicking() {
+        let c = small_cluster(2, 30, 6, 8);
+        let jobs = vec![
+            Job::new("in-1", Box::new(SignFixedAverage)),
+            Job::new("in-2", Box::new(SignFixedAverage)),
+            Job::new("out", Box::new(SignFixedAverage)),
+        ];
+        let policy = ServePolicy { queue_depth: Some(2), ..Default::default() };
+        let report = serve_with(&c, jobs, 2, &policy).unwrap();
+        assert_eq!(report.jobs.len(), 3, "rejected jobs stay in the report");
+        assert!(report.jobs[0].succeeded() && report.jobs[1].succeeded());
+        let r = &report.jobs[2];
+        assert!(!r.succeeded());
+        assert_eq!(r.rejected, Some(RejectReason::QueueFull { depth: 2 }));
+        assert_eq!(r.comm, CommStats::default(), "a rejected job bills nothing");
+        assert!(report.accounting_exact);
+        assert_eq!(report.rejected(), 1);
+        // throughput counts completed jobs only
+        assert!((report.throughput * report.wall.as_secs_f64() - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn per_tenant_admission_limit_rejects_surplus() {
+        let c = small_cluster(2, 30, 6, 9);
+        let jobs = vec![
+            Job::new("n1", Box::new(SignFixedAverage)).with_tenant("noisy"),
+            Job::new("n2", Box::new(SignFixedAverage)).with_tenant("noisy"),
+            Job::new("q1", Box::new(SignFixedAverage)).with_tenant("quiet"),
+        ];
+        let policy = ServePolicy {
+            max_admitted: vec![("noisy".to_string(), 1)],
+            ..Default::default()
+        };
+        let report = serve_with(&c, jobs, 2, &policy).unwrap();
+        assert!(report.jobs[0].succeeded());
+        assert_eq!(
+            report.jobs[1].rejected,
+            Some(RejectReason::RateLimited { tenant: "noisy".to_string(), limit: 1 })
+        );
+        assert!(report.jobs[2].succeeded(), "other tenants are unaffected");
+        let shown = report.jobs[1].rejected.as_ref().unwrap().to_string();
+        assert!(shown.contains("noisy") && shown.contains('1'), "{shown}");
+    }
+
+    #[test]
+    fn inflight_cap_serializes_a_tenant_without_losing_work() {
+        let c = small_cluster(2, 30, 6, 10);
+        let jobs: Vec<Job> = (0..5)
+            .map(|i| Job::new(format!("c{i}"), Box::new(SignFixedAverage)).with_tenant("capped"))
+            .collect();
+        let policy =
+            ServePolicy { max_inflight: vec![("capped".to_string(), 1)], ..Default::default() };
+        // 4 worker threads but the tenant may only run 1 job at a time:
+        // everything still completes (threads wait, never deadlock)
+        let report = serve_with(&c, jobs, 4, &policy).unwrap();
+        assert_eq!(report.jobs.len(), 5);
+        assert!(report.jobs.iter().all(|j| j.succeeded()), "rate cap must not lose work");
+        assert!(report.accounting_exact);
+    }
+
+    #[test]
+    fn zero_limit_policy_is_a_config_error() {
+        let c = small_cluster(2, 30, 6, 11);
+        let policy =
+            ServePolicy { max_inflight: vec![("t".to_string(), 0)], ..Default::default() };
+        assert!(serve_with(&c, Vec::new(), 1, &policy).is_err());
+        let policy2 =
+            ServePolicy { max_admitted: vec![("t".to_string(), 0)], ..Default::default() };
+        assert!(serve_with(&c, Vec::new(), 1, &policy2).is_err());
     }
 }

@@ -6,7 +6,10 @@
 //! receiver, and the worker threads are owned (and joined) here. No
 //! bytes are materialized — the session layer still bills from the
 //! codec-encoded payload frames, so the bill is identical to the TCP
-//! backend's by construction.
+//! backend's by construction. The worker threads *are* the simulated
+//! machines, not leader-side reply plumbing, so this backend reports
+//! the [`Transport::reader_threads`] default of 0 (the TCP reactor
+//! reports 1 — see `transport/tcp.rs`).
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -127,6 +130,7 @@ mod tests {
     #[test]
     fn send_recv_roundtrip_echoes_sequence_numbers() {
         let mut t = tiny_transport(2);
+        assert_eq!(t.reader_threads(), 0, "worker threads are machines, not reply plumbing");
         let rx = t.take_reply_stream();
         t.send(0, 5, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
         let (id, seq, resp) = recv_reply(&rx, Duration::from_secs(30)).unwrap();

@@ -18,9 +18,11 @@
 //!   `cluster/wire.rs` for the frame format). The leader connects to
 //!   `dspca worker --listen <addr>` processes, ships each worker its
 //!   shard once at setup (setup traffic is not part of the §2.1 round
-//!   bill), and a reader thread per peer feeds replies into one queue
-//!   so per-exchange deadlines map onto the same timeout/straggler
-//!   paths the in-proc backend uses.
+//!   bill), and **one reactor thread** drives every peer's non-blocking
+//!   socket, feeding replies into one queue — leader-side reply
+//!   plumbing costs a constant thread budget at any peer count
+//!   ([`Transport::reader_threads`]), and per-exchange deadlines map
+//!   onto the same timeout/straggler paths the in-proc backend uses.
 //!
 //! **Billing contract.** The transport moves messages; it never bills.
 //! `CommStats` is advanced by the session layer from the codec-encoded
@@ -114,6 +116,15 @@ pub trait Transport: Send {
     /// calling it twice, or after a peer already died, is a no-op —
     /// never a double-close or a hang.
     fn shutdown(&mut self);
+
+    /// Leader-side threads this backend dedicates to moving replies
+    /// into the reply stream. The TCP reactor reports `1` at any peer
+    /// count — the E12 driver's constant-thread-budget gate; in-proc
+    /// reports the default `0` (its worker threads *are* the simulated
+    /// machines, not leader-side reply plumbing).
+    fn reader_threads(&self) -> usize {
+        0
+    }
 }
 
 /// Receive one routed reply from a taken reply stream with a deadline,
@@ -253,6 +264,69 @@ pub(crate) fn write_frame(w: &mut impl Write, body: &[u8]) -> io::Result<()> {
     }
     w.write_all(&(body.len() as u32).to_le_bytes())?;
     w.write_all(body)?;
+    w.flush()
+}
+
+/// How long a deadline-bounded write parks between `WouldBlock`
+/// retries. Short enough that a drained socket buffer resumes almost
+/// immediately; long enough not to spin a core against a full one.
+const WRITE_RETRY_PAUSE: Duration = Duration::from_micros(50);
+
+/// Write all of `buf` to a possibly **non-blocking** writer, parking
+/// briefly on `WouldBlock` until `deadline` — the write-side
+/// counterpart of the reactor's non-blocking reads (`O_NONBLOCK` is a
+/// property of the shared file description, so the leader's send half
+/// goes non-blocking the moment the reactor's read half does).
+/// `Interrupted` retries immediately; a stall past the deadline is
+/// `TimedOut`, matching the old blocking-socket `set_write_timeout`
+/// contract.
+pub(crate) fn write_all_deadline(
+    w: &mut impl Write,
+    mut buf: &[u8],
+    deadline: std::time::Instant,
+) -> io::Result<()> {
+    while !buf.is_empty() {
+        match w.write(buf) {
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::WriteZero,
+                    "socket accepted zero bytes",
+                ))
+            }
+            Ok(n) => buf = &buf[n..],
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                if std::time::Instant::now() >= deadline {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        "socket write stalled past the io deadline",
+                    ));
+                }
+                std::thread::sleep(WRITE_RETRY_PAUSE);
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
+}
+
+/// [`write_frame`] for a non-blocking socket: the whole frame (prefix +
+/// body) must land within `timeout`, shared across both sections like
+/// one blocking write under `set_write_timeout`.
+pub(crate) fn write_frame_deadline(
+    w: &mut impl Write,
+    body: &[u8],
+    timeout: Duration,
+) -> io::Result<()> {
+    if body.len() > MAX_FRAME_BODY {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            format!("frame body of {} bytes exceeds the {MAX_FRAME_BODY}-byte cap", body.len()),
+        ));
+    }
+    let deadline = std::time::Instant::now() + timeout;
+    write_all_deadline(w, &(body.len() as u32).to_le_bytes(), deadline)?;
+    write_all_deadline(w, body, deadline)?;
     w.flush()
 }
 

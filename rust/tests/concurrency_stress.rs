@@ -228,3 +228,30 @@ fn pipelined_rounds_beat_serialized_rounds_on_tcp_loopback() {
     let table = run(&cfg).unwrap();
     println!("transport pipeline sweep:\n{}", table.render());
 }
+
+/// E12 reactor acceptance (ISSUE 8): 64 loopback TCP peers served by
+/// at most one leader-side reader thread, with bills bit-identical to
+/// in-proc. Both `ensure!`s inside the driver are structural, so this
+/// runs ungated at full acceptance size.
+#[test]
+fn reactor_serves_64_peers_with_one_reader_thread() {
+    use dspca::experiments::transport::{run_reactor, ReactorConfig};
+    let table = run_reactor(&ReactorConfig::default()).unwrap();
+    println!("reactor gate:\n{}", table.render());
+}
+
+/// E11 fusion acceptance (ISSUE 8): 8 concurrent power-method tenants,
+/// unfused-overlapped vs fused. Bills == solo, Σ == aggregate, and the
+/// every-round fusion-engagement counters are `ensure!`d inside the
+/// driver unconditionally; the `<= 0.6x` wall-clock gate arms under
+/// DSPCA_STRESS=1.
+#[test]
+fn fused_rounds_beat_unfused_overlap_at_eight_tenants() {
+    use dspca::experiments::serve::{run_fusion, FusionSweepConfig};
+    let cfg = FusionSweepConfig {
+        assert_speedup: if gated() { Some(0.6) } else { None },
+        ..Default::default()
+    };
+    let table = run_fusion(&cfg).unwrap();
+    println!("fusion gate:\n{}", table.render());
+}

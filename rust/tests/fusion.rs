@@ -1,0 +1,193 @@
+//! ISSUE 8 acceptance: **round-fusion billing invariance**.
+//!
+//! The propcheck property is the fusion analog of the overlap property
+//! in `concurrency_stress.rs`: for every codec × backend ×
+//! tenant-thread budget, a fleet of tenants whose matvec/matmat rounds
+//! coalesce into stacked carrier rounds must end with every per-tenant
+//! bill `CommStats`-identical to its solo (unfused) run, the sum of
+//! session bills equal to the aggregate window, and results equal to
+//! the solo results within summation-order tolerance. A generated
+//! dead-worker flag folds the degraded case into the same property:
+//! fusion over a shrunken live set must degrade exactly like an
+//! unfused round. Mixed-codec displacement and single-member window
+//! flushes are pinned by the in-module tests in `cluster/mod.rs`; the
+//! TCP mixed-codec regression lives here so both backends are covered.
+
+use std::sync::Barrier;
+use std::time::Duration;
+
+use dspca::cluster::{Cluster, CommStats, OracleSpec, WireCodec, WirePrecision};
+use dspca::data::CovModel;
+use dspca::linalg::Matrix;
+use dspca::propcheck::{run as propcheck, Config};
+use dspca::transport::{LoopbackWorkers, TransportSpec};
+
+/// DSPCA_PROP_CASES-scalable case count with a test-local default.
+fn cases(default: usize) -> usize {
+    std::env::var("DSPCA_PROP_CASES").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// One tenant's workload for the property: a fixed query repeated for
+/// `ROUNDS` barrier-synced rounds, as a matvec or a k-column matmat.
+struct Tenant {
+    matmat: bool,
+    k: usize,
+    query: Matrix,
+}
+
+const ROUNDS: usize = 2;
+
+/// THE fusion acceptance property: per-tenant bills and results are
+/// fusion-invariant for every codec × backend × tenant-thread budget,
+/// with and without a dead worker.
+#[test]
+fn prop_fused_bills_and_results_match_solo_for_every_codec_backend_and_thread_budget() {
+    propcheck(Config::default().cases(cases(8)), "fusion billing invariance", |g| {
+        let m = g.usize_in(2, 4);
+        let n = g.usize_in(8, 24);
+        let d = g.usize_in(3, 10);
+        let tenants = g.usize_in(2, 4); // the thread budget under test
+        let seed = g.rng().next_u64();
+        let prec =
+            [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16][g.usize_in(0, 2)];
+        let tcp = g.bool();
+        let kill = m > 2 && g.bool();
+        let dist = CovModel::paper_fig1(d, 21).gaussian();
+
+        let fleet: Vec<Tenant> = (0..tenants)
+            .map(|_| {
+                let matmat = g.bool();
+                let k = if matmat { g.usize_in(2, 3) } else { 1 };
+                let mut query = Matrix::zeros(d, k);
+                for c in 0..k {
+                    query.set_col(c, &g.gaussian_vec(d));
+                }
+                Tenant { matmat, k, query }
+            })
+            .collect();
+        let total_cols: usize = fleet.iter().map(|t| t.k).sum();
+
+        let workers = if tcp { Some(LoopbackWorkers::spawn(m, 1).unwrap()) } else { None };
+        let spec = workers.as_ref().map_or(TransportSpec::InProc, |w| w.spec());
+        let cluster =
+            Cluster::generate_on(&dist, m, n, seed, OracleSpec::Native, &spec).unwrap();
+        if kill {
+            cluster.kill_worker(m - 1).unwrap();
+        }
+
+        // solo references on the quiesced, fusion-free cluster: each
+        // tenant's exact workload, bill and result
+        let solo: Vec<(CommStats, Matrix)> = fleet
+            .iter()
+            .map(|t| {
+                let s = cluster.session();
+                s.set_codec(WireCodec::new(prec));
+                let mut out = Matrix::zeros(d, t.k);
+                for _ in 0..ROUNDS {
+                    out = if t.matmat {
+                        s.dist_matmat(&t.query).unwrap()
+                    } else {
+                        Matrix::from_vec(d, 1, s.dist_matvec(&t.query.col(0)).unwrap())
+                    };
+                }
+                (s.close(), out)
+            })
+            .collect();
+
+        // fused phase: max_cols is sized so each barrier-synced round
+        // forms exactly one full carrier (the last joiner flushes it —
+        // no tenant ever waits out the window), making the carrier and
+        // member counters deterministic
+        cluster.enable_fusion(Duration::from_millis(500), total_cols).unwrap();
+        let agg0 = cluster.aggregate_stats();
+        let barrier = Barrier::new(tenants);
+        let bills: Vec<CommStats> = std::thread::scope(|scope| {
+            let handles: Vec<_> = fleet
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let (cluster, barrier, solo) = (&cluster, &barrier, &solo);
+                    scope.spawn(move || {
+                        let s = cluster.session();
+                        s.set_codec(WireCodec::new(prec));
+                        for _ in 0..ROUNDS {
+                            barrier.wait();
+                            let out = if t.matmat {
+                                s.dist_matmat(&t.query).unwrap()
+                            } else {
+                                Matrix::from_vec(d, 1, s.dist_matvec(&t.query.col(0)).unwrap())
+                            };
+                            for r in 0..d {
+                                for c in 0..t.k {
+                                    let want = solo[i].1.get(r, c);
+                                    assert!(
+                                        (out.get(r, c) - want).abs() < 1e-12,
+                                        "tenant {i} entry ({r},{c}): fused {} vs solo {want}",
+                                        out.get(r, c)
+                                    );
+                                }
+                            }
+                        }
+                        s.close()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+
+        let mut sum = CommStats::default();
+        for (i, bill) in bills.iter().enumerate() {
+            assert_eq!(
+                *bill,
+                solo[i].0,
+                "tenant {i} ({}) under {prec:?}/{}/kill={kill}: fused bill != solo bill",
+                if fleet[i].matmat { "matmat" } else { "matvec" },
+                spec.label()
+            );
+            sum.merge(bill);
+        }
+        assert_eq!(
+            cluster.aggregate_stats().delta_since(&agg0),
+            sum,
+            "{prec:?}/{}: sum of fused session bills != aggregate window",
+            spec.label()
+        );
+        assert_eq!(
+            cluster.fusion_counters(),
+            (ROUNDS as u64, (ROUNDS * tenants) as u64),
+            "{prec:?}/{}: every barrier round must form exactly one full carrier",
+            spec.label()
+        );
+        drop(cluster);
+        if let Some(w) = workers {
+            w.join().unwrap();
+        }
+    });
+}
+
+/// Regression (TCP side; the in-proc twin lives in `cluster/mod.rs`):
+/// sessions on different codecs never share a carrier — the second
+/// submit displaces the first batch onto the wire unfused — and each
+/// still pays exactly its own codec width.
+#[test]
+fn tcp_mixed_codec_rounds_never_fuse() {
+    let d = 8usize;
+    let dist = CovModel::paper_fig1(d, 3).gaussian();
+    let workers = LoopbackWorkers::spawn(2, 1).unwrap();
+    let cluster =
+        Cluster::generate_on(&dist, 2, 20, 7, OracleSpec::Native, &workers.spec()).unwrap();
+    cluster.enable_fusion(Duration::from_millis(5), 8).unwrap();
+    let a = cluster.session();
+    let b = cluster.session();
+    b.set_codec(WireCodec::new(WirePrecision::Bf16));
+    let v = vec![0.4; d];
+    let ta = a.dist_matvec_submit(&v).unwrap();
+    let tb = b.dist_matvec_submit(&v).unwrap();
+    ta.complete().unwrap();
+    tb.complete().unwrap();
+    assert_eq!(cluster.fusion_counters(), (0, 0), "mixed codecs must not share a carrier");
+    assert_eq!(a.close().bytes, (8 * d * 3) as u64, "lossless bill at 8B/entry");
+    assert_eq!(b.close().bytes, (2 * d * 3) as u64, "bf16 bill at 2B/entry");
+    drop(cluster);
+    workers.join().unwrap();
+}
