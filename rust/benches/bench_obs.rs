@@ -1,0 +1,118 @@
+//! Observability overhead bench — pins the flight recorder's cost
+//! model (DESIGN.md §12): metric mutation is a relaxed atomic RMW,
+//! a disabled `obs_trace!` is one relaxed load, and the enabled trace
+//! path buffers thread-locally. In full mode (no `DSPCA_BENCH_FAST=1`)
+//! the disabled-path medians are **gated**: if a lock, allocation, or
+//! format ever creeps onto the always-on path, this bench fails rather
+//! than silently taxing every collective round.
+
+use std::time::Instant;
+
+use dspca::bench_harness::{fast_mode, Bencher};
+use dspca::cluster::{Cluster, OracleSpec};
+use dspca::data::CovModel;
+
+/// Full-mode ceiling for the always-on / disabled paths, in
+/// nanoseconds. A relaxed atomic is single-digit ns; a mutex, format,
+/// or allocation is hundreds — the gate sits between the two regimes
+/// with headroom for noisy hosts.
+const DISABLED_PATH_CEILING_NS: f64 = 250.0;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bencher::new();
+
+    // -- always-on metric mutation: one relaxed RMW per event --
+    let counter_ns = {
+        let r = b.bench("obs/counter_inc", || dspca::obs_inc!(SOLVER_ITERATIONS_TOTAL));
+        r.summary().median * 1e9
+    };
+    let gauge_ns = {
+        let r = b.bench("obs/gauge_set", || dspca::obs_gauge!(SERVE_QUEUE_DEPTH, 3));
+        r.summary().median * 1e9
+    };
+    let hist_ns = {
+        let r = b.bench("obs/hist_observe", || dspca::obs_hist!(SUBMIT_BYTES, 4096));
+        r.summary().median * 1e9
+    };
+
+    // -- disabled tracing: the macro's whole cost is one relaxed load;
+    // field expressions must not even be evaluated --
+    assert!(!dspca::obs::trace::enabled(), "bench must start with tracing off");
+    let trace_off_ns = {
+        let r = b.bench("obs/trace_disabled", || {
+            dspca::obs_trace!("bench_ev", seq = 7u64, bytes = 128u64)
+        });
+        r.summary().median * 1e9
+    };
+
+    // -- enabled tracing into the in-memory sink: serialize + buffer,
+    // flushing to the sink every batch boundary. Fixed iteration count
+    // (not calibrated) so the captured event volume stays bounded. --
+    dspca::obs::trace::install_memory();
+    let per_sample = 5_000u64;
+    let mut samples = Vec::new();
+    for _ in 0..8 {
+        let t = Instant::now();
+        for i in 0..per_sample {
+            dspca::obs_trace!("bench_ev", seq = i, bytes = 128u64);
+        }
+        samples.push(t.elapsed().as_secs_f64() / per_sample as f64);
+    }
+    let captured = dspca::obs::trace::finish()?.map_or(0, |lines| lines.len());
+    anyhow::ensure!(
+        captured as u64 >= 8 * per_sample,
+        "memory sink lost events: {captured} captured"
+    );
+    b.record("obs/trace_enabled_memory", samples);
+
+    // -- snapshot cost: every registered metric, relaxed loads only --
+    b.bench("obs/snapshot", || dspca::obs::metrics::snapshot());
+    b.bench("obs/snapshot_to_json", || dspca::obs::metrics::snapshot().to_json());
+
+    // -- an instrumented collective round end to end: the absolute
+    // cost the counters ride on (metrics are always on, so this *is*
+    // the instrumented number; the gates above bound the delta) --
+    let (d, m, n) = if fast_mode() { (16usize, 3usize, 60usize) } else { (64, 4, 300) };
+    let dist = CovModel::paper_fig1(d, 7).gaussian();
+    let cluster = Cluster::generate_with(&dist, m, n, 11, OracleSpec::Native)?;
+    let session = cluster.session();
+    let v = dspca::rng::Pcg64::new(3).gaussian_vec(d);
+    let _ = session.dist_matvec(&v)?; // warm
+    b.bench(&format!("obs/dist_matvec_instrumented/m={m}/{n}x{d}"), || {
+        session.dist_matvec(&v).unwrap()
+    });
+
+    // -- the full-mode gate: the always-on paths must stay in the
+    // atomic-op regime (CI smoke runs under DSPCA_BENCH_FAST=1 record
+    // the trajectory without gating; the full run enforces it) --
+    if !fast_mode() {
+        for (name, ns) in [
+            ("counter_inc", counter_ns),
+            ("gauge_set", gauge_ns),
+            ("hist_observe", hist_ns),
+            ("trace_disabled", trace_off_ns),
+        ] {
+            anyhow::ensure!(
+                ns < DISABLED_PATH_CEILING_NS,
+                "obs/{name} median {ns:.1}ns exceeds the {DISABLED_PATH_CEILING_NS}ns \
+                 always-on ceiling: something heavier than a relaxed atomic is on the hot path"
+            );
+        }
+        println!(
+            "obs gate OK: counter {counter_ns:.1}ns, gauge {gauge_ns:.1}ns, \
+             hist {hist_ns:.1}ns, disabled trace {trace_off_ns:.1}ns \
+             (< {DISABLED_PATH_CEILING_NS}ns)"
+        );
+    }
+
+    b.write_json(
+        "obs",
+        &[
+            ("d", d as f64),
+            ("m", m as f64),
+            ("n", n as f64),
+            ("trace_events_captured", captured as f64),
+        ],
+    )?;
+    Ok(())
+}

@@ -23,6 +23,12 @@
 //! 5. **`raw-sync-import`** — no `std::sync::Mutex`/`Condvar` outside
 //!    `src/sync/`: every lock goes through the instrumented shim so
 //!    the `DSPCA_ANALYZE=1` build sees it.
+//! 6. **`obs-confinement`** — the metrics registry's raw mutation
+//!    methods are called only inside `src/obs/` (where the
+//!    `obs_inc!`/`obs_add!`/`obs_gauge!`/`obs_hist!` macros expand).
+//!    Instrumentation sites use the macros, so every metric touch
+//!    stays auditable in one module and the disabled-path cost stays
+//!    a few relaxed atomics.
 //!
 //! The scanner strips `//` and `/* */` comments and skips
 //! `#[cfg(test)] mod` bodies by brace counting. It is deliberately
@@ -65,6 +71,7 @@ const RAW_MUTEX: &str = concat!("std::sync::", "Mutex");
 const RAW_CONDVAR: &str = concat!("std::sync::", "Condvar");
 const USE_STD_SYNC: &str = concat!("use std::", "sync::");
 const KNOWN_FLAGS_CALL: &str = concat!("ensure_known", "_flags");
+const OBS_RAW_NEEDLE: &str = concat!("obs_", "raw_");
 
 /// The `CommStats` counters rule 1 protects.
 const COMMSTATS_FIELDS: [&str; 7] = [
@@ -336,6 +343,20 @@ pub fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
             });
         }
 
+        // ---- rule 6: obs metric-mutation confinement ----
+        if code.contains(OBS_RAW_NEEDLE) && !rel.starts_with("obs/") {
+            findings.push(Finding {
+                file: rel.to_string(),
+                line: line_no,
+                rule: "obs-confinement",
+                message: format!(
+                    "direct `{OBS_RAW_NEEDLE}*` metric mutation outside src/obs/: \
+                     instrumentation sites must go through the obs_inc!/obs_add!/\
+                     obs_gauge!/obs_hist! macros"
+                ),
+            });
+        }
+
         // ---- rule 5: raw std::sync lock types ----
         if !in_sync_module {
             let qualified = code.contains(RAW_MUTEX) || code.contains(RAW_CONDVAR);
@@ -472,6 +493,25 @@ mod tests {
         assert!(scan("main.rs", &good).is_empty());
         // the rule only applies to main.rs
         assert!(scan("experiments/mod.rs", bad).is_empty());
+    }
+
+    #[test]
+    fn raw_metric_mutation_is_confined_to_the_obs_module() {
+        let src = format!(
+            "fn f() {{\n    M.{}add(1);\n}}\n",
+            concat!("obs_", "raw_")
+        );
+        let f = scan("cluster/session.rs", &src);
+        assert_eq!(f.len(), 1, "{f:?}");
+        assert_eq!(f[0].rule, "obs-confinement");
+        assert_eq!(f[0].line, 2);
+        assert!(f[0].message.contains("obs_inc!"));
+        // the macro definitions themselves live under src/obs/
+        assert!(scan("obs/metrics.rs", &src).is_empty());
+        assert!(scan("obs/trace.rs", &src).is_empty());
+        // macro call sites are clean by construction
+        let ok = "fn g() {\n    crate::obs_inc!(CLUSTER_SUBMITS_TOTAL);\n}\n";
+        assert!(scan("cluster/session.rs", ok).is_empty());
     }
 
     #[test]

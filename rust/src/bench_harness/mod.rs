@@ -242,6 +242,10 @@ impl Bencher {
             "results".to_string(),
             Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
         );
+        // process-wide metrics snapshot at report time — ties every
+        // bench JSON to the counters its workload drove (additive:
+        // readers treat the key as optional, old snapshots stay valid)
+        obj.insert("metrics".to_string(), crate::obs::metrics::snapshot().to_json());
         Json::Obj(obj)
     }
 

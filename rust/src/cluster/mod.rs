@@ -605,7 +605,12 @@ impl Cluster {
                 // billing lives in the session layer (lint rule
                 // `commstats-mutation`): one helper bills the issuing
                 // session and the aggregate together
-                owner.bill_reply_arrival(&self.aggregate, resp_bytes);
+                owner.bill_reply_arrival(
+                    &self.aggregate,
+                    resp_bytes,
+                    rseq,
+                    slot.codec.precision(),
+                );
             }
             slot.replies.push((id, resp));
             slot.deadline = Instant::now() + self.timeout;
@@ -626,8 +631,23 @@ impl Cluster {
                 if let Some(owner) = owner.upgrade() {
                     let stale_bytes =
                         resp.payload().map_or(0, |p| stale_codec.frame_bytes(p.len())) as u64;
-                    owner.bill_reply_arrival(&self.aggregate, stale_bytes);
+                    crate::obs_inc!(CLUSTER_STRAGGLER_REPLIES_TOTAL);
+                    owner.bill_reply_arrival(
+                        &self.aggregate,
+                        stale_bytes,
+                        rseq,
+                        stale_codec.precision(),
+                    );
+                } else {
+                    // issuer closed before its straggler landed
+                    crate::obs_inc!(CLUSTER_ORPHAN_REPLIES_TOTAL);
+                    crate::obs_trace!("orphan", seq = rseq, worker = id);
                 }
+            } else {
+                // record aged out of the straggler table (or never
+                // existed): nothing to bill, nobody to deliver to
+                crate::obs_inc!(CLUSTER_ORPHAN_REPLIES_TOTAL);
+                crate::obs_trace!("orphan", seq = rseq, worker = id);
             }
         }
     }
@@ -728,7 +748,12 @@ impl Cluster {
                     }
                     take_current = p.total_cols >= cfg.max_cols;
                 }
-                Some(_) => take_current = true,
+                Some(_) => {
+                    // incompatible (codec/worker-set/width) submit
+                    // displaces the pending batch onto the wire
+                    crate::obs_inc!(FUSION_DISPLACEMENTS_TOTAL);
+                    take_current = true;
+                }
                 None => {}
             }
             if take_current {
@@ -776,6 +801,10 @@ impl Cluster {
             if let Some(deadline) = pending_deadline {
                 let now = Instant::now();
                 if !wait || now >= deadline {
+                    if wait {
+                        // a completer waited out the window remainder
+                        crate::obs_inc!(FUSION_DEADLINE_FLUSHES_TOTAL);
+                    }
                     if let Some(batch) = fu.pending.take() {
                         fu.flushing.extend(batch.members.iter().map(|m| m.seq));
                         drop(fu);
@@ -849,6 +878,15 @@ impl Cluster {
             }
             self.fused_carriers.fetch_add(1, Ordering::Relaxed);
             self.fused_members.fetch_add(members.len() as u64, Ordering::Relaxed);
+            crate::obs_inc!(FUSION_CARRIERS_TOTAL);
+            crate::obs_add!(FUSION_MEMBERS_TOTAL, members.len() as u64);
+            crate::obs_hist!(FUSION_BATCH_COLS, total_cols as u64);
+            crate::obs_trace!(
+                "fusion_flush",
+                seq = carrier_seq,
+                members = members.len(),
+                cols = total_cols
+            );
             (carrier_seq, Request::CovMatMat { rows: d, cols: total_cols, data })
         };
         let mut sent = 0usize;
@@ -863,7 +901,13 @@ impl Cluster {
         }
         for m in &members {
             if let Some(owner) = m.owner.upgrade() {
-                owner.bill_fused_submit(&self.aggregate, sent as u64, m.req_bytes);
+                owner.bill_fused_submit(
+                    &self.aggregate,
+                    sent as u64,
+                    m.req_bytes,
+                    m.seq,
+                    codec.precision(),
+                );
             }
         }
         if sent < workers.len() {

@@ -51,8 +51,23 @@ use crate::sync::Mutex;
 
 use super::comm::CommStats;
 use super::message::{Request, Response};
-use super::wire::WireCodec;
+use super::wire::{WireCodec, WirePrecision};
 use super::{prune_inflight, Cluster, FuseMember, Slot};
+
+/// Process-unique session ids: stamped into every trace event a session
+/// emits so `dspca trace-report` can reassemble per-session timelines
+/// and match them against closing bills.
+static NEXT_SID: crate::sync::atomic::AtomicU64 = crate::sync::atomic::AtomicU64::new(0);
+
+/// Mirror billed bytes into the per-codec observability counter. Pure
+/// observation — the `CommStats` ledgers are never touched from here.
+fn obs_codec_bytes(prec: WirePrecision, bytes: u64) {
+    match prec {
+        WirePrecision::F64 => crate::obs_add!(BYTES_F64_TOTAL, bytes),
+        WirePrecision::F32 => crate::obs_add!(BYTES_F32_TOTAL, bytes),
+        WirePrecision::Bf16 => crate::obs_add!(BYTES_BF16_TOTAL, bytes),
+    }
+}
 
 /// The session state shared with the cluster's straggler-routing table:
 /// inflight records hold a `Weak` to this, so a late reply can be billed
@@ -61,6 +76,11 @@ use super::{prune_inflight, Cluster, FuseMember, Slot};
 pub(super) struct SessionCore {
     pub(super) stats: Mutex<CommStats>,
     pub(super) codec: Mutex<WireCodec>,
+    /// Process-unique id, stamped into trace events (never billed).
+    pub(super) sid: u64,
+    /// Tenant label for the trace timeline (empty until
+    /// [`Session::set_trace_label`]); read only on the close path.
+    pub(super) label: Mutex<String>,
 }
 
 impl SessionCore {
@@ -71,15 +91,36 @@ impl SessionCore {
     /// `router.state → session.stats` and
     /// `router.state → cluster.aggregate` — and every `CommStats`
     /// mutation stays in this file (lint rule `commstats-mutation`).
-    pub(super) fn bill_reply_arrival(&self, aggregate: &Mutex<CommStats>, bytes: u64) {
+    pub(super) fn bill_reply_arrival(
+        &self,
+        aggregate: &Mutex<CommStats>,
+        bytes: u64,
+        seq: u64,
+        prec: WirePrecision,
+    ) {
         {
             let mut stats = self.stats.lock();
             stats.responses_received += 1;
             stats.bytes += bytes;
         }
-        let mut agg = aggregate.lock();
-        agg.responses_received += 1;
-        agg.bytes += bytes;
+        {
+            let mut agg = aggregate.lock();
+            agg.responses_received += 1;
+            agg.bytes += bytes;
+        }
+        // observation only, after both ledgers are settled: the trace
+        // event mirrors exactly what was just billed, which is what
+        // makes the Σ-traced-bytes == bill cross-check an identity
+        crate::obs_inc!(CLUSTER_REPLIES_TOTAL);
+        crate::obs_hist!(REPLY_BYTES, bytes);
+        obs_codec_bytes(prec, bytes);
+        crate::obs_trace!(
+            "reply",
+            sid = self.sid,
+            seq = seq,
+            codec = prec.label(),
+            bytes = bytes
+        );
     }
 
     /// Bill a member round's outbound traffic at fusion-flush time:
@@ -91,7 +132,14 @@ impl SessionCore {
     /// messages are billed). Called by the cluster's fusion flusher
     /// with no router locks held; like [`Session::bill`], the two
     /// ledgers are locked one after the other, never nested.
-    pub(super) fn bill_fused_submit(&self, aggregate: &Mutex<CommStats>, sent: u64, req_bytes: u64) {
+    pub(super) fn bill_fused_submit(
+        &self,
+        aggregate: &Mutex<CommStats>,
+        sent: u64,
+        req_bytes: u64,
+        seq: u64,
+        prec: WirePrecision,
+    ) {
         if sent == 0 {
             return;
         }
@@ -101,10 +149,23 @@ impl SessionCore {
             st.rounds += 1;
             st.bytes += req_bytes;
         }
-        let mut agg = aggregate.lock();
-        agg.requests_sent += sent;
-        agg.rounds += 1;
-        agg.bytes += req_bytes;
+        {
+            let mut agg = aggregate.lock();
+            agg.requests_sent += sent;
+            agg.rounds += 1;
+            agg.bytes += req_bytes;
+        }
+        crate::obs_inc!(CLUSTER_SUBMITS_TOTAL);
+        crate::obs_hist!(SUBMIT_BYTES, req_bytes);
+        obs_codec_bytes(prec, req_bytes);
+        crate::obs_trace!(
+            "fused_submit",
+            sid = self.sid,
+            seq = seq,
+            codec = prec.label(),
+            bytes = req_bytes,
+            workers = sent
+        );
     }
 }
 
@@ -131,6 +192,8 @@ impl<'c> Session<'c> {
             core: Arc::new(SessionCore {
                 stats: Mutex::named(CommStats::default(), "session.stats"),
                 codec: Mutex::named(WireCodec::default(), "session.codec"),
+                sid: NEXT_SID.fetch_add(1, Ordering::Relaxed) + 1,
+                label: Mutex::named(String::new(), "session.label"),
             }),
         }
     }
@@ -179,6 +242,19 @@ impl<'c> Session<'c> {
         *self.core.stats.lock() = CommStats::default();
     }
 
+    /// This session's process-unique id — the `sid` field on every
+    /// trace event it emits.
+    pub fn sid(&self) -> u64 {
+        self.core.sid
+    }
+
+    /// Tag this session with a tenant label for the trace timeline
+    /// (`dspca trace-report` groups rounds by it). Pure observability:
+    /// no effect on billing or scheduling.
+    pub fn set_trace_label(&self, label: &str) {
+        *self.core.label.lock() = label.to_string();
+    }
+
     /// The wire codec installed on this session (default: lossless f64).
     pub fn codec(&self) -> WireCodec {
         *self.core.codec.lock()
@@ -212,7 +288,21 @@ impl<'c> Session<'c> {
             match Arc::try_unwrap(core) {
                 Ok(owned) => {
                     // `into_inner` recovers poison inside the shim
-                    return owned.stats.into_inner();
+                    let stats = owned.stats.into_inner();
+                    // the final, race-free bill is what the trace layer
+                    // mirrors: emit it as the session's closing event so
+                    // `dspca trace-report` can check Σ traced bytes
+                    // against it
+                    crate::obs_trace!(
+                        "session_bill",
+                        sid = owned.sid,
+                        label = owned.label.into_inner(),
+                        bytes = stats.bytes,
+                        rounds = stats.rounds,
+                        requests = stats.requests_sent,
+                        responses = stats.responses_received
+                    );
+                    return stats;
                 }
                 Err(still_shared) => {
                     core = still_shared;
@@ -320,6 +410,23 @@ impl<'c> Session<'c> {
             }
             err
         };
+        // observation only, outside the send lock: mirror exactly what
+        // the loop above billed (round + broadcast frame iff the first
+        // send landed), so the trace stays an identity over the bill
+        let billed = if sent > 0 { req_bytes } else { 0 };
+        crate::obs_inc!(CLUSTER_SUBMITS_TOTAL);
+        if sent > 0 {
+            crate::obs_hist!(SUBMIT_BYTES, billed);
+            obs_codec_bytes(codec.precision(), billed);
+        }
+        crate::obs_trace!(
+            "submit",
+            sid = self.core.sid,
+            seq = seq,
+            codec = codec.precision().label(),
+            bytes = billed,
+            workers = sent
+        );
         if let Some(e) = send_err {
             // only the workers actually reached owe replies; retire the
             // slot so their stragglers bill here (or nowhere, if we
@@ -597,6 +704,8 @@ impl Ticket<'_, '_> {
         // members) and make sure its outbound bill has been applied
         session.cluster.ensure_flushed(self.seq, true);
         let replies = session.cluster.await_ticket(self.seq)?;
+        crate::obs_inc!(CLUSTER_COMPLETES_TOTAL);
+        crate::obs_trace!("complete", sid = session.core.sid, seq = self.seq);
         let mut by_worker: Vec<Option<Response>> = (0..session.m()).map(|_| None).collect();
         let mut first_err: Option<(usize, String)> = None;
         for (id, resp) in replies {

@@ -151,6 +151,8 @@ impl DistributedOrthoIteration {
                     let (q, _) = qr_thin(&xw);
                     iters += 1;
                     let drift = subspace_error(&q, &w);
+                    crate::obs_inc!(SOLVER_ITERATIONS_TOTAL);
+                    crate::obs_gauge!(SOLVER_LAST_DRIFT_NANOS, (drift * 1e9) as u64);
                     w = q;
                     if drift <= self.tol {
                         break;
@@ -171,6 +173,8 @@ impl DistributedOrthoIteration {
                 let (q, r) = qr_thin(&y); // overlapped with the round
                 iters += 1;
                 let drift = subspace_error(&q, &w);
+                crate::obs_inc!(SOLVER_ITERATIONS_TOTAL);
+                crate::obs_gauge!(SOLVER_LAST_DRIFT_NANOS, (drift * 1e9) as u64);
                 w = q;
                 if drift <= self.tol {
                     // the speculative round at the stopping boundary is
@@ -183,6 +187,8 @@ impl DistributedOrthoIteration {
                 }
                 let Some(ticket) = ticket else { break };
                 let mut xy = ticket.complete()?;
+                // the QR above ran while this round was on the wire
+                crate::obs_inc!(SOLVER_OVERLAP_HITS_TOTAL);
                 if !apply_rinv(&mut xy, &r) {
                     bail!("block power iterate lost rank (pipelined R-solve)");
                 }
@@ -361,6 +367,8 @@ impl DeflatedShiftInvert {
                         bail!("deflated block iterate lost rank");
                     }
                     let drift = subspace_error(&q, &wb);
+                    crate::obs_inc!(SOLVER_ITERATIONS_TOTAL);
+                    crate::obs_gauge!(SOLVER_LAST_DRIFT_NANOS, (drift * 1e9) as u64);
                     wb = q;
                     if drift < 1e-18 {
                         if let Some(ticket) = ticket {
@@ -370,6 +378,7 @@ impl DeflatedShiftInvert {
                     }
                     let Some(ticket) = ticket else { break };
                     let mut xy = ticket.complete()?;
+                    crate::obs_inc!(SOLVER_OVERLAP_HITS_TOTAL);
                     deflate_cols(&mut xy);
                     if !apply_rinv(&mut xy, &r) {
                         bail!("deflated block iterate lost rank");

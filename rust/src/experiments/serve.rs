@@ -317,6 +317,7 @@ pub fn run_fusion(cfg: &FusionSweepConfig) -> Result<CsvTable> {
     };
     let power = |v0: Vec<f64>| -> Result<CommStats> {
         let s = cluster.session();
+        s.set_trace_label("solo-reference");
         let mut v = v0;
         for _ in 0..cfg.iters {
             v = s.dist_matvec(&v)?;
@@ -337,6 +338,9 @@ pub fn run_fusion(cfg: &FusionSweepConfig) -> Result<CsvTable> {
                     let (cluster, barrier, start) = (&cluster, &barrier, &start);
                     scope.spawn(move || -> Result<CommStats> {
                         let s = cluster.session();
+                        // observability only: names this tenant's round
+                        // timeline in the trace
+                        s.set_trace_label(&format!("tenant-{i}"));
                         let mut v = start(i);
                         for _ in 0..cfg.iters {
                             // per-iteration sync keeps every fused

@@ -63,6 +63,13 @@
 //!   checks of the router/ticket/billing protocol across all
 //!   interleavings ([`analysis::model`]), and the `dspca lint`
 //!   repo-invariant gate ([`analysis::lint`]).
+//! - [`obs`] — the flight recorder (DESIGN.md §12): an always-on
+//!   metrics registry over relaxed atomics plus opt-in JSONL event
+//!   tracing (`DSPCA_TRACE` / `--trace`) whose byte events are emitted
+//!   at the billing sites, making Σ traced bytes per session a second,
+//!   independently-plumbed copy of that session's `CommStats` bill —
+//!   rendered by `dspca stats` / `dspca trace-report` and exportable
+//!   to `chrome://tracing`.
 //! - [`util`], [`propcheck`], [`bench_harness`] — JSON/CSV/stats,
 //!   property-testing and benchmarking substrates (offline image has no
 //!   serde/proptest/criterion).
@@ -106,6 +113,7 @@ pub mod coordinator;
 pub mod data;
 pub mod experiments;
 pub mod linalg;
+pub mod obs;
 pub mod propcheck;
 pub mod rng;
 pub mod runtime;

@@ -17,17 +17,30 @@
 //! dspca serve     [--d 60] [--m 8] [--n 400] [--jobs 12] [--tenants 1,2,4,8]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
 //!                 [--io-timeout-secs 20] [--no-overlap-assert] [--threads 4]
-//!                 [--fusion]
+//!                 [--fusion] [--trace [path]]
 //! dspca transport [--d-list 16,64,256] [--m 4] [--n 200] [--rounds 32]
 //!                 [--io-timeout-secs 20] [--no-pipeline-assert]
 //!                 [--density 0.05] [--reactor]
 //! dspca worker    [--listen 127.0.0.1:7070] [--once] [--io-timeout-secs 20]
 //!                 [--threads 4]
-//! dspca bench-check [--files BENCH_linalg.json,BENCH_topk.json,BENCH_serve.json]
+//! dspca bench-check [--files BENCH_linalg.json,...,BENCH_obs.json]
 //! dspca e2e       [--artifacts artifacts/] [--m 4] [--n 400] [--d 64]
 //! dspca selftest
 //! dspca lint      [--root path/to/crate]
+//! dspca stats     [--json]
+//! dspca trace-report --file results/trace.jsonl [--chrome out.json]
 //! ```
+//!
+//! **Observability**: `DSPCA_TRACE=<path>` (any command) or `--trace
+//! [path]` (serve; bare flag defaults to `<out>/trace.jsonl`) streams
+//! timestamped JSONL events — one per collective submit/reply/bill,
+//! fusion flush, scheduler reject — to the named file. `dspca
+//! trace-report --file <path>` renders per-tenant round timelines and
+//! cross-checks Σ traced bytes against each session's bill; `--chrome
+//! <out>` additionally writes a `chrome://tracing` / Perfetto-loadable
+//! export. `dspca stats` drives a small fused workload and prints the
+//! process metrics snapshot (counters/gauges/histograms; `--json` for
+//! machine-readable form).
 //!
 //! `--threads N` sets the process-global compute-thread budget the
 //! blocked GEMM and shard covariance kernels use (`DSPCA_THREADS` is the
@@ -65,7 +78,17 @@ fn main() {
 fn run() -> Result<()> {
     let args = Args::from_env()?;
     let out_dir = args.get("out").unwrap_or("results").to_string();
-    match args.command.as_deref() {
+    let trace_path = trace_target(&args, &out_dir);
+    if let Some(path) = &trace_path {
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("trace: cannot create {}", dir.display()))?;
+            }
+        }
+        dspca::obs::trace::install_file(path)?;
+    }
+    let result = match args.command.as_deref() {
         Some("figure1") => cmd_figure1(&args, &out_dir),
         Some("table1") => cmd_table1(&args, &out_dir),
         Some("lower-bounds") => cmd_lower_bounds(&args, &out_dir),
@@ -79,15 +102,44 @@ fn run() -> Result<()> {
         Some("e2e") => cmd_e2e(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("lint") => cmd_lint(&args),
-        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, transport, worker, bench-check, e2e, selftest, lint)"),
+        Some("stats") => cmd_stats(&args),
+        Some("trace-report") => cmd_trace_report(&args),
+        Some(other) => bail!("unknown command '{other}' (try: figure1, table1, lower-bounds, scaling, topk, wire, serve, transport, worker, bench-check, e2e, selftest, lint, stats, trace-report)"),
         None => {
             println!(
                 "dspca — Communication-efficient Distributed Stochastic PCA\n\
-                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | transport | worker | bench-check | e2e | selftest | lint\n\
+                 commands: figure1 | table1 | lower-bounds | scaling | topk | wire | serve | transport | worker | bench-check | e2e | selftest | lint | stats | trace-report\n\
                  see README.md for flags"
             );
             Ok(())
         }
+    };
+    if trace_path.is_some() {
+        // flush and close the sink whether the command succeeded or not
+        // — a failed run's partial trace is exactly when you want it
+        let flushed = dspca::obs::trace::finish();
+        match (&result, flushed) {
+            (_, Err(e)) if result.is_ok() => return Err(e.context("trace: flushing sink")),
+            _ => {}
+        }
+        if let Some(path) = &trace_path {
+            eprintln!("trace written to {path}");
+        }
+    }
+    result
+}
+
+/// Resolve the trace destination: `--trace <path>` wins, bare `--trace`
+/// means `<out>/trace.jsonl`, else the `DSPCA_TRACE` env var (any
+/// command), else tracing stays off.
+fn trace_target(args: &Args, out_dir: &str) -> Option<String> {
+    match args.get("trace") {
+        Some("true") => Some(format!("{out_dir}/trace.jsonl")),
+        Some(path) => Some(path.to_string()),
+        None => match std::env::var("DSPCA_TRACE") {
+            Ok(p) if !p.is_empty() => Some(p),
+            _ => None,
+        },
     }
 }
 
@@ -348,6 +400,7 @@ fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
             "no-overlap-assert",
             "threads",
             "fusion",
+            "trace",
         ],
     )?;
     threads_from(args)?;
@@ -468,8 +521,9 @@ fn cmd_worker(args: &Args) -> Result<()> {
 fn cmd_bench_check(args: &Args) -> Result<()> {
     use dspca::util::json::Json;
     args.ensure_known_flags("bench-check", &["files", "out"])?;
-    let files =
-        args.get("files").unwrap_or("BENCH_linalg.json,BENCH_topk.json,BENCH_serve.json");
+    let files = args
+        .get("files")
+        .unwrap_or("BENCH_linalg.json,BENCH_topk.json,BENCH_serve.json,BENCH_obs.json");
     let mut checked = 0usize;
     for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let text = std::fs::read_to_string(path)
@@ -661,5 +715,66 @@ fn cmd_selftest(args: &Args) -> Result<()> {
         "selftest OK (inproc + tcp loopback, identical estimates and bills, \
          split-phase overlap billing exact)"
     );
+    Ok(())
+}
+
+/// Drive a small in-proc workload that touches every metric family —
+/// a fused multi-tenant power sweep plus one pipelined block-power
+/// solve — then print the process metrics snapshot (`--json` for the
+/// machine-readable form). The quickest way to see what the flight
+/// recorder captures; combine with `DSPCA_TRACE=` to get the matching
+/// event timeline.
+fn cmd_stats(args: &Args) -> Result<()> {
+    args.ensure_known_flags("stats", &["json", "out"])?;
+    let fcfg = serve_exp::FusionSweepConfig {
+        d: 16,
+        m: 3,
+        n: 120,
+        tenants: 2,
+        iters: 3,
+        window: std::time::Duration::from_millis(200),
+        seed: 0x57a7,
+        assert_speedup: None,
+    };
+    serve_exp::run_fusion(&fcfg).context("stats: fused workload")?;
+    let dist = dspca::data::CovModel::paper_fig1(12, 3).gaussian();
+    let c = dspca::cluster::Cluster::generate(&dist, 3, 80, 4)?;
+    dspca::coordinator::DistributedOrthoIteration::new(2)
+        .run_mat(&c.session())
+        .context("stats: solver workload")?;
+    let snap = dspca::obs::metrics::snapshot();
+    if args.get_bool("json") {
+        println!("{}", snap.to_json());
+    } else {
+        println!("{}", snap.to_text());
+    }
+    Ok(())
+}
+
+/// Parse a JSONL trace (produced via `DSPCA_TRACE=` / `--trace`),
+/// print per-session round timelines, and cross-check that the traced
+/// byte stream reproduces every closed session's bill exactly — the
+/// trace-as-correctness-oracle gate CI runs after `serve --trace`.
+/// `--chrome <out>` additionally writes a `chrome://tracing`-loadable
+/// export (schema-validated before writing).
+fn cmd_trace_report(args: &Args) -> Result<()> {
+    use dspca::obs::report;
+    args.ensure_known_flags("trace-report", &["file", "chrome", "out"])?;
+    let path = args
+        .get("file")
+        .context("trace-report: --file <trace.jsonl> is required")?;
+    let rep = report::report_from_file(path)?;
+    print!("{}", rep.render());
+    let checked = rep.crosscheck()?;
+    println!("bill cross-check OK: {checked} closed session(s) reproduced from the trace");
+    if let Some(out) = args.get("chrome") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("trace-report: cannot re-read {path}"))?;
+        // chrome_export schema-validates its own output before returning
+        let chrome = report::chrome_export(text.lines())?;
+        std::fs::write(out, format!("{chrome}\n"))
+            .with_context(|| format!("trace-report: cannot write {out}"))?;
+        println!("wrote chrome trace {out}");
+    }
     Ok(())
 }

@@ -1,0 +1,413 @@
+//! Statically-registered metrics: counters, gauges, and log2-bucket
+//! histograms over plain atomics — no deps, no allocation, no locks.
+//!
+//! Every metric is a `static` declared once in the [`define_metrics!`]
+//! table below; there is no dynamic registration, so a metric cannot
+//! appear at runtime that the snapshot (and DESIGN.md §12) does not
+//! document. Mutation goes through the crate-root instrumentation
+//! macros (`obs_inc!`, `obs_add!`, `obs_gauge!`, `obs_hist!`), which
+//! expand to the `obs_raw_*` entry points defined here — `dspca lint`
+//! rule `obs-confinement` confines that raw surface to `src/obs/`, so
+//! an instrumentation site elsewhere in the tree can only speak
+//! through the macros and the counters cannot drift from their
+//! documented meanings.
+//!
+//! Cost model: metrics are **always on** and each event is one relaxed
+//! atomic RMW (two for a histogram: bucket + the index math). There is
+//! no "enabled" branch to mispredict; `bench_obs` pins the per-event
+//! cost. Observation never touches `CommStats` — the bill and the
+//! metrics are independent ledgers, which is what lets the trace layer
+//! (`obs::trace`) cross-check one against the other.
+
+use std::collections::BTreeMap;
+
+use crate::sync::atomic::{AtomicU64, Ordering};
+use crate::util::json::Json;
+
+/// Monotonic event counter.
+pub struct Counter {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new(name: &'static str, help: &'static str) -> Counter {
+        Counter { name, help, value: AtomicU64::new(0) }
+    }
+
+    /// Raw mutation entry point — call through `obs_inc!` / `obs_add!`
+    /// (lint rule `obs-confinement` keeps this name inside `src/obs/`).
+    #[doc(hidden)]
+    #[inline]
+    pub fn obs_raw_add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+}
+
+/// Last-write-wins instantaneous value.
+pub struct Gauge {
+    name: &'static str,
+    help: &'static str,
+    value: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new(name: &'static str, help: &'static str) -> Gauge {
+        Gauge { name, help, value: AtomicU64::new(0) }
+    }
+
+    /// Raw mutation entry point — call through `obs_gauge!`.
+    #[doc(hidden)]
+    #[inline]
+    pub fn obs_raw_set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+}
+
+/// Bucket count for the log2 histograms: bucket 0 holds zeros, bucket
+/// `i >= 1` holds values in `[2^(i-1), 2^i)`, and the last bucket
+/// absorbs everything at or above `2^(HIST_BUCKETS-2)`.
+pub const HIST_BUCKETS: usize = 33;
+
+/// Map a value onto its log2 bucket.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+}
+
+const ATOMIC_ZERO: AtomicU64 = AtomicU64::new(0);
+
+/// Log2-bucket histogram.
+pub struct Hist {
+    name: &'static str,
+    help: &'static str,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Hist {
+    pub const fn new(name: &'static str, help: &'static str) -> Hist {
+        Hist { name, help, buckets: [ATOMIC_ZERO; HIST_BUCKETS] }
+    }
+
+    /// Raw mutation entry point — call through `obs_hist!`.
+    #[doc(hidden)]
+    #[inline]
+    pub fn obs_raw_observe(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn buckets_snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+
+    pub fn total(&self) -> u64 {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn help(&self) -> &'static str {
+        self.help
+    }
+}
+
+/// Increment a registered counter by 1.
+#[macro_export]
+macro_rules! obs_inc {
+    ($m:ident) => {
+        $crate::obs::metrics::$m.obs_raw_add(1)
+    };
+}
+
+/// Increment a registered counter by `n`.
+#[macro_export]
+macro_rules! obs_add {
+    ($m:ident, $n:expr) => {
+        $crate::obs::metrics::$m.obs_raw_add($n)
+    };
+}
+
+/// Set a registered gauge.
+#[macro_export]
+macro_rules! obs_gauge {
+    ($m:ident, $v:expr) => {
+        $crate::obs::metrics::$m.obs_raw_set($v)
+    };
+}
+
+/// Record one observation into a registered log2 histogram.
+#[macro_export]
+macro_rules! obs_hist {
+    ($m:ident, $v:expr) => {
+        $crate::obs::metrics::$m.obs_raw_observe($v)
+    };
+}
+
+/// The one metrics table. Adding a metric means adding a row here —
+/// snapshot, text table, JSON, and `dspca stats` all follow from it.
+macro_rules! define_metrics {
+    (
+        counters { $($c:ident => $chelp:expr;)* }
+        gauges { $($g:ident => $ghelp:expr;)* }
+        hists { $($h:ident => $hhelp:expr;)* }
+    ) => {
+        $( pub static $c: Counter = Counter::new(stringify!($c), $chelp); )*
+        $( pub static $g: Gauge = Gauge::new(stringify!($g), $ghelp); )*
+        $( pub static $h: Hist = Hist::new(stringify!($h), $hhelp); )*
+
+        /// Read every registered metric at once (relaxed loads; the
+        /// snapshot is per-metric atomic, not globally atomic).
+        pub fn snapshot() -> MetricsSnapshot {
+            MetricsSnapshot {
+                counters: vec![ $( ($c.name(), $c.help(), $c.get()), )* ],
+                gauges: vec![ $( ($g.name(), $g.help(), $g.get()), )* ],
+                hists: vec![ $( ($h.name(), $h.help(), $h.buckets_snapshot()), )* ],
+            }
+        }
+    };
+}
+
+define_metrics! {
+    counters {
+        CLUSTER_SUBMITS_TOTAL =>
+            "collective rounds submitted (solo and fused members)";
+        CLUSTER_COMPLETES_TOTAL =>
+            "collective tickets completed (replies collected)";
+        CLUSTER_REPLIES_TOTAL =>
+            "replies routed and billed (open slots and stragglers)";
+        CLUSTER_STRAGGLER_REPLIES_TOTAL =>
+            "late replies routed via a retired exchange's straggler record";
+        CLUSTER_ORPHAN_REPLIES_TOTAL =>
+            "replies dropped unattributable (record aged out or unknown seq)";
+        BYTES_F64_TOTAL =>
+            "billed wire bytes moved under the lossless f64 codec";
+        BYTES_F32_TOTAL =>
+            "billed wire bytes moved under the f32 codec";
+        BYTES_BF16_TOTAL =>
+            "billed wire bytes moved under the bf16 codec";
+        FUSION_CARRIERS_TOTAL =>
+            "fused carrier rounds put on the wire";
+        FUSION_MEMBERS_TOTAL =>
+            "member rounds coalesced into carriers";
+        FUSION_DISPLACEMENTS_TOTAL =>
+            "pending fusion batches displaced by an incompatible submit";
+        FUSION_DEADLINE_FLUSHES_TOTAL =>
+            "fusion batches flushed by a completer's window deadline";
+        TCP_REACTOR_SWEEPS_TOTAL =>
+            "reactor poll sweeps over the peer set";
+        TCP_REASSEMBLY_STALLS_TOTAL =>
+            "reactor sweeps that left a partial frame in a peer buffer";
+        TCP_WRITE_RETRIES_TOTAL =>
+            "deadline-bounded socket writes parked on WouldBlock";
+        TCP_HANDSHAKES_OK_TOTAL =>
+            "leader->worker Init handshakes completed";
+        TCP_HANDSHAKES_FAILED_TOTAL =>
+            "leader->worker connects or handshakes that failed";
+        SERVE_REJECTS_INTERACTIVE_TOTAL =>
+            "Interactive-class jobs rejected at admission";
+        SERVE_REJECTS_STANDARD_TOTAL =>
+            "Standard-class jobs rejected at admission";
+        SERVE_REJECTS_BATCH_TOTAL =>
+            "Batch-class jobs rejected at admission";
+        SERVE_RATE_LIMIT_WAITS_TOTAL =>
+            "scheduler waits with only rate-limited jobs queued";
+        SOLVER_ITERATIONS_TOTAL =>
+            "solver iterations across all coordinator runs";
+        SOLVER_OVERLAP_HITS_TOTAL =>
+            "solver iterations that overlapped QR with an in-flight round";
+    }
+    gauges {
+        TCP_REACTOR_IDLE_US =>
+            "current reactor idle-backoff level in microseconds";
+        SERVE_QUEUE_DEPTH =>
+            "jobs currently admitted and waiting in the serve queue";
+        SERVE_VTIME_LAG_X1000 =>
+            "weighted-fair virtual-time spread across lanes (x1000)";
+        SOLVER_LAST_DRIFT_NANOS =>
+            "last observed solver subspace drift (x1e9)";
+    }
+    hists {
+        SUBMIT_BYTES =>
+            "billed broadcast bytes per submitted round (log2 buckets)";
+        REPLY_BYTES =>
+            "billed bytes per routed reply (log2 buckets)";
+        FUSION_BATCH_COLS =>
+            "stacked columns per fused carrier (log2 buckets)";
+    }
+}
+
+/// Point-in-time copy of every registered metric, renderable as a text
+/// table (`dspca stats`) or JSON (`--json`, bench reports).
+pub struct MetricsSnapshot {
+    pub counters: Vec<(&'static str, &'static str, u64)>,
+    pub gauges: Vec<(&'static str, &'static str, u64)>,
+    pub hists: Vec<(&'static str, &'static str, Vec<u64>)>,
+}
+
+impl MetricsSnapshot {
+    /// Human-readable table: one metric per row, histograms as their
+    /// non-empty `2^k` buckets.
+    pub fn to_text(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("{:<36} {:>12}  {}\n", "metric", "value", "meaning"));
+        out.push_str(&format!("{}\n", "-".repeat(92)));
+        for (name, help, v) in &self.counters {
+            out.push_str(&format!("{:<36} {:>12}  {}\n", name.to_ascii_lowercase(), v, help));
+        }
+        for (name, help, v) in &self.gauges {
+            out.push_str(&format!("{:<36} {:>12}  {}\n", name.to_ascii_lowercase(), v, help));
+        }
+        for (name, help, buckets) in &self.hists {
+            let total: u64 = buckets.iter().sum();
+            out.push_str(&format!("{:<36} {:>12}  {}\n", name.to_ascii_lowercase(), total, help));
+            let cells: Vec<String> = buckets
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| **n > 0)
+                .map(|(i, n)| {
+                    if i == 0 {
+                        format!("0:{n}")
+                    } else {
+                        format!("<2^{i}:{n}")
+                    }
+                })
+                .collect();
+            if !cells.is_empty() {
+                out.push_str(&format!("{:<36} {:>12}  [{}]\n", "", "", cells.join(" ")));
+            }
+        }
+        out
+    }
+
+    /// Machine-readable form:
+    /// `{"counters": {..}, "gauges": {..}, "hists": {name: {"total", "buckets"}}}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, _, v) in &self.counters {
+            counters.insert(name.to_ascii_lowercase(), Json::Num(*v as f64));
+        }
+        let mut gauges = BTreeMap::new();
+        for (name, _, v) in &self.gauges {
+            gauges.insert(name.to_ascii_lowercase(), Json::Num(*v as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, _, buckets) in &self.hists {
+            let mut h = BTreeMap::new();
+            h.insert("total".to_string(), Json::Num(buckets.iter().sum::<u64>() as f64));
+            h.insert(
+                "buckets".to_string(),
+                Json::Arr(buckets.iter().map(|b| Json::Num(*b as f64)).collect()),
+            );
+            hists.insert(name.to_ascii_lowercase(), Json::Obj(h));
+        }
+        let mut obj = BTreeMap::new();
+        obj.insert("counters".to_string(), Json::Obj(counters));
+        obj.insert("gauges".to_string(), Json::Obj(gauges));
+        obj.insert("hists".to_string(), Json::Obj(hists));
+        Json::Obj(obj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_log2_with_zero_bucket() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index(1023), 10);
+        assert_eq!(bucket_index(1024), 11);
+        // the last bucket absorbs the tail
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn counter_gauge_hist_roundtrip() {
+        static C: Counter = Counter::new("C_TEST", "test counter");
+        static G: Gauge = Gauge::new("G_TEST", "test gauge");
+        static H: Hist = Hist::new("H_TEST", "test hist");
+        C.obs_raw_add(1);
+        C.obs_raw_add(2);
+        assert_eq!(C.get(), 3);
+        G.obs_raw_set(7);
+        G.obs_raw_set(4);
+        assert_eq!(G.get(), 4);
+        H.obs_raw_observe(0);
+        H.obs_raw_observe(5);
+        H.obs_raw_observe(5);
+        assert_eq!(H.total(), 3);
+        let b = H.buckets_snapshot();
+        assert_eq!(b[0], 1);
+        assert_eq!(b[bucket_index(5)], 2);
+    }
+
+    #[test]
+    fn snapshot_renders_text_and_json() {
+        // the registry is process-global and other tests increment it;
+        // assert structure, not exact values
+        crate::obs_inc!(CLUSTER_SUBMITS_TOTAL);
+        crate::obs_hist!(SUBMIT_BYTES, 256);
+        let snap = snapshot();
+        let text = snap.to_text();
+        assert!(text.contains("cluster_submits_total"));
+        assert!(text.contains("submit_bytes"));
+        let j = snap.to_json();
+        let back = Json::parse(&j.to_string()).expect("snapshot json parses");
+        assert!(
+            back.get("counters")
+                .and_then(|c| c.get("cluster_submits_total"))
+                .and_then(|v| v.as_f64())
+                .is_some_and(|v| v >= 1.0)
+        );
+        let h = back.get("hists").and_then(|h| h.get("submit_bytes")).expect("hist present");
+        assert!(h.get("total").and_then(|t| t.as_f64()).is_some_and(|t| t >= 1.0));
+        assert_eq!(
+            h.get("buckets").and_then(|b| b.as_arr()).map(|b| b.len()),
+            Some(HIST_BUCKETS)
+        );
+    }
+
+    #[test]
+    fn macros_compile_against_the_real_registry() {
+        let before = CLUSTER_COMPLETES_TOTAL.get();
+        crate::obs_inc!(CLUSTER_COMPLETES_TOTAL);
+        crate::obs_add!(CLUSTER_COMPLETES_TOTAL, 2);
+        assert!(CLUSTER_COMPLETES_TOTAL.get() >= before + 3);
+        crate::obs_gauge!(SERVE_QUEUE_DEPTH, 5);
+        crate::obs_hist!(REPLY_BYTES, 64);
+    }
+}

@@ -1,0 +1,30 @@
+//! Flight recorder: metrics registry + event tracing + trace reports.
+//!
+//! Two faces over the same instrumentation points (DESIGN.md §12):
+//!
+//! - [`metrics`] — always-on counters/gauges/log2 histograms over
+//!   relaxed atomics. Mutated only through the crate-root macros
+//!   (`obs_inc!`, `obs_add!`, `obs_gauge!`, `obs_hist!`); the raw
+//!   `obs_raw_*` surface is confined to this directory by the
+//!   `dspca lint` `obs-confinement` rule. Snapshot with
+//!   [`metrics::snapshot`], render via `dspca stats` or embed the JSON
+//!   into bench reports.
+//! - [`trace`] — opt-in JSONL event stream (`DSPCA_TRACE=<path>`,
+//!   `--trace`, or [`trace::install_memory`] in tests), one relaxed
+//!   atomic load per site when disabled. Byte events are emitted at
+//!   the billing sites in `cluster/session.rs`, so the stream mirrors
+//!   the `CommStats` ledger event-for-event.
+//! - [`report`] — parses the JSONL, prints per-tenant timelines,
+//!   enforces Σ traced bytes == bill (`dspca trace-report`), and
+//!   exports Chrome trace-event JSON for `chrome://tracing`/Perfetto.
+//!
+//! Invariant: observation never touches `CommStats` or any decision
+//! the system makes — bills and estimates are bit-identical with the
+//! recorder on or off (propchecked in `tests/concurrency_stress.rs`).
+
+pub mod metrics;
+pub mod report;
+pub mod trace;
+
+pub use metrics::MetricsSnapshot;
+pub use report::TraceReport;

@@ -1,0 +1,383 @@
+//! Trace post-processing: parse the JSONL emitted by [`crate::obs::trace`],
+//! print per-tenant round timelines, cross-check the trace against the
+//! billing ledger, and export to Chrome trace-event format.
+//!
+//! The cross-check is the point: byte events are emitted at the billing
+//! sites themselves, so for every session that closed,
+//! **Σ traced bytes (submit + fused_submit + reply) == `CommStats.bytes`**
+//! and **Σ billed round events == `CommStats.rounds`** — the trace is a
+//! second, independently-plumbed copy of the bill, and `dspca
+//! trace-report` fails loudly if the two ledgers ever disagree.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One session's view of the trace, paired with its closing bill.
+pub struct SessionRow {
+    pub sid: u64,
+    pub label: String,
+    pub traced_bytes: u64,
+    pub traced_rounds: u64,
+    pub bill_bytes: Option<u64>,
+    pub bill_rounds: Option<u64>,
+    pub first_us: u64,
+    pub last_us: u64,
+    pub events: usize,
+}
+
+impl SessionRow {
+    /// Does the trace agree with the bill? `None` when the session
+    /// never closed (no `session_bill` event to compare against).
+    pub fn check(&self) -> Option<bool> {
+        match (self.bill_bytes, self.bill_rounds) {
+            (Some(b), Some(r)) => Some(b == self.traced_bytes && r == self.traced_rounds),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed trace: per-session rows plus global counts.
+pub struct TraceReport {
+    pub total_events: usize,
+    pub sessions: Vec<SessionRow>,
+    /// Events that carry no `sid` (reactor, scheduler, log lines, ...).
+    pub unattributed: usize,
+}
+
+fn get_u64(j: &Json, key: &str) -> Option<u64> {
+    j.get(key).and_then(|v| v.as_f64()).map(|v| v as u64)
+}
+
+/// Parse JSONL trace lines into a report. Fails on a malformed line —
+/// the trace doubles as a correctness oracle, so silent skips would
+/// defeat it.
+pub fn parse_lines<'a>(lines: impl IntoIterator<Item = &'a str>) -> Result<TraceReport> {
+    let mut sessions: BTreeMap<u64, SessionRow> = BTreeMap::new();
+    let mut total_events = 0usize;
+    let mut unattributed = 0usize;
+    for (idx, line) in lines.into_iter().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("trace line {} is not valid JSON", idx + 1))?;
+        let Some(ev) = j.get("ev").and_then(|v| v.as_str()).map(|s| s.to_string()) else {
+            bail!("trace line {} has no \"ev\" field", idx + 1);
+        };
+        if j.get("ts_us").and_then(|v| v.as_f64()).is_none() {
+            bail!("trace line {} has no \"ts_us\" field", idx + 1);
+        }
+        total_events += 1;
+        let Some(sid) = get_u64(&j, "sid") else {
+            unattributed += 1;
+            continue;
+        };
+        let ts = get_u64(&j, "ts_us").unwrap_or(0);
+        let row = sessions.entry(sid).or_insert_with(|| SessionRow {
+            sid,
+            label: String::new(),
+            traced_bytes: 0,
+            traced_rounds: 0,
+            bill_bytes: None,
+            bill_rounds: None,
+            first_us: ts,
+            last_us: ts,
+            events: 0,
+        });
+        row.events += 1;
+        row.first_us = row.first_us.min(ts);
+        row.last_us = row.last_us.max(ts);
+        let bytes = get_u64(&j, "bytes").unwrap_or(0);
+        match ev.as_str() {
+            "submit" | "fused_submit" => {
+                row.traced_bytes += bytes;
+                if bytes > 0 {
+                    row.traced_rounds += 1;
+                }
+            }
+            "reply" => row.traced_bytes += bytes,
+            "session_bill" => {
+                row.bill_bytes = Some(bytes);
+                row.bill_rounds = Some(get_u64(&j, "rounds").unwrap_or(0));
+                if let Some(label) = j.get("label").and_then(|v| v.as_str()) {
+                    if !label.is_empty() {
+                        row.label = label.to_string();
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    Ok(TraceReport { total_events, sessions: sessions.into_values().collect(), unattributed })
+}
+
+/// Parse a trace file written by `DSPCA_TRACE` / `--trace`.
+pub fn report_from_file(path: &str) -> Result<TraceReport> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("cannot read trace file {path}"))?;
+    parse_lines(text.lines())
+}
+
+impl TraceReport {
+    /// Enforce the Σ-traced-bytes == bill identity for every session
+    /// that closed. Returns the number of sessions checked.
+    pub fn crosscheck(&self) -> Result<usize> {
+        let mut checked = 0usize;
+        for row in &self.sessions {
+            match row.check() {
+                Some(true) => checked += 1,
+                Some(false) => bail!(
+                    "bill-vs-trace mismatch for session {} ({}): traced {} bytes / {} rounds, \
+                     billed {} bytes / {} rounds",
+                    row.sid,
+                    if row.label.is_empty() { "unlabeled" } else { &row.label },
+                    row.traced_bytes,
+                    row.traced_rounds,
+                    row.bill_bytes.unwrap_or(0),
+                    row.bill_rounds.unwrap_or(0),
+                ),
+                None => {}
+            }
+        }
+        Ok(checked)
+    }
+
+    /// Per-tenant round timeline plus the cross-check verdict column.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "trace report: {} events over {} sessions ({} unattributed)\n",
+            self.total_events,
+            self.sessions.len(),
+            self.unattributed
+        ));
+        out.push_str(&format!(
+            "{:>5} {:<14} {:>7} {:>14} {:>12} {:>10} {:>7}  {}\n",
+            "sid", "tenant", "rounds", "traced_bytes", "bill_bytes", "span_ms", "events", "check"
+        ));
+        for row in &self.sessions {
+            let verdict = match row.check() {
+                Some(true) => "OK",
+                Some(false) => "MISMATCH",
+                None => "UNCLOSED",
+            };
+            out.push_str(&format!(
+                "{:>5} {:<14} {:>7} {:>14} {:>12} {:>10.2} {:>7}  {}\n",
+                row.sid,
+                if row.label.is_empty() { "-" } else { &row.label },
+                row.traced_rounds,
+                row.traced_bytes,
+                row.bill_bytes.map_or_else(|| "-".to_string(), |b| b.to_string()),
+                (row.last_us.saturating_sub(row.first_us)) as f64 / 1e3,
+                row.events,
+                verdict
+            ));
+        }
+        let closed = self.sessions.iter().filter(|r| r.check().is_some()).count();
+        let ok = self.sessions.iter().filter(|r| r.check() == Some(true)).count();
+        out.push_str(&format!(
+            "cross-check: {}/{} closed sessions have sigma(traced bytes) == CommStats.bytes\n",
+            ok, closed
+        ));
+        out
+    }
+}
+
+/// Export trace lines to the Chrome trace-event format
+/// (`chrome://tracing` / Perfetto "JSON Object Format"). Each
+/// `submit`/`complete` pair for a `(sid, seq)` becomes a complete
+/// (`"ph":"X"`) span on that session's track; everything else becomes
+/// an instant (`"ph":"i"`).
+pub fn chrome_export<'a>(lines: impl IntoIterator<Item = &'a str>) -> Result<Json> {
+    let mut events: Vec<Json> = Vec::new();
+    // (sid, seq) -> (ts_us, codec, bytes) of the pending submit
+    let mut open: BTreeMap<(u64, u64), (u64, String, u64)> = BTreeMap::new();
+    let mut instants: Vec<(String, u64, u64)> = Vec::new();
+    for (idx, line) in lines.into_iter().enumerate() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .with_context(|| format!("trace line {} is not valid JSON", idx + 1))?;
+        let ev = j.get("ev").and_then(|v| v.as_str()).unwrap_or("event").to_string();
+        let ts = get_u64(&j, "ts_us").unwrap_or(0);
+        let sid = get_u64(&j, "sid").unwrap_or(0);
+        let seq = get_u64(&j, "seq");
+        match (ev.as_str(), seq) {
+            ("submit" | "fused_submit", Some(seq)) => {
+                let codec =
+                    j.get("codec").and_then(|v| v.as_str()).unwrap_or("?").to_string();
+                let bytes = get_u64(&j, "bytes").unwrap_or(0);
+                open.insert((sid, seq), (ts, codec, bytes));
+            }
+            ("complete", Some(seq)) => match open.remove(&(sid, seq)) {
+                Some((t_submit, codec, bytes)) => {
+                    let mut args = BTreeMap::new();
+                    args.insert("seq".to_string(), Json::Num(seq as f64));
+                    args.insert("codec".to_string(), Json::Str(codec));
+                    args.insert("bytes".to_string(), Json::Num(bytes as f64));
+                    let mut o = BTreeMap::new();
+                    o.insert("name".to_string(), Json::Str("round".to_string()));
+                    o.insert("ph".to_string(), Json::Str("X".to_string()));
+                    o.insert("ts".to_string(), Json::Num(t_submit as f64));
+                    o.insert(
+                        "dur".to_string(),
+                        Json::Num(ts.saturating_sub(t_submit) as f64),
+                    );
+                    o.insert("pid".to_string(), Json::Num(1.0));
+                    o.insert("tid".to_string(), Json::Num(sid as f64));
+                    o.insert("args".to_string(), Json::Obj(args));
+                    events.push(Json::Obj(o));
+                }
+                None => instants.push((ev, ts, sid)),
+            },
+            _ => instants.push((ev, ts, sid)),
+        }
+    }
+    // unpaired submits (still in flight at trace end) also become instants
+    for ((sid, _), (ts, _, _)) in open {
+        instants.push(("submit".to_string(), ts, sid));
+    }
+    for (name, ts, sid) in instants {
+        let mut o = BTreeMap::new();
+        o.insert("name".to_string(), Json::Str(name));
+        o.insert("ph".to_string(), Json::Str("i".to_string()));
+        o.insert("ts".to_string(), Json::Num(ts as f64));
+        o.insert("pid".to_string(), Json::Num(1.0));
+        o.insert("tid".to_string(), Json::Num(sid as f64));
+        o.insert("s".to_string(), Json::Str("t".to_string()));
+        events.push(Json::Obj(o));
+    }
+    let mut top = BTreeMap::new();
+    top.insert("traceEvents".to_string(), Json::Arr(events));
+    top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+    let out = Json::Obj(top);
+    validate_chrome(&out)?;
+    Ok(out)
+}
+
+/// In-tree schema check for the Chrome trace-event export: the shape
+/// `chrome://tracing` / Perfetto actually requires to load the file.
+pub fn validate_chrome(j: &Json) -> Result<()> {
+    let Some(events) = j.get("traceEvents").and_then(|e| e.as_arr()) else {
+        bail!("chrome export: top-level \"traceEvents\" array missing");
+    };
+    for (i, ev) in events.iter().enumerate() {
+        let ctx = |field: &str| format!("chrome export: event {i} missing/invalid \"{field}\"");
+        if ev.get("name").and_then(|v| v.as_str()).is_none() {
+            bail!(ctx("name"));
+        }
+        for num_field in ["ts", "pid", "tid"] {
+            if ev.get(num_field).and_then(|v| v.as_f64()).is_none() {
+                bail!(ctx(num_field));
+            }
+        }
+        match ev.get("ph").and_then(|v| v.as_str()) {
+            Some("X") => {
+                if !ev.get("dur").and_then(|v| v.as_f64()).is_some_and(|d| d >= 0.0) {
+                    bail!(ctx("dur"));
+                }
+            }
+            Some("i") => {
+                if ev.get("s").and_then(|v| v.as_str()).is_none() {
+                    bail!(ctx("s"));
+                }
+            }
+            Some("M") => {}
+            _ => bail!(ctx("ph")),
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(fields: &str) -> String {
+        format!("{{{fields}}}")
+    }
+
+    #[test]
+    fn crosscheck_passes_on_consistent_trace() {
+        let lines = [
+            ev(r#""ev": "submit", "ts_us": 10, "tid": 0, "sid": 1, "seq": 5, "codec": "f64", "bytes": 100"#),
+            ev(r#""ev": "reply", "ts_us": 20, "tid": 0, "sid": 1, "seq": 5, "codec": "f64", "bytes": 60"#),
+            ev(r#""ev": "complete", "ts_us": 25, "tid": 0, "sid": 1, "seq": 5"#),
+            ev(r#""ev": "session_bill", "ts_us": 30, "tid": 0, "sid": 1, "label": "tenant0", "bytes": 160, "rounds": 1"#),
+        ];
+        let rep = parse_lines(lines.iter().map(|s| s.as_str())).expect("parses");
+        assert_eq!(rep.total_events, 4);
+        assert_eq!(rep.sessions.len(), 1);
+        assert_eq!(rep.crosscheck().expect("crosscheck"), 1);
+        let row = &rep.sessions[0];
+        assert_eq!(row.label, "tenant0");
+        assert_eq!(row.traced_bytes, 160);
+        assert_eq!(row.traced_rounds, 1);
+        assert!(rep.render().contains("OK"));
+    }
+
+    #[test]
+    fn crosscheck_fails_on_byte_mismatch() {
+        let lines = [
+            ev(r#""ev": "submit", "ts_us": 10, "tid": 0, "sid": 2, "seq": 1, "codec": "f32", "bytes": 50"#),
+            ev(r#""ev": "session_bill", "ts_us": 30, "tid": 0, "sid": 2, "bytes": 999, "rounds": 1"#),
+        ];
+        let rep = parse_lines(lines.iter().map(|s| s.as_str())).expect("parses");
+        let err = rep.crosscheck().expect_err("mismatch must fail");
+        assert!(err.to_string().contains("mismatch"));
+        assert!(rep.render().contains("MISMATCH"));
+    }
+
+    #[test]
+    fn unclosed_sessions_are_reported_not_failed() {
+        let lines =
+            [ev(r#""ev": "submit", "ts_us": 1, "tid": 0, "sid": 3, "seq": 1, "bytes": 10"#)];
+        let rep = parse_lines(lines.iter().map(|s| s.as_str())).expect("parses");
+        assert_eq!(rep.crosscheck().expect("no closed sessions to fail"), 0);
+        assert!(rep.render().contains("UNCLOSED"));
+    }
+
+    #[test]
+    fn malformed_lines_fail_parse() {
+        assert!(parse_lines(["not json"]).is_err());
+        assert!(parse_lines([r#"{"ts_us": 1}"#]).is_err());
+        assert!(parse_lines([r#"{"ev": "x"}"#]).is_err());
+    }
+
+    #[test]
+    fn chrome_export_pairs_spans_and_validates() {
+        let lines = [
+            ev(r#""ev": "submit", "ts_us": 10, "tid": 0, "sid": 1, "seq": 5, "codec": "f64", "bytes": 100"#),
+            ev(r#""ev": "complete", "ts_us": 35, "tid": 0, "sid": 1, "seq": 5"#),
+            ev(r#""ev": "log", "ts_us": 40, "tid": 0, "level": "warn", "msg": "hi""#),
+        ];
+        let j = chrome_export(lines.iter().map(|s| s.as_str())).expect("export");
+        validate_chrome(&j).expect("schema-valid");
+        let evs = j.get("traceEvents").and_then(|e| e.as_arr()).expect("events");
+        assert_eq!(evs.len(), 2);
+        let span = evs
+            .iter()
+            .find(|e| e.get("ph").and_then(|p| p.as_str()) == Some("X"))
+            .expect("one span");
+        assert_eq!(span.get("dur").and_then(|d| d.as_f64()), Some(25.0));
+        // round-trips through the serializer
+        let text = j.to_string();
+        let back = Json::parse(&text).expect("reparse");
+        validate_chrome(&back).expect("still valid");
+    }
+
+    #[test]
+    fn chrome_validator_rejects_bad_shapes() {
+        let bad = Json::parse(r#"{"traceEvents": [{"name": "x", "ph": "X", "ts": 1, "pid": 1, "tid": 1}]}"#)
+            .expect("parse");
+        assert!(validate_chrome(&bad).is_err(), "X without dur must fail");
+        let bad2 = Json::parse(r#"{"notTraceEvents": []}"#).expect("parse");
+        assert!(validate_chrome(&bad2).is_err());
+    }
+}

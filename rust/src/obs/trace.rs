@@ -1,0 +1,349 @@
+//! Event tracing: the second face of the flight recorder.
+//!
+//! When a sink is installed (`DSPCA_TRACE=<path>`, `--trace`, or
+//! [`install_memory`] in tests) the instrumentation points emit
+//! timestamped JSONL events — one JSON object per line — into
+//! per-thread buffers that flush to the shared sink in batches.
+//! When no sink is installed the entire layer is **one relaxed atomic
+//! load** per event site (`enabled()`), so tracing costs nothing in
+//! normal runs; `bench_obs` pins that disabled-path cost.
+//!
+//! Event schema (every event):
+//!   `{"ts_us": u64, "tid": u64, "ev": str, ...fields}`
+//! where `ts_us` is microseconds since the first sink install and
+//! `tid` is a small per-thread ordinal. Collective events additionally
+//! carry `sid` (session id), `seq`, `codec`, and `bytes` — the byte
+//! events are emitted **at the billing sites themselves** (all in
+//! `cluster/session.rs`), which is what makes Σ traced bytes per
+//! session a faithful mirror of that session's `CommStats` bill
+//! (checked by `obs::report` and `dspca trace-report`).
+//!
+//! Lock discipline: the shared sink sits behind
+//! `Mutex::named(.., "obs.sink")`, a **leaf** in the DESIGN.md §11
+//! hierarchy — it is only ever taken with no other obs lock held, and
+//! only on buffer flush (every [`FLUSH_AT`] events or at thread exit),
+//! never per event. Observation never touches `CommStats`: the trace
+//! is bill-invariant by construction.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use crate::sync::Mutex;
+use crate::util::json::Json;
+
+/// Buffered events per thread before a sink flush.
+pub const FLUSH_AT: usize = 64;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+/// Bumped on every install; stale thread buffers from a previous sink
+/// generation are discarded instead of leaking into the new sink.
+static EPOCH: AtomicU64 = AtomicU64::new(0);
+static NEXT_TID: AtomicU64 = AtomicU64::new(0);
+
+/// Fast-path gate: one relaxed load. Instrumentation sites check this
+/// (via the `obs_trace!` macro) before building any event.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+enum SinkDest {
+    File(std::io::BufWriter<std::fs::File>),
+    Memory(Vec<String>),
+}
+
+struct SinkState {
+    dest: Option<SinkDest>,
+    epoch: u64,
+}
+
+fn sink() -> &'static Mutex<SinkState> {
+    static SINK: OnceLock<Mutex<SinkState>> = OnceLock::new();
+    SINK.get_or_init(|| Mutex::named(SinkState { dest: None, epoch: 0 }, "obs.sink"))
+}
+
+fn t0() -> &'static Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now)
+}
+
+struct ThreadBuf {
+    lines: Vec<String>,
+    epoch: u64,
+    tid: u64,
+}
+
+impl ThreadBuf {
+    fn flush(&mut self) {
+        if self.lines.is_empty() {
+            return;
+        }
+        let mut st = sink().lock();
+        if st.epoch == self.epoch {
+            match st.dest.as_mut() {
+                Some(SinkDest::File(w)) => {
+                    for line in &self.lines {
+                        // a failed trace write must never fail the run;
+                        // drop the line and keep going
+                        let _ = writeln!(w, "{line}");
+                    }
+                }
+                Some(SinkDest::Memory(lines)) => lines.append(&mut self.lines),
+                None => {}
+            }
+        }
+        self.lines.clear();
+    }
+}
+
+impl Drop for ThreadBuf {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+thread_local! {
+    static BUF: RefCell<ThreadBuf> = RefCell::new(ThreadBuf {
+        lines: Vec::new(),
+        epoch: 0,
+        tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+    });
+}
+
+fn install(dest: SinkDest) {
+    // stamp t0 before enabling so ts_us is monotone from install
+    let _ = t0();
+    let epoch = EPOCH.fetch_add(1, Ordering::Relaxed) + 1;
+    {
+        let mut st = sink().lock();
+        st.dest = Some(dest);
+        st.epoch = epoch;
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+}
+
+/// Start tracing to a JSONL file (truncates any existing file).
+pub fn install_file(path: &str) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("obs: cannot create trace file {path}"))?;
+    install(SinkDest::File(std::io::BufWriter::new(file)));
+    Ok(())
+}
+
+/// Start tracing into an in-memory line buffer (tests and benches —
+/// no filesystem, no env vars).
+pub fn install_memory() {
+    install(SinkDest::Memory(Vec::new()));
+}
+
+/// Stop tracing: disable the gate, flush the calling thread's buffer
+/// and the sink, and return the captured lines for a memory sink.
+/// Threads that emitted events must have exited or gone quiet before
+/// this call for their tails to be included (their buffers flush on
+/// thread exit).
+pub fn finish() -> Result<Option<Vec<String>>> {
+    ENABLED.store(false, Ordering::Relaxed);
+    flush_current_thread();
+    let taken = {
+        let mut st = sink().lock();
+        st.dest.take()
+    };
+    match taken {
+        Some(SinkDest::File(mut w)) => {
+            w.flush().context("obs: flushing trace file")?;
+            Ok(None)
+        }
+        Some(SinkDest::Memory(lines)) => Ok(Some(lines)),
+        None => Ok(None),
+    }
+}
+
+/// Push the calling thread's buffered events down to the sink now.
+pub fn flush_current_thread() {
+    BUF.with(|b| b.borrow_mut().flush());
+}
+
+/// A trace event field value.
+pub enum Val {
+    U(u64),
+    F(f64),
+    S(String),
+}
+
+impl From<u64> for Val {
+    fn from(v: u64) -> Val {
+        Val::U(v)
+    }
+}
+impl From<u32> for Val {
+    fn from(v: u32) -> Val {
+        Val::U(v as u64)
+    }
+}
+impl From<usize> for Val {
+    fn from(v: usize) -> Val {
+        Val::U(v as u64)
+    }
+}
+impl From<f64> for Val {
+    fn from(v: f64) -> Val {
+        Val::F(v)
+    }
+}
+impl From<&str> for Val {
+    fn from(v: &str) -> Val {
+        Val::S(v.to_string())
+    }
+}
+impl From<String> for Val {
+    fn from(v: String) -> Val {
+        Val::S(v)
+    }
+}
+
+/// Builder for one trace event. Construct through `obs_trace!` so the
+/// `enabled()` gate is checked before any allocation happens.
+pub struct Ev {
+    obj: BTreeMap<String, Json>,
+}
+
+impl Ev {
+    pub fn new(name: &'static str) -> Ev {
+        let mut obj = BTreeMap::new();
+        obj.insert("ev".to_string(), Json::Str(name.to_string()));
+        obj.insert("ts_us".to_string(), Json::Num(t0().elapsed().as_micros() as f64));
+        obj
+            .insert("tid".to_string(), Json::Num(BUF.with(|b| b.borrow().tid) as f64));
+        Ev { obj }
+    }
+
+    pub fn field(mut self, key: &'static str, v: Val) -> Ev {
+        let j = match v {
+            Val::U(u) => Json::Num(u as f64),
+            Val::F(f) => Json::Num(f),
+            Val::S(s) => Json::Str(s),
+        };
+        self.obj.insert(key.to_string(), j);
+        self
+    }
+
+    /// Serialize into the calling thread's buffer; flush the batch to
+    /// the sink when it reaches [`FLUSH_AT`].
+    pub fn emit(self) {
+        let line = Json::Obj(self.obj).to_string();
+        let epoch = EPOCH.load(Ordering::Relaxed);
+        BUF.with(|b| {
+            let mut buf = b.borrow_mut();
+            if buf.epoch != epoch {
+                // previous sink generation: drop stale tail, re-tag
+                buf.lines.clear();
+                buf.epoch = epoch;
+            }
+            buf.lines.push(line);
+            if buf.lines.len() >= FLUSH_AT {
+                buf.flush();
+            }
+        });
+    }
+}
+
+/// Emit one trace event iff a sink is installed. The `enabled()` check
+/// happens before any field expression is evaluated or allocated, so a
+/// disabled site costs one relaxed atomic load.
+#[macro_export]
+macro_rules! obs_trace {
+    ($name:expr $(, $k:ident = $v:expr)* $(,)?) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::Ev::new($name)
+                $(.field(stringify!($k), $crate::obs::trace::Val::from($v)))*
+                .emit();
+        }
+    };
+}
+
+/// Route one logger line into the timeline (satellite of ISSUE 9):
+/// called by `util::logger` when tracing is active. Flushes
+/// immediately — log lines are rare and must not sit in a buffer while
+/// a crash is being diagnosed.
+pub fn emit_log(level: &str, msg: &str) {
+    if !enabled() {
+        return;
+    }
+    Ev::new("log")
+        .field("level", Val::from(level))
+        .field("msg", Val::from(msg))
+        .emit();
+    flush_current_thread();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // trace state is process-global; serialize the tests that install sinks
+    fn guard() -> crate::sync::MutexGuard<'static, ()> {
+        static G: OnceLock<Mutex<()>> = OnceLock::new();
+        G.get_or_init(|| Mutex::named((), "obs.test")).lock()
+    }
+
+    #[test]
+    fn disabled_gate_emits_nothing() {
+        let _g = guard();
+        assert!(!enabled());
+        crate::obs_trace!("never", x = 1u64);
+        install_memory();
+        let lines = finish().expect("finish").expect("memory sink");
+        assert!(lines.iter().all(|l| !l.contains("\"never\"")));
+    }
+
+    #[test]
+    fn events_roundtrip_through_memory_sink() {
+        let _g = guard();
+        install_memory();
+        crate::obs_trace!("unit_ev", sid = 7u64, codec = "f32", drift = 0.5f64);
+        flush_current_thread();
+        let lines = finish().expect("finish").expect("memory sink");
+        let ours: Vec<&String> =
+            lines.iter().filter(|l| l.contains("\"unit_ev\"")).collect();
+        assert_eq!(ours.len(), 1);
+        let j = Json::parse(ours[0]).expect("event line parses");
+        assert_eq!(j.get("ev").and_then(|v| v.as_str()), Some("unit_ev"));
+        assert_eq!(j.get("sid").and_then(|v| v.as_f64()), Some(7.0));
+        assert_eq!(j.get("codec").and_then(|v| v.as_str()), Some("f32"));
+        assert_eq!(j.get("drift").and_then(|v| v.as_f64()), Some(0.5));
+        assert!(j.get("ts_us").and_then(|v| v.as_f64()).is_some());
+        assert!(j.get("tid").and_then(|v| v.as_f64()).is_some());
+        assert!(!enabled());
+    }
+
+    #[test]
+    fn emit_log_lands_in_timeline_only_when_enabled() {
+        let _g = guard();
+        emit_log("warn", "dropped before install");
+        install_memory();
+        emit_log("warn", "hello from the logger");
+        let lines = finish().expect("finish").expect("memory sink");
+        let logs: Vec<&String> = lines.iter().filter(|l| l.contains("\"log\"")).collect();
+        assert_eq!(logs.len(), 1);
+        assert!(logs[0].contains("hello from the logger"));
+        assert!(!logs[0].contains("dropped before install"));
+    }
+
+    #[test]
+    fn buffer_flushes_at_batch_boundary() {
+        let _g = guard();
+        install_memory();
+        for i in 0..(FLUSH_AT + 3) {
+            crate::obs_trace!("batch_ev", i = i);
+        }
+        let lines = finish().expect("finish").expect("memory sink");
+        let n = lines.iter().filter(|l| l.contains("\"batch_ev\"")).count();
+        assert_eq!(n, FLUSH_AT + 3);
+    }
+}

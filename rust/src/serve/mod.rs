@@ -66,7 +66,7 @@
 //!   failing; its partial bill is included in the sum. A rejected job
 //!   never touched the cluster and bills nothing.
 
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, VecDeque};
 use std::time::{Duration, Instant};
 
 use anyhow::{ensure, Result};
@@ -74,6 +74,7 @@ use anyhow::{ensure, Result};
 use crate::cluster::{Cluster, CommStats};
 use crate::coordinator::Algorithm;
 use crate::sync::{Condvar, Mutex};
+use crate::util::json::Json;
 use crate::util::stats::Summary;
 
 /// Priority class of a job. Dispatch is strict across classes —
@@ -307,6 +308,82 @@ impl ServeReport {
     pub fn rejected(&self) -> usize {
         self.jobs.iter().filter(|j| j.rejected.is_some()).count()
     }
+
+    /// Rejected-job counts per [`RejectReason`] kind:
+    /// `(queue_full, rate_limited)`.
+    pub fn rejected_by_reason(&self) -> (usize, usize) {
+        let mut queue_full = 0usize;
+        let mut rate_limited = 0usize;
+        for j in &self.jobs {
+            match &j.rejected {
+                Some(RejectReason::QueueFull { .. }) => queue_full += 1,
+                Some(RejectReason::RateLimited { .. }) => rate_limited += 1,
+                None => {}
+            }
+        }
+        (queue_full, rate_limited)
+    }
+
+    /// Machine-readable batch report: per-job rows (submission order),
+    /// batch metrics, per-QoS latency summaries, and rejected-job
+    /// counts broken out per [`RejectReason`].
+    pub fn to_json(&self) -> Json {
+        fn summary_json(s: &Summary) -> Json {
+            let mut o = BTreeMap::new();
+            o.insert("n".to_string(), Json::Num(s.n as f64));
+            o.insert("mean_s".to_string(), Json::Num(s.mean));
+            o.insert("p50_s".to_string(), Json::Num(s.median));
+            o.insert("p95_s".to_string(), Json::Num(s.p95));
+            Json::Obj(o)
+        }
+        let jobs: Vec<Json> = self
+            .jobs
+            .iter()
+            .map(|j| {
+                let mut o = BTreeMap::new();
+                o.insert("name".to_string(), Json::Str(j.name.clone()));
+                o.insert("alg".to_string(), Json::Str(j.alg.to_string()));
+                o.insert("tenant".to_string(), Json::Str(j.tenant.clone()));
+                o.insert("qos".to_string(), Json::Str(j.qos.label().to_string()));
+                o.insert("ok".to_string(), Json::Bool(j.succeeded()));
+                o.insert("rounds".to_string(), Json::Num(j.comm.rounds as f64));
+                o.insert("bytes".to_string(), Json::Num(j.comm.bytes as f64));
+                o.insert("wall_s".to_string(), Json::Num(j.wall.as_secs_f64()));
+                o.insert("latency_s".to_string(), Json::Num(j.latency.as_secs_f64()));
+                if let Some(e) = &j.error {
+                    o.insert("error".to_string(), Json::Str(e.clone()));
+                }
+                if let Some(r) = &j.rejected {
+                    o.insert("rejected".to_string(), Json::Str(r.to_string()));
+                }
+                Json::Obj(o)
+            })
+            .collect();
+        let (queue_full, rate_limited) = self.rejected_by_reason();
+        let mut rejects = BTreeMap::new();
+        rejects.insert("total".to_string(), Json::Num(self.rejected() as f64));
+        rejects.insert("queue_full".to_string(), Json::Num(queue_full as f64));
+        rejects.insert("rate_limited".to_string(), Json::Num(rate_limited as f64));
+        let mut latency = BTreeMap::new();
+        if let Some(s) = self.latency_summary(None) {
+            latency.insert("overall".to_string(), summary_json(&s));
+        }
+        for qos in QosClass::ALL {
+            if let Some(s) = self.latency_summary(Some(qos)) {
+                latency.insert(qos.label().to_string(), summary_json(&s));
+            }
+        }
+        let mut top = BTreeMap::new();
+        top.insert("jobs".to_string(), Json::Arr(jobs));
+        top.insert("wall_s".to_string(), Json::Num(self.wall.as_secs_f64()));
+        top.insert("throughput_jobs_per_s".to_string(), Json::Num(self.throughput));
+        top.insert("mean_latency_s".to_string(), Json::Num(self.mean_latency_s()));
+        top.insert("accounting_exact".to_string(), Json::Bool(self.accounting_exact));
+        top.insert("aggregate_bytes".to_string(), Json::Num(self.aggregate.bytes as f64));
+        top.insert("rejects".to_string(), Json::Obj(rejects));
+        top.insert("latency".to_string(), Json::Obj(latency));
+        Json::Obj(top)
+    }
 }
 
 /// One tenant's scheduling lane: FIFO subqueues per QoS class plus the
@@ -363,6 +440,18 @@ impl Sched {
                     lane.inflight += 1;
                     lane.vtime += 1.0 / lane.weight as f64;
                     self.pending -= 1;
+                    crate::obs_gauge!(SERVE_QUEUE_DEPTH, self.pending as u64);
+                    // fairness telemetry: spread between the fastest and
+                    // slowest lane's virtual clock at this dispatch
+                    let mut lo = f64::INFINITY;
+                    let mut hi = 0.0f64;
+                    for l in &self.lanes {
+                        lo = lo.min(l.vtime);
+                        hi = hi.max(l.vtime);
+                    }
+                    if lo.is_finite() {
+                        crate::obs_gauge!(SERVE_VTIME_LAG_X1000, ((hi - lo) * 1000.0) as u64);
+                    }
                     return Some((li, idx, job));
                 }
             }
@@ -423,6 +512,17 @@ pub fn serve_with(
             })
         };
         if let Some(reason) = reject {
+            match job.qos {
+                QosClass::Interactive => crate::obs_inc!(SERVE_REJECTS_INTERACTIVE_TOTAL),
+                QosClass::Standard => crate::obs_inc!(SERVE_REJECTS_STANDARD_TOTAL),
+                QosClass::Batch => crate::obs_inc!(SERVE_REJECTS_BATCH_TOTAL),
+            }
+            crate::obs_trace!(
+                "reject",
+                tenant = job.tenant.as_str(),
+                qos = job.qos.label(),
+                reason = reason.to_string()
+            );
             rejects.push((
                 idx,
                 JobReport {
@@ -461,6 +561,7 @@ pub fn serve_with(
         lane.queues[class].push_back((idx, job));
         sched.pending += 1;
     }
+    crate::obs_gauge!(SERVE_QUEUE_DEPTH, sched.pending as u64);
 
     let queue: Mutex<Sched> = Mutex::named(sched, "serve.queue");
     let queue_cv = Condvar::new();
@@ -479,6 +580,7 @@ pub fn serve_with(
                                 // queued work exists but every tenant
                                 // with queued jobs is at its rate cap —
                                 // wait for a completion to free a slot
+                                crate::obs_inc!(SERVE_RATE_LIMIT_WAITS_TOTAL);
                                 let (guard, _) =
                                     queue_cv.wait_timeout(st, Duration::from_millis(50));
                                 st = guard;
@@ -488,6 +590,9 @@ pub fn serve_with(
                 };
                 let alg_name = job.alg.name();
                 let session = cluster.session();
+                // observability only: the tenant name groups this
+                // session's rounds in the trace timeline
+                session.set_trace_label(&job.tenant);
                 let t_run = Instant::now();
                 let outcome = job.alg.run(&session);
                 // close() rather than a stats() snapshot + drop: closing
@@ -816,6 +921,71 @@ mod tests {
         assert_eq!(report.jobs.len(), 5);
         assert!(report.jobs.iter().all(|j| j.succeeded()), "rate cap must not lose work");
         assert!(report.accounting_exact);
+    }
+
+    #[test]
+    fn empty_batch_latency_metrics_are_defined_not_nan() {
+        let c = small_cluster(2, 30, 6, 12);
+        let report = serve(&c, Vec::new(), 2).unwrap();
+        assert!(report.jobs.is_empty());
+        assert_eq!(report.mean_latency_s(), 0.0, "no jobs ran: mean is 0, never NaN");
+        assert!(report.mean_latency_s().is_finite());
+        assert!(report.latency_summary(None).is_none(), "no samples: None, not a panic");
+        for qos in QosClass::ALL {
+            assert!(report.latency_summary(Some(qos)).is_none());
+        }
+        assert!(report.throughput.is_finite());
+        let j = report.to_json();
+        assert!(!j.to_string().contains("NaN"), "JSON must stay parseable: {j}");
+    }
+
+    #[test]
+    fn all_rejected_batch_latency_metrics_are_defined_not_nan() {
+        let c = small_cluster(2, 30, 6, 13);
+        let jobs = vec![
+            Job::new("r1", Box::new(SignFixedAverage)),
+            Job::new("r2", Box::new(SignFixedAverage)).with_qos(QosClass::Interactive),
+        ];
+        let policy = ServePolicy { queue_depth: Some(0), ..Default::default() };
+        let report = serve_with(&c, jobs, 2, &policy).unwrap();
+        assert_eq!(report.rejected(), 2, "queue depth 0 rejects everything");
+        assert_eq!(report.mean_latency_s(), 0.0, "no completed jobs: 0, never NaN");
+        assert!(report.latency_summary(None).is_none());
+        assert!(report.latency_summary(Some(QosClass::Interactive)).is_none());
+        assert!(report.throughput.is_finite());
+        assert_eq!(report.bills_sum, CommStats::default());
+    }
+
+    #[test]
+    fn report_json_breaks_rejects_out_per_reason() {
+        let c = small_cluster(2, 30, 6, 14);
+        let jobs = vec![
+            Job::new("n1", Box::new(SignFixedAverage)).with_tenant("noisy"),
+            Job::new("n2", Box::new(SignFixedAverage)).with_tenant("noisy"),
+            Job::new("q1", Box::new(SignFixedAverage)).with_tenant("quiet"),
+            Job::new("q2", Box::new(SignFixedAverage)).with_tenant("quiet"),
+        ];
+        // Admission in submission order: n1 admitted, n2 rate-limited
+        // (noisy cap 1), q1 admitted, q2 queue-full (depth 2).
+        let policy = ServePolicy {
+            queue_depth: Some(2),
+            max_admitted: vec![("noisy".to_string(), 1)],
+            ..Default::default()
+        };
+        let report = serve_with(&c, jobs, 2, &policy).unwrap();
+        assert_eq!(report.rejected_by_reason(), (1, 1), "one per reason: {:?}", {
+            report.jobs.iter().map(|j| j.rejected.clone()).collect::<Vec<_>>()
+        });
+        let j = report.to_json();
+        let text = j.to_string();
+        let back = crate::util::json::Json::parse(&text).expect("report JSON parses");
+        let rejects = back.get("rejects").expect("rejects object");
+        assert_eq!(rejects.get("total").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(rejects.get("queue_full").and_then(|v| v.as_f64()), Some(1.0));
+        assert_eq!(rejects.get("rate_limited").and_then(|v| v.as_f64()), Some(1.0));
+        let jobs_arr = back.get("jobs").and_then(|a| a.as_arr()).expect("jobs array");
+        assert_eq!(jobs_arr.len(), 4, "rejected jobs stay in the JSON report");
+        assert!(back.get("latency").and_then(|l| l.get("overall")).is_some());
     }
 
     #[test]

@@ -296,6 +296,7 @@ pub(crate) fn write_all_deadline(
             Ok(n) => buf = &buf[n..],
             Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                crate::obs_inc!(TCP_WRITE_RETRIES_TOTAL);
                 if std::time::Instant::now() >= deadline {
                     return Err(io::Error::new(
                         io::ErrorKind::TimedOut,

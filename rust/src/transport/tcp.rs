@@ -345,34 +345,60 @@ impl TcpTransport {
         for (i, shard) in shards.into_iter().enumerate() {
             let addr = &addrs[i];
             let wseed = seeder.next_u64();
-            let mut stream = TcpStream::connect(addr)
-                .with_context(|| format!("worker {i}: cannot connect to {addr}"))?;
-            let _ = stream.set_nodelay(true);
-            let _ = stream.set_write_timeout(Some(io_timeout));
-            let _ = stream.set_read_timeout(Some(io_timeout));
-            write_frame(&mut stream, &encode_init(i, wseed, oracle, &shard))
-                .with_context(|| format!("worker {i} at {addr}: shipping shard failed"))?;
-            let ack = read_frame(&mut stream).with_context(|| {
-                format!(
-                    "worker {i} at {addr}: no handshake ack \
-                     (is `dspca worker --listen {addr}` running?)"
-                )
-            })?;
-            decode_ack(&ack, i).with_context(|| format!("worker {i} at {addr}: bad handshake"))?;
-            let _ = stream.set_read_timeout(None);
-            let reader_stream = stream
-                .try_clone()
-                .with_context(|| format!("worker {i} at {addr}: cloning socket"))?;
-            // this flips the shared file description non-blocking:
-            // reactor reads AND leader writes — which is why the send
-            // path uses the deadline-bounded write loop from here on
-            reader_stream
-                .set_nonblocking(true)
-                .with_context(|| format!("worker {i} at {addr}: setting non-blocking"))?;
-            reads.push(PeerRead { worker: i, stream: reader_stream, buf: Vec::new() });
-            peers.push(Peer { addr: addr.clone(), stream });
+            match Self::connect_one(i, addr, wseed, oracle, &shard, io_timeout) {
+                Ok((peer, read)) => {
+                    crate::obs_inc!(TCP_HANDSHAKES_OK_TOTAL);
+                    reads.push(read);
+                    peers.push(peer);
+                }
+                Err(e) => {
+                    crate::obs_inc!(TCP_HANDSHAKES_FAILED_TOTAL);
+                    return Err(e);
+                }
+            }
         }
         Ok(())
+    }
+
+    /// Connect to one worker and run the `Init` handshake: ship the
+    /// shard, wait for the ack, then split the socket into a blocking
+    /// write half and a non-blocking reactor read half.
+    fn connect_one(
+        i: usize,
+        addr: &str,
+        wseed: u64,
+        oracle: &OracleSpec,
+        shard: &Shard,
+        io_timeout: Duration,
+    ) -> Result<(Peer, PeerRead)> {
+        let mut stream = TcpStream::connect(addr)
+            .with_context(|| format!("worker {i}: cannot connect to {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_write_timeout(Some(io_timeout));
+        let _ = stream.set_read_timeout(Some(io_timeout));
+        write_frame(&mut stream, &encode_init(i, wseed, oracle, shard))
+            .with_context(|| format!("worker {i} at {addr}: shipping shard failed"))?;
+        let ack = read_frame(&mut stream).with_context(|| {
+            format!(
+                "worker {i} at {addr}: no handshake ack \
+                 (is `dspca worker --listen {addr}` running?)"
+            )
+        })?;
+        decode_ack(&ack, i).with_context(|| format!("worker {i} at {addr}: bad handshake"))?;
+        let _ = stream.set_read_timeout(None);
+        let reader_stream = stream
+            .try_clone()
+            .with_context(|| format!("worker {i} at {addr}: cloning socket"))?;
+        // this flips the shared file description non-blocking:
+        // reactor reads AND leader writes — which is why the send
+        // path uses the deadline-bounded write loop from here on
+        reader_stream
+            .set_nonblocking(true)
+            .with_context(|| format!("worker {i} at {addr}: setting non-blocking"))?;
+        Ok((
+            Peer { addr: addr.to_string(), stream },
+            PeerRead { worker: i, stream: reader_stream, buf: Vec::new() },
+        ))
     }
 }
 
@@ -402,6 +428,7 @@ fn reactor_loop(mut peers: Vec<PeerRead>, tx: mpsc::Sender<ReplyFrame>, stop: Ar
     let mut scratch = vec![0u8; 64 << 10];
     let mut idle = REACTOR_IDLE_MIN;
     while !stop.load(Ordering::Relaxed) && !peers.is_empty() {
+        crate::obs_inc!(TCP_REACTOR_SWEEPS_TOTAL);
         let mut moved = false;
         let mut router_gone = false;
         peers.retain_mut(|p| match pump_peer(p, &mut scratch, &tx) {
@@ -428,6 +455,9 @@ fn reactor_loop(mut peers: Vec<PeerRead>, tx: mpsc::Sender<ReplyFrame>, stop: Ar
             std::thread::sleep(idle);
             idle = (idle * 2).min(REACTOR_IDLE_MAX);
         }
+        // the gauge tracks where on the MIN..MAX ladder the reactor
+        // currently sits — a busy wire reads 50, a quiet one 1000
+        crate::obs_gauge!(TCP_REACTOR_IDLE_US, idle.as_micros() as u64);
     }
 }
 
@@ -443,6 +473,10 @@ fn pump_peer(p: &mut PeerRead, scratch: &mut [u8], tx: &mpsc::Sender<ReplyFrame>
             p.buf.extend_from_slice(&scratch[..n]);
             loop {
                 if p.buf.len() < 4 {
+                    if !p.buf.is_empty() {
+                        // a torn length prefix waits for the next read
+                        crate::obs_inc!(TCP_REASSEMBLY_STALLS_TOTAL);
+                    }
                     return Pump::Progress;
                 }
                 let len =
@@ -456,6 +490,9 @@ fn pump_peer(p: &mut PeerRead, scratch: &mut [u8], tx: &mpsc::Sender<ReplyFrame>
                     return Pump::Gone;
                 }
                 if p.buf.len() < 4 + len {
+                    // partial frame left in this peer's reassembly
+                    // buffer — completed on a later sweep
+                    crate::obs_inc!(TCP_REASSEMBLY_STALLS_TOTAL);
                     return Pump::Progress;
                 }
                 match decode_response(&p.buf[4..4 + len]) {

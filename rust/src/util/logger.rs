@@ -1,6 +1,13 @@
 //! Env-driven logger: `DSPCA_LOG=debug|info|warn|off` (default `info`).
 //! The offline image has no `log`/`env_logger` facade wiring worth
 //! pulling in; this covers what the launcher and experiments need.
+//!
+//! Unknown `DSPCA_LOG` values fall back to `info`, but loudly: a
+//! one-time stderr warning names the accepted values, so a typo like
+//! `DSPCA_LOG=trace` is visible instead of silently ignored. When the
+//! trace sink is active ([`crate::obs::trace`]), every emitted line is
+//! mirrored as a `"log"` event so operator messages land on the same
+//! timeline as the rounds they annotate.
 
 use std::sync::OnceLock;
 use std::time::Instant;
@@ -16,19 +23,40 @@ pub enum Level {
 static LEVEL: OnceLock<Level> = OnceLock::new();
 static START: OnceLock<Instant> = OnceLock::new();
 
+/// Parse a `DSPCA_LOG` value. `Err(())` means "not an accepted value".
+fn parse_level(s: &str) -> Result<Level, ()> {
+    match s {
+        "off" => Ok(Level::Off),
+        "warn" => Ok(Level::Warn),
+        "info" => Ok(Level::Info),
+        "debug" => Ok(Level::Debug),
+        _ => Err(()),
+    }
+}
+
 pub fn level() -> Level {
     *LEVEL.get_or_init(|| match std::env::var("DSPCA_LOG").as_deref() {
-        Ok("off") => Level::Off,
-        Ok("warn") => Level::Warn,
-        Ok("debug") => Level::Debug,
-        _ => Level::Info,
+        Ok(raw) => parse_level(raw).unwrap_or_else(|()| {
+            // once: LEVEL is a OnceLock, so this init closure runs at
+            // most one time per process
+            eprintln!(
+                "[dspca] unknown DSPCA_LOG value {raw:?}; falling back to \"info\" \
+                 (accepted: off, warn, info, debug)"
+            );
+            Level::Info
+        }),
+        Err(_) => Level::Info,
     })
 }
 
 pub fn log(lvl: Level, msg: std::fmt::Arguments<'_>) {
     if lvl <= level() && level() != Level::Off {
         let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
-        eprintln!("[{t:9.3}s {}] {msg}", tag(lvl));
+        let tag = tag(lvl);
+        eprintln!("[{t:9.3}s {tag}] {msg}");
+        if crate::obs::trace::enabled() {
+            crate::obs::trace::emit_log(tag.trim_end(), &msg.to_string());
+        }
     }
 }
 
@@ -71,6 +99,17 @@ mod tests {
         assert!(Level::Warn < Level::Info);
         assert!(Level::Info < Level::Debug);
         assert!(Level::Off < Level::Warn);
+    }
+
+    #[test]
+    fn parse_level_accepts_documented_values_only() {
+        assert_eq!(parse_level("off"), Ok(Level::Off));
+        assert_eq!(parse_level("warn"), Ok(Level::Warn));
+        assert_eq!(parse_level("info"), Ok(Level::Info));
+        assert_eq!(parse_level("debug"), Ok(Level::Debug));
+        assert_eq!(parse_level("trace"), Err(()));
+        assert_eq!(parse_level("INFO"), Err(()));
+        assert_eq!(parse_level(""), Err(()));
     }
 
     #[test]

@@ -240,6 +240,102 @@ fn reactor_serves_64_peers_with_one_reader_thread() {
     println!("reactor gate:\n{}", table.render());
 }
 
+/// ISSUE 9 acceptance: observation is bill-invariant. The flight
+/// recorder's metrics are always on, so every billing assertion in this
+/// file already runs with them; this property closes the remaining gap
+/// by flipping **tracing** on and proving that, for random codec ×
+/// backend × tenant-thread-count, every session's bill and every
+/// collective's numerics are bit-identical to the untraced run — and
+/// that the captured trace passes the Σ-traced-bytes == bill
+/// cross-check for each of our sessions. (The cross-check is scoped to
+/// our own sids: the sink is process-global, so sessions belonging to
+/// concurrently-running tests may appear in the capture mid-flight.)
+#[test]
+fn prop_observability_leaves_every_bill_and_estimate_bit_identical() {
+    propcheck(Config::default().cases(cases(6)), "obs bill invariance", |g| {
+        let m = g.usize_in(2, 3);
+        let n = g.usize_in(8, 20);
+        let d = g.usize_in(3, 8);
+        let threads = g.usize_in(1, 3);
+        let seed = g.rng().next_u64();
+        let prec =
+            [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16][g.usize_in(0, 2)];
+        let tcp = g.bool();
+        let dist = CovModel::paper_fig1(d, 13).gaussian();
+        let v = g.gaussian_vec(d);
+
+        // one run = `threads` tenants on a fresh cluster, each closing
+        // its own session; returns per-tenant (bill, result, sid) in
+        // thread order plus the captured trace when tracing was on
+        let run_once = |traced: bool| {
+            let workers = if tcp { Some(LoopbackWorkers::spawn(m, 1).unwrap()) } else { None };
+            let spec = workers.as_ref().map_or(TransportSpec::InProc, |w| w.spec());
+            let cluster =
+                Cluster::generate_on(&dist, m, n, seed, OracleSpec::Native, &spec).unwrap();
+            if traced {
+                dspca::obs::trace::install_memory();
+            }
+            let per_tenant: Vec<(CommStats, Vec<f64>, u64)> = std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|i| {
+                        let cluster = &cluster;
+                        let v = &v;
+                        scope.spawn(move || {
+                            let s = cluster.session();
+                            s.set_trace_label(&format!("prop-tenant-{i}"));
+                            s.set_codec(WireCodec::new(prec));
+                            let x = s.dist_matvec(v).unwrap();
+                            s.gram_average().unwrap();
+                            let sid = s.sid();
+                            (s.close(), x, sid)
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            drop(cluster);
+            if let Some(w) = workers {
+                w.join().unwrap();
+            }
+            let lines = if traced { dspca::obs::trace::finish().unwrap() } else { None };
+            (per_tenant, lines)
+        };
+
+        let (plain, no_lines) = run_once(false);
+        let (traced, lines) = run_once(true);
+        assert!(no_lines.is_none());
+        for (i, ((pb, px, _), (tb, tx, _))) in plain.iter().zip(&traced).enumerate() {
+            assert_eq!(
+                tb, pb,
+                "tenant {i} under {prec:?}/tcp={tcp}/threads={threads}: traced bill != plain"
+            );
+            assert_eq!(
+                tx, px,
+                "tenant {i} under {prec:?}/tcp={tcp}/threads={threads}: traced result != plain"
+            );
+        }
+        // and the capture itself is a faithful mirror of our bills
+        let lines = lines.expect("traced run must return the memory capture");
+        let rep = dspca::obs::report::parse_lines(lines.iter().map(String::as_str)).unwrap();
+        for (_, _, sid) in &traced {
+            let row = rep
+                .sessions
+                .iter()
+                .find(|r| r.sid == *sid)
+                .unwrap_or_else(|| panic!("session {sid} missing from the trace"));
+            assert_eq!(
+                row.check(),
+                Some(true),
+                "session {sid}: traced {}B/{}r vs billed {:?}B/{:?}r",
+                row.traced_bytes,
+                row.traced_rounds,
+                row.bill_bytes,
+                row.bill_rounds
+            );
+        }
+    });
+}
+
 /// E11 fusion acceptance (ISSUE 8): 8 concurrent power-method tenants,
 /// unfused-overlapped vs fused. Bills == solo, Σ == aggregate, and the
 /// every-round fusion-engagement counters are `ensure!`d inside the

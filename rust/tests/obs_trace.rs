@@ -1,0 +1,165 @@
+//! ISSUE 9 acceptance: the trace is a correctness oracle for the bill.
+//!
+//! Runs a multi-tenant workload over real TCP loopback sockets with the
+//! in-memory trace sink installed, then proves — twice, once through
+//! `obs::report::crosscheck` and once by independently re-summing the
+//! raw JSONL — that Σ traced bytes per session equals that session's
+//! closing `CommStats` bill, and that the Chrome export of the same
+//! lines passes the in-tree schema validator.
+//!
+//! One `#[test]` on purpose: the trace sink is process-global, and the
+//! harness runs a binary's tests concurrently — a second test
+//! installing a sink would race this one's capture.
+
+use dspca::cluster::{Cluster, CommStats, OracleSpec, WireCodec, WirePrecision};
+use dspca::coordinator::{DistributedPower, QuantizedPower};
+use dspca::data::CovModel;
+use dspca::obs::{report, trace};
+use dspca::serve::{serve, Job};
+use dspca::transport::LoopbackWorkers;
+use dspca::util::json::Json;
+
+#[test]
+fn traced_bytes_mirror_every_closed_sessions_bill_over_tcp() {
+    let (d, m, n, seed) = (10usize, 3usize, 80usize, 0x0b5u64);
+    let dist = CovModel::paper_fig1(d, 5).gaussian();
+
+    trace::install_memory();
+    let workers = LoopbackWorkers::spawn(m, 1).unwrap();
+    let cluster =
+        Cluster::generate_on(&dist, m, n, seed, OracleSpec::Native, &workers.spec()).unwrap();
+
+    // tenant 1: a directly-driven session with a lossy codec and an
+    // explicit timeline label
+    let s = cluster.session();
+    s.set_trace_label("direct-bf16");
+    s.set_codec(WireCodec::new(WirePrecision::Bf16));
+    let v = dspca::rng::Pcg64::new(9).gaussian_vec(d);
+    s.dist_matvec(&v).unwrap();
+    s.gram_average().unwrap();
+    let direct_sid = s.sid();
+    let direct_bill = s.close();
+    assert!(direct_bill.bytes > 0 && direct_bill.rounds > 0);
+
+    // tenants 2 and 3: concurrent jobs through the scheduler, which
+    // labels and closes their sessions itself
+    let served = serve(
+        &cluster,
+        vec![
+            Job::new("lossless-power", Box::new(DistributedPower::default())),
+            Job::new("bf16-power", Box::new(QuantizedPower::new(WirePrecision::Bf16))),
+        ],
+        2,
+    )
+    .unwrap();
+    for j in &served.jobs {
+        assert!(j.succeeded(), "{}: {:?}", j.name, j.error);
+    }
+
+    // tenants 4 and 5: barrier-synced rounds with round fusion on, so
+    // the wire ships stacked carriers while each member is billed (and
+    // traced) exactly its solo bytes — the acceptance shape: the
+    // cross-check on a multi-tenant *fused* TCP run
+    assert_eq!(cluster.fusion_counters(), (0, 0));
+    cluster.enable_fusion(std::time::Duration::from_millis(500), 2).unwrap();
+    let barrier = std::sync::Barrier::new(2);
+    let fused: Vec<(u64, CommStats)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..2)
+            .map(|i| {
+                let (cluster, barrier, v) = (&cluster, &barrier, &v);
+                scope.spawn(move || {
+                    let s = cluster.session();
+                    s.set_trace_label(&format!("fused-tenant-{i}"));
+                    for _ in 0..3 {
+                        // per-iteration sync keeps every 2-column batch full
+                        barrier.wait();
+                        s.dist_matvec(v).unwrap();
+                    }
+                    (s.sid(), s.close())
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(cluster.fusion_counters(), (3, 6), "every round must have fused");
+    assert_eq!(fused[0].1, fused[1].1, "identical fused workloads, identical bills");
+    assert!(fused[0].1.bytes > 0);
+
+    // every emitting thread must be gone before finish(): scheduler
+    // threads exited inside serve(), the reactor exits with the
+    // cluster, the worker threads with join()
+    drop(cluster);
+    workers.join().unwrap();
+    let lines = trace::finish().unwrap().expect("memory sink returns captured lines");
+    assert!(!lines.is_empty(), "the run must have produced trace events");
+
+    // oracle #1: the report's own cross-check over all closed sessions
+    let rep = report::parse_lines(lines.iter().map(String::as_str)).unwrap();
+    let checked = rep.crosscheck().unwrap();
+    assert!(checked >= 5, "5 sessions closed, {checked} cross-checked");
+
+    // the fused tenants' rows specifically must carry fused_submit
+    // bytes that reproduce their bills
+    for (sid, bill) in &fused {
+        let row = rep.sessions.iter().find(|r| r.sid == *sid).expect("fused session row");
+        assert_eq!(row.check(), Some(true), "fused session {sid} mismatched");
+        assert_eq!(row.traced_bytes, bill.bytes);
+        assert_eq!(row.traced_rounds, bill.rounds);
+    }
+
+    // oracle #2: re-sum the raw JSONL for the direct session without
+    // going through TraceReport, and compare against the bill returned
+    // by close() — two independently-plumbed ledgers, one total
+    let (mut sum_bytes, mut sum_rounds) = (0u64, 0u64);
+    let mut billed: Option<(u64, u64)> = None;
+    for line in &lines {
+        let j = Json::parse(line).unwrap();
+        if j.get("sid").and_then(|v| v.as_f64()).map(|v| v as u64) != Some(direct_sid) {
+            continue;
+        }
+        let ev = j.get("ev").and_then(|v| v.as_str()).unwrap();
+        let bytes = j.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        match ev {
+            "submit" | "fused_submit" => {
+                sum_bytes += bytes;
+                if bytes > 0 {
+                    sum_rounds += 1;
+                }
+            }
+            "reply" => sum_bytes += bytes,
+            "session_bill" => {
+                let rounds =
+                    j.get("rounds").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                billed = Some((bytes, rounds));
+            }
+            _ => {}
+        }
+    }
+    assert_eq!(billed, Some((direct_bill.bytes, direct_bill.rounds)));
+    assert_eq!(sum_bytes, direct_bill.bytes, "sigma traced bytes == CommStats.bytes");
+    assert_eq!(sum_rounds, direct_bill.rounds, "sigma traced rounds == CommStats.rounds");
+
+    // the serve tenants' bills appear verbatim as their session_bill events
+    for job in &served.jobs {
+        let found = lines.iter().any(|l| {
+            let j = Json::parse(l).unwrap();
+            j.get("ev").and_then(|v| v.as_str()) == Some("session_bill")
+                && j.get("bytes").and_then(|v| v.as_f64()) == Some(job.comm.bytes as f64)
+                && j.get("rounds").and_then(|v| v.as_f64()) == Some(job.comm.rounds as f64)
+        });
+        assert!(found, "{}: bill {:?} missing from the trace", job.name, job.comm);
+    }
+
+    // the rendered timeline names the labeled tenant and prints the verdict
+    let text = rep.render();
+    assert!(text.contains("direct-bf16"), "timeline must name the tenant:\n{text}");
+    assert!(text.contains("cross-check:"), "footer missing:\n{text}");
+    assert!(!text.contains("MISMATCH"), "no session may mismatch:\n{text}");
+
+    // the Chrome export of the same lines is schema-valid and non-empty
+    let chrome = report::chrome_export(lines.iter().map(String::as_str)).unwrap();
+    report::validate_chrome(&chrome).unwrap();
+    let n_events =
+        chrome.get("traceEvents").and_then(|e| e.as_arr()).map(Vec::len).unwrap_or(0);
+    assert!(n_events > 0, "chrome export must carry the run's events");
+}
