@@ -1,40 +1,62 @@
 //! E10 bench — the wire layer: codec encode/decode throughput per
-//! precision, collective round-trip latency under each codec, plus the
-//! full error-vs-bytes sweep at reduced size.
+//! format (plain widths, low-bit quantizers, top-s sparsifier),
+//! collective round-trip latency under each codec including the
+//! stateful error-feedback streams, plus the full error-vs-bytes sweep
+//! at reduced size.
 
 use dspca::bench_harness::{fast_mode, scaled, Bencher};
-use dspca::cluster::{Cluster, OracleSpec, WireCodec};
+use dspca::cluster::{Cluster, OracleSpec, QuantBits, WireCodec, WireFormat, WirePrecision};
 use dspca::data::CovModel;
-use dspca::experiments::wire::{run, WireConfig, PRECISIONS};
+use dspca::experiments::wire::{run, WireConfig};
 
 fn main() -> anyhow::Result<()> {
     let mut b = Bencher::new();
 
-    // codec microbench: transcode (encode + decode + writeback) of a
-    // payload — the per-message overhead the wire layer adds
+    // format microbench: the in-place quantize (encode→decode loss
+    // without frame materialization) of a payload — the per-message CPU
+    // tax each frame format adds
     let len = if fast_mode() { 1024 } else { 8192 };
     let mut rng = dspca::rng::Pcg64::new(3);
     let payload = rng.gaussian_vec(len);
-    for prec in PRECISIONS {
-        let codec = WireCodec::new(prec);
+    let formats = [
+        WireFormat::Plain(WirePrecision::F64),
+        WireFormat::Plain(WirePrecision::F32),
+        WireFormat::Plain(WirePrecision::Bf16),
+        WireFormat::Quant(QuantBits::Q8),
+        WireFormat::Quant(QuantBits::Q4),
+        WireFormat::TopS { s: 32, bits: QuantBits::Q8 },
+    ];
+    for format in formats {
         let mut buf = payload.clone();
-        b.bench(&format!("codec/transcode/{}/{len}", prec.label()), || {
+        b.bench(&format!("codec/transcode/{}/{len}", format.label()), || {
             buf.copy_from_slice(&payload);
-            codec.transcode(&mut buf)
+            format.quantize(&mut buf, 1)
         });
     }
 
     // collective latency under each codec: the quantization tax on a
-    // full leader->workers->leader round
+    // full leader->workers->leader round — the +ef rows also pay the
+    // leader- and worker-side residual accumulators every round
     let (d, m, n) = if fast_mode() { (32usize, 4usize, 100usize) } else { (64, 8, 400) };
     let dist = CovModel::paper_fig1(d, 7).gaussian();
     let cluster = Cluster::generate_with(&dist, m, n, 11, OracleSpec::Native)?;
     let session = cluster.session();
     let v = rng.gaussian_vec(d);
     let _ = session.dist_matvec(&v)?; // warm
-    for prec in PRECISIONS {
-        session.set_codec(WireCodec::new(prec));
-        b.bench(&format!("dist_matvec/{}/m={m}/{n}x{d}", prec.label()), || {
+    let sweep = [
+        WireCodec::lossless(),
+        WireCodec::new(WirePrecision::F32),
+        WireCodec::new(WirePrecision::Bf16),
+        WireCodec::quant(QuantBits::Q8),
+        WireCodec::quant(QuantBits::Q4).with_feedback(),
+        WireCodec::top_s(4, QuantBits::Q8).with_feedback(),
+        WireCodec::quant(QuantBits::Q8).with_adaptive(),
+    ];
+    for codec in sweep {
+        // set_codec resets the stream, so each series starts from a
+        // fresh residual — run-to-run comparable
+        session.set_codec(codec);
+        b.bench(&format!("dist_matvec/{}/m={m}/{n}x{d}", codec.label()), || {
             session.dist_matvec(&v).unwrap()
         });
     }

@@ -29,6 +29,15 @@
 //!    Instrumentation sites use the macros, so every metric touch
 //!    stays auditable in one module and the disabled-path cost stays
 //!    a few relaxed atomics.
+//! 7. **`codec-state-mutation`** — the stateful wire-codec stream
+//!    fields (`CodecState`'s error-feedback residual and the adaptive
+//!    controller's bookkeeping) are only ever assigned in
+//!    `cluster/wire.rs` (the codec math) and `cluster/session.rs`
+//!    (the per-session lane). A second writer anywhere else would
+//!    desynchronize the leader's residual trajectory from the
+//!    worker-side `ReplyBank` twin that is rebuilt purely from
+//!    request envelopes — the invariant that lets feedback streams
+//!    work with no handshake.
 //!
 //! The scanner strips `//` and `/* */` comments and skips
 //! `#[cfg(test)] mod` bodies by brace counting. It is deliberately
@@ -86,6 +95,15 @@ const COMMSTATS_FIELDS: [&str; 7] = [
 
 /// Files allowed to increment `CommStats` fields.
 const COMMSTATS_ALLOWED: [&str; 2] = ["cluster/comm.rs", "cluster/session.rs"];
+
+/// The `CodecState` stream fields rule 7 protects (error-feedback
+/// residual + adaptive-controller bookkeeping).
+const CODEC_STATE_FIELDS: [&str; 5] =
+    ["residual", "active_bits", "last_rel", "widenings", "narrowings"];
+
+/// Files allowed to assign codec stream state: the codec math itself
+/// and the session lane that drives it.
+const CODEC_STATE_ALLOWED: [&str; 2] = ["cluster/wire.rs", "cluster/session.rs"];
 
 /// Files allowed to call `std::env::set_var` (the bench harness owns
 /// process-global bench configuration).
@@ -324,6 +342,31 @@ pub fn scan_file(rel: &str, text: &str, findings: &mut Vec<Finding>) {
             }
         }
 
+        // ---- rule 7: codec stream-state mutation containment ----
+        if !CODEC_STATE_ALLOWED.contains(&rel) {
+            for field in CODEC_STATE_FIELDS {
+                // `.field = ` and `.field += ` (the trailing space keeps
+                // `==` comparisons out); method-based mutation is not
+                // chased — the rule pins the convention, tests/lint_clean
+                // pins the heuristic against the real tree
+                let assigned = code.contains(&format!(".{field} = "))
+                    || code.contains(&format!(".{field} += "));
+                if assigned {
+                    findings.push(Finding {
+                        file: rel.to_string(),
+                        line: line_no,
+                        rule: "codec-state-mutation",
+                        message: format!(
+                            "codec stream state `{field}` assigned outside {}: \
+                             a second writer desynchronizes the leader residual \
+                             trajectory from the worker-side ReplyBank twin",
+                            CODEC_STATE_ALLOWED.join(", ")
+                        ),
+                    });
+                }
+            }
+        }
+
         // ---- rule 2: unwrap/expect budget ----
         let panics =
             count_occurrences(&code, UNWRAP_NEEDLE) + count_occurrences(&code, EXPECT_NEEDLE);
@@ -456,6 +499,21 @@ mod tests {
         // the billing layer itself is allowed
         assert!(scan("cluster/session.rs", src).is_empty());
         assert!(scan("cluster/comm.rs", src).is_empty());
+    }
+
+    #[test]
+    fn codec_state_mutation_outside_the_codec_layer_is_flagged() {
+        let src = "fn f(st: &mut CodecState) {\n    st.residual = Vec::new();\n    st.widenings += 1;\n}\n";
+        let f = scan("coordinator/quantized.rs", src);
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().all(|x| x.rule == "codec-state-mutation"));
+        assert_eq!((f[0].line, f[1].line), (2, 3));
+        // the codec math and the session lane are the two legal writers
+        assert!(scan("cluster/wire.rs", src).is_empty());
+        assert!(scan("cluster/session.rs", src).is_empty());
+        // comparisons and method calls are not assignments
+        let ok = "fn g(st: &CodecState) {\n    if st.last_rel == 0.0 { st.residual.len(); }\n}\n";
+        assert!(scan("coordinator/quantized.rs", ok).is_empty());
     }
 
     #[test]

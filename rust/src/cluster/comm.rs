@@ -32,10 +32,17 @@ pub struct CommStats {
     pub responses_received: u64,
     /// Total payload bytes moved, billed from the wire codec's encoded
     /// frames ([`WireCodec`]): 8 bytes per f64 word under the default
-    /// lossless codec, 4 under F32, 2 under Bf16. Broadcast frames are
-    /// billed once regardless of fan-out.
+    /// lossless codec, 4 under F32, 2 under Bf16; the stateful family
+    /// bills its materialized [`WireFormat`] frames — `4·cols + w` for
+    /// q8, `4·cols + ⌈w/2⌉` for q4, and `8 + 4·kept + levels(kept)` for
+    /// top-s sparse frames. Error feedback and the adaptive controller
+    /// change *which* format a round resolves to, never how a format is
+    /// priced, and an adaptive straggler is billed at the width its own
+    /// round shipped. Broadcast frames are billed once regardless of
+    /// fan-out.
     ///
     /// [`WireCodec`]: crate::cluster::WireCodec
+    /// [`WireFormat`]: crate::cluster::WireFormat
     pub bytes: u64,
 }
 

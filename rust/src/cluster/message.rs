@@ -61,6 +61,15 @@ impl Request {
             | Request::Shutdown => None,
         }
     }
+
+    /// Row-major column count of the payload, for scale-per-column wire
+    /// codecs (1 for vector payloads and payload-free variants).
+    pub fn payload_cols(&self) -> usize {
+        match self {
+            Request::CovMatMat { cols, .. } => (*cols).max(1),
+            _ => 1,
+        }
+    }
 }
 
 /// Worker -> leader responses.
@@ -89,6 +98,15 @@ impl Response {
             Response::Vector(v) => Some(v),
             Response::Mat { data, .. } => Some(data),
             Response::Err(_) => None,
+        }
+    }
+
+    /// Row-major column count of the payload, for scale-per-column wire
+    /// codecs (1 for vector payloads and error replies).
+    pub fn payload_cols(&self) -> usize {
+        match self {
+            Response::Mat { cols, .. } => (*cols).max(1),
+            _ => 1,
         }
     }
 }

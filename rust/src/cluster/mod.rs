@@ -64,7 +64,18 @@
 //! | [`Session::gram_average`] | 1 | 0 | live·d² | live / live | B(d²)·live |
 //!
 //! With the default lossless codec `B(w) = 8w` and the table reduces to
-//! the original `8·d·…` accounting verbatim. A broadcast frame is billed
+//! the original `8·d·…` accounting verbatim. The stateful codec family
+//! (ISSUE 10) extends `B(w)` beyond fixed widths — all still pure
+//! functions of the payload shape, so bills stay backend- and
+//! history-invariant even when the *values* on the wire depend on the
+//! stream's residual: for a `w`-word, `c`-column payload, `q8` bills
+//! `4c + w` (one f32 scale per column + one level byte per word), `q4`
+//! bills `4c + ⌈w/2⌉` (packed nibbles), and `top-s` bills
+//! `8 + 4·min(s,w) + levels(min(s,w))` (u64 kept-count envelope + u32
+//! indices + levels at the active width). Error feedback and the
+//! adaptive controller change which format a round *resolves to* —
+//! recorded per round in the bill and trace — never how a resolved
+//! format is priced. A broadcast frame is billed
 //! once regardless of fan-out (the §2.1 model charges the channel, not
 //! each recipient); per-worker request/response *messages* are billed per
 //! send/arrival. The codec-parameterized rows are the contract the
@@ -92,8 +103,9 @@ pub use comm::CommStats;
 pub use message::{Request, Response};
 pub use session::{MatmatTicket, MatvecTicket, Session, Ticket};
 pub use wire::{
-    decode_request, decode_response, encode_request, encode_response, Frame, WireCodec,
-    WirePrecision,
+    decode_request, decode_response, encode_request, encode_response, CodecKind, CodecState,
+    Frame, QuantBits, ReplyBank, WireCodec, WireDesc, WireFormat, WirePrecision, NARROW_BELOW,
+    WIDEN_ABOVE,
 };
 pub use worker::{ComputeOracle, NativeOracle, OracleSpec};
 
@@ -239,9 +251,11 @@ struct FusionState {
 /// One in-flight ticket's parking slot: where the router delivers (and
 /// bills) this exchange's replies until the completer collects them.
 struct Slot {
-    /// Codec the round shipped under — response payloads are transcoded
-    /// (and billed) at this width on arrival.
-    codec: WireCodec,
+    /// Resolved wire format the round shipped under. Replies arrive
+    /// already compressed by the worker's [`ReplyBank`]; the router
+    /// bills them at this format's frame size — a pure function of the
+    /// payload shape — and never touches the payload.
+    format: WireFormat,
     /// The issuing session, for billing at routing time.
     owner: Weak<SessionCore>,
     /// Replies owed (sends that succeeded).
@@ -253,9 +267,12 @@ struct Slot {
     deadline: Instant,
 }
 
-/// One retired exchange's straggler-routing record.
+/// One retired exchange's straggler-routing record. A straggler is
+/// billed at the **format its round shipped under** — resolved at
+/// submit time and frozen here — not at whatever the issuing session's
+/// codec has adapted to since.
 struct Inflight {
-    codec: WireCodec,
+    format: WireFormat,
     outstanding: usize,
     owner: Weak<SessionCore>,
 }
@@ -504,7 +521,7 @@ impl Cluster {
             let _ = self.sender.lock().send(
                 i,
                 CONTROL_SEQ,
-                WirePrecision::F64,
+                WireDesc::lossless(),
                 &Request::Shutdown,
             );
         }
@@ -522,12 +539,13 @@ impl Cluster {
     // -----------------------------------------------------------------
 
     /// Deliver one reply to wherever its sequence number points: an open
-    /// ticket's slot (transcode through the round's codec, bill the
-    /// issuing session and the aggregate, park the reply, refresh the
-    /// slot deadline), a retired exchange's straggler record (bill the
-    /// issuer at the width its round shipped under, or drop unbilled if
-    /// that session closed), or — unknown seq, record aged out — the
-    /// floor. Always notifies parked completers.
+    /// ticket's slot (bill the issuing session and the aggregate at the
+    /// round's resolved format — the worker already compressed the
+    /// payload, so billing is pure shape arithmetic — park the reply,
+    /// refresh the slot deadline), a retired exchange's straggler record
+    /// (bill the issuer at the format its round shipped under, or drop
+    /// unbilled if that session closed), or — unknown seq, record aged
+    /// out — the floor. Always notifies parked completers.
     fn route_reply(&self, id: usize, rseq: u64, resp: Response) {
         let mut st = self.router.state.lock();
         if st.fused.contains_key(&rseq) {
@@ -598,19 +616,17 @@ impl Cluster {
     /// number points — an open slot, a straggler record, or the floor.
     /// Caller holds the router state lock and notifies the router
     /// condvar afterwards.
-    fn deliver_locked(&self, st: &mut RouterState, id: usize, rseq: u64, mut resp: Response) {
+    fn deliver_locked(&self, st: &mut RouterState, id: usize, rseq: u64, resp: Response) {
         if let Some(slot) = st.open.get_mut(&rseq) {
-            let resp_bytes = resp.payload_mut().map_or(0, |p| slot.codec.transcode(p)) as u64;
+            let resp_bytes = resp
+                .payload()
+                .map_or(0, |p| slot.format.frame_bytes(p.len(), resp.payload_cols()))
+                as u64;
             if let Some(owner) = slot.owner.upgrade() {
                 // billing lives in the session layer (lint rule
                 // `commstats-mutation`): one helper bills the issuing
                 // session and the aggregate together
-                owner.bill_reply_arrival(
-                    &self.aggregate,
-                    resp_bytes,
-                    rseq,
-                    slot.codec.precision(),
-                );
+                owner.bill_reply_arrival(&self.aggregate, resp_bytes, rseq, slot.format);
             }
             slot.replies.push((id, resp));
             slot.deadline = Instant::now() + self.timeout;
@@ -622,22 +638,19 @@ impl Cluster {
             let mut record = None;
             if let Some(rec) = st.inflight.get_mut(&rseq) {
                 rec.outstanding -= 1;
-                record = Some((rec.codec, rec.owner.clone(), rec.outstanding == 0));
+                record = Some((rec.format, rec.owner.clone(), rec.outstanding == 0));
             }
-            if let Some((stale_codec, owner, emptied)) = record {
+            if let Some((stale_format, owner, emptied)) = record {
                 if emptied {
                     st.inflight.remove(&rseq);
                 }
                 if let Some(owner) = owner.upgrade() {
-                    let stale_bytes =
-                        resp.payload().map_or(0, |p| stale_codec.frame_bytes(p.len())) as u64;
+                    let stale_bytes = resp
+                        .payload()
+                        .map_or(0, |p| stale_format.frame_bytes(p.len(), resp.payload_cols()))
+                        as u64;
                     crate::obs_inc!(CLUSTER_STRAGGLER_REPLIES_TOTAL);
-                    owner.bill_reply_arrival(
-                        &self.aggregate,
-                        stale_bytes,
-                        rseq,
-                        stale_codec.precision(),
-                    );
+                    owner.bill_reply_arrival(&self.aggregate, stale_bytes, rseq, stale_format);
                 } else {
                     // issuer closed before its straggler landed
                     crate::obs_inc!(CLUSTER_ORPHAN_REPLIES_TOTAL);
@@ -662,7 +675,7 @@ impl Cluster {
             if outstanding > 0 {
                 prune_inflight(st, seq);
                 st.inflight
-                    .insert(seq, Inflight { codec: slot.codec, outstanding, owner: slot.owner });
+                    .insert(seq, Inflight { format: slot.format, outstanding, owner: slot.owner });
             }
         }
     }
@@ -784,6 +797,28 @@ impl Cluster {
         }
     }
 
+    /// Displace (flush unfused) whatever batch is pending in the fusion
+    /// window without joining it — the path a **stateful-codec** submit
+    /// takes: its round must never share a carrier, but it must not
+    /// leave earlier members parked for the window remainder either.
+    /// Counted as a displacement, exactly like an incompatible member.
+    pub(super) fn displace_pending(&self) {
+        let batch = {
+            let mut fu = self.fusion.lock();
+            match fu.pending.take() {
+                Some(batch) => {
+                    crate::obs_inc!(FUSION_DISPLACEMENTS_TOTAL);
+                    fu.flushing.extend(batch.members.iter().map(|m| m.seq));
+                    Some(batch)
+                }
+                None => None,
+            }
+        };
+        if let Some(batch) = batch {
+            self.flush_batch(batch);
+        }
+    }
+
     /// Get ticket `seq`'s round onto the wire if it is still pending in
     /// the fusion window, and — for completers (`wait`) — block until
     /// its outbound bill has been applied, so `complete()` can never
@@ -889,11 +924,15 @@ impl Cluster {
             );
             (carrier_seq, Request::CovMatMat { rows: d, cols: total_cols, data })
         };
+        // only `codec.fuses()` members ever reach a batch (stateless,
+        // no feedback stream), so the carrier ships under the codec's
+        // fixed default format with no stream key
+        let desc = WireDesc { format: codec.default_format(), feedback: false, sid: 0 };
         let mut sent = 0usize;
         {
             let mut sender = self.sender.lock();
             for &w in &workers {
-                if sender.send(w, send_seq, codec.precision(), &req).is_err() {
+                if sender.send(w, send_seq, desc, &req).is_err() {
                     break;
                 }
                 sent += 1;
@@ -906,7 +945,7 @@ impl Cluster {
                     sent as u64,
                     m.req_bytes,
                     m.seq,
-                    codec.precision(),
+                    codec.default_format(),
                 );
             }
         }
@@ -1421,7 +1460,7 @@ mod tests {
             st.inflight.insert(
                 1000,
                 Inflight {
-                    codec: WireCodec::new(WirePrecision::Bf16),
+                    format: WireFormat::Plain(WirePrecision::Bf16),
                     outstanding: 1,
                     owner: Arc::downgrade(&issuer.core),
                 },
@@ -1431,7 +1470,7 @@ mod tests {
         // lock across transport I/O (the analyze build enforces this)
         c.sender
             .lock()
-            .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+            .send(1, 1000, WireDesc::lossless(), &Request::CovMatVec(v.clone()))
             .unwrap();
         issuer.reset_stats();
         drainer.reset_stats();
@@ -1459,6 +1498,48 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_straggler_bills_at_the_width_its_round_shipped() {
+        // satellite: the `Inflight` record freezes the *resolved* format
+        // at submit time, so a straggler from a round that shipped q4
+        // bills q4 frame bytes even after the session's adaptive
+        // controller (or a set_codec) has moved the stream to another
+        // width — the bill reflects the bytes that actually crossed.
+        let (c, _) = small_cluster(2, 20);
+        let issuer = c.session();
+        let drainer = c.session();
+        let v = vec![0.3; 8];
+        {
+            let mut st = c.router.state.lock();
+            st.inflight.insert(
+                1000,
+                Inflight {
+                    format: WireFormat::Quant(QuantBits::Q4),
+                    outstanding: 1,
+                    owner: Arc::downgrade(&issuer.core),
+                },
+            );
+        }
+        // the issuer has since re-resolved to a wider codec than the
+        // one round 1000 shipped under
+        issuer.set_codec(WireCodec::quant(QuantBits::Q8).with_adaptive());
+        c.sender
+            .lock()
+            .send(1, 1000, WireDesc::lossless(), &Request::CovMatVec(v.clone()))
+            .unwrap();
+        issuer.reset_stats();
+        drainer.reset_stats();
+        drainer.dist_matvec(&v).unwrap();
+        drain_router(&c);
+        let ib = issuer.stats();
+        assert_eq!(ib.responses_received, 1);
+        // q4 frame of 8 words, one column: 4-byte scale + 4 nibble
+        // bytes — not the 4 + 8 the session's current q8 would bill
+        assert_eq!(ib.bytes, (4 + 4) as u64, "straggler billed at its round's frozen width");
+        let db = drainer.stats();
+        assert_eq!(db.bytes, (8 * 8 * 3) as u64, "drainer still bills lossless frames");
+    }
+
+    #[test]
     fn straggler_for_a_closed_session_is_dropped_unbilled() {
         // the second regression path: the issuing session is closed
         // before its straggler lands. The reply must be drained (so it
@@ -1482,7 +1563,7 @@ mod tests {
             }
             c.sender
                 .lock()
-                .send(1, 2000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+                .send(1, 2000, WireDesc::lossless(), &Request::CovMatVec(v.clone()))
                 .unwrap();
             // `issuer` drops here: the session is closed
         }
@@ -1609,7 +1690,7 @@ mod tests {
             st.inflight.insert(
                 1,
                 Inflight {
-                    codec: WireCodec::new(WirePrecision::Bf16),
+                    format: WireFormat::Plain(WirePrecision::Bf16),
                     outstanding: 1,
                     owner: Arc::downgrade(&issuer.core),
                 },
@@ -1617,7 +1698,7 @@ mod tests {
         }
         c.sender
             .lock()
-            .send(1, 1, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+            .send(1, 1, WireDesc::lossless(), &Request::CovMatVec(v.clone()))
             .unwrap();
         // burn the sequence namespace past the retention horizon, so
         // the next submit prunes the record before its reply lands
@@ -1748,7 +1829,7 @@ mod tests {
             sender.shutdown();
             sender.shutdown(); // double shutdown is a no-op
             let err = sender
-                .send(1, 1, WirePrecision::F64, &Request::CovMatVec(vec![1.0; 8]))
+                .send(1, 1, WireDesc::lossless(), &Request::CovMatVec(vec![1.0; 8]))
                 .unwrap_err()
                 .to_string();
             assert!(err.contains("worker 1"), "{err}");
@@ -1771,7 +1852,7 @@ mod tests {
             // a request whose reply no ticket will ever collect
             c.sender
                 .lock()
-                .send(1, 999, WirePrecision::F64, &Request::CovMatVec(vec![1.0; 8]))
+                .send(1, 999, WireDesc::lossless(), &Request::CovMatVec(vec![1.0; 8]))
                 .unwrap();
         }
         drop(c); // must not hang; second shutdown inside transport Drop is a no-op
@@ -1793,7 +1874,7 @@ mod tests {
             st.inflight.insert(
                 1000,
                 Inflight {
-                    codec: WireCodec::new(WirePrecision::Bf16),
+                    format: WireFormat::Plain(WirePrecision::Bf16),
                     outstanding: 1,
                     owner: Arc::downgrade(&issuer.core),
                 },
@@ -1801,7 +1882,7 @@ mod tests {
         }
         c.sender
             .lock()
-            .send(1, 1000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+            .send(1, 1000, WireDesc::lossless(), &Request::CovMatVec(v.clone()))
             .unwrap();
         issuer.reset_stats();
         drainer.reset_stats();
@@ -1849,7 +1930,7 @@ mod tests {
             }
             c.sender
                 .lock()
-                .send(1, 2000, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+                .send(1, 2000, WireDesc::lossless(), &Request::CovMatVec(v.clone()))
                 .unwrap();
             // `issuer` drops here: the session is closed
         }
@@ -1883,7 +1964,7 @@ mod tests {
             st.inflight.insert(
                 1,
                 Inflight {
-                    codec: WireCodec::new(WirePrecision::Bf16),
+                    format: WireFormat::Plain(WirePrecision::Bf16),
                     outstanding: 1,
                     owner: Arc::downgrade(&issuer.core),
                 },
@@ -1891,7 +1972,7 @@ mod tests {
         }
         c.sender
             .lock()
-            .send(1, 1, WirePrecision::F64, &Request::CovMatVec(v.clone()))
+            .send(1, 1, WireDesc::lossless(), &Request::CovMatVec(v.clone()))
             .unwrap();
         c.seq.fetch_add(INFLIGHT_RETENTION + 8, crate::sync::atomic::Ordering::Relaxed);
         let agg0 = c.aggregate_stats();
@@ -2006,6 +2087,106 @@ mod tests {
         assert_eq!(c.fusion_counters(), (0, 0), "mixed codecs must not share a carrier");
         assert_eq!(a.stats().bytes, 8 * 8 * 3, "lossless bill at 8B/entry");
         assert_eq!(b.stats().bytes, 2 * 8 * 3, "bf16 bill at 2B/entry");
+    }
+
+    #[test]
+    fn stateful_codec_submits_displace_the_fusion_window() {
+        // regression (ISSUE 10 satellite): a stateful-codec submit
+        // entering a fusion window must displace the pending batch —
+        // never fuse into it — and its own bill and accumulator stream
+        // must be unaffected by the concurrent fused tenant.
+        let (c, _) = small_cluster(2, 20);
+        c.enable_fusion(Duration::from_millis(200), 8).unwrap();
+        let fused = c.session();
+        let lossy = c.session();
+        lossy.set_codec(WireCodec::quant(QuantBits::Q4).with_feedback());
+        let v: Vec<f64> = (0..8).map(|i| (i as f64 * 0.3).sin() + 0.05).collect();
+        let ta = fused.dist_matvec_submit(&v).unwrap();
+        // the stateful tenant never enters the window: A's pending
+        // batch is flushed unfused and B's round ships solo
+        let tb = lossy.dist_matvec_submit(&v).unwrap();
+        ta.complete().unwrap();
+        tb.complete().unwrap();
+        assert_eq!(c.fusion_counters(), (0, 0), "stateful codecs must never share a carrier");
+        // solo frame arithmetic, untouched by the fused neighbor:
+        // Q4 on 8 words, 1 column = 4 (scale) + 4 (nibbles) per frame
+        assert_eq!(lossy.stats().bytes, (4 + 4) * 3, "EF tenant bills its own sparse frames");
+        assert_eq!(fused.stats().bytes, 8 * 8 * 3, "displaced tenant bills its solo frames");
+        assert!(lossy.residual_norm() > 0.0, "the EF stream accumulated the Q4 drop");
+        assert_eq!(fused.residual_norm(), 0.0, "stateless tenant keeps no stream");
+    }
+
+    #[test]
+    fn quantized_and_sparse_codecs_bill_shape_only_frames() {
+        // B(w) for the ISSUE 10 family is a pure function of shape: the
+        // module-doc table rows, through a real collective
+        let (c, _) = small_cluster(2, 20);
+        let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.731).sin() + 0.1).collect();
+        for (codec, frame) in [
+            (WireCodec::quant(QuantBits::Q8), 4 + 8u64),
+            (WireCodec::quant(QuantBits::Q4), 4 + 4),
+            (WireCodec::quant(QuantBits::Q8).with_feedback(), 4 + 8),
+            (WireCodec::quant(QuantBits::Q4).with_feedback().with_adaptive(), 4 + 4),
+            (WireCodec::top_s(3, QuantBits::Q8).with_feedback(), 8 + 4 * 3 + 3),
+            (WireCodec::top_s(3, QuantBits::Q4).with_feedback(), 8 + 4 * 3 + 2),
+        ] {
+            let s = c.session();
+            s.set_codec(codec);
+            s.dist_matvec(&x).unwrap();
+            // one broadcast frame + one reply frame per live worker
+            assert_eq!(s.stats().bytes, frame * 3, "{}", codec.label());
+        }
+    }
+
+    #[test]
+    fn error_feedback_mean_tracks_the_lossless_result() {
+        // the tentpole's point, at the collective level: averaging over
+        // EF rounds telescopes the quantization error away, where plain
+        // Q4 keeps paying it every round
+        let (c, _) = small_cluster(2, 30);
+        let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.53).sin() * 0.8 + 0.1).collect();
+        let exact = c.session().dist_matvec(&x).unwrap();
+        let rounds = 32usize;
+        let mean_err = |s: &Session<'_>| -> f64 {
+            let mut mean = vec![0.0; 8];
+            for _ in 0..rounds {
+                let got = s.dist_matvec(&x).unwrap();
+                for i in 0..8 {
+                    mean[i] += got[i] / rounds as f64;
+                }
+            }
+            exact.iter().zip(&mean).map(|(a, b)| (a - b).abs()).sum()
+        };
+        let plain = c.session();
+        plain.set_codec(WireCodec::quant(QuantBits::Q4));
+        let plain_err = mean_err(&plain);
+        let ef = c.session();
+        ef.set_codec(WireCodec::quant(QuantBits::Q4).with_feedback());
+        let ef_err = mean_err(&ef);
+        assert_eq!(plain.residual_norm(), 0.0, "stateless codec keeps no stream");
+        assert!(ef.residual_norm() > 0.0, "EF stream carries the last drop");
+        assert!(
+            ef_err < plain_err,
+            "error feedback must beat plain Q4 on the round average: {ef_err} vs {plain_err}"
+        );
+    }
+
+    #[test]
+    fn adaptive_codec_records_transitions_and_bills_the_resolved_width() {
+        let (c, _) = small_cluster(2, 20);
+        let s = c.session();
+        s.set_codec(WireCodec::quant(QuantBits::Q8).with_adaptive());
+        assert_eq!(s.active_bits(), Some(QuantBits::Q8));
+        // a smooth payload quantizes well at Q8; once the controller
+        // has one round of evidence it narrows to Q4
+        let x: Vec<f64> = (0..8).map(|i| (i as f64 * 0.37).sin() + 2.0).collect();
+        s.dist_matvec(&x).unwrap(); // ships q8: fresh stream, no evidence yet
+        s.dist_matvec(&x).unwrap(); // adapt() sees a tiny residual: narrows, ships q4
+        assert_eq!(s.active_bits(), Some(QuantBits::Q4));
+        assert_eq!(s.codec_transitions(), (0, 1), "(widenings, narrowings)");
+        // the bill records the width each round actually shipped under:
+        // round 1 at q8 (4+8 per frame), round 2 at q4 (4+4)
+        assert_eq!(s.stats().bytes, (4 + 8) * 3 + (4 + 4) * 3);
     }
 
     #[test]

@@ -51,7 +51,7 @@ use crate::sync::Mutex;
 
 use super::comm::CommStats;
 use super::message::{Request, Response};
-use super::wire::{WireCodec, WirePrecision};
+use super::wire::{CodecState, QuantBits, WireCodec, WireDesc, WireFormat, WirePrecision};
 use super::{prune_inflight, Cluster, FuseMember, Slot};
 
 /// Process-unique session ids: stamped into every trace event a session
@@ -59,14 +59,28 @@ use super::{prune_inflight, Cluster, FuseMember, Slot};
 /// and match them against closing bills.
 static NEXT_SID: crate::sync::atomic::AtomicU64 = crate::sync::atomic::AtomicU64::new(0);
 
-/// Mirror billed bytes into the per-codec observability counter. Pure
+/// Mirror billed bytes into the per-format observability counter. Pure
 /// observation — the `CommStats` ledgers are never touched from here.
-fn obs_codec_bytes(prec: WirePrecision, bytes: u64) {
-    match prec {
-        WirePrecision::F64 => crate::obs_add!(BYTES_F64_TOTAL, bytes),
-        WirePrecision::F32 => crate::obs_add!(BYTES_F32_TOTAL, bytes),
-        WirePrecision::Bf16 => crate::obs_add!(BYTES_BF16_TOTAL, bytes),
+fn obs_codec_bytes(format: WireFormat, bytes: u64) {
+    match format {
+        WireFormat::Plain(WirePrecision::F64) => crate::obs_add!(BYTES_F64_TOTAL, bytes),
+        WireFormat::Plain(WirePrecision::F32) => crate::obs_add!(BYTES_F32_TOTAL, bytes),
+        WireFormat::Plain(WirePrecision::Bf16) => crate::obs_add!(BYTES_BF16_TOTAL, bytes),
+        WireFormat::Quant(QuantBits::Q8) => crate::obs_add!(BYTES_Q8_TOTAL, bytes),
+        WireFormat::Quant(QuantBits::Q4) => crate::obs_add!(BYTES_Q4_TOTAL, bytes),
+        WireFormat::TopS { .. } => crate::obs_add!(BYTES_TOPS_TOTAL, bytes),
     }
+}
+
+/// One session's codec lane: the installed [`WireCodec`] plus the
+/// leader→workers [`CodecState`] stream (error-feedback residual,
+/// adaptive width). Guarded together — the adapt→resolve→step sequence
+/// in [`Session::submit`] must see a consistent pair. The worker→leader
+/// direction's twin lives in each worker's
+/// [`ReplyBank`](super::wire::ReplyBank), keyed by this session's sid.
+pub(super) struct CodecLane {
+    pub(super) codec: WireCodec,
+    pub(super) state: CodecState,
 }
 
 /// The session state shared with the cluster's straggler-routing table:
@@ -75,7 +89,7 @@ fn obs_codec_bytes(prec: WirePrecision, bytes: u64) {
 /// that tenant is gone.
 pub(super) struct SessionCore {
     pub(super) stats: Mutex<CommStats>,
-    pub(super) codec: Mutex<WireCodec>,
+    pub(super) codec: Mutex<CodecLane>,
     /// Process-unique id, stamped into trace events (never billed).
     pub(super) sid: u64,
     /// Tenant label for the trace timeline (empty until
@@ -96,7 +110,7 @@ impl SessionCore {
         aggregate: &Mutex<CommStats>,
         bytes: u64,
         seq: u64,
-        prec: WirePrecision,
+        format: WireFormat,
     ) {
         {
             let mut stats = self.stats.lock();
@@ -113,12 +127,12 @@ impl SessionCore {
         // makes the Σ-traced-bytes == bill cross-check an identity
         crate::obs_inc!(CLUSTER_REPLIES_TOTAL);
         crate::obs_hist!(REPLY_BYTES, bytes);
-        obs_codec_bytes(prec, bytes);
+        obs_codec_bytes(format, bytes);
         crate::obs_trace!(
             "reply",
             sid = self.sid,
             seq = seq,
-            codec = prec.label(),
+            codec = format.label(),
             bytes = bytes
         );
     }
@@ -138,7 +152,7 @@ impl SessionCore {
         sent: u64,
         req_bytes: u64,
         seq: u64,
-        prec: WirePrecision,
+        format: WireFormat,
     ) {
         if sent == 0 {
             return;
@@ -157,12 +171,12 @@ impl SessionCore {
         }
         crate::obs_inc!(CLUSTER_SUBMITS_TOTAL);
         crate::obs_hist!(SUBMIT_BYTES, req_bytes);
-        obs_codec_bytes(prec, req_bytes);
+        obs_codec_bytes(format, req_bytes);
         crate::obs_trace!(
             "fused_submit",
             sid = self.sid,
             seq = seq,
-            codec = prec.label(),
+            codec = format.label(),
             bytes = req_bytes,
             workers = sent
         );
@@ -191,7 +205,10 @@ impl<'c> Session<'c> {
             cluster,
             core: Arc::new(SessionCore {
                 stats: Mutex::named(CommStats::default(), "session.stats"),
-                codec: Mutex::named(WireCodec::default(), "session.codec"),
+                codec: Mutex::named(
+                    CodecLane { codec: WireCodec::default(), state: CodecState::default() },
+                    "session.codec",
+                ),
                 sid: NEXT_SID.fetch_add(1, Ordering::Relaxed) + 1,
                 label: Mutex::named(String::new(), "session.label"),
             }),
@@ -257,16 +274,40 @@ impl<'c> Session<'c> {
 
     /// The wire codec installed on this session (default: lossless f64).
     pub fn codec(&self) -> WireCodec {
-        *self.core.codec.lock()
+        self.core.codec.lock().codec
     }
 
     /// Install a wire codec **for this session only**. Every subsequent
     /// payload this session ships passes through it: lossy codecs both
     /// shrink the billed frames and degrade the delivered vectors,
     /// exactly as a real quantized wire would — without touching any
-    /// concurrent tenant's traffic.
+    /// concurrent tenant's traffic. Installing a codec resets the
+    /// session's stream state (error-feedback residual, adaptive width):
+    /// a new codec is a new stream.
     pub fn set_codec(&self, codec: WireCodec) {
-        *self.core.codec.lock() = codec;
+        let mut lane = self.core.codec.lock();
+        lane.codec = codec;
+        lane.state = CodecState::for_codec(&codec);
+    }
+
+    /// Relative norm of the last error-feedback residual this session's
+    /// leader→workers stream carried (0 for stateless codecs, and until
+    /// the first stateful payload ships). The `final_residual` the
+    /// quantized coordinator reports alongside `final_drift`.
+    pub fn residual_norm(&self) -> f64 {
+        self.core.codec.lock().state.last_residual_norm()
+    }
+
+    /// The adaptive controller's current bit-width, if this session's
+    /// codec quantizes (`None` for plain f64/f32/bf16 codecs).
+    pub fn active_bits(&self) -> Option<QuantBits> {
+        self.core.codec.lock().state.active_bits()
+    }
+
+    /// (widenings, narrowings) the adaptive controller has performed on
+    /// this session's outbound stream.
+    pub fn codec_transitions(&self) -> (u64, u64) {
+        self.core.codec.lock().state.transitions()
     }
 
     /// Close the session and return its final bill, **race-free**: after
@@ -360,10 +401,34 @@ impl<'c> Session<'c> {
                 bail!("submit: worker {w} listed twice");
             }
         }
-        let codec = self.codec();
         let seq = self.cluster.seq.fetch_add(1, Ordering::Relaxed) + 1;
         let mut req = req.clone();
-        let req_bytes = req.payload_mut().map_or(0, |p| codec.transcode(p)) as u64;
+        let cols = req.payload_cols();
+        // The codec lane, in order: **adapt** the width from the
+        // previous round's residual norm, **resolve** this round's wire
+        // format, then **step** the stream — error-feedback add,
+        // quantize in place, store the new residual. One short critical
+        // section; the lane lock is released before any router or
+        // transport lock is taken (DESIGN.md §11).
+        let (codec, format, req_bytes) = {
+            let mut lane = self.core.codec.lock();
+            let codec = lane.codec;
+            let (widened, narrowed) = lane.state.adapt(&codec);
+            if widened {
+                crate::obs_inc!(CODEC_WIDENINGS_TOTAL);
+            }
+            if narrowed {
+                crate::obs_inc!(CODEC_NARROWINGS_TOTAL);
+            }
+            let format = codec.resolve(&lane.state);
+            let track = codec.is_stateful();
+            let bytes = req
+                .payload_mut()
+                .map_or(0, |p| lane.state.step(format, codec.feedback(), track, p, cols))
+                as u64;
+            (codec, format, bytes)
+        };
+        let desc = WireDesc { format, feedback: codec.feedback(), sid: self.core.sid };
         // open the routing slot before the first byte moves: a reply can
         // be routed by a concurrent driver the instant the send lands
         {
@@ -372,7 +437,7 @@ impl<'c> Session<'c> {
             st.open.insert(
                 seq,
                 Slot {
-                    codec,
+                    format,
                     owner: Arc::downgrade(&self.core),
                     expected: workers.len(),
                     replies: Vec::with_capacity(workers.len()),
@@ -387,9 +452,9 @@ impl<'c> Session<'c> {
             for &w in workers {
                 // the transport moves the message (typed enum in-proc,
                 // length-prefixed byte frame over TCP — encoded at this
-                // session's wire precision); billing stays up here, so
-                // the bill is backend-invariant
-                if let Err(e) = sender.send(w, seq, codec.precision(), &req) {
+                // round's resolved wire format); billing stays up here,
+                // so the bill is backend-invariant
+                if let Err(e) = sender.send(w, seq, desc, &req) {
                     err = Some(e);
                     break;
                 }
@@ -417,13 +482,25 @@ impl<'c> Session<'c> {
         crate::obs_inc!(CLUSTER_SUBMITS_TOTAL);
         if sent > 0 {
             crate::obs_hist!(SUBMIT_BYTES, billed);
-            obs_codec_bytes(codec.precision(), billed);
+            obs_codec_bytes(format, billed);
+            if codec.is_stateful() {
+                // stream health, refreshed per stateful round: what the
+                // adaptive controller acted on, and what the round's
+                // compression bought against a lossless f64 frame
+                let rel = self.residual_norm();
+                crate::obs_gauge!(CODEC_RESIDUAL_X1000, (rel * 1000.0) as u64);
+                let words = req.payload().map_or(0, |p| p.len());
+                if words > 0 && req_bytes > 0 {
+                    let ratio = (8 * words) as f64 / req_bytes as f64;
+                    crate::obs_gauge!(CODEC_COMPRESSION_X1000, (ratio * 1000.0) as u64);
+                }
+            }
         }
         crate::obs_trace!(
             "submit",
             sid = self.core.sid,
             seq = seq,
-            codec = codec.precision().label(),
+            codec = format.label(),
             bytes = billed,
             workers = sent
         );
@@ -469,7 +546,19 @@ impl<'c> Session<'c> {
         vector: bool,
     ) -> Result<Ticket<'_, 'c>> {
         let d = self.d();
-        if !self.cluster.fusion_enabled() {
+        let codec = self.codec();
+        if !self.cluster.fusion_enabled() || !codec.fuses() {
+            // A stateful codec (error-feedback, adaptive, top-s) never
+            // enters the fusion window: a shared carrier would splice
+            // foreign columns into this stream's residual arithmetic
+            // and ship it under a codec that is not the member's. It
+            // **displaces** instead — the pending batch (if any) is
+            // flushed unfused — and the round ships solo through the
+            // plain submit path, its bill and accumulator untouched by
+            // concurrent fused tenants.
+            if self.cluster.fusion_enabled() {
+                self.cluster.displace_pending();
+            }
             let req = if vector {
                 Request::CovMatVec(data)
             } else {
@@ -479,7 +568,6 @@ impl<'c> Session<'c> {
         }
         // `workers` is always the alive set here (distinct, in range),
         // so the duplicate/range validation in `submit` is not repeated
-        let codec = self.codec();
         let mut data = data;
         let req_bytes = codec.transcode(&mut data) as u64;
         let seq = self.cluster.seq.fetch_add(1, Ordering::Relaxed) + 1;
@@ -489,7 +577,7 @@ impl<'c> Session<'c> {
             st.open.insert(
                 seq,
                 Slot {
-                    codec,
+                    format: codec.default_format(),
                     owner: Arc::downgrade(&self.core),
                     expected: workers.len(),
                     replies: Vec::with_capacity(workers.len()),

@@ -7,44 +7,82 @@
 //! codec actually encodes ([`Frame::wire_bytes`]). The default codec is
 //! lossless f64 — encode/decode is a bit-exact roundtrip, so all
 //! accounting and numerics match the original `8·d` model verbatim —
-//! while the lossy codecs ([`WirePrecision::F32`], [`WirePrecision::Bf16`])
-//! both shrink the frames *and* degrade the payload exactly the way a
-//! real quantized wire would (cf. the quantized-communication line of
-//! work the paper's §1 contrasts with its round model).
+//! while the lossy codecs both shrink the frames *and* degrade the
+//! payload exactly the way a real quantized wire would (cf. the
+//! quantized-communication line of work the paper's §1 contrasts with
+//! its round model).
 //!
 //! [`CommStats`]: super::CommStats
 //!
-//! Since ISSUE 4 this module also defines the **whole-message frame
-//! format** the byte-shipping transports use ([`encode_request`] /
-//! [`decode_request`], [`encode_response`] / [`decode_response`]):
-//! envelope fields (kind, sequence number, precision, variant tag,
-//! shapes, hyperparameters) as little-endian integers, f64 payloads as
-//! the materialized codec output, the whole body length-prefixed on the
-//! wire by the transport. Only the codec-encoded *payload* section is
-//! billed (`B(w)` in the accounting table); the envelope rides free,
-//! consistent with the paper's cost model counting `R^d` vector
-//! traffic. Decoding is fully defensive: truncated, length-mismatched,
-//! or malformed frames return an error, never a panic.
+//! Since ISSUE 10 the codec family is **stateful**. A codec is described
+//! by [`WireCodec`] — a [`CodecKind`] plus two orthogonal switches:
 //!
-//! Format notes:
+//! - `feedback`: an **error-feedback accumulator** per stream. The
+//!   quantization residual of round `t` is added to the payload of
+//!   round `t+1` on the same (session, direction) stream, so the
+//!   *time-averaged* signal the receiver integrates is unbiased even
+//!   under 4-bit quantization (the EF-SGD argument of the distributed
+//!   PCA compression literature). Streams are keyed per direction:
+//!   the leader keeps one outbound accumulator per session (the
+//!   broadcast payload is identical for every peer, so one stream per
+//!   session *is* one stream per (session, peer)); each worker keeps
+//!   its own reply accumulator per session id ([`ReplyBank`]) — no
+//!   handshake ships state, both sides evolve theirs from the frames
+//!   they already see.
+//! - `adaptive`: a per-session controller that widens/narrows the
+//!   quantizer between Q4 and Q8 from the measured relative residual
+//!   norm ([`CodecState::adapt`]); the width a round actually shipped
+//!   under is resolved at submit time into a concrete [`WireFormat`],
+//!   stamped into the message envelope, echoed on replies, and billed.
+//!
+//! Because a round's bytes depend on the resolved format, billing is a
+//! pure function [`WireFormat::frame_bytes`] of (format, payload words,
+//! payload columns) — deterministic from shape, hence identical across
+//! backends and concurrency schedules.
+//!
+//! Format notes (per payload of `w` f64 words in `c` columns):
 //!
 //! - `F64`: 8 bytes/entry, little-endian IEEE-754 binary64. Bit-exact.
 //! - `F32`: 4 bytes/entry; each entry rounds to the nearest binary32
 //!   (relative error <= 2^-24).
 //! - `Bf16`: 2 bytes/entry, true bfloat16 — 1 sign + 8 exponent + 7
-//!   explicit mantissa bits. Conversion goes f64 → f32 (RNE) → bf16
-//!   (RNE), the same double-rounding composition real hardware without a
-//!   direct f64→bf16 path performs, so the relative error is at most
-//!   half an ulp plus the f32 term: `2^-8 + 2^-24`, within the 4e-3
-//!   bound the tests assert. (The pre-wire-layer code masked the f64
-//!   mantissa to 8 explicit bits, a 20-bit format it billed at 2 bytes;
-//!   the codec makes the 2 bytes honest.)
+//!   explicit mantissa bits, f64 → f32 (RNE) → bf16 (RNE) double
+//!   rounding like real hardware; relative error <= 2^-8 + 2^-24.
+//! - `Q8`: uniform 8-bit, scale-per-column: one f32 scale per column
+//!   (`maxabs/127`, f32-rounded) + one signed byte level per word.
+//!   `4c + w` bytes.
+//! - `Q4`: as Q8 with levels in −7..7, two nibble-packed levels per
+//!   byte. `4c + ceil(w/2)` bytes.
+//! - `TopS{s}`: keep the `s' = min(s, w)` largest-magnitude words; one
+//!   u32 count + one f32 scale over the kept values + `s'` u32 indices
+//!   + `s'` levels at the active bit width. `8 + 4s' + s'` (Q8) or
+//!   `8 + 4s' + ceil(s'/2)` (Q4) bytes. Dropped mass enters the
+//!   feedback accumulator like quantization error.
+//!
+//! The quantizers are **re-encode idempotent**: the scale is stored and
+//! *applied* as the f32 it ships as, so quantized values re-encode to
+//! exactly themselves. That is what lets the TCP transport encode the
+//! leader-pre-quantized payload without a second loss, keeping in-proc
+//! and TCP runs value- and bill-identical.
+//!
+//! Since ISSUE 4 this module also defines the **whole-message frame
+//! format** the byte-shipping transports use ([`encode_request`] /
+//! [`decode_request`], [`encode_response`] / [`decode_response`]):
+//! envelope fields (kind, sequence number, wire format, feedback flag +
+//! session id on requests, variant tag, shapes, hyperparameters) as
+//! little-endian integers, f64 payloads as the materialized codec
+//! output, the whole body length-prefixed on the wire by the transport.
+//! Only the codec-encoded *payload* section is billed (`B(w)` in the
+//! accounting table); the envelope rides free, consistent with the
+//! paper's cost model counting `R^d` vector traffic. Decoding is fully
+//! defensive: truncated, length-mismatched, or malformed frames return
+//! an error, never a panic.
 
 use anyhow::{bail, ensure, Context, Result};
 
 use super::message::{Request, Response};
 
-/// Per-entry precision of every f64 that crosses the network.
+/// Per-entry precision of the fixed-width (stateless) wire formats.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum WirePrecision {
     /// Full f64 (the baseline model of the paper). Lossless.
@@ -83,6 +121,220 @@ impl WirePrecision {
     }
 }
 
+/// Bit width of the low-bit uniform quantizers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QuantBits {
+    /// Signed 8-bit levels in −127..127, 1 byte/word.
+    Q8,
+    /// Signed 4-bit levels in −7..7, nibble-packed, 1 byte/2 words.
+    Q4,
+}
+
+impl QuantBits {
+    /// Largest level magnitude the width can represent.
+    pub fn qmax(&self) -> f64 {
+        match self {
+            QuantBits::Q8 => 127.0,
+            QuantBits::Q4 => 7.0,
+        }
+    }
+
+    /// Short label for reports and CSV columns.
+    pub fn label(&self) -> &'static str {
+        match self {
+            QuantBits::Q8 => "q8",
+            QuantBits::Q4 => "q4",
+        }
+    }
+
+    /// Bytes the packed levels of `n` words occupy.
+    fn level_bytes(&self, n: usize) -> usize {
+        match self {
+            QuantBits::Q8 => n,
+            QuantBits::Q4 => (n + 1) / 2,
+        }
+    }
+}
+
+/// What family a [`WireCodec`] belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodecKind {
+    /// One of the fixed-width per-entry formats (f64 / f32 / bf16).
+    Stateless(WirePrecision),
+    /// Low-bit uniform quantizer, scale-per-column.
+    Quant(QuantBits),
+    /// Top-`s` coordinate sparsification; kept values quantized at
+    /// `bits`.
+    TopS { s: u32, bits: QuantBits },
+}
+
+/// The concrete format one round's payload ships under. For a
+/// non-adaptive codec this is determined by the codec alone; for an
+/// adaptive codec it is resolved per round from the controller state
+/// and stamped into the envelope (and the bill) so replies, stragglers
+/// and traces all see the width that actually shipped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WireFormat {
+    /// Fixed-width per-entry encoding.
+    Plain(WirePrecision),
+    /// Uniform quantizer at the given width.
+    Quant(QuantBits),
+    /// Top-`s` sparse frame with kept values at `bits`.
+    TopS { s: u32, bits: QuantBits },
+}
+
+impl WireFormat {
+    /// Billed payload bytes for `words` f64 words in `cols` row-major
+    /// columns. A pure function of shape — this is the cluster's billing
+    /// primitive, identical on every backend; equivalence with the
+    /// materialized [`WireFormat::encode`] frame is pinned by
+    /// `frame_bytes_matches_encode_for_every_format`.
+    pub fn frame_bytes(&self, words: usize, cols: usize) -> usize {
+        match self {
+            WireFormat::Plain(p) => words * p.bytes_per_entry(),
+            WireFormat::Quant(b) => 4 * cols.max(1) + b.level_bytes(words),
+            WireFormat::TopS { s, bits } => {
+                let kept = (*s as usize).min(words);
+                8 + 4 * kept + bits.level_bytes(kept)
+            }
+        }
+    }
+
+    /// Short label for CSV columns, traces and the obs byte counters.
+    pub fn label(&self) -> String {
+        match self {
+            WireFormat::Plain(p) => p.label().to_string(),
+            WireFormat::Quant(b) => b.label().to_string(),
+            WireFormat::TopS { s, bits } => format!("top{s}-{}", bits.label()),
+        }
+    }
+
+    /// Apply the format's loss to a payload in place — identical to the
+    /// encode→decode roundtrip (pinned by the roundtrip tests) without
+    /// materializing the frame. `cols` is the row-major column count
+    /// scale-per-column quantizers key on (1 for vectors).
+    pub fn quantize(&self, payload: &mut [f64], cols: usize) {
+        match self {
+            WireFormat::Plain(WirePrecision::F64) => {}
+            WireFormat::Plain(WirePrecision::F32) => {
+                for x in payload.iter_mut() {
+                    *x = *x as f32 as f64;
+                }
+            }
+            WireFormat::Plain(WirePrecision::Bf16) => {
+                for x in payload.iter_mut() {
+                    *x = bf16_to_f64(f64_to_bf16(*x));
+                }
+            }
+            WireFormat::Quant(bits) => {
+                let scales = col_scales(payload, cols, bits.qmax());
+                for (i, x) in payload.iter_mut().enumerate() {
+                    let s = scales[i % cols.max(1)];
+                    *x = dequant(level_of(*x, s, bits.qmax()), s);
+                }
+            }
+            WireFormat::TopS { s, bits } => {
+                let (kept, scale) = top_s_plan(payload, *s as usize, bits.qmax());
+                let mut out = vec![0.0; payload.len()];
+                for &i in &kept {
+                    out[i] = dequant(level_of(payload[i], scale, bits.qmax()), scale);
+                }
+                payload.copy_from_slice(&out);
+            }
+        }
+    }
+
+    /// Encode a payload into the bytes that would cross the wire.
+    pub fn encode(&self, payload: &[f64], cols: usize) -> Frame {
+        let cols = cols.max(1);
+        assert!(
+            payload.is_empty() || payload.len() % cols == 0,
+            "payload of {} words is not {cols} row-major columns",
+            payload.len()
+        );
+        let mut bytes = Vec::with_capacity(self.frame_bytes(payload.len(), cols));
+        match self {
+            WireFormat::Plain(WirePrecision::F64) => {
+                for x in payload {
+                    bytes.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            WireFormat::Plain(WirePrecision::F32) => {
+                for x in payload {
+                    bytes.extend_from_slice(&(*x as f32).to_le_bytes());
+                }
+            }
+            WireFormat::Plain(WirePrecision::Bf16) => {
+                for x in payload {
+                    bytes.extend_from_slice(&f64_to_bf16(*x).to_le_bytes());
+                }
+            }
+            WireFormat::Quant(bits) => {
+                let scales = col_scales(payload, cols, bits.qmax());
+                for s in &scales {
+                    bytes.extend_from_slice(&s.to_bits().to_le_bytes());
+                }
+                let levels: Vec<i8> = payload
+                    .iter()
+                    .enumerate()
+                    .map(|(i, x)| level_of(*x, scales[i % cols], bits.qmax()))
+                    .collect();
+                bytes.extend_from_slice(&pack_levels(*bits, &levels));
+            }
+            WireFormat::TopS { s, bits } => {
+                let (kept, scale) = top_s_plan(payload, *s as usize, bits.qmax());
+                bytes.extend_from_slice(&(kept.len() as u32).to_le_bytes());
+                bytes.extend_from_slice(&scale.to_bits().to_le_bytes());
+                for &i in &kept {
+                    bytes.extend_from_slice(&(i as u32).to_le_bytes());
+                }
+                let levels: Vec<i8> =
+                    kept.iter().map(|&i| level_of(payload[i], scale, bits.qmax())).collect();
+                bytes.extend_from_slice(&pack_levels(*bits, &levels));
+            }
+        }
+        Frame { format: *self, entries: payload.len(), cols, bytes }
+    }
+
+    /// Decode a frame back into f64 words (counterpart of `encode`).
+    pub fn decode(&self, frame: &Frame) -> Vec<f64> {
+        assert_eq!(
+            frame.format, *self,
+            "codec/frame format mismatch: frame is {:?}, codec is {:?}",
+            frame.format, self
+        );
+        match self {
+            WireFormat::Plain(p) => decode_raw(*p, &frame.bytes),
+            WireFormat::Quant(bits) => {
+                let cols = frame.cols;
+                let mut scales = Vec::with_capacity(cols);
+                for c in 0..cols {
+                    let mut a = [0u8; 4];
+                    a.copy_from_slice(&frame.bytes[4 * c..4 * c + 4]);
+                    scales.push(f32::from_bits(u32::from_le_bytes(a)));
+                }
+                let levels = unpack_levels(*bits, &frame.bytes[4 * cols..], frame.entries);
+                levels.iter().enumerate().map(|(i, &l)| dequant(l, scales[i % cols])).collect()
+            }
+            WireFormat::TopS { bits, .. } => {
+                let mut a = [0u8; 4];
+                a.copy_from_slice(&frame.bytes[0..4]);
+                let kept = u32::from_le_bytes(a) as usize;
+                a.copy_from_slice(&frame.bytes[4..8]);
+                let scale = f32::from_bits(u32::from_le_bytes(a));
+                let mut out = vec![0.0; frame.entries];
+                let levels = unpack_levels(*bits, &frame.bytes[8 + 4 * kept..], kept);
+                for (j, &l) in levels.iter().enumerate() {
+                    a.copy_from_slice(&frame.bytes[8 + 4 * j..12 + 4 * j]);
+                    let i = u32::from_le_bytes(a) as usize;
+                    out[i] = dequant(l, scale);
+                }
+                out
+            }
+        }
+    }
+}
+
 /// f64 -> bfloat16 bits: round to nearest f32 first (exact for every
 /// value a bf16 can represent), then round-to-nearest-even on the 16
 /// mantissa bits bf16 drops. The two rounding steps can land one bf16
@@ -107,18 +359,105 @@ fn bf16_to_f64(b: u16) -> f64 {
     f32::from_bits((b as u32) << 16) as f64
 }
 
+/// Per-column scale `maxabs/qmax`, **f32-rounded** — the rounding is
+/// applied before any level is computed, so re-encoding the quantized
+/// values reproduces the same scale and the same levels (the idempotency
+/// the byte-shipping transport relies on).
+fn col_scales(payload: &[f64], cols: usize, qmax: f64) -> Vec<f32> {
+    let cols = cols.max(1);
+    let mut maxabs = vec![0.0f64; cols];
+    for (i, x) in payload.iter().enumerate() {
+        let a = x.abs();
+        if a > maxabs[i % cols] {
+            maxabs[i % cols] = a;
+        }
+    }
+    maxabs.iter().map(|m| (m / qmax) as f32).collect()
+}
+
+/// Signed level of `x` at scale `s`, clamped to ±qmax. A zero (or
+/// non-finite) scale maps everything to level 0; NaN inputs also map
+/// to 0 (the `as i8` saturating cast), so the decoder never sees a
+/// level it cannot invert.
+fn level_of(x: f64, s: f32, qmax: f64) -> i8 {
+    if s == 0.0 || !s.is_finite() {
+        return 0;
+    }
+    (x / s as f64).round().clamp(-qmax, qmax) as i8
+}
+
+/// Invert a level. Level 0 is exactly 0.0 regardless of scale, so a
+/// degenerate (zero/overflowed) scale cannot manufacture NaNs.
+fn dequant(l: i8, s: f32) -> f64 {
+    if l == 0 {
+        0.0
+    } else {
+        l as f64 * s as f64
+    }
+}
+
+/// The top-`s` plan for a payload: kept indices (largest magnitude
+/// first ranked, returned sorted ascending for a canonical frame) and
+/// the shared f32 scale over the kept values. Ties break by lower
+/// index, so the plan is deterministic.
+fn top_s_plan(payload: &[f64], s: usize, qmax: f64) -> (Vec<usize>, f32) {
+    let kept_n = s.min(payload.len());
+    let mut idx: Vec<usize> = (0..payload.len()).collect();
+    idx.sort_by(|&a, &b| payload[b].abs().total_cmp(&payload[a].abs()).then(a.cmp(&b)));
+    let mut kept: Vec<usize> = idx[..kept_n].to_vec();
+    let maxabs = kept.first().map_or(0.0, |&i| payload[i].abs());
+    kept.sort_unstable();
+    (kept, (maxabs / qmax) as f32)
+}
+
+fn pack_levels(bits: QuantBits, levels: &[i8]) -> Vec<u8> {
+    match bits {
+        QuantBits::Q8 => levels.iter().map(|&l| l as u8).collect(),
+        QuantBits::Q4 => {
+            // two levels per byte, each stored biased by +7 (−7..7 → 0..14)
+            let mut out = Vec::with_capacity((levels.len() + 1) / 2);
+            for pair in levels.chunks(2) {
+                let lo = (pair[0] + 7) as u8;
+                let hi = if pair.len() == 2 { (pair[1] + 7) as u8 } else { 0 };
+                out.push(lo | (hi << 4));
+            }
+            out
+        }
+    }
+}
+
+fn unpack_levels(bits: QuantBits, raw: &[u8], n: usize) -> Vec<i8> {
+    match bits {
+        QuantBits::Q8 => raw.iter().take(n).map(|&b| b as i8).collect(),
+        QuantBits::Q4 => {
+            let mut out = Vec::with_capacity(n);
+            for (i, b) in raw.iter().enumerate() {
+                if out.len() < n {
+                    out.push(((b & 0x0F) as i8) - 7);
+                }
+                if out.len() < n {
+                    out.push((((b >> 4) & 0x0F) as i8) - 7);
+                }
+                let _ = i;
+            }
+            out
+        }
+    }
+}
+
 /// An encoded payload: the bytes that would cross a real network.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Frame {
-    precision: WirePrecision,
+    format: WireFormat,
     entries: usize,
+    cols: usize,
     bytes: Vec<u8>,
 }
 
 impl Frame {
-    /// Precision the frame was encoded with.
-    pub fn precision(&self) -> WirePrecision {
-        self.precision
+    /// Wire format the frame was encoded with.
+    pub fn format(&self) -> WireFormat {
+        self.format
     }
 
     /// Number of f64 payload words the frame carries.
@@ -139,15 +478,19 @@ impl Frame {
     }
 }
 
-/// Encoder/decoder for wire payloads. Each tenant
-/// [`Session`](super::Session) owns one (default: lossless) and passes
-/// every request/response payload it ships through it; `CommStats.bytes`
-/// is the sum of the encoded frames' sizes, never per-collective
-/// `8 * d` arithmetic. Per-session ownership means a lossy tenant
-/// cannot degrade a concurrent lossless tenant's traffic.
+/// Per-tenant codec description. Each [`Session`](super::Session) owns
+/// one (default: lossless) plus a [`CodecState`] stream; every
+/// request/response payload passes through it and `CommStats.bytes` is
+/// the sum of the encoded frames' sizes, never per-collective `8 * d`
+/// arithmetic. Per-session ownership means a lossy tenant cannot
+/// degrade a concurrent lossless tenant's traffic — and per-session
+/// *state* means a feedback tenant's residual stream cannot be polluted
+/// by a neighbor either.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct WireCodec {
-    precision: WirePrecision,
+    kind: CodecKind,
+    feedback: bool,
+    adaptive: bool,
 }
 
 impl Default for WireCodec {
@@ -157,8 +500,9 @@ impl Default for WireCodec {
 }
 
 impl WireCodec {
+    /// A stateless fixed-width codec (the pre-ISSUE-10 family).
     pub fn new(precision: WirePrecision) -> Self {
-        WireCodec { precision }
+        WireCodec { kind: CodecKind::Stateless(precision), feedback: false, adaptive: false }
     }
 
     /// The default codec: full f64, bit-exact roundtrip.
@@ -166,71 +510,314 @@ impl WireCodec {
         Self::new(WirePrecision::F64)
     }
 
-    pub fn precision(&self) -> WirePrecision {
-        self.precision
+    /// Low-bit uniform quantizer at a fixed width.
+    pub fn quant(bits: QuantBits) -> Self {
+        WireCodec { kind: CodecKind::Quant(bits), feedback: false, adaptive: false }
+    }
+
+    /// Top-`s` sparsifier with kept values at `bits`.
+    pub fn top_s(s: u32, bits: QuantBits) -> Self {
+        WireCodec { kind: CodecKind::TopS { s, bits }, feedback: false, adaptive: false }
+    }
+
+    /// Turn on the error-feedback accumulator.
+    pub fn with_feedback(mut self) -> Self {
+        self.feedback = true;
+        self
+    }
+
+    /// Turn on the adaptive bit-width controller (Q4↔Q8 ladder; no-op
+    /// for stateless kinds). Adaptive implies residual tracking even
+    /// without feedback — the controller's input is the residual norm.
+    pub fn with_adaptive(mut self) -> Self {
+        self.adaptive = true;
+        self
+    }
+
+    pub fn kind(&self) -> CodecKind {
+        self.kind
+    }
+
+    pub fn feedback(&self) -> bool {
+        self.feedback
+    }
+
+    pub fn adaptive(&self) -> bool {
+        self.adaptive
+    }
+
+    /// Whether submits under this codec may coalesce into a fused
+    /// carrier. Only the stateless fixed-width codecs fuse: a feedback
+    /// residual stream or an adaptive controller is keyed per session,
+    /// and a carrier frame is shared — a stateful member entering a
+    /// fusion window must displace the batch, never join it.
+    pub fn fuses(&self) -> bool {
+        matches!(self.kind, CodecKind::Stateless(_)) && !self.feedback && !self.adaptive
+    }
+
+    /// Whether this codec carries per-session stream state (the
+    /// complement of [`WireCodec::fuses`]).
+    pub fn is_stateful(&self) -> bool {
+        !self.fuses()
+    }
+
+    /// The width the codec starts at (None for stateless kinds).
+    pub fn base_bits(&self) -> Option<QuantBits> {
+        match self.kind {
+            CodecKind::Stateless(_) => None,
+            CodecKind::Quant(b) => Some(b),
+            CodecKind::TopS { bits, .. } => Some(bits),
+        }
+    }
+
+    /// Resolve the concrete format the next round ships under, reading
+    /// the adaptive controller's current width from `state`.
+    pub fn resolve(&self, state: &CodecState) -> WireFormat {
+        let bits = state.active_bits.or_else(|| self.base_bits());
+        match self.kind {
+            CodecKind::Stateless(p) => WireFormat::Plain(p),
+            CodecKind::Quant(b) => WireFormat::Quant(bits.unwrap_or(b)),
+            CodecKind::TopS { s, bits: b } => WireFormat::TopS { s, bits: bits.unwrap_or(b) },
+        }
+    }
+
+    /// The format ignoring any adaptive state (base width).
+    pub fn default_format(&self) -> WireFormat {
+        match self.kind {
+            CodecKind::Stateless(p) => WireFormat::Plain(p),
+            CodecKind::Quant(b) => WireFormat::Quant(b),
+            CodecKind::TopS { s, bits } => WireFormat::TopS { s, bits },
+        }
     }
 
     /// Size in bytes of the frame [`WireCodec::encode`] would produce
-    /// for a payload of `words` f64 words. Frames are fixed-width, so
-    /// this is exact; the equivalence with `encode` is pinned by the
-    /// codec tests and the propcheck byte property.
+    /// for a single-column payload of `words` f64 words at the base
+    /// format.
     pub fn frame_bytes(&self, words: usize) -> usize {
-        words * self.precision.bytes_per_entry()
+        self.default_format().frame_bytes(words, 1)
     }
 
-    /// Encode a payload into the bytes that would cross the wire.
+    /// Encode a single-column payload at the base format.
     pub fn encode(&self, payload: &[f64]) -> Frame {
-        let bpe = self.precision.bytes_per_entry();
-        let mut bytes = Vec::with_capacity(payload.len() * bpe);
-        match self.precision {
-            WirePrecision::F64 => {
-                for x in payload {
-                    bytes.extend_from_slice(&x.to_le_bytes());
-                }
-            }
-            WirePrecision::F32 => {
-                for x in payload {
-                    bytes.extend_from_slice(&(*x as f32).to_le_bytes());
-                }
-            }
-            WirePrecision::Bf16 => {
-                for x in payload {
-                    bytes.extend_from_slice(&f64_to_bf16(*x).to_le_bytes());
-                }
-            }
-        }
-        Frame { precision: self.precision, entries: payload.len(), bytes }
+        self.default_format().encode(payload, 1)
     }
 
-    /// Decode a frame back into f64 words. Panics on a precision
-    /// mismatch — a frame is only meaningful to the codec that wrote it.
+    /// Decode a frame back into f64 words. Panics on a format mismatch
+    /// — a frame is only meaningful to the codec that wrote it.
     pub fn decode(&self, frame: &Frame) -> Vec<f64> {
-        assert_eq!(
-            frame.precision, self.precision,
-            "codec/frame precision mismatch: frame is {:?}, codec is {:?}",
-            frame.precision, self.precision
-        );
-        decode_raw(self.precision, &frame.bytes)
+        self.default_format().decode(frame)
     }
 
-    /// Pass a payload through encode→decode in place — exactly what
-    /// shipping the frame does to the numbers — and return the frame's
-    /// size in bytes. This is the cluster's per-message billing
-    /// primitive: for lossy codecs the byte count comes from the
-    /// materialized frame itself, so billed bytes and shipped bytes
-    /// cannot diverge. The lossless F64 codec skips materialization
-    /// (the roundtrip is bit-exact and the frame size is `8·len`;
-    /// both facts are pinned by `f64_codec_roundtrips_bit_exactly` and
-    /// the propcheck byte property, which use [`WireCodec::encode`]
-    /// directly) so the default path stays allocation-free.
+    /// Pass a single-column payload through the base format's loss in
+    /// place — **without** feedback state (the stateless billing
+    /// primitive; stream-stateful encoding goes through
+    /// [`CodecState::step`]) — and return the frame's size in bytes.
+    /// The lossless F64 codec is a no-op on the values.
     pub fn transcode(&self, payload: &mut [f64]) -> usize {
-        if self.precision == WirePrecision::F64 {
-            return self.frame_bytes(payload.len());
+        let format = self.default_format();
+        format.quantize(payload, 1);
+        format.frame_bytes(payload.len(), 1)
+    }
+
+    /// Label for CSV columns and CLI reports, e.g. `q4+ef` or
+    /// `top8-q8+ef+ad`.
+    pub fn label(&self) -> String {
+        let mut l = self.default_format().label();
+        if self.feedback {
+            l.push_str("+ef");
         }
-        let frame = self.encode(payload);
-        let decoded = self.decode(&frame);
-        payload.copy_from_slice(&decoded);
-        frame.wire_bytes()
+        if self.adaptive {
+            l.push_str("+ad");
+        }
+        l
+    }
+}
+
+/// Adaptive controller thresholds: widen when the relative residual of
+/// a round exceeds [`WIDEN_ABOVE`], narrow when it drops below
+/// [`NARROW_BELOW`]. The dead band between them keeps the ladder from
+/// oscillating on a flat residual trajectory.
+pub const WIDEN_ABOVE: f64 = 0.25;
+pub const NARROW_BELOW: f64 = 0.02;
+
+/// One direction's codec stream state: the error-feedback residual, the
+/// adaptive controller's current width, and the last measured relative
+/// residual norm. Owned per session (leader→workers, in the session's
+/// codec lane) and per (worker, session id) (worker→leader, in the
+/// worker's [`ReplyBank`]). **The only mutation entry points are
+/// [`CodecState::step`] and [`CodecState::adapt`]** — the lint's
+/// `codec-state-mutation` rule confines both (and all field writes) to
+/// `cluster/wire.rs` + `cluster/session.rs`.
+#[derive(Clone, Debug, Default)]
+pub struct CodecState {
+    residual: Vec<f64>,
+    active_bits: Option<QuantBits>,
+    last_rel: f64,
+    widenings: u64,
+    narrowings: u64,
+}
+
+impl CodecState {
+    /// Fresh state for a codec (adaptive width starts at the base).
+    pub fn for_codec(codec: &WireCodec) -> Self {
+        CodecState { active_bits: codec.base_bits(), ..CodecState::default() }
+    }
+
+    /// Relative residual norm of the last stepped payload (0 until a
+    /// tracked payload has been encoded).
+    pub fn last_residual_norm(&self) -> f64 {
+        self.last_rel
+    }
+
+    /// The adaptive controller's current width, if the codec has one.
+    pub fn active_bits(&self) -> Option<QuantBits> {
+        self.active_bits
+    }
+
+    /// (widenings, narrowings) the adaptive controller has performed on
+    /// this stream.
+    pub fn transitions(&self) -> (u64, u64) {
+        (self.widenings, self.narrowings)
+    }
+
+    /// One stream step: add the carried residual (if `feedback`),
+    /// quantize the payload at `format` in place, store the new
+    /// residual and its relative norm (if `feedback || track`), and
+    /// return the billed frame bytes. The residual resets when the
+    /// payload length changes — a stream is only a stream while its
+    /// shape is stable.
+    pub fn step(
+        &mut self,
+        format: WireFormat,
+        feedback: bool,
+        track: bool,
+        payload: &mut [f64],
+        cols: usize,
+    ) -> usize {
+        let tracked = feedback || track;
+        if feedback {
+            if self.residual.len() != payload.len() {
+                self.residual = vec![0.0; payload.len()];
+            }
+            for (x, e) in payload.iter_mut().zip(&self.residual) {
+                *x += *e;
+            }
+        }
+        let pre: Vec<f64> = if tracked { payload.to_vec() } else { Vec::new() };
+        format.quantize(payload, cols);
+        if tracked {
+            if self.residual.len() != payload.len() {
+                self.residual = vec![0.0; payload.len()];
+            }
+            let mut rn = 0.0;
+            let mut pn = 0.0;
+            for i in 0..payload.len() {
+                let e = pre[i] - payload[i];
+                self.residual[i] = e;
+                rn += e * e;
+                pn += pre[i] * pre[i];
+            }
+            self.last_rel = if pn > 0.0 { (rn / pn).sqrt() } else { 0.0 };
+        }
+        format.frame_bytes(payload.len(), cols.max(1))
+    }
+
+    /// Adaptive ladder step from the last residual norm: Q4→Q8 when the
+    /// residual is too large, Q8→Q4 when it is comfortably small.
+    /// Returns (widened, narrowed). No-op unless `codec.adaptive()`,
+    /// the codec has a quantized width to move, and at least one
+    /// payload has been stepped (a fresh stream's `last_rel` of 0 is
+    /// absence of evidence, not evidence of a clean channel).
+    pub fn adapt(&mut self, codec: &WireCodec) -> (bool, bool) {
+        if !codec.adaptive() || self.residual.is_empty() {
+            return (false, false);
+        }
+        let Some(bits) = self.active_bits else {
+            return (false, false);
+        };
+        if bits == QuantBits::Q4 && self.last_rel > WIDEN_ABOVE {
+            self.active_bits = Some(QuantBits::Q8);
+            self.widenings += 1;
+            return (true, false);
+        }
+        if bits == QuantBits::Q8 && self.last_rel < NARROW_BELOW {
+            self.active_bits = Some(QuantBits::Q4);
+            self.narrowings += 1;
+            return (false, true);
+        }
+        (false, false)
+    }
+}
+
+/// Per-round wire descriptor: the resolved format a round ships under,
+/// whether its reply stream runs error feedback, and the issuing
+/// session id that keys the worker-side accumulator. Rides the request
+/// envelope (unbilled) so workers need no handshake to keep their
+/// stream state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WireDesc {
+    pub format: WireFormat,
+    pub feedback: bool,
+    pub sid: u64,
+}
+
+impl WireDesc {
+    /// Control-plane frames (shutdown, fused carriers): lossless, no
+    /// stream.
+    pub fn lossless() -> Self {
+        WireDesc::plain(WirePrecision::F64)
+    }
+
+    /// A stateless fixed-width descriptor with no stream key.
+    pub fn plain(prec: WirePrecision) -> Self {
+        WireDesc { format: WireFormat::Plain(prec), feedback: false, sid: 0 }
+    }
+}
+
+/// Worker-side reply compressor: one [`CodecState`] per session id,
+/// evicted deterministic-LRU at [`ReplyBank::CAP`] streams so the
+/// eviction sequence — and therefore every residual trajectory — is
+/// identical on both backends. Workers build their state purely from
+/// the request envelopes they see; nothing is shipped or handshaken.
+#[derive(Debug, Default)]
+pub struct ReplyBank {
+    // most-recently-used first
+    streams: Vec<(u64, CodecState)>,
+}
+
+impl ReplyBank {
+    /// Max concurrent feedback streams a worker tracks.
+    pub const CAP: usize = 64;
+
+    pub fn new() -> Self {
+        ReplyBank::default()
+    }
+
+    /// Number of live streams (for tests).
+    pub fn streams(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Compress a response payload in place at the request's descriptor:
+    /// stateless quantize when feedback is off, a [`CodecState::step`]
+    /// on the session's stream when it is on.
+    pub fn compress(&mut self, desc: &WireDesc, resp: &mut Response) {
+        let cols = resp.payload_cols();
+        let Some(p) = resp.payload_mut() else {
+            return;
+        };
+        if !desc.feedback {
+            desc.format.quantize(p, cols);
+            return;
+        }
+        if let Some(pos) = self.streams.iter().position(|(sid, _)| *sid == desc.sid) {
+            let entry = self.streams.remove(pos);
+            self.streams.insert(0, entry);
+        } else {
+            self.streams.insert(0, (desc.sid, CodecState::default()));
+            self.streams.truncate(Self::CAP);
+        }
+        self.streams[0].1.step(desc.format, true, false, p, cols);
     }
 }
 
@@ -259,14 +846,18 @@ fn decode_raw(prec: WirePrecision, raw: &[u8]) -> Vec<f64> {
 // transport ships. Body layout (the transport adds a u32 length
 // prefix):
 //
-//   u8 kind (request / response) | u64 seq | u8 precision | u8 tag |
-//   variant fields...
+//   request:  u8 kind | u64 seq | format tag(s) | u8 feedback | u64 sid
+//             | u8 tag | variant fields...
+//   response: u8 kind | u64 seq | format tag(s) | u8 tag | fields...
 //
+// The format tag is one byte (0=f64, 1=f32, 2=bf16, 3=q8, 4=q4,
+// 5=top-s@q8, 6=top-s@q4), followed by a u32 `s` for the top-s tags.
 // Counts and shapes are u64 LE; hyperparameters are raw f64 bits
 // (lossless — they are envelope, not payload); strings are u32 length +
-// UTF-8; f64 payload sections are `u64 word count` + the codec-encoded
-// bytes (`words * bytes_per_entry` of them). The payload section is the
-// only billed part of the frame.
+// UTF-8; f64 payload sections are `u64 word count` + the format-encoded
+// bytes (quantized sections additionally carry their u32 column count
+// as envelope). The format-encoded payload section is the only billed
+// part of the frame.
 // ---------------------------------------------------------------------
 
 const MSG_REQUEST: u8 = 0xA1;
@@ -292,22 +883,44 @@ fn prec_tag(p: WirePrecision) -> u8 {
     }
 }
 
-fn prec_from_tag(t: u8) -> Result<WirePrecision> {
-    match t {
-        0 => Ok(WirePrecision::F64),
-        1 => Ok(WirePrecision::F32),
-        2 => Ok(WirePrecision::Bf16),
-        other => bail!("unknown wire precision tag {other}"),
+fn put_format(out: &mut Vec<u8>, f: WireFormat) {
+    match f {
+        WireFormat::Plain(p) => out.push(prec_tag(p)),
+        WireFormat::Quant(QuantBits::Q8) => out.push(3),
+        WireFormat::Quant(QuantBits::Q4) => out.push(4),
+        WireFormat::TopS { s, bits } => {
+            out.push(match bits {
+                QuantBits::Q8 => 5,
+                QuantBits::Q4 => 6,
+            });
+            out.extend_from_slice(&s.to_le_bytes());
+        }
     }
+}
+
+fn format_from(c: &mut Cursor) -> Result<WireFormat> {
+    Ok(match c.u8()? {
+        0 => WireFormat::Plain(WirePrecision::F64),
+        1 => WireFormat::Plain(WirePrecision::F32),
+        2 => WireFormat::Plain(WirePrecision::Bf16),
+        3 => WireFormat::Quant(QuantBits::Q8),
+        4 => WireFormat::Quant(QuantBits::Q4),
+        5 => WireFormat::TopS { s: c.u32()?, bits: QuantBits::Q8 },
+        6 => WireFormat::TopS { s: c.u32()?, bits: QuantBits::Q4 },
+        other => bail!("unknown wire format tag {other}"),
+    })
 }
 
 fn put_u64(out: &mut Vec<u8>, x: u64) {
     out.extend_from_slice(&x.to_le_bytes());
 }
 
-fn put_payload(out: &mut Vec<u8>, codec: WireCodec, payload: &[f64]) {
+fn put_payload(out: &mut Vec<u8>, format: WireFormat, payload: &[f64], cols: usize) {
     put_u64(out, payload.len() as u64);
-    out.extend_from_slice(codec.encode(payload).bytes());
+    if let WireFormat::Quant(_) = format {
+        out.extend_from_slice(&(cols.max(1) as u32).to_le_bytes());
+    }
+    out.extend_from_slice(format.encode(payload, cols).bytes());
 }
 
 fn put_string(out: &mut Vec<u8>, s: &str) {
@@ -362,15 +975,64 @@ impl<'a> Cursor<'a> {
         usize::try_from(self.u64()?).context("count does not fit this platform's usize")
     }
 
-    /// A payload section: `u64` word count + codec-encoded bytes at
-    /// `prec`. The byte count is validated *before* any allocation.
-    pub(crate) fn payload(&mut self, prec: WirePrecision) -> Result<Vec<f64>> {
+    /// A payload section: `u64` word count + format-encoded bytes
+    /// (quantized sections carry their column count). Every byte count
+    /// is validated *before* any allocation, and sparse frames validate
+    /// their index list (in range, strictly ascending, canonical count)
+    /// so a corrupt frame cannot scatter out of bounds.
+    pub(crate) fn payload(&mut self, format: WireFormat) -> Result<Vec<f64>> {
         let words = self.usize()?;
-        let nbytes = words
-            .checked_mul(prec.bytes_per_entry())
-            .ok_or_else(|| anyhow::anyhow!("payload word count {words} overflows"))?;
-        let raw = self.take(nbytes)?;
-        Ok(decode_raw(prec, raw))
+        match format {
+            WireFormat::Plain(prec) => {
+                let nbytes = words
+                    .checked_mul(prec.bytes_per_entry())
+                    .ok_or_else(|| anyhow::anyhow!("payload word count {words} overflows"))?;
+                let raw = self.take(nbytes)?;
+                Ok(decode_raw(prec, raw))
+            }
+            WireFormat::Quant(bits) => {
+                let cols = self.u32()? as usize;
+                ensure!(cols >= 1, "quantized payload with zero columns");
+                ensure!(
+                    words % cols == 0,
+                    "quantized payload of {words} words is not {cols} columns"
+                );
+                let mut scales = Vec::with_capacity(cols.min(words.max(1)));
+                for _ in 0..cols {
+                    scales.push(f32::from_bits(self.u32()?));
+                }
+                let raw = self.take(bits.level_bytes(words))?;
+                let levels = unpack_levels(bits, raw, words);
+                Ok(levels.iter().enumerate().map(|(i, &l)| dequant(l, scales[i % cols])).collect())
+            }
+            WireFormat::TopS { s, bits } => {
+                let kept = self.u32()? as usize;
+                ensure!(
+                    kept == (s as usize).min(words),
+                    "top-s frame keeps {kept} of {words} words, expected min({s}, {words})"
+                );
+                let scale = f32::from_bits(self.u32()?);
+                let mut out = vec![0.0; words];
+                let mut idxs = Vec::with_capacity(kept);
+                let mut prev: Option<usize> = None;
+                for _ in 0..kept {
+                    let i = self.u32()? as usize;
+                    ensure!(i < words, "top-s index {i} out of range for {words} words");
+                    ensure!(
+                        prev.map_or(true, |p| i > p),
+                        "top-s indices not strictly ascending"
+                    );
+                    prev = Some(i);
+                    idxs.push(i);
+                }
+                let raw = self.take(bits.level_bytes(kept))?;
+                let levels = unpack_levels(bits, raw, kept);
+                for (j, &i) in idxs.iter().enumerate() {
+                    out[i] = dequant(levels[j], scale);
+                }
+                Ok(out)
+            }
+        }
     }
 
     pub(crate) fn string(&mut self) -> Result<String> {
@@ -390,23 +1052,27 @@ impl<'a> Cursor<'a> {
 }
 
 /// Encode a whole request as a frame body: the byte representation the
-/// TCP transport ships (payload section encoded through `codec`).
-pub fn encode_request(seq: u64, codec: WireCodec, req: &Request) -> Vec<u8> {
-    let mut out =
-        Vec::with_capacity(48 + req.payload().map_or(0, |p| codec.frame_bytes(p.len())));
+/// TCP transport ships (payload section encoded at `desc.format` —
+/// idempotently, since the leader already quantized the values).
+pub fn encode_request(seq: u64, desc: WireDesc, req: &Request) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        64 + req.payload().map_or(0, |p| desc.format.frame_bytes(p.len(), req.payload_cols())),
+    );
     out.push(MSG_REQUEST);
     put_u64(&mut out, seq);
-    out.push(prec_tag(codec.precision()));
+    put_format(&mut out, desc.format);
+    out.push(u8::from(desc.feedback));
+    put_u64(&mut out, desc.sid);
     match req {
         Request::CovMatVec(v) => {
             out.push(REQ_COV_MATVEC);
-            put_payload(&mut out, codec, v);
+            put_payload(&mut out, desc.format, v, 1);
         }
         Request::CovMatMat { rows, cols, data } => {
             out.push(REQ_COV_MATMAT);
             put_u64(&mut out, *rows as u64);
             put_u64(&mut out, *cols as u64);
-            put_payload(&mut out, codec, data);
+            put_payload(&mut out, desc.format, data, *cols);
         }
         Request::LocalTopEigvec { unbiased_signs } => {
             out.push(REQ_LOCAL_TOP_EIGVEC);
@@ -422,29 +1088,34 @@ pub fn encode_request(seq: u64, codec: WireCodec, req: &Request) -> Vec<u8> {
             put_u64(&mut out, eta0.to_bits());
             put_u64(&mut out, t0.to_bits());
             put_u64(&mut out, *t_start);
-            put_payload(&mut out, codec, w);
+            put_payload(&mut out, desc.format, w, 1);
         }
         Request::Shutdown => out.push(REQ_SHUTDOWN),
     }
     out
 }
 
-/// Decode a request frame body. Returns the sequence number, the
-/// precision its payload shipped under (workers echo it on the reply),
-/// and the reconstructed request. Truncated, trailing-byte,
-/// shape-mismatched, or unknown-tag frames are errors — never panics.
-pub fn decode_request(body: &[u8]) -> Result<(u64, WirePrecision, Request)> {
+/// Decode a request frame body. Returns the sequence number, the wire
+/// descriptor its payload shipped under (workers echo the format on the
+/// reply and key their feedback stream on the sid), and the
+/// reconstructed request. Truncated, trailing-byte, shape-mismatched,
+/// or unknown-tag frames are errors — never panics.
+pub fn decode_request(body: &[u8]) -> Result<(u64, WireDesc, Request)> {
     let mut c = Cursor::new(body);
     let kind = c.u8()?;
     ensure!(kind == MSG_REQUEST, "not a request frame (kind 0x{kind:02x})");
     let seq = c.u64()?;
-    let prec = prec_from_tag(c.u8()?)?;
+    let format = format_from(&mut c)?;
+    let fb = c.u8()?;
+    ensure!(fb <= 1, "bad feedback byte {fb} in frame");
+    let sid = c.u64()?;
+    let desc = WireDesc { format, feedback: fb == 1, sid };
     let req = match c.u8()? {
-        REQ_COV_MATVEC => Request::CovMatVec(c.payload(prec)?),
+        REQ_COV_MATVEC => Request::CovMatVec(c.payload(format)?),
         REQ_COV_MATMAT => {
             let rows = c.usize()?;
             let cols = c.usize()?;
-            let data = c.payload(prec)?;
+            let data = c.payload(format)?;
             ensure!(
                 rows.checked_mul(cols) == Some(data.len()),
                 "cov_matmat frame: payload of {} words != {rows}x{cols}",
@@ -463,35 +1134,36 @@ pub fn decode_request(body: &[u8]) -> Result<(u64, WirePrecision, Request)> {
             let eta0 = f64::from_bits(c.u64()?);
             let t0 = f64::from_bits(c.u64()?);
             let t_start = c.u64()?;
-            let w = c.payload(prec)?;
+            let w = c.payload(format)?;
             Request::OjaPass { w, eta0, t0, t_start }
         }
         REQ_SHUTDOWN => Request::Shutdown,
         other => bail!("unknown request tag {other}"),
     };
     c.finish()?;
-    Ok((seq, prec, req))
+    Ok((seq, desc, req))
 }
 
-/// Encode a whole response as a frame body (payload section encoded
-/// through `codec` — workers reply at the precision the request frame
-/// carried, so the leader's decode/transcode is value-preserving).
-pub fn encode_response(seq: u64, codec: WireCodec, resp: &Response) -> Vec<u8> {
-    let mut out =
-        Vec::with_capacity(48 + resp.payload().map_or(0, |p| codec.frame_bytes(p.len())));
+/// Encode a whole response as a frame body (payload section encoded at
+/// `format` — workers reply at the format the request frame carried, so
+/// the leader's decode is value-preserving).
+pub fn encode_response(seq: u64, format: WireFormat, resp: &Response) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        48 + resp.payload().map_or(0, |p| format.frame_bytes(p.len(), resp.payload_cols())),
+    );
     out.push(MSG_RESPONSE);
     put_u64(&mut out, seq);
-    out.push(prec_tag(codec.precision()));
+    put_format(&mut out, format);
     match resp {
         Response::Vector(v) => {
             out.push(RESP_VECTOR);
-            put_payload(&mut out, codec, v);
+            put_payload(&mut out, format, v, 1);
         }
         Response::Mat { rows, cols, data } => {
             out.push(RESP_MAT);
             put_u64(&mut out, *rows as u64);
             put_u64(&mut out, *cols as u64);
-            put_payload(&mut out, codec, data);
+            put_payload(&mut out, format, data, *cols);
         }
         Response::Err(msg) => {
             out.push(RESP_ERR);
@@ -503,18 +1175,18 @@ pub fn encode_response(seq: u64, codec: WireCodec, resp: &Response) -> Vec<u8> {
 
 /// Decode a response frame body (counterpart of [`encode_response`];
 /// same defensive guarantees as [`decode_request`]).
-pub fn decode_response(body: &[u8]) -> Result<(u64, WirePrecision, Response)> {
+pub fn decode_response(body: &[u8]) -> Result<(u64, WireFormat, Response)> {
     let mut c = Cursor::new(body);
     let kind = c.u8()?;
     ensure!(kind == MSG_RESPONSE, "not a response frame (kind 0x{kind:02x})");
     let seq = c.u64()?;
-    let prec = prec_from_tag(c.u8()?)?;
+    let format = format_from(&mut c)?;
     let resp = match c.u8()? {
-        RESP_VECTOR => Response::Vector(c.payload(prec)?),
+        RESP_VECTOR => Response::Vector(c.payload(format)?),
         RESP_MAT => {
             let rows = c.usize()?;
             let cols = c.usize()?;
-            let data = c.payload(prec)?;
+            let data = c.payload(format)?;
             ensure!(
                 rows.checked_mul(cols) == Some(data.len()),
                 "mat frame: payload of {} words != {rows}x{cols}",
@@ -526,7 +1198,7 @@ pub fn decode_response(body: &[u8]) -> Result<(u64, WirePrecision, Response)> {
         other => bail!("unknown response tag {other}"),
     };
     c.finish()?;
-    Ok((seq, prec, resp))
+    Ok((seq, format, resp))
 }
 
 #[cfg(test)]
@@ -541,8 +1213,21 @@ mod tests {
             12345.6789,
             -0.0,
             f64::MIN_POSITIVE, // subnormal territory after f32 cast -> 0
-            3.5e38,
+            3.5e37,
             -1.25,
+        ]
+    }
+
+    fn all_formats() -> Vec<WireFormat> {
+        vec![
+            WireFormat::Plain(WirePrecision::F64),
+            WireFormat::Plain(WirePrecision::F32),
+            WireFormat::Plain(WirePrecision::Bf16),
+            WireFormat::Quant(QuantBits::Q8),
+            WireFormat::Quant(QuantBits::Q4),
+            WireFormat::TopS { s: 3, bits: QuantBits::Q8 },
+            WireFormat::TopS { s: 3, bits: QuantBits::Q4 },
+            WireFormat::TopS { s: 64, bits: QuantBits::Q8 },
         ]
     }
 
@@ -611,12 +1296,18 @@ mod tests {
 
     #[test]
     fn quantize_is_the_encode_decode_roundtrip() {
-        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
-            let codec = WireCodec::new(prec);
+        for format in all_formats() {
             let mut quantized = sample_payload();
-            prec.quantize(&mut quantized);
-            let shipped = codec.decode(&codec.encode(&sample_payload()));
-            assert_eq!(quantized, shipped, "{prec:?}: quantize != ship");
+            format.quantize(&mut quantized, 1);
+            let shipped = format.decode(&format.encode(&sample_payload(), 1));
+            assert_eq!(quantized, shipped, "{format:?}: quantize != ship");
+        }
+        // the multi-column path too (8 words as 2 columns)
+        for format in [WireFormat::Quant(QuantBits::Q8), WireFormat::Quant(QuantBits::Q4)] {
+            let mut quantized = sample_payload();
+            format.quantize(&mut quantized, 2);
+            let shipped = format.decode(&format.encode(&sample_payload(), 2));
+            assert_eq!(quantized, shipped, "{format:?}/cols=2: quantize != ship");
         }
     }
 
@@ -633,156 +1324,378 @@ mod tests {
             prec.quantize(&mut want);
             assert_eq!(v, want);
         }
+        // the quantized family: billed bytes match the B(w) table
+        let mut v = sample_payload();
+        assert_eq!(WireCodec::quant(QuantBits::Q8).transcode(&mut v), 4 + 8);
+        let mut v = sample_payload();
+        assert_eq!(WireCodec::quant(QuantBits::Q4).transcode(&mut v), 4 + 4);
+        let mut v = sample_payload();
+        assert_eq!(WireCodec::top_s(3, QuantBits::Q8).transcode(&mut v), 8 + 12 + 3);
+        let mut v = sample_payload();
+        assert_eq!(WireCodec::top_s(3, QuantBits::Q4).transcode(&mut v), 8 + 12 + 2);
     }
 
     #[test]
-    #[should_panic(expected = "precision mismatch")]
+    #[should_panic(expected = "format mismatch")]
     fn decode_rejects_foreign_frames() {
         let frame = WireCodec::new(WirePrecision::F32).encode(&[1.0, 2.0]);
         let _ = WireCodec::lossless().decode(&frame);
     }
 
     #[test]
-    fn frame_bytes_matches_encode() {
-        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
-            let codec = WireCodec::new(prec);
+    fn frame_bytes_matches_encode_for_every_format() {
+        for format in all_formats() {
             for words in [0usize, 1, 7, 64] {
-                let payload = vec![0.25; words];
-                assert_eq!(codec.frame_bytes(words), codec.encode(&payload).wire_bytes());
+                let payload: Vec<f64> = (0..words).map(|i| (i as f64) - 2.5).collect();
+                assert_eq!(
+                    format.frame_bytes(words, 1),
+                    format.encode(&payload, 1).wire_bytes(),
+                    "{format:?} x {words} words"
+                );
+            }
+        }
+        // column counts change quantized frames (one scale per column)
+        let payload = vec![0.25; 12];
+        for cols in [1usize, 2, 3, 4, 6] {
+            for format in [WireFormat::Quant(QuantBits::Q8), WireFormat::Quant(QuantBits::Q4)] {
+                assert_eq!(
+                    format.frame_bytes(12, cols),
+                    format.encode(&payload, cols).wire_bytes(),
+                    "{format:?} x {cols} cols"
+                );
             }
         }
     }
 
     #[test]
-    fn default_codec_is_lossless() {
+    fn quantizers_are_reencode_idempotent() {
+        // quantize once, then encode→decode the quantized values: the
+        // TCP transport's second pass must be lossless (this is what
+        // keeps in-proc and TCP bills + numerics identical)
+        let mut rng = crate::rng::Pcg64::new(0x1de);
+        for format in all_formats() {
+            for cols in [1usize, 2] {
+                if cols == 2 && matches!(format, WireFormat::TopS { .. }) {
+                    continue; // top-s is column-blind
+                }
+                let mut v: Vec<f64> = (0..32).map(|_| rng.next_gaussian()).collect();
+                format.quantize(&mut v, cols);
+                let back = format.decode(&format.encode(&v, cols));
+                for (a, b) in v.iter().zip(&back) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{format:?}/cols={cols} not idempotent");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn q8_quantization_error_is_bounded_by_half_step() {
+        let mut rng = crate::rng::Pcg64::new(0x88);
+        let v: Vec<f64> = (0..128).map(|_| rng.next_gaussian()).collect();
+        let maxabs = v.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let mut q = v.clone();
+        WireFormat::Quant(QuantBits::Q8).quantize(&mut q, 1);
+        let step = maxabs / 127.0;
+        for (a, b) in v.iter().zip(&q) {
+            assert!((a - b).abs() <= 0.51 * step, "{a} vs {b} (step {step})");
+        }
+    }
+
+    #[test]
+    fn top_s_keeps_the_largest_magnitudes() {
+        let v = vec![0.1, -5.0, 0.2, 3.0, -0.3, 0.0, 4.0, 0.05];
+        let mut q = v.clone();
+        WireFormat::TopS { s: 3, bits: QuantBits::Q8 }.quantize(&mut q, 1);
+        // indices 1 (−5), 6 (4), 3 (3) survive; everything else is zero
+        for (i, x) in q.iter().enumerate() {
+            if [1usize, 3, 6].contains(&i) {
+                assert!((x - v[i]).abs() <= 0.03, "kept coordinate {i} moved: {x} vs {}", v[i]);
+            } else {
+                assert_eq!(*x, 0.0, "coordinate {i} should be dropped");
+            }
+        }
+    }
+
+    #[test]
+    fn error_feedback_recovers_dropped_mass_over_rounds() {
+        // a constant signal through a 4-bit feedback stream: the sum of
+        // the shipped payloads converges to the sum of the true signal
+        // (the EF telescoping identity: shipped_sum = true_sum − e_T)
+        let signal = vec![0.7, -0.31, 0.05, 0.002, -0.9, 0.44, 0.013, -0.27];
+        let codec = WireCodec::quant(QuantBits::Q4).with_feedback();
+        let mut state = CodecState::for_codec(&codec);
+        let mut shipped_sum = vec![0.0; signal.len()];
+        let rounds = 64;
+        for _ in 0..rounds {
+            let mut p = signal.clone();
+            state.step(codec.resolve(&state), true, false, &mut p, 1);
+            for (s, x) in shipped_sum.iter_mut().zip(&p) {
+                *s += x;
+            }
+        }
+        let maxabs = signal.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        for (s, x) in shipped_sum.iter().zip(&signal) {
+            // the residual is bounded by one quantization step, so the
+            // *averaged* error vanishes like 1/rounds
+            let avg_err = (s / rounds as f64 - x).abs();
+            assert!(avg_err <= 2.0 * maxabs / 7.0 / rounds as f64 + 1e-12, "avg err {avg_err}");
+        }
+    }
+
+    #[test]
+    fn feedback_residual_resets_on_payload_length_change() {
+        let codec = WireCodec::quant(QuantBits::Q4).with_feedback();
+        let mut state = CodecState::for_codec(&codec);
+        let mut a = vec![0.5; 8];
+        state.step(codec.resolve(&state), true, false, &mut a, 1);
+        assert!(state.last_residual_norm() > 0.0 || a == vec![0.5; 8]);
+        // a different length starts a fresh stream — no panic, no
+        // stale residual bleeding in
+        let mut b = vec![0.25; 4];
+        state.step(codec.resolve(&state), true, false, &mut b, 1);
+        assert_eq!(state.residual.len(), 4);
+    }
+
+    #[test]
+    fn adaptive_ladder_widens_and_narrows_on_thresholds() {
+        let codec = WireCodec::quant(QuantBits::Q4).with_feedback().with_adaptive();
+        let mut state = CodecState::for_codec(&codec);
+        assert_eq!(state.active_bits(), Some(QuantBits::Q4));
+        // a fresh stream has measured nothing: the controller holds
+        state.last_rel = WIDEN_ABOVE * 2.0;
+        assert_eq!(state.adapt(&codec), (false, false));
+        let mut p = vec![0.7, -0.3, 0.1, 0.9];
+        state.step(WireFormat::Quant(QuantBits::Q4), true, true, &mut p, 1);
+        state.last_rel = WIDEN_ABOVE * 2.0;
+        assert_eq!(state.adapt(&codec), (true, false));
+        assert_eq!(state.active_bits(), Some(QuantBits::Q8));
+        // in the dead band: nothing moves
+        state.last_rel = 0.1;
+        assert_eq!(state.adapt(&codec), (false, false));
+        state.last_rel = NARROW_BELOW / 2.0;
+        assert_eq!(state.adapt(&codec), (false, true));
+        assert_eq!(state.active_bits(), Some(QuantBits::Q4));
+        assert_eq!(state.transitions(), (1, 1));
+        // resolve() ships the controller's width, not the base width
+        state.active_bits = Some(QuantBits::Q8);
+        assert_eq!(codec.resolve(&state), WireFormat::Quant(QuantBits::Q8));
+        // stateless codecs never adapt
+        let f64c = WireCodec::lossless().with_adaptive();
+        let mut s2 = CodecState::for_codec(&f64c);
+        s2.last_rel = 1.0;
+        assert_eq!(s2.adapt(&f64c), (false, false));
+    }
+
+    #[test]
+    fn reply_bank_keys_streams_by_sid_and_evicts_lru() {
+        let mut bank = ReplyBank::new();
+        let desc = |sid: u64| WireDesc {
+            format: WireFormat::Quant(QuantBits::Q4),
+            feedback: true,
+            sid,
+        };
+        // fill past the cap; the oldest stream is evicted, deterministically
+        for sid in 0..(ReplyBank::CAP as u64 + 3) {
+            let mut r = Response::Vector(vec![0.3; 4]);
+            bank.compress(&desc(sid), &mut r);
+        }
+        assert_eq!(bank.streams(), ReplyBank::CAP);
+        assert!(bank.streams.iter().all(|(sid, _)| *sid >= 3), "oldest sids evicted first");
+        // touching a stream moves it to the front (LRU order)
+        let mut r = Response::Vector(vec![0.3; 4]);
+        bank.compress(&desc(10), &mut r);
+        assert_eq!(bank.streams[0].0, 10);
+        // stateless descriptors never allocate a stream
+        let mut bank2 = ReplyBank::new();
+        let mut r = Response::Vector(vec![0.3; 4]);
+        bank2.compress(&WireDesc::plain(WirePrecision::Bf16), &mut r);
+        assert_eq!(bank2.streams(), 0);
+        assert_eq!(r.payload().unwrap()[0], {
+            let mut v = [0.3];
+            WirePrecision::Bf16.quantize(&mut v);
+            v[0]
+        });
+    }
+
+    #[test]
+    fn codec_family_predicates() {
         assert_eq!(WireCodec::default(), WireCodec::lossless());
-        assert_eq!(WireCodec::default().precision(), WirePrecision::F64);
+        assert!(WireCodec::lossless().fuses());
+        assert!(WireCodec::new(WirePrecision::Bf16).fuses());
+        assert!(!WireCodec::new(WirePrecision::Bf16).with_feedback().fuses());
+        assert!(!WireCodec::quant(QuantBits::Q8).fuses());
+        assert!(!WireCodec::top_s(8, QuantBits::Q4).fuses());
+        assert!(!WireCodec::lossless().with_adaptive().fuses());
+        assert!(WireCodec::quant(QuantBits::Q4).is_stateful());
+        assert_eq!(WireCodec::quant(QuantBits::Q4).with_feedback().label(), "q4+ef");
+        assert_eq!(
+            WireCodec::top_s(8, QuantBits::Q8).with_feedback().with_adaptive().label(),
+            "top8-q8+ef+ad"
+        );
         assert_eq!(WirePrecision::F64.bytes_per_entry(), 8);
         assert_eq!(WirePrecision::F32.label(), "f32");
     }
 
     // -- whole-message frames ------------------------------------------
 
-    fn all_requests(prec: WirePrecision) -> Vec<Request> {
-        // payloads pre-quantized to the codec grid so the roundtrip is
-        // bit-exact under every precision
-        let q = |mut v: Vec<f64>| {
-            prec.quantize(&mut v);
+    fn all_requests(format: WireFormat) -> Vec<Request> {
+        // payloads pre-quantized to the format grid so the roundtrip is
+        // bit-exact under every format (idempotency)
+        let q = |mut v: Vec<f64>, cols: usize| {
+            format.quantize(&mut v, cols);
             v
         };
         vec![
-            Request::CovMatVec(q(sample_payload())),
-            Request::CovMatMat { rows: 4, cols: 2, data: q(sample_payload()) },
+            Request::CovMatVec(q(sample_payload(), 1)),
+            Request::CovMatMat { rows: 4, cols: 2, data: q(sample_payload(), 2) },
             Request::LocalTopEigvec { unbiased_signs: true },
             Request::LocalTopEigvec { unbiased_signs: false },
             Request::Gram,
             Request::LocalTopK { k: 3 },
-            Request::OjaPass { w: q(sample_payload()), eta0: 0.37, t0: 10.0, t_start: 42 },
+            Request::OjaPass { w: q(sample_payload(), 1), eta0: 0.37, t0: 10.0, t_start: 42 },
             Request::Shutdown,
         ]
     }
 
-    fn all_responses(prec: WirePrecision) -> Vec<Response> {
-        let q = |mut v: Vec<f64>| {
-            prec.quantize(&mut v);
+    fn all_responses(format: WireFormat) -> Vec<Response> {
+        let q = |mut v: Vec<f64>, cols: usize| {
+            format.quantize(&mut v, cols);
             v
         };
         vec![
-            Response::Vector(q(sample_payload())),
-            Response::Mat { rows: 2, cols: 4, data: q(sample_payload()) },
+            Response::Vector(q(sample_payload(), 1)),
+            Response::Mat { rows: 2, cols: 4, data: q(sample_payload(), 4) },
             Response::Err("worker 3 failed: bad rank 99 for d=8".to_string()),
         ]
     }
 
     #[test]
-    fn every_request_variant_roundtrips_under_every_precision() {
-        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
-            let codec = WireCodec::new(prec);
-            for (i, req) in all_requests(prec).iter().enumerate() {
-                let body = encode_request(1000 + i as u64, codec, req);
-                let (seq, p, back) = decode_request(&body).unwrap();
-                assert_eq!(seq, 1000 + i as u64);
-                assert_eq!(p, prec);
-                assert_eq!(&back, req, "{prec:?} request {i} changed across the wire");
+    fn every_request_variant_roundtrips_under_every_format() {
+        for format in all_formats() {
+            for feedback in [false, true] {
+                let desc = WireDesc { format, feedback, sid: 0xD5 };
+                for (i, req) in all_requests(format).iter().enumerate() {
+                    let body = encode_request(1000 + i as u64, desc, req);
+                    let (seq, d, back) = decode_request(&body).unwrap();
+                    assert_eq!(seq, 1000 + i as u64);
+                    assert_eq!(d, desc);
+                    assert_eq!(&back, req, "{format:?} request {i} changed across the wire");
+                }
             }
         }
     }
 
     #[test]
-    fn every_response_variant_roundtrips_under_every_precision() {
-        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
-            let codec = WireCodec::new(prec);
-            for (i, resp) in all_responses(prec).iter().enumerate() {
-                let body = encode_response(7 + i as u64, codec, resp);
-                let (seq, p, back) = decode_response(&body).unwrap();
+    fn every_response_variant_roundtrips_under_every_format() {
+        for format in all_formats() {
+            for (i, resp) in all_responses(format).iter().enumerate() {
+                let body = encode_response(7 + i as u64, format, resp);
+                let (seq, f, back) = decode_response(&body).unwrap();
                 assert_eq!(seq, 7 + i as u64);
-                assert_eq!(p, prec);
-                assert_eq!(&back, resp, "{prec:?} response {i} changed across the wire");
+                assert_eq!(f, format);
+                assert_eq!(&back, resp, "{format:?} response {i} changed across the wire");
             }
         }
     }
 
     #[test]
     fn decode_rejects_truncated_and_length_mismatched_frames() {
-        let codec = WireCodec::lossless();
-        let body = encode_request(9, codec, &Request::CovMatVec(sample_payload()));
-        // every strict prefix errors out instead of panicking
-        for cut in 0..body.len() {
-            assert!(decode_request(&body[..cut]).is_err(), "prefix of {cut} bytes accepted");
-        }
-        // trailing garbage is a length mismatch, not a silent accept
-        let mut longer = body.clone();
-        longer.push(0);
-        let err = decode_request(&longer).unwrap_err().to_string();
-        assert!(err.contains("length mismatch"), "{err}");
-        // same on the response side
-        let rbody = encode_response(9, codec, &Response::Vector(sample_payload()));
-        for cut in 0..rbody.len() {
-            assert!(decode_response(&rbody[..cut]).is_err());
+        for format in all_formats() {
+            let desc = WireDesc { format, feedback: true, sid: 7 };
+            let mut payload = sample_payload();
+            format.quantize(&mut payload, 1);
+            let body = encode_request(9, desc, &Request::CovMatVec(payload.clone()));
+            // every strict prefix errors out instead of panicking
+            for cut in 0..body.len() {
+                assert!(
+                    decode_request(&body[..cut]).is_err(),
+                    "{format:?}: prefix of {cut} bytes accepted"
+                );
+            }
+            // trailing garbage is a length mismatch, not a silent accept
+            let mut longer = body.clone();
+            longer.push(0);
+            let err = decode_request(&longer).unwrap_err().to_string();
+            assert!(err.contains("length mismatch"), "{err}");
+            // same on the response side
+            let rbody = encode_response(9, format, &Response::Vector(payload));
+            for cut in 0..rbody.len() {
+                assert!(decode_response(&rbody[..cut]).is_err());
+            }
         }
     }
 
     #[test]
     fn decode_rejects_wrong_kind_bad_tags_and_shape_mismatches() {
-        let codec = WireCodec::lossless();
-        let req = encode_request(1, codec, &Request::Gram);
-        let resp = encode_response(1, codec, &Response::Err("x".into()));
+        let desc = WireDesc::lossless();
+        let req = encode_request(1, desc, &Request::Gram);
+        let resp = encode_response(1, desc.format, &Response::Err("x".into()));
         assert!(decode_response(&req).is_err(), "request frame is not a response");
         assert!(decode_request(&resp).is_err(), "response frame is not a request");
         // unknown variant tag
         let mut bad = req.clone();
-        let tag_at = bad.len() - 1; // Gram body: kind|seq|prec|tag
+        let tag_at = bad.len() - 1; // Gram body: kind|seq|fmt|fb|sid|tag
         bad[tag_at] = 99;
         assert!(decode_request(&bad).unwrap_err().to_string().contains("unknown request tag"));
         // a CovMatMat whose declared shape disagrees with its payload
         let mismatched = encode_request(
             2,
-            codec,
-            &Request::CovMatMat { rows: 3, cols: 3, data: vec![0.5; 5] },
+            desc,
+            &Request::CovMatMat { rows: 5, cols: 1, data: vec![0.5; 5] },
         );
-        let err = decode_request(&mismatched).unwrap_err().to_string();
-        assert!(err.contains("!= 3x3"), "{err}");
-        // and a bad precision tag
-        let mut badprec = encode_request(3, codec, &Request::Gram);
-        badprec[9] = 7; // kind (1) + seq (8) -> precision byte
+        let mut broken = mismatched.clone();
+        // rows field sits right after kind|seq|fmt|fb|sid|tag = 20 bytes
+        broken[20] = 3;
+        let err = decode_request(&broken).unwrap_err().to_string();
+        assert!(err.contains("!= 3x1"), "{err}");
+        // and a bad format tag
+        let mut badprec = encode_request(3, desc, &Request::Gram);
+        badprec[9] = 7; // kind (1) + seq (8) -> format byte
         assert!(decode_request(&badprec)
             .unwrap_err()
             .to_string()
-            .contains("unknown wire precision"));
+            .contains("unknown wire format"));
+    }
+
+    #[test]
+    fn sparse_frames_reject_corrupt_index_lists() {
+        let format = WireFormat::TopS { s: 3, bits: QuantBits::Q8 };
+        let mut payload = sample_payload();
+        format.quantize(&mut payload, 1);
+        let good = encode_request(4, WireDesc { format, feedback: false, sid: 0 }, &Request::CovMatVec(payload));
+        // locate the first index (kind 1 + seq 8 + fmt 1 + s 4 + fb 1 +
+        // sid 8 + tag 1 + words 8 + count 4 + scale 4 = 40)
+        let idx_at = 40;
+        // out-of-range index
+        let mut oob = good.clone();
+        oob[idx_at..idx_at + 4].copy_from_slice(&900u32.to_le_bytes());
+        let err = decode_request(&oob).unwrap_err().to_string();
+        assert!(err.contains("out of range"), "{err}");
+        // non-ascending index list (second index duplicates the first)
+        let mut dup = good.clone();
+        let first = dup[idx_at..idx_at + 4].to_vec();
+        dup[idx_at + 4..idx_at + 8].copy_from_slice(&first);
+        let err = decode_request(&dup).unwrap_err().to_string();
+        assert!(err.contains("ascending"), "{err}");
+        // non-canonical kept count
+        let mut short = good.clone();
+        short[idx_at - 8..idx_at - 4].copy_from_slice(&2u32.to_le_bytes());
+        assert!(decode_request(&short).is_err());
     }
 
     #[test]
     fn frame_payload_section_is_exactly_the_codec_frame() {
         // the billed bytes and the shipped bytes are the same bytes:
-        // the payload section of a message frame is the codec's encoded
+        // the payload section of a message frame is the format's encoded
         // frame, verbatim
-        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
-            let codec = WireCodec::new(prec);
-            let payload = sample_payload();
-            let frame = codec.encode(&payload);
-            let body = encode_request(5, codec, &Request::CovMatVec(payload.clone()));
+        for format in all_formats() {
+            let mut payload = sample_payload();
+            format.quantize(&mut payload, 1);
+            let frame = format.encode(&payload, 1);
+            let desc = WireDesc { format, feedback: false, sid: 0 };
+            let body = encode_request(5, desc, &Request::CovMatVec(payload.clone()));
             let tail = &body[body.len() - frame.wire_bytes()..];
-            assert_eq!(tail, frame.bytes(), "{prec:?}: payload section != codec frame");
+            assert_eq!(tail, frame.bytes(), "{format:?}: payload section != codec frame");
         }
     }
 }

@@ -11,7 +11,12 @@
 //! passes every request through the issuing session's
 //! [`WireCodec`](super::WireCodec) (encode→decode) before it reaches this
 //! loop, so under a lossy codec the shard math runs on the degraded
-//! vectors — no quantization logic lives here.
+//! vectors. Replies are compressed **worker-side** at the request's
+//! [`WireDesc`](super::WireDesc): each worker keeps a
+//! [`ReplyBank`](super::ReplyBank) — one error-feedback accumulator per
+//! session id — and quantizes every reply payload through it before the
+//! send, on every backend. No handshake ships this state; it is rebuilt
+//! purely from the request envelopes the worker sees.
 
 use std::sync::mpsc;
 use std::sync::Arc;
@@ -21,6 +26,7 @@ use crate::linalg::vec_ops;
 use crate::rng::Pcg64;
 
 use super::message::{Request, Response};
+use super::wire::{ReplyBank, WireDesc};
 
 /// Local compute engine interface. `&mut self` because engines may keep
 /// caches (compiled executables, scratch buffers).
@@ -281,16 +287,17 @@ pub(crate) fn worker_main(
     shard: Arc<Shard>,
     spec: OracleSpec,
     seed: u64,
-    rx: mpsc::Receiver<(u64, Request)>,
+    rx: mpsc::Receiver<(u64, WireDesc, Request)>,
     tx: mpsc::Sender<crate::transport::ReplyFrame>,
 ) {
     let mut rng = worker_rng(id, seed);
+    let mut bank = ReplyBank::new();
     let mut oracle: Box<dyn ComputeOracle> = match spec.build() {
         Ok(o) => o,
         Err(e) => {
             // Surface construction failure on the first request instead of
             // crashing the thread silently.
-            while let Ok((seq, req)) = rx.recv() {
+            while let Ok((seq, _desc, req)) = rx.recv() {
                 if matches!(req, Request::Shutdown) {
                     return;
                 }
@@ -299,10 +306,14 @@ pub(crate) fn worker_main(
             return;
         }
     };
-    while let Ok((seq, req)) = rx.recv() {
-        let Some(resp) = handle_request(oracle.as_mut(), &shard, &mut rng, req) else {
+    while let Ok((seq, desc, req)) = rx.recv() {
+        let Some(mut resp) = handle_request(oracle.as_mut(), &shard, &mut rng, req) else {
             break; // Shutdown
         };
+        // worker-side reply compression at the round's format — the
+        // same ReplyBank path the TCP worker loop runs, so reply
+        // numerics and feedback streams are backend-invariant
+        bank.compress(&desc, &mut resp);
         if tx.send((id, seq, resp)).is_err() {
             break; // leader gone
         }

@@ -24,13 +24,17 @@
 //! bf16 frames (8-bit exponent, 7 explicit mantissa bits,
 //! round-to-nearest-even via f32 — relative error <= 2^-8 + 2^-24) put
 //! a small floor on the iterate, visible once the statistical error
-//! drops below it.
+//! drops below it. The stateful family goes further: 4-bit frames with
+//! error feedback track the f64 trajectory at a fraction of the bytes,
+//! and the run's `info` surfaces the leader-side residual norm
+//! (`residual_feedback_norm`) and adaptive transitions so the
+//! compression error is observable next to `final_drift`.
 
 use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::cluster::{Session, WireCodec};
+use crate::cluster::{CodecKind, Session, WireCodec};
 use crate::linalg::vec_ops::{alignment_error, normalize};
 use crate::rng::Pcg64;
 
@@ -40,18 +44,29 @@ pub use crate::cluster::WirePrecision;
 
 /// Distributed power method run entirely through a lossy wire codec:
 /// broadcasts *and* gathered replies are shipped as encoded frames, and
-/// the byte bill is whatever the codec actually put on the wire.
+/// the byte bill is whatever the codec actually put on the wire. Takes
+/// any [`WireCodec`] — including the stateful error-feedback /
+/// sparsifying / adaptive family — and surfaces the leader-side
+/// residual trajectory in `info` alongside `final_drift`.
 #[derive(Clone, Debug)]
 pub struct QuantizedPower {
-    pub precision: WirePrecision,
+    pub codec: WireCodec,
     pub max_iters: usize,
     pub tol: f64,
     pub seed: u64,
 }
 
 impl QuantizedPower {
+    /// Back-compat constructor for the stateless fixed-width family.
     pub fn new(precision: WirePrecision) -> Self {
-        QuantizedPower { precision, max_iters: 2_000, tol: 1e-18, seed: 0x9d }
+        Self::with_codec(WireCodec::new(precision))
+    }
+
+    /// Run the power loop through an arbitrary wire codec (quantized,
+    /// sparsified, error-feedback, adaptive — anything the session's
+    /// wire layer speaks).
+    pub fn with_codec(codec: WireCodec) -> Self {
+        QuantizedPower { codec, max_iters: 2_000, tol: 1e-18, seed: 0x9d }
     }
 
     fn power_loop(&self, session: &Session<'_>) -> Result<(Vec<f64>, BTreeMap<String, f64>)> {
@@ -86,16 +101,30 @@ impl QuantizedPower {
             "wire_bytes_per_round".into(),
             if st.rounds > 0 { st.bytes as f64 / st.rounds as f64 } else { 0.0 },
         );
+        // the leader-side stream state, read while the codec is still
+        // installed (set_codec resets the stream): the last relative
+        // error-feedback residual norm — 0.0 for stateless codecs, the
+        // per-round compression error otherwise — plus the adaptive
+        // controller's transition counts
+        info.insert("residual_feedback_norm".into(), session.residual_norm());
+        let (wid, nar) = session.codec_transitions();
+        info.insert("codec_widenings".into(), wid as f64);
+        info.insert("codec_narrowings".into(), nar as f64);
         Ok((w, info))
     }
 }
 
 impl Algorithm for QuantizedPower {
     fn name(&self) -> &'static str {
-        match self.precision {
-            WirePrecision::F64 => "power_wire_f64",
-            WirePrecision::F32 => "power_wire_f32",
-            WirePrecision::Bf16 => "power_wire_bf16",
+        // coarse, flag-blind names: job registries key on the codec
+        // family; the exact label (with +ef/+ad) lives in the obs trace
+        match self.codec.kind() {
+            CodecKind::Stateless(WirePrecision::F64) => "power_wire_f64",
+            CodecKind::Stateless(WirePrecision::F32) => "power_wire_f32",
+            CodecKind::Stateless(WirePrecision::Bf16) => "power_wire_bf16",
+            CodecKind::Quant(crate::cluster::QuantBits::Q8) => "power_wire_q8",
+            CodecKind::Quant(crate::cluster::QuantBits::Q4) => "power_wire_q4",
+            CodecKind::TopS { .. } => "power_wire_tops",
         }
     }
 
@@ -105,7 +134,7 @@ impl Algorithm for QuantizedPower {
             // of the run — concurrent tenants' wires are untouched —
             // and restore whatever was there before, even on error
             let prev = session.codec();
-            session.set_codec(WireCodec::new(self.precision));
+            session.set_codec(self.codec);
             let out = self.power_loop(session);
             session.set_codec(prev);
             out
@@ -170,12 +199,69 @@ mod tests {
     }
 
     #[test]
+    fn q4_error_feedback_matches_f64_at_a_fraction_of_the_bytes() {
+        use crate::cluster::QuantBits;
+        use crate::data::Distribution;
+        let (c, dist) = fig1_cluster(4, 200, 12, 101);
+        let full = QuantizedPower::new(WirePrecision::F64).run(&c.session()).unwrap();
+        let alg = QuantizedPower::with_codec(WireCodec::quant(QuantBits::Q4).with_feedback());
+        assert_eq!(alg.name(), "power_wire_q4");
+        let ef = alg.run(&c.session()).unwrap();
+        // 4-bit frames: (4·1 scale + ⌈12/2⌉ nibble) bytes × (4 live + 1
+        // broadcast) — read back from the bill
+        assert_eq!(ef.info["wire_bytes_per_round"], (10 * 5) as f64);
+        // the headline: ≥4× fewer billed bytes per round than f64...
+        assert!(
+            full.info["wire_bytes_per_round"] >= 4.0 * ef.info["wire_bytes_per_round"],
+            "{} vs {}",
+            full.info["wire_bytes_per_round"],
+            ef.info["wire_bytes_per_round"]
+        );
+        // ...with the iterate still tracking the principal direction
+        let e_full = full.error(dist.v1());
+        let e_ef = ef.error(dist.v1());
+        assert!(e_full < 0.5);
+        assert!(e_ef < 0.5, "q4+ef power lost the principal direction: {e_ef:.3e}");
+        // the leader-side stream state is surfaced next to final_drift:
+        // a lossy feedback stream has a positive, sub-unit residual norm
+        let rel = ef.info["residual_feedback_norm"];
+        assert!(rel > 0.0 && rel < 1.0, "residual norm {rel}");
+        // a non-adaptive codec never transitions
+        assert_eq!(ef.info["codec_widenings"], 0.0);
+        assert_eq!(ef.info["codec_narrowings"], 0.0);
+        // and the stateless runs report a zero residual
+        assert_eq!(full.info["residual_feedback_norm"], 0.0);
+    }
+
+    #[test]
+    fn adaptive_codec_narrows_once_the_iterate_settles() {
+        use crate::cluster::QuantBits;
+        let (c, _) = fig1_cluster(3, 150, 8, 113);
+        let alg = QuantizedPower::with_codec(WireCodec::quant(QuantBits::Q8).with_adaptive());
+        let est = alg.run(&c.session()).unwrap();
+        // q8's relative residual (≈step/2 against the payload rms) sits
+        // well under the narrow threshold, so the controller steps down
+        // to q4 once it has one round of evidence
+        assert!(
+            est.info["codec_narrowings"] >= 1.0,
+            "adaptive controller never narrowed: {:?}",
+            est.info
+        );
+        assert!(est.info["residual_feedback_norm"] > 0.0);
+    }
+
+    #[test]
     fn final_drift_reported_on_first_iteration_break() {
         // regression (ISSUE 2 satellite): with tol = 1.0 every run breaks
         // on its first iteration; the seed reported final_drift = 0.0 on
         // that path because the update was skipped before `break`
         let (c, _) = fig1_cluster(3, 50, 8, 107);
-        let alg = QuantizedPower { precision: WirePrecision::F64, max_iters: 500, tol: 1.0, seed: 0x9d };
+        let alg = QuantizedPower {
+            codec: WireCodec::lossless(),
+            max_iters: 500,
+            tol: 1.0,
+            seed: 0x9d,
+        };
         let est = alg.run(&c.session()).unwrap();
         assert_eq!(est.info["iters"], 1.0);
         let drift = est.info["final_drift"];

@@ -1,17 +1,23 @@
 //! E10 — wire-codec ablation: estimation error vs **actual** bytes per
-//! round for the distributed power method under the F64/F32/Bf16 wire
-//! codecs, on the Figure-1 workload (experiment index in DESIGN.md §4).
+//! round for the distributed power method under the full codec family —
+//! plain F64/F32/Bf16, low-bit quantizers (q8/q4) with and without
+//! error feedback, top-s sparsification, and the adaptive bit-width
+//! controller — on the Figure-1 workload (experiment index in
+//! DESIGN.md §4).
 //!
 //! This is the bytes-vs-error axis the wire layer opens: every number in
 //! the `bytes_per_round` column is read back from `CommStats` — which
 //! bills the codec's encoded frames — not estimated from `8·d`
 //! arithmetic, so the CSV is an end-to-end check that the bill and the
-//! wire agree. One row per codec, sweeping the frame width down from
-//! 8 bytes/entry to 2.
+//! wire agree. One row per codec, from 8 bytes/entry down to the
+//! nibble-packed and sparse frames. The headline row pair is
+//! `f64` vs `q4+ef`: error feedback lets the 4-bit stream track the
+//! lossless error trajectory at ≥4× fewer billed bytes per round
+//! (hard-gated under `DSPCA_STRESS=1`).
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::cluster::{Cluster, OracleSpec, WirePrecision};
+use crate::cluster::{Cluster, OracleSpec, QuantBits, WireCodec, WirePrecision};
 use crate::coordinator::{Algorithm, QuantizedPower};
 use crate::data::{CovModel, Distribution};
 use crate::transport::TransportSpec;
@@ -19,9 +25,25 @@ use crate::util::csv::CsvTable;
 use crate::util::plot::{loglog, Series};
 use crate::util::stats::Summary;
 
-/// The codecs of the sweep, in decreasing wire width.
-pub const PRECISIONS: [WirePrecision; 3] =
-    [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16];
+/// The codec sweep, in decreasing wire width: the three plain widths,
+/// the fixed quantizers with and without error feedback, the top-s
+/// sparsifier (s = max(d/8, 1) kept coordinates, q8 values, feedback —
+/// top-s without feedback diverges and is not worth a row), and the
+/// adaptive q8↔q4 ladder.
+pub fn codecs(d: usize) -> Vec<WireCodec> {
+    let s = (d / 8).max(1) as u32;
+    vec![
+        WireCodec::lossless(),
+        WireCodec::new(WirePrecision::F32),
+        WireCodec::new(WirePrecision::Bf16),
+        WireCodec::quant(QuantBits::Q8),
+        WireCodec::quant(QuantBits::Q8).with_feedback(),
+        WireCodec::quant(QuantBits::Q4),
+        WireCodec::quant(QuantBits::Q4).with_feedback(),
+        WireCodec::top_s(s, QuantBits::Q8).with_feedback(),
+        WireCodec::quant(QuantBits::Q8).with_adaptive(),
+    ]
+}
 
 #[derive(Clone, Debug)]
 pub struct WireConfig {
@@ -33,6 +55,10 @@ pub struct WireConfig {
     pub oracle: OracleSpec,
     /// Message substrate (bills and estimates are backend-invariant).
     pub transport: TransportSpec,
+    /// `Some(codec)` restricts the sweep to a single codec row (the
+    /// `--codec`/`--feedback`/`--adaptive` CLI path); `None` runs the
+    /// whole family.
+    pub codec: Option<WireCodec>,
 }
 
 impl Default for WireConfig {
@@ -45,35 +71,42 @@ impl Default for WireConfig {
             seed: 0x317e,
             oracle: OracleSpec::Native,
             transport: TransportSpec::InProc,
+            codec: None,
         }
     }
 }
 
 /// Run the sweep; returns a CSV with one row per codec:
-/// `bytes_per_entry, bytes_per_round, err_mean, err_sem, drift_mean,
-/// rounds_mean, total_bytes_mean`.
+/// `codec, bytes_per_round, err_mean, err_sem, drift_mean,
+/// residual_mean, rounds_mean, total_bytes_mean`.
 pub fn run(cfg: &WireConfig) -> Result<CsvTable> {
     let dist = CovModel::paper_fig1(cfg.d, cfg.seed ^ 0x3f).gaussian();
     let mut table = CsvTable::new(&[
-        "bytes_per_entry",
+        "codec",
         "bytes_per_round",
         "err_mean",
         "err_sem",
         "drift_mean",
+        "residual_mean",
         "rounds_mean",
         "total_bytes_mean",
     ]);
     let mut series = Series::new("power", 'q');
-    let n_prec = PRECISIONS.len();
-    let mut errors: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.runs); n_prec];
-    let mut drift = vec![0.0f64; n_prec];
-    let mut rounds = vec![0.0f64; n_prec];
-    let mut bytes = vec![0.0f64; n_prec];
-    let mut bpr = vec![0.0f64; n_prec];
+    let sweep = match cfg.codec {
+        Some(c) => vec![c],
+        None => codecs(cfg.d),
+    };
+    let n_codecs = sweep.len();
+    let mut errors: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.runs); n_codecs];
+    let mut drift = vec![0.0f64; n_codecs];
+    let mut residual = vec![0.0f64; n_codecs];
+    let mut rounds = vec![0.0f64; n_codecs];
+    let mut bytes = vec![0.0f64; n_codecs];
+    let mut bpr = vec![0.0f64; n_codecs];
     for r in 0..cfg.runs {
         // one cluster per run, shared by all codecs (paired comparison,
-        // same as the Figure-1 and top-k drivers — QuantizedPower
-        // installs and restores the codec around each run)
+        // same as the Figure-1 and top-k drivers — each session carries
+        // its own codec and feedback stream, so runs cannot interfere)
         let cluster = Cluster::generate_on(
             &dist,
             cfg.m,
@@ -82,34 +115,65 @@ pub fn run(cfg: &WireConfig) -> Result<CsvTable> {
             cfg.oracle.clone(),
             &cfg.transport,
         )?;
-        for (i, &prec) in PRECISIONS.iter().enumerate() {
-            let est = QuantizedPower::new(prec).run(&cluster.session())?;
+        for (i, &codec) in sweep.iter().enumerate() {
+            let est = QuantizedPower::with_codec(codec).run(&cluster.session())?;
             errors[i].push(est.error(dist.v1()));
             drift[i] += est.info["final_drift"];
+            residual[i] += est.info["residual_feedback_norm"];
             rounds[i] += est.comm.rounds as f64;
             bytes[i] += est.comm.bytes as f64;
             bpr[i] += est.info["wire_bytes_per_round"];
         }
     }
     let k = cfg.runs as f64;
-    for (i, &prec) in PRECISIONS.iter().enumerate() {
+    let mut per_round = vec![0.0f64; n_codecs];
+    let mut err_mean = vec![0.0f64; n_codecs];
+    for (i, codec) in sweep.iter().enumerate() {
         let summary = Summary::of(&errors[i]);
-        let per_round = bpr[i] / k;
-        series.push(per_round, summary.mean);
-        table.push_nums(&[
-            prec.bytes_per_entry() as f64,
-            per_round,
-            summary.mean,
-            summary.sem,
-            drift[i] / k,
-            rounds[i] / k,
-            bytes[i] / k,
+        per_round[i] = bpr[i] / k;
+        err_mean[i] = summary.mean;
+        series.push(per_round[i], summary.mean);
+        table.push_row(vec![
+            codec.label(),
+            format!("{:.12e}", per_round[i]),
+            format!("{:.12e}", summary.mean),
+            format!("{:.12e}", summary.sem),
+            format!("{:.12e}", drift[i] / k),
+            format!("{:.12e}", residual[i] / k),
+            format!("{:.12e}", rounds[i] / k),
+            format!("{:.12e}", bytes[i] / k),
         ]);
         crate::info!(
-            "wire {}: bytes/round={per_round:.0} err={:.2e} drift_floor={:.2e}",
-            prec.label(),
+            "wire {}: bytes/round={:.0} err={:.2e} drift_floor={:.2e} residual={:.2e}",
+            codec.label(),
+            per_round[i],
             summary.mean,
-            drift[i] / k
+            drift[i] / k,
+            residual[i] / k
+        );
+    }
+    // the E10 acceptance gates, armed for the release-mode CI stress
+    // job: q4+ef must track the lossless error trajectory at a ≥4×
+    // per-round byte discount — both read back from the bill
+    if cfg.codec.is_none() && std::env::var("DSPCA_STRESS").as_deref() == Ok("1") {
+        let idx = |label: &str| {
+            sweep
+                .iter()
+                .position(|c| c.label() == label)
+                .unwrap_or_else(|| panic!("codec {label} missing from sweep"))
+        };
+        let (f64_i, q4ef_i) = (idx("f64"), idx("q4+ef"));
+        ensure!(
+            per_round[f64_i] >= 4.0 * per_round[q4ef_i],
+            "q4+ef byte discount below 4x: f64 {} vs q4+ef {}",
+            per_round[f64_i],
+            per_round[q4ef_i]
+        );
+        ensure!(
+            err_mean[q4ef_i] <= 3.0 * err_mean[f64_i],
+            "q4+ef error off the f64 trajectory: {} vs {}",
+            err_mean[q4ef_i],
+            err_mean[f64_i]
         );
     }
     println!(
@@ -128,12 +192,17 @@ pub fn run(cfg: &WireConfig) -> Result<CsvTable> {
 mod tests {
     use super::*;
 
-    fn parse_rows(table: &CsvTable) -> Vec<Vec<f64>> {
+    /// Rows as (codec label, numeric cells).
+    fn parse_rows(table: &CsvTable) -> Vec<(String, Vec<f64>)> {
         table
             .render()
             .lines()
             .skip(1)
-            .map(|l| l.split(',').map(|c| c.parse().unwrap()).collect())
+            .map(|l| {
+                let mut cells = l.split(',');
+                let label = cells.next().unwrap().to_string();
+                (label, cells.map(|c| c.parse().unwrap()).collect())
+            })
             .collect()
     }
 
@@ -146,39 +215,102 @@ mod tests {
             seed: 5,
             oracle: OracleSpec::Native,
             transport: TransportSpec::InProc,
+            codec: None,
         }
     }
 
-    /// Tiny-size smoke: one schema-complete, finite row per codec.
+    /// Tiny-size smoke: one schema-complete, finite row per codec, in
+    /// sweep order, with the whole family present.
     #[test]
     fn wire_smoke_rows_finite_and_schema_complete() {
         let table = run(&tiny_cfg()).unwrap();
         let rows = parse_rows(&table);
-        assert_eq!(rows.len(), PRECISIONS.len());
-        for row in &rows {
-            assert_eq!(row.len(), 7, "schema-complete row");
-            for cell in row {
-                assert!(cell.is_finite(), "non-finite cell {cell}");
+        assert_eq!(rows.len(), codecs(8).len());
+        for (label, nums) in &rows {
+            assert_eq!(nums.len(), 7, "schema-complete row for {label}");
+            for cell in nums {
+                assert!(cell.is_finite(), "{label}: non-finite cell {cell}");
             }
         }
-        let widths: Vec<f64> = rows.iter().map(|r| r[0]).collect();
-        assert_eq!(widths, vec![8.0, 4.0, 2.0]);
+        let labels: Vec<&str> = rows.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(
+            labels,
+            vec!["f64", "f32", "bf16", "q8", "q8+ef", "q4", "q4+ef", "top1-q8+ef", "q8+ad"]
+        );
+        // feedback rows surface a positive stream residual; stateless
+        // rows a zero one
+        for (label, nums) in &rows {
+            if label.ends_with("+ef") {
+                assert!(nums[4] > 0.0, "{label}: feedback row must report its residual");
+            }
+            if ["f64", "f32", "bf16"].contains(&label.as_str()) {
+                assert_eq!(nums[4], 0.0, "{label}: stateless row keeps no stream");
+            }
+        }
     }
 
-    /// The honest-bytes signature: bytes per round scale exactly with
-    /// the codec's frame width — B(d)·(live+1) read back from the bill.
+    /// The honest-bytes signature: bytes per round are the codec's
+    /// materialized frame sizes times (live+1) — read back from the
+    /// bill, not computed from width arithmetic.
     #[test]
-    fn wire_bytes_per_round_scale_exactly_with_codec_width() {
+    fn wire_bytes_per_round_match_the_materialized_frames() {
         let cfg = tiny_cfg();
         let table = run(&cfg).unwrap();
         let rows = parse_rows(&table);
-        let per_round_f64 = (8 * cfg.d * (cfg.m + 1)) as f64;
-        assert_eq!(rows[0][1], per_round_f64);
-        assert_eq!(rows[1][1] * 2.0, per_round_f64, "f32 ships exactly half the bytes");
-        assert_eq!(rows[2][1] * 4.0, per_round_f64, "bf16 ships exactly a quarter");
-        // and total bytes are per-round bytes times rounds, exactly
-        for row in &rows {
-            assert_eq!(row[6], row[1] * row[5], "total = per-round × rounds");
+        let fanout = (cfg.m + 1) as f64;
+        let at = |label: &str| {
+            rows.iter().find(|(l, _)| l == label).unwrap_or_else(|| panic!("row {label}")).1[0]
+        };
+        assert_eq!(at("f64"), 8.0 * cfg.d as f64 * fanout);
+        assert_eq!(at("f32") * 2.0, at("f64"), "f32 ships exactly half the bytes");
+        assert_eq!(at("bf16") * 4.0, at("f64"), "bf16 ships exactly a quarter");
+        // q8: 4-byte scale + d level bytes; q4: scale + ⌈d/2⌉ nibbles —
+        // feedback changes the stream, never the frame shape
+        assert_eq!(at("q8"), (4 + cfg.d) as f64 * fanout);
+        assert_eq!(at("q8+ef"), at("q8"));
+        assert_eq!(at("q4"), (4 + cfg.d.div_ceil(2)) as f64 * fanout);
+        assert_eq!(at("q4+ef"), at("q4"));
+        // top-1 at q8 values: 8-byte header + 4-byte index + 1 level
+        assert_eq!(at("top1-q8+ef"), (8 + 4 + 1) as f64 * fanout);
+        // total bytes are per-round bytes times rounds for every fixed-
+        // width codec; the adaptive row mixes widths so it is exempt
+        for (label, nums) in &rows {
+            if label != "q8+ad" {
+                assert_eq!(nums[6], nums[0] * nums[5], "{label}: total = per-round × rounds");
+            }
         }
+    }
+
+    /// The `--codec` CLI path: a `Some(codec)` config produces exactly
+    /// one row, labeled with the full codec (flags included).
+    #[test]
+    fn wire_single_codec_override_produces_one_labeled_row() {
+        let cfg = WireConfig {
+            codec: Some(WireCodec::quant(QuantBits::Q4).with_feedback()),
+            ..tiny_cfg()
+        };
+        let table = run(&cfg).unwrap();
+        let rows = parse_rows(&table);
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].0, "q4+ef");
+    }
+
+    /// The adaptive controller actually moves: on the settling Fig-1
+    /// iterate it narrows q8→q4, so its mean bytes/round land strictly
+    /// between the two fixed widths.
+    #[test]
+    fn wire_adaptive_row_lands_between_the_fixed_widths() {
+        let table = run(&tiny_cfg()).unwrap();
+        let rows = parse_rows(&table);
+        let at = |label: &str| {
+            rows.iter().find(|(l, _)| l == label).unwrap_or_else(|| panic!("row {label}")).1[0]
+        };
+        let ad = at("q8+ad");
+        assert!(
+            ad > at("q4") && ad < at("q8"),
+            "adaptive bytes/round {ad} not between q4 {} and q8 {}",
+            at("q4"),
+            at("q8")
+        );
     }
 }

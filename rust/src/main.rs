@@ -12,8 +12,9 @@
 //! dspca topk      [--d 60] [--m 8] [--n 400] [--k-list 1,2,4,8] [--runs 8]
 //!                 [--threads 4] [--density 0.05]
 //! dspca wire      [--d 60] [--m 8] [--n 400] [--runs 8]
-//!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
-//!                 [--io-timeout-secs 20]
+//!                 [--codec f64|f32|bf16|q8|q4|tops] [--feedback]
+//!                 [--adaptive] [--transport inproc|tcp]
+//!                 [--workers a:p,b:p,...] [--io-timeout-secs 20]
 //! dspca serve     [--d 60] [--m 8] [--n 400] [--jobs 12] [--tenants 1,2,4,8]
 //!                 [--transport inproc|tcp] [--workers a:p,b:p,...]
 //!                 [--io-timeout-secs 20] [--no-overlap-assert] [--threads 4]
@@ -363,23 +364,61 @@ fn cmd_wire(args: &Args, out_dir: &str) -> Result<()> {
             "transport",
             "workers",
             "io-timeout-secs",
+            "codec",
+            "feedback",
+            "adaptive",
         ],
     )?;
     let defaults = wire::WireConfig::default();
+    let d = args.get_usize("d", defaults.d)?;
     let cfg = wire::WireConfig {
-        d: args.get_usize("d", defaults.d)?,
+        d,
         m: args.get_usize("m", defaults.m)?,
         n: args.get_usize("n", defaults.n)?,
         runs: args.get_usize("runs", defaults.runs)?,
         seed: args.get_u64("seed", defaults.seed)?,
         oracle: oracle_from(args),
         transport: transport_from(args)?,
+        codec: codec_from(args, d)?,
     };
     let table = wire::run(&cfg)?;
     let path = format!("{out_dir}/wire.csv");
     table.write(&path)?;
     println!("wrote {path}");
     Ok(())
+}
+
+/// Parse `--codec {f64,f32,bf16,q8,q4,tops}` (+ `--feedback` /
+/// `--adaptive` modifiers) into the single-codec override for the wire
+/// sweep. No `--codec` means the full-family sweep; a modifier without
+/// `--codec` is a hard error, never a silent no-op. `tops` keeps
+/// `s = max(d/8, 1)` coordinates with q8 values.
+fn codec_from(args: &Args, d: usize) -> Result<Option<dspca::cluster::WireCodec>> {
+    use dspca::cluster::{QuantBits, WireCodec, WirePrecision};
+    let (feedback, adaptive) = (args.get_bool("feedback"), args.get_bool("adaptive"));
+    let Some(name) = args.get("codec") else {
+        anyhow::ensure!(
+            !feedback && !adaptive,
+            "--feedback/--adaptive modify a single codec: add --codec {{q8,q4,tops}}"
+        );
+        return Ok(None);
+    };
+    let mut codec = match name {
+        "f64" => WireCodec::lossless(),
+        "f32" => WireCodec::new(WirePrecision::F32),
+        "bf16" => WireCodec::new(WirePrecision::Bf16),
+        "q8" => WireCodec::quant(QuantBits::Q8),
+        "q4" => WireCodec::quant(QuantBits::Q4),
+        "tops" => WireCodec::top_s((d / 8).max(1) as u32, QuantBits::Q8),
+        other => bail!("unknown codec '{other}' (try: f64, f32, bf16, q8, q4, tops)"),
+    };
+    if feedback {
+        codec = codec.with_feedback();
+    }
+    if adaptive {
+        codec = codec.with_adaptive();
+    }
+    Ok(Some(codec))
 }
 
 fn cmd_serve(args: &Args, out_dir: &str) -> Result<()> {
@@ -523,7 +562,7 @@ fn cmd_bench_check(args: &Args) -> Result<()> {
     args.ensure_known_flags("bench-check", &["files", "out"])?;
     let files = args
         .get("files")
-        .unwrap_or("BENCH_linalg.json,BENCH_topk.json,BENCH_serve.json,BENCH_obs.json");
+        .unwrap_or("BENCH_linalg.json,BENCH_topk.json,BENCH_serve.json,BENCH_obs.json,BENCH_wire.json");
     let mut checked = 0usize;
     for path in files.split(',').map(str::trim).filter(|s| !s.is_empty()) {
         let text = std::fs::read_to_string(path)

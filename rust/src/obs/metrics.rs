@@ -215,6 +215,16 @@ define_metrics! {
             "billed wire bytes moved under the f32 codec";
         BYTES_BF16_TOTAL =>
             "billed wire bytes moved under the bf16 codec";
+        BYTES_Q8_TOTAL =>
+            "billed wire bytes moved under the 8-bit quantized format";
+        BYTES_Q4_TOTAL =>
+            "billed wire bytes moved under the 4-bit quantized format";
+        BYTES_TOPS_TOTAL =>
+            "billed wire bytes moved under the top-s sparse format";
+        CODEC_WIDENINGS_TOTAL =>
+            "adaptive codec transitions q4 -> q8 (residual too large)";
+        CODEC_NARROWINGS_TOTAL =>
+            "adaptive codec transitions q8 -> q4 (residual comfortably small)";
         FUSION_CARRIERS_TOTAL =>
             "fused carrier rounds put on the wire";
         FUSION_MEMBERS_TOTAL =>
@@ -255,6 +265,10 @@ define_metrics! {
             "weighted-fair virtual-time spread across lanes (x1000)";
         SOLVER_LAST_DRIFT_NANOS =>
             "last observed solver subspace drift (x1e9)";
+        CODEC_RESIDUAL_X1000 =>
+            "last leader-side error-feedback relative residual norm (x1000)";
+        CODEC_COMPRESSION_X1000 =>
+            "last submit's billed-vs-f64 frame size ratio (x1000)";
     }
     hists {
         SUBMIT_BYTES =>

@@ -17,7 +17,7 @@ use std::thread::JoinHandle;
 use anyhow::{anyhow, Context, Result};
 
 use crate::cluster::worker::worker_main;
-use crate::cluster::{OracleSpec, Request, Response, WirePrecision};
+use crate::cluster::{OracleSpec, Request, Response, WireDesc};
 use crate::data::Shard;
 use crate::sync::{check_io, mpsc};
 
@@ -27,8 +27,12 @@ use super::{ReplyFrame, Transport, CONTROL_SEQ};
 /// messages, no serialization. Built by
 /// [`Cluster::from_shards_on`](crate::cluster::Cluster::from_shards_on)
 /// with [`TransportSpec::InProc`](super::TransportSpec::InProc).
+/// Requests carry their [`WireDesc`] across the channel so the worker
+/// side can quantize replies (and keep feedback streams) exactly like a
+/// TCP worker process would — reply compression is a *worker-side*
+/// behavior on every backend.
 pub struct InProcTransport {
-    senders: Vec<mpsc::Sender<(u64, Request)>>,
+    senders: Vec<mpsc::Sender<(u64, WireDesc, Request)>>,
     /// The shared reply stream, present until the cluster's router
     /// takes it ([`Transport::take_reply_stream`]).
     receiver: Option<mpsc::Receiver<ReplyFrame>>,
@@ -50,7 +54,7 @@ impl InProcTransport {
         let mut handles = Vec::with_capacity(shards.len());
         let mut seeder = crate::cluster::worker::worker_seeder(seed);
         for (i, shard) in shards.into_iter().enumerate() {
-            let (req_tx, req_rx) = mpsc::channel::<(u64, Request)>();
+            let (req_tx, req_rx) = mpsc::channel::<(u64, WireDesc, Request)>();
             let tx = resp_tx.clone();
             let spec = oracle.clone();
             let wseed = seeder.next_u64();
@@ -70,15 +74,16 @@ impl Transport for InProcTransport {
         "inproc"
     }
 
-    fn send(&mut self, worker: usize, seq: u64, _prec: WirePrecision, req: &Request) -> Result<()> {
+    fn send(&mut self, worker: usize, seq: u64, desc: WireDesc, req: &Request) -> Result<()> {
         check_io("InProcTransport::send");
-        // typed enums cross the channel directly; the session has
-        // already transcoded the payload through its codec, so the
-        // precision needs no further handling here
+        // typed enums cross the channel directly (the session already
+        // quantized the request payload); the descriptor rides along so
+        // the worker compresses its reply at the round's format and
+        // keys its feedback stream on the session id
         self.senders
             .get(worker)
             .ok_or_else(|| anyhow!("no such worker {worker}"))?
-            .send((seq, req.clone()))
+            .send((seq, desc, req.clone()))
             .map_err(|_| anyhow!("worker {worker} channel closed"))
     }
 
@@ -94,7 +99,7 @@ impl Transport for InProcTransport {
         for s in &self.senders {
             // best effort: a worker killed earlier already dropped its
             // receiver and the send just fails
-            let _ = s.send((CONTROL_SEQ, Request::Shutdown));
+            let _ = s.send((CONTROL_SEQ, WireDesc::lossless(), Request::Shutdown));
         }
         for h in &mut self.handles {
             if let Some(h) = h.take() {
@@ -132,7 +137,7 @@ mod tests {
         let mut t = tiny_transport(2);
         assert_eq!(t.reader_threads(), 0, "worker threads are machines, not reply plumbing");
         let rx = t.take_reply_stream();
-        t.send(0, 5, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
+        t.send(0, 5, WireDesc::lossless(), &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
         let (id, seq, resp) = recv_reply(&rx, Duration::from_secs(30)).unwrap();
         assert_eq!((id, seq), (0, 5));
         assert!(matches!(resp, Response::Vector(v) if v.len() == 3));
@@ -146,7 +151,7 @@ mod tests {
         t.shutdown();
         t.shutdown(); // second call is a no-op, not a double-join
         let err =
-            t.send(1, 1, WirePrecision::F64, &Request::Gram).unwrap_err().to_string();
+            t.send(1, 1, WireDesc::lossless(), &Request::Gram).unwrap_err().to_string();
         assert!(err.contains("worker 1"), "{err}");
         // recv after shutdown reports disconnection, not a hang
         assert!(matches!(
@@ -158,7 +163,7 @@ mod tests {
     #[test]
     fn send_to_unknown_worker_is_a_clean_error() {
         let mut t = tiny_transport(1);
-        let err = t.send(3, 1, WirePrecision::F64, &Request::Gram).unwrap_err().to_string();
+        let err = t.send(3, 1, WireDesc::lossless(), &Request::Gram).unwrap_err().to_string();
         assert!(err.contains("worker 3"), "{err}");
         t.shutdown();
     }

@@ -49,7 +49,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use crate::cluster::{Request, Response, WirePrecision};
+use crate::cluster::{Request, Response, WireDesc};
 use crate::sync::{check_io, mpsc};
 
 /// One routed reply as it travels the shared reply stream:
@@ -89,19 +89,23 @@ pub trait Transport: Send {
     /// Backend name for reports ("inproc" / "tcp").
     fn name(&self) -> &'static str;
 
-    /// Deliver one sequenced request to peer `worker`. `prec` is the
-    /// issuing session's wire precision: byte-shipping backends encode
-    /// the payload at exactly that width (the payload has already been
-    /// transcoded through the session codec, so encoding is lossless on
-    /// these values), and workers echo it on the reply. Errors name the
-    /// peer (`worker 2 at 127.0.0.1:9001 unreachable: ...`).
+    /// Deliver one sequenced request to peer `worker`. `desc` is the
+    /// round's wire descriptor — the resolved format the issuing
+    /// session shipped the payload under, its feedback flag, and the
+    /// session id keying the worker-side reply accumulator. Byte-
+    /// shipping backends encode the payload at exactly that format (the
+    /// payload has already passed through the session codec, so the
+    /// re-encode is lossless on these values — the quantizers are
+    /// re-encode idempotent), and workers echo the format on the reply.
+    /// Errors name the peer (`worker 2 at 127.0.0.1:9001 unreachable:
+    /// ...`).
     ///
     /// A sequence number identifies exactly one request — the invariant
     /// the straggler protocol rests on — so callers must never send
-    /// different requests under one `(seq, prec)`; backends may cache
-    /// the encoded broadcast frame per `(seq, prec)` and reuse it for
+    /// different requests under one `(seq, desc)`; backends may cache
+    /// the encoded broadcast frame per `(seq, desc)` and reuse it for
     /// every peer of the exchange.
-    fn send(&mut self, worker: usize, seq: u64, prec: WirePrecision, req: &Request) -> Result<()>;
+    fn send(&mut self, worker: usize, seq: u64, desc: WireDesc, req: &Request) -> Result<()>;
 
     /// Hand the caller the shared reply stream: every peer's responses,
     /// tagged `(worker, seq, response)`. Called exactly once, by the

@@ -26,9 +26,12 @@
 //! `Init`, ack, then answer request frames with response frames until
 //! `Shutdown` or EOF — the same
 //! [`handle_request`](crate::cluster::worker) dispatch the in-proc
-//! worker thread runs. Payloads are encoded at the precision the
-//! request frame carried, so the leader's decode + session transcode is
-//! value-preserving and bills are backend-invariant.
+//! worker thread runs. Replies are compressed **worker-side** at the
+//! [`WireDesc`] each request frame carried, through a per-connection
+//! [`ReplyBank`] (one error-feedback accumulator per session id, rebuilt
+//! purely from request envelopes — no handshake ships codec state), so
+//! the leader's router bills reply frames shape-only and bills are
+//! backend-invariant.
 //!
 //! **Framing**: length-prefixed whole-message frames (`cluster/wire.rs`
 //! format); payload sections are the materialized `WireCodec` output,
@@ -63,7 +66,7 @@ use crate::cluster::wire::Cursor;
 use crate::cluster::worker::{handle_request, worker_rng};
 use crate::cluster::{
     decode_request, decode_response, encode_request, encode_response, ComputeOracle, OracleSpec,
-    Request, Response, WireCodec, WirePrecision,
+    ReplyBank, Request, Response, WireDesc, WireFormat, WirePrecision,
 };
 use crate::data::Shard;
 use crate::sync::{check_io, mpsc};
@@ -152,7 +155,7 @@ fn decode_init(body: &[u8]) -> Result<Init> {
     ensure!(n > 0 && d > 0, "init frame: empty shard shape {n}x{d}");
     let shard = match c.u8()? {
         STORE_DENSE => {
-            let data = c.payload(WirePrecision::F64)?;
+            let data = c.payload(WireFormat::Plain(WirePrecision::F64))?;
             ensure!(
                 n.checked_mul(d) == Some(data.len()),
                 "init frame: shard of {} values != {n}x{d}",
@@ -262,12 +265,14 @@ pub struct TcpTransport {
     /// The shared reply stream the reactor feeds, present until the
     /// cluster's router takes it ([`Transport::take_reply_stream`]).
     rx: Option<mpsc::Receiver<ReplyFrame>>,
-    /// One exchange broadcasts the same `(seq, prec, req)` to every
+    /// One exchange broadcasts the same `(seq, desc, req)` to every
     /// peer (a sequence number identifies exactly one request — the
     /// invariant the whole straggler protocol rests on), so the encoded
-    /// body is cached per `(seq, prec)`: a round costs one encode, not
-    /// one per worker.
-    encoded: Option<(u64, WirePrecision, Vec<u8>)>,
+    /// body is cached per `(seq, desc)`: a round costs one encode, not
+    /// one per worker. The [`WireDesc`] is part of the key because an
+    /// adaptive session may re-resolve its width between rounds that
+    /// reuse a sequence number window.
+    encoded: Option<(u64, WireDesc, Vec<u8>)>,
     /// Write deadline for every leader-side socket write (the sockets
     /// are non-blocking, so `set_write_timeout` no longer applies).
     io_timeout: Duration,
@@ -496,7 +501,7 @@ fn pump_peer(p: &mut PeerRead, scratch: &mut [u8], tx: &mpsc::Sender<ReplyFrame>
                     return Pump::Progress;
                 }
                 match decode_response(&p.buf[4..4 + len]) {
-                    Ok((seq, _prec, resp)) => {
+                    Ok((seq, _format, resp)) => {
                         if tx.send((p.worker, seq, resp)).is_err() {
                             return Pump::RouterGone;
                         }
@@ -527,11 +532,11 @@ impl Transport for TcpTransport {
         "tcp"
     }
 
-    fn send(&mut self, worker: usize, seq: u64, prec: WirePrecision, req: &Request) -> Result<()> {
+    fn send(&mut self, worker: usize, seq: u64, desc: WireDesc, req: &Request) -> Result<()> {
         check_io("TcpTransport::send");
-        let cached = matches!(&self.encoded, Some((s, p, _)) if *s == seq && *p == prec);
+        let cached = matches!(&self.encoded, Some((s, d, _)) if *s == seq && *d == desc);
         if !cached {
-            self.encoded = Some((seq, prec, encode_request(seq, WireCodec::new(prec), req)));
+            self.encoded = Some((seq, desc, encode_request(seq, desc, req)));
         }
         let peer = self
             .peers
@@ -553,7 +558,7 @@ impl Transport for TcpTransport {
             return;
         }
         self.down = true;
-        let bye = encode_request(CONTROL_SEQ, WireCodec::lossless(), &Request::Shutdown);
+        let bye = encode_request(CONTROL_SEQ, WireDesc::lossless(), &Request::Shutdown);
         for peer in &mut self.peers {
             // best effort — a peer that already hung up just fails the
             // write, which is fine
@@ -626,10 +631,12 @@ pub fn serve_worker(
 }
 
 /// One leader connection: handshake, then the request→response loop.
-/// Responses are encoded at the precision each request frame carried.
-/// Returns `Ok(false)` if the connection never completed the handshake
-/// (not a real leader), `Ok(true)` after a clean session; an `Err` is a
-/// session that failed *after* the handshake.
+/// Responses are compressed through a per-connection [`ReplyBank`] at
+/// the [`WireDesc`] each request frame carried — so a feedback stream's
+/// reply residuals live worker-side, keyed by session id, with no
+/// handshake. Returns `Ok(false)` if the connection never completed the
+/// handshake (not a real leader), `Ok(true)` after a clean session; an
+/// `Err` is a session that failed *after* the handshake.
 fn serve_leader(mut stream: TcpStream, io_timeout: Duration) -> Result<bool> {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(io_timeout));
@@ -655,6 +662,10 @@ fn serve_leader(mut stream: TcpStream, io_timeout: Duration) -> Result<bool> {
         init.oracle.build().map_err(|e| format!("oracle init failed: {e}"));
     write_frame(&mut stream, &encode_ack(init.worker_id)).context("sending handshake ack")?;
     let _ = stream.set_read_timeout(None);
+    // per-connection reply compressor: one error-feedback stream per
+    // session id, rebuilt purely from the request envelopes — the same
+    // ReplyBank path the in-proc worker thread runs
+    let mut bank = ReplyBank::new();
     loop {
         let body = match read_frame(&mut stream) {
             Ok(b) => b,
@@ -662,8 +673,8 @@ fn serve_leader(mut stream: TcpStream, io_timeout: Duration) -> Result<bool> {
             Err(e) if e.kind() == io::ErrorKind::UnexpectedEof => return Ok(true),
             Err(e) => return Err(e).context("reading request frame"),
         };
-        let (seq, prec, req) = decode_request(&body)?;
-        let resp = match &mut oracle {
+        let (seq, desc, req) = decode_request(&body)?;
+        let mut resp = match &mut oracle {
             Ok(oracle) => match handle_request(oracle.as_mut(), &shard, &mut rng, req) {
                 Some(resp) => resp,
                 None => return Ok(true), // Shutdown
@@ -675,7 +686,8 @@ fn serve_leader(mut stream: TcpStream, io_timeout: Duration) -> Result<bool> {
                 Response::Err(msg.clone())
             }
         };
-        write_frame(&mut stream, &encode_response(seq, WireCodec::new(prec), &resp))
+        bank.compress(&desc, &mut resp);
+        write_frame(&mut stream, &encode_response(seq, desc.format, &resp))
             .context("writing response frame")?;
     }
 }
@@ -845,8 +857,8 @@ mod tests {
         .unwrap();
         assert_eq!(t.name(), "tcp");
         let rx = t.take_reply_stream();
-        t.send(0, 7, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
-        t.send(1, 7, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
+        t.send(0, 7, WireDesc::lossless(), &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
+        t.send(1, 7, WireDesc::lossless(), &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
         let mut got = [false, false];
         for _ in 0..2 {
             let (id, seq, resp) = super::super::recv_reply(&rx, Duration::from_secs(30)).unwrap();
@@ -878,7 +890,7 @@ mod tests {
         assert_eq!(t.reader_threads(), 1, "one reactor thread for {m} peers");
         let rx = t.take_reply_stream();
         for w in 0..m {
-            t.send(w, 5, WirePrecision::F64, &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
+            t.send(w, 5, WireDesc::lossless(), &Request::CovMatVec(vec![1.0, 0.0, 0.0])).unwrap();
         }
         let mut got = vec![false; m];
         for _ in 0..m {
@@ -969,13 +981,81 @@ mod tests {
         let rx = t.take_reply_stream();
         let mut v = vec![0.731, -0.25, 1.0001];
         WirePrecision::Bf16.quantize(&mut v);
-        t.send(0, 1, WirePrecision::Bf16, &Request::CovMatVec(v)).unwrap();
+        t.send(0, 1, WireDesc::plain(WirePrecision::Bf16), &Request::CovMatVec(v)).unwrap();
         let (_, _, resp) = super::super::recv_reply(&rx, Duration::from_secs(30)).unwrap();
         let Response::Vector(out) = resp else { panic!("expected a vector reply") };
         for x in &out {
             let mut q = [*x];
             WirePrecision::Bf16.quantize(&mut q);
             assert_eq!(q[0].to_bits(), x.to_bits(), "{x} is not on the bf16 grid");
+        }
+        t.shutdown();
+        workers.join().unwrap();
+    }
+
+    #[test]
+    fn worker_feedback_streams_telescope_with_no_handshake() {
+        use crate::cluster::QuantBits;
+        // the worker-side half of the error-feedback contract over a
+        // real socket: the per-connection ReplyBank is rebuilt purely
+        // from request envelopes (nothing about codec state rides the
+        // Init handshake), stateless descriptors stay memoryless, and a
+        // feedback stream's reply mean telescopes toward the lossless
+        // reply (Σ qₜ = k·raw − r_k, so |mean − raw| = |r_k|/k)
+        let workers = LoopbackWorkers::spawn(1, 1).unwrap();
+        let mut rng = Pcg64::new(23);
+        let shard = Arc::new(Shard::new(6, 8, (0..48).map(|_| rng.next_gaussian()).collect()));
+        let mut t = TcpTransport::connect(
+            workers.addrs(),
+            vec![shard],
+            &OracleSpec::Native,
+            11,
+            Duration::from_secs(30),
+        )
+        .unwrap();
+        let rx = t.take_reply_stream();
+        let q4 = WireFormat::Quant(QuantBits::Q4);
+        // pre-grid the probe so every round delivers the same degraded
+        // vector to the shard math (q4 re-encodes on-grid values
+        // losslessly), making the raw reply identical across rounds
+        let mut v = vec![0.731, -0.25, 1.0001, 0.4, -0.9, 0.05, 0.61, -0.33];
+        q4.quantize(&mut v, 1);
+        let mut seq = 0u64;
+        let mut ask = |t: &mut TcpTransport, desc: WireDesc| -> Vec<f64> {
+            seq += 1;
+            t.send(0, seq, desc, &Request::CovMatVec(v.clone())).unwrap();
+            let (_, s, resp) = super::super::recv_reply(&rx, Duration::from_secs(30)).unwrap();
+            assert_eq!(s, seq, "replies arrive in lockstep on one peer");
+            let Response::Vector(out) = resp else { panic!("expected a vector reply") };
+            out
+        };
+        let truth = ask(&mut t, WireDesc::lossless());
+        let flat = WireDesc { format: q4, feedback: false, sid: 7 };
+        let a1 = ask(&mut t, flat);
+        let a2 = ask(&mut t, flat);
+        assert_eq!(a1, a2, "a stateless descriptor is memoryless");
+        let ef = WireDesc { format: q4, feedback: true, sid: 8 };
+        let b1 = ask(&mut t, ef);
+        assert_eq!(a1, b1, "a fresh feedback stream starts from a zero residual");
+        let rounds = 8usize;
+        let mut sum = b1;
+        for _ in 1..rounds {
+            let b = ask(&mut t, ef);
+            for (s, x) in sum.iter_mut().zip(&b) {
+                *s += x;
+            }
+        }
+        // the carried residual is at most half a quantizer step, so the
+        // k-round mean sits within (step/2)/k of the lossless reply —
+        // asserted at 2× slack against the truth-scaled step
+        let maxabs = truth.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let step = maxabs / 7.0;
+        for (i, (s, x)) in sum.iter().zip(&truth).enumerate() {
+            let mean = s / rounds as f64;
+            assert!(
+                (mean - x).abs() <= step / 4.0,
+                "coordinate {i}: ef mean {mean} vs lossless {x} (step {step})"
+            );
         }
         t.shutdown();
         workers.join().unwrap();

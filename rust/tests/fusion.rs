@@ -16,7 +16,7 @@
 use std::sync::Barrier;
 use std::time::Duration;
 
-use dspca::cluster::{Cluster, CommStats, OracleSpec, WireCodec, WirePrecision};
+use dspca::cluster::{Cluster, CommStats, OracleSpec, QuantBits, WireCodec, WirePrecision};
 use dspca::data::CovModel;
 use dspca::linalg::Matrix;
 use dspca::propcheck::{run as propcheck, Config};
@@ -188,6 +188,39 @@ fn tcp_mixed_codec_rounds_never_fuse() {
     assert_eq!(cluster.fusion_counters(), (0, 0), "mixed codecs must not share a carrier");
     assert_eq!(a.close().bytes, (8 * d * 3) as u64, "lossless bill at 8B/entry");
     assert_eq!(b.close().bytes, (2 * d * 3) as u64, "bf16 bill at 2B/entry");
+    drop(cluster);
+    workers.join().unwrap();
+}
+
+/// Regression (TCP side; the in-proc twin lives in `cluster/mod.rs`):
+/// a stateful error-feedback submit entering a fusion window displaces
+/// the pending batch — its round never shares a carrier — and both
+/// tenants' bills and the EF tenant's residual accumulator come out
+/// exactly as in a solo run, shipped through the real socket path.
+#[test]
+fn tcp_stateful_codec_submits_displace_and_bill_independently() {
+    let d = 8usize;
+    let dist = CovModel::paper_fig1(d, 3).gaussian();
+    let workers = LoopbackWorkers::spawn(2, 1).unwrap();
+    let cluster =
+        Cluster::generate_on(&dist, 2, 20, 7, OracleSpec::Native, &workers.spec()).unwrap();
+    cluster.enable_fusion(Duration::from_millis(200), 8).unwrap();
+    let fused = cluster.session();
+    let lossy = cluster.session();
+    lossy.set_codec(WireCodec::quant(QuantBits::Q4).with_feedback());
+    let v = vec![0.4; d];
+    let ta = fused.dist_matvec_submit(&v).unwrap();
+    let tb = lossy.dist_matvec_submit(&v).unwrap();
+    ta.complete().unwrap();
+    tb.complete().unwrap();
+    assert_eq!(cluster.fusion_counters(), (0, 0), "stateful codecs must never share a carrier");
+    // solo frame arithmetic, untouched by the fused neighbor: a Q4
+    // frame on 8 words, 1 column = 4 (scale) + 4 (nibble) bytes,
+    // billed once per live worker plus the leader broadcast
+    assert!(lossy.residual_norm() > 0.0, "the EF stream accumulated the Q4 drop");
+    assert_eq!(fused.residual_norm(), 0.0, "stateless tenant keeps no stream");
+    assert_eq!(lossy.close().bytes, ((4 + 4) * 3) as u64, "EF tenant bills its own frames");
+    assert_eq!(fused.close().bytes, (8 * d * 3) as u64, "displaced tenant bills solo frames");
     drop(cluster);
     workers.join().unwrap();
 }

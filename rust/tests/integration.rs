@@ -516,11 +516,16 @@ fn prop_basis_stays_orthonormal_through_block_power_iterations() {
 
 #[test]
 fn prop_bytes_equal_encoded_frame_sizes_for_every_collective_and_codec() {
-    // THE wire-layer invariant (ISSUE 2 acceptance): for every collective
-    // × every codec, a session's `CommStats.bytes` equals the sum of the
-    // encoded frames' sizes — a broadcast frame billed once, one response
-    // frame per live worker.
-    propcheck(Config::default().cases(6), "codec-exact byte accounting", |g| {
+    // THE wire-layer invariant (ISSUE 2 acceptance, extended to the
+    // stateful family): for every collective × every codec — lossless,
+    // fixed-width, low-bit quantized, sparsified, with and without
+    // error feedback — a session's `CommStats.bytes` equals the sum of
+    // the materialized frames' sizes: a broadcast frame billed once,
+    // one response frame per live worker. Error feedback changes the
+    // frames' *contents*, never their size, so the lossy-EF rows assert
+    // the same totals as their stateless twins.
+    use dspca::cluster::QuantBits;
+    propcheck(Config::default().cases(4), "codec-exact byte accounting", |g| {
         let m = g.usize_in(1, 5);
         let n = g.usize_in(5, 25);
         let d = g.usize_in(2, 10);
@@ -532,41 +537,56 @@ fn prop_bytes_equal_encoded_frame_sizes_for_every_collective_and_codec() {
             c.kill_worker(g.usize_in(1, m - 1)).unwrap();
         }
         let live = c.live() as u64;
-        for prec in [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16] {
-            let codec = WireCodec::new(prec);
+        let codecs = [
+            WireCodec::lossless(),
+            WireCodec::new(WirePrecision::F32),
+            WireCodec::new(WirePrecision::Bf16),
+            WireCodec::quant(QuantBits::Q8),
+            WireCodec::quant(QuantBits::Q4),
+            WireCodec::quant(QuantBits::Q8).with_feedback(),
+            WireCodec::quant(QuantBits::Q4).with_feedback(),
+            WireCodec::top_s(2, QuantBits::Q8).with_feedback(),
+        ];
+        for codec in codecs {
             let s = c.session();
             s.set_codec(codec);
-            // the size of one encoded frame carrying `words` f64 words —
-            // measured on a materialized frame, not assumed
-            let frame = |words: usize| {
+            // the size of one frame of `words` f64 words in `cols`
+            // row-major columns — measured on a materialized encoded
+            // frame, not assumed from the billing table
+            let frame = |words: usize, cols: usize| {
                 let payload = vec![0.5; words];
-                codec.encode(&payload).wire_bytes() as u64
+                codec.default_format().encode(&payload, cols).wire_bytes() as u64
             };
 
             s.dist_matvec(&g.gaussian_vec(d)).unwrap();
-            assert_eq!(s.stats().bytes, (live + 1) * frame(d), "{prec:?} dist_matvec");
+            assert_eq!(s.stats().bytes, (live + 1) * frame(d, 1), "{} dist_matvec", codec.label());
 
             s.reset_stats();
             s.dist_matmat(&random_block(g, d, k)).unwrap();
-            assert_eq!(s.stats().bytes, (live + 1) * frame(d * k), "{prec:?} dist_matmat");
+            assert_eq!(
+                s.stats().bytes,
+                (live + 1) * frame(d * k, k),
+                "{} dist_matmat",
+                codec.label()
+            );
 
             s.reset_stats();
             s.local_top_eigvecs(false).unwrap();
-            assert_eq!(s.stats().bytes, live * frame(d), "{prec:?} local_top_eigvecs");
+            assert_eq!(s.stats().bytes, live * frame(d, 1), "{} local_top_eigvecs", codec.label());
 
             s.reset_stats();
             s.local_top_k(k).unwrap();
-            assert_eq!(s.stats().bytes, live * frame(d * k), "{prec:?} local_top_k");
+            assert_eq!(s.stats().bytes, live * frame(d * k, k), "{} local_top_k", codec.label());
 
             s.reset_stats();
             s.gram_average().unwrap();
-            assert_eq!(s.stats().bytes, live * frame(d * d), "{prec:?} gram_average");
+            assert_eq!(s.stats().bytes, live * frame(d * d, d), "{} gram_average", codec.label());
 
             s.reset_stats();
             let mut w0 = vec![0.0; d];
             w0[0] = 1.0;
             s.oja_chain(&w0, 0.5, 10.0).unwrap();
-            assert_eq!(s.stats().bytes, live * 2 * frame(d), "{prec:?} oja_chain");
+            assert_eq!(s.stats().bytes, live * 2 * frame(d, 1), "{} oja_chain", codec.label());
         }
     });
 }
@@ -659,35 +679,46 @@ fn sni_eps_controls_accuracy() {
 
 /// Propcheck: every `Request`/`Response` variant — error replies and
 /// the `CovMatMat` block shapes included — survives whole-message frame
-/// encode→decode bit-for-bit under each `WirePrecision` (payloads on
-/// the codec grid, as the session layer ships them), and decode rejects
+/// encode→decode bit-for-bit under every `WireFormat` (payloads on the
+/// format's grid, as the session layer ships them after
+/// stream-stepping), the request envelope's `WireDesc` (format +
+/// feedback flag + session id) survives verbatim, and decode rejects
 /// truncated or length-mismatched frames with an error, never a panic.
 #[test]
 fn prop_message_frames_roundtrip_bit_for_bit_under_every_codec() {
     use dspca::cluster::{
-        decode_request, decode_response, encode_request, encode_response, Request, Response,
+        decode_request, decode_response, encode_request, encode_response, QuantBits, Request,
+        Response, WireDesc, WireFormat,
     };
     propcheck(Config::default().cases(12), "message frame roundtrip", |g| {
-        let prec = [WirePrecision::F64, WirePrecision::F32, WirePrecision::Bf16]
-            [g.usize_in(0, 2)];
-        let codec = WireCodec::new(prec);
+        let formats = [
+            WireFormat::Plain(WirePrecision::F64),
+            WireFormat::Plain(WirePrecision::F32),
+            WireFormat::Plain(WirePrecision::Bf16),
+            WireFormat::Quant(QuantBits::Q8),
+            WireFormat::Quant(QuantBits::Q4),
+            WireFormat::TopS { s: 2, bits: QuantBits::Q8 },
+        ];
+        let format = formats[g.usize_in(0, formats.len() - 1)];
+        let desc = WireDesc { format, feedback: g.bool(), sid: g.rng().next_u64() };
         let d = g.usize_in(1, 12);
         let k = g.usize_in(1, 4);
         let seq = g.rng().next_u64();
-        // payloads pre-quantized to the codec grid — exactly what the
-        // session layer hands the transport after transcoding
-        let quant = |mut v: Vec<f64>| {
-            prec.quantize(&mut v);
+        // payloads pre-quantized to the format grid at the payload's own
+        // column count — exactly what the session layer hands the
+        // transport (on-grid values re-encode losslessly)
+        let quant = |mut v: Vec<f64>, cols: usize| {
+            format.quantize(&mut v, cols);
             v
         };
         let requests = vec![
-            Request::CovMatVec(quant(g.gaussian_vec(d))),
-            Request::CovMatMat { rows: d, cols: k, data: quant(g.gaussian_vec(d * k)) },
+            Request::CovMatVec(quant(g.gaussian_vec(d), 1)),
+            Request::CovMatMat { rows: d, cols: k, data: quant(g.gaussian_vec(d * k), k) },
             Request::LocalTopEigvec { unbiased_signs: g.bool() },
             Request::Gram,
             Request::LocalTopK { k },
             Request::OjaPass {
-                w: quant(g.gaussian_vec(d)),
+                w: quant(g.gaussian_vec(d), 1),
                 eta0: g.f64_in(0.01, 2.0),
                 t0: g.f64_in(1.0, 50.0),
                 t_start: g.rng().next_u64() % 100_000,
@@ -695,11 +726,11 @@ fn prop_message_frames_roundtrip_bit_for_bit_under_every_codec() {
             Request::Shutdown,
         ];
         for req in &requests {
-            let body = encode_request(seq, codec, req);
-            let (seq2, prec2, back) = decode_request(&body).unwrap();
+            let body = encode_request(seq, desc, req);
+            let (seq2, desc2, back) = decode_request(&body).unwrap();
             assert_eq!(seq2, seq, "sequence number survives");
-            assert_eq!(prec2, prec, "precision tag survives");
-            assert_eq!(&back, req, "{prec:?} request changed across the wire");
+            assert_eq!(desc2, desc, "wire descriptor (format, feedback, sid) survives");
+            assert_eq!(&back, req, "{} request changed across the wire", format.label());
             // bit-for-bit on the payload words, not just PartialEq
             if let (Some(a), Some(b)) = (req.payload(), back.payload()) {
                 for (x, y) in a.iter().zip(b) {
@@ -716,15 +747,15 @@ fn prop_message_frames_roundtrip_bit_for_bit_under_every_codec() {
             assert!(decode_request(&longer).is_err(), "trailing byte accepted");
         }
         let responses = vec![
-            Response::Vector(quant(g.gaussian_vec(d))),
-            Response::Mat { rows: d, cols: k, data: quant(g.gaussian_vec(d * k)) },
+            Response::Vector(quant(g.gaussian_vec(d), 1)),
+            Response::Mat { rows: d, cols: k, data: quant(g.gaussian_vec(d * k), k) },
             Response::Err(format!("worker {} failed: bad rank", g.usize_in(0, 9))),
         ];
         for resp in &responses {
-            let body = encode_response(seq, codec, resp);
-            let (seq2, prec2, back) = decode_response(&body).unwrap();
-            assert_eq!((seq2, prec2), (seq, prec));
-            assert_eq!(&back, resp, "{prec:?} response changed across the wire");
+            let body = encode_response(seq, format, resp);
+            let (seq2, fmt2, back) = decode_response(&body).unwrap();
+            assert_eq!((seq2, fmt2), (seq, format));
+            assert_eq!(&back, resp, "{} response changed across the wire", format.label());
             let cut = g.usize_in(0, body.len() - 1);
             assert!(decode_response(&body[..cut]).is_err());
             let mut longer = body.clone();

@@ -41,6 +41,20 @@ fn traced_bytes_mirror_every_closed_sessions_bill_over_tcp() {
     let direct_bill = s.close();
     assert!(direct_bill.bytes > 0 && direct_bill.rounds > 0);
 
+    // tenant 1b: a stateful lossy error-feedback stream — its traced
+    // rows must carry the materialized q4 frame sizes, shipped through
+    // the worker-side ReplyBank over the real socket
+    let ef = cluster.session();
+    ef.set_trace_label("direct-q4ef");
+    ef.set_codec(WireCodec::quant(dspca::cluster::QuantBits::Q4).with_feedback());
+    for _ in 0..3 {
+        ef.dist_matvec(&v).unwrap();
+    }
+    let ef_sid = ef.sid();
+    let ef_bill = ef.close();
+    // q4 frames: (4-byte scale + ⌈d/2⌉ nibble bytes)·(live+1) per round
+    assert_eq!(ef_bill.bytes, ef_bill.rounds * ((4 + d as u64 / 2) * (m as u64 + 1)));
+
     // tenants 2 and 3: concurrent jobs through the scheduler, which
     // labels and closes their sessions itself
     let served = serve(
@@ -96,7 +110,7 @@ fn traced_bytes_mirror_every_closed_sessions_bill_over_tcp() {
     // oracle #1: the report's own cross-check over all closed sessions
     let rep = report::parse_lines(lines.iter().map(String::as_str)).unwrap();
     let checked = rep.crosscheck().unwrap();
-    assert!(checked >= 5, "5 sessions closed, {checked} cross-checked");
+    assert!(checked >= 6, "6 sessions closed, {checked} cross-checked");
 
     // the fused tenants' rows specifically must carry fused_submit
     // bytes that reproduce their bills
@@ -107,37 +121,48 @@ fn traced_bytes_mirror_every_closed_sessions_bill_over_tcp() {
         assert_eq!(row.traced_rounds, bill.rounds);
     }
 
-    // oracle #2: re-sum the raw JSONL for the direct session without
-    // going through TraceReport, and compare against the bill returned
-    // by close() — two independently-plumbed ledgers, one total
-    let (mut sum_bytes, mut sum_rounds) = (0u64, 0u64);
-    let mut billed: Option<(u64, u64)> = None;
-    for line in &lines {
-        let j = Json::parse(line).unwrap();
-        if j.get("sid").and_then(|v| v.as_f64()).map(|v| v as u64) != Some(direct_sid) {
-            continue;
-        }
-        let ev = j.get("ev").and_then(|v| v.as_str()).unwrap();
-        let bytes = j.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-        match ev {
-            "submit" | "fused_submit" => {
-                sum_bytes += bytes;
-                if bytes > 0 {
-                    sum_rounds += 1;
+    // oracle #2: re-sum the raw JSONL for the directly-driven sessions
+    // without going through TraceReport, and compare against the bill
+    // returned by close() — two independently-plumbed ledgers, one
+    // total. Run it for both the stateless bf16 tenant and the
+    // stateful q4+feedback tenant: the EF stream's traced frames must
+    // sum to its bill exactly like any other codec's.
+    let resum = |sid: u64| {
+        let (mut sum_bytes, mut sum_rounds) = (0u64, 0u64);
+        let mut billed: Option<(u64, u64)> = None;
+        for line in &lines {
+            let j = Json::parse(line).unwrap();
+            if j.get("sid").and_then(|v| v.as_f64()).map(|v| v as u64) != Some(sid) {
+                continue;
+            }
+            let ev = j.get("ev").and_then(|v| v.as_str()).unwrap();
+            let bytes = j.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+            match ev {
+                "submit" | "fused_submit" => {
+                    sum_bytes += bytes;
+                    if bytes > 0 {
+                        sum_rounds += 1;
+                    }
                 }
+                "reply" => sum_bytes += bytes,
+                "session_bill" => {
+                    let rounds =
+                        j.get("rounds").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+                    billed = Some((bytes, rounds));
+                }
+                _ => {}
             }
-            "reply" => sum_bytes += bytes,
-            "session_bill" => {
-                let rounds =
-                    j.get("rounds").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-                billed = Some((bytes, rounds));
-            }
-            _ => {}
         }
-    }
+        (sum_bytes, sum_rounds, billed)
+    };
+    let (sum_bytes, sum_rounds, billed) = resum(direct_sid);
     assert_eq!(billed, Some((direct_bill.bytes, direct_bill.rounds)));
     assert_eq!(sum_bytes, direct_bill.bytes, "sigma traced bytes == CommStats.bytes");
     assert_eq!(sum_rounds, direct_bill.rounds, "sigma traced rounds == CommStats.rounds");
+    let (ef_bytes, ef_rounds, ef_billed) = resum(ef_sid);
+    assert_eq!(ef_billed, Some((ef_bill.bytes, ef_bill.rounds)));
+    assert_eq!(ef_bytes, ef_bill.bytes, "sigma traced bytes == the EF tenant's bill");
+    assert_eq!(ef_rounds, ef_bill.rounds);
 
     // the serve tenants' bills appear verbatim as their session_bill events
     for job in &served.jobs {
@@ -153,6 +178,7 @@ fn traced_bytes_mirror_every_closed_sessions_bill_over_tcp() {
     // the rendered timeline names the labeled tenant and prints the verdict
     let text = rep.render();
     assert!(text.contains("direct-bf16"), "timeline must name the tenant:\n{text}");
+    assert!(text.contains("direct-q4ef"), "timeline must name the EF tenant:\n{text}");
     assert!(text.contains("cross-check:"), "footer missing:\n{text}");
     assert!(!text.contains("MISMATCH"), "no session may mismatch:\n{text}");
 
